@@ -1,0 +1,133 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. tile-optimizer objective: paper's max-updates vs our min-comm;
+//! 2. double buffering on/off (the §5 halved-buffer tradeoff);
+//! 3. the memory-coalescing burst model on/off (the §5 conv5 story);
+//! 4. small-filter split on/off in the sequential blocking LP;
+//! 5. multi-level (hierarchical) blocking vs flat blocking at L1 size.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use convbound::bounds::hierarchy::Hierarchy;
+use convbound::commvol::seq::blocking_volume;
+use convbound::conv::{resnet50_layers, Precision};
+use convbound::gemmini::{simulate_layer, GemminiConfig};
+use convbound::report::{fmt_f, fmt_x, Table};
+use convbound::tiling::{
+    hierarchical_blocking, optimize_gemmini_tiling, OptObjective, OptOptions,
+};
+use convbound::util::stats::geomean;
+
+fn main() {
+    let layers = resnet50_layers(1000);
+    let cfg = GemminiConfig::default();
+    let p = Precision::paper_mixed();
+
+    // ---- 1. optimizer objective --------------------------------------
+    println!("=== ablation 1: tile-optimizer objective (vs vendor, batch 1000) ===\n");
+    let mut t = Table::new(&["layer", "max-updates comm", "min-comm comm",
+                             "max-updates cycles", "min-comm cycles"]);
+    let mut ratios = (Vec::new(), Vec::new());
+    for l in &layers {
+        let vend = convbound::tiling::vendor_tiling(&l.shape, &cfg);
+        let rv = simulate_layer(&l.shape, &cfg, &vend);
+        let a = optimize_gemmini_tiling(&l.shape, &cfg, OptOptions::default());
+        let b = optimize_gemmini_tiling(&l.shape, &cfg, OptOptions {
+            objective: OptObjective::MinCommRows,
+            ..Default::default()
+        });
+        let ra = simulate_layer(&l.shape, &cfg, &a);
+        let rb = simulate_layer(&l.shape, &cfg, &b);
+        ratios.0.push(ra.comm_rows as f64 / rv.comm_rows as f64);
+        ratios.1.push(rb.comm_rows as f64 / rv.comm_rows as f64);
+        t.row(vec![
+            l.name.to_string(),
+            fmt_x(ra.comm_rows as f64 / rv.comm_rows as f64),
+            fmt_x(rb.comm_rows as f64 / rv.comm_rows as f64),
+            fmt_x(ra.cycles as f64 / rv.cycles as f64),
+            fmt_x(rb.cycles as f64 / rv.cycles as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "geomean comm vs vendor: max-updates {:.0}%, min-comm {:.0}% (min-comm objective is our extension)\n",
+        geomean(&ratios.0) * 100.0,
+        geomean(&ratios.1) * 100.0
+    );
+
+    // ---- 2. double buffering ------------------------------------------
+    println!("=== ablation 2: double buffering ===\n");
+    let sb = GemminiConfig { double_buffered: false, ..cfg };
+    let mut t = Table::new(&["layer", "db cycles", "single cycles", "speedup"]);
+    for l in &layers {
+        // tile chosen under the smaller (double-buffered) capacity is legal
+        // for both configurations
+        let tile = optimize_gemmini_tiling(&l.shape, &cfg, OptOptions::default());
+        let fast = simulate_layer(&l.shape, &cfg, &tile);
+        let slow = simulate_layer(&l.shape, &sb, &tile);
+        t.row(vec![
+            l.name.to_string(),
+            fmt_f(fast.cycles as f64),
+            fmt_f(slow.cycles as f64),
+            fmt_x(slow.cycles as f64 / fast.cycles as f64),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- 3. burst/coalescing model ------------------------------------
+    println!("\n=== ablation 3: memory-coalescing burst model ===\n");
+    let nb = GemminiConfig { burst_overhead_cycles: 0, ..cfg };
+    let mut t = Table::new(&["layer", "cycles (burst model)", "cycles (ideal DMA)", "overhead"]);
+    for l in &layers {
+        let tile = optimize_gemmini_tiling(&l.shape, &cfg, OptOptions::default());
+        let with = simulate_layer(&l.shape, &cfg, &tile);
+        let without = simulate_layer(&l.shape, &nb, &tile);
+        t.row(vec![
+            l.name.to_string(),
+            fmt_f(with.cycles as f64),
+            fmt_f(without.cycles as f64),
+            fmt_x(with.cycles as f64 / without.cycles as f64),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- 4. small-filter split in the blocking LP ----------------------
+    println!("\n=== ablation 4: small-filter split (conv1, strided 7x7) ===\n");
+    let conv1 = layers[0].shape;
+    for m in [16384.0, 65536.0, 1048576.0] {
+        let vol = blocking_volume(&conv1, p, m);
+        // without the split: treat (q, r) ranges as merged by forcing a
+        // stride-1-style shape with the same sizes (the LP then cannot
+        // exploit σ): approximate by σ=1 shape with identical array sizes
+        let mut merged = conv1;
+        merged.s_w = 1;
+        merged.s_h = 1;
+        merged.w_o = conv1.s_w * conv1.w_o;
+        merged.h_o = conv1.s_h * conv1.h_o;
+        let vol_nosplit = blocking_volume(&merged, p, m)
+            / (conv1.s_w * conv1.s_h) as f64; // same G after range merge
+        println!(
+            "M = {:>8}: with split {:>12} words | merged-range proxy {:>12} words",
+            m, fmt_f(vol), fmt_f(vol_nosplit)
+        );
+    }
+
+    // ---- 5. hierarchical vs flat blocking ------------------------------
+    println!("\n=== ablation 5: hierarchical vs flat blocking (conv2_x) ===\n");
+    let h = Hierarchy::typical_cpu();
+    let s = layers[1].shape;
+    let hb = hierarchical_blocking(&s, p, &h);
+    let l1 = h.levels[0].capacity_words;
+    let flat_l1_traffic = blocking_volume(&s, p, l1);
+    println!("flat blocking at L1 ({l1} words): every word from DRAM: {} words", fmt_f(flat_l1_traffic));
+    for (i, (tr, lvl)) in hb.traffic.iter().zip(&h.levels).enumerate() {
+        println!(
+            "hierarchical: boundary above L{} ({} words): {} words",
+            i + 1, lvl.capacity_words, fmt_f(*tr)
+        );
+    }
+    println!(
+        "DRAM traffic reduction from nesting: {}",
+        fmt_x(flat_l1_traffic / hb.traffic.last().unwrap().max(1.0))
+    );
+}

@@ -1,0 +1,97 @@
+//! End-to-end runtime benchmarks: the PJRT execute hot path (per-layer and
+//! whole-network artifacts) and the batching server's request throughput.
+//! Requires `make artifacts`; skips gracefully otherwise.
+//!
+//! Run: `cargo bench --bench e2e_runtime`
+
+use std::time::Duration;
+
+use convbound::bench::bench;
+use convbound::conv::Tensor4;
+use convbound::coordinator::ConvServer;
+use convbound::runtime::Runtime;
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    if !artifact_dir().join("manifest.json").exists() {
+        println!("SKIP e2e_runtime: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    println!("platform: {}\n", rt.platform());
+
+    // per-layer artifacts
+    for key in ["unit3x3/blocked", "unit3x3/im2col", "unit1x1/blocked"] {
+        let spec = rt.manifest().find(key).expect(key).clone();
+        let tensors: Vec<Tensor4> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], i as u64))
+            .collect();
+        rt.load(key).expect("compile");
+        let refs: Vec<&Tensor4> = tensors.iter().collect();
+        let macs = spec.updates as f64;
+        let r = bench(&format!("runtime: execute {key}"), 1.5, || {
+            std::hint::black_box(rt.run(key, &refs).expect("run"));
+        });
+        println!(
+            "    -> {:.1} inferences/s, {:.1} MMAC/s",
+            spec.inputs[0][0] as f64 / r.summary.mean,
+            macs / r.summary.mean / 1e6
+        );
+    }
+
+    // whole network
+    {
+        let key = "tiny_resnet/network";
+        let spec = rt.manifest().find(key).expect(key).clone();
+        let tensors: Vec<Tensor4> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 10 + i as u64))
+            .collect();
+        rt.load(key).expect("compile");
+        let refs: Vec<&Tensor4> = tensors.iter().collect();
+        let r = bench("runtime: execute tiny_resnet network", 2.0, || {
+            std::hint::black_box(rt.run(key, &refs).expect("run"));
+        });
+        println!(
+            "    -> {:.1} inferences/s, {:.1} MMAC/s",
+            spec.inputs[0][0] as f64 / r.summary.mean,
+            spec.updates as f64 / r.summary.mean / 1e6
+        );
+    }
+
+    // serving path
+    {
+        let key = "unit3x3/blocked";
+        let spec = rt.manifest().find(key).expect(key).clone();
+        let wd = spec.inputs[1].clone();
+        let xd = spec.inputs[0].clone();
+        let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 3);
+        let server = ConvServer::start(artifact_dir(), key, weights, Duration::from_millis(1))
+            .expect("server");
+        let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 9);
+        let r = bench("server: 64-request burst (batch 4)", 2.0, || {
+            let pending: Vec<_> = (0..64)
+                .map(|_| server.submit(img.clone()).expect("submit"))
+                .collect();
+            for rx in pending {
+                std::hint::black_box(rx.recv().expect("resp"));
+            }
+        });
+        println!("    -> {:.0} requests/s", 64.0 / r.summary.mean);
+        let stats = server.shutdown().expect("stats");
+        println!(
+            "    batches {} padded {} ({:.1}% waste)",
+            stats.batches,
+            stats.padded_slots,
+            stats.padded_slots as f64 / (stats.batches.max(1) as f64 * 4.0) * 100.0
+        );
+    }
+}

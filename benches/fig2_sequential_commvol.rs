@@ -1,0 +1,55 @@
+//! Figure 2 harness: regenerates the sequential communication-volume series
+//! (ratio to the Theorem 2.1 bound vs memory size) for ResNet-50 conv1 and
+//! conv2_x at batch 1000, mixed precision p_I = p_F = 1, p_O = 2 — exactly
+//! the paper's setting — and times the generation.
+//!
+//! Run: `cargo bench --bench fig2_sequential_commvol`
+
+use convbound::bench::{bench, write_csv};
+use convbound::conv::{resnet50_layers, Precision};
+use convbound::report::{default_mem_sweep, fig2_series, ratio_table};
+
+fn main() {
+    let p = Precision::paper_mixed();
+    let layers = resnet50_layers(1000);
+    let sweep = default_mem_sweep();
+
+    for l in &layers[..2] {
+        println!("\n=== Figure 2 — {} (batch 1000, pI=pF=1, pO=2) ===", l.name);
+        let rows = fig2_series(&l.shape, p, &sweep);
+        print!("{}", ratio_table("M (words)", &rows).render());
+
+        // paper-shape checks, printed for EXPERIMENTS.md
+        let first = &rows.first().unwrap().1;
+        let last = &rows.last().unwrap().1;
+        println!("blocking ratio: {:.2}x at M=2^10 -> {:.2}x at M=2^24", first[2].1, last[2].1);
+        println!("im2col   ratio: {:.2}x at M=2^10 -> {:.2}x at M=2^24", first[1].1, last[1].1);
+        if l.name == "conv2_x" {
+            let cross = rows.iter().find(|(_, r)| r[2].1 < r[1].1);
+            match cross {
+                Some((m, _)) => println!(
+                    "blocking beats im2col from M = {m} words (paper: crossover for large M, σ=1)"
+                ),
+                None => println!("no blocking/im2col crossover observed in sweep"),
+            }
+        }
+
+        let csv: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|(m, r)| {
+                let mut row = vec![*m];
+                row.extend(r.iter().map(|(_, v)| *v));
+                row
+            })
+            .collect();
+        let path = format!("target/figures/fig2_{}.csv", l.name);
+        write_csv(&path, &["M", "naive", "im2col", "blocking", "winograd", "fft"], &csv).unwrap();
+        println!("series written to {path}");
+    }
+
+    println!("\n=== harness timing ===");
+    let shape = layers[1].shape;
+    bench("fig2 full sweep (conv2_x, 15 points)", 1.0, || {
+        std::hint::black_box(fig2_series(&shape, p, &sweep));
+    });
+}

@@ -1,0 +1,53 @@
+//! Figure 3 harness: regenerates the parallel communication-volume series
+//! (per-processor words relative to the Theorem 2.2/2.3 bound vs processor
+//! count) for ResNet-50 conv1 and conv2_x at batch 1000, p_I = p_F = 1,
+//! p_O = 2, and times the generation.
+//!
+//! Run: `cargo bench --bench fig3_parallel_commvol`
+
+use convbound::bench::{bench, write_csv};
+use convbound::conv::{resnet50_layers, Precision};
+use convbound::report::{default_proc_sweep, fig3_series, ratio_table};
+
+fn main() {
+    let p = Precision::paper_mixed();
+    let layers = resnet50_layers(1000);
+    let sweep = default_proc_sweep();
+    let mem = 1e6;
+
+    for l in &layers[..2] {
+        println!("\n=== Figure 3 — {} (batch 1000, M = {mem:.0e} words/proc) ===", l.name);
+        let rows = fig3_series(&l.shape, p, &sweep, mem);
+        print!("{}", ratio_table("P", &rows).render());
+
+        // paper-shape checks
+        let mid = &rows[rows.len() / 2].1;
+        println!(
+            "at P = {}: blocking {:.1}x, im2col {:.1}x, winograd {:.1}x, fft {:.1}x of bound",
+            rows[rows.len() / 2].0, mid[2].1, mid[1].1, mid[3].1, mid[4].1
+        );
+        let blocking_beats = rows.iter().filter(|(_, r)| r[2].1 <= r[1].1).count();
+        println!(
+            "blocking <= im2col at {}/{} processor counts (paper: 'blocking outperforms im2col considerably')",
+            blocking_beats, rows.len()
+        );
+
+        let csv: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|(pp, r)| {
+                let mut row = vec![*pp as f64];
+                row.extend(r.iter().map(|(_, v)| *v));
+                row
+            })
+            .collect();
+        let path = format!("target/figures/fig3_{}.csv", l.name);
+        write_csv(&path, &["P", "naive", "im2col", "blocking", "winograd", "fft"], &csv).unwrap();
+        println!("series written to {path}");
+    }
+
+    println!("\n=== harness timing ===");
+    let shape = layers[1].shape;
+    bench("fig3 full sweep (conv2_x, 14 points)", 1.0, || {
+        std::hint::black_box(fig3_series(&shape, p, &sweep, mem));
+    });
+}

@@ -1,0 +1,65 @@
+//! Figure 4 harness: the GEMMINI evaluation at batch 1000 — estimated
+//! communication and simulated clock cycles for our optimization-generated
+//! tiling vs the vendor tiling, over the five standard ResNet-50
+//! convolution sizes, with and without the §5 conv5 extra constraint.
+//!
+//! Run: `cargo bench --bench fig4_gemmini`
+
+use convbound::bench::{bench, write_csv};
+use convbound::conv::resnet50_layers;
+use convbound::gemmini::GemminiConfig;
+use convbound::report::{fig4_rows, fig4_table};
+use convbound::tiling::{optimize_gemmini_tiling, OptOptions};
+use convbound::util::stats::geomean;
+
+fn main() {
+    let cfg = GemminiConfig::default();
+    let batch = 1000;
+
+    println!("=== Figure 4 — batch {batch}, paper objective (max updates/tile) ===\n");
+    let rows = fig4_rows(batch, &cfg, false);
+    print!("{}", fig4_table(&rows).render());
+
+    println!("\n=== with the §5 small-image constraint ===\n");
+    let fixed = fig4_rows(batch, &cfg, true);
+    print!("{}", fig4_table(&fixed).render());
+
+    let comm: Vec<f64> = rows.iter().map(|r| r.comm_ratio()).collect();
+    println!("\npaper: communication 45%–85% of vendor; measured {:.0}%–{:.0}% (geomean {:.0}%)",
+        comm.iter().cloned().fold(f64::INFINITY, f64::min) * 100.0,
+        comm.iter().cloned().fold(0.0_f64, f64::max) * 100.0,
+        geomean(&comm) * 100.0);
+    println!("paper: small-image regression repaired by one constraint: conv5 {:.0}% -> {:.0}% of vendor cycles",
+        rows[4].cycle_ratio() * 100.0, fixed[4].cycle_ratio() * 100.0);
+
+    let csv: Vec<Vec<f64>> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            vec![
+                i as f64 + 1.0,
+                r.ours.cycles as f64,
+                r.vendor.cycles as f64,
+                r.ours.comm_rows as f64,
+                r.vendor.comm_rows as f64,
+                r.vendor.spad_utilization,
+            ]
+        })
+        .collect();
+    write_csv(
+        "target/figures/fig4.csv",
+        &["layer", "ours_cycles", "vendor_cycles", "ours_comm", "vendor_comm", "vendor_util"],
+        &csv,
+    )
+    .unwrap();
+    println!("series written to target/figures/fig4.csv");
+
+    println!("\n=== harness timing ===");
+    let shape = resnet50_layers(batch)[3].shape;
+    bench("gemmini tile optimizer (conv4_x)", 1.0, || {
+        std::hint::black_box(optimize_gemmini_tiling(&shape, &cfg, OptOptions::default()));
+    });
+    bench("full fig4 (5 layers, 2 tilings, sim)", 3.0, || {
+        std::hint::black_box(fig4_rows(batch, &cfg, false));
+    });
+}

@@ -1,0 +1,72 @@
+//! Micro-benchmarks of the analysis substrate hot paths (the §Perf
+//! targets): HBL lattice closure + exponent LP, the exact simplex, the
+//! blocking LPs, the GEMMINI tile search and the cycle simulator.
+//!
+//! Run: `cargo bench --bench micro_analysis`
+
+use convbound::bench::bench;
+use convbound::conv::{resnet50_layers, Precision};
+use convbound::gemmini::{simulate_layer, GemminiConfig};
+use convbound::hbl::{analyze_7nl, analyze_small_filter};
+use convbound::lp::{solve, Constraint, Objective, Rat, Rel};
+use convbound::tiling::{
+    optimize_gemmini_tiling, parallel_blocking, sequential_blocking, OptOptions,
+};
+
+fn main() {
+    println!("=== analysis-layer micro benchmarks ===\n");
+
+    bench("hbl: analyze_7nl (lattice + exact LP)", 2.0, || {
+        std::hint::black_box(analyze_7nl(2, 2));
+    });
+
+    bench("hbl: small-filter lift analysis", 1.0, || {
+        std::hint::black_box(analyze_small_filter());
+    });
+
+    bench("lp: exact rational simplex (8 vars)", 1.0, || {
+        let ge = |coeffs: Vec<i128>, rhs: i128| Constraint {
+            coeffs: coeffs.into_iter().map(Rat::int).collect(),
+            rel: Rel::Ge,
+            rhs: Rat::int(rhs),
+        };
+        let cons: Vec<_> = (0..8)
+            .map(|i| {
+                let mut c = vec![1i128; 8];
+                c[i] = 3;
+                ge(c, 5)
+            })
+            .collect();
+        let obj = vec![Rat::ONE; 8];
+        std::hint::black_box(solve(Objective::Minimize, &obj, &cons));
+    });
+
+    let layers = resnet50_layers(1000);
+    let p = Precision::paper_mixed();
+    let cfg = GemminiConfig::default();
+
+    let conv2 = layers[1].shape;
+    bench("tiling: sequential blocking LP (conv2_x)", 1.0, || {
+        std::hint::black_box(sequential_blocking(&conv2, p, 65536.0));
+    });
+
+    bench("tiling: parallel blocking (conv2_x, P=256)", 1.0, || {
+        std::hint::black_box(parallel_blocking(&conv2, p, 256, 1e6));
+    });
+
+    let conv4 = layers[3].shape;
+    bench("tiling: gemmini optimizer (conv4_x)", 1.0, || {
+        std::hint::black_box(optimize_gemmini_tiling(&conv4, &cfg, OptOptions::default()));
+    });
+
+    let tile = optimize_gemmini_tiling(&conv4, &cfg, OptOptions::default());
+    bench("gemmini: simulate conv4_x @ batch 1000", 3.0, || {
+        std::hint::black_box(simulate_layer(&conv4, &cfg, &tile));
+    });
+
+    let conv1 = layers[0].shape;
+    let tile1 = optimize_gemmini_tiling(&conv1, &cfg, OptOptions::default());
+    bench("gemmini: simulate conv1 @ batch 1000", 3.0, || {
+        std::hint::black_box(simulate_layer(&conv1, &cfg, &tile1));
+    });
+}

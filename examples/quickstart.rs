@@ -1,0 +1,66 @@
+//! Quickstart: bounds + communication-optimal blocking for one layer.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the library's core loop for ResNet-50 conv2_x at batch 1000:
+//! 1. evaluate the Theorem 2.1 lower bound at a 256 KiB cache,
+//! 2. solve the §3.2 blocking LP and inspect the tile,
+//! 3. compare the major convolution algorithms' communication volumes,
+//! 4. compute a GEMMINI tile and simulate it against the vendor tiling.
+
+use convbound::bounds::sequential_bound_terms;
+use convbound::commvol::sequential_volumes;
+use convbound::conv::{resnet50_layers, Precision};
+use convbound::gemmini::{simulate_layer, GemminiConfig};
+use convbound::tiling::{
+    optimize_gemmini_tiling, sequential_blocking, vendor_tiling, OptOptions,
+};
+
+fn main() {
+    let layer = resnet50_layers(1000)[1]; // conv2_x
+    let shape = layer.shape;
+    let p = Precision::paper_mixed();
+    let m = 65536.0; // 256 KiB cache in words
+
+    println!("== layer {} : {shape}\n", layer.name);
+
+    // 1. the lower bound
+    let b = sequential_bound_terms(&shape, p, m);
+    println!("Theorem 2.1 at M = {m} words:");
+    println!("  compulsory   {:>12.3e}", b.compulsory);
+    println!("  HBL          {:>12.3e}", b.hbl);
+    println!("  small-filter {:>12.3e}", b.small_filter);
+    println!("  X >= {:.3e} words ({} term dominates)\n", b.max(), b.dominant());
+
+    // 2. the LP blocking
+    let blk = sequential_blocking(&shape, p, m);
+    println!("LP blocking (paper §3.2, with the small-filter split):");
+    println!("  bN={} bcI={} bcO={} bwO={} bhO={} q-blocks=({}, {}) r-blocks=({}, {})",
+             blk.b_n, blk.b_ci, blk.b_co, blk.b_wo, blk.b_ho,
+             blk.b_wf_q, blk.b_hf_q, blk.b_wf_r, blk.b_hf_r);
+    println!("  updates/tile = {:.3e}, tile footprint = {:.0} of {m} words\n",
+             blk.updates_per_tile(), blk.footprint_words(p));
+
+    // 3. algorithm comparison (one Figure-2 column)
+    let v = sequential_volumes(&shape, p, m);
+    println!("communication volumes at M = {m} (ratio to bound):");
+    for (name, ratio) in v.ratios() {
+        println!("  {name:<9} {ratio:>8.2}x");
+    }
+    println!();
+
+    // 4. GEMMINI: ours vs vendor
+    let cfg = GemminiConfig::default();
+    let ours = optimize_gemmini_tiling(&shape, &cfg, OptOptions::default());
+    let vend = vendor_tiling(&shape, &cfg);
+    let ro = simulate_layer(&shape, &cfg, &ours);
+    let rv = simulate_layer(&shape, &cfg, &vend);
+    println!("GEMMINI (simulated):");
+    println!("  ours   {:?} -> {:.3e} cycles, {:.3e} comm rows", ours, ro.cycles as f64, ro.comm_rows as f64);
+    println!("  vendor {:?} -> {:.3e} cycles, {:.3e} comm rows", vend, rv.cycles as f64, rv.comm_rows as f64);
+    println!("  communication: {:.0}% of vendor; cycles: {:.2}x vendor",
+             ro.comm_rows as f64 / rv.comm_rows as f64 * 100.0,
+             ro.cycles as f64 / rv.cycles as f64);
+}

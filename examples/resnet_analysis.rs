@@ -1,0 +1,66 @@
+//! Full ResNet-50 analysis sweep: regenerates the Figure 2 and Figure 3
+//! data series for every catalog layer and writes CSVs under `target/figures/`.
+//!
+//! ```bash
+//! cargo run --release --example resnet_analysis
+//! ```
+
+use convbound::bench::write_csv;
+use convbound::conv::{resnet50_layers, Precision};
+use convbound::report::{
+    default_mem_sweep, default_proc_sweep, fig2_series, fig3_series, ratio_table,
+};
+
+fn main() {
+    let p = Precision::paper_mixed();
+    let layers = resnet50_layers(1000);
+
+    println!("=== Figure 2: sequential communication / lower bound vs M ===\n");
+    for l in &layers[..2] {
+        // the paper plots conv1 and conv2_x; conv3..5 "resemble conv2_x"
+        println!("--- {} ---", l.name);
+        let rows = fig2_series(&l.shape, p, &default_mem_sweep());
+        print!("{}", ratio_table("M (words)", &rows).render());
+        println!();
+        let csv: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|(m, r)| {
+                let mut row = vec![*m];
+                row.extend(r.iter().map(|(_, v)| *v));
+                row
+            })
+            .collect();
+        let path = format!("target/figures/fig2_{}.csv", l.name);
+        write_csv(&path, &["M", "naive", "im2col", "blocking", "winograd", "fft"], &csv)
+            .expect("write csv");
+        println!("wrote {path}\n");
+    }
+
+    println!("=== Figure 3: parallel communication / lower bound vs P ===\n");
+    for l in &layers[..2] {
+        println!("--- {} ---", l.name);
+        let rows = fig3_series(&l.shape, p, &default_proc_sweep(), 1e6);
+        print!("{}", ratio_table("P", &rows).render());
+        println!();
+        let csv: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|(pp, r)| {
+                let mut row = vec![*pp as f64];
+                row.extend(r.iter().map(|(_, v)| *v));
+                row
+            })
+            .collect();
+        let path = format!("target/figures/fig3_{}.csv", l.name);
+        write_csv(&path, &["P", "naive", "im2col", "blocking", "winograd", "fft"], &csv)
+            .expect("write csv");
+        println!("wrote {path}\n");
+    }
+
+    println!("=== remaining layers (conv3_x..conv5_x resemble conv2_x) ===\n");
+    for l in &layers[2..] {
+        let rows = fig2_series(&l.shape, p, &[65536.0, 1048576.0]);
+        println!("--- {} (spot check) ---", l.name);
+        print!("{}", ratio_table("M (words)", &rows).render());
+        println!();
+    }
+}

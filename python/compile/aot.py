@@ -1,0 +1,176 @@
+"""AOT compile path: lower every model variant to HLO *text* artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects with
+`proto.id() <= INT_MAX`. The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run as  `cd python && python -m compile.aot --out-dir ../artifacts`
+(the Makefile target `artifacts` does exactly this, and is a no-op when the
+outputs are newer than the compile/ sources).
+
+Besides the .hlo.txt files this writes artifacts/manifest.json describing
+every artifact's entry shapes so the Rust runtime can set up buffers without
+parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.grad import dfilter_pallas, dinput_pallas
+from .model import (ConvSpec, conv_layer, conv_layer_im2col, network_forward,
+                    single_layer_specs, tiny_resnet_specs)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_entry(spec: ConvSpec, kind: str, path: str, inputs, output):
+    return {
+        "name": spec.name,
+        "kind": kind,
+        "path": os.path.basename(path),
+        "inputs": [list(s) for s in inputs],
+        "output": list(output),
+        "stride_w": spec.stride_w,
+        "stride_h": spec.stride_h,
+        "out_w": spec.out_w,
+        "out_h": spec.out_h,
+        "filt_w": spec.filt_w,
+        "filt_h": spec.filt_h,
+        "updates": spec.updates,
+    }
+
+
+def lower_layer(spec: ConvSpec, kind: str):
+    """Lower a single conv layer (blocked-pallas or im2col) to HLO text."""
+    fn = conv_layer if kind == "blocked" else conv_layer_im2col
+
+    def entry(x, w):
+        return (fn(x, w, spec),)
+
+    x_spec = jax.ShapeDtypeStruct(spec.input_shape, jnp.float32)
+    w_spec = jax.ShapeDtypeStruct(spec.filter_shape, jnp.float32)
+    return to_hlo_text(jax.jit(entry).lower(x_spec, w_spec))
+
+
+def lower_dfilter(spec: ConvSpec):
+    """Lower the filter-gradient kernel for a layer: (x, dOut) -> (dF,)."""
+
+    def entry(x, g):
+        return (dfilter_pallas(x, g, spec.filt_w, spec.filt_h,
+                               spec.stride_w, spec.stride_h,
+                               block_ci=spec.block_ci, block_co=spec.block_co),)
+
+    x_spec = jax.ShapeDtypeStruct(spec.input_shape, jnp.float32)
+    g_spec = jax.ShapeDtypeStruct(spec.output_shape, jnp.float32)
+    return to_hlo_text(jax.jit(entry).lower(x_spec, g_spec))
+
+
+def lower_dinput(spec: ConvSpec):
+    """Lower the input-gradient kernel for a layer: (dOut, w) -> (dIn,)."""
+
+    def entry(g, w):
+        return (dinput_pallas(g, w, spec.in_w, spec.in_h,
+                              spec.stride_w, spec.stride_h,
+                              block_ci=spec.block_ci, block_co=spec.block_co),)
+
+    g_spec = jax.ShapeDtypeStruct(spec.output_shape, jnp.float32)
+    w_spec = jax.ShapeDtypeStruct(spec.filter_shape, jnp.float32)
+    return to_hlo_text(jax.jit(entry).lower(g_spec, w_spec))
+
+
+def lower_network(specs, batch: int):
+    """Lower the whole tiny CNN forward pass to one HLO module."""
+    first = specs[0]
+
+    def entry(x, *weights):
+        return (network_forward(x, weights, specs),)
+
+    x_spec = jax.ShapeDtypeStruct(first.input_shape, jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(s.filter_shape, jnp.float32)
+               for s in specs]
+    return to_hlo_text(jax.jit(entry).lower(x_spec, *w_specs))
+
+
+def build_all(out_dir: str, batch: int = 4) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"batch": batch, "artifacts": []}
+
+    for spec in single_layer_specs(batch):
+        for kind in ("blocked", "im2col"):
+            fname = f"layer_{spec.name}_{kind}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = lower_layer(spec, kind)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(_spec_entry(
+                spec, kind, path, [spec.input_shape, spec.filter_shape],
+                spec.output_shape))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    # backward-pass artifacts for the first unit layer (training path)
+    grad_spec = single_layer_specs(batch)[0]
+    for kind, lower, inputs, output in [
+        ("dfilter", lower_dfilter,
+         [grad_spec.input_shape, grad_spec.output_shape],
+         grad_spec.filter_shape),
+        ("dinput", lower_dinput,
+         [grad_spec.output_shape, grad_spec.filter_shape],
+         grad_spec.input_shape),
+    ]:
+        fname = f"layer_{grad_spec.name}_{kind}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = lower(grad_spec)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(_spec_entry(
+            grad_spec, kind, path, inputs, output))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    net_specs = tiny_resnet_specs(batch)
+    net_path = os.path.join(out_dir, "network_tiny_resnet.hlo.txt")
+    text = lower_network(net_specs, batch)
+    with open(net_path, "w") as f:
+        f.write(text)
+    last = net_specs[-1]
+    manifest["artifacts"].append({
+        "name": "tiny_resnet",
+        "kind": "network",
+        "path": os.path.basename(net_path),
+        "inputs": [list(net_specs[0].input_shape)]
+                  + [list(s.filter_shape) for s in net_specs],
+        "output": list(last.output_shape),
+        "layers": [s.name for s in net_specs],
+        "updates": sum(s.updates for s in net_specs),
+    })
+    print(f"wrote {net_path} ({len(text)} chars)")
+
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    build_all(args.out_dir, args.batch)
+
+
+if __name__ == "__main__":
+    main()

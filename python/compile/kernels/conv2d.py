@@ -1,0 +1,109 @@
+"""L1: Pallas direct-convolution kernel with the paper's blocking.
+
+The paper's communication-optimal *blocking* (Section 3.2) tiles the seven
+loops so that one input block, one filter block and one output block fit in
+fast memory simultaneously (constraint (6)).  On a TPU-style machine the
+fast memory is VMEM, and the HBM->VMEM schedule is expressed with a Pallas
+grid + BlockSpecs:
+
+    grid = (N/bN, cO/bcO, cI/bcI)          -- cI is the reduction axis
+    Input  block: (bN, bcI, WI, HI)        staged per (n, ci)
+    Filter block: (bcI, bcO, wF, hF)       staged per (co, ci)
+    Output block: (bN, bcO, wO, hO)        held across the cI axis and
+                                           accumulated in place (the GEMMINI
+                                           "accumulator" analogue)
+
+Spatial (wO/hO) tiling needs halo regions that Pallas block-index maps cannot
+express, so it lives one level up in model.py (conv_blocked), which carves
+the image into overlapping patches and issues one pallas_call per patch —
+exactly the role the paper's outer loops over (i4, i5) blocks play.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the Rust
+runtime can execute the AOT artifact.  Real-TPU performance is estimated
+from the VMEM footprint / MXU utilization analysis in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, stride_w, stride_h, out_w, out_h,
+                 n_ci_blocks, acc_dtype):
+    """Pallas kernel body: direct conv of one (bN, bcI) x (bcI, bcO) tile.
+
+    Accumulates into o_ref across the cI grid axis (axis 2).
+    """
+    ci = pl.program_id(2)
+
+    x = x_ref[...].astype(acc_dtype)   # (bN, bcI, WI, HI)
+    w = w_ref[...].astype(acc_dtype)   # (bcI, bcO, wF, hF)
+    w_f, h_f = w.shape[2], w.shape[3]
+    sw, sh = stride_w, stride_h
+
+    acc = jnp.zeros(o_ref.shape, dtype=acc_dtype)
+    # Static unroll over filter taps: each tap is a strided slice + a
+    # (bN*wO*hO, bcI) x (bcI, bcO) contraction that maps onto the MXU.
+    for i6 in range(w_f):
+        for i7 in range(h_f):
+            patch = x[:, :, i6 : i6 + sw * (out_w - 1) + 1 : sw,
+                          i7 : i7 + sh * (out_h - 1) + 1 : sh]
+            tap = w[:, :, i6, i7]      # (bcI, bcO)
+            acc = acc + jnp.einsum("ncwh,co->nowh", patch, tap,
+                                   preferred_element_type=acc_dtype)
+
+    # First reduction step initializes the accumulator tile; later steps add.
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(ci > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + acc
+
+
+def conv7nl_pallas(x, w, stride_w=1, stride_h=1, out_w=None, out_h=None,
+                   block_n=None, block_ci=None, block_co=None,
+                   acc_dtype=jnp.float32, interpret=True):
+    """Paper-blocked direct convolution as a Pallas call.
+
+    Block sizes default to the full dimension (single tile). The LP tiling
+    from the Rust side (or python/compile/tiling.py) supplies bN/bcI/bcO.
+    """
+    n, c_i, w_i, h_i = x.shape
+    c_i2, c_o, w_f, h_f = w.shape
+    assert c_i == c_i2
+    if out_w is None:
+        out_w = (w_i - w_f) // stride_w + 1
+    if out_h is None:
+        out_h = (h_i - h_f) // stride_h + 1
+    b_n = block_n or n
+    b_ci = block_ci or c_i
+    b_co = block_co or c_o
+    assert n % b_n == 0 and c_i % b_ci == 0 and c_o % b_co == 0, (
+        f"blocks must divide dims: N={n}/{b_n} cI={c_i}/{b_ci} cO={c_o}/{b_co}")
+
+    grid = (n // b_n, c_o // b_co, c_i // b_ci)
+
+    kernel = functools.partial(
+        _conv_kernel, stride_w=stride_w, stride_h=stride_h,
+        out_w=out_w, out_h=out_h, n_ci_blocks=grid[2], acc_dtype=acc_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Input: staged per (n-block, ci-block); full spatial extent.
+            pl.BlockSpec((b_n, b_ci, w_i, h_i), lambda i, j, k: (i, k, 0, 0)),
+            # Filter: staged per (ci-block, co-block).
+            pl.BlockSpec((b_ci, b_co, w_f, h_f), lambda i, j, k: (k, j, 0, 0)),
+        ],
+        # Output: revisited across the cI axis (k ignored) -> accumulation.
+        out_specs=pl.BlockSpec((b_n, b_co, out_w, out_h),
+                               lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c_o, out_w, out_h), acc_dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,189 @@
+"""L1: gradient (backward) convolutions as Pallas kernels.
+
+Training a CNN runs three 7NL-shaped computations per layer (the paper's
+bounds apply to each — they are 7NL CNN instances with permuted roles):
+
+  forward : Out(n,co,w,h)   += In(n,ci,σw+i6,σh+i7) · F(ci,co,i6,i7)
+  dFilter : dF(ci,co,i6,i7) += In(n,ci,σw+i6,σh+i7) · dOut(n,co,w,h)
+  dInput  : dIn(n,ci,x,y)   += dOut(n,co,w,h) · F(ci,co,i6,i7)
+            where x = σw·w + i6, y = σh·h + i7
+
+dFilter is a contraction over (n, w, h) — channels play the matmul roles.
+dInput is a scatter under stride; we compute it as the transposed form
+(full correlation with the flipped filter for σ=1; strided via lax for the
+oracle and an explicit tap loop in Pallas).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ------------------------------------------------------------------ dFilter
+
+def _dfilter_kernel(x_ref, g_ref, o_ref, *, stride_w, stride_h, out_w, out_h,
+                    acc_dtype):
+    """One (bcI, bcO) filter-gradient tile; accumulates over the batch grid
+    axis (axis 2)."""
+    nb = pl.program_id(2)
+
+    x = x_ref[...].astype(acc_dtype)   # (bN, bcI, WI, HI)
+    g = g_ref[...].astype(acc_dtype)   # (bN, bcO, wO, hO)
+    w_f, h_f = o_ref.shape[2], o_ref.shape[3]
+    sw, sh = stride_w, stride_h
+
+    acc = jnp.zeros(o_ref.shape, dtype=acc_dtype)
+    for i6 in range(w_f):
+        for i7 in range(h_f):
+            patch = x[:, :, i6 : i6 + sw * (out_w - 1) + 1 : sw,
+                          i7 : i7 + sh * (out_h - 1) + 1 : sh]
+            # contract over (n, w, h): (bN,bcI,wO,hO) x (bN,bcO,wO,hO)
+            tap = jnp.einsum("ncwh,nowh->co", patch, g,
+                             preferred_element_type=acc_dtype)
+            acc = acc.at[:, :, i6, i7].add(tap)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(nb > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + acc
+
+
+def dfilter_pallas(x, g, filt_w, filt_h, stride_w=1, stride_h=1,
+                   block_n=None, block_ci=None, block_co=None,
+                   acc_dtype=jnp.float32, interpret=True):
+    """Filter gradient dF(cI,cO,wF,hF) from input x and output grad g."""
+    n, c_i, w_i, h_i = x.shape
+    n2, c_o, out_w, out_h = g.shape
+    assert n == n2
+    b_n = block_n or n
+    b_ci = block_ci or c_i
+    b_co = block_co or c_o
+    assert n % b_n == 0 and c_i % b_ci == 0 and c_o % b_co == 0
+
+    grid = (c_i // b_ci, c_o // b_co, n // b_n)
+    kernel = functools.partial(
+        _dfilter_kernel, stride_w=stride_w, stride_h=stride_h,
+        out_w=out_w, out_h=out_h, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_n, b_ci, w_i, h_i), lambda i, j, k: (k, i, 0, 0)),
+            pl.BlockSpec((b_n, b_co, out_w, out_h), lambda i, j, k: (k, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_ci, b_co, filt_w, filt_h),
+                               lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_i, c_o, filt_w, filt_h), acc_dtype),
+        interpret=interpret,
+    )(x, g)
+
+
+# ------------------------------------------------------------------- dInput
+
+def _dinput_kernel(g_ref, w_ref, o_ref, *, stride_w, stride_h, in_w, in_h,
+                   acc_dtype):
+    """One (bN, bcI) input-gradient tile; accumulates over the cO grid axis
+    (axis 2). The scatter over strided taps is expressed as, per tap,
+    a dilated add into the (WI, HI) canvas."""
+    co = pl.program_id(2)
+
+    g = g_ref[...].astype(acc_dtype)   # (bN, bcO, wO, hO)
+    w = w_ref[...].astype(acc_dtype)   # (bcI, bcO, wF, hF)
+    w_f, h_f = w.shape[2], w.shape[3]
+    out_w, out_h = g.shape[2], g.shape[3]
+    sw, sh = stride_w, stride_h
+
+    acc = jnp.zeros(o_ref.shape, dtype=acc_dtype)
+    for i6 in range(w_f):
+        for i7 in range(h_f):
+            tap = w[:, :, i6, i7]      # (bcI, bcO)
+            contrib = jnp.einsum("nowh,co->ncwh", g, tap,
+                                 preferred_element_type=acc_dtype)
+            # scatter dIn[:, :, σw·w+i6, σh·h+i7] += contrib[:, :, w, h],
+            # expressed as interior ("dilation") padding — avoids scatter
+            # index constants that pallas kernels cannot capture
+            padded = jax.lax.pad(
+                contrib, jnp.zeros((), acc_dtype),
+                ((0, 0, 0), (0, 0, 0),
+                 (i6, in_w - i6 - (sw * (out_w - 1) + 1), sw - 1),
+                 (i7, in_h - i7 - (sh * (out_h - 1) + 1), sh - 1)))
+            acc = acc + padded
+
+    @pl.when(co == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(co > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + acc
+
+
+def dinput_pallas(g, w, in_w, in_h, stride_w=1, stride_h=1,
+                  block_n=None, block_ci=None, block_co=None,
+                  acc_dtype=jnp.float32, interpret=True):
+    """Input gradient dIn(N,cI,WI,HI) from output grad g and filter w."""
+    n, c_o, out_w, out_h = g.shape
+    c_i, c_o2, w_f, h_f = w.shape
+    assert c_o == c_o2
+    b_n = block_n or n
+    b_ci = block_ci or c_i
+    b_co = block_co or c_o
+    assert n % b_n == 0 and c_i % b_ci == 0 and c_o % b_co == 0
+
+    grid = (n // b_n, c_i // b_ci, c_o // b_co)
+    kernel = functools.partial(
+        _dinput_kernel, stride_w=stride_w, stride_h=stride_h,
+        in_w=in_w, in_h=in_h, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_n, b_co, out_w, out_h), lambda i, j, k: (i, k, 0, 0)),
+            pl.BlockSpec((b_ci, b_co, w_f, h_f), lambda i, j, k: (j, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_n, b_ci, in_w, in_h),
+                               lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c_i, in_w, in_h), acc_dtype),
+        interpret=interpret,
+    )(g, w)
+
+
+# ------------------------------------------------------------------ oracles
+
+def dfilter_ref(x, g, filt_w, filt_h, stride_w=1, stride_h=1,
+                acc_dtype=jnp.float32):
+    """Filter gradient via explicit tap loop (transparent oracle)."""
+    n, c_i, w_i, h_i = x.shape
+    _, c_o, out_w, out_h = g.shape
+    acc = jnp.zeros((c_i, c_o, filt_w, filt_h), dtype=acc_dtype)
+    for i6 in range(filt_w):
+        for i7 in range(filt_h):
+            patch = x[:, :, i6 : i6 + stride_w * (out_w - 1) + 1 : stride_w,
+                          i7 : i7 + stride_h * (out_h - 1) + 1 : stride_h]
+            acc = acc.at[:, :, i6, i7].set(
+                jnp.einsum("ncwh,nowh->co", patch.astype(acc_dtype),
+                           g.astype(acc_dtype)))
+    return acc
+
+
+def dinput_ref(g, w, in_w, in_h, stride_w=1, stride_h=1,
+               acc_dtype=jnp.float32):
+    """Input gradient via explicit scatter loop (transparent oracle)."""
+    n, c_o, out_w, out_h = g.shape
+    c_i = w.shape[0]
+    w_f, h_f = w.shape[2], w.shape[3]
+    acc = jnp.zeros((n, c_i, in_w, in_h), dtype=acc_dtype)
+    for i6 in range(w_f):
+        for i7 in range(h_f):
+            tap = w[:, :, i6, i7]
+            contrib = jnp.einsum("nowh,co->ncwh", g.astype(acc_dtype),
+                                 tap.astype(acc_dtype))
+            acc = acc.at[:, :, i6 : i6 + stride_w * (out_w - 1) + 1 : stride_w,
+                               i7 : i7 + stride_h * (out_h - 1) + 1 : stride_h
+                         ].add(contrib)
+    return acc

@@ -1,0 +1,94 @@
+"""L1: im2col + tiled-matmul comparison kernel.
+
+im2col is the baseline the paper compares its blocking against (Figures 2-4).
+The lowering is the classical one: gather every receptive field into a row of
+a patch matrix, then multiply by the reshaped filter with a Pallas tiled
+matmul (the part whose communication the paper charges to the matmul bound
+of Kwasniewski et al. [12]).
+
+The patch gather is pure jnp (it is data movement, not compute); the matmul
+is a Pallas kernel so the MXU-bound part of im2col also exercises the
+Pallas/VMEM path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def im2col_patches(x, w_f, h_f, stride_w=1, stride_h=1, out_w=None, out_h=None):
+    """Lower Input (N,cI,WI,HI) to the patch matrix (N*wO*hO, cI*wF*hF)."""
+    n, c_i, w_i, h_i = x.shape
+    if out_w is None:
+        out_w = (w_i - w_f) // stride_w + 1
+    if out_h is None:
+        out_h = (h_i - h_f) // stride_h + 1
+    cols = []
+    for i6 in range(w_f):
+        for i7 in range(h_f):
+            patch = x[:, :, i6 : i6 + stride_w * (out_w - 1) + 1 : stride_w,
+                          i7 : i7 + stride_h * (out_h - 1) + 1 : stride_h]
+            # (N, cI, wO, hO) -> (N, wO, hO, cI)
+            cols.append(jnp.transpose(patch, (0, 2, 3, 1)))
+    # stack taps last: (N, wO, hO, wF*hF, cI) -> rows (N*wO*hO, cI*wF*hF)
+    stacked = jnp.stack(cols, axis=3)
+    return stacked.reshape(n * out_w * out_h, w_f * h_f * c_i), out_w, out_h
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, acc_dtype):
+    k = pl.program_id(2)
+    part = jnp.dot(a_ref[...].astype(acc_dtype), b_ref[...].astype(acc_dtype),
+                   preferred_element_type=acc_dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + part
+
+
+def matmul_pallas(a, b, block_m=None, block_n=None, block_k=None,
+                  acc_dtype=jnp.float32, interpret=True):
+    """Tiled (bM, bK) x (bK, bN) Pallas matmul with accumulation over K."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    b_m = block_m or m
+    b_n = block_n or n
+    b_k = block_k or k
+    assert m % b_m == 0 and n % b_n == 0 and k % b_k == 0, (
+        f"blocks must divide dims: M={m}/{b_m} N={n}/{b_n} K={k}/{b_k}")
+    grid = (m // b_m, n // b_n, k // b_k)
+    kernel = functools.partial(_matmul_kernel, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_m, b_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((b_k, b_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((b_m, b_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def conv7nl_im2col(x, w, stride_w=1, stride_h=1, out_w=None, out_h=None,
+                   block_m=None, block_n=None, block_k=None,
+                   acc_dtype=jnp.float32, interpret=True):
+    """Full im2col convolution: gather + Pallas matmul + reshape back."""
+    n, c_i, w_i, h_i = x.shape
+    c_i2, c_o, w_f, h_f = w.shape
+    assert c_i == c_i2
+    patches, ow, oh = im2col_patches(x, w_f, h_f, stride_w, stride_h,
+                                     out_w, out_h)
+    # Filter (cI, cO, wF, hF) -> (wF*hF*cI, cO), tap-major to match patches.
+    wmat = jnp.transpose(w, (2, 3, 0, 1)).reshape(w_f * h_f * c_i, c_o)
+    out = matmul_pallas(patches, wmat, block_m, block_n, block_k,
+                        acc_dtype=acc_dtype, interpret=interpret)
+    # rows are (N, wO, hO)-major -> (N, cO, wO, hO)
+    return jnp.transpose(out.reshape(n, ow, oh, c_o), (0, 3, 1, 2))

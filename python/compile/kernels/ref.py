@@ -1,0 +1,74 @@
+"""Pure-jnp correctness oracle for the 7NL CNN direct convolution.
+
+The paper's model (eq. 1):
+
+    Output(i1,i3,i4,i5) += Input(i1,i2, sw*i4+i6, sh*i5+i7) * Filter(i2,i3,i6,i7)
+
+with
+    Input : (N, cI, WI, HI)   where WI >= sw*(wO-1)+wF, HI >= sh*(hO-1)+hF
+    Filter: (cI, cO, wF, hF)
+    Output: (N, cO, wO, hO)
+
+This file is the oracle every kernel is validated against. It is written in
+the most transparent way possible (a loop over the filter taps with strided
+slicing) so that its correctness is auditable by inspection, and it is also
+cross-checked against jax.lax.conv_general_dilated in the test suite.
+"""
+
+import jax.numpy as jnp
+
+
+def conv7nl_ref(x, w, stride_w=1, stride_h=1, out_w=None, out_h=None,
+                acc_dtype=jnp.float32):
+    """Direct 7NL CNN convolution, reference semantics.
+
+    Args:
+      x: Input, shape (N, cI, WI, HI).
+      w: Filter, shape (cI, cO, wF, hF).
+      stride_w, stride_h: strides sigma_w, sigma_h.
+      out_w, out_h: output spatial dims; default to the maximal valid size
+        floor((WI - wF)/sw) + 1.
+      acc_dtype: accumulation dtype (the paper's "output precision" —
+        GEMMINI accumulates at 32 bits regardless of input precision).
+
+    Returns:
+      Output, shape (N, cO, out_w, out_h), dtype acc_dtype.
+    """
+    n, c_i, w_i, h_i = x.shape
+    c_i2, c_o, w_f, h_f = w.shape
+    assert c_i == c_i2, f"channel mismatch {c_i} vs {c_i2}"
+    sw, sh = stride_w, stride_h
+    if out_w is None:
+        out_w = (w_i - w_f) // sw + 1
+    if out_h is None:
+        out_h = (h_i - h_f) // sh + 1
+    assert sw * (out_w - 1) + w_f <= w_i, "input too small in w"
+    assert sh * (out_h - 1) + h_f <= h_i, "input too small in h"
+
+    acc = jnp.zeros((n, c_o, out_w, out_h), dtype=acc_dtype)
+    for i6 in range(w_f):
+        for i7 in range(h_f):
+            # Input(i1, i2, sw*i4 + i6, sh*i5 + i7) over all (i4, i5)
+            patch = x[:, :, i6 : i6 + sw * (out_w - 1) + 1 : sw,
+                          i7 : i7 + sh * (out_h - 1) + 1 : sh]
+            tap = w[:, :, i6, i7]  # (cI, cO)
+            acc = acc + jnp.einsum(
+                "ncwh,co->nowh",
+                patch.astype(acc_dtype),
+                tap.astype(acc_dtype),
+            )
+    return acc
+
+
+def conv7nl_lax(x, w, stride_w=1, stride_h=1, acc_dtype=jnp.float32):
+    """Same computation via jax.lax.conv_general_dilated (second oracle)."""
+    import jax.lax as lax
+
+    # lax convention: lhs (N, C, W, H), rhs (O, I, W, H)
+    rhs = jnp.transpose(w, (1, 0, 2, 3)).astype(acc_dtype)
+    return lax.conv_general_dilated(
+        x.astype(acc_dtype), rhs,
+        window_strides=(stride_w, stride_h),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )

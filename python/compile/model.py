@@ -1,0 +1,165 @@
+"""L2: JAX model — conv layers (calling the L1 Pallas kernels) and a small
+CNN forward pass, the compute graph that aot.py lowers to HLO artifacts.
+
+The paper's blocking has two parts:
+  * channel/batch tiling, expressed inside the Pallas grid (kernels/conv2d.py)
+  * spatial (wO, hO) tiling with halos, expressed HERE by carving the input
+    image into overlapping patches and issuing one pallas_call per patch —
+    this is the role of the outer (i4, i5) blocks in the paper's loop nest.
+
+Everything here is build-time Python: jax.jit(...).lower() -> HLO text ->
+rust runtime. Nothing in this file runs at request time.
+"""
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv7nl_pallas
+from .kernels.im2col import conv7nl_im2col
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One 7NL CNN layer: shapes, strides and the blocking to use."""
+    name: str
+    n: int
+    c_in: int
+    c_out: int
+    out_w: int
+    out_h: int
+    filt_w: int
+    filt_h: int
+    stride_w: int = 1
+    stride_h: int = 1
+    # blocking (paper Section 3.2); None = full dimension
+    block_n: Optional[int] = None
+    block_ci: Optional[int] = None
+    block_co: Optional[int] = None
+    block_wo: Optional[int] = None
+    block_ho: Optional[int] = None
+
+    @property
+    def in_w(self) -> int:
+        # paper's convention: WI = sigma_w * wO + wF (slightly padded vs the
+        # tight sw*(wO-1)+wF so the size formula |I| matches the paper).
+        return self.stride_w * self.out_w + self.filt_w
+
+    @property
+    def in_h(self) -> int:
+        return self.stride_h * self.out_h + self.filt_h
+
+    @property
+    def input_shape(self):
+        return (self.n, self.c_in, self.in_w, self.in_h)
+
+    @property
+    def filter_shape(self):
+        return (self.c_in, self.c_out, self.filt_w, self.filt_h)
+
+    @property
+    def output_shape(self):
+        return (self.n, self.c_out, self.out_w, self.out_h)
+
+    @property
+    def updates(self) -> int:
+        """G = N cI cO wO hO wF hF, the total number of MACs."""
+        return (self.n * self.c_in * self.c_out * self.out_w * self.out_h
+                * self.filt_w * self.filt_h)
+
+
+def conv_layer(x, w, spec: ConvSpec, acc_dtype=jnp.float32):
+    """One blocked conv layer. Spatial tiling outside, Pallas grid inside."""
+    b_wo = spec.block_wo or spec.out_w
+    b_ho = spec.block_ho or spec.out_h
+    assert spec.out_w % b_wo == 0 and spec.out_h % b_ho == 0, (
+        f"{spec.name}: spatial blocks must divide output dims")
+    sw, sh = spec.stride_w, spec.stride_h
+
+    def tile(ti, tj):
+        # overlapping input patch (halo = filter extent) for output tile
+        x_tile = jax.lax.slice(
+            x,
+            (0, 0, ti * b_wo * sw, tj * b_ho * sh),
+            (spec.n, spec.c_in,
+             ti * b_wo * sw + sw * (b_wo - 1) + spec.filt_w,
+             tj * b_ho * sh + sh * (b_ho - 1) + spec.filt_h))
+        return conv7nl_pallas(
+            x_tile, w, sw, sh, out_w=b_wo, out_h=b_ho,
+            block_n=spec.block_n, block_ci=spec.block_ci,
+            block_co=spec.block_co, acc_dtype=acc_dtype)
+
+    rows = []
+    for ti in range(spec.out_w // b_wo):
+        cols = [tile(ti, tj) for tj in range(spec.out_h // b_ho)]
+        rows.append(jnp.concatenate(cols, axis=3) if len(cols) > 1 else cols[0])
+    return jnp.concatenate(rows, axis=2) if len(rows) > 1 else rows[0]
+
+
+def conv_layer_im2col(x, w, spec: ConvSpec, acc_dtype=jnp.float32):
+    """The im2col baseline for the same layer (Figure 2/3/4 comparisons)."""
+    return conv7nl_im2col(x, w, spec.stride_w, spec.stride_h,
+                          out_w=spec.out_w, out_h=spec.out_h,
+                          acc_dtype=acc_dtype)
+
+
+def network_forward(x, weights: Sequence, specs: Sequence[ConvSpec],
+                    acc_dtype=jnp.float32):
+    """A small CNN: chained blocked conv layers with ReLU between them.
+
+    Consecutive specs must be spatially compatible: layer k+1's input shape
+    equals (paper convention) sigma*out + filt of its own spec, so we pad the
+    previous activation up to it (zero-padding at the boundary mimics the
+    paper's slightly-oversized input arrays).
+    """
+    act = x
+    for w, spec in zip(weights, specs):
+        want = spec.input_shape
+        have = act.shape
+        assert have[0] == want[0] and have[1] == want[1], (
+            f"{spec.name}: N/C mismatch {have} vs {want}")
+        pad_w = want[2] - have[2]
+        pad_h = want[3] - have[3]
+        assert pad_w >= 0 and pad_h >= 0, (
+            f"{spec.name}: activation {have} larger than expected {want}")
+        if pad_w or pad_h:
+            act = jnp.pad(act, ((0, 0), (0, 0), (0, pad_w), (0, pad_h)))
+        act = conv_layer(act, w, spec, acc_dtype=acc_dtype)
+        act = jax.nn.relu(act)
+    return act
+
+
+# ---------------------------------------------------------------------------
+# Artifact model zoo: the scaled-down ResNet-ish stack used by the e2e driver.
+# Shapes are chosen so interpret-mode Pallas stays fast on CPU while still
+# exercising multi-block grids in every dimension the paper tiles.
+# ---------------------------------------------------------------------------
+
+def tiny_resnet_specs(batch: int = 4) -> list:
+    """Three-stage downsampling CNN, block sizes from the LP tiling style."""
+    return [
+        ConvSpec("conv1", batch, 3, 12, out_w=15, out_h=15, filt_w=5, filt_h=5,
+                 stride_w=2, stride_h=2, block_ci=3, block_co=6,
+                 block_wo=5, block_ho=5),
+        ConvSpec("conv2", batch, 12, 16, out_w=12, out_h=12, filt_w=3, filt_h=3,
+                 stride_w=1, stride_h=1, block_ci=4, block_co=8,
+                 block_wo=6, block_ho=6),
+        ConvSpec("conv3", batch, 16, 32, out_w=5, out_h=5, filt_w=3, filt_h=3,
+                 stride_w=2, stride_h=2, block_ci=8, block_co=16),
+    ]
+
+
+def single_layer_specs(batch: int = 4) -> list:
+    """Standalone layer artifacts (one HLO file each) for the runtime tests
+    and the per-layer serving path of the coordinator."""
+    return [
+        ConvSpec("unit3x3", batch, 8, 16, out_w=6, out_h=6, filt_w=3, filt_h=3,
+                 stride_w=2, stride_h=2, block_ci=4, block_co=8),
+        ConvSpec("unit1x1", batch, 16, 32, out_w=8, out_h=8, filt_w=1, filt_h=1,
+                 stride_w=1, stride_h=1, block_ci=8, block_co=16),
+        ConvSpec("unit5x5s1", batch, 4, 8, out_w=10, out_h=10, filt_w=5,
+                 filt_h=5, stride_w=1, stride_h=1, block_ci=2, block_co=4,
+                 block_wo=5, block_ho=5),
+    ]

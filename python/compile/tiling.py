@@ -1,0 +1,69 @@
+"""Build-time blocking selection for the Pallas kernels (the python mirror
+of the Rust §3.2 LP, specialized to the kernel's VMEM constraint).
+
+The L1 kernel tiles (N, cI, cO) inside the Pallas grid; the L2 layer tiles
+(wO, hO) spatially. This module picks divisor block sizes so that one
+input block + one filter block + one f32 output block fit a VMEM budget —
+constraint (6) of the paper with M = vmem_words — maximizing updates per
+tile greedily over the divisor grid (the integral analogue of the LP;
+ranges here are tiny so exhaustion is exact, like the Rust gemmini_opt).
+"""
+
+import dataclasses
+from typing import Optional
+
+
+def divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBlocking:
+    block_n: int
+    block_ci: int
+    block_co: int
+    block_wo: int
+    block_ho: int
+    footprint_words: int
+
+
+def footprint_words(n, ci, co, bwo, bho, filt_w, filt_h,
+                    stride_w, stride_h) -> int:
+    """Words (f32) of the three blocks under the paper's constraint (6)."""
+    in_w = stride_w * (bwo - 1) + filt_w
+    in_h = stride_h * (bho - 1) + filt_h
+    return (n * ci * in_w * in_h          # input block
+            + ci * co * filt_w * filt_h   # filter block
+            + n * co * bwo * bho)         # output (accumulator) block
+
+
+def choose_blocking(n, c_in, c_out, out_w, out_h, filt_w, filt_h,
+                    stride_w=1, stride_h=1,
+                    vmem_words: int = 4 * 1024 * 1024,
+                    spatial: bool = True) -> Optional[KernelBlocking]:
+    """Exhaustive divisor search maximizing updates/tile under the VMEM cap.
+
+    Returns None when even the unit tile does not fit (never happens for
+    sane layers and VMEM budgets).
+    """
+    best = None
+    best_updates = -1
+    wo_cands = divisors(out_w) if spatial else [out_w]
+    ho_cands = divisors(out_h) if spatial else [out_h]
+    for bci in divisors(c_in):
+        for bco in divisors(c_out):
+            for bwo in wo_cands:
+                for bho in ho_cands:
+                    for bn in divisors(n):
+                        fp = footprint_words(bn, bci, bco, bwo, bho,
+                                             filt_w, filt_h,
+                                             stride_w, stride_h)
+                        if fp > vmem_words:
+                            break  # larger bn only grows the tile
+                        updates = bn * bci * bco * bwo * bho
+                        if updates > best_updates or (
+                                updates == best_updates
+                                and fp < best.footprint_words):
+                            best_updates = updates
+                            best = KernelBlocking(bn, bci, bco, bwo, bho, fp)
+    return best

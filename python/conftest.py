@@ -1,0 +1,8 @@
+"""Make `compile.*` importable whether pytest runs from python/ or the
+repository root (the Makefile uses python/, CI-style invocations use the
+root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,80 @@
+"""L1 correctness: the im2col + Pallas-matmul baseline vs the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.im2col import (conv7nl_im2col, im2col_patches,
+                                    matmul_pallas)
+from compile.kernels.ref import conv7nl_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_patches_shape_and_content():
+    x = rand(0, (2, 3, 6, 6))
+    patches, ow, oh = im2col_patches(x, 3, 3, 1, 1)
+    assert (ow, oh) == (4, 4)
+    assert patches.shape == (2 * 4 * 4, 3 * 3 * 3)
+    # row 0 = receptive field of output (0, 0, 0), tap-major layout
+    row0 = patches[0]
+    want = jnp.stack([x[0, :, i6, i7] for i6 in range(3) for i7 in range(3)])
+    np.testing.assert_allclose(row0, want.reshape(-1), rtol=1e-6)
+
+
+def test_matmul_pallas_matches_jnp():
+    a = rand(1, (12, 8))
+    b = rand(2, (8, 6))
+    got = matmul_pallas(a, b, block_m=4, block_n=3, block_k=2)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_pallas_single_tile():
+    a = rand(3, (5, 7))
+    b = rand(4, (7, 3))
+    got = matmul_pallas(a, b)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_nondividing_blocks():
+    a = rand(5, (5, 4))
+    b = rand(6, (4, 4))
+    with pytest.raises(AssertionError):
+        matmul_pallas(a, b, block_m=2)
+
+
+@pytest.mark.parametrize("stride", [(1, 1), (2, 2), (2, 1)])
+def test_im2col_conv_matches_ref(stride):
+    sw, sh = stride
+    x = rand(7, (2, 4, 13, 11))
+    w = rand(8, (4, 6, 3, 3))
+    got = conv7nl_im2col(x, w, sw, sh)
+    want = conv7nl_ref(x, w, sw, sh)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    ci=st.integers(1, 5),
+    co=st.integers(1, 5),
+    wo=st.integers(1, 5),
+    ho=st.integers(1, 5),
+    wf=st.integers(1, 3),
+    hf=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_im2col_random_shapes(n, ci, co, wo, ho, wf, hf, seed):
+    in_w = (wo - 1) + wf
+    in_h = (ho - 1) + hf
+    x = rand(seed, (n, ci, in_w, in_h))
+    w = rand(seed + 1, (ci, co, wf, hf))
+    got = conv7nl_im2col(x, w, 1, 1, out_w=wo, out_h=ho)
+    want = conv7nl_ref(x, w, 1, 1, out_w=wo, out_h=ho)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,121 @@
+"""L1 correctness: the Pallas conv kernel vs the pure-jnp oracle.
+
+This is the CORE numerical signal of the build path: if these pass, the HLO
+artifacts the Rust runtime executes compute the paper's eq. (1) exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv2d import conv7nl_pallas
+from compile.kernels.ref import conv7nl_lax, conv7nl_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+# ---------------------------------------------------------------- oracles
+
+def test_ref_matches_lax_conv():
+    x = rand(0, (2, 4, 12, 10))
+    w = rand(1, (4, 6, 3, 3))
+    a = conv7nl_ref(x, w, 1, 1)
+    b = conv7nl_lax(x, w, 1, 1)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_ref_matches_lax_strided():
+    x = rand(2, (1, 3, 23, 17))
+    w = rand(3, (3, 5, 5, 3))
+    a = conv7nl_ref(x, w, 2, 2)
+    b = conv7nl_lax(x, w, 2, 2)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- fixed cases
+
+@pytest.mark.parametrize("blocks", [(None, None, None), (2, 4, 8), (1, 2, 4), (4, 8, 16)])
+def test_pallas_blockings_match_ref(blocks):
+    bn, bci, bco = blocks
+    x = rand(4, (4, 8, 14, 14))
+    w = rand(5, (8, 16, 3, 3))
+    got = conv7nl_pallas(x, w, 2, 2, block_n=bn, block_ci=bci, block_co=bco)
+    want = conv7nl_ref(x, w, 2, 2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_1x1_filter():
+    x = rand(6, (2, 8, 6, 6))
+    w = rand(7, (8, 4, 1, 1))
+    got = conv7nl_pallas(x, w, 1, 1, block_ci=4)
+    want = conv7nl_ref(x, w, 1, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_asymmetric_strides():
+    x = rand(8, (2, 4, 17, 11))
+    w = rand(9, (4, 4, 3, 2))
+    got = conv7nl_pallas(x, w, 2, 1)
+    want = conv7nl_ref(x, w, 2, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_bf16_inputs_f32_accum():
+    # mixed precision: bf16 operands, f32 accumulator (the paper's GEMMINI
+    # low-precision-in / high-precision-accumulate regime)
+    x = rand(10, (2, 8, 10, 10), jnp.bfloat16)
+    w = rand(11, (8, 8, 3, 3), jnp.bfloat16)
+    got = conv7nl_pallas(x, w, 1, 1, block_ci=4, acc_dtype=jnp.float32)
+    assert got.dtype == jnp.float32
+    want = conv7nl_ref(x, w, 1, 1)
+    # bf16 has ~3 decimal digits; tolerance accordingly
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_pallas_rejects_nondividing_blocks():
+    x = rand(12, (4, 8, 8, 8))
+    w = rand(13, (8, 8, 3, 3))
+    with pytest.raises(AssertionError):
+        conv7nl_pallas(x, w, 1, 1, block_n=3)
+
+
+# ---------------------------------------------------------- hypothesis sweep
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    ci=st.sampled_from([1, 2, 4, 8]),
+    co=st.sampled_from([1, 2, 4, 8]),
+    wo=st.integers(1, 6),
+    ho=st.integers(1, 6),
+    wf=st.integers(1, 4),
+    hf=st.integers(1, 4),
+    sw=st.integers(1, 2),
+    sh=st.integers(1, 2),
+    data=st.data(),
+)
+def test_pallas_matches_ref_random_shapes(n, ci, co, wo, ho, wf, hf, sw, sh, data):
+    # paper model assumptions: σ ≤ f (all image elements used)
+    if sw > wf or sh > hf:
+        return
+    in_w = sw * (wo - 1) + wf
+    in_h = sh * (ho - 1) + hf
+    x = rand(data.draw(st.integers(0, 2**16)), (n, ci, in_w, in_h))
+    w = rand(data.draw(st.integers(0, 2**16)), (ci, co, wf, hf))
+    bn = data.draw(st.sampled_from(divisors(n)))
+    bci = data.draw(st.sampled_from(divisors(ci)))
+    bco = data.draw(st.sampled_from(divisors(co)))
+    got = conv7nl_pallas(x, w, sw, sh, out_w=wo, out_h=ho,
+                         block_n=bn, block_ci=bci, block_co=bco)
+    want = conv7nl_ref(x, w, sw, sh, out_w=wo, out_h=ho)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

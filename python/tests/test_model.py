@@ -1,0 +1,118 @@
+"""L2 correctness: blocked conv layers (spatial tiling with halos) and the
+tiny CNN forward pass that aot.py lowers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import conv7nl_ref
+from compile.model import (ConvSpec, conv_layer, conv_layer_im2col,
+                           network_forward, single_layer_specs,
+                           tiny_resnet_specs)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def spec_small(**kw):
+    base = dict(name="t", n=2, c_in=4, c_out=6, out_w=8, out_h=8,
+                filt_w=3, filt_h=3)
+    base.update(kw)
+    return ConvSpec(**base)
+
+
+def test_spec_shapes_follow_paper_convention():
+    s = spec_small(stride_w=2, stride_h=2)
+    assert s.in_w == 2 * 8 + 3
+    assert s.input_shape == (2, 4, 19, 19)
+    assert s.filter_shape == (4, 6, 3, 3)
+    assert s.output_shape == (2, 6, 8, 8)
+    assert s.updates == 2 * 4 * 6 * 8 * 8 * 3 * 3
+
+
+def test_conv_layer_no_spatial_blocking_matches_ref():
+    s = spec_small()
+    x = rand(0, s.input_shape)
+    w = rand(1, s.filter_shape)
+    got = conv_layer(x, w, s)
+    want = conv7nl_ref(x, w, 1, 1, out_w=s.out_w, out_h=s.out_h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bwo,bho", [(4, 4), (8, 4), (2, 8), (4, 2)])
+def test_conv_layer_spatial_blocking_matches_ref(bwo, bho):
+    s = spec_small(block_wo=bwo, block_ho=bho, block_ci=2, block_co=3)
+    x = rand(2, s.input_shape)
+    w = rand(3, s.filter_shape)
+    got = conv_layer(x, w, s)
+    want = conv7nl_ref(x, w, 1, 1, out_w=s.out_w, out_h=s.out_h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_layer_strided_spatial_blocking():
+    s = spec_small(stride_w=2, stride_h=2, block_wo=4, block_ho=4)
+    x = rand(4, s.input_shape)
+    w = rand(5, s.filter_shape)
+    got = conv_layer(x, w, s)
+    want = conv7nl_ref(x, w, 2, 2, out_w=s.out_w, out_h=s.out_h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_layer_im2col_agrees():
+    s = spec_small(stride_w=2, stride_h=1)
+    x = rand(6, s.input_shape)
+    w = rand(7, s.filter_shape)
+    a = conv_layer(x, w, s)
+    b = conv_layer_im2col(x, w, s)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_nondividing_spatial_block_rejected():
+    s = spec_small(block_wo=3)  # 8 % 3 != 0
+    x = rand(8, s.input_shape)
+    w = rand(9, s.filter_shape)
+    with pytest.raises(AssertionError):
+        conv_layer(x, w, s)
+
+
+def test_network_forward_matches_layerwise_reference():
+    specs = tiny_resnet_specs(batch=2)
+    x = rand(10, specs[0].input_shape)
+    weights = [rand(20 + i, s.filter_shape) for i, s in enumerate(specs)]
+    got = network_forward(x, weights, specs)
+
+    act = x
+    for w, s in zip(weights, specs):
+        want_shape = s.input_shape
+        pad_w = want_shape[2] - act.shape[2]
+        pad_h = want_shape[3] - act.shape[3]
+        if pad_w or pad_h:
+            act = jnp.pad(act, ((0, 0), (0, 0), (0, pad_w), (0, pad_h)))
+        act = conv7nl_ref(act, w, s.stride_w, s.stride_h,
+                          out_w=s.out_w, out_h=s.out_h)
+        act = jnp.maximum(act, 0.0)
+    np.testing.assert_allclose(got, act, rtol=1e-4, atol=1e-4)
+    assert got.shape == specs[-1].output_shape
+
+
+def test_tiny_resnet_specs_chain_spatially():
+    specs = tiny_resnet_specs(batch=4)
+    for prev, nxt in zip(specs, specs[1:]):
+        assert prev.c_out == nxt.c_in, "channel chaining"
+        # activation can only need upward padding, never cropping
+        assert prev.out_w <= nxt.in_w
+        assert prev.out_h <= nxt.in_h
+
+
+def test_single_layer_specs_have_valid_blocks():
+    for s in single_layer_specs(4):
+        if s.block_ci:
+            assert s.c_in % s.block_ci == 0, s.name
+        if s.block_co:
+            assert s.c_out % s.block_co == 0, s.name
+        if s.block_wo:
+            assert s.out_w % s.block_wo == 0, s.name

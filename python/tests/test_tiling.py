@@ -1,0 +1,72 @@
+"""python-side blocking selection: feasibility + consistency with the
+Pallas kernel's block requirements."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv2d import conv7nl_pallas
+from compile.kernels.ref import conv7nl_ref
+from compile.tiling import choose_blocking, divisors, footprint_words
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_divisors():
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]
+    assert divisors(1) == [1]
+
+
+def test_blocking_fits_budget():
+    b = choose_blocking(8, 64, 64, 56, 56, 3, 3, vmem_words=64 * 1024)
+    assert b is not None
+    assert b.footprint_words <= 64 * 1024
+    # divisibility (the Pallas kernel asserts this)
+    assert 8 % b.block_n == 0
+    assert 64 % b.block_ci == 0 and 64 % b.block_co == 0
+    assert 56 % b.block_wo == 0 and 56 % b.block_ho == 0
+
+
+def test_bigger_budget_bigger_tiles():
+    small = choose_blocking(8, 64, 64, 56, 56, 3, 3, vmem_words=16 * 1024)
+    big = choose_blocking(8, 64, 64, 56, 56, 3, 3, vmem_words=1024 * 1024)
+    upd = lambda b: b.block_n * b.block_ci * b.block_co * b.block_wo * b.block_ho
+    assert upd(big) > upd(small)
+
+
+def test_footprint_formula():
+    # unit tile of a 3x3 stride-1 conv: input 3x3, filter ci*co*9, output 1
+    fp = footprint_words(1, 2, 4, 1, 1, 3, 3, 1, 1)
+    assert fp == 1 * 2 * 9 + 2 * 4 * 9 + 1 * 4 * 1
+
+
+def test_chosen_blocking_runs_in_kernel():
+    n, ci, co, wo, ho, wf, hf = 4, 8, 8, 6, 6, 3, 3
+    b = choose_blocking(n, ci, co, wo, ho, wf, hf, vmem_words=8 * 1024,
+                        spatial=False)
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (n, ci, wo + wf - 1, ho + hf - 1), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (ci, co, wf, hf), jnp.float32)
+    got = conv7nl_pallas(x, w, 1, 1, block_n=b.block_n,
+                         block_ci=b.block_ci, block_co=b.block_co)
+    want = conv7nl_ref(x, w, 1, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    ci=st.sampled_from([1, 3, 8, 16]),
+    co=st.sampled_from([1, 4, 12, 32]),
+    wo=st.integers(1, 16),
+    ho=st.integers(1, 16),
+    budget=st.sampled_from([4096, 65536, 1 << 20]),
+)
+def test_blocking_always_feasible_and_divides(n, ci, co, wo, ho, budget):
+    b = choose_blocking(n, ci, co, wo, ho, 3, 3, vmem_words=budget)
+    assert b is not None
+    assert b.footprint_words <= budget
+    for dim, blk in [(n, b.block_n), (ci, b.block_ci), (co, b.block_co),
+                     (wo, b.block_wo), (ho, b.block_ho)]:
+        assert dim % blk == 0

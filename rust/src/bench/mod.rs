@@ -1,0 +1,98 @@
+//! Minimal benchmark harness (criterion is not vendored offline).
+//!
+//! `benches/*.rs` are `harness = false` binaries built on this module:
+//! warmup, timed iterations, and a summary line per benchmark, plus CSV
+//! emission for the figure-regeneration harnesses.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One timed benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10.3} ms/iter (p50 {:.3}, p95 {:.3}, n={})",
+            self.name,
+            s.mean * 1e3,
+            s.p50 * 1e3,
+            s.p95 * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration: roughly
+/// `target_secs` of measurement after one warmup call.
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once).ceil() as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        iters,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Write a CSV file of figure series (first column x, one column per series).
+pub fn write_csv(
+    path: &str,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir().join("convbound_csv_test.csv");
+        let path = path.to_str().unwrap();
+        write_csv(path, &["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("x,y\n1,2\n3,4.5"));
+        std::fs::remove_file(path).ok();
+    }
+}

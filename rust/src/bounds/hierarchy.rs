@@ -1,0 +1,118 @@
+//! Multi-level memory hierarchies — the paper's §6 "future directions"
+//! item "extend our results to … single processors with more levels of
+//! cache", implemented as an extension.
+//!
+//! The standard reduction: in a hierarchy `L1 ⊂ L2 ⊂ … ⊂ DRAM`, the traffic
+//! crossing the boundary above level *i* is the traffic of a two-level
+//! machine whose fast memory is everything at level ≤ i (size `M_i`), so
+//! Theorem 2.1 applies independently at every boundary. A weighted total
+//! (per-level cost-per-word, e.g. inverse bandwidths or energy) gives a
+//! single machine-level lower bound.
+
+use crate::conv::{ConvShape, Precision};
+
+use super::sequential::{sequential_bound, sequential_bound_terms, SeqBoundTerms};
+
+/// One cache level: capacity in words + cost per word moved across the
+/// boundary *above* it (to the next, larger level).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheLevel {
+    pub capacity_words: f64,
+    pub cost_per_word: f64,
+}
+
+/// A memory hierarchy, ordered smallest (fastest) first. DRAM is implicit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hierarchy {
+    pub levels: Vec<CacheLevel>,
+}
+
+impl Hierarchy {
+    /// A typical 3-level CPU: 32 KiB L1, 256 KiB L2, 8 MiB L3 (words are
+    /// 4 B), with per-word costs 1 : 4 : 16 (relative inverse bandwidths).
+    pub fn typical_cpu() -> Hierarchy {
+        Hierarchy {
+            levels: vec![
+                CacheLevel { capacity_words: 8.0 * 1024.0, cost_per_word: 1.0 },
+                CacheLevel { capacity_words: 64.0 * 1024.0, cost_per_word: 4.0 },
+                CacheLevel { capacity_words: 2048.0 * 1024.0, cost_per_word: 16.0 },
+            ],
+        }
+    }
+
+    pub fn validate(&self) {
+        assert!(!self.levels.is_empty());
+        for w in self.levels.windows(2) {
+            assert!(
+                w[0].capacity_words < w[1].capacity_words,
+                "levels must grow: {w:?}"
+            );
+        }
+        assert!(self.levels.iter().all(|l| l.cost_per_word > 0.0));
+    }
+}
+
+/// Per-boundary Theorem-2.1 lower bounds: `bounds[i]` is the minimum number
+/// of words crossing the boundary between level i and level i+1 (or DRAM).
+pub fn per_level_bounds(s: &ConvShape, p: Precision, h: &Hierarchy) -> Vec<SeqBoundTerms> {
+    h.validate();
+    h.levels
+        .iter()
+        .map(|l| sequential_bound_terms(s, p, l.capacity_words))
+        .collect()
+}
+
+/// Weighted total communication cost lower bound:
+/// `Σ_i cost_i · X_i(M_i)`.
+pub fn hierarchy_cost_bound(s: &ConvShape, p: Precision, h: &Hierarchy) -> f64 {
+    h.validate();
+    h.levels
+        .iter()
+        .map(|l| l.cost_per_word * sequential_bound(s, p, l.capacity_words))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    fn layer() -> ConvShape {
+        resnet50_layers(100)[1].shape
+    }
+
+    #[test]
+    fn typical_cpu_is_valid_and_monotone() {
+        let h = Hierarchy::typical_cpu();
+        h.validate();
+        let bounds = per_level_bounds(&layer(), Precision::uniform(), &h);
+        assert_eq!(bounds.len(), 3);
+        // smaller caches bound more traffic
+        assert!(bounds[0].max() >= bounds[1].max());
+        assert!(bounds[1].max() >= bounds[2].max());
+    }
+
+    #[test]
+    fn cost_bound_at_least_most_expensive_level() {
+        let h = Hierarchy::typical_cpu();
+        let s = layer();
+        let p = Precision::paper_mixed();
+        let total = hierarchy_cost_bound(&s, p, &h);
+        for l in &h.levels {
+            let single = l.cost_per_word * sequential_bound(&s, p, l.capacity_words);
+            assert!(total >= single - 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "levels must grow")]
+    fn shrinking_levels_rejected() {
+        let h = Hierarchy {
+            levels: vec![
+                CacheLevel { capacity_words: 1024.0, cost_per_word: 1.0 },
+                CacheLevel { capacity_words: 512.0, cost_per_word: 2.0 },
+            ],
+        };
+        per_level_bounds(&layer(), Precision::uniform(), &h);
+    }
+}

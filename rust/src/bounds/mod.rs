@@ -1,0 +1,14 @@
+//! Communication lower bounds: Theorems 2.1, 2.2 and 2.3.
+//!
+//! All bounds are in *words* (32 bits) and accept mixed-precision arrays.
+//! Negative intermediate values (the `−M` style correction terms can exceed
+//! the main term for huge M) are clamped at the trivial floor of zero; the
+//! sequential bound additionally includes the compulsory-traffic term
+//! `p_I|I| + p_F|F| + p_O|O|` which keeps it positive in practice.
+
+pub mod hierarchy;
+pub mod parallel;
+pub mod sequential;
+
+pub use parallel::{parallel_bound, parallel_bound_terms, ParallelBoundTerms};
+pub use sequential::{sequential_bound, sequential_bound_terms, SeqBoundTerms};

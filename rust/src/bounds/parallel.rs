@@ -1,0 +1,159 @@
+//! Theorems 2.2 and 2.3 — parallel distributed-memory lower bounds.
+//!
+//! Theorem 2.2 (memory-dependent, per-processor):
+//! ```text
+//! X ≥ max{ C_p·G/(P·M) − M,  2(p_Ip_Fp_O)^{1/2}(σwσh)^{1/2}G/(P(wFhFM)^{1/2}) − 2M }
+//! ```
+//!
+//! Theorem 2.3 (memory-independent, needs initial load balance;
+//! A_P = max array size in words):
+//! ```text
+//! X ≥ (p_Ip_Fp_O)^{1/3}·max{ (G/P)^{1/2}, (Gσwσh)^{2/3}/(P·wFhF)^{2/3} } − A_P/P
+//! ```
+
+use crate::conv::{ConvShape, Precision};
+
+/// All four parallel bound terms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParallelBoundTerms {
+    /// `C_p·G/(PM) − M` (Theorem 2.2, first term)
+    pub hbl: f64,
+    /// small-filter memory-dependent term (Theorem 2.2, second term)
+    pub small_filter: f64,
+    /// `(p_Ip_Fp_O)^{1/3}(G/P)^{1/2} − A_P/P` (Theorem 2.3, first term)
+    pub mem_indep: f64,
+    /// `(p_Ip_Fp_O)^{1/3}(Gσwσh)^{2/3}/(PwFhF)^{2/3} − A_P/P` (Thm 2.3, 2nd)
+    pub mem_indep_small_filter: f64,
+}
+
+impl ParallelBoundTerms {
+    /// Max of the memory-dependent pair (Theorem 2.2 alone).
+    pub fn thm22(&self) -> f64 {
+        self.hbl.max(self.small_filter).max(0.0)
+    }
+
+    /// Max of the memory-independent pair (Theorem 2.3 alone).
+    pub fn thm23(&self) -> f64 {
+        self.mem_indep.max(self.mem_indep_small_filter).max(0.0)
+    }
+
+    /// Overall lower bound (all four terms).
+    pub fn max(&self) -> f64 {
+        self.thm22().max(self.thm23())
+    }
+}
+
+/// Evaluate all parallel bound terms for `p_procs` processors with `m`
+/// words of local memory each.
+pub fn parallel_bound_terms(
+    s: &ConvShape,
+    p: Precision,
+    p_procs: f64,
+    m: f64,
+) -> ParallelBoundTerms {
+    assert!(p_procs >= 1.0 && m > 0.0);
+    let g = s.updates() as f64;
+    let sigma = (s.s_w * s.s_h) as f64;
+    let filt = (s.w_f * s.h_f) as f64;
+    let prod3 = (p.p_i * p.p_f * p.p_o).cbrt();
+    let prod2 = (p.p_i * p.p_f * p.p_o).sqrt();
+    let a_p = s.max_array_words(p);
+
+    ParallelBoundTerms {
+        hbl: p.c_p() * g / (p_procs * m) - m,
+        small_filter: 2.0 * prod2 * sigma.sqrt() * g
+            / (p_procs * (filt * m).sqrt())
+            - 2.0 * m,
+        mem_indep: prod3 * (g / p_procs).sqrt() - a_p / p_procs,
+        mem_indep_small_filter: prod3
+            * ((g * sigma) / (p_procs * filt)).powf(2.0 / 3.0)
+            - a_p / p_procs,
+    }
+}
+
+/// Combined Theorem 2.2 + 2.3 lower bound.
+pub fn parallel_bound(s: &ConvShape, p: Precision, p_procs: f64, m: f64) -> f64 {
+    parallel_bound_terms(s, p, p_procs, m).max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    fn shape() -> ConvShape {
+        ConvShape::new(100, 64, 64, 56, 56, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn standard_precision_thm22_matches_formula() {
+        let s = shape();
+        let p = Precision::uniform();
+        let (pp, m) = (16.0, 8192.0);
+        let t = parallel_bound_terms(&s, p, pp, m);
+        let g = s.updates() as f64;
+        assert!((t.hbl - (2.25 * g / (pp * m) - m)).abs() < 1e-6);
+        let sf = 2.0 * g / (pp * (9.0 * m).sqrt()) - 2.0 * m;
+        assert!((t.small_filter - sf).abs() * 1e-9 < 1.0);
+    }
+
+    #[test]
+    fn mem_indep_matches_formula() {
+        let s = shape();
+        let p = Precision::uniform();
+        let pp = 64.0;
+        let t = parallel_bound_terms(&s, p, pp, 1.0);
+        let g = s.updates() as f64;
+        let a_p = s.max_array_words(p);
+        assert!((t.mem_indep - ((g / pp).sqrt() - a_p / pp)).abs() < 1e-6);
+        let want = (g / (pp * 9.0)).powf(2.0 / 3.0) - a_p / pp;
+        assert!((t.mem_indep_small_filter - want).abs() * 1e-9 < 1.0);
+    }
+
+    #[test]
+    fn thm22_decays_with_processors() {
+        let s = shape();
+        let p = Precision::paper_mixed();
+        let m = 4096.0;
+        let mut last = f64::INFINITY;
+        for pp in [1.0, 4.0, 16.0, 64.0] {
+            let b = parallel_bound_terms(&s, p, pp, m).thm22();
+            assert!(b <= last);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn thm23_kicks_in_when_thm22_trivial() {
+        // Huge memory per processor: Thm 2.2 goes negative. Thm 2.3 becomes
+        // nontrivial once P is large enough that A_P/P < (G/P)^{1/2}, i.e.
+        // P > A_P²/G (≈ 680 for conv2_x at batch 1000 — the "many
+        // processors or much memory" regime the paper targets).
+        let s = resnet50_layers(1000)[1].shape; // conv2_x, batch 1000
+        let p = Precision::uniform();
+        let m = 1e10;
+        let t = parallel_bound_terms(&s, p, 1048576.0, m);
+        assert!(t.thm22() == 0.0, "{t:?}");
+        assert!(t.thm23() > 0.0, "{t:?}");
+    }
+
+    #[test]
+    fn small_filter_mem_indep_dominates_for_small_filters() {
+        // σ=1, 3x3 filter, big G: the (Gσσ/PwFhF)^{2/3} term beats (G/P)^{1/2}
+        // when G is large relative to P·(wFhF)²
+        let s = resnet50_layers(1000)[1].shape;
+        let p = Precision::uniform();
+        let t = parallel_bound_terms(&s, p, 4.0, 1.0);
+        assert!(t.mem_indep_small_filter > t.mem_indep, "{t:?}");
+    }
+
+    #[test]
+    fn overall_bound_nonnegative() {
+        let s = shape();
+        for pp in [1.0, 16.0, 1024.0] {
+            for m in [64.0, 1e6, 1e12] {
+                assert!(parallel_bound(&s, Precision::gemmini(), pp, m) >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Theorem 2.1 — single-processor (two-level memory) lower bound.
+//!
+//! ```text
+//! X ≥ max{ p_I|I| + p_F|F| + p_O|O|,
+//!          C_p·G/M − M,
+//!          2(p_I p_F p_O)^{1/2}(σw σh)^{1/2}·G/(wF hF M)^{1/2} − 2M }
+//! ```
+//!
+//! with `C_p = p_T²/4` under the triangle condition, else `p_j(p_k+p_l)`.
+//! In the standard precision case this is the familiar
+//! `max{|I|+|F|+|O|, 9G/4M − M, 2G(σwσh)^{1/2}/(wFhFM)^{1/2} − 2M}`.
+
+use crate::conv::{ConvShape, Precision};
+
+/// The three terms of Theorem 2.1, individually (for figure annotations and
+/// crossover analysis).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeqBoundTerms {
+    /// memory-independent compulsory traffic (Lemma 3.1)
+    pub compulsory: f64,
+    /// `C_p·G/M − M` (Lemmas 3.2/3.3)
+    pub hbl: f64,
+    /// `2(p_Ip_Fp_O)^{1/2}(σwσh)^{1/2}G/(wFhFM)^{1/2} − 2M` (Lemma 3.4)
+    pub small_filter: f64,
+}
+
+impl SeqBoundTerms {
+    pub fn max(&self) -> f64 {
+        self.compulsory.max(self.hbl).max(self.small_filter).max(0.0)
+    }
+
+    /// Which term dominates: "compulsory" | "hbl" | "small_filter".
+    pub fn dominant(&self) -> &'static str {
+        let m = self.max();
+        if m == self.compulsory {
+            "compulsory"
+        } else if m == self.hbl {
+            "hbl"
+        } else {
+            "small_filter"
+        }
+    }
+}
+
+/// Evaluate the three terms at memory size `m` words.
+pub fn sequential_bound_terms(s: &ConvShape, p: Precision, m: f64) -> SeqBoundTerms {
+    assert!(m > 0.0, "memory size must be positive");
+    let g = s.updates() as f64;
+    let compulsory = s.footprint_words(p);
+    let hbl = p.c_p() * g / m - m;
+    let sigma = (s.s_w * s.s_h) as f64;
+    let filt = (s.w_f * s.h_f) as f64;
+    let small_filter =
+        2.0 * (p.p_i * p.p_f * p.p_o).sqrt() * sigma.sqrt() * g / (filt * m).sqrt()
+            - 2.0 * m;
+    SeqBoundTerms { compulsory, hbl, small_filter }
+}
+
+/// Theorem 2.1: the max of the three terms (≥ 0).
+pub fn sequential_bound(s: &ConvShape, p: Precision, m: f64) -> f64 {
+    sequential_bound_terms(s, p, m).max()
+}
+
+/// The memory size below which the small-filter term eclipses the HBL term
+/// in the standard-precision case: `wF·hF < 64·M·σw·σh / 81` (§3.1), i.e.
+/// `M > 81·wF·hF / (64·σw·σh)` makes the small-filter bound dominate.
+pub fn small_filter_crossover_m(s: &ConvShape) -> f64 {
+    81.0 * (s.w_f * s.h_f) as f64 / (64.0 * (s.s_w * s.s_h) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    fn shape() -> ConvShape {
+        // conv2_x-like at small batch
+        ConvShape::new(10, 64, 64, 56, 56, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn standard_precision_formula_match() {
+        let s = shape();
+        let p = Precision::uniform();
+        let m = 65536.0;
+        let t = sequential_bound_terms(&s, p, m);
+        let g = s.updates() as f64;
+        assert!((t.hbl - (2.25 * g / m - m)).abs() < 1e-6);
+        let expect_sf = 2.0 * g / (9.0 * m).sqrt() - 2.0 * m;
+        assert!((t.small_filter - expect_sf).abs() * 1e-9 < 1.0);
+        assert_eq!(
+            t.compulsory,
+            (s.input_size() + s.filter_size() + s.output_size()) as f64
+        );
+    }
+
+    #[test]
+    fn bound_is_nonnegative_even_for_huge_memory() {
+        let s = shape();
+        let b = sequential_bound(&s, Precision::uniform(), 1e12);
+        assert!(b >= 0.0);
+        // with huge M the compulsory term dominates
+        let t = sequential_bound_terms(&s, Precision::uniform(), 1e12);
+        assert_eq!(t.dominant(), "compulsory");
+    }
+
+    #[test]
+    fn hbl_dominates_for_tiny_memory_large_filter() {
+        // large filter relative to M: 7x7 filter, tiny cache
+        let s = ConvShape::new(100, 64, 64, 56, 56, 7, 7, 1, 1);
+        let m = 16.0;
+        let t = sequential_bound_terms(&s, Precision::uniform(), m);
+        assert!(t.hbl > t.small_filter, "{t:?}");
+    }
+
+    #[test]
+    fn small_filter_dominates_above_crossover() {
+        let s = shape(); // 3x3 filter, stride 1 -> crossover at M = 81*9/64
+        let mx = small_filter_crossover_m(&s);
+        assert!((mx - 81.0 * 9.0 / 64.0).abs() < 1e-9);
+        // well above crossover but small enough that compulsory doesn't win
+        let m = mx * 100.0;
+        let t = sequential_bound_terms(&s, Precision::uniform(), m);
+        assert!(t.small_filter > t.hbl, "{t:?}");
+    }
+
+    #[test]
+    fn bound_decreases_with_memory() {
+        let s = shape();
+        let p = Precision::paper_mixed();
+        let mut last = f64::INFINITY;
+        for m in [1024.0, 4096.0, 16384.0, 65536.0] {
+            let b = sequential_bound(&s, p, m);
+            assert!(b <= last, "bound must be non-increasing in M");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn mixed_precision_scales_hbl_term() {
+        let s = shape();
+        let m = 4096.0;
+        let t1 = sequential_bound_terms(&s, Precision::uniform(), m);
+        let t2 = sequential_bound_terms(&s, Precision::paper_mixed(), m);
+        // C_p: 9/4 -> 4, so hbl term grows by 16/9 (up to the −M shift)
+        let g = s.updates() as f64;
+        assert!((t2.hbl - (4.0 * g / m - m)).abs() < 1e-6);
+        assert!(t2.hbl > t1.hbl);
+    }
+
+    #[test]
+    fn resnet_layers_have_positive_bounds() {
+        for l in resnet50_layers(1000) {
+            let b = sequential_bound(&l.shape, Precision::paper_mixed(), 65536.0);
+            assert!(b > 0.0, "{}", l.name);
+        }
+    }
+}

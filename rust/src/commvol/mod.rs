@@ -1,0 +1,95 @@
+//! Symbolic communication-volume models (paper §3.2 and §4.2).
+//!
+//! For Figures 2 and 3 the paper "symbolically calculate[s] the amount of
+//! communication each [algorithm] requires" — naive, im2col, LP blocking,
+//! Winograd and FFT — and plots it relative to the lower bound. This module
+//! is that calculator. Model assumptions are documented per function; the
+//! goal is the paper's *shape*: who wins, by what factor, where crossovers
+//! fall, not testbed-exact constants.
+//!
+//! Conventions:
+//! * volumes are in words (32 bits), mixed precision via [`Precision`];
+//! * matmul sub-steps are charged the Kwasniewski et al. [12] optimal
+//!   volume `2·mnk·√(p̄/M)` (sequential) and its parallel / 2.5D variants,
+//!   with `p̄` the geometric-mean precision of the three operands;
+//! * FFT sub-steps are charged the Elango [7] volume `n·log₂n / log₂M`.
+
+pub mod par;
+pub mod seq;
+
+pub use par::{parallel_volumes, ParVolumes};
+pub use seq::{sequential_volumes, SeqVolumes};
+
+use crate::conv::Precision;
+
+/// Geometric-mean precision of the three arrays.
+pub(crate) fn pbar(p: Precision) -> f64 {
+    (p.p_i * p.p_f * p.p_o).cbrt()
+}
+
+/// Sequential blocked-matmul volume (Kwasniewski [12]): `2·mnk·√(p̄/M)`,
+/// floored at the compulsory traffic of the three matrices.
+pub(crate) fn matmul_seq(m: f64, k: f64, n: f64, pb: f64, mem: f64) -> f64 {
+    let hbl = 2.0 * m * k * n * (pb / mem).sqrt();
+    let compulsory = pb * (m * k + k * n + m * n);
+    hbl.max(compulsory)
+}
+
+/// Per-processor parallel matmul volume: the max of the memory-dependent
+/// `2mnk/(P√(M/p̄))` and the memory-independent 2.5D term `(mnk/P)^{2/3}·p̄`.
+pub(crate) fn matmul_par(m: f64, k: f64, n: f64, pb: f64, procs: f64, mem: f64) -> f64 {
+    let dep = 2.0 * m * k * n * (pb / mem).sqrt() / procs;
+    let indep = pb * (m * k * n / procs).powf(2.0 / 3.0);
+    dep.max(indep)
+}
+
+/// Sequential FFT volume (Elango [7]): `n·log₂n / log₂M` per n-point
+/// transform, floored at 2n (read + write).
+pub(crate) fn fft_seq(n: f64, mem: f64) -> f64 {
+    let v = n * n.log2() / mem.log2().max(1.0);
+    v.max(2.0 * n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_seq_matches_kwasniewski_uniform() {
+        // 2mnk/√M for unit precision, when above the compulsory floor
+        let v = matmul_seq(1e3, 1e3, 1e3, 1.0, 1e4);
+        assert!((v - 2.0 * 1e9 / 1e2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_seq_floors_at_compulsory() {
+        // huge memory: the √M term vanishes below the array sizes
+        let v = matmul_seq(100.0, 100.0, 100.0, 1.0, 1e12);
+        assert_eq!(v, 3.0 * 100.0 * 100.0);
+    }
+
+    #[test]
+    fn matmul_par_regimes() {
+        // small memory: dependent term dominates; huge memory: 2.5D term
+        let dep = matmul_par(1e3, 1e3, 1e3, 1.0, 8.0, 1e2);
+        assert!((dep - 2.0 * 1e9 / (8.0 * 10.0)).abs() < 1.0);
+        let indep = matmul_par(1e3, 1e3, 1e3, 1.0, 8.0, 1e12);
+        assert!((indep - (1e9 / 8.0f64).powf(2.0 / 3.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn fft_seq_scaling() {
+        let small_m = fft_seq(1048576.0, 64.0);
+        let big_m = fft_seq(1048576.0, 1048576.0);
+        assert!(small_m > big_m, "FFT volume must shrink with log M");
+        // floor: at least read+write
+        assert!(fft_seq(1024.0, 1e30) >= 2048.0);
+    }
+
+    #[test]
+    fn pbar_uniform_is_one() {
+        assert!((pbar(Precision::uniform()) - 1.0).abs() < 1e-12);
+        let mixed = pbar(Precision::paper_mixed());
+        assert!((mixed - 2.0f64.cbrt()).abs() < 1e-12);
+    }
+}

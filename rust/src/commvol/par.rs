@@ -1,0 +1,206 @@
+//! Parallel per-processor communication volumes — Figure 3.
+//!
+//! The paper's models assume the data starts *inside* the distributed
+//! memory, load-balanced (the Theorem 2.3 setting); converting a model that
+//! assumes external data "simply add[s] or subtract[s] the total size of
+//! the problem" (§4.2). We charge each algorithm the words a processor must
+//! *receive*: what it touches minus the load-balanced share it already
+//! holds, plus any transform-domain intermediates it materializes.
+
+use crate::bounds::parallel_bound;
+use crate::conv::{ConvShape, Precision};
+use crate::tiling::parallel_blocking;
+use crate::util::ceil_div;
+
+use super::{matmul_par, pbar};
+
+/// All Figure-3 series at one processor count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParVolumes {
+    pub procs: f64,
+    pub bound: f64,
+    pub naive: f64,
+    pub im2col: f64,
+    pub blocking: f64,
+    pub winograd: f64,
+    pub fft: f64,
+}
+
+impl ParVolumes {
+    pub fn ratios(&self) -> [(&'static str, f64); 5] {
+        [
+            ("naive", self.naive / self.bound),
+            ("im2col", self.im2col / self.bound),
+            ("blocking", self.blocking / self.bound),
+            ("winograd", self.winograd / self.bound),
+            ("fft", self.fft / self.bound),
+        ]
+    }
+}
+
+/// Naive parallel: output split over P, every MAC fetches its operands
+/// remotely except the locally-resident share.
+pub fn naive_volume_par(s: &ConvShape, p: Precision, procs: f64) -> f64 {
+    let g = s.updates() as f64;
+    let resident = s.footprint_words(p) / procs;
+    ((p.p_i + p.p_f) * g / procs + p.p_o * s.output_size() as f64 / procs
+        - resident)
+        .max(0.0)
+}
+
+/// im2col parallel: the patch matrix is materialized *locally* (its rows
+/// are distributed with the output rows, so building it is local memory
+/// traffic, not network words — unlike the sequential model where every
+/// slow↔fast transfer counts). The network pays the input-halo fetch plus
+/// a communication-optimal parallel matmul [12].
+pub fn im2col_volume_par(s: &ConvShape, p: Precision, procs: f64, m: f64) -> f64 {
+    // building a patch row touches a remote input halo: charge one full
+    // fetch of the processor's input slice (the resident share covers the
+    // interior, the halo costs about as much for im2col's row mapping)
+    let in_fetch = p.p_i * s.input_size() as f64 / procs;
+    let mm = matmul_par(
+        (s.n * s.w_o * s.h_o) as f64,
+        (s.c_i * s.w_f * s.h_f) as f64,
+        s.c_o as f64,
+        pbar(p),
+        procs,
+        m,
+    );
+    in_fetch + mm
+}
+
+/// The paper's LP blocking over the processor grid (§4.2).
+pub fn blocking_volume_par(s: &ConvShape, p: Precision, procs: u64, m: f64) -> f64 {
+    parallel_blocking(s, p, procs, m).comm_per_proc(s, p)
+}
+
+/// Winograd parallel: transforms are tile-local (distributed with the
+/// output tiles); the per-point channel matmuls pay the parallel matmul
+/// volume. Strided layers are polyphase-decomposed as in the sequential
+/// model.
+pub fn winograd_volume_par(s: &ConvShape, p: Precision, procs: f64, m: f64) -> f64 {
+    let mut total = 0.0;
+    for rw in 0..s.s_w {
+        for rh in 0..s.s_h {
+            let wf = ceil_div(s.w_f.saturating_sub(rw), s.s_w).max(1);
+            let hf = ceil_div(s.h_f.saturating_sub(rh), s.s_h).max(1);
+            let sub = ConvShape { w_f: wf, h_f: hf, s_w: 1, s_h: 1, ..*s };
+            total += winograd_unit_par(&sub, p, procs, m);
+        }
+    }
+    total
+}
+
+fn winograd_unit_par(s: &ConvShape, p: Precision, procs: f64, m: f64) -> f64 {
+    let mw = 2.0_f64;
+    let tw = mw + s.w_f as f64 - 1.0;
+    let th = mw + s.h_f as f64 - 1.0;
+    let tiles = (s.w_o as f64 / mw).ceil() * (s.h_o as f64 / mw).ceil();
+    let n = s.n as f64;
+    let (ci, co) = (s.c_i as f64, s.c_o as f64);
+    let points = tw * th;
+    // transform-domain arrays, distributed: local writes, but the filter
+    // transform must be replicated across the processor rows that use it
+    let u_local = p.p_i * n * tiles * points * ci / procs;
+    let f_repl = p.p_f * points * ci * co * (1.0 - 1.0 / procs);
+    let v_local = p.p_o * n * tiles * points * co / procs;
+    let mm: f64 = points * matmul_par(n * tiles, ci, co, pbar(p), procs, m);
+    u_local + f_repl + v_local + mm
+}
+
+/// FFT parallel: distributed FFTs pay `n·log n/(P·log M)` each ([7]),
+/// plus the layout redistribution between the transform phase (data
+/// sharded by image plane) and the contraction phase (data sharded by
+/// frequency) — an all-to-all of the full transform-domain volume — plus
+/// the per-frequency channel matmuls and filter-transform replication.
+pub fn fft_volume_par(s: &ConvShape, p: Precision, procs: f64, m: f64) -> f64 {
+    let img = (s.in_w() * s.in_h()) as f64;
+    let n = s.n as f64;
+    let (ci, co) = (s.c_i as f64, s.c_o as f64);
+    let cx = 2.0;
+    let fft_one = img * img.log2() / (procs * m.log2().max(1.0));
+    let mut vol = 0.0;
+    // forward/filter/inverse transforms
+    vol += p.p_i * cx * n * ci * fft_one;
+    vol += p.p_f * cx * ci * co * fft_one
+        + p.p_f * cx * ci * co * img * (1.0 - 1.0 / procs) / procs;
+    vol += p.p_o * cx * n * co * fft_one;
+    // plane-sharded → frequency-sharded all-to-all (U, Ŵ) and back (V̂)
+    vol += cx * (p.p_i * n * ci + p.p_f * ci * co + p.p_o * n * co) * img / procs;
+    // per-frequency channel contraction
+    vol += cx * img * matmul_par(n, ci, co, pbar(p), procs, m);
+    vol
+}
+
+/// Evaluate every model at processor count `procs` (memory `m` words each).
+pub fn parallel_volumes(s: &ConvShape, p: Precision, procs: u64, m: f64) -> ParVolumes {
+    let pf = procs as f64;
+    ParVolumes {
+        procs: pf,
+        bound: parallel_bound(s, p, pf, m).max(1.0),
+        naive: naive_volume_par(s, p, pf),
+        im2col: im2col_volume_par(s, p, pf, m),
+        blocking: blocking_volume_par(s, p, procs, m),
+        winograd: winograd_volume_par(s, p, pf, m),
+        fft: fft_volume_par(s, p, pf, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    fn conv2x(batch: u64) -> ConvShape {
+        resnet50_layers(batch)[1].shape
+    }
+
+    #[test]
+    fn blocking_outperforms_im2col() {
+        // Figure 3: "blocking outperforms im2col considerably, especially
+        // for layer 2"
+        let s = conv2x(1000);
+        let p = Precision::paper_mixed();
+        for procs in [16u64, 64, 256] {
+            let v = parallel_volumes(&s, p, procs, 1e6);
+            assert!(
+                v.blocking < v.im2col,
+                "P={procs}: blocking {} im2col {}",
+                v.blocking, v.im2col
+            );
+        }
+    }
+
+    #[test]
+    fn im2col_orders_of_magnitude_better_than_fft_winograd() {
+        // §4.2: "Winograd and FFT remain quite far from the communication
+        // bound … while im2col performs orders of magnitude better"
+        let s = conv2x(1000);
+        let p = Precision::paper_mixed();
+        let v = parallel_volumes(&s, p, 64, 1e6);
+        assert!(v.im2col * 5.0 < v.winograd, "{v:?}");
+        assert!(v.im2col * 5.0 < v.fft, "{v:?}");
+    }
+
+    #[test]
+    fn all_finite_nonnegative() {
+        let p = Precision::paper_mixed();
+        for l in resnet50_layers(1000) {
+            for procs in [2u64, 32, 1024] {
+                let v = parallel_volumes(&l.shape, p, procs, 1e6);
+                for x in [v.bound, v.naive, v.im2col, v.blocking, v.winograd, v.fft] {
+                    assert!(x.is_finite() && x >= 0.0, "{}: {v:?}", l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_touch_volume_decreases_with_p() {
+        let s = conv2x(100);
+        let p = Precision::uniform();
+        let few = naive_volume_par(&s, p, 4.0);
+        let many = naive_volume_par(&s, p, 256.0);
+        assert!(many < few);
+    }
+}

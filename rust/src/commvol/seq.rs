@@ -1,0 +1,237 @@
+//! Sequential (single-processor) communication volumes — Figure 2.
+//!
+//! Per-algorithm models (all include the compulsory p_O|O| output write):
+//!
+//! * **naive** — output-stationary scalar loop with no cache reuse beyond
+//!   one register: every MAC loads its input and filter word:
+//!   `(p_I + p_F)·G + p_O·|O|`.
+//! * **im2col** — read the input once, materialize the patch matrix
+//!   (`G/cO` elements, written then re-read at input precision), then a
+//!   communication-optimal matmul `(N·wO·hO) × (cI·wF·hF) × cO` [12].
+//! * **blocking** — the paper's LP tiling (§3.2): `G/U` tile steps, each
+//!   loading one input+filter+output block (the blocks' true footprint).
+//! * **Winograd** — F(2×2, r) tiles (strided layers are first polyphase-
+//!   decomposed into σw·σh unit-stride sub-convolutions): input/output
+//!   transforms touch their arrays a constant number of times, and the
+//!   `t²` per-point channel matmuls are charged the [12] volume.
+//! * **FFT** — full-image transforms: `N·cI` forward FFTs, `cI·cO` filter
+//!   FFTs, per-frequency channel matmuls, `N·cO` inverse FFTs, with the
+//!   [7] FFT volume and complex-word doubling.
+
+use crate::bounds::sequential_bound;
+use crate::conv::{ConvShape, Precision};
+use crate::tiling::sequential_blocking;
+use crate::util::ceil_div;
+
+use super::{fft_seq, matmul_seq, pbar};
+
+/// All Figure-2 series at one memory size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeqVolumes {
+    pub m: f64,
+    pub bound: f64,
+    pub naive: f64,
+    pub im2col: f64,
+    pub blocking: f64,
+    pub winograd: f64,
+    pub fft: f64,
+}
+
+impl SeqVolumes {
+    /// Ratios to the lower bound, in the figure's plotting order.
+    pub fn ratios(&self) -> [(&'static str, f64); 5] {
+        [
+            ("naive", self.naive / self.bound),
+            ("im2col", self.im2col / self.bound),
+            ("blocking", self.blocking / self.bound),
+            ("winograd", self.winograd / self.bound),
+            ("fft", self.fft / self.bound),
+        ]
+    }
+}
+
+pub fn naive_volume(s: &ConvShape, p: Precision) -> f64 {
+    (p.p_i + p.p_f) * s.updates() as f64 + p.p_o * s.output_size() as f64
+}
+
+pub fn im2col_volume(s: &ConvShape, p: Precision, m: f64) -> f64 {
+    let g = s.updates() as f64;
+    let patch = g / s.c_o as f64; // (N·wO·hO) × (cI·wF·hF)
+    let mm = matmul_seq(
+        (s.n * s.w_o * s.h_o) as f64,
+        (s.c_i * s.w_f * s.h_f) as f64,
+        s.c_o as f64,
+        pbar(p),
+        m,
+    );
+    p.p_i * (s.input_size() as f64 + 2.0 * patch) + mm
+        + p.p_o * s.output_size() as f64
+}
+
+pub fn blocking_volume(s: &ConvShape, p: Precision, m: f64) -> f64 {
+    let b = sequential_blocking(s, p, m);
+    let tiles = s.updates() as f64 / b.updates_per_tile();
+    tiles * b.footprint_words(p) + p.p_o * s.output_size() as f64
+}
+
+/// Winograd F(2×2, r×r) with polyphase decomposition for strided layers.
+pub fn winograd_volume(s: &ConvShape, p: Precision, m: f64) -> f64 {
+    let mut total = 0.0;
+    // polyphase: σw·σh sub-convolutions with decimated images and filters
+    for rw in 0..s.s_w {
+        for rh in 0..s.s_h {
+            let wf = ceil_div(s.w_f.saturating_sub(rw), s.s_w).max(1);
+            let hf = ceil_div(s.h_f.saturating_sub(rh), s.s_h).max(1);
+            let sub = ConvShape {
+                w_f: wf,
+                h_f: hf,
+                s_w: 1,
+                s_h: 1,
+                ..*s
+            };
+            total += winograd_unit_stride(&sub, p, m);
+        }
+    }
+    total
+}
+
+fn winograd_unit_stride(s: &ConvShape, p: Precision, m: f64) -> f64 {
+    let mw = 2.0_f64; // F(2×2, r): output tile side
+    let tw = mw + s.w_f as f64 - 1.0; // input tile side
+    let th = mw + s.h_f as f64 - 1.0;
+    let tiles = (s.w_o as f64 / mw).ceil() * (s.h_o as f64 / mw).ceil();
+    let n = s.n as f64;
+    let (ci, co) = (s.c_i as f64, s.c_o as f64);
+    let points = tw * th;
+
+    // input transform: read input, write U (points per tile per channel)
+    let u_size = n * tiles * points * ci;
+    let v_size = n * tiles * points * co;
+    let f_size = points * ci * co;
+    let mut vol = p.p_i * (s.input_size() as f64 + u_size)
+        + p.p_f * (s.filter_size() as f64 + f_size);
+    // per-point channel matmuls (N·tiles × cI × cO), batched over points
+    vol += points * matmul_seq(n * tiles, ci, co, pbar(p), m);
+    // inverse transform: read V, write output
+    vol += p.p_o * (v_size + s.output_size() as f64);
+    vol
+}
+
+pub fn fft_volume(s: &ConvShape, p: Precision, m: f64) -> f64 {
+    let img = (s.in_w() * s.in_h()) as f64;
+    let n = s.n as f64;
+    let (ci, co) = (s.c_i as f64, s.c_o as f64);
+    // complex words double the footprint of every transform-domain array
+    let cx = 2.0;
+    let mut vol = 0.0;
+    // forward FFTs of every input channel plane
+    vol += p.p_i * cx * n * ci * fft_seq(img, m);
+    // filter FFTs (padded to image size)
+    vol += p.p_f * cx * ci * co * fft_seq(img, m);
+    // per-frequency channel contraction: img point-matmuls N × cI × cO
+    vol += cx * img * matmul_seq(n, ci, co, pbar(p), m) / 1.0;
+    // inverse FFTs of every output plane + final write
+    vol += p.p_o * (cx * n * co * fft_seq(img, m) + s.output_size() as f64);
+    vol
+}
+
+/// Evaluate every model at memory size `m`.
+pub fn sequential_volumes(s: &ConvShape, p: Precision, m: f64) -> SeqVolumes {
+    SeqVolumes {
+        m,
+        bound: sequential_bound(s, p, m).max(1.0),
+        naive: naive_volume(s, p),
+        im2col: im2col_volume(s, p, m),
+        blocking: blocking_volume(s, p, m),
+        winograd: winograd_volume(s, p, m),
+        fft: fft_volume(s, p, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    fn conv2x(batch: u64) -> ConvShape {
+        resnet50_layers(batch)[1].shape
+    }
+
+    #[test]
+    fn all_volumes_at_least_bound_scale() {
+        // every algorithm's volume must be ≥ a constant fraction of the
+        // bound (sanity: no model undercuts the lower bound by >2×)
+        let s = conv2x(100);
+        let p = Precision::paper_mixed();
+        for m in [4096.0, 65536.0, 1048576.0] {
+            let v = sequential_volumes(&s, p, m);
+            for (name, r) in v.ratios() {
+                assert!(r > 0.5, "{name} ratio {r} at M={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_is_worst_at_realistic_memory() {
+        let s = conv2x(100);
+        let v = sequential_volumes(&s, Precision::uniform(), 65536.0);
+        assert!(v.naive > v.im2col);
+        assert!(v.naive > v.blocking);
+    }
+
+    #[test]
+    fn blocking_and_im2col_scale_better_than_fft_winograd_in_m() {
+        // §3.2: "Blocking and im2col scale better than FFT and Winograd in
+        // the memory size" — compare improvement factors from small to
+        // large M
+        let s = conv2x(100);
+        let p = Precision::uniform();
+        let small = sequential_volumes(&s, p, 1024.0);
+        let large = sequential_volumes(&s, p, 1048576.0);
+        let impr = |a: f64, b: f64| a / b;
+        assert!(
+            impr(small.blocking, large.blocking) > impr(small.fft, large.fft)
+        );
+        assert!(
+            impr(small.im2col, large.im2col) > impr(small.winograd, large.winograd)
+        );
+    }
+
+    #[test]
+    fn blocking_beats_im2col_for_unit_stride_large_m() {
+        // Figure 2: "for conv2_x, the strides of 1 are more favorable to
+        // the blocking, and blocking beats im2col for sufficiently large
+        // memory sizes"
+        let s = conv2x(1000);
+        let p = Precision::paper_mixed();
+        let v = sequential_volumes(&s, p, 4.0 * 1048576.0);
+        assert!(
+            v.blocking < v.im2col,
+            "blocking {} vs im2col {}",
+            v.blocking, v.im2col
+        );
+    }
+
+    #[test]
+    fn volumes_positive_and_finite_for_all_layers() {
+        let p = Precision::paper_mixed();
+        for l in resnet50_layers(1000) {
+            for m in [4096.0, 262144.0] {
+                let v = sequential_volumes(&l.shape, p, m);
+                for x in [v.bound, v.naive, v.im2col, v.blocking, v.winograd, v.fft] {
+                    assert!(x.is_finite() && x > 0.0, "{}: {v:?}", l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn winograd_polyphase_reduces_to_unit_stride() {
+        // for σ=1 the polyphase loop has exactly one term
+        let s = conv2x(10);
+        let p = Precision::uniform();
+        let a = winograd_volume(&s, p, 65536.0);
+        let b = winograd_unit_stride(&s, p, 65536.0);
+        assert_eq!(a, b);
+    }
+}

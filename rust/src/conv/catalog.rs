@@ -1,0 +1,149 @@
+//! Layer catalogs used in the paper's evaluation.
+//!
+//! The paper evaluates the "five standard ResNet convolution sizes" (He et
+//! al. [9]) at batch size 1000 (Figures 2–4) and mentions AlexNet parameters
+//! for the Section 3.2 comparison. conv2_x…conv5_x are the 3×3 convolutions
+//! of the residual blocks; the paper notes conv3_x–conv5_x "resemble
+//! conv2_x", and Figure 4 uses one representative size per stage.
+
+use super::shapes::ConvShape;
+
+/// A named layer.
+#[derive(Debug, Clone, Copy)]
+pub struct NamedLayer {
+    pub name: &'static str,
+    pub shape: ConvShape,
+}
+
+/// ResNet-50 representative convolution sizes at batch size `n`.
+///
+/// * conv1: 7×7/2, 3→64, 112×112 out
+/// * conv2_x: 3×3/1, 64→64, 56×56 out
+/// * conv3_x: 3×3/1, 128→128, 28×28 out
+/// * conv4_x: 3×3/1, 256→256, 14×14 out
+/// * conv5_x: 3×3/1, 512→512, 7×7 out
+pub fn resnet50_layers(n: u64) -> Vec<NamedLayer> {
+    vec![
+        NamedLayer {
+            name: "conv1",
+            shape: ConvShape::new(n, 3, 64, 112, 112, 7, 7, 2, 2),
+        },
+        NamedLayer {
+            name: "conv2_x",
+            shape: ConvShape::new(n, 64, 64, 56, 56, 3, 3, 1, 1),
+        },
+        NamedLayer {
+            name: "conv3_x",
+            shape: ConvShape::new(n, 128, 128, 28, 28, 3, 3, 1, 1),
+        },
+        NamedLayer {
+            name: "conv4_x",
+            shape: ConvShape::new(n, 256, 256, 14, 14, 3, 3, 1, 1),
+        },
+        NamedLayer {
+            name: "conv5_x",
+            shape: ConvShape::new(n, 512, 512, 7, 7, 3, 3, 1, 1),
+        },
+    ]
+}
+
+/// AlexNet convolution sizes (Krizhevsky et al., as used in §3.2).
+pub fn alexnet_layers(n: u64) -> Vec<NamedLayer> {
+    vec![
+        NamedLayer {
+            name: "alex1",
+            shape: ConvShape::new(n, 3, 96, 55, 55, 11, 11, 4, 4),
+        },
+        NamedLayer {
+            name: "alex2",
+            shape: ConvShape::new(n, 96, 256, 27, 27, 5, 5, 1, 1),
+        },
+        NamedLayer {
+            name: "alex3",
+            shape: ConvShape::new(n, 256, 384, 13, 13, 3, 3, 1, 1),
+        },
+        NamedLayer {
+            name: "alex4",
+            shape: ConvShape::new(n, 384, 384, 13, 13, 3, 3, 1, 1),
+        },
+        NamedLayer {
+            name: "alex5",
+            shape: ConvShape::new(n, 384, 256, 13, 13, 3, 3, 1, 1),
+        },
+    ]
+}
+
+/// Look up a layer by name across both catalogs.
+pub fn find_layer(name: &str, n: u64) -> Option<NamedLayer> {
+    resnet50_layers(n)
+        .into_iter()
+        .chain(alexnet_layers(n))
+        .find(|l| l.name == name)
+}
+
+/// Uniformly scale a shape's channel/spatial dims down by `k` (keeping
+/// filters and strides) — used to make runnable-size variants of the real
+/// layer shapes for the e2e driver.
+pub fn scaled(shape: ConvShape, k: u64) -> ConvShape {
+    ConvShape {
+        n: shape.n,
+        c_i: (shape.c_i / k).max(1),
+        c_o: (shape.c_o / k).max(1),
+        w_o: (shape.w_o / k).max(shape.w_f),
+        h_o: (shape.h_o / k).max(shape.h_f),
+        ..shape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_has_five_layers() {
+        let layers = resnet50_layers(1000);
+        assert_eq!(layers.len(), 5);
+        assert_eq!(layers[0].name, "conv1");
+        assert_eq!(layers[0].shape.w_f, 7);
+        assert_eq!(layers[0].shape.s_w, 2);
+        assert_eq!(layers[4].shape.c_o, 512);
+    }
+
+    #[test]
+    fn paper_assumptions_hold_for_all_catalog_layers() {
+        for l in resnet50_layers(1000).into_iter().chain(alexnet_layers(1000)) {
+            assert!(
+                l.shape.paper_assumptions_hold(),
+                "{} violates paper assumptions",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn conv1_sizes() {
+        // |O| for conv1 at batch 1: 64·112·112
+        let s = resnet50_layers(1).remove(0).shape;
+        assert_eq!(s.output_size(), 64 * 112 * 112);
+        assert_eq!(s.filter_size(), 3 * 64 * 7 * 7);
+        // G = N cI cO wO hO wF hF
+        assert_eq!(s.updates(), 3 * 64 * 112 * 112 * 49);
+    }
+
+    #[test]
+    fn find_layer_works() {
+        assert!(find_layer("conv3_x", 10).is_some());
+        assert!(find_layer("alex2", 10).is_some());
+        assert!(find_layer("nope", 10).is_none());
+    }
+
+    #[test]
+    fn scaled_keeps_validity() {
+        let s = resnet50_layers(4).remove(1).shape;
+        let t = scaled(s, 8);
+        assert_eq!(t.c_i, 8);
+        assert_eq!(t.c_o, 8);
+        assert_eq!(t.w_o, 7);
+        assert!(t.paper_assumptions_hold());
+    }
+}

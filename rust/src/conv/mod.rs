@@ -1,0 +1,16 @@
+//! Convolution problem definitions: the 7NL CNN shape model (paper §2.1),
+//! mixed-precision word model, the ResNet-50 / AlexNet layer catalogs used
+//! throughout the evaluation, and a native tensor + naive convolution used
+//! to validate the PJRT runtime end to end.
+
+pub mod catalog;
+pub mod naive;
+pub mod shapes;
+pub mod tensor;
+pub mod training;
+
+pub use catalog::{alexnet_layers, find_layer, resnet50_layers, scaled};
+pub use naive::conv7nl_naive;
+pub use shapes::{ConvShape, Precision};
+pub use tensor::Tensor4;
+pub use training::{backward_shapes, dfilter_naive, dinput_naive, TrainingShapes};

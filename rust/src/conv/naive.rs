@@ -1,0 +1,142 @@
+//! The naive in-Rust 7NL CNN execution — the crate's own oracle.
+//!
+//! The PJRT runtime's outputs (Pallas kernel, im2col kernel, full network)
+//! are validated against this implementation; it is also the "naive"
+//! algorithm whose communication volume Figure 2 charts.
+
+use super::shapes::ConvShape;
+use super::tensor::Tensor4;
+
+/// Execute the seven-loop nest exactly as written in the paper (eq. 1).
+///
+/// `x`: (N, cI, WI, HI) with WI ≥ σw(wO−1)+wF, `w`: (cI, cO, wF, hF).
+/// Returns (N, cO, wO, hO).
+pub fn conv7nl_naive(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
+    let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    assert_eq!(x.dims[0], n, "batch mismatch");
+    assert_eq!(x.dims[1], c_i, "input channel mismatch");
+    assert!(x.dims[2] >= sw * (w_o - 1) + w_f, "input width too small");
+    assert!(x.dims[3] >= sh * (h_o - 1) + h_f, "input height too small");
+    assert_eq!(w.dims, [c_i, c_o, w_f, h_f], "filter shape mismatch");
+
+    let mut out = Tensor4::zeros([n, c_o, w_o, h_o]);
+    // Loop order chosen for locality of the inner accumulation; any order
+    // computes the same result (the paper's reorderability premise).
+    for i1 in 0..n {
+        for i3 in 0..c_o {
+            for i2 in 0..c_i {
+                for i6 in 0..w_f {
+                    for i7 in 0..h_f {
+                        let f = w.at(i2, i3, i6, i7);
+                        if f == 0.0 {
+                            continue;
+                        }
+                        for i4 in 0..w_o {
+                            for i5 in 0..h_o {
+                                *out.at_mut(i1, i3, i4, i5) +=
+                                    x.at(i1, i2, sw * i4 + i6, sh * i5 + i7) * f;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1×1 filter, unit stride: conv reduces to a per-pixel channel matmul.
+    #[test]
+    fn one_by_one_filter_is_channel_matmul() {
+        let s = ConvShape::new(1, 2, 3, 2, 2, 1, 1, 1, 1);
+        let mut x = Tensor4::zeros([1, 2, 3, 3]);
+        let mut w = Tensor4::zeros([2, 3, 1, 1]);
+        // x[c=0] = 1 everywhere, x[c=1] = 2 everywhere
+        for i in 0..3 {
+            for j in 0..3 {
+                *x.at_mut(0, 0, i, j) = 1.0;
+                *x.at_mut(0, 1, i, j) = 2.0;
+            }
+        }
+        // w[ci, co] = ci + co
+        for ci in 0..2 {
+            for co in 0..3 {
+                *w.at_mut(ci, co, 0, 0) = (ci + co) as f32;
+            }
+        }
+        let out = conv7nl_naive(&x, &w, &s);
+        // out[co] = 1·(0+co) + 2·(1+co) = 3co + 2
+        for co in 0..3 {
+            for i in 0..2 {
+                for j in 0..2 {
+                    assert_eq!(out.at(0, co, i, j), (3 * co + 2) as f32);
+                }
+            }
+        }
+    }
+
+    /// Identity filter (delta at tap 0,0) passes the input through.
+    #[test]
+    fn delta_filter_is_identity() {
+        let s = ConvShape::new(1, 1, 1, 4, 4, 2, 2, 1, 1);
+        let x = Tensor4::randn([1, 1, 6, 6], 5);
+        let mut w = Tensor4::zeros([1, 1, 2, 2]);
+        *w.at_mut(0, 0, 0, 0) = 1.0;
+        let out = conv7nl_naive(&x, &w, &s);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(out.at(0, 0, i, j), x.at(0, 0, i, j));
+            }
+        }
+    }
+
+    /// Box filter of ones computes window sums; check one window by hand.
+    #[test]
+    fn box_filter_window_sum() {
+        let s = ConvShape::new(1, 1, 1, 2, 2, 2, 2, 2, 2);
+        let mut x = Tensor4::zeros([1, 1, 6, 6]);
+        for i in 0..6 {
+            for j in 0..6 {
+                *x.at_mut(0, 0, i, j) = (i * 6 + j) as f32;
+            }
+        }
+        let mut w = Tensor4::zeros([1, 1, 2, 2]);
+        for a in 0..2 {
+            for b in 0..2 {
+                *w.at_mut(0, 0, a, b) = 1.0;
+            }
+        }
+        let out = conv7nl_naive(&x, &w, &s);
+        // window at output (1,1): input rows 2..3, cols 2..3
+        let expect = (2 * 6 + 2) + (2 * 6 + 3) + (3 * 6 + 2) + (3 * 6 + 3);
+        assert_eq!(out.at(0, 0, 1, 1), expect as f32);
+    }
+
+    /// Linearity: conv(x, a·w1 + b·w2) = a·conv(x,w1) + b·conv(x,w2).
+    #[test]
+    fn linear_in_filter() {
+        let s = ConvShape::new(2, 3, 2, 3, 3, 3, 3, 1, 1);
+        let x = Tensor4::randn([2, 3, 6, 6], 1);
+        let w1 = Tensor4::randn([3, 2, 3, 3], 2);
+        let w2 = Tensor4::randn([3, 2, 3, 3], 3);
+        let mut wc = w1.clone();
+        for (c, (a, b)) in wc.data.iter_mut().zip(w1.data.iter().zip(&w2.data)) {
+            *c = 2.0 * a - 0.5 * b;
+        }
+        let o1 = conv7nl_naive(&x, &w1, &s);
+        let o2 = conv7nl_naive(&x, &w2, &s);
+        let oc = conv7nl_naive(&x, &wc, &s);
+        let mut expect = o1.clone();
+        for (e, (a, b)) in expect.data.iter_mut().zip(o1.data.iter().zip(&o2.data)) {
+            *e = 2.0 * a - 0.5 * b;
+        }
+        assert!(oc.max_abs_diff(&expect) < 1e-4);
+    }
+}

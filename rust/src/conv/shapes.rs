@@ -1,0 +1,258 @@
+//! The 7NL CNN problem shape (paper §2.1) and the mixed-precision model.
+//!
+//! ```text
+//! for {i1..i7} = 0 : {N, cI, cO, wO, hO, wF, hF} - 1
+//!   Output(i1,i3,i4,i5) += Input(i1,i2, σw·i4+i6, σh·i5+i7) · Filter(i2,i3,i6,i7)
+//! ```
+//!
+//! Sizes follow the paper exactly: `|I| = N·cI·(σw·wO + wF)(σh·hO + hF)`,
+//! `|O| = N·cO·wO·hO`, `|F| = cI·cO·wF·hF`, `G = N·cI·cO·wO·hO·wF·hF`.
+
+use std::fmt;
+
+/// Precisions of the three arrays, in words (32 bits). GEMMINI's 8-bit
+/// inputs are `0.25` words; its 32-bit accumulator outputs are `1.0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precision {
+    pub p_i: f64,
+    pub p_f: f64,
+    pub p_o: f64,
+}
+
+impl Precision {
+    pub const fn new(p_i: f64, p_f: f64, p_o: f64) -> Precision {
+        Precision { p_i, p_f, p_o }
+    }
+
+    /// All-single-precision (the "standard case", C_p = 9/4).
+    pub const fn uniform() -> Precision {
+        Precision::new(1.0, 1.0, 1.0)
+    }
+
+    /// Figure 2/3 setting: p_I = p_F = 1, p_O = 2.
+    pub const fn paper_mixed() -> Precision {
+        Precision::new(1.0, 1.0, 2.0)
+    }
+
+    /// GEMMINI setting: 8-bit input/filter, 32-bit accumulator output.
+    pub const fn gemmini() -> Precision {
+        Precision::new(0.25, 0.25, 1.0)
+    }
+
+    /// p_T = p_I + p_F + p_O.
+    pub fn total(&self) -> f64 {
+        self.p_i + self.p_f + self.p_o
+    }
+
+    /// Does the triangle condition `p_j <= p_k + p_l` hold for all j?
+    pub fn triangle(&self) -> bool {
+        self.p_i <= self.p_f + self.p_o
+            && self.p_f <= self.p_i + self.p_o
+            && self.p_o <= self.p_i + self.p_f
+    }
+
+    /// The constant C_p of Theorem 2.1:
+    /// `p_T²/4` under the triangle condition, else `p_j(p_k + p_l)` for the
+    /// violating j.
+    pub fn c_p(&self) -> f64 {
+        if self.triangle() {
+            return self.total().powi(2) / 4.0;
+        }
+        let (pi, pf, po) = (self.p_i, self.p_f, self.p_o);
+        if pi > pf + po {
+            pi * (pf + po)
+        } else if pf > pi + po {
+            pf * (pi + po)
+        } else {
+            po * (pi + pf)
+        }
+    }
+}
+
+/// One 7NL CNN layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvShape {
+    /// Batch size N (i1).
+    pub n: u64,
+    /// Input channels c_I (i2).
+    pub c_i: u64,
+    /// Output channels c_O (i3).
+    pub c_o: u64,
+    /// Output width w_O (i4).
+    pub w_o: u64,
+    /// Output height h_O (i5).
+    pub h_o: u64,
+    /// Filter width w_F (i6).
+    pub w_f: u64,
+    /// Filter height h_F (i7).
+    pub h_f: u64,
+    /// Horizontal stride σ_w.
+    pub s_w: u64,
+    /// Vertical stride σ_h.
+    pub s_h: u64,
+}
+
+impl ConvShape {
+    #[allow(clippy::too_many_arguments)]
+    pub const fn new(n: u64, c_i: u64, c_o: u64, w_o: u64, h_o: u64,
+                     w_f: u64, h_f: u64, s_w: u64, s_h: u64) -> ConvShape {
+        ConvShape { n, c_i, c_o, w_o, h_o, w_f, h_f, s_w, s_h }
+    }
+
+    /// Paper model-assumption check: `σ ≤ f ≤ σ·out` in both axes.
+    pub fn paper_assumptions_hold(&self) -> bool {
+        self.s_w <= self.w_f
+            && self.s_h <= self.h_f
+            && self.w_f <= self.s_w * self.w_o
+            && self.h_f <= self.s_h * self.h_o
+    }
+
+    /// Input width `σw·wO + wF` (paper convention).
+    pub fn in_w(&self) -> u64 {
+        self.s_w * self.w_o + self.w_f
+    }
+
+    /// Input height `σh·hO + hF`.
+    pub fn in_h(&self) -> u64 {
+        self.s_h * self.h_o + self.h_f
+    }
+
+    /// |I| in elements.
+    pub fn input_size(&self) -> u64 {
+        self.n * self.c_i * self.in_w() * self.in_h()
+    }
+
+    /// |F| in elements.
+    pub fn filter_size(&self) -> u64 {
+        self.c_i * self.c_o * self.w_f * self.h_f
+    }
+
+    /// |O| in elements.
+    pub fn output_size(&self) -> u64 {
+        self.n * self.c_o * self.w_o * self.h_o
+    }
+
+    /// G = total number of multiply-accumulate updates.
+    pub fn updates(&self) -> u64 {
+        self.n * self.c_i * self.c_o * self.w_o * self.h_o * self.w_f * self.h_f
+    }
+
+    /// Total array footprint in *words* under precisions `p`:
+    /// `p_I|I| + p_F|F| + p_O|O|` (the compulsory-traffic bound).
+    pub fn footprint_words(&self, p: Precision) -> f64 {
+        p.p_i * self.input_size() as f64
+            + p.p_f * self.filter_size() as f64
+            + p.p_o * self.output_size() as f64
+    }
+
+    /// Largest single array in words: `A_P` of Theorem 2.3.
+    pub fn max_array_words(&self, p: Precision) -> f64 {
+        let i = p.p_i * self.input_size() as f64;
+        let f = p.p_f * self.filter_size() as f64;
+        let o = p.p_o * self.output_size() as f64;
+        i.max(f).max(o)
+    }
+
+    /// Scale the batch dimension.
+    pub fn with_batch(mut self, n: u64) -> ConvShape {
+        self.n = n;
+        self
+    }
+}
+
+impl fmt::Display for ConvShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "N={} cI={} cO={} out={}x{} filt={}x{} stride={}x{}",
+            self.n, self.c_i, self.c_o, self.w_o, self.h_o, self.w_f,
+            self.h_f, self.s_w, self.s_h
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ConvShape {
+        ConvShape::new(2, 3, 4, 5, 6, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn sizes_match_formulas() {
+        let s = small();
+        assert_eq!(s.in_w(), 5 + 3);
+        assert_eq!(s.in_h(), 6 + 3);
+        assert_eq!(s.input_size(), 2 * 3 * 8 * 9);
+        assert_eq!(s.filter_size(), 3 * 4 * 3 * 3);
+        assert_eq!(s.output_size(), 2 * 4 * 5 * 6);
+        assert_eq!(s.updates(), 2 * 3 * 4 * 5 * 6 * 3 * 3);
+    }
+
+    #[test]
+    fn strided_input_size() {
+        let s = ConvShape::new(1, 1, 1, 10, 10, 4, 4, 2, 2);
+        assert_eq!(s.in_w(), 24);
+        assert_eq!(s.input_size(), 24 * 24);
+    }
+
+    #[test]
+    fn paper_assumptions() {
+        assert!(small().paper_assumptions_hold());
+        // stride bigger than filter violates σ ≤ f
+        let bad = ConvShape::new(1, 1, 1, 10, 10, 2, 2, 3, 3);
+        assert!(!bad.paper_assumptions_hold());
+        // filter bigger than σ·out violates f ≤ σ·out
+        let bad2 = ConvShape::new(1, 1, 1, 2, 2, 5, 5, 1, 1);
+        assert!(!bad2.paper_assumptions_hold());
+    }
+
+    #[test]
+    fn uniform_precision_cp_is_nine_fourths() {
+        assert!((Precision::uniform().c_p() - 2.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_precision_cp() {
+        // p = (1,1,2): triangle holds with equality; C_p = 16/4 = 4
+        let p = Precision::paper_mixed();
+        assert!(p.triangle());
+        assert!((p.c_p() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_violated_cp() {
+        // p_O = 5 > 1 + 1: C_p = 5·(1+1) = 10
+        let p = Precision::new(1.0, 1.0, 5.0);
+        assert!(!p.triangle());
+        assert!((p.c_p() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_violation_is_unique() {
+        // if p_j > p_k + p_l then the other two conditions hold
+        let p = Precision::new(8.0, 2.0, 1.0);
+        assert!(p.p_i > p.p_f + p.p_o);
+        assert!(p.p_f <= p.p_i + p.p_o);
+        assert!(p.p_o <= p.p_i + p.p_f);
+        assert!((p.c_p() - 8.0 * 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gemmini_precision() {
+        let p = Precision::gemmini();
+        assert!(!p.triangle()); // 1.0 > 0.25 + 0.25
+        assert!((p.c_p() - 1.0 * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn footprint_words_mixed() {
+        let s = small();
+        let p = Precision::paper_mixed();
+        let expect = s.input_size() as f64
+            + s.filter_size() as f64
+            + 2.0 * s.output_size() as f64;
+        assert_eq!(s.footprint_words(p), expect);
+    }
+}

@@ -1,0 +1,118 @@
+//! A minimal dense 4-D f32 tensor (row-major, NCWH index order as in the
+//! paper's loop nest). This is the host-side data container the runtime
+//! feeds to PJRT and the naive validator computes over.
+
+use crate::util::rng::Rng;
+
+/// Dense 4-D tensor, row-major over (d0, d1, d2, d3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor4 {
+    pub dims: [usize; 4],
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(dims: [usize; 4]) -> Tensor4 {
+        Tensor4 { dims, data: vec![0.0; dims.iter().product()] }
+    }
+
+    /// Filled with deterministic normal-ish noise from `seed`.
+    pub fn randn(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4 { dims, data: rng.normal_vec(dims.iter().product()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert!(a < self.dims[0] && b < self.dims[1]
+            && c < self.dims[2] && d < self.dims[3]);
+        ((a * self.dims[1] + b) * self.dims[2] + c) * self.dims[3] + d
+    }
+
+    #[inline]
+    pub fn at(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.idx(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, a: usize, b: usize, c: usize, d: usize) -> &mut f32 {
+        let i = self.idx(a, b, c, d);
+        &mut self.data[i]
+    }
+
+    /// Max |a-b| over all elements (shape must match).
+    pub fn max_abs_diff(&self, other: &Tensor4) -> f32 {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖/‖b‖ (0 when both are zero).
+    pub fn rel_l2(&self, other: &Tensor4) -> f32 {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum();
+        let den: f32 = other.data.iter().map(|b| b * b).sum();
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            (num / den).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_len() {
+        let t = Tensor4::zeros([2, 3, 4, 5]);
+        assert_eq!(t.len(), 120);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let mut t = Tensor4::zeros([2, 2, 2, 2]);
+        *t.at_mut(1, 1, 1, 1) = 5.0;
+        assert_eq!(t.data[15], 5.0);
+        *t.at_mut(0, 0, 0, 1) = 3.0;
+        assert_eq!(t.data[1], 3.0);
+        assert_eq!(t.at(1, 1, 1, 1), 5.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor4::randn([1, 2, 3, 4], 99);
+        let b = Tensor4::randn([1, 2, 3, 4], 99);
+        assert_eq!(a, b);
+        let c = Tensor4::randn([1, 2, 3, 4], 100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor4::zeros([1, 1, 1, 3]);
+        let mut b = Tensor4::zeros([1, 1, 1, 3]);
+        b.data = vec![0.0, 3.0, 4.0];
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+        assert!((a.rel_l2(&b) - 1.0).abs() < 1e-6);
+        assert_eq!(b.rel_l2(&b), 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Training-time convolutions: the backward passes as 7NL CNN instances.
+//!
+//! The paper analyzes the forward 7NL loop nest; a training step runs two
+//! more computations of exactly the same algebraic shape (three arrays, one
+//! contraction per tap), so Theorems 2.1–2.3 and every tiling in this crate
+//! apply to them with the roles permuted:
+//!
+//! * **dFilter** — `dF(ci,co,i6,i7) += In(..)·dOut(..)`: the "output" array
+//!   is the filter, the contraction runs over (N, wO, hO).
+//! * **dInput** — `dIn(..) += dOut(..)·F(..)`: the "output" array is the
+//!   input image, the contraction runs over (cO, i6, i7).
+//!
+//! [`backward_shapes`] produces the permuted [`ConvShape`]s, and the naive
+//! oracles here validate the AOT gradient artifacts end to end.
+
+use super::shapes::{ConvShape, Precision};
+use super::tensor::Tensor4;
+
+/// The three communication problems of one training step. `G` is identical
+/// for all three (every MAC has a mirror in each pass).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainingShapes {
+    pub forward: ConvShape,
+    /// dFilter as a 7NL instance: loop roles (N↔cI-contraction) permuted.
+    /// Stored as the same ConvShape — sizes/G are what the bounds consume.
+    pub dfilter: ConvShape,
+    /// dInput as a 7NL instance.
+    pub dinput: ConvShape,
+}
+
+/// Permute a forward shape into the two backward-problem shapes.
+///
+/// The 7NL bounds only see array sizes |I|, |F|, |O| and G; for dFilter the
+/// "(input, filter, output)" triple is (In, dOut, dF) and for dInput it is
+/// (dOut, F, dIn). We encode each as a ConvShape whose derived sizes match
+/// that triple so `sequential_bound`/`parallel_bound` can be reused as-is.
+pub fn backward_shapes(f: ConvShape) -> TrainingShapes {
+    // dFilter: output array has |dF| = cI·cO·wF·hF elements; the batch axis
+    // is the reduction. Swap N <-> cI? The clean encoding keeps the loop
+    // ranges (identical G) but relabels which arrays the bounds weight:
+    // treat (n) as the contracted channel. ConvShape cannot express the
+    // permutation literally, so we produce the shape whose |I|,|F|,|O|
+    // equal the dFilter problem's operand sizes:
+    //   "input"  = In   (same as forward)
+    //   "filter" = dOut (size N·cO·wO·hO)
+    //   "output" = dF   (size cI·cO·wF·hF)
+    // This is the transpose-convolution shape with (wF,hF) as the "output
+    // image" and (wO,hO) as the "filter":
+    let dfilter = ConvShape {
+        n: f.c_i,       // i1 <- cI (indexes In and dF)
+        c_i: f.n,       // i2 <- N (contracted, indexes In and dOut)
+        c_o: f.c_o,     // i3 <- cO (indexes dOut and dF)
+        w_o: f.w_f,     // output image = filter extent
+        h_o: f.h_f,
+        w_f: f.w_o,     // "filter" = output extent
+        h_f: f.h_o,
+        s_w: f.s_w,
+        s_h: f.s_h,
+    };
+    // dInput: "input" = dOut, "filter" = F, "output" = dIn. Same loop
+    // ranges as forward; operand roles swap In <-> Out, which the bounds
+    // see through the precision/role assignment rather than the shape, so
+    // the forward shape itself carries the right sizes when precisions are
+    // permuted accordingly.
+    TrainingShapes { forward: f, dfilter, dinput: f }
+}
+
+/// Precision triple for the dInput problem given forward precisions:
+/// roles (I,F,O) = (dOut, F, dIn) → (p_O, p_F, p_I).
+pub fn dinput_precision(p: Precision) -> Precision {
+    Precision::new(p.p_o, p.p_f, p.p_i)
+}
+
+/// Naive filter gradient: `dF(ci,co,i6,i7) += x(n,ci,σw·w+i6,σh·h+i7)·g(n,co,w,h)`.
+pub fn dfilter_naive(x: &Tensor4, g: &Tensor4, s: &ConvShape) -> Tensor4 {
+    let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    assert_eq!(g.dims, [n, c_o, w_o, h_o]);
+    let mut out = Tensor4::zeros([c_i, c_o, w_f, h_f]);
+    for i1 in 0..n {
+        for i2 in 0..c_i {
+            for i3 in 0..c_o {
+                for i6 in 0..w_f {
+                    for i7 in 0..h_f {
+                        let mut acc = 0.0;
+                        for i4 in 0..w_o {
+                            for i5 in 0..h_o {
+                                acc += x.at(i1, i2, sw * i4 + i6, sh * i5 + i7)
+                                    * g.at(i1, i3, i4, i5);
+                            }
+                        }
+                        *out.at_mut(i2, i3, i6, i7) += acc;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Naive input gradient: `dIn(n,ci,σw·w+i6,σh·h+i7) += g(n,co,w,h)·F(ci,co,i6,i7)`.
+pub fn dinput_naive(g: &Tensor4, w: &Tensor4, s: &ConvShape,
+                    in_w: usize, in_h: usize) -> Tensor4 {
+    let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    assert_eq!(g.dims, [n, c_o, w_o, h_o]);
+    assert_eq!(w.dims, [c_i, c_o, w_f, h_f]);
+    let mut out = Tensor4::zeros([n, c_i, in_w, in_h]);
+    for i1 in 0..n {
+        for i2 in 0..c_i {
+            for i3 in 0..c_o {
+                for i6 in 0..w_f {
+                    for i7 in 0..h_f {
+                        let f = w.at(i2, i3, i6, i7);
+                        if f == 0.0 {
+                            continue;
+                        }
+                        for i4 in 0..w_o {
+                            for i5 in 0..h_o {
+                                *out.at_mut(i1, i2, sw * i4 + i6, sh * i5 + i7) +=
+                                    g.at(i1, i3, i4, i5) * f;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::sequential_bound;
+    use crate::conv::conv7nl_naive;
+
+    fn shape() -> ConvShape {
+        ConvShape::new(2, 3, 4, 5, 5, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn backward_shapes_preserve_g() {
+        let t = backward_shapes(shape());
+        assert_eq!(t.forward.updates(), t.dfilter.updates());
+        assert_eq!(t.forward.updates(), t.dinput.updates());
+    }
+
+    #[test]
+    fn dfilter_shape_sizes_are_the_permuted_operands() {
+        let f = shape();
+        let t = backward_shapes(f);
+        // |O| of the dfilter problem = |F| of the forward problem
+        assert_eq!(t.dfilter.output_size(), f.filter_size());
+        // "filter" operand of dfilter = dOut
+        assert_eq!(t.dfilter.filter_size(), f.output_size());
+    }
+
+    #[test]
+    fn bounds_apply_to_backward_problems() {
+        let t = backward_shapes(shape().with_batch(64));
+        let p = Precision::uniform();
+        for s in [t.forward, t.dfilter, t.dinput] {
+            assert!(sequential_bound(&s, p, 4096.0) > 0.0);
+        }
+    }
+
+    /// <conv(x,w), g> gradients: dfilter/dinput oracles vs a finite
+    /// difference of the forward naive conv.
+    #[test]
+    fn naive_grads_match_finite_difference() {
+        let s = ConvShape::new(1, 2, 2, 3, 3, 2, 2, 1, 1);
+        let x = Tensor4::randn([1, 2, 5, 5], 1);
+        let w = Tensor4::randn([2, 2, 2, 2], 2);
+        let g = Tensor4::randn([1, 2, 3, 3], 3);
+
+        let loss = |x: &Tensor4, w: &Tensor4| -> f32 {
+            let out = conv7nl_naive(x, w, &s);
+            out.data.iter().zip(&g.data).map(|(a, b)| a * b).sum()
+        };
+
+        let dw = dfilter_naive(&x, &g, &s);
+        let dx = dinput_naive(&g, &w, &s, 5, 5);
+
+        let eps = 1e-2_f32;
+        // spot-check a few coordinates of each gradient
+        for idx in [0usize, 3, 7] {
+            let mut wp = w.clone();
+            wp.data[idx] += eps;
+            let num = (loss(&x, &wp) - loss(&x, &w)) / eps;
+            assert!((num - dw.data[idx]).abs() < 0.05 * dw.data[idx].abs().max(1.0),
+                    "dW[{idx}]: fd {num} vs {}", dw.data[idx]);
+
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let num = (loss(&xp, &w) - loss(&x, &w)) / eps;
+            assert!((num - dx.data[idx]).abs() < 0.05 * dx.data[idx].abs().max(1.0),
+                    "dX[{idx}]: fd {num} vs {}", dx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn dinput_precision_swaps_roles() {
+        let p = Precision::new(0.25, 0.5, 1.0);
+        let q = dinput_precision(p);
+        assert_eq!((q.p_i, q.p_f, q.p_o), (1.0, 0.5, 0.25));
+    }
+}

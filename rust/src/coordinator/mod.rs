@@ -1,0 +1,15 @@
+//! L3 coordination: the serving/batching layer and the tiling planner.
+//!
+//! The paper's contribution is analysis + tiling, so the coordinator is the
+//! thin-but-real driver the stack needs: a [`server::ConvServer`] that owns
+//! the PJRT runtime on a dedicated executor thread, batches single-image
+//! requests up to the artifact's compiled batch size, executes, and streams
+//! responses back — Python never on this path — plus a [`plan::Planner`]
+//! that assigns every layer its communication-optimal blocking (LP tiling,
+//! GEMMINI tile, bound diagnostics) ahead of execution.
+
+pub mod plan;
+pub mod server;
+
+pub use plan::{plan_layer, LayerPlan, Planner};
+pub use server::{ConvServer, ServerStats};

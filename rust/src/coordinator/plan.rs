@@ -1,0 +1,136 @@
+//! Per-layer execution planning: before anything runs, every layer gets a
+//! communication-optimal plan — the §3.2 LP blocking for the cache/VMEM
+//! level, the §5 GEMMINI tile for the accelerator level, and the Theorem
+//! 2.1 bound diagnostics that justify them.
+
+use crate::bounds::{sequential_bound_terms, SeqBoundTerms};
+use crate::conv::{ConvShape, Precision};
+use crate::gemmini::GemminiConfig;
+use crate::tiling::{
+    optimize_gemmini_tiling, sequential_blocking, vendor_tiling, GemminiTile,
+    OptOptions, SeqBlocking,
+};
+use crate::util::threadpool::ThreadPool;
+
+/// Everything the coordinator decides about one layer ahead of time.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub name: String,
+    pub shape: ConvShape,
+    pub precision: Precision,
+    /// cache/VMEM blocking (drives the Pallas BlockSpec choice at L1)
+    pub blocking: SeqBlocking,
+    /// accelerator tile (ours)
+    pub gemmini: GemminiTile,
+    /// accelerator tile (vendor baseline, for comparison reporting)
+    pub gemmini_vendor: GemminiTile,
+    /// Theorem 2.1 terms at the planning memory size
+    pub bound: SeqBoundTerms,
+    /// planning memory size in words
+    pub mem_words: f64,
+}
+
+impl LayerPlan {
+    /// Estimated communication of the planned blocking relative to the
+    /// lower bound (≥ 1 up to model slack).
+    pub fn blocking_ratio(&self) -> f64 {
+        let tiles = self.shape.updates() as f64 / self.blocking.updates_per_tile();
+        let vol = tiles * self.blocking.footprint_words(self.precision)
+            + self.precision.p_o * self.shape.output_size() as f64;
+        vol / self.bound.max().max(1.0)
+    }
+}
+
+/// Plan one layer.
+pub fn plan_layer(
+    name: &str,
+    shape: ConvShape,
+    p: Precision,
+    mem_words: f64,
+    g: &GemminiConfig,
+    opts: OptOptions,
+) -> LayerPlan {
+    LayerPlan {
+        name: name.to_string(),
+        shape,
+        precision: p,
+        blocking: sequential_blocking(&shape, p, mem_words),
+        gemmini: optimize_gemmini_tiling(&shape, g, opts),
+        gemmini_vendor: vendor_tiling(&shape, g),
+        bound: sequential_bound_terms(&shape, p, mem_words),
+        mem_words,
+    }
+}
+
+/// Plans a whole network, fanning layer planning out over a thread pool
+/// (the GEMMINI search dominates; layers are independent).
+pub struct Planner {
+    pub precision: Precision,
+    pub mem_words: f64,
+    pub gemmini: GemminiConfig,
+    pub opts: OptOptions,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner {
+            precision: Precision::uniform(),
+            mem_words: 65536.0,
+            gemmini: GemminiConfig::default(),
+            opts: OptOptions::default(),
+        }
+    }
+}
+
+impl Planner {
+    pub fn plan_network(&self, layers: &[(String, ConvShape)]) -> Vec<LayerPlan> {
+        let pool = ThreadPool::new(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+        );
+        let p = self.precision;
+        let m = self.mem_words;
+        let g = self.gemmini;
+        let o = self.opts;
+        pool.map(layers.to_vec(), move |(name, shape)| {
+            plan_layer(&name, shape, p, m, &g, o)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    #[test]
+    fn plan_layer_is_consistent() {
+        let l = resnet50_layers(64)[1];
+        let plan = plan_layer(
+            l.name, l.shape, Precision::uniform(), 65536.0,
+            &GemminiConfig::default(), OptOptions::default(),
+        );
+        assert!(plan.blocking.fits(plan.precision, plan.mem_words));
+        assert!(plan.gemmini.fits(&plan.shape, &GemminiConfig::default()));
+        assert!(plan.blocking_ratio() >= 0.5, "{}", plan.blocking_ratio());
+    }
+
+    #[test]
+    fn plan_network_parallel_matches_serial() {
+        let layers: Vec<(String, ConvShape)> = resnet50_layers(32)
+            .into_iter()
+            .map(|l| (l.name.to_string(), l.shape))
+            .collect();
+        let planner = Planner::default();
+        let plans = planner.plan_network(&layers);
+        assert_eq!(plans.len(), layers.len());
+        for (plan, (name, shape)) in plans.iter().zip(&layers) {
+            assert_eq!(&plan.name, name);
+            let serial = plan_layer(
+                name, *shape, planner.precision, planner.mem_words,
+                &planner.gemmini, planner.opts,
+            );
+            assert_eq!(plan.gemmini, serial.gemmini);
+            assert_eq!(plan.blocking, serial.blocking);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Batched convolution serving over the PJRT runtime.
+//!
+//! Architecture (single executor thread — PJRT handles are not `Send`-safe
+//! to share, so the runtime lives on its own thread and requests flow
+//! through channels):
+//!
+//! ```text
+//! clients ── submit(image) ──► queue ──► batcher (size N, timeout) ──► PJRT
+//!     ◄── per-request channel ◄── splitter ◄── output batch ◄──────────┘
+//! ```
+//!
+//! Short batches (queue drained before N images arrived) are zero-padded;
+//! padded slots are tracked in [`ServerStats`] since they waste MACs — the
+//! batcher exists precisely to amortize the artifact's fixed batch size.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::conv::Tensor4;
+use crate::runtime::Runtime;
+
+/// A finished request.
+#[derive(Debug)]
+pub struct ConvResponse {
+    pub id: u64,
+    /// (1, cO, wO, hO) slice of the batch output
+    pub output: Tensor4,
+    /// submit → response time
+    pub latency: Duration,
+}
+
+struct Job {
+    id: u64,
+    image: Tensor4,
+    enqueued: Instant,
+    reply: mpsc::Sender<ConvResponse>,
+}
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub total_exec_secs: f64,
+}
+
+/// Handle to the executor thread.
+pub struct ConvServer {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<thread::JoinHandle<Result<ServerStats>>>,
+    next_id: std::sync::atomic::AtomicU64,
+    batch: usize,
+    in_dims: [usize; 4],
+}
+
+impl ConvServer {
+    /// Start a server for one single-layer artifact `key`, with fixed
+    /// filter weights. `linger` bounds how long the batcher waits to fill
+    /// a batch once it holds at least one request.
+    pub fn start(
+        artifact_dir: impl AsRef<std::path::Path>,
+        key: &str,
+        weights: Tensor4,
+        linger: Duration,
+    ) -> Result<ConvServer> {
+        // Validate shapes from the manifest up front (plain JSON, Send-safe);
+        // the PJRT runtime itself is created *inside* the executor thread —
+        // its handles are not Send.
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = crate::runtime::Manifest::load(dir.join("manifest.json"))?;
+        let spec = manifest
+            .find(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not found"))?
+            .clone();
+        if spec.inputs.len() != 2 {
+            return Err(anyhow!("'{key}' is not a single-layer artifact"));
+        }
+        let in_dims = {
+            let d = &spec.inputs[0];
+            [d[0], d[1], d[2], d[3]]
+        };
+        let w_dims = &spec.inputs[1];
+        if weights.dims.to_vec() != *w_dims {
+            return Err(anyhow!(
+                "weights shape {:?} != artifact filter {:?}",
+                weights.dims, w_dims
+            ));
+        }
+        let key = key.to_string();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let batch = in_dims[0];
+        let out_dims = [spec.output[0], spec.output[1], spec.output[2], spec.output[3]];
+
+        let handle = thread::Builder::new()
+            .name("convbound-executor".into())
+            .spawn(move || -> Result<ServerStats> {
+                let rt = (|| -> Result<Runtime> {
+                    let mut rt = Runtime::new(&dir)?;
+                    rt.load(&key)?;
+                    Ok(rt)
+                })();
+                let rt = match rt {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+                let mut stats = ServerStats::default();
+                let mut queue: Vec<Job> = Vec::with_capacity(batch);
+                loop {
+                    // block for the first job, then linger for the rest
+                    let first = match rx.recv() {
+                        Ok(Msg::Run(j)) => j,
+                        Ok(Msg::Stop) | Err(_) => break,
+                    };
+                    queue.push(first);
+                    let deadline = Instant::now() + linger;
+                    while queue.len() < batch {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(left) {
+                            Ok(Msg::Run(j)) => queue.push(j),
+                            Ok(Msg::Stop) => break,
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    // assemble the batch (zero-padding the tail)
+                    let mut x = Tensor4::zeros(in_dims);
+                    let img_len = in_dims[1] * in_dims[2] * in_dims[3];
+                    for (slot, job) in queue.iter().enumerate() {
+                        x.data[slot * img_len..(slot + 1) * img_len]
+                            .copy_from_slice(&job.image.data);
+                    }
+                    let t0 = Instant::now();
+                    let out = rt.run(&key, &[&x, &weights])?;
+                    stats.total_exec_secs += t0.elapsed().as_secs_f64();
+                    stats.batches += 1;
+                    stats.requests += queue.len() as u64;
+                    stats.padded_slots += (batch - queue.len()) as u64;
+                    // split and reply
+                    let out_len = out_dims[1] * out_dims[2] * out_dims[3];
+                    for (slot, job) in queue.drain(..).enumerate() {
+                        let mut o =
+                            Tensor4::zeros([1, out_dims[1], out_dims[2], out_dims[3]]);
+                        o.data.copy_from_slice(
+                            &out.data[slot * out_len..(slot + 1) * out_len],
+                        );
+                        let _ = job.reply.send(ConvResponse {
+                            id: job.id,
+                            output: o,
+                            latency: job.enqueued.elapsed(),
+                        });
+                    }
+                }
+                Ok(stats)
+            })
+            .expect("spawn executor");
+
+        // surface compile/load failures synchronously
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor died during startup"))??;
+
+        Ok(ConvServer {
+            tx,
+            handle: Some(handle),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            batch,
+            in_dims,
+        })
+    }
+
+    /// The artifact's compiled batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Submit one image (shape (1, cI, WI, HI)); returns the response
+    /// channel immediately.
+    pub fn submit(&self, image: Tensor4) -> Result<mpsc::Receiver<ConvResponse>> {
+        let want = [1, self.in_dims[1], self.in_dims[2], self.in_dims[3]];
+        if image.dims != want {
+            return Err(anyhow!("image shape {:?} != {:?}", image.dims, want));
+        }
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run(Job { id, image, enqueued: Instant::now(), reply }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Stop the executor and collect final statistics.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        let _ = self.tx.send(Msg::Stop);
+        let handle = self.handle.take().expect("not yet joined");
+        handle.join().map_err(|_| anyhow!("executor panicked"))?
+    }
+}
+
+impl Drop for ConvServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end server tests live in rust/tests/coordinator_e2e.rs (they
+    // need compiled artifacts).
+}

@@ -1,0 +1,106 @@
+//! GEMMINI accelerator geometry (paper §5, default chip configuration).
+//!
+//! * 16×16 weight-stationary systolic array (`DIM = 16`).
+//! * 256 KiB scratchpad holding 8-bit words → 16384 rows of 16 bytes;
+//!   double-buffered, so **8192 rows (128K words)** are usable per tile.
+//! * 64 KiB accumulator holding 32-bit words → 1024 rows of 16 entries;
+//!   double-buffered, so **512 rows (8K words)** are usable per tile.
+//!
+//! Rows are the allocation granularity of the chip's memory controller —
+//! the paper's "estimated communication" metric counts rows; a tile whose
+//! channel count is below 16 wastes the remainder of each row (the
+//! root cause of the vendor tiling's poor conv1–conv3 utilization).
+
+/// Chip configuration; `Default` is the paper's setup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemminiConfig {
+    /// systolic array dimension (PEs per side)
+    pub dim: usize,
+    /// total scratchpad size in bytes (8-bit input/filter words)
+    pub scratchpad_bytes: usize,
+    /// total accumulator size in bytes (32-bit output words)
+    pub accumulator_bytes: usize,
+    /// halves buffers for tiling when true (double-buffered DMA overlap)
+    pub double_buffered: bool,
+    /// DMA main-memory bandwidth, bytes per cycle (FireSim's shared DDR3
+    /// model sustains far less than the on-chip 16 B/cycle port width)
+    pub dma_bytes_per_cycle: f64,
+    /// fixed per-tile overhead (config / fence instructions), cycles
+    pub tile_overhead_cycles: u64,
+    /// pipeline fill/drain per weight-block swap, cycles
+    pub block_swap_cycles: u64,
+    /// DRAM burst-setup cost per non-contiguous segment, cycles — the
+    /// "memory coalescing" factor of §5 that the communication-driven
+    /// optimizer deliberately does not model
+    pub burst_overhead_cycles: u64,
+}
+
+impl Default for GemminiConfig {
+    fn default() -> Self {
+        GemminiConfig {
+            dim: 16,
+            scratchpad_bytes: 256 * 1024,
+            accumulator_bytes: 64 * 1024,
+            double_buffered: true,
+            dma_bytes_per_cycle: 2.0,
+            tile_overhead_cycles: 400,
+            block_swap_cycles: 16,
+            burst_overhead_cycles: 32,
+        }
+    }
+}
+
+impl GemminiConfig {
+    /// Scratchpad rows usable for one tile (halved when double-buffered).
+    pub fn spad_rows(&self) -> usize {
+        let rows = self.scratchpad_bytes / self.dim;
+        if self.double_buffered {
+            rows / 2
+        } else {
+            rows
+        }
+    }
+
+    /// Accumulator rows usable for one tile.
+    pub fn acc_rows(&self) -> usize {
+        let rows = self.accumulator_bytes / (self.dim * 4);
+        if self.double_buffered {
+            rows / 2
+        } else {
+            rows
+        }
+    }
+
+    /// Scratchpad capacity in 8-bit words usable per tile.
+    pub fn spad_words(&self) -> usize {
+        self.spad_rows() * self.dim
+    }
+
+    /// Accumulator capacity in 32-bit words usable per tile.
+    pub fn acc_words(&self) -> usize {
+        self.acc_rows() * self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_capacities() {
+        let c = GemminiConfig::default();
+        // "the scratchpad can hold 128K words, while the accumulator can
+        // hold 8K words" (§5, after double-buffer halving)
+        assert_eq!(c.spad_words(), 128 * 1024);
+        assert_eq!(c.acc_words(), 8 * 1024);
+        assert_eq!(c.spad_rows(), 8192);
+        assert_eq!(c.acc_rows(), 512);
+    }
+
+    #[test]
+    fn single_buffered_doubles_capacity() {
+        let c = GemminiConfig { double_buffered: false, ..Default::default() };
+        assert_eq!(c.spad_words(), 256 * 1024);
+        assert_eq!(c.acc_words(), 16 * 1024);
+    }
+}

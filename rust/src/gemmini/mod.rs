@@ -1,0 +1,13 @@
+//! GEMMINI accelerator substrate (paper §5).
+//!
+//! The paper benchmarks its tilings on GEMMINI RTL under FireSim; this
+//! module is the simulation substitute (DESIGN.md §2): the same buffer
+//! geometry, row-granular memory controller, double-buffered DMA overlap
+//! and weight-stationary 16×16 systolic-array timing, driven by the exact
+//! tile loop nest.
+
+pub mod config;
+pub mod sim;
+
+pub use config::GemminiConfig;
+pub use sim::{simulate_layer, SimResult};

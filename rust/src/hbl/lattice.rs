@@ -1,0 +1,119 @@
+//! Subgroup/subspace lattice generation (paper §2.3).
+//!
+//! `Lattice(ker φⱼ)` is the smallest family of subspaces containing the
+//! kernels and closed under sum and intersection. Proposition 2.5 says HBL
+//! constraints need only be checked on this lattice; we compute it by
+//! fixpoint closure with canonical-form deduplication.
+
+use std::collections::HashSet;
+
+use super::subspace::Subspace;
+
+/// Closure of `seeds` under pairwise sum and intersection (zero subspace
+/// excluded from the result — it contributes the trivial constraint 0 ≤ 0).
+///
+/// Worklist algorithm: each round combines only *new* elements against the
+/// full set, with hash-based dedup on the canonical RREF basis — the naive
+/// all-pairs-every-round variant re-derived the same subspaces thousands of
+/// times (573 ms → ~15 ms on the 7NL lattice; EXPERIMENTS.md §Perf).
+pub fn lattice_closure(seeds: &[Subspace]) -> Vec<Subspace> {
+    let mut items: Vec<Subspace> = Vec::new();
+    let mut seen: HashSet<Subspace> = HashSet::new();
+    let mut frontier: Vec<Subspace> = Vec::new();
+    for s in seeds {
+        if !s.is_zero() && seen.insert(s.clone()) {
+            items.push(s.clone());
+            frontier.push(s.clone());
+        }
+    }
+    while !frontier.is_empty() {
+        let mut next: Vec<Subspace> = Vec::new();
+        for f in &frontier {
+            // combine the frontier against everything discovered so far
+            // (items includes the frontier itself)
+            for it in &items {
+                let (s, i) = f.sum_and_intersect(it);
+                for cand in [s, i] {
+                    if !cand.is_zero() && !seen.contains(&cand) {
+                        seen.insert(cand.clone());
+                        next.push(cand);
+                    }
+                }
+            }
+        }
+        items.extend(next.iter().cloned());
+        frontier = next;
+    }
+    items
+}
+
+/// Check that a family is lattice-closed (for tests / invariants).
+pub fn is_closed(items: &[Subspace]) -> bool {
+    for i in 0..items.len() {
+        for j in (i + 1)..items.len() {
+            let s = items[i].sum(&items[j]);
+            if !s.is_zero() && !items.contains(&s) {
+                return false;
+            }
+            let t = items[i].intersect(&items[j]);
+            if !t.is_zero() && !items.contains(&t) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn axis(d: usize, i: usize) -> Subspace {
+        let mut v = vec![0i128; d];
+        v[i] = 1;
+        Subspace::span_int(d, &[v])
+    }
+
+    #[test]
+    fn closure_of_two_axes() {
+        // {x-axis, y-axis} closes to {x, y, x+y-plane}
+        let lat = lattice_closure(&[axis(3, 0), axis(3, 1)]);
+        assert_eq!(lat.len(), 3);
+        assert!(is_closed(&lat));
+        assert!(lat.iter().any(|s| s.rank() == 2));
+    }
+
+    #[test]
+    fn closure_is_idempotent() {
+        let lat = lattice_closure(&[axis(4, 0), axis(4, 1), axis(4, 2)]);
+        let again = lattice_closure(&lat);
+        assert_eq!(lat.len(), again.len());
+        assert!(is_closed(&lat));
+    }
+
+    #[test]
+    fn duplicate_seeds_deduped() {
+        let lat = lattice_closure(&[axis(2, 0), axis(2, 0)]);
+        assert_eq!(lat.len(), 1);
+    }
+
+    #[test]
+    fn overlapping_planes_close_with_intersection() {
+        let u = Subspace::span_int(3, &[vec![1, 0, 0], vec![0, 1, 0]]);
+        let w = Subspace::span_int(3, &[vec![0, 1, 0], vec![0, 0, 1]]);
+        let lat = lattice_closure(&[u, w]);
+        // u, w, u+w (=Q^3), u∩w (= y-axis)
+        assert_eq!(lat.len(), 4);
+        assert!(lat.iter().any(|s| s.rank() == 1));
+        assert!(lat.iter().any(|s| s.rank() == 3));
+        assert!(is_closed(&lat));
+    }
+
+    #[test]
+    fn zero_subspace_never_in_lattice() {
+        let u = axis(3, 0);
+        let w = axis(3, 1);
+        let lat = lattice_closure(&[u, w]);
+        assert!(lat.iter().all(|s| !s.is_zero()));
+    }
+}

@@ -1,0 +1,208 @@
+//! Exact rational dense linear algebra for the HBL machinery.
+//!
+//! Everything is tiny (d ≤ 9), so dense RREF over [`Rat`] is the right
+//! tool: ranks and nullspaces are exact, which Proposition 2.5 requires
+//! (the subgroup-lattice reduction works with Q-linear spans).
+
+use crate::lp::Rat;
+
+/// Dense rational matrix, row-major.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub a: Vec<Rat>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, a: vec![Rat::ZERO; rows * cols] }
+    }
+
+    /// Build from integer rows.
+    pub fn from_int_rows(rows: &[Vec<i128>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m[(i, j)] = Rat::int(v);
+            }
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = Rat::ONE;
+        }
+        m
+    }
+
+    pub fn row(&self, i: usize) -> &[Rat] {
+        &self.a[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let v = self[(i, k)];
+                if v.is_zero() {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] = out[(i, j)] + v * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// In-place reduced row echelon form; returns pivot column indices.
+    pub fn rref(&mut self) -> Vec<usize> {
+        let mut pivots = Vec::new();
+        let mut r = 0;
+        for c in 0..self.cols {
+            if r == self.rows {
+                break;
+            }
+            // find a pivot row
+            let Some(p) = (r..self.rows).find(|&i| !self[(i, c)].is_zero()) else {
+                continue;
+            };
+            self.swap_rows(r, p);
+            let inv = self[(r, c)].recip();
+            for j in c..self.cols {
+                self[(r, j)] = self[(r, j)] * inv;
+            }
+            for i in 0..self.rows {
+                if i != r && !self[(i, c)].is_zero() {
+                    let f = self[(i, c)];
+                    for j in c..self.cols {
+                        let sub = f * self[(r, j)];
+                        self[(i, j)] = self[(i, j)] - sub;
+                    }
+                }
+            }
+            pivots.push(c);
+            r += 1;
+        }
+        pivots
+    }
+
+    fn swap_rows(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        for c in 0..self.cols {
+            let t = self[(i, c)];
+            self[(i, c)] = self[(j, c)];
+            self[(j, c)] = t;
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        let mut m = self.clone();
+        m.rref().len()
+    }
+
+    /// Basis of the right nullspace `{x : A x = 0}`, as rows of the result.
+    pub fn nullspace(&self) -> Mat {
+        let mut m = self.clone();
+        let pivots = m.rref();
+        let free: Vec<usize> =
+            (0..self.cols).filter(|c| !pivots.contains(c)).collect();
+        let mut basis = Mat::zeros(free.len(), self.cols);
+        for (bi, &fc) in free.iter().enumerate() {
+            basis[(bi, fc)] = Rat::ONE;
+            for (pr, &pc) in pivots.iter().enumerate() {
+                basis[(bi, pc)] = -m[(pr, fc)];
+            }
+        }
+        basis
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = Rat;
+    fn index(&self, (i, j): (usize, usize)) -> &Rat {
+        &self.a[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut Rat {
+        &mut self.a[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_of_identity_and_singular() {
+        assert_eq!(Mat::identity(4).rank(), 4);
+        let m = Mat::from_int_rows(&[vec![1, 2], vec![2, 4]]);
+        assert_eq!(m.rank(), 1);
+        assert_eq!(Mat::zeros(3, 3).rank(), 0);
+    }
+
+    #[test]
+    fn rref_known() {
+        let mut m = Mat::from_int_rows(&[vec![1, 2, 3], vec![4, 5, 6]]);
+        let piv = m.rref();
+        assert_eq!(piv, vec![0, 1]);
+        // rref is [[1,0,-1],[0,1,2]]
+        assert_eq!(m[(0, 2)], Rat::int(-1));
+        assert_eq!(m[(1, 2)], Rat::int(2));
+    }
+
+    #[test]
+    fn nullspace_annihilates() {
+        let m = Mat::from_int_rows(&[vec![1, 2, 3, 0], vec![0, 1, 1, -1]]);
+        let ns = m.nullspace();
+        assert_eq!(ns.rows, 2);
+        // every basis row x satisfies A x = 0
+        let prod = m.matmul(&ns.transpose());
+        assert!(prod.a.iter().all(|v| v.is_zero()));
+        // rank-nullity
+        assert_eq!(m.rank() + ns.rank(), m.cols);
+    }
+
+    #[test]
+    fn nullspace_of_full_rank_is_empty() {
+        let ns = Mat::identity(3).nullspace();
+        assert_eq!(ns.rows, 0);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_int_rows(&[vec![1, 2], vec![3, 4]]);
+        let b = Mat::from_int_rows(&[vec![5, 6], vec![7, 8]]);
+        let c = a.matmul(&b);
+        assert_eq!(c[(0, 0)], Rat::int(19));
+        assert_eq!(c[(1, 1)], Rat::int(50));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_int_rows(&[vec![1, 2, 3], vec![4, 5, 6]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

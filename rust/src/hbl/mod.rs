@@ -1,0 +1,17 @@
+//! Discrete Hölder–Brascamp–Lieb machinery (paper §2.3).
+//!
+//! Pipeline: array-access homomorphisms → kernels → subgroup lattice
+//! (Prop. 2.5) → rank constraints → exact LP over the HBL exponents →
+//! the asymptotic communication exponent `X = Ω(G / M^{Σs−1})`.
+
+pub mod cnn;
+pub mod exponents;
+pub mod lattice;
+pub mod linalg;
+pub mod subspace;
+
+pub use cnn::{analyze_7nl, analyze_small_filter, homs_7nl, homs_small_filter};
+pub use exponents::{solve_exponents, HblConstraint, HblSolution};
+pub use lattice::lattice_closure;
+pub use linalg::Mat;
+pub use subspace::Subspace;

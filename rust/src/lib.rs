@@ -1,0 +1,47 @@
+//! # convbound
+//!
+//! A reproduction of *"Communication Bounds for Convolutional Neural
+//! Networks"* (Chen, Demmel, Dinh, Haberle, Holtz — PASC '22) as a
+//! production-style three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains:
+//!
+//! * [`hbl`] — the discrete Hölder–Brascamp–Lieb machinery of §2.3: integer
+//!   homomorphisms, subgroup lattices, rank computation and the LP over HBL
+//!   exponents that yields the paper's constraint table.
+//! * [`bounds`] — Theorems 2.1, 2.2 and 2.3: mixed-precision communication
+//!   lower bounds for the sequential and parallel memory models.
+//! * [`lp`] — an exact-rational two-phase simplex solver (substrate for
+//!   [`hbl`] and [`tiling`]).
+//! * [`tiling`] — the attainability side: the paper's LP blocking
+//!   (sequential, §3.2, with the small-filter trick), the parallel blocking
+//!   LP (§4.2), the GEMMINI integral tile optimizer (§5) and the vendor
+//!   baseline heuristic it is compared against.
+//! * [`commvol`] — symbolic communication-volume models for naive, im2col,
+//!   blocking, Winograd and FFT convolutions (Figures 2 and 3).
+//! * [`gemmini`] — a cycle-approximate simulator of the GEMMINI accelerator
+//!   (scratchpad / accumulator / double-buffered DMA / 16×16 systolic
+//!   array), the substrate for Figure 4.
+//! * [`runtime`] — the PJRT execution layer: loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered JAX+Pallas convolutions) and runs them on the CPU client.
+//! * [`coordinator`] — the L3 runner: plans tilings per layer and drives
+//!   batched network execution across a thread pool.
+//! * [`conv`] — problem shapes, the ResNet-50 / AlexNet layer catalogs and a
+//!   native naive convolution used to validate the runtime end to end.
+//! * [`util`], [`testkit`], [`bench`] — in-tree substrates (JSON, CLI, RNG,
+//!   thread pool, stats; property testing; timing harness) for the fully
+//!   offline build environment.
+
+pub mod bench;
+pub mod bounds;
+pub mod commvol;
+pub mod conv;
+pub mod coordinator;
+pub mod gemmini;
+pub mod hbl;
+pub mod lp;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod tiling;
+pub mod util;

@@ -1,0 +1,15 @@
+//! Linear programming substrate.
+//!
+//! An exact-rational ([`Rat`]) and floating ([`f64`]) two-phase simplex.
+//! Consumers:
+//!
+//! * [`crate::hbl`] — minimizes `Σ sⱼ` over the HBL constraint polytope
+//!   (needs exact arithmetic: the optimum is `(2/3, 2/3, 2/3)` and a tight
+//!   certificate matters),
+//! * [`crate::tiling`] — the log-space blocking LPs of §3.2 and §4.2 (f64).
+
+pub mod rational;
+pub mod simplex;
+
+pub use rational::Rat;
+pub use simplex::{solve, Constraint, LpResult, Objective, Rel, Scalar};

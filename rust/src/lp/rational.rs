@@ -1,0 +1,238 @@
+//! Exact rational arithmetic over i128.
+//!
+//! The HBL exponent LP (paper §2.3) and the subgroup rank computations must
+//! be exact: the optimal exponents are rationals like 2/3 and a floating
+//! point simplex could mis-certify a tight constraint. Problem sizes are
+//! tiny (d ≤ 9, a handful of constraints) so i128 never overflows in
+//! practice; all operations are checked and panic loudly if it ever would.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// A reduced fraction num/den with den > 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rat {
+    num: i128,
+    den: i128,
+}
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Rat {
+    pub const ZERO: Rat = Rat { num: 0, den: 1 };
+    pub const ONE: Rat = Rat { num: 1, den: 1 };
+
+    pub fn new(num: i128, den: i128) -> Rat {
+        assert!(den != 0, "zero denominator");
+        let g = gcd(num, den).max(1);
+        let sign = if den < 0 { -1 } else { 1 };
+        Rat { num: sign * num / g, den: sign * den / g }
+    }
+
+    pub fn int(n: i128) -> Rat {
+        Rat { num: n, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_neg(&self) -> bool {
+        self.num < 0
+    }
+
+    pub fn is_pos(&self) -> bool {
+        self.num > 0
+    }
+
+    pub fn abs(&self) -> Rat {
+        Rat { num: self.num.abs(), den: self.den }
+    }
+
+    pub fn recip(&self) -> Rat {
+        assert!(self.num != 0, "reciprocal of zero");
+        Rat::new(self.den, self.num)
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    fn checked(num: Option<i128>, den: Option<i128>) -> Rat {
+        match (num, den) {
+            (Some(n), Some(d)) => Rat::new(n, d),
+            _ => panic!("rational overflow (i128)"),
+        }
+    }
+}
+
+impl Add for Rat {
+    type Output = Rat;
+    fn add(self, o: Rat) -> Rat {
+        // integer fast path (the overwhelmingly common case in RREF over
+        // small-integer bases — see EXPERIMENTS.md §Perf)
+        if self.den == 1 && o.den == 1 {
+            return Rat {
+                num: self.num.checked_add(o.num).expect("rational overflow"),
+                den: 1,
+            };
+        }
+        // cross-reduce first to keep magnitudes small
+        let g = gcd(self.den, o.den).max(1);
+        let (da, db) = (self.den / g, o.den / g);
+        Rat::checked(
+            self.num
+                .checked_mul(db)
+                .and_then(|x| o.num.checked_mul(da).and_then(|y| x.checked_add(y))),
+            self.den.checked_mul(db),
+        )
+    }
+}
+
+impl AddAssign for Rat {
+    fn add_assign(&mut self, o: Rat) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Rat {
+    type Output = Rat;
+    fn sub(self, o: Rat) -> Rat {
+        self + (-o)
+    }
+}
+
+impl Neg for Rat {
+    type Output = Rat;
+    fn neg(self) -> Rat {
+        Rat { num: -self.num, den: self.den }
+    }
+}
+
+impl Mul for Rat {
+    type Output = Rat;
+    fn mul(self, o: Rat) -> Rat {
+        // integer and zero fast paths
+        if self.num == 0 || o.num == 0 {
+            return Rat::ZERO;
+        }
+        if self.den == 1 && o.den == 1 {
+            return Rat {
+                num: self.num.checked_mul(o.num).expect("rational overflow"),
+                den: 1,
+            };
+        }
+        // cross-cancel
+        let g1 = gcd(self.num, o.den).max(1);
+        let g2 = gcd(o.num, self.den).max(1);
+        Rat::checked(
+            (self.num / g1).checked_mul(o.num / g2),
+            (self.den / g2).checked_mul(o.den / g1),
+        )
+    }
+}
+
+impl Div for Rat {
+    type Output = Rat;
+    fn div(self, o: Rat) -> Rat {
+        self * o.recip()
+    }
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, o: &Rat) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, o: &Rat) -> Ordering {
+        // dens positive, so compare num*oden vs onum*den
+        let l = self.num.checked_mul(o.den).expect("rational overflow");
+        let r = o.num.checked_mul(self.den).expect("rational overflow");
+        l.cmp(&r)
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_and_sign() {
+        assert_eq!(Rat::new(2, 4), Rat::new(1, 2));
+        assert_eq!(Rat::new(1, -2), Rat::new(-1, 2));
+        assert_eq!(Rat::new(-3, -6), Rat::new(1, 2));
+        assert_eq!(Rat::new(0, 5), Rat::ZERO);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Rat::new(1, 2);
+        let b = Rat::new(1, 3);
+        assert_eq!(a + b, Rat::new(5, 6));
+        assert_eq!(a - b, Rat::new(1, 6));
+        assert_eq!(a * b, Rat::new(1, 6));
+        assert_eq!(a / b, Rat::new(3, 2));
+        assert_eq!(-a, Rat::new(-1, 2));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Rat::new(1, 3) < Rat::new(1, 2));
+        assert!(Rat::new(-1, 2) < Rat::ZERO);
+        assert!(Rat::new(7, 7) == Rat::ONE);
+    }
+
+    #[test]
+    fn recip_and_zero() {
+        assert_eq!(Rat::new(2, 3).recip(), Rat::new(3, 2));
+        assert!(Rat::ZERO.is_zero());
+        assert!(Rat::new(-1, 9).is_neg());
+    }
+
+    #[test]
+    #[should_panic(expected = "reciprocal of zero")]
+    fn recip_zero_panics() {
+        let _ = Rat::ZERO.recip();
+    }
+
+    #[test]
+    fn to_f64() {
+        assert!((Rat::new(2, 3).to_f64() - 0.6666666).abs() < 1e-6);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Rat::new(3, 1).to_string(), "3");
+        assert_eq!(Rat::new(-2, 3).to_string(), "-2/3");
+    }
+}

@@ -1,0 +1,473 @@
+//! Two-phase dense-tableau simplex, generic over an exact or floating
+//! scalar field.
+//!
+//! Used exactly (over [`super::Rat`]) by the HBL exponent LP (§2.3) and in
+//! f64 by the log-space blocking LPs (§3.2, §4.2). Bland's rule everywhere:
+//! our LPs are tiny and degenerate (many tight rank constraints), so
+//! anti-cycling matters more than pivot count.
+
+use std::fmt::Debug;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// The scalar requirements for the tableau.
+pub trait Scalar:
+    Clone
+    + Debug
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+{
+    fn zero() -> Self;
+    fn one() -> Self;
+    /// Comparison tolerance: exact types return a true zero; floats return
+    /// a small epsilon so near-degenerate pivots are treated as zero.
+    fn tol() -> Self;
+    fn is_pos(&self) -> bool {
+        self > &Self::tol()
+    }
+    fn is_neg(&self) -> bool {
+        *self < -Self::tol()
+    }
+    fn is_zero_ish(&self) -> bool {
+        !self.is_pos() && !self.is_neg()
+    }
+}
+
+impl Scalar for f64 {
+    fn zero() -> f64 {
+        0.0
+    }
+    fn one() -> f64 {
+        1.0
+    }
+    fn tol() -> f64 {
+        1e-9
+    }
+}
+
+impl Scalar for super::Rat {
+    fn zero() -> Self {
+        super::Rat::ZERO
+    }
+    fn one() -> Self {
+        super::Rat::ONE
+    }
+    fn tol() -> Self {
+        super::Rat::ZERO
+    }
+}
+
+/// Constraint relation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rel {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One row `a · x REL b`.
+#[derive(Debug, Clone)]
+pub struct Constraint<S> {
+    pub coeffs: Vec<S>,
+    pub rel: Rel,
+    pub rhs: S,
+}
+
+/// Optimization direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Maximize,
+    Minimize,
+}
+
+/// LP outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult<S> {
+    /// optimal objective value + primal solution
+    Optimal { value: S, x: Vec<S> },
+    Infeasible,
+    Unbounded,
+}
+
+impl<S: Scalar> LpResult<S> {
+    pub fn optimal(self) -> Option<(S, Vec<S>)> {
+        match self {
+            LpResult::Optimal { value, x } => Some((value, x)),
+            _ => None,
+        }
+    }
+}
+
+/// Solve: optimize `c · x` subject to `constraints`, `x ≥ 0`.
+pub fn solve<S: Scalar>(
+    objective: Objective,
+    c: &[S],
+    constraints: &[Constraint<S>],
+) -> LpResult<S> {
+    let n = c.len();
+    for (i, con) in constraints.iter().enumerate() {
+        assert_eq!(con.coeffs.len(), n, "constraint {i} arity mismatch");
+    }
+    // Internally always maximize.
+    let cmax: Vec<S> = match objective {
+        Objective::Maximize => c.to_vec(),
+        Objective::Minimize => c.iter().map(|v| -v.clone()).collect(),
+    };
+
+    let m = constraints.len();
+    // Normalize rows to rhs >= 0.
+    let rows: Vec<(Vec<S>, Rel, S)> = constraints
+        .iter()
+        .map(|con| {
+            if con.rhs.is_neg() {
+                let flipped = match con.rel {
+                    Rel::Le => Rel::Ge,
+                    Rel::Ge => Rel::Le,
+                    Rel::Eq => Rel::Eq,
+                };
+                (
+                    con.coeffs.iter().map(|v| -v.clone()).collect(),
+                    flipped,
+                    -con.rhs.clone(),
+                )
+            } else {
+                (con.coeffs.clone(), con.rel, con.rhs.clone())
+            }
+        })
+        .collect();
+
+    // Column layout: [x (n)] [slack/surplus (one per Le/Ge)] [artificial].
+    let mut n_slack = 0;
+    let mut n_art = 0;
+    for (_, rel, _) in &rows {
+        match rel {
+            Rel::Le => n_slack += 1,
+            Rel::Ge => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            Rel::Eq => n_art += 1,
+        }
+    }
+    let total = n + n_slack + n_art;
+    // tableau[m][total+1], last column = rhs
+    let mut t: Vec<Vec<S>> = vec![vec![S::zero(); total + 1]; m];
+    let mut basis: Vec<usize> = vec![0; m];
+    let mut art_cols: Vec<usize> = Vec::new();
+    {
+        let mut s_at = n;
+        let mut a_at = n + n_slack;
+        for (i, (coeffs, rel, rhs)) in rows.iter().enumerate() {
+            for (j, v) in coeffs.iter().enumerate() {
+                t[i][j] = v.clone();
+            }
+            t[i][total] = rhs.clone();
+            match rel {
+                Rel::Le => {
+                    t[i][s_at] = S::one();
+                    basis[i] = s_at;
+                    s_at += 1;
+                }
+                Rel::Ge => {
+                    t[i][s_at] = -S::one();
+                    s_at += 1;
+                    t[i][a_at] = S::one();
+                    basis[i] = a_at;
+                    art_cols.push(a_at);
+                    a_at += 1;
+                }
+                Rel::Eq => {
+                    t[i][a_at] = S::one();
+                    basis[i] = a_at;
+                    art_cols.push(a_at);
+                    a_at += 1;
+                }
+            }
+        }
+    }
+
+    // ---- Phase 1: minimize sum of artificials (maximize its negation,
+    // i.e. phase-1 costs c_j = -1 on artificial columns) ----
+    if n_art > 0 {
+        // reduced-cost row: z_j = -c_j + Σ_{basic i} c_{basis[i]}·t[i][j]
+        //                       = δ_art(j) - Σ_{i: basis[i] artificial} t[i][j]
+        let mut z: Vec<S> = vec![S::zero(); total + 1];
+        for &ac in &art_cols {
+            z[ac] = S::one();
+        }
+        for (i, &b) in basis.iter().enumerate() {
+            if art_cols.contains(&b) {
+                for j in 0..=total {
+                    z[j] = z[j].clone() - t[i][j].clone();
+                }
+            }
+        }
+        if !pivot_loop(&mut t, &mut basis, &mut z, total) {
+            return LpResult::Unbounded; // cannot happen in phase 1
+        }
+        // z[total] = -(sum of artificials); feasible iff it reached zero
+        if z[total].is_neg() {
+            return LpResult::Infeasible;
+        }
+        // Drive any artificial still in the basis out (degenerate rows).
+        for i in 0..m {
+            if art_cols.contains(&basis[i]) {
+                if let Some(j) = (0..n + n_slack)
+                    .find(|&j| !t[i][j].is_zero_ish() && !art_cols.contains(&j))
+                {
+                    pivot(&mut t, &mut basis, i, j, total);
+                } // else: row is all-zero over real vars; harmless.
+            }
+        }
+    }
+
+    // ---- Phase 2: maximize cmax ----
+    // reduced costs: z_j = (c_B · B^-1 A_j) - c_j, expressed via tableau
+    let mut z: Vec<S> = vec![S::zero(); total + 1];
+    for j in 0..n {
+        z[j] = -cmax[j].clone();
+    }
+    for (i, &b) in basis.iter().enumerate() {
+        if b < n && !cmax[b].is_zero_ish() {
+            let cb = cmax[b].clone();
+            for j in 0..=total {
+                z[j] = z[j].clone() + cb.clone() * t[i][j].clone();
+            }
+        }
+    }
+    // Forbid artificial columns re-entering: set their reduced cost huge by
+    // simply never selecting them in the pivot loop (handled via mask).
+    let art_mask: Vec<bool> = (0..total).map(|j| art_cols.contains(&j)).collect();
+    if !pivot_loop_masked(&mut t, &mut basis, &mut z, total, &art_mask) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![S::zero(); n];
+    for (i, &b) in basis.iter().enumerate() {
+        if b < n {
+            x[b] = t[i][total].clone();
+        }
+    }
+    let value = match objective {
+        Objective::Maximize => z[total].clone(),
+        Objective::Minimize => -z[total].clone(),
+    };
+    LpResult::Optimal { value, x }
+}
+
+/// Gauss pivot at (row, col).
+fn pivot<S: Scalar>(
+    t: &mut [Vec<S>],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    total: usize,
+) {
+    let p = t[row][col].clone();
+    for v in t[row].iter_mut() {
+        *v = v.clone() / p.clone();
+    }
+    for i in 0..t.len() {
+        if i != row && !t[i][col].is_zero_ish() {
+            let f = t[i][col].clone();
+            for j in 0..=total {
+                let sub = f.clone() * t[row][j].clone();
+                t[i][j] = t[i][j].clone() - sub;
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_obj<S: Scalar>(t: &[Vec<S>], z: &mut [S], row: usize, col: usize, total: usize) {
+    if !z[col].is_zero_ish() {
+        let f = z[col].clone();
+        for j in 0..=total {
+            let sub = f.clone() * t[row][j].clone();
+            z[j] = z[j].clone() - sub;
+        }
+    }
+}
+
+fn pivot_loop<S: Scalar>(
+    t: &mut [Vec<S>],
+    basis: &mut [usize],
+    z: &mut [S],
+    total: usize,
+) -> bool {
+    let mask = vec![false; total];
+    pivot_loop_masked(t, basis, z, total, &mask)
+}
+
+/// Bland's-rule pivot loop. Returns false on unboundedness.
+fn pivot_loop_masked<S: Scalar>(
+    t: &mut [Vec<S>],
+    basis: &mut [usize],
+    z: &mut [S],
+    total: usize,
+    masked: &[bool],
+) -> bool {
+    loop {
+        // entering: smallest index with positive reduced profit (z_j < 0 in
+        // the "z-row carries -c + cB B^-1 A" convention means improvement
+        // when z_j negative; we store so that positive z[total] grows —
+        // choose column with z_j negative).
+        let enter = (0..total).find(|&j| !masked[j] && z[j].is_neg());
+        let Some(col) = enter else { return true };
+        // leaving: min ratio rhs / a_ij over a_ij > 0, Bland tie-break.
+        let mut best: Option<(usize, S)> = None;
+        for i in 0..t.len() {
+            if t[i][col].is_pos() {
+                let ratio = t[i][total].clone() / t[i][col].clone();
+                best = match best {
+                    None => Some((i, ratio)),
+                    Some((bi, br)) => {
+                        if ratio < br || (ratio == br && basis[i] < basis[bi]) {
+                            Some((i, ratio))
+                        } else {
+                            Some((bi, br))
+                        }
+                    }
+                };
+            }
+        }
+        let Some((row, _)) = best else { return false };
+        pivot(t, basis, row, col, total);
+        pivot_obj(t, z, row, col, total);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Rat;
+    use super::*;
+
+    fn le(coeffs: Vec<f64>, rhs: f64) -> Constraint<f64> {
+        Constraint { coeffs, rel: Rel::Le, rhs }
+    }
+
+    #[test]
+    fn max_simple_2d() {
+        // max 3x + 5y st x<=4, 2y<=12, 3x+2y<=18 -> (2,6), value 36
+        let r = solve(
+            Objective::Maximize,
+            &[3.0, 5.0],
+            &[
+                le(vec![1.0, 0.0], 4.0),
+                le(vec![0.0, 2.0], 12.0),
+                le(vec![3.0, 2.0], 18.0),
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert!((v - 36.0).abs() < 1e-9);
+        assert!((x[0] - 2.0).abs() < 1e-9 && (x[1] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_with_ge_constraints() {
+        // min x + y st x + 2y >= 4, 3x + y >= 6 -> x=8/5, y=6/5, value 14/5
+        let r = solve(
+            Objective::Minimize,
+            &[1.0, 1.0],
+            &[
+                Constraint { coeffs: vec![1.0, 2.0], rel: Rel::Ge, rhs: 4.0 },
+                Constraint { coeffs: vec![3.0, 1.0], rel: Rel::Ge, rhs: 6.0 },
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert!((v - 2.8).abs() < 1e-9, "v={v}");
+        assert!((x[0] - 1.6).abs() < 1e-9 && (x[1] - 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equality_constraint() {
+        // max x + 2y st x + y = 3, x <= 2 -> x in [0,2]; best y=3-x with
+        // obj x + 2(3-x) = 6 - x -> x=0, value 6
+        let r = solve(
+            Objective::Maximize,
+            &[1.0, 2.0],
+            &[
+                Constraint { coeffs: vec![1.0, 1.0], rel: Rel::Eq, rhs: 3.0 },
+                le(vec![1.0, 0.0], 2.0),
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert!((v - 6.0).abs() < 1e-9);
+        assert!(x[0].abs() < 1e-9 && (x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let r = solve(
+            Objective::Maximize,
+            &[1.0],
+            &[
+                le(vec![1.0], 1.0),
+                Constraint { coeffs: vec![1.0], rel: Rel::Ge, rhs: 2.0 },
+            ],
+        );
+        assert_eq!(r, LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let r = solve(Objective::Maximize, &[1.0], &[
+            Constraint { coeffs: vec![-1.0], rel: Rel::Le, rhs: 1.0 },
+        ]);
+        assert_eq!(r, LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // x >= 2 written as -x <= -2
+        let r = solve(
+            Objective::Minimize,
+            &[1.0],
+            &[le(vec![-1.0], -2.0)],
+        );
+        let (v, _) = r.optimal().unwrap();
+        assert!((v - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_rational_solution() {
+        // The HBL-style LP: min sI+sF+sO st pairwise sums >= 1 — optimum is
+        // exactly (1/2, 1/2, 1/2), value 3/2.
+        let ge = |coeffs: Vec<i128>, rhs: i128| Constraint {
+            coeffs: coeffs.into_iter().map(Rat::int).collect(),
+            rel: Rel::Ge,
+            rhs: Rat::int(rhs),
+        };
+        let r = solve(
+            Objective::Minimize,
+            &[Rat::ONE, Rat::ONE, Rat::ONE],
+            &[
+                ge(vec![1, 1, 0], 1),
+                ge(vec![1, 0, 1], 1),
+                ge(vec![0, 1, 1], 1),
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert_eq!(v, Rat::new(3, 2));
+        assert_eq!(x, vec![Rat::new(1, 2); 3]);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // classic degenerate LP; Bland's rule must terminate
+        let r = solve(
+            Objective::Maximize,
+            &[0.75, -150.0, 0.02, -6.0],
+            &[
+                le(vec![0.25, -60.0, -0.04, 9.0], 0.0),
+                le(vec![0.5, -90.0, -0.02, 3.0], 0.0),
+                le(vec![0.0, 0.0, 1.0, 0.0], 1.0),
+            ],
+        );
+        let (v, _) = r.optimal().unwrap();
+        assert!((v - 0.05).abs() < 1e-9, "v={v}");
+    }
+}

@@ -1,0 +1,227 @@
+//! convbound CLI — the leader entrypoint.
+//!
+//! ```text
+//! convbound hbl-table                       reproduce the §3.1 constraint table
+//! convbound bounds  --layer conv2_x ...     Theorem 2.1/2.2/2.3 values
+//! convbound fig2    --layer conv1 ...       sequential comm volumes vs M
+//! convbound fig3    --layer conv2_x ...     parallel comm volumes vs P
+//! convbound fig4    [--claims]              GEMMINI sim, ours vs vendor
+//! convbound plan    --layer conv4_x ...     full layer plan (blocking+tile)
+//! convbound serve   --key unit3x3/blocked   batched serving demo over PJRT
+//! ```
+
+use convbound::bounds::{parallel_bound_terms, sequential_bound_terms};
+use convbound::conv::{find_layer, Precision, Tensor4};
+use convbound::coordinator::{plan_layer, ConvServer};
+use convbound::gemmini::GemminiConfig;
+use convbound::hbl::{analyze_7nl, analyze_small_filter};
+use convbound::report::{
+    self, default_mem_sweep, default_proc_sweep, fig2_series, fig3_series,
+    fig4_rows, fig4_table, ratio_table, Table,
+};
+use convbound::tiling::OptOptions;
+use convbound::util::cli::Args;
+
+fn precision_of(args: &Args) -> Precision {
+    match args.opt_str("precision", "mixed") {
+        "uniform" => Precision::uniform(),
+        "mixed" => Precision::paper_mixed(),
+        "gemmini" => Precision::gemmini(),
+        other => panic!("unknown --precision {other} (uniform|mixed|gemmini)"),
+    }
+}
+
+fn layer_of(args: &Args, default: &str) -> (String, convbound::conv::ConvShape) {
+    let name = args.opt_str("layer", default).to_string();
+    let batch = args.opt_u64("batch", 1000);
+    let l = find_layer(&name, batch)
+        .unwrap_or_else(|| panic!("unknown layer '{name}' (conv1..conv5_x, alex1..alex5)"));
+    (name, l.shape)
+}
+
+fn cmd_hbl_table() {
+    let sol = analyze_7nl(1, 1);
+    println!("7NL CNN HBL analysis (σw = σh = 1)\n");
+    let mut t = Table::new(&["rank H", "rk φI(H)", "rk φF(H)", "rk φO(H)", "constraint"]);
+    for c in &sol.constraints {
+        t.row(vec![
+            c.rank_h.to_string(),
+            c.ranks_img[0].to_string(),
+            c.ranks_img[1].to_string(),
+            c.ranks_img[2].to_string(),
+            c.pretty(&["I", "F", "O"]),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\noptimal exponents: Σs = {} (LP vertex {:?}; the symmetric optimum is (2/3, 2/3, 2/3))",
+        sol.total,
+        sol.s.iter().map(|r| r.to_string()).collect::<Vec<_>>()
+    );
+    let sf = analyze_small_filter();
+    println!(
+        "small-filter lift: Σs = {} with s = {:?}",
+        sf.total,
+        sf.s.iter().map(|r| r.to_string()).collect::<Vec<_>>()
+    );
+}
+
+fn cmd_bounds(args: &Args) {
+    let (name, shape) = layer_of(args, "conv2_x");
+    let p = precision_of(args);
+    let m = args.opt_f64("mem", 65536.0);
+    let procs = args.opt_f64("procs", 64.0);
+    println!("layer {name}: {shape}");
+    println!("precision: pI={} pF={} pO={} (C_p = {})", p.p_i, p.p_f, p.p_o, p.c_p());
+    let t = sequential_bound_terms(&shape, p, m);
+    println!("\nTheorem 2.1 (sequential, M = {m} words):");
+    println!("  compulsory    = {:.3e}", t.compulsory);
+    println!("  HBL           = {:.3e}", t.hbl);
+    println!("  small-filter  = {:.3e}", t.small_filter);
+    println!("  X ≥ {:.3e}  (dominant: {})", t.max(), t.dominant());
+    let pt = parallel_bound_terms(&shape, p, procs, m);
+    println!("\nTheorems 2.2 + 2.3 (parallel, P = {procs}, M = {m}):");
+    println!("  Thm 2.2 HBL           = {:.3e}", pt.hbl);
+    println!("  Thm 2.2 small-filter  = {:.3e}", pt.small_filter);
+    println!("  Thm 2.3 mem-indep     = {:.3e}", pt.mem_indep);
+    println!("  Thm 2.3 small-filter  = {:.3e}", pt.mem_indep_small_filter);
+    println!("  X ≥ {:.3e}", pt.max());
+}
+
+fn cmd_fig2(args: &Args) {
+    let (name, shape) = layer_of(args, "conv1");
+    let p = precision_of(args);
+    println!("Figure 2 — sequential communication / bound, layer {name}, batch {}\n", shape.n);
+    let rows = fig2_series(&shape, p, &default_mem_sweep());
+    print!("{}", ratio_table("M (words)", &rows).render());
+}
+
+fn cmd_fig3(args: &Args) {
+    let (name, shape) = layer_of(args, "conv2_x");
+    let p = precision_of(args);
+    let m = args.opt_f64("mem", 1e6);
+    println!("Figure 3 — parallel communication / bound, layer {name}, batch {}, M = {m}\n", shape.n);
+    let rows = fig3_series(&shape, p, &default_proc_sweep(), m);
+    print!("{}", ratio_table("P", &rows).render());
+}
+
+fn cmd_fig4(args: &Args) {
+    let batch = args.opt_u64("batch", 1000);
+    let cfg = GemminiConfig::default();
+    let fix = args.flag("conv5-fix");
+    println!(
+        "Figure 4 — GEMMINI simulation, batch {batch}{}\n",
+        if fix { " (with the §5 conv5 no-tile constraint)" } else { "" }
+    );
+    let rows = fig4_rows(batch, &cfg, fix);
+    print!("{}", fig4_table(&rows).render());
+    if args.flag("claims") {
+        println!("\n§5 claims check:");
+        for r in &rows {
+            println!(
+                "  {}: comm {:.0}% of vendor, cycles {:.2}x vendor",
+                r.name,
+                r.comm_ratio() * 100.0,
+                r.cycle_ratio()
+            );
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) {
+    let (name, shape) = layer_of(args, "conv4_x");
+    let p = precision_of(args);
+    let m = args.opt_f64("mem", 65536.0);
+    let plan = plan_layer(&name, shape, p, m, &GemminiConfig::default(), OptOptions::default());
+    println!("plan for {name} ({shape}) at M = {m} words:");
+    println!("  LP blocking: {:?}", plan.blocking);
+    println!("  fits: {} (footprint {} words)", plan.blocking.fits(p, m),
+             report::fmt_f(plan.blocking.footprint_words(p)));
+    println!("  GEMMINI tile (ours):   {:?}", plan.gemmini);
+    println!("  GEMMINI tile (vendor): {:?}", plan.gemmini_vendor);
+    println!("  bound: X ≥ {} words ({})", report::fmt_f(plan.bound.max()), plan.bound.dominant());
+    println!("  blocking/bound ratio: {}", report::fmt_x(plan.blocking_ratio()));
+}
+
+fn cmd_serve(args: &Args) {
+    let dir = args.opt_str("artifacts", "artifacts").to_string();
+    let key = args.opt_str("key", "unit3x3/blocked").to_string();
+    let requests = args.opt_u64("requests", 32);
+    let manifest = convbound::runtime::Manifest::load(
+        std::path::Path::new(&dir).join("manifest.json"),
+    )
+    .expect("manifest (run `make artifacts`)");
+    let spec = manifest.find(&key).expect("artifact key").clone();
+    let wd = &spec.inputs[1];
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 1);
+    let server = ConvServer::start(&dir, &key, weights, std::time::Duration::from_millis(2))
+        .expect("server start");
+    let xd = &spec.inputs[0];
+    let mut pending = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 100 + i);
+        pending.push(server.submit(img).expect("submit"));
+    }
+    let mut total_latency = 0.0;
+    for rx in pending {
+        let resp = rx.recv().expect("response");
+        total_latency += resp.latency.as_secs_f64();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown().expect("shutdown");
+    println!("served {requests} requests in {wall:.3}s ({:.1} req/s)", requests as f64 / wall);
+    println!("mean latency {:.2} ms", total_latency / requests as f64 * 1e3);
+    println!(
+        "batches {} (batch size {}), padded slots {}, exec time {:.3}s",
+        stats.batches, spec.inputs[0][0], stats.padded_slots, stats.total_exec_secs
+    );
+}
+
+fn cmd_hlo_stats(args: &Args) {
+    let dir = args.opt_str("artifacts", "artifacts").to_string();
+    let manifest = convbound::runtime::Manifest::load(
+        std::path::Path::new(&dir).join("manifest.json"),
+    )
+    .expect("manifest (run `make artifacts`)");
+    let mut t = Table::new(&["artifact", "instrs", "dots", "dot MACs", "whiles", "fusions"]);
+    for a in &manifest.artifacts {
+        let st = convbound::runtime::analyze_file(
+            std::path::Path::new(&dir).join(&a.path),
+        )
+        .expect("analyze");
+        t.row(vec![
+            a.key(),
+            st.total.to_string(),
+            st.ops.get("dot").copied().unwrap_or(0).to_string(),
+            report::fmt_f(st.dot_macs as f64),
+            st.while_loops.to_string(),
+            st.fusions.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("hbl-table") => cmd_hbl_table(),
+        Some("hlo-stats") => cmd_hlo_stats(&args),
+        Some("bounds") => cmd_bounds(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("fig4") => cmd_fig4(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("serve") => cmd_serve(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|serve> [options]");
+            eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
+            eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
+            eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Figure/table emitters: aligned-text tables for the CLI and the
+//! benches, matching the rows/series of the paper's figures.
+
+pub mod figures;
+
+pub use figures::{
+    default_mem_sweep, default_proc_sweep, fig2_series, fig3_series, fig4_rows,
+    fig4_table, ratio_table, Fig4Row,
+};
+
+use std::fmt::Write as _;
+
+/// A simple aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                let pad = widths[i];
+                if i + 1 == ncol {
+                    let _ = writeln!(out, "{:<pad$}", cells[i]);
+                } else {
+                    let _ = write!(out, "{:<pad$}  ", cells[i]);
+                }
+            }
+        };
+        fmt_row(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            fmt_row(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Format a float compactly for table cells (3 significant-ish digits).
+pub fn fmt_f(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if a == 0.0 {
+        "0".to_string()
+    } else if a >= 1e6 || a < 1e-3 {
+        format!("{v:.2e}")
+    } else if a >= 100.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Format a ratio as `1.73x`.
+pub fn fmt_x(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn float_formats() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert_eq!(fmt_f(3.14159), "3.14");
+        assert_eq!(fmt_f(12345.0), "12345");
+        assert_eq!(fmt_f(1.23e8), "1.23e8");
+        assert_eq!(fmt_x(1.732), "1.73x");
+    }
+}

@@ -1,0 +1,240 @@
+//! HLO-text statistics: the L2 performance lens.
+//!
+//! The lowered module is the ground truth for what XLA will execute; this
+//! lightweight parser extracts the op histogram, dot/convolution FLOP
+//! estimates and peak intermediate footprint so EXPERIMENTS.md §Perf L2 can
+//! assert "no redundant recomputation, fused where XLA can fuse" from the
+//! artifact itself rather than guesswork.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Aggregate statistics of one HLO module.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HloStats {
+    /// instruction-count histogram by opcode
+    pub ops: BTreeMap<String, usize>,
+    /// total instructions
+    pub total: usize,
+    /// MAC count from `dot` ops (product of contracted/batch/free dims)
+    pub dot_macs: u64,
+    /// total f32 elements across all instruction output shapes
+    pub output_elements: u64,
+    /// number of fusion computations
+    pub fusions: usize,
+    /// number of while loops (interpret-mode pallas grids lower to these)
+    pub while_loops: usize,
+}
+
+/// Parse the shape `f32[4,8,14,14]{...}` → element count.
+fn shape_elements(shape: &str) -> Option<u64> {
+    let open = shape.find('[')?;
+    let close = shape[open..].find(']')? + open;
+    let dims = &shape[open + 1..close];
+    if dims.trim().is_empty() {
+        return Some(1); // scalar
+    }
+    let mut n: u64 = 1;
+    for d in dims.split(',') {
+        n = n.checked_mul(d.trim().parse::<u64>().ok()?)?;
+    }
+    Some(n)
+}
+
+/// Extract the opcode from an instruction line `x = f32[..] op-name(...)`
+/// (names may or may not carry a leading `%`; ROOT lines included).
+fn parse_instruction(line: &str) -> Option<(String, u64)> {
+    let line = line.trim();
+    let first = line.split_whitespace().next()?;
+    let name = if first == "ROOT" {
+        line.split_whitespace().nth(1)?
+    } else {
+        first
+    };
+    // instruction names are identifiers like `add.7` or `%fusion.3`
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '%' | '.' | '_' | '-'))
+    {
+        return None;
+    }
+    let eq = line.find(" = ")?;
+    let rest = &line[eq + 3..];
+    // rest looks like: "f32[4,8]{1,0} opcode(args...)" or "(f32[..]) tuple(...)"
+    let paren = rest.find('(')?;
+    // opcode is the last word before the paren
+    let head = &rest[..paren];
+    let opcode = head.split_whitespace().last()?.to_string();
+    // skip tuple-shape heads like "(f32[2,2])" (opcode would contain '[')
+    if opcode.contains('[') || opcode.contains('{') {
+        // e.g. "(f32[2,2]) tuple" — retry on the text after ')'
+        let close = rest.find(") ")?;
+        let tail = &rest[close + 2..];
+        let p2 = tail.find('(')?;
+        let op2 = tail[..p2].split_whitespace().last()?.to_string();
+        let elems = shape_elements(rest).unwrap_or(0);
+        return Some((op2, elems));
+    }
+    let elems = shape_elements(head).unwrap_or(0);
+    Some((opcode, elems))
+}
+
+/// Parse the dims list of the first shape on a line: `f32[4,8]{..}` → [4,8].
+fn shape_dims(shape: &str) -> Option<Vec<u64>> {
+    let open = shape.find('[')?;
+    let close = shape[open..].find(']')? + open;
+    let dims = &shape[open + 1..close];
+    if dims.trim().is_empty() {
+        return Some(vec![]);
+    }
+    dims.split(',').map(|d| d.trim().parse::<u64>().ok()).collect()
+}
+
+/// MAC count of a `dot` line: |out| × (product of contracted lhs dims).
+/// Operand shapes are not repeated on HLO-text dot lines, so the caller
+/// passes a symbol table of instruction-name → dims.
+fn dot_macs_of_line(
+    line: &str,
+    symbols: &BTreeMap<String, Vec<u64>>,
+) -> u64 {
+    let out_elems = shape_elements(line).unwrap_or(0);
+    // lhs operand: first argument inside dot(...) — scan to the first
+    // comma at bracket depth 0 (shape annotations contain commas), then
+    // take the last whitespace token (strips an optional shape prefix)
+    let Some(p) = line.find("dot(") else { return 0 };
+    let args = &line[p + 4..];
+    let mut depth = 0i32;
+    let mut end = args.len();
+    for (i, c) in args.char_indices() {
+        match c {
+            '[' | '{' | '(' => depth += 1,
+            ']' | '}' => depth -= 1,
+            ')' if depth > 0 => depth -= 1,
+            ',' | ')' if depth == 0 => {
+                end = i;
+                break;
+            }
+            _ => {}
+        }
+    }
+    let lhs_name = args[..end]
+        .split_whitespace()
+        .last()
+        .unwrap_or("")
+        .trim_start_matches('%');
+    let Some(lhs_dims) = symbols.get(lhs_name) else { return 0 };
+    // contracted dims: lhs_contracting_dims={k,...}
+    let contracted: u64 = line
+        .find("lhs_contracting_dims={")
+        .and_then(|q| {
+            let rest = &line[q + 22..];
+            let end = rest.find('}')?;
+            Some(
+                rest[..end]
+                    .split(',')
+                    .filter_map(|d| d.trim().parse::<usize>().ok())
+                    .filter_map(|k| lhs_dims.get(k).copied())
+                    .product(),
+            )
+        })
+        .unwrap_or(1);
+    out_elems * contracted
+}
+
+/// Compute stats from HLO text.
+pub fn analyze_text(text: &str) -> HloStats {
+    let mut st = HloStats::default();
+    // first pass: symbol table of instruction output shapes
+    let mut symbols: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for line in text.lines() {
+        let t = line.trim();
+        let name = if let Some(rest) = t.strip_prefix("ROOT ") {
+            rest.split_whitespace().next()
+        } else {
+            t.split_whitespace().next()
+        };
+        if let (Some(name), Some(eq)) = (name, t.find(" = ")) {
+            if let Some(dims) = shape_dims(&t[eq + 3..]) {
+                symbols.insert(name.trim_start_matches('%').to_string(), dims);
+            }
+        }
+    }
+    for line in text.lines() {
+        if let Some((op, elems)) = parse_instruction(line) {
+            *st.ops.entry(op.clone()).or_insert(0) += 1;
+            st.total += 1;
+            st.output_elements = st.output_elements.saturating_add(elems);
+            match op.as_str() {
+                "dot" => st.dot_macs += dot_macs_of_line(line, &symbols),
+                "fusion" => st.fusions += 1,
+                "while" => st.while_loops += 1,
+                _ => {}
+            }
+        }
+    }
+    st
+}
+
+/// Load + analyze an artifact file.
+pub fn analyze_file(path: impl AsRef<Path>) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    Ok(analyze_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule test
+ENTRY main {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,6]{1,0} parameter(1)
+  %d = f32[4,6]{1,0} dot(f32[4,8]{1,0} %p0, f32[8,6]{1,0} %p1), lhs_contracting_dims={1}
+  %c = f32[] constant(2)
+  %b = f32[4,6]{1,0} broadcast(f32[] %c), dimensions={}
+  ROOT %a = f32[4,6]{1,0} add(f32[4,6]{1,0} %d, f32[4,6]{1,0} %b)
+}
+"#;
+
+    #[test]
+    fn histogram_and_total() {
+        let st = analyze_text(SAMPLE);
+        assert_eq!(st.ops.get("parameter"), Some(&2));
+        assert_eq!(st.ops.get("dot"), Some(&1));
+        assert_eq!(st.ops.get("add"), Some(&1));
+        assert_eq!(st.total, 6);
+    }
+
+    #[test]
+    fn dot_macs_estimated() {
+        let st = analyze_text(SAMPLE);
+        // (4,8)x(8,6): 4·8·6 = 192 = sqrt(32·48·24)
+        assert_eq!(st.dot_macs, 192);
+    }
+
+    #[test]
+    fn shape_elements_parsing() {
+        assert_eq!(shape_elements("f32[4,8,14,14]{3,2,1,0}"), Some(4 * 8 * 14 * 14));
+        assert_eq!(shape_elements("f32[]"), Some(1));
+        assert_eq!(shape_elements("nope"), None);
+    }
+
+    #[test]
+    fn real_artifacts_have_dots_matching_updates() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest =
+            crate::runtime::Manifest::load(dir.join("manifest.json")).unwrap();
+        let spec = manifest.find("unit1x1/blocked").unwrap();
+        let st = analyze_file(dir.join(&spec.path)).unwrap();
+        assert!(st.ops.contains_key("dot") || st.while_loops > 0,
+                "blocked conv must lower to dots or a grid loop: {:?}", st.ops);
+        assert!(st.total > 10);
+    }
+}

@@ -1,0 +1,184 @@
+//! Artifact manifest: the JSON index written by python/compile/aot.py
+//! describing every AOT-compiled HLO module's entry shapes.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "blocked" | "im2col" | "network"
+    pub kind: String,
+    /// file name relative to the artifact directory
+    pub path: String,
+    /// input tensor shapes, in call order
+    pub inputs: Vec<Vec<usize>>,
+    /// output tensor shape (always rank 4 in this crate)
+    pub output: Vec<usize>,
+    /// total MAC updates G for throughput reporting
+    pub updates: u64,
+}
+
+impl ArtifactSpec {
+    /// Stable lookup key: `<name>/<kind>`.
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.name, self.kind)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let batch = v
+            .get("batch")
+            .as_u64()
+            .ok_or_else(|| anyhow!("manifest: missing 'batch'"))? as usize;
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts'"))?
+        {
+            let shape_list = |key: &str| -> Result<Vec<Vec<usize>>> {
+                a.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("manifest: missing '{key}'"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .ok_or_else(|| anyhow!("bad shape in '{key}'"))
+                            .map(|dims| {
+                                dims.iter()
+                                    .map(|d| d.as_u64().unwrap_or(0) as usize)
+                                    .collect()
+                            })
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing 'name'"))?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing 'kind'"))?
+                    .to_string(),
+                path: a
+                    .get("path")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing 'path'"))?
+                    .to_string(),
+                inputs: shape_list("inputs")?,
+                output: a
+                    .get("output")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact missing 'output'"))?
+                    .iter()
+                    .map(|d| d.as_u64().unwrap_or(0) as usize)
+                    .collect(),
+                updates: a.get("updates").as_u64().unwrap_or(0),
+            });
+        }
+        Ok(Manifest { batch, artifacts })
+    }
+
+    /// Find by `<name>/<kind>` key or bare name (if unique).
+    pub fn find(&self, key: &str) -> Option<&ArtifactSpec> {
+        if let Some(a) = self.artifacts.iter().find(|a| a.key() == key) {
+            return Some(a);
+        }
+        let by_name: Vec<&ArtifactSpec> =
+            self.artifacts.iter().filter(|a| a.name == key).collect();
+        if by_name.len() == 1 {
+            Some(by_name[0])
+        } else {
+            None
+        }
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        self.artifacts.iter().map(|a| a.key()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 4,
+      "artifacts": [
+        {"name": "unit3x3", "kind": "blocked", "path": "a.hlo.txt",
+         "inputs": [[4,8,14,14],[8,16,3,3]], "output": [4,16,6,6],
+         "updates": 663552},
+        {"name": "unit3x3", "kind": "im2col", "path": "b.hlo.txt",
+         "inputs": [[4,8,14,14],[8,16,3,3]], "output": [4,16,6,6],
+         "updates": 663552}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].inputs[0], vec![4, 8, 14, 14]);
+        assert_eq!(m.artifacts[0].output, vec![4, 16, 6, 6]);
+        assert_eq!(m.artifacts[0].updates, 663552);
+    }
+
+    #[test]
+    fn find_by_key_and_ambiguous_name() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("unit3x3/blocked").is_some());
+        assert!(m.find("unit3x3/im2col").is_some());
+        // bare name is ambiguous (two kinds) -> None
+        assert!(m.find("unit3x3").is_none());
+        assert!(m.find("missing").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"batch": 1}"#).is_err());
+        assert!(Manifest::parse(
+            r#"{"batch": 1, "artifacts": [{"kind": "x"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration check against the actual build output when available
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert_eq!(a.output.len(), 4);
+                assert!(!a.inputs.is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! PJRT execution layer (L3 runtime).
+//!
+//! Loads AOT artifacts (`artifacts/*.hlo.txt`, produced once by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client through
+//! the `xla` crate. Python is never on this path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod hlostats;
+pub mod manifest;
+
+pub use hlostats::{analyze_file, analyze_text, HloStats};
+pub use manifest::{ArtifactSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::conv::Tensor4;
+
+/// A compiled executable plus its IO metadata.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT client and a set of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory (reads
+    /// `manifest.json`, compiles nothing yet).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(Runtime { client, dir, manifest, loaded: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile one artifact by key (`<name>/<kind>`), caching the result.
+    pub fn load(&mut self, key: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(key) {
+            let spec = self
+                .manifest
+                .find(key)
+                .ok_or_else(|| anyhow!("artifact '{key}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            self.loaded.insert(key.to_string(), LoadedArtifact { spec, exe });
+        }
+        Ok(&self.loaded[key])
+    }
+
+    /// Compile every artifact in the manifest up front.
+    pub fn load_all(&mut self) -> Result<()> {
+        let keys: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.key()).collect();
+        for k in keys {
+            self.load(&k)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on host tensors.
+    ///
+    /// Input tensor shapes must match the manifest entry; the single tuple
+    /// output is unwrapped and returned as a [`Tensor4`].
+    pub fn run(&self, key: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let art = self
+            .loaded
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not loaded"))?;
+        art.run(inputs)
+    }
+
+    /// `load` + `run` in one call.
+    pub fn run_loading(&mut self, key: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        self.load(key)?;
+        self.run(key, inputs)
+    }
+}
+
+impl LoadedArtifact {
+    /// Execute with host tensors, validating shapes against the manifest.
+    pub fn run(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.spec.key(), self.spec.inputs.len(), inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            let want = &self.spec.inputs[i];
+            let have: Vec<usize> = t.dims.to_vec();
+            if &have != want {
+                return Err(anyhow!(
+                    "artifact '{}' input {i}: shape {have:?} != manifest {want:?}",
+                    self.spec.key()
+                ));
+            }
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{}': {e:?}", self.spec.key()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the output is a 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("result to_vec: {e:?}"))?;
+        let od = &self.spec.output;
+        if data.len() != od.iter().product::<usize>() {
+            return Err(anyhow!(
+                "result has {} elements, manifest says {:?}",
+                data.len(), od
+            ));
+        }
+        Ok(Tensor4 { dims: [od[0], od[1], od[2], od[3]], data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime round-trip tests live in rust/tests/runtime_roundtrip.rs —
+    // they need the artifacts/ directory built by `make artifacts`.
+}

@@ -1,0 +1,121 @@
+//! Minimal property-testing framework (proptest is not vendored offline).
+//!
+//! `forall` drives a generator function with a deterministic RNG and, on
+//! failure, retries the failing case with simple halving shrink candidates
+//! produced by the caller-supplied `shrink` hook. Keep generators simple:
+//! the framework favors clarity over proptest's full strategy algebra.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` on `cases` values drawn from `gen`. On failure, tries the
+/// shrink candidates from `shrink` (depth-first, up to 200 steps) and
+/// panics with the smallest failing case's debug representation.
+pub fn forall_shrink<T, G, P, S>(cfg: Config, mut gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // shrink
+        let mut smallest = value.clone();
+        let mut budget = 200;
+        'outer: while budget > 0 {
+            for cand in shrink(&smallest) {
+                budget -= 1;
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (case {case}, seed {:#x}):\n  original: {value:?}\n  shrunk:   {smallest:?}",
+            cfg.seed
+        );
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall<T, G, P>(cfg: Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    forall_shrink(cfg, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for a vector of u64s: halve each entry toward 1.
+pub fn shrink_u64s(v: &[u64]) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    for i in 0..v.len() {
+        if v[i] > 1 {
+            let mut c = v.to_vec();
+            c[i] /= 2;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(Config::default(), |r| r.range(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(Config { cases: 64, seed: 1 }, |r| r.range(0, 100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // property: all entries < 64. Start from random big vectors; the
+        // shrunk failure should have all-but-one entry minimal.
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                Config { cases: 16, seed: 7 },
+                |r| vec![r.range(64, 1024), r.range(64, 1024)],
+                |v| v.iter().all(|&x| x < 64),
+                |v| shrink_u64s(v),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_u64s_halves() {
+        assert_eq!(shrink_u64s(&[4, 1]), vec![vec![2, 1]]);
+        assert!(shrink_u64s(&[1, 1]).is_empty());
+    }
+}

@@ -1,0 +1,123 @@
+//! Hierarchical (nested) blocking for multi-level caches — the attainability
+//! side of [`crate::bounds::hierarchy`]: solve the §3.2 LP at the outermost
+//! level, then re-block the resulting tile's sub-problem for the next level
+//! down, recursively.
+
+use crate::bounds::hierarchy::Hierarchy;
+use crate::conv::{ConvShape, Precision};
+
+use super::seq_lp::{sequential_blocking, SeqBlocking};
+
+/// One blocking per cache level, innermost (smallest cache) first.
+#[derive(Debug, Clone)]
+pub struct HierarchicalBlocking {
+    pub levels: Vec<SeqBlocking>,
+    /// estimated words crossing each boundary (innermost first)
+    pub traffic: Vec<f64>,
+}
+
+/// The sub-problem a tile poses to the next cache level down: the tile's
+/// extents become the loop ranges (the small-filter split collapses back
+/// into plain filter extents).
+fn tile_subproblem(s: &ConvShape, b: &SeqBlocking) -> ConvShape {
+    ConvShape {
+        n: b.b_n.max(1),
+        c_i: b.b_ci.max(1),
+        c_o: b.b_co.max(1),
+        w_o: b.b_wo.max(1),
+        h_o: b.b_ho.max(1),
+        w_f: (b.b_wf_q * b.b_wf_r).clamp(1, s.w_f),
+        h_f: (b.b_hf_q * b.b_hf_r).clamp(1, s.h_f),
+        // strides collapse inside a tile whose r-blocks are 1
+        s_w: s.s_w.min(b.b_wf_r.max(1) * s.s_w).max(1),
+        s_h: s.s_h.min(b.b_hf_r.max(1) * s.s_h).max(1),
+    }
+}
+
+/// Block a layer for every level of the hierarchy, outermost level first
+/// internally, reported innermost first.
+pub fn hierarchical_blocking(
+    s: &ConvShape,
+    p: Precision,
+    h: &Hierarchy,
+) -> HierarchicalBlocking {
+    h.validate();
+    let mut levels_out: Vec<SeqBlocking> = Vec::new();
+    let mut traffic = Vec::new();
+    let mut problem = *s;
+    // whole-execution scaling: a level's boundary traffic is its
+    // per-sub-problem traffic times the number of enclosing outer tiles
+    let mut enclosing_tiles = 1.0;
+    // outermost (largest cache) first
+    for level in h.levels.iter().rev() {
+        let b = sequential_blocking(&problem, p, level.capacity_words);
+        let tiles = problem.updates() as f64 / b.updates_per_tile();
+        traffic.push(enclosing_tiles
+            * (tiles * b.footprint_words(p)
+                + p.p_o * problem.output_size() as f64));
+        let sub = tile_subproblem(&problem, &b);
+        levels_out.push(b);
+        enclosing_tiles *= tiles.max(1.0);
+        problem = sub;
+    }
+    levels_out.reverse();
+    traffic.reverse();
+    HierarchicalBlocking { levels: levels_out, traffic }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::hierarchy::per_level_bounds;
+    use crate::conv::resnet50_layers;
+
+    #[test]
+    fn every_level_fits_its_cache() {
+        let s = resnet50_layers(100)[1].shape;
+        let p = Precision::uniform();
+        let h = Hierarchy::typical_cpu();
+        let hb = hierarchical_blocking(&s, p, &h);
+        assert_eq!(hb.levels.len(), h.levels.len());
+        for (b, level) in hb.levels.iter().zip(&h.levels) {
+            assert!(
+                b.fits(p, level.capacity_words),
+                "blocking {b:?} does not fit {level:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn inner_traffic_exceeds_outer_traffic() {
+        // words crossing the L1 boundary >= words crossing the L3 boundary
+        let s = resnet50_layers(100)[1].shape;
+        let p = Precision::uniform();
+        let hb = hierarchical_blocking(&s, p, &Hierarchy::typical_cpu());
+        assert!(hb.traffic[0] >= hb.traffic[2] * 0.99, "{:?}", hb.traffic);
+    }
+
+    #[test]
+    fn traffic_respects_per_level_bounds_up_to_model_slack() {
+        // attainability sanity: the nested blocking's boundary traffic is
+        // within a constant factor of the per-level lower bound (outer
+        // levels see a sub-problem, so compare only the outermost level
+        // where problem == full layer)
+        let s = resnet50_layers(100)[3].shape;
+        let p = Precision::uniform();
+        let h = Hierarchy::typical_cpu();
+        let hb = hierarchical_blocking(&s, p, &h);
+        let bounds = per_level_bounds(&s, p, &h);
+        let outer = h.levels.len() - 1;
+        let ratio = hb.traffic[outer] / bounds[outer].max().max(1.0);
+        assert!(ratio >= 0.9, "traffic below bound?! ratio {ratio}");
+        assert!(ratio < 100.0, "blocking far from bound: ratio {ratio}");
+    }
+
+    #[test]
+    fn subproblem_shrinks() {
+        let s = resnet50_layers(64)[1].shape;
+        let b = sequential_blocking(&s, Precision::uniform(), 65536.0);
+        let sub = tile_subproblem(&s, &b);
+        assert!(sub.updates() <= s.updates());
+        assert!(sub.n <= s.n && sub.c_i <= s.c_i && sub.c_o <= s.c_o);
+    }
+}

@@ -1,0 +1,24 @@
+//! Attainability: the paper's blocking algorithms (§3.2, §4.2, §5).
+//!
+//! * [`seq_lp`] — the single-processor LP blocking with the small-filter
+//!   trick (paper eq. (6) and the 6×9 constraint matrix).
+//! * [`par_lp`] — the parallel processor-grid LP (§4.2). The paper's A
+//!   matrix is garbled in the published text; DESIGN.md documents the
+//!   reconstruction (minimize the maximum per-processor array slice subject
+//!   to the processor-count and memory constraints).
+//! * [`gemmini_opt`] — the §5 integral tile optimizer for the GEMMINI
+//!   scratchpad/accumulator geometry (replaces Mathematica's NMaximize).
+//! * [`vendor`] — a reimplementation of the vendor-supplied GEMMINI conv
+//!   tiling heuristic, the Figure 4 baseline.
+
+pub mod gemmini_opt;
+pub mod hierarchical;
+pub mod par_lp;
+pub mod seq_lp;
+pub mod vendor;
+
+pub use hierarchical::{hierarchical_blocking, HierarchicalBlocking};
+pub use gemmini_opt::{optimize_gemmini_tiling, GemminiTile, OptObjective, OptOptions};
+pub use par_lp::{parallel_blocking, ParBlocking};
+pub use seq_lp::{sequential_blocking, SeqBlocking};
+pub use vendor::vendor_tiling;

@@ -1,0 +1,215 @@
+//! Sequential LP blocking (paper §3.2).
+//!
+//! Blocking vector `B = (b_N, b_cI, b_cO, b_wO, b_hO, b_wF', b_hF', b_wF'',
+//! b_hF'')` using the small-filter trick of [6]: the filter loop `i6` is
+//! split as `i6 = σw·q6 + r6` with `q6 ∈ [0, wF/σw)`, `r6 ∈ [0, σw)` (and
+//! likewise `i7`), so `b_wF'` blocks `q6` and `b_wF''` blocks `r6`.
+//!
+//! In log-space `x = log_M B` we maximize `Σ x` (updates per tile) subject
+//! to the three memory constraints (6), with the input constraint's
+//! `(b_wO + b_wF')(b_hO + b_hF')` product expanded into four terms each
+//! bounded by `M/(4·p_T)`:
+//!
+//! ```text
+//! output:  b_N b_cO b_wO b_hO                         ≤ M/p_T
+//! filter:  b_cI b_cO b_wF' b_hF' b_wF'' b_hF''        ≤ M/p_T
+//! input:   b_N b_cI {b_wO,b_wF'}×{b_hO,b_hF'} b_wF'' b_hF''  ≤ M/(4p_T) each
+//! ```
+//!
+//! (The published matrix rows 3 and 5 contain two transposed entries — the
+//! expansion terms must each carry `b_wF''·b_hF''`, which the constraint
+//! derivation in the paper's own eq. (6) confirms; we use the corrected
+//! rows and note this in DESIGN.md.)
+
+use crate::conv::{ConvShape, Precision};
+use crate::lp::{self, Constraint, Objective, Rel};
+
+/// The nine block sizes (integral, post-rounding), plus diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqBlocking {
+    pub b_n: u64,
+    pub b_ci: u64,
+    pub b_co: u64,
+    pub b_wo: u64,
+    pub b_ho: u64,
+    /// block of q6 ∈ [0, ceil(wF/σw))
+    pub b_wf_q: u64,
+    /// block of q7
+    pub b_hf_q: u64,
+    /// block of r6 ∈ [0, σw)
+    pub b_wf_r: u64,
+    /// block of r7
+    pub b_hf_r: u64,
+    /// raw (continuous) LP solution in log_M space
+    pub lp_x: Vec<f64>,
+}
+
+impl SeqBlocking {
+    /// Updates per tile: the product of all nine block sizes.
+    pub fn updates_per_tile(&self) -> f64 {
+        (self.b_n * self.b_ci * self.b_co * self.b_wo * self.b_ho
+            * self.b_wf_q * self.b_hf_q * self.b_wf_r * self.b_hf_r) as f64
+    }
+
+    /// Words of fast memory the three blocks occupy simultaneously
+    /// (un-expanded input term, i.e. the true constraint (6) lhs).
+    pub fn footprint_words(&self, p: Precision) -> f64 {
+        p.p_o * (self.b_n * self.b_co * self.b_wo * self.b_ho) as f64
+            + p.p_f
+                * (self.b_ci * self.b_co * self.b_wf_q * self.b_hf_q
+                    * self.b_wf_r * self.b_hf_r) as f64
+            + p.p_i
+                * (self.b_n * self.b_ci) as f64
+                * ((self.b_wo + self.b_wf_q) * (self.b_ho + self.b_hf_q)
+                    * self.b_wf_r * self.b_hf_r) as f64
+    }
+
+    /// Does the blocking fit in `m` words of fast memory?
+    pub fn fits(&self, p: Precision, m: f64) -> bool {
+        self.footprint_words(p) <= m
+    }
+}
+
+/// Upper bounds (ranges) of the nine blocked loops for a shape.
+fn ranges(s: &ConvShape) -> [u64; 9] {
+    let qw = (s.w_f + s.s_w - 1) / s.s_w; // ceil(wF/σw)
+    let qh = (s.h_f + s.s_h - 1) / s.s_h;
+    [s.n, s.c_i, s.c_o, s.w_o, s.h_o, qw, qh, s.s_w, s.s_h]
+}
+
+/// Solve the §3.2 LP and round to a feasible integral blocking.
+pub fn sequential_blocking(s: &ConvShape, p: Precision, m: f64) -> SeqBlocking {
+    assert!(m >= p.total() * 4.0, "memory too small for any tile");
+    let r = ranges(s);
+    let ln_m = m.ln();
+    // log_M helpers
+    let lg = |v: f64| v.ln() / ln_m;
+
+    // constraint rows over x = log_M B (9 vars)
+    let rows_a: [[f64; 9]; 6] = [
+        [1., 0., 1., 1., 1., 0., 0., 0., 0.], // output
+        [0., 1., 1., 0., 0., 1., 1., 1., 1.], // filter
+        [1., 1., 0., 1., 1., 0., 0., 1., 1.], // input: bwO·bhO term
+        [1., 1., 0., 1., 0., 0., 1., 1., 1.], // input: bwO·bhF' term
+        [1., 1., 0., 0., 1., 1., 0., 1., 1.], // input: bwF'·bhO term
+        [1., 1., 0., 0., 0., 1., 1., 1., 1.], // input: bwF'·bhF' term
+    ];
+    let p_t = p.total();
+    let b_rhs = [
+        1.0 - lg(p_t),
+        1.0 - lg(p_t),
+        1.0 - lg(4.0 * p_t),
+        1.0 - lg(4.0 * p_t),
+        1.0 - lg(4.0 * p_t),
+        1.0 - lg(4.0 * p_t),
+    ];
+
+    let mut cons: Vec<Constraint<f64>> = rows_a
+        .iter()
+        .zip(b_rhs)
+        .map(|(row, rhs)| Constraint { coeffs: row.to_vec(), rel: Rel::Le, rhs })
+        .collect();
+    // per-variable upper bounds x_i <= log_M(range_i)
+    for (i, &ri) in r.iter().enumerate() {
+        let mut coeffs = vec![0.0; 9];
+        coeffs[i] = 1.0;
+        cons.push(Constraint { coeffs, rel: Rel::Le, rhs: lg(ri.max(1) as f64) });
+    }
+
+    let c = vec![1.0; 9];
+    let sol = lp::solve(Objective::Maximize, &c, &cons)
+        .optimal()
+        .expect("sequential blocking LP must be feasible");
+    let x = sol.1;
+
+    // exponentiate + round down, clamp to [1, range]
+    let mut b: Vec<u64> = x
+        .iter()
+        .zip(r.iter())
+        .map(|(&xi, &ri)| (m.powf(xi).floor() as u64).clamp(1, ri.max(1)))
+        .collect();
+
+    // feasibility repair on the true (un-expanded) constraint: shrink the
+    // largest block until the three tiles fit in M
+    let mk = |b: &[u64], x: &[f64]| SeqBlocking {
+        b_n: b[0], b_ci: b[1], b_co: b[2], b_wo: b[3], b_ho: b[4],
+        b_wf_q: b[5], b_hf_q: b[6], b_wf_r: b[7], b_hf_r: b[8],
+        lp_x: x.to_vec(),
+    };
+    let mut guard = 0;
+    while !mk(&b, &x).fits(p, m) {
+        let (imax, _) = b
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .expect("nonempty");
+        assert!(b[imax] > 1, "cannot shrink blocking to fit M={m}");
+        b[imax] = (b[imax] as f64 * 0.8).floor().max(1.0) as u64;
+        guard += 1;
+        assert!(guard < 512, "repair loop diverged");
+    }
+    mk(&b, &x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    #[test]
+    fn blocking_fits_memory_for_resnet_layers() {
+        let p = Precision::paper_mixed();
+        for l in resnet50_layers(1000) {
+            for m in [4096.0, 65536.0, 1048576.0] {
+                let b = sequential_blocking(&l.shape, p, m);
+                assert!(b.fits(p, m), "{} M={m}: {b:?}", l.name);
+                assert!(b.updates_per_tile() >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_respect_ranges() {
+        let s = resnet50_layers(100)[1].shape; // conv2_x
+        let b = sequential_blocking(&s, Precision::uniform(), 65536.0);
+        assert!(b.b_n <= s.n);
+        assert!(b.b_ci <= s.c_i && b.b_co <= s.c_o);
+        assert!(b.b_wo <= s.w_o && b.b_ho <= s.h_o);
+        assert!(b.b_wf_r <= s.s_w && b.b_hf_r <= s.s_h);
+        // stride 1: the r-blocks are exactly 1
+        assert_eq!(b.b_wf_r, 1);
+        assert_eq!(b.b_hf_r, 1);
+    }
+
+    #[test]
+    fn more_memory_more_updates_per_tile() {
+        let s = resnet50_layers(1000)[1].shape;
+        let p = Precision::uniform();
+        let small = sequential_blocking(&s, p, 4096.0).updates_per_tile();
+        let big = sequential_blocking(&s, p, 262144.0).updates_per_tile();
+        assert!(big > small * 4.0, "small={small} big={big}");
+    }
+
+    #[test]
+    fn strided_layer_uses_small_filter_split() {
+        // conv1: 7x7 stride 2 -> q-range = ceil(7/2) = 4, r-range = 2
+        let s = resnet50_layers(1000)[0].shape;
+        let r = super::ranges(&s);
+        assert_eq!(r[5], 4);
+        assert_eq!(r[7], 2);
+        let b = sequential_blocking(&s, Precision::uniform(), 65536.0);
+        assert!(b.b_wf_q <= 4 && b.b_wf_r <= 2);
+    }
+
+    #[test]
+    fn updates_per_tile_close_to_lp_ideal() {
+        // rounding loses at most a constant factor vs the continuous LP
+        let s = resnet50_layers(1000)[3].shape; // conv4_x: all dims composite
+        let p = Precision::uniform();
+        let m = 65536.0;
+        let b = sequential_blocking(&s, p, m);
+        let ideal: f64 = m.powf(b.lp_x.iter().sum::<f64>());
+        let got = b.updates_per_tile();
+        assert!(got > ideal / 64.0, "got={got} ideal={ideal}");
+    }
+}

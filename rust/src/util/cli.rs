@@ -1,0 +1,116 @@
+//! Tiny argv parser (clap is not vendored offline).
+//!
+//! Grammar: `convbound <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argv entries (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("fig2 conv1 conv2");
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.positional, vec!["conv1", "conv2"]);
+    }
+
+    #[test]
+    fn options_with_value() {
+        let a = parse("fig4 --batch 1000 --layer=conv1");
+        assert_eq!(a.opt_u64("batch", 1), 1000);
+        assert_eq!(a.opt("layer"), Some("conv1"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("fig4 --claims --batch 10");
+        assert!(a.flag("claims"));
+        assert!(!a.flag("nope"));
+        assert_eq!(a.opt_u64("batch", 1), 10);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.opt_u64("missing", 7), 7);
+        assert_eq!(a.opt_str("missing", "x"), "x");
+        assert_eq!(a.opt_f64("missing", 1.5), 1.5);
+    }
+}

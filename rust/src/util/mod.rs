@@ -1,0 +1,87 @@
+//! In-tree substrates for the offline build: JSON, CLI parsing, RNG,
+//! thread pool, and summary statistics.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Integer ceil-division (used everywhere tile counts are computed).
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+/// All divisors of `n` in ascending order (tile-size candidate sets).
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n > 0);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_inexact() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(0, 7), 0);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(12, 4), 12);
+        assert_eq!(round_up(0, 3), 0);
+    }
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn divisors_of_prime() {
+        assert_eq!(divisors(13), vec![1, 13]);
+    }
+
+    #[test]
+    fn divisors_of_square() {
+        assert_eq!(divisors(36), vec![1, 2, 3, 4, 6, 9, 12, 18, 36]);
+    }
+
+    #[test]
+    fn divisors_are_sorted_and_divide() {
+        for n in 1..200u64 {
+            let ds = divisors(n);
+            assert!(ds.windows(2).all(|w| w[0] < w[1]));
+            assert!(ds.iter().all(|d| n % d == 0));
+            assert_eq!(ds.first(), Some(&1));
+            assert_eq!(ds.last(), Some(&n));
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration: the L3 coordinator — batching server over the PJRT
+//! runtime, numerics validated per request against the naive oracle.
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::time::Duration;
+
+use convbound::conv::{conv7nl_naive, ConvShape, Tensor4};
+use convbound::coordinator::ConvServer;
+use convbound::runtime::Manifest;
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+fn layer_spec() -> Option<(convbound::runtime::ArtifactSpec, ConvShape)> {
+    let m = Manifest::load(artifact_dir().join("manifest.json")).ok()?;
+    let spec = m.find("unit3x3/blocked")?.clone();
+    let i = &spec.inputs[0];
+    let f = &spec.inputs[1];
+    let o = &spec.output;
+    let shape = ConvShape::new(
+        1, f[0] as u64, f[1] as u64, o[2] as u64, o[3] as u64,
+        f[2] as u64, f[3] as u64,
+        ((i[2] - f[2]) / o[2]) as u64,
+        ((i[3] - f[3]) / o[3]) as u64,
+    );
+    Some((spec, shape))
+}
+
+#[test]
+fn server_answers_correctly_and_batches() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let (spec, shape) = layer_spec().expect("unit3x3 artifact");
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 77);
+    let server = ConvServer::start(
+        artifact_dir(), "unit3x3/blocked", weights.clone(), Duration::from_millis(5),
+    )
+    .expect("server start");
+    assert_eq!(server.batch_size(), xd[0]);
+
+    // submit an uneven number of requests (forces a padded final batch)
+    let n_req = xd[0] * 2 + 1;
+    let images: Vec<Tensor4> = (0..n_req)
+        .map(|i| Tensor4::randn([1, xd[1], xd[2], xd[3]], 900 + i as u64))
+        .collect();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("submit"))
+        .collect();
+
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx.recv().expect("response");
+        // oracle on the single image
+        let want = conv7nl_naive(img, &weights, &shape);
+        let rel = resp.output.rel_l2(&want);
+        assert!(rel < 1e-5, "request: rel_l2 {rel}");
+        assert!(resp.latency.as_secs_f64() < 30.0);
+    }
+
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, n_req as u64);
+    assert!(stats.batches >= 3, "expected >= 3 batches, got {}", stats.batches);
+    assert!(stats.padded_slots >= 1, "uneven request count must pad");
+}
+
+#[test]
+fn server_rejects_bad_shapes() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let (spec, _) = layer_spec().expect("unit3x3 artifact");
+    let wd = spec.inputs[1].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 1);
+
+    // wrong weights shape fails at start
+    let bad_w = Tensor4::zeros([1, 1, 1, 1]);
+    assert!(ConvServer::start(
+        artifact_dir(), "unit3x3/blocked", bad_w, Duration::from_millis(1)
+    )
+    .is_err());
+
+    // wrong image shape fails at submit
+    let server = ConvServer::start(
+        artifact_dir(), "unit3x3/blocked", weights, Duration::from_millis(1),
+    )
+    .expect("server");
+    assert!(server.submit(Tensor4::zeros([1, 1, 2, 2])).is_err());
+
+    // unknown artifact fails at start
+    let wd2 = spec.inputs[1].clone();
+    let w2 = Tensor4::randn([wd2[0], wd2[1], wd2[2], wd2[3]], 2);
+    assert!(ConvServer::start(artifact_dir(), "nope/blocked", w2, Duration::from_millis(1)).is_err());
+}
+
+#[test]
+fn concurrent_submitters_all_served() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let (spec, _) = layer_spec().expect("unit3x3 artifact");
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 5);
+    let server = std::sync::Arc::new(
+        ConvServer::start(
+            artifact_dir(), "unit3x3/blocked", weights, Duration::from_millis(2),
+        )
+        .expect("server"),
+    );
+
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let server = std::sync::Arc::clone(&server);
+        let dims = [1, xd[1], xd[2], xd[3]];
+        handles.push(std::thread::spawn(move || {
+            for i in 0..8 {
+                let img = Tensor4::randn(dims, (t * 100 + i) as u64);
+                let rx = server.submit(img).expect("submit");
+                let resp = rx.recv().expect("response");
+                assert_eq!(resp.output.dims[0], 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker");
+    }
+    let server = std::sync::Arc::into_inner(server).expect("sole owner");
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, 32);
+}

@@ -1,0 +1,341 @@
+//! Property-based tests over the analysis stack (in-tree testkit; proptest
+//! is unavailable offline). Each property encodes a theorem-level invariant
+//! from the paper or a conservation law of the simulator.
+
+use convbound::bounds::{parallel_bound_terms, sequential_bound, sequential_bound_terms};
+use convbound::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
+use convbound::gemmini::{simulate_layer, GemminiConfig};
+use convbound::hbl::{lattice_closure, Mat, Subspace};
+use convbound::lp::{solve, Constraint, Objective, Rat, Rel};
+use convbound::testkit::{forall, forall_shrink, shrink_u64s, Config};
+use convbound::tiling::{
+    optimize_gemmini_tiling, parallel_blocking, sequential_blocking, vendor_tiling,
+    GemminiTile, OptOptions,
+};
+use convbound::util::rng::Rng;
+
+fn random_shape(r: &mut Rng) -> ConvShape {
+    // modest sizes with the paper's model assumptions enforced
+    let s_w = r.range(1, 3);
+    let s_h = r.range(1, 3);
+    let w_f = r.range(s_w, s_w + 4);
+    let h_f = r.range(s_h, s_h + 4);
+    let w_o = r.range((w_f + s_w - 1) / s_w, 24).max(1);
+    let h_o = r.range((h_f + s_h - 1) / s_h, 24).max(1);
+    ConvShape::new(
+        r.range(1, 16),
+        r.range(1, 48),
+        r.range(1, 48),
+        w_o,
+        h_o,
+        w_f,
+        h_f,
+        s_w,
+        s_h,
+    )
+}
+
+fn random_precision(r: &mut Rng) -> Precision {
+    let opts = [0.25, 0.5, 1.0, 2.0, 4.0];
+    Precision::new(*r.choose(&opts), *r.choose(&opts), *r.choose(&opts))
+}
+
+// ---------------- bounds ----------------
+
+#[test]
+fn prop_sequential_bound_monotone_in_memory() {
+    forall(
+        Config { cases: 120, seed: 11 },
+        |r| (random_shape(r), random_precision(r), r.range(64, 1 << 20) as f64),
+        |(s, p, m)| {
+            sequential_bound(s, *p, *m) >= sequential_bound(s, *p, m * 2.0) - 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_bound_at_least_compulsory_traffic() {
+    forall(
+        Config { cases: 120, seed: 12 },
+        |r| (random_shape(r), random_precision(r), r.range(64, 1 << 22) as f64),
+        |(s, p, m)| {
+            let t = sequential_bound_terms(s, *p, *m);
+            t.max() >= s.footprint_words(*p) - 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_bound_nonneg_and_decaying_in_p() {
+    forall(
+        Config { cases: 120, seed: 13 },
+        |r| (random_shape(r), random_precision(r), r.range(1, 12)),
+        |(s, p, logp)| {
+            let m = 4096.0;
+            let few = parallel_bound_terms(s, *p, (1u64 << logp) as f64, m).thm22();
+            let many = parallel_bound_terms(s, *p, (1u64 << (logp + 1)) as f64, m).thm22();
+            few >= 0.0 && many <= few + 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_cp_constant_cases() {
+    forall(
+        Config { cases: 200, seed: 14 },
+        |r| random_precision(r),
+        |p| {
+            let cp = p.c_p();
+            if p.triangle() {
+                (cp - p.total().powi(2) / 4.0).abs() < 1e-9
+            } else {
+                // C_p = p_j (p_k + p_l) < p_T²/4 never holds when triangle
+                // fails; also C_p must stay positive
+                cp > 0.0
+            }
+        },
+    );
+}
+
+// ---------------- HBL machinery ----------------
+
+#[test]
+fn prop_subspace_dimension_formula() {
+    // dim(U + W) + dim(U ∩ W) = dim U + dim W on random integer spans
+    forall(
+        Config { cases: 120, seed: 21 },
+        |r| {
+            let d = r.range(2, 5) as usize;
+            let rows_u: Vec<Vec<i128>> = (0..r.range(1, 3))
+                .map(|_| (0..d).map(|_| r.range(0, 4) as i128 - 2).collect())
+                .collect();
+            let rows_w: Vec<Vec<i128>> = (0..r.range(1, 3))
+                .map(|_| (0..d).map(|_| r.range(0, 4) as i128 - 2).collect())
+                .collect();
+            (d, rows_u, rows_w)
+        },
+        |(d, rows_u, rows_w)| {
+            let u = Subspace::span_int(*d, rows_u);
+            let w = Subspace::span_int(*d, rows_w);
+            u.sum(&w).rank() + u.intersect(&w).rank() == u.rank() + w.rank()
+        },
+    );
+}
+
+#[test]
+fn prop_image_rank_bounded() {
+    // rank(φ(H)) ≤ min(rank H, rank φ)
+    forall(
+        Config { cases: 120, seed: 22 },
+        |r| {
+            let d = r.range(2, 6) as usize;
+            let dj = r.range(1, d as u64) as usize;
+            let phi: Vec<Vec<i128>> = (0..dj)
+                .map(|_| (0..d).map(|_| r.range(0, 5) as i128 - 2).collect())
+                .collect();
+            let h: Vec<Vec<i128>> = (0..r.range(1, 3))
+                .map(|_| (0..d).map(|_| r.range(0, 5) as i128 - 2).collect())
+                .collect();
+            (d, phi, h)
+        },
+        |(d, phi, h)| {
+            let phi_m = Mat::from_int_rows(phi);
+            let sub = Subspace::span_int(*d, h);
+            let img = sub.image(&phi_m);
+            img.rank() <= sub.rank() && img.rank() <= phi_m.rank()
+        },
+    );
+}
+
+#[test]
+fn prop_lattice_closure_is_closed_and_contains_seeds() {
+    forall(
+        Config { cases: 40, seed: 23 },
+        |r| {
+            let d = r.range(2, 4) as usize;
+            let seeds: Vec<Vec<Vec<i128>>> = (0..r.range(1, 3))
+                .map(|_| {
+                    (0..r.range(1, 2))
+                        .map(|_| (0..d).map(|_| r.range(0, 3) as i128 - 1).collect())
+                        .collect()
+                })
+                .collect();
+            (d, seeds)
+        },
+        |(d, seeds)| {
+            let subs: Vec<Subspace> =
+                seeds.iter().map(|rows| Subspace::span_int(*d, rows)).collect();
+            let lat = lattice_closure(&subs);
+            convbound::hbl::lattice::is_closed(&lat)
+                && subs.iter().filter(|s| !s.is_zero()).all(|s| lat.contains(s))
+        },
+    );
+}
+
+// ---------------- LP ----------------
+
+#[test]
+fn prop_simplex_solution_feasible_and_certified() {
+    // random small LPs with box constraints are always feasible/bounded;
+    // the returned x must satisfy every constraint and the objective value
+    // must match c·x exactly (rational arithmetic)
+    forall(
+        Config { cases: 80, seed: 31 },
+        |r| {
+            let n = r.range(2, 4) as usize;
+            let m = r.range(1, 4) as usize;
+            let c: Vec<i128> = (0..n).map(|_| r.range(0, 5) as i128).collect();
+            let rows: Vec<(Vec<i128>, i128)> = (0..m)
+                .map(|_| {
+                    ((0..n).map(|_| r.range(0, 4) as i128).collect(), r.range(1, 20) as i128)
+                })
+                .collect();
+            (n, c, rows)
+        },
+        |(n, c, rows)| {
+            let mut cons: Vec<Constraint<Rat>> = rows
+                .iter()
+                .map(|(coef, b)| Constraint {
+                    coeffs: coef.iter().map(|&v| Rat::int(v)).collect(),
+                    rel: Rel::Le,
+                    rhs: Rat::int(*b),
+                })
+                .collect();
+            for i in 0..*n {
+                let mut co = vec![Rat::ZERO; *n];
+                co[i] = Rat::ONE;
+                cons.push(Constraint { coeffs: co, rel: Rel::Le, rhs: Rat::int(50) });
+            }
+            let obj: Vec<Rat> = c.iter().map(|&v| Rat::int(v)).collect();
+            match solve(Objective::Maximize, &obj, &cons) {
+                convbound::lp::LpResult::Optimal { value, x } => {
+                    let feasible = cons.iter().all(|con| {
+                        let lhs = con
+                            .coeffs
+                            .iter()
+                            .zip(&x)
+                            .fold(Rat::ZERO, |a, (c, xi)| a + *c * *xi);
+                        lhs <= con.rhs
+                    });
+                    let cx = obj.iter().zip(&x).fold(Rat::ZERO, |a, (c, xi)| a + *c * *xi);
+                    feasible && cx == value && x.iter().all(|xi| !xi.is_neg())
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+// ---------------- tilings ----------------
+
+#[test]
+fn prop_sequential_blocking_always_fits() {
+    forall(
+        Config { cases: 60, seed: 41 },
+        |r| {
+            let s = random_shape(r);
+            let p = random_precision(r);
+            let m = r.range(1 << 10, 1 << 20) as f64;
+            (s, p, m)
+        },
+        |(s, p, m)| {
+            let b = sequential_blocking(s, *p, *m);
+            b.fits(*p, *m) && b.updates_per_tile() >= 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_blocking_respects_processors_and_ranges() {
+    forall(
+        Config { cases: 60, seed: 42 },
+        |r| (random_shape(r), random_precision(r), 1u64 << r.range(0, 12)),
+        |(s, p, procs)| {
+            let b = parallel_blocking(s, *p, *procs, 1e12);
+            let ranges = [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f];
+            b.procs_used <= *procs
+                && b.slices.iter().zip(ranges).all(|(&sl, rg)| sl >= 1 && sl <= rg.max(1))
+        },
+    );
+}
+
+#[test]
+fn prop_gemmini_tiles_fit_and_optimizer_dominates_vendor_updates() {
+    let cfg = GemminiConfig::default();
+    forall(
+        Config { cases: 40, seed: 43 },
+        |r| random_shape(r),
+        |s| {
+            let ours = optimize_gemmini_tiling(s, &cfg, OptOptions::default());
+            let vend = vendor_tiling(s, &cfg);
+            let upd = |t: &GemminiTile| t.b_n * t.b_ci * t.b_co * t.b_wo * t.b_ho;
+            ours.fits(s, &cfg) && vend.fits(s, &cfg) && upd(&ours) >= upd(&vend)
+        },
+    );
+}
+
+// ---------------- simulator conservation ----------------
+
+#[test]
+fn prop_sim_mac_conservation_and_comm_floor() {
+    let cfg = GemminiConfig::default();
+    forall_shrink(
+        Config { cases: 30, seed: 51 },
+        |r| {
+            let s = random_shape(r);
+            vec![s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h]
+        },
+        |v| {
+            let s = ConvShape::new(v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7], v[8]);
+            if !s.paper_assumptions_hold() {
+                return true; // generator guard after shrinking
+            }
+            let tile = optimize_gemmini_tiling(&s, &cfg, OptOptions::default());
+            let res = simulate_layer(&s, &cfg, &tile);
+            // every update executed exactly once; communication covers at
+            // least one write of every output row
+            res.macs == s.updates()
+                && res.comm_rows
+                    >= s.n * s.w_o * s.h_o * ((s.c_o + 15) / 16)
+        },
+        |v: &Vec<u64>| shrink_u64s(v),
+    );
+}
+
+// ---------------- naive conv oracle ----------------
+
+#[test]
+fn prop_conv_linear_in_input() {
+    // conv(a·x, w) = a·conv(x, w)
+    forall(
+        Config { cases: 20, seed: 61 },
+        |r| {
+            let s = ConvShape::new(
+                r.range(1, 3), r.range(1, 4), r.range(1, 4),
+                r.range(2, 6), r.range(2, 6), r.range(1, 3), r.range(1, 3), 1, 1,
+            );
+            (s, r.range(0, 1000))
+        },
+        |(s, seed)| {
+            let x = Tensor4::randn(
+                [s.n as usize, s.c_i as usize, s.in_w() as usize, s.in_h() as usize],
+                *seed,
+            );
+            let w = Tensor4::randn(
+                [s.c_i as usize, s.c_o as usize, s.w_f as usize, s.h_f as usize],
+                seed + 1,
+            );
+            let mut x2 = x.clone();
+            for v in x2.data.iter_mut() {
+                *v *= 2.0;
+            }
+            let a = conv7nl_naive(&x, &w, s);
+            let b = conv7nl_naive(&x2, &w, s);
+            let mut a2 = a.clone();
+            for v in a2.data.iter_mut() {
+                *v *= 2.0;
+            }
+            a2.max_abs_diff(&b) < 1e-3
+        },
+    );
+}

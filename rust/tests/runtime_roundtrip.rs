@@ -1,0 +1,268 @@
+//! Integration: the full AOT bridge.
+//!
+//! python/compile/aot.py lowered JAX+Pallas convolutions to HLO text; here
+//! the Rust PJRT CPU client loads, compiles and executes every artifact and
+//! the numerics are validated against the crate's own naive 7NL CNN oracle.
+//!
+//! Requires `make artifacts` to have run (skipped with a message otherwise).
+
+use convbound::conv::{conv7nl_naive, ConvShape, Tensor4};
+use convbound::runtime::Runtime;
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+/// Recover the ConvShape of a single-layer artifact from its manifest entry
+/// (input is paper-convention sized: WI = σw·wO + wF).
+fn shape_of(spec: &convbound::runtime::ArtifactSpec) -> ConvShape {
+    let i = &spec.inputs[0];
+    let f = &spec.inputs[1];
+    let o = &spec.output;
+    ConvShape::new(
+        o[0] as u64, f[0] as u64, f[1] as u64, o[2] as u64, o[3] as u64,
+        f[2] as u64, f[3] as u64,
+        ((i[2] - f[2]) / o[2]) as u64,
+        ((i[3] - f[3]) / o[3]) as u64,
+    )
+}
+
+#[test]
+fn every_single_layer_artifact_matches_naive_oracle() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    let platform = rt.platform().to_lowercase();
+    assert!(
+        platform.contains("cpu") || platform.contains("host"),
+        "unexpected platform {platform}"
+    );
+
+    let layer_keys: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "blocked" || a.kind == "im2col")
+        .map(|a| a.key())
+        .collect();
+    assert!(layer_keys.len() >= 4, "expected several layer artifacts");
+
+    for key in layer_keys {
+        let spec = rt.manifest().find(&key).unwrap().clone();
+        let shape = shape_of(&spec);
+        let xd = spec.inputs[0].clone();
+        let wd = spec.inputs[1].clone();
+        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 7);
+        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 8);
+
+        let got = rt.run_loading(&key, &[&x, &w]).expect(&key);
+        let want = conv7nl_naive(&x, &w, &shape);
+
+        let rel = got.rel_l2(&want);
+        assert!(
+            rel < 1e-5,
+            "{key}: rel L2 error {rel} vs naive oracle (shape {shape})"
+        );
+    }
+}
+
+#[test]
+fn blocked_and_im2col_agree_with_each_other() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    let names: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "blocked")
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(!names.is_empty());
+    for name in names {
+        let spec = rt.manifest().find(&format!("{name}/blocked")).unwrap().clone();
+        let xd = spec.inputs[0].clone();
+        let wd = spec.inputs[1].clone();
+        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 21);
+        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 22);
+        let a = rt.run_loading(&format!("{name}/blocked"), &[&x, &w]).unwrap();
+        let b = rt.run_loading(&format!("{name}/im2col"), &[&x, &w]).unwrap();
+        let rel = a.rel_l2(&b);
+        assert!(rel < 1e-5, "{name}: blocked vs im2col rel_l2={rel}");
+    }
+}
+
+#[test]
+fn gradient_artifacts_match_naive_oracles() {
+    use convbound::conv::{dfilter_naive, dinput_naive};
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    let fwd = match rt.manifest().find("unit3x3/blocked") {
+        Some(s) => s.clone(),
+        None => return,
+    };
+    let shape = shape_of(&fwd);
+
+    // dFilter: inputs (x, dOut) -> dF
+    if rt.manifest().find("unit3x3/dfilter").is_some() {
+        let spec = rt.manifest().find("unit3x3/dfilter").unwrap().clone();
+        let xd = spec.inputs[0].clone();
+        let gd = spec.inputs[1].clone();
+        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 31);
+        let g = Tensor4::randn([gd[0], gd[1], gd[2], gd[3]], 32);
+        let full_batch_shape = convbound::conv::ConvShape {
+            n: xd[0] as u64, ..shape
+        };
+        let got = rt.run_loading("unit3x3/dfilter", &[&x, &g]).expect("dfilter");
+        let want = dfilter_naive(&x, &g, &full_batch_shape);
+        let rel = got.rel_l2(&want);
+        assert!(rel < 1e-5, "dfilter rel_l2 {rel}");
+    } else {
+        eprintln!("SKIP dfilter: artifact absent (regenerate artifacts)");
+    }
+
+    // dInput: inputs (dOut, w) -> dIn
+    if rt.manifest().find("unit3x3/dinput").is_some() {
+        let spec = rt.manifest().find("unit3x3/dinput").unwrap().clone();
+        let gd = spec.inputs[0].clone();
+        let wd = spec.inputs[1].clone();
+        let od = spec.output.clone();
+        let g = Tensor4::randn([gd[0], gd[1], gd[2], gd[3]], 33);
+        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 34);
+        let full_batch_shape = convbound::conv::ConvShape {
+            n: gd[0] as u64, ..shape
+        };
+        let got = rt.run_loading("unit3x3/dinput", &[&g, &w]).expect("dinput");
+        let want = dinput_naive(&g, &w, &full_batch_shape, od[2], od[3]);
+        let rel = got.rel_l2(&want);
+        assert!(rel < 1e-5, "dinput rel_l2 {rel}");
+    } else {
+        eprintln!("SKIP dinput: artifact absent (regenerate artifacts)");
+    }
+}
+
+#[test]
+fn runtime_failure_injection() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    // unknown artifact key
+    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    assert!(rt.load("missing/kind").is_err());
+
+    // run before load
+    assert!(rt.run("unit3x3/blocked", &[]).is_err());
+
+    // wrong input count and wrong shapes
+    let spec = rt.manifest().find("unit3x3/blocked").unwrap().clone();
+    rt.load("unit3x3/blocked").unwrap();
+    let xd = spec.inputs[0].clone();
+    let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 1);
+    assert!(rt.run("unit3x3/blocked", &[&x]).is_err(), "one input must fail");
+    let bad = Tensor4::zeros([1, 1, 1, 1]);
+    assert!(rt.run("unit3x3/blocked", &[&x, &bad]).is_err(), "bad filter shape");
+
+    // nonexistent artifact dir
+    assert!(Runtime::new("/nonexistent/path").is_err());
+
+    // corrupt manifest
+    let dir = std::env::temp_dir().join("convbound_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Runtime::new(&dir).is_err());
+
+    // manifest pointing at a missing HLO file
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"batch": 1, "artifacts": [{"name": "ghost", "kind": "blocked",
+            "path": "ghost.hlo.txt", "inputs": [[1,1,3,3],[1,1,1,1]],
+            "output": [1,1,3,3], "updates": 9}]}"#,
+    )
+    .unwrap();
+    let mut rt2 = Runtime::new(&dir).expect("manifest parses");
+    assert!(rt2.load("ghost/blocked").is_err(), "missing HLO file must fail");
+
+    // garbage HLO text
+    std::fs::write(dir.join("ghost.hlo.txt"), "this is not HLO").unwrap();
+    assert!(rt2.load("ghost/blocked").is_err(), "unparsable HLO must fail");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Zero-pad a tensor's spatial dims up to (tw, th).
+fn pad_spatial(t: &Tensor4, tw: usize, th: usize) -> Tensor4 {
+    assert!(tw >= t.dims[2] && th >= t.dims[3]);
+    let mut out = Tensor4::zeros([t.dims[0], t.dims[1], tw, th]);
+    for a in 0..t.dims[0] {
+        for b in 0..t.dims[1] {
+            for c in 0..t.dims[2] {
+                for d in 0..t.dims[3] {
+                    *out.at_mut(a, b, c, d) = t.at(a, b, c, d);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn network_artifact_matches_layerwise_oracle() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    let spec = match rt.manifest().find("tiny_resnet/network") {
+        Some(s) => s.clone(),
+        None => {
+            eprintln!("SKIP: no network artifact");
+            return;
+        }
+    };
+    let batch = spec.inputs[0][0] as u64;
+    // tiny_resnet geometry — must mirror model.tiny_resnet_specs()
+    let layers = [
+        ConvShape::new(batch, 3, 12, 15, 15, 5, 5, 2, 2),
+        ConvShape::new(batch, 12, 16, 12, 12, 3, 3, 1, 1),
+        ConvShape::new(batch, 16, 32, 5, 5, 3, 3, 2, 2),
+    ];
+    assert_eq!(spec.inputs.len(), 1 + layers.len());
+
+    let tensors: Vec<Tensor4> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 100 + i as u64))
+        .collect();
+    let refs: Vec<&Tensor4> = tensors.iter().collect();
+    let out = rt.run_loading("tiny_resnet/network", &refs).expect("network run");
+    assert_eq!(out.dims.to_vec(), spec.output);
+
+    // layerwise oracle: pad-to-input -> conv -> relu, mirroring model.py
+    let mut act = tensors[0].clone();
+    for (li, shape) in layers.iter().enumerate() {
+        let want_w = shape.in_w() as usize;
+        let want_h = shape.in_h() as usize;
+        if act.dims[2] < want_w || act.dims[3] < want_h {
+            act = pad_spatial(&act, want_w, want_h);
+        }
+        let w = &tensors[1 + li];
+        act = conv7nl_naive(&act, w, shape);
+        for v in act.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    let rel = out.rel_l2(&act);
+    assert!(rel < 1e-4, "network vs layerwise oracle rel_l2={rel}");
+}
