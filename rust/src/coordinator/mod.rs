@@ -2,11 +2,13 @@
 //!
 //! The paper's contribution is analysis + tiling, so the coordinator is the
 //! thin-but-real driver the stack needs: a [`server::ConvServer`] that owns
-//! the PJRT runtime on a dedicated executor thread, batches single-image
-//! requests up to the artifact's compiled batch size, executes, and streams
-//! responses back — Python never on this path — plus a [`plan::Planner`]
-//! that assigns every layer its communication-optimal blocking (LP tiling,
-//! GEMMINI tile, bound diagnostics) ahead of execution.
+//! an execution runtime (any [`crate::runtime::ExecBackend`] — native by
+//! default, PJRT behind the `pjrt` feature) on a dedicated executor thread,
+//! batches single-image requests up to the artifact's compiled batch size,
+//! executes, and streams responses back — Python never on this path — plus
+//! a [`plan::Planner`] that assigns every layer its communication-optimal
+//! blocking (LP tiling, GEMMINI tile, bound diagnostics) ahead of
+//! execution.
 
 pub mod plan;
 pub mod server;

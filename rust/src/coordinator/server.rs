@@ -1,26 +1,31 @@
-//! Batched convolution serving over the PJRT runtime.
+//! Batched convolution serving over the execution runtime.
 //!
-//! Architecture (single executor thread — PJRT handles are not `Send`-safe
-//! to share, so the runtime lives on its own thread and requests flow
-//! through channels):
+//! Architecture (single executor thread — backend handles are not
+//! guaranteed `Send` (PJRT's are not), so the runtime lives on its own
+//! thread and requests flow through channels):
 //!
 //! ```text
-//! clients ── submit(image) ──► queue ──► batcher (size N, timeout) ──► PJRT
-//!     ◄── per-request channel ◄── splitter ◄── output batch ◄──────────┘
+//! clients ── submit(image) ──► queue ──► batcher (size N, timeout) ──► backend
+//!     ◄── per-request channel ◄── splitter ◄── output batch ◄────────────┘
 //! ```
 //!
 //! Short batches (queue drained before N images arrived) are zero-padded;
 //! padded slots are tracked in [`ServerStats`] since they waste MACs — the
 //! batcher exists precisely to amortize the artifact's fixed batch size.
+//!
+//! With the default native backend a server needs no artifacts at all:
+//! [`ConvServer::start_builtin`] serves the synthetic
+//! [`Manifest::builtin`] layers end to end.
 
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
 use crate::conv::Tensor4;
-use crate::runtime::Runtime;
+use crate::err;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::error::Result;
 
 /// A finished request.
 #[derive(Debug)]
@@ -53,6 +58,34 @@ pub struct ServerStats {
     pub total_exec_secs: f64,
 }
 
+/// Where the executor thread gets its runtime. Backend handles may not be
+/// `Send`, so only this description crosses into the thread; the runtime is
+/// constructed there.
+enum Source {
+    Dir(PathBuf),
+    Builtin,
+}
+
+impl Source {
+    fn manifest(&self) -> Result<Manifest> {
+        match self {
+            Source::Dir(d) => Manifest::load(d.join("manifest.json")),
+            // the same constant Runtime::builtin uses, so the shapes
+            // validated here are exactly the shapes the executor runs
+            Source::Builtin => {
+                Ok(Manifest::builtin(crate::runtime::manifest::BUILTIN_BATCH))
+            }
+        }
+    }
+
+    fn runtime(&self) -> Result<Runtime> {
+        match self {
+            Source::Dir(d) => Runtime::new(d),
+            Source::Builtin => Ok(Runtime::builtin()),
+        }
+    }
+}
+
 /// Handle to the executor thread.
 pub struct ConvServer {
     tx: mpsc::Sender<Msg>,
@@ -63,26 +96,50 @@ pub struct ConvServer {
 }
 
 impl ConvServer {
-    /// Start a server for one single-layer artifact `key`, with fixed
-    /// filter weights. `linger` bounds how long the batcher waits to fill
-    /// a batch once it holds at least one request.
+    /// Start a server for one single-layer artifact `key` from an artifact
+    /// directory, with fixed filter weights. `linger` bounds how long the
+    /// batcher waits to fill a batch once it holds at least one request.
     pub fn start(
-        artifact_dir: impl AsRef<std::path::Path>,
+        artifact_dir: impl AsRef<Path>,
         key: &str,
         weights: Tensor4,
         linger: Duration,
     ) -> Result<ConvServer> {
-        // Validate shapes from the manifest up front (plain JSON, Send-safe);
-        // the PJRT runtime itself is created *inside* the executor thread —
-        // its handles are not Send.
-        let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = crate::runtime::Manifest::load(dir.join("manifest.json"))?;
+        ConvServer::start_source(
+            Source::Dir(artifact_dir.as_ref().to_path_buf()),
+            key,
+            weights,
+            linger,
+        )
+    }
+
+    /// Start a server over the built-in native manifest — no artifact
+    /// directory required (keys: `unit3x3/blocked`, `unit3x3/im2col`,
+    /// `unit1x1/blocked`, `unit5x5/blocked`).
+    pub fn start_builtin(
+        key: &str,
+        weights: Tensor4,
+        linger: Duration,
+    ) -> Result<ConvServer> {
+        ConvServer::start_source(Source::Builtin, key, weights, linger)
+    }
+
+    fn start_source(
+        source: Source,
+        key: &str,
+        weights: Tensor4,
+        linger: Duration,
+    ) -> Result<ConvServer> {
+        // Validate shapes from the manifest up front (plain data,
+        // Send-safe); the runtime itself is created *inside* the executor
+        // thread — its backend handles may not be Send.
+        let manifest = source.manifest()?;
         let spec = manifest
             .find(key)
-            .ok_or_else(|| anyhow!("artifact '{key}' not found"))?
+            .ok_or_else(|| err!("artifact '{key}' not found"))?
             .clone();
         if spec.inputs.len() != 2 {
-            return Err(anyhow!("'{key}' is not a single-layer artifact"));
+            return Err(err!("'{key}' is not a single-layer artifact"));
         }
         let in_dims = {
             let d = &spec.inputs[0];
@@ -90,9 +147,10 @@ impl ConvServer {
         };
         let w_dims = &spec.inputs[1];
         if weights.dims.to_vec() != *w_dims {
-            return Err(anyhow!(
+            return Err(err!(
                 "weights shape {:?} != artifact filter {:?}",
-                weights.dims, w_dims
+                weights.dims,
+                w_dims
             ));
         }
         let key = key.to_string();
@@ -105,7 +163,7 @@ impl ConvServer {
             .name("convbound-executor".into())
             .spawn(move || -> Result<ServerStats> {
                 let rt = (|| -> Result<Runtime> {
-                    let mut rt = Runtime::new(&dir)?;
+                    let mut rt = source.runtime()?;
                     rt.load(&key)?;
                     Ok(rt)
                 })();
@@ -115,13 +173,19 @@ impl ConvServer {
                         rt
                     }
                     Err(e) => {
-                        let _ = ready_tx.send(Err(anyhow!("{e:#}")));
+                        let _ = ready_tx.send(Err(e.clone()));
                         return Err(e);
                     }
                 };
                 let mut stats = ServerStats::default();
                 let mut queue: Vec<Job> = Vec::with_capacity(batch);
-                loop {
+                // Set when a Stop arrives inside the linger window: the
+                // in-flight batch must still be flushed, then the executor
+                // exits. (A Stop that only broke batch assembly would leave
+                // the loop re-blocking on recv() while shutdown() joins with
+                // the sender still alive — a deadlock.)
+                let mut stopping = false;
+                while !stopping {
                     // block for the first job, then linger for the rest
                     let first = match rx.recv() {
                         Ok(Msg::Run(j)) => j,
@@ -133,9 +197,15 @@ impl ConvServer {
                         let left = deadline.saturating_duration_since(Instant::now());
                         match rx.recv_timeout(left) {
                             Ok(Msg::Run(j)) => queue.push(j),
-                            Ok(Msg::Stop) => break,
+                            Ok(Msg::Stop) => {
+                                stopping = true;
+                                break;
+                            }
                             Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                stopping = true;
+                                break;
+                            }
                         }
                     }
                     // assemble the batch (zero-padding the tail)
@@ -173,7 +243,7 @@ impl ConvServer {
         // surface compile/load failures synchronously
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("executor died during startup"))??;
+            .map_err(|_| err!("executor died during startup"))??;
 
         Ok(ConvServer {
             tx,
@@ -194,7 +264,7 @@ impl ConvServer {
     pub fn submit(&self, image: Tensor4) -> Result<mpsc::Receiver<ConvResponse>> {
         let want = [1, self.in_dims[1], self.in_dims[2], self.in_dims[3]];
         if image.dims != want {
-            return Err(anyhow!("image shape {:?} != {:?}", image.dims, want));
+            return Err(err!("image shape {:?} != {:?}", image.dims, want));
         }
         let id = self
             .next_id
@@ -202,15 +272,17 @@ impl ConvServer {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Run(Job { id, image, enqueued: Instant::now(), reply }))
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| err!("server stopped"))?;
         Ok(rx)
     }
 
-    /// Stop the executor and collect final statistics.
+    /// Stop the executor and collect final statistics. Returns promptly
+    /// even when the Stop lands inside the linger window: the executor
+    /// flushes the in-flight batch and exits.
     pub fn shutdown(mut self) -> Result<ServerStats> {
         let _ = self.tx.send(Msg::Stop);
         let handle = self.handle.take().expect("not yet joined");
-        handle.join().map_err(|_| anyhow!("executor panicked"))?
+        handle.join().map_err(|_| err!("executor panicked"))?
     }
 }
 
@@ -225,6 +297,7 @@ impl Drop for ConvServer {
 
 #[cfg(test)]
 mod tests {
-    // End-to-end server tests live in rust/tests/coordinator_e2e.rs (they
-    // need compiled artifacts).
+    // End-to-end server tests (including the shutdown-under-load
+    // regression) live in rust/tests/coordinator_e2e.rs; they run on the
+    // built-in native backend, no artifacts required.
 }

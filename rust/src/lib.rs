@@ -22,15 +22,18 @@
 //! * [`gemmini`] — a cycle-approximate simulator of the GEMMINI accelerator
 //!   (scratchpad / accumulator / double-buffered DMA / 16×16 systolic
 //!   array), the substrate for Figure 4.
-//! * [`runtime`] — the PJRT execution layer: loads `artifacts/*.hlo.txt`
-//!   (AOT-lowered JAX+Pallas convolutions) and runs them on the CPU client.
+//! * [`runtime`] — the execution layer behind a pluggable
+//!   [`runtime::ExecBackend`]: the default **native** backend runs conv
+//!   specs with in-tree kernels (zero setup, zero dependencies), while the
+//!   PJRT/XLA backend — loading `artifacts/*.hlo.txt`, AOT-lowered
+//!   JAX+Pallas convolutions — sits behind the `pjrt` cargo feature.
 //! * [`coordinator`] — the L3 runner: plans tilings per layer and drives
 //!   batched network execution across a thread pool.
 //! * [`conv`] — problem shapes, the ResNet-50 / AlexNet layer catalogs and a
 //!   native naive convolution used to validate the runtime end to end.
-//! * [`util`], [`testkit`], [`bench`] — in-tree substrates (JSON, CLI, RNG,
-//!   thread pool, stats; property testing; timing harness) for the fully
-//!   offline build environment.
+//! * [`util`], [`testkit`], [`bench`] — in-tree substrates (errors, JSON,
+//!   CLI, RNG, thread pool, stats; property testing; timing harness) for
+//!   the fully offline build environment.
 
 pub mod bench;
 pub mod bounds;

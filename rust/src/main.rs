@@ -7,7 +7,8 @@
 //! convbound fig3    --layer conv2_x ...     parallel comm volumes vs P
 //! convbound fig4    [--claims]              GEMMINI sim, ours vs vendor
 //! convbound plan    --layer conv4_x ...     full layer plan (blocking+tile)
-//! convbound serve   --key unit3x3/blocked   batched serving demo over PJRT
+//! convbound serve   --key unit3x3/blocked   batched serving demo (native
+//!                                           backend; PJRT with artifacts)
 //! ```
 
 use convbound::bounds::{parallel_bound_terms, sequential_bound_terms};
@@ -147,15 +148,26 @@ fn cmd_serve(args: &Args) {
     let dir = args.opt_str("artifacts", "artifacts").to_string();
     let key = args.opt_str("key", "unit3x3/blocked").to_string();
     let requests = args.opt_u64("requests", 32);
-    let manifest = convbound::runtime::Manifest::load(
-        std::path::Path::new(&dir).join("manifest.json"),
-    )
-    .expect("manifest (run `make artifacts`)");
+    let have_artifacts = std::path::Path::new(&dir).join("manifest.json").exists();
+    let manifest = if have_artifacts {
+        convbound::runtime::Manifest::load(
+            std::path::Path::new(&dir).join("manifest.json"),
+        )
+        .expect("manifest")
+    } else {
+        println!("no {dir}/manifest.json — serving over the built-in native backend");
+        convbound::runtime::Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH)
+    };
     let spec = manifest.find(&key).expect("artifact key").clone();
     let wd = &spec.inputs[1];
     let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 1);
-    let server = ConvServer::start(&dir, &key, weights, std::time::Duration::from_millis(2))
-        .expect("server start");
+    let linger = std::time::Duration::from_millis(2);
+    let server = if have_artifacts {
+        ConvServer::start(&dir, &key, weights, linger)
+    } else {
+        ConvServer::start_builtin(&key, weights, linger)
+    }
+    .expect("server start");
     let xd = &spec.inputs[0];
     let mut pending = Vec::new();
     let t0 = std::time::Instant::now();

@@ -1,0 +1,50 @@
+//! The pluggable execution backend: how artifacts are prepared and run,
+//! decoupled from the [`super::Runtime`]'s manifest/caching/validation
+//! logic.
+//!
+//! Two implementations exist:
+//!
+//! * [`super::native`] — the default: executes single-layer conv specs with
+//!   the crate's own kernels ([`crate::conv::naive`] and an im2col+GEMM
+//!   path), needs no artifact files, no Python, no external crates;
+//! * `super::pjrt` (cargo feature `pjrt`) — loads AOT-lowered HLO text and
+//!   executes it on the XLA PJRT CPU client, exactly as the original
+//!   three-layer stack did.
+//!
+//! The split mirrors the paper's own separation between the analytic tiling
+//! model and the execution substrate it drives: planners and servers talk
+//! to [`ExecBackend`], never to a concrete runtime.
+
+use std::path::Path;
+
+use crate::conv::Tensor4;
+use crate::util::error::Result;
+
+use super::manifest::ArtifactSpec;
+
+/// A prepared (compiled / lowered / specialized) artifact, ready to run.
+pub trait Executable {
+    /// Execute on host tensors and return the single output tensor.
+    ///
+    /// Callers must validate `inputs` against the artifact's manifest spec
+    /// first; [`super::LoadedArtifact::run`] does so and is the intended
+    /// entry point.
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4>;
+}
+
+/// An execution substrate that prepares artifacts for execution.
+pub trait ExecBackend {
+    /// Human-readable platform name (e.g. `"native-cpu"`, PJRT's `"Host"`).
+    fn platform(&self) -> String;
+
+    /// Prepare one artifact.
+    ///
+    /// `path` is the artifact's on-disk location when the runtime has a
+    /// backing directory; spec-driven backends (native) ignore it, while
+    /// file-based backends (PJRT) fail without it.
+    fn load(
+        &mut self,
+        spec: &ArtifactSpec,
+        path: Option<&Path>,
+    ) -> Result<Box<dyn Executable>>;
+}

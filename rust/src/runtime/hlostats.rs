@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Aggregate statistics of one HLO module.
 #[derive(Debug, Clone, Default, PartialEq)]

@@ -1,11 +1,19 @@
 //! Artifact manifest: the JSON index written by python/compile/aot.py
-//! describing every AOT-compiled HLO module's entry shapes.
+//! describing every AOT-compiled HLO module's entry shapes — plus
+//! [`Manifest::builtin`], a synthetic manifest of small single-layer conv
+//! specs that the native backend executes with no files on disk at all.
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::conv::ConvShape;
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+
+/// Batch size of [`Manifest::builtin`] as used by the zero-setup paths
+/// (`Runtime::builtin`, `ConvServer::start_builtin`) — one constant so the
+/// validator and the executor can never disagree.
+pub const BUILTIN_BATCH: u64 = 4;
 
 /// One artifact entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,6 +36,85 @@ impl ArtifactSpec {
     pub fn key(&self) -> String {
         format!("{}/{}", self.name, self.kind)
     }
+
+    /// Synthesize the spec of a single-layer conv artifact directly from a
+    /// paper-convention [`ConvShape`] (inputs: image then filter). The
+    /// `path` is a placeholder — spec-driven backends never read it.
+    pub fn for_layer(name: &str, kind: &str, s: &ConvShape) -> ArtifactSpec {
+        ArtifactSpec {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            path: format!("{name}_{kind}.hlo.txt"),
+            inputs: vec![
+                vec![
+                    s.n as usize,
+                    s.c_i as usize,
+                    s.in_w() as usize,
+                    s.in_h() as usize,
+                ],
+                vec![
+                    s.c_i as usize,
+                    s.c_o as usize,
+                    s.w_f as usize,
+                    s.h_f as usize,
+                ],
+            ],
+            output: vec![
+                s.n as usize,
+                s.c_o as usize,
+                s.w_o as usize,
+                s.h_o as usize,
+            ],
+            updates: s.updates(),
+        }
+    }
+
+    /// Recover the [`ConvShape`] a single-layer (image, filter) spec
+    /// encodes, under the paper's input convention `WI = σw·wO + wF`, and
+    /// validate that the spec is a consistent conv layer. This is the one
+    /// authoritative inversion — the native backend and the integration
+    /// tests all derive shapes through it.
+    pub fn layer_shape(&self) -> Result<ConvShape> {
+        if self.inputs.len() != 2 {
+            return Err(err!(
+                "'{}': expected (image, filter) inputs, got {}",
+                self.key(),
+                self.inputs.len()
+            ));
+        }
+        let (i, f, o) = (&self.inputs[0], &self.inputs[1], &self.output);
+        if i.len() != 4 || f.len() != 4 || o.len() != 4 {
+            return Err(err!("'{}': inputs and output must be rank 4", self.key()));
+        }
+        if o[2] == 0 || o[3] == 0 || i[2] < f[2] || i[3] < f[3] {
+            return Err(err!("'{}': inconsistent spatial dims", self.key()));
+        }
+        let s_w = (i[2] - f[2]) / o[2];
+        let s_h = (i[3] - f[3]) / o[3];
+        let s = ConvShape::new(
+            o[0] as u64,
+            f[0] as u64,
+            f[1] as u64,
+            o[2] as u64,
+            o[3] as u64,
+            f[2] as u64,
+            f[3] as u64,
+            s_w as u64,
+            s_h as u64,
+        );
+        let want_input = vec![o[0], f[0], s.in_w() as usize, s.in_h() as usize];
+        if s_w == 0 || s_h == 0 || *i != want_input || o[1] != f[1] {
+            return Err(err!(
+                "'{}': not a paper-convention conv layer (inputs {:?} / {:?}, \
+                 output {:?})",
+                self.key(),
+                i,
+                f,
+                o
+            ));
+        }
+        Ok(s)
+    }
 }
 
 /// The whole manifest.
@@ -44,26 +131,46 @@ impl Manifest {
         Manifest::parse(&text)
     }
 
+    /// The built-in synthetic manifest: small single-layer conv specs
+    /// (unit-stride 3×3 and 1×1, plus a strided 5×5) sized so the native
+    /// backend answers in well under a millisecond per batch. This is what
+    /// [`super::Runtime::builtin`] and the no-artifact serving path use.
+    pub fn builtin(batch: u64) -> Manifest {
+        assert!(batch >= 1);
+        let unit3x3 = ConvShape::new(batch, 8, 16, 12, 12, 3, 3, 1, 1);
+        let unit1x1 = ConvShape::new(batch, 16, 32, 14, 14, 1, 1, 1, 1);
+        let unit5x5 = ConvShape::new(batch, 3, 12, 6, 6, 5, 5, 2, 2);
+        Manifest {
+            batch: batch as usize,
+            artifacts: vec![
+                ArtifactSpec::for_layer("unit3x3", "blocked", &unit3x3),
+                ArtifactSpec::for_layer("unit3x3", "im2col", &unit3x3),
+                ArtifactSpec::for_layer("unit1x1", "blocked", &unit1x1),
+                ArtifactSpec::for_layer("unit5x5", "blocked", &unit5x5),
+            ],
+        }
+    }
+
     pub fn parse(text: &str) -> Result<Manifest> {
-        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let v = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
         let batch = v
             .get("batch")
             .as_u64()
-            .ok_or_else(|| anyhow!("manifest: missing 'batch'"))? as usize;
+            .ok_or_else(|| err!("manifest: missing 'batch'"))? as usize;
         let mut artifacts = Vec::new();
         for a in v
             .get("artifacts")
             .as_arr()
-            .ok_or_else(|| anyhow!("manifest: missing 'artifacts'"))?
+            .ok_or_else(|| err!("manifest: missing 'artifacts'"))?
         {
             let shape_list = |key: &str| -> Result<Vec<Vec<usize>>> {
                 a.get(key)
                     .as_arr()
-                    .ok_or_else(|| anyhow!("manifest: missing '{key}'"))?
+                    .ok_or_else(|| err!("manifest: missing '{key}'"))?
                     .iter()
                     .map(|s| {
                         s.as_arr()
-                            .ok_or_else(|| anyhow!("bad shape in '{key}'"))
+                            .ok_or_else(|| err!("bad shape in '{key}'"))
                             .map(|dims| {
                                 dims.iter()
                                     .map(|d| d.as_u64().unwrap_or(0) as usize)
@@ -76,23 +183,23 @@ impl Manifest {
                 name: a
                     .get("name")
                     .as_str()
-                    .ok_or_else(|| anyhow!("artifact missing 'name'"))?
+                    .ok_or_else(|| err!("artifact missing 'name'"))?
                     .to_string(),
                 kind: a
                     .get("kind")
                     .as_str()
-                    .ok_or_else(|| anyhow!("artifact missing 'kind'"))?
+                    .ok_or_else(|| err!("artifact missing 'kind'"))?
                     .to_string(),
                 path: a
                     .get("path")
                     .as_str()
-                    .ok_or_else(|| anyhow!("artifact missing 'path'"))?
+                    .ok_or_else(|| err!("artifact missing 'path'"))?
                     .to_string(),
                 inputs: shape_list("inputs")?,
                 output: a
                     .get("output")
                     .as_arr()
-                    .ok_or_else(|| anyhow!("artifact missing 'output'"))?
+                    .ok_or_else(|| err!("artifact missing 'output'"))?
                     .iter()
                     .map(|d| d.as_u64().unwrap_or(0) as usize)
                     .collect(),
@@ -165,6 +272,26 @@ mod tests {
             r#"{"batch": 1, "artifacts": [{"kind": "x"}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_is_well_formed() {
+        let m = Manifest::builtin(4);
+        assert_eq!(m.batch, 4);
+        assert!(m.find("unit3x3/blocked").is_some());
+        assert!(m.find("unit3x3/im2col").is_some());
+        assert!(m.find("unit1x1/blocked").is_some());
+        for a in &m.artifacts {
+            assert_eq!(a.inputs.len(), 2);
+            assert_eq!(a.output.len(), 4);
+            assert_eq!(a.inputs[0][0], 4, "batch dim");
+            assert!(a.updates > 0);
+        }
+        // keys are unique
+        let mut keys = m.keys();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), m.artifacts.len());
     }
 
     #[test]

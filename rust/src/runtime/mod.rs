@@ -1,86 +1,133 @@
-//! PJRT execution layer (L3 runtime).
+//! The execution layer (L3 runtime), behind a pluggable [`ExecBackend`].
 //!
-//! Loads AOT artifacts (`artifacts/*.hlo.txt`, produced once by
-//! `python/compile/aot.py`) and executes them on the PJRT CPU client through
-//! the `xla` crate. Python is never on this path.
+//! A [`Runtime`] owns a manifest of artifacts, a backend that prepares and
+//! runs them, and a cache of loaded executables. The default backend is
+//! [`native::NativeBackend`], which executes single-layer conv specs with
+//! the crate's own kernels — `cargo build` and every test work with no
+//! `artifacts/` directory, no Python and no external crates. The original
+//! PJRT/XLA path lives in `pjrt.rs` behind the `pjrt` cargo feature and
+//! slots in through the same trait.
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
-//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! Construction:
+//!
+//! * [`Runtime::new`] — artifact directory, default backend (native, or
+//!   PJRT when the `pjrt` feature is enabled);
+//! * [`Runtime::native`] — artifact directory, native backend regardless of
+//!   features;
+//! * [`Runtime::builtin`] — no directory at all: the synthetic
+//!   [`Manifest::builtin`] over the native backend;
+//! * [`Runtime::with_manifest`] / [`Runtime::with_backend`] — explicit
+//!   wiring for tests and future backends.
 
+pub mod backend;
 pub mod hlostats;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+pub use backend::{ExecBackend, Executable};
 pub use hlostats::{analyze_file, analyze_text, HloStats};
 pub use manifest::{ArtifactSpec, Manifest};
+pub use native::NativeBackend;
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::conv::Tensor4;
+use crate::err;
+use crate::util::error::{Context, Result};
 
-/// A compiled executable plus its IO metadata.
+/// A prepared executable plus its IO metadata.
 pub struct LoadedArtifact {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: Box<dyn Executable>,
 }
 
-/// The runtime: one PJRT client and a set of compiled artifacts.
+/// The runtime: one backend, a manifest, and the loaded-artifact cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+    backend: Box<dyn ExecBackend>,
+    /// Backing artifact directory; `None` for in-memory manifests.
+    dir: Option<PathBuf>,
     manifest: Manifest,
     loaded: HashMap<String, LoadedArtifact>,
 }
 
 impl Runtime {
-    /// Create a CPU runtime over an artifact directory (reads
-    /// `manifest.json`, compiles nothing yet).
+    /// Create a runtime over an artifact directory (reads `manifest.json`,
+    /// loads nothing yet) on the default backend: native, or PJRT when the
+    /// `pjrt` feature is enabled.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        let backend: Box<dyn ExecBackend> = Box::new(pjrt::PjrtBackend::new()?);
+        #[cfg(not(feature = "pjrt"))]
+        let backend: Box<dyn ExecBackend> = Box::new(NativeBackend::new());
+        Runtime::with_backend(artifact_dir, backend)
+    }
+
+    /// Artifact-directory runtime forced onto the native backend.
+    pub fn native(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Runtime::with_backend(artifact_dir, Box::new(NativeBackend::new()))
+    }
+
+    /// Fully in-memory native runtime over [`Manifest::builtin`] — works
+    /// with no artifact directory and no PJRT (the zero-setup path the e2e
+    /// tests, the serving benches and `convbound serve` use).
+    pub fn builtin() -> Runtime {
+        Runtime::with_manifest(
+            Manifest::builtin(manifest::BUILTIN_BATCH),
+            Box::new(NativeBackend::new()),
+        )
+    }
+
+    /// Runtime over an explicit manifest with no backing directory.
+    pub fn with_manifest(manifest: Manifest, backend: Box<dyn ExecBackend>) -> Runtime {
+        Runtime { backend, dir: None, manifest, loaded: HashMap::new() }
+    }
+
+    /// Runtime over `artifact_dir`'s `manifest.json` with an explicit
+    /// backend.
+    pub fn with_backend(
+        artifact_dir: impl AsRef<Path>,
+        backend: Box<dyn ExecBackend>,
+    ) -> Result<Runtime> {
         let dir = artifact_dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         let manifest = Manifest::load(dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        Ok(Runtime { client, dir, manifest, loaded: HashMap::new() })
+        Ok(Runtime { backend, dir: Some(dir), manifest, loaded: HashMap::new() })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile one artifact by key (`<name>/<kind>`), caching the result.
+    /// Prepare one artifact by key (`<name>/<kind>`), caching the result.
+    /// The freshly inserted entry is returned directly — no second hash
+    /// lookup on either the hit or the miss path.
     pub fn load(&mut self, key: &str) -> Result<&LoadedArtifact> {
-        if !self.loaded.contains_key(key) {
-            let spec = self
-                .manifest
-                .find(key)
-                .ok_or_else(|| anyhow!("artifact '{key}' not in manifest"))?
-                .clone();
-            let path = self.dir.join(&spec.path);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-            self.loaded.insert(key.to_string(), LoadedArtifact { spec, exe });
+        match self.loaded.entry(key.to_string()) {
+            Entry::Occupied(hit) => Ok(hit.into_mut()),
+            Entry::Vacant(slot) => {
+                let spec = self
+                    .manifest
+                    .find(key)
+                    .ok_or_else(|| err!("artifact '{key}' not in manifest"))?
+                    .clone();
+                let path = self.dir.as_ref().map(|d| d.join(&spec.path));
+                let exe = self.backend.load(&spec, path.as_deref())?;
+                Ok(slot.insert(LoadedArtifact { spec, exe }))
+            }
         }
-        Ok(&self.loaded[key])
     }
 
-    /// Compile every artifact in the manifest up front.
+    /// Prepare every artifact in the manifest up front.
     pub fn load_all(&mut self) -> Result<()> {
-        let keys: Vec<String> =
-            self.manifest.artifacts.iter().map(|a| a.key()).collect();
-        for k in keys {
+        for k in self.manifest.keys() {
             self.load(&k)?;
         }
         Ok(())
@@ -88,73 +135,86 @@ impl Runtime {
 
     /// Execute a loaded artifact on host tensors.
     ///
-    /// Input tensor shapes must match the manifest entry; the single tuple
-    /// output is unwrapped and returned as a [`Tensor4`].
+    /// Input tensor shapes must match the manifest entry; the output is
+    /// returned as a [`Tensor4`] of the manifest's output shape.
     pub fn run(&self, key: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
         let art = self
             .loaded
             .get(key)
-            .ok_or_else(|| anyhow!("artifact '{key}' not loaded"))?;
+            .ok_or_else(|| err!("artifact '{key}' not loaded"))?;
         art.run(inputs)
     }
 
-    /// `load` + `run` in one call.
+    /// `load` + `run` in one call, reusing the entry `load` returns.
     pub fn run_loading(&mut self, key: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
-        self.load(key)?;
-        self.run(key, inputs)
+        self.load(key)?.run(inputs)
     }
 }
 
 impl LoadedArtifact {
-    /// Execute with host tensors, validating shapes against the manifest.
+    /// Execute with host tensors, validating input and output shapes
+    /// against the manifest spec (backend-agnostic).
     pub fn run(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
         if inputs.len() != self.spec.inputs.len() {
-            return Err(anyhow!(
+            return Err(err!(
                 "artifact '{}' wants {} inputs, got {}",
-                self.spec.key(), self.spec.inputs.len(), inputs.len()
+                self.spec.key(),
+                self.spec.inputs.len(),
+                inputs.len()
             ));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, t) in inputs.iter().enumerate() {
             let want = &self.spec.inputs[i];
             let have: Vec<usize> = t.dims.to_vec();
             if &have != want {
-                return Err(anyhow!(
+                return Err(err!(
                     "artifact '{}' input {i}: shape {have:?} != manifest {want:?}",
                     self.spec.key()
                 ));
             }
-            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&t.data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
-            literals.push(lit);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute '{}': {e:?}", self.spec.key()))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: the output is a 1-tuple.
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let data = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("result to_vec: {e:?}"))?;
-        let od = &self.spec.output;
-        if data.len() != od.iter().product::<usize>() {
-            return Err(anyhow!(
-                "result has {} elements, manifest says {:?}",
-                data.len(), od
+        let out = self.exe.execute(inputs)?;
+        if out.dims.to_vec() != self.spec.output {
+            return Err(err!(
+                "artifact '{}': backend produced shape {:?}, manifest says {:?}",
+                self.spec.key(),
+                out.dims,
+                self.spec.output
             ));
         }
-        Ok(Tensor4 { dims: [od[0], od[1], od[2], od[3]], data })
+        Ok(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Runtime round-trip tests live in rust/tests/runtime_roundtrip.rs —
-    // they need the artifacts/ directory built by `make artifacts`.
+    use super::*;
+
+    #[test]
+    fn builtin_runtime_loads_and_caches() {
+        let mut rt = Runtime::builtin();
+        assert_eq!(rt.platform(), "native-cpu");
+        let key = "unit3x3/blocked";
+        let spec = rt.load(key).expect("load").spec.clone();
+        assert_eq!(spec.key(), key);
+        // second load is a cache hit returning the same spec
+        assert_eq!(rt.load(key).expect("cached").spec, spec);
+        rt.load_all().expect("all builtin artifacts load natively");
+    }
+
+    #[test]
+    fn run_validates_shapes() {
+        let mut rt = Runtime::builtin();
+        let key = "unit3x3/blocked";
+        let spec = rt.load(key).unwrap().spec.clone();
+        let xd = &spec.inputs[0];
+        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 1);
+        assert!(rt.run(key, &[&x]).is_err(), "one input must fail");
+        let bad = Tensor4::zeros([1, 1, 1, 1]);
+        assert!(rt.run(key, &[&x, &bad]).is_err(), "bad filter shape");
+        assert!(rt.run("missing/kind", &[]).is_err(), "unknown key");
+    }
+
+    // Artifact-directory round-trip tests live in
+    // rust/tests/runtime_roundtrip.rs.
 }

@@ -1,0 +1,200 @@
+//! The default execution backend: runs single-layer conv artifacts with
+//! in-tree kernels — no PJRT, no artifact files, no external crates.
+//!
+//! An [`crate::runtime::ArtifactSpec`] of kind `"blocked"` executes through
+//! [`crate::conv::conv7nl_naive`]; kind `"im2col"` executes through a
+//! genuinely different code path ([`conv_im2col`]: patch-matrix + GEMM), so
+//! blocked-vs-im2col agreement tests exercise real cross-validation even
+//! without compiled artifacts. Other kinds (`"network"`, gradient passes)
+//! require the PJRT backend.
+//!
+//! The [`ConvShape`] is recovered and validated by
+//! [`ArtifactSpec::layer_shape`] (the one authoritative inversion of the
+//! paper's input convention `WI = σw·wO + wF`): a spec that is not a
+//! consistent paper-convention conv layer is rejected at load time.
+
+use std::path::Path;
+
+use crate::conv::{conv7nl_naive, ConvShape, Tensor4};
+use crate::err;
+use crate::util::error::Result;
+
+use super::backend::{ExecBackend, Executable};
+use super::manifest::ArtifactSpec;
+
+/// The in-tree CPU backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn load(
+        &mut self,
+        spec: &ArtifactSpec,
+        _path: Option<&Path>,
+    ) -> Result<Box<dyn Executable>> {
+        match spec.kind.as_str() {
+            "blocked" => Ok(Box::new(NaiveExec { shape: spec.layer_shape()? })),
+            "im2col" => Ok(Box::new(Im2colExec { shape: spec.layer_shape()? })),
+            other => Err(err!(
+                "native backend cannot execute artifact '{}' of kind '{other}' \
+                 (only single-layer 'blocked'/'im2col' specs); build with \
+                 --features pjrt to run it over XLA",
+                spec.key()
+            )),
+        }
+    }
+}
+
+/// Executes the seven-loop nest directly (the crate's oracle).
+struct NaiveExec {
+    shape: ConvShape,
+}
+
+impl Executable for NaiveExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        Ok(conv7nl_naive(inputs[0], inputs[1], &self.shape))
+    }
+}
+
+/// Executes via explicit im2col + GEMM.
+struct Im2colExec {
+    shape: ConvShape,
+}
+
+impl Executable for Im2colExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        Ok(conv_im2col(inputs[0], inputs[1], &self.shape))
+    }
+}
+
+/// im2col reference convolution: materialize the `(N·wO·hO) × (cI·wF·hF)`
+/// patch matrix, reshape the filter to `(cI·wF·hF) × cO`, multiply, and
+/// scatter back to `(N, cO, wO, hO)`.
+///
+/// A deliberately different accumulation order from [`conv7nl_naive`], so
+/// agreement between the two is a meaningful numerics check.
+pub fn conv_im2col(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
+    let (n, ci, co) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (wo, ho) = (s.w_o as usize, s.h_o as usize);
+    let (wf, hf) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    assert_eq!(x.dims[0], n, "batch mismatch");
+    assert_eq!(x.dims[1], ci, "input channel mismatch");
+    assert_eq!(w.dims, [ci, co, wf, hf], "filter shape mismatch");
+
+    let k = ci * wf * hf;
+    let rows = n * wo * ho;
+
+    // A: patch matrix, row r = (i1, i4, i5), column c = (i2, i6, i7)
+    let mut a = vec![0.0f32; rows * k];
+    for i1 in 0..n {
+        for i4 in 0..wo {
+            for i5 in 0..ho {
+                let r = (i1 * wo + i4) * ho + i5;
+                for i2 in 0..ci {
+                    for i6 in 0..wf {
+                        for i7 in 0..hf {
+                            let c = (i2 * wf + i6) * hf + i7;
+                            a[r * k + c] = x.at(i1, i2, sw * i4 + i6, sh * i5 + i7);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // B: reshaped filter, row c = (i2, i6, i7), column i3
+    let mut b = vec![0.0f32; k * co];
+    for i2 in 0..ci {
+        for i3 in 0..co {
+            for i6 in 0..wf {
+                for i7 in 0..hf {
+                    let c = (i2 * wf + i6) * hf + i7;
+                    b[c * co + i3] = w.at(i2, i3, i6, i7);
+                }
+            }
+        }
+    }
+
+    // C = A·B, scattered to NCWH
+    let mut out = Tensor4::zeros([n, co, wo, ho]);
+    for r in 0..rows {
+        let i1 = r / (wo * ho);
+        let rem = r % (wo * ho);
+        let (i4, i5) = (rem / ho, rem % ho);
+        for i3 in 0..co {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[r * k + kk] * b[kk * co + i3];
+            }
+            *out.at_mut(i1, i3, i4, i5) = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn builtin_specs_roundtrip_to_shapes() {
+        let m = Manifest::builtin(4);
+        assert!(m.artifacts.len() >= 3);
+        for spec in &m.artifacts {
+            let s = spec.layer_shape().expect("builtin spec must be derivable");
+            assert_eq!(s.n, spec.output[0] as u64, "{}", spec.key());
+            assert_eq!(s.in_w() as usize, spec.inputs[0][2], "{}", spec.key());
+            assert_eq!(s.in_h() as usize, spec.inputs[0][3], "{}", spec.key());
+            assert_eq!(s.updates(), spec.updates, "{}", spec.key());
+            assert!(s.paper_assumptions_hold(), "{}", spec.key());
+        }
+    }
+
+    #[test]
+    fn im2col_matches_naive_unit_stride() {
+        let s = ConvShape::new(2, 3, 4, 5, 5, 3, 3, 1, 1);
+        let x = Tensor4::randn([2, 3, 8, 8], 1);
+        let w = Tensor4::randn([3, 4, 3, 3], 2);
+        let a = conv7nl_naive(&x, &w, &s);
+        let b = conv_im2col(&x, &w, &s);
+        assert!(a.rel_l2(&b) < 1e-5, "rel {}", a.rel_l2(&b));
+    }
+
+    #[test]
+    fn im2col_matches_naive_strided() {
+        let s = ConvShape::new(1, 2, 3, 4, 4, 3, 3, 2, 2);
+        let x = Tensor4::randn([1, 2, 11, 11], 3);
+        let w = Tensor4::randn([2, 3, 3, 3], 4);
+        let a = conv7nl_naive(&x, &w, &s);
+        let b = conv_im2col(&x, &w, &s);
+        assert!(a.rel_l2(&b) < 1e-5, "rel {}", a.rel_l2(&b));
+    }
+
+    #[test]
+    fn rejects_non_layer_specs() {
+        let shape = ConvShape::new(1, 1, 1, 2, 2, 1, 1, 1, 1);
+        let mut spec = ArtifactSpec::for_layer("x", "network", &shape);
+        assert!(NativeBackend::new().load(&spec, None).is_err());
+
+        spec.kind = "blocked".to_string();
+        assert!(NativeBackend::new().load(&spec, None).is_ok());
+
+        spec.inputs[0][2] = 1; // breaks WI = σw·wO + wF
+        assert!(NativeBackend::new().load(&spec, None).is_err());
+
+        spec.inputs.pop(); // wrong arity
+        assert!(NativeBackend::new().load(&spec, None).is_err());
+    }
+}

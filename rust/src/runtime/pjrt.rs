@@ -1,0 +1,99 @@
+//! The PJRT/XLA execution backend (cargo feature `pjrt`).
+//!
+//! Loads AOT artifacts (`artifacts/*.hlo.txt`, produced once by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client through
+//! the external `xla` crate. Python is never on this path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! PJRT handles are not `Send`; keep a [`PjrtBackend`]-driven
+//! [`super::Runtime`] on the thread that created it (the coordinator's
+//! server constructs its runtime inside the executor thread for exactly
+//! this reason).
+
+use std::path::Path;
+
+use crate::conv::Tensor4;
+use crate::err;
+use crate::util::error::Result;
+
+use super::backend::{ExecBackend, Executable};
+use super::manifest::ArtifactSpec;
+
+/// One PJRT CPU client, shared by every artifact it compiles.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load(
+        &mut self,
+        spec: &ArtifactSpec,
+        path: Option<&Path>,
+    ) -> Result<Box<dyn Executable>> {
+        let path = path.ok_or_else(|| {
+            err!("pjrt backend needs an artifact directory for '{}'", spec.key())
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| err!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err!("compile {}: {e:?}", path.display()))?;
+        Ok(Box::new(PjrtExec { spec: spec.clone(), exe }))
+    }
+}
+
+struct PjrtExec {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| err!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| err!("execute '{}': {e:?}", self.spec.key()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the output is a 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| err!("untuple: {e:?}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| err!("result to_vec: {e:?}"))?;
+        let od = &self.spec.output;
+        if data.len() != od.iter().product::<usize>() {
+            return Err(err!(
+                "result has {} elements, manifest says {:?}",
+                data.len(),
+                od
+            ));
+        }
+        Ok(Tensor4 { dims: [od[0], od[1], od[2], od[3]], data })
+    }
+}

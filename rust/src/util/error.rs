@@ -1,0 +1,155 @@
+//! In-tree error substrate for the fully offline build: a context-chained
+//! [`Error`], the crate-wide [`Result`] alias, the [`Context`] extension
+//! trait for wrapping fallible calls, and the [`crate::err!`] constructor
+//! macro. External error crates are deliberately not used — the crate's
+//! default `[dependencies]` table is empty.
+//!
+//! Rendering follows the familiar `outer: inner: root` convention, so
+//! `Manifest::load` failures read like
+//! `loading manifest from artifacts: reading artifacts/manifest.json: No
+//! such file or directory (os error 2)`.
+
+use std::fmt;
+
+/// A chained error: the root cause plus any context frames wrapped around
+/// it, stored outermost-first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    frames: Vec<String>,
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// A new root error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { frames: vec![msg.into()] }
+    }
+
+    /// Wrap this error with one more (outermost) context frame.
+    pub fn context(mut self, msg: impl Into<String>) -> Error {
+        self.frames.insert(0, msg.into());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, frame) in self.frames.iter().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{frame}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Context chaining for any `Result` whose error converts into [`Error`]
+/// (the identity conversion included, so an already-chained [`Error`]
+/// keeps its frames instead of being flattened).
+pub trait Context<T> {
+    /// Wrap the error (if any) with a fixed context message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+
+    /// Wrap the error (if any) with a lazily computed context message.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string:
+/// `err!("artifact '{key}' not found")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(crate::err!("root cause {}", 7))
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "root cause 7");
+        assert_eq!(e.root_cause(), "root cause 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("loading").unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer: loading: root cause 7");
+        assert_eq!(e.root_cause(), "root cause 7");
+    }
+
+    #[test]
+    fn rewrapping_preserves_the_root_cause() {
+        // a Result<_, Error> run through the trait keeps its frame chain
+        let wrapped: Result<()> = fails().context("inner");
+        let e = wrapped.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner: root cause 7");
+        assert_eq!(e.root_cause(), "root cause 7");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(5);
+        let r: Result<u32> = ok.with_context(|| panic!("must not be called"));
+        assert_eq!(r.unwrap(), 5);
+    }
+
+    #[test]
+    fn io_and_json_errors_convert() {
+        let io = std::fs::read_to_string("/definitely/not/a/file");
+        let e: Error = io.with_context(|| "reading config".to_string()).unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+
+        let j = crate::util::json::Json::parse("{oops").unwrap_err();
+        let e: Error = j.into();
+        assert!(e.to_string().contains("json error"));
+    }
+
+    #[test]
+    fn question_mark_interops_with_io() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/nope/nope")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

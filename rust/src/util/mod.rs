@@ -1,7 +1,8 @@
-//! In-tree substrates for the offline build: JSON, CLI parsing, RNG,
-//! thread pool, and summary statistics.
+//! In-tree substrates for the offline build: errors, JSON, CLI parsing,
+//! RNG, thread pool, and summary statistics.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

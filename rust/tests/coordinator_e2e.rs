@@ -1,50 +1,33 @@
-//! Integration: the L3 coordinator — batching server over the PJRT
-//! runtime, numerics validated per request against the naive oracle.
-//! Requires `make artifacts` (skips with a message otherwise).
+//! Integration: the L3 coordinator — batching server over the built-in
+//! native backend, numerics validated per request against the naive
+//! oracle. No artifacts directory, no Python, no PJRT required.
 
 use std::time::Duration;
 
 use convbound::conv::{conv7nl_naive, ConvShape, Tensor4};
 use convbound::coordinator::ConvServer;
-use convbound::runtime::Manifest;
+use convbound::runtime::{ArtifactSpec, Manifest};
 
-fn artifact_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+const KEY: &str = "unit3x3/blocked";
 
-fn have_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
-}
-
-fn layer_spec() -> Option<(convbound::runtime::ArtifactSpec, ConvShape)> {
-    let m = Manifest::load(artifact_dir().join("manifest.json")).ok()?;
-    let spec = m.find("unit3x3/blocked")?.clone();
-    let i = &spec.inputs[0];
-    let f = &spec.inputs[1];
-    let o = &spec.output;
-    let shape = ConvShape::new(
-        1, f[0] as u64, f[1] as u64, o[2] as u64, o[3] as u64,
-        f[2] as u64, f[3] as u64,
-        ((i[2] - f[2]) / o[2]) as u64,
-        ((i[3] - f[3]) / o[3]) as u64,
-    );
-    Some((spec, shape))
+/// The builtin unit3x3 spec plus the per-image (batch 1) shape for the
+/// oracle.
+fn layer_spec() -> (ArtifactSpec, ConvShape) {
+    let m = Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH);
+    let spec = m.find(KEY).expect("builtin unit3x3").clone();
+    let shape = spec.layer_shape().expect("single-layer spec").with_batch(1);
+    (spec, shape)
 }
 
 #[test]
 fn server_answers_correctly_and_batches() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let (spec, shape) = layer_spec().expect("unit3x3 artifact");
+    let (spec, shape) = layer_spec();
     let wd = spec.inputs[1].clone();
     let xd = spec.inputs[0].clone();
     let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 77);
-    let server = ConvServer::start(
-        artifact_dir(), "unit3x3/blocked", weights.clone(), Duration::from_millis(5),
-    )
-    .expect("server start");
+    let server =
+        ConvServer::start_builtin(KEY, weights.clone(), Duration::from_millis(5))
+            .expect("server start");
     assert_eq!(server.batch_size(), xd[0]);
 
     // submit an uneven number of requests (forces a padded final batch)
@@ -74,49 +57,37 @@ fn server_answers_correctly_and_batches() {
 
 #[test]
 fn server_rejects_bad_shapes() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let (spec, _) = layer_spec().expect("unit3x3 artifact");
+    let (spec, _) = layer_spec();
     let wd = spec.inputs[1].clone();
     let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 1);
 
     // wrong weights shape fails at start
     let bad_w = Tensor4::zeros([1, 1, 1, 1]);
-    assert!(ConvServer::start(
-        artifact_dir(), "unit3x3/blocked", bad_w, Duration::from_millis(1)
-    )
-    .is_err());
+    assert!(ConvServer::start_builtin(KEY, bad_w, Duration::from_millis(1)).is_err());
 
     // wrong image shape fails at submit
-    let server = ConvServer::start(
-        artifact_dir(), "unit3x3/blocked", weights, Duration::from_millis(1),
-    )
-    .expect("server");
+    let server = ConvServer::start_builtin(KEY, weights, Duration::from_millis(1))
+        .expect("server");
     assert!(server.submit(Tensor4::zeros([1, 1, 2, 2])).is_err());
 
     // unknown artifact fails at start
     let wd2 = spec.inputs[1].clone();
     let w2 = Tensor4::randn([wd2[0], wd2[1], wd2[2], wd2[3]], 2);
-    assert!(ConvServer::start(artifact_dir(), "nope/blocked", w2, Duration::from_millis(1)).is_err());
+    assert!(
+        ConvServer::start_builtin("nope/blocked", w2, Duration::from_millis(1))
+            .is_err()
+    );
 }
 
 #[test]
 fn concurrent_submitters_all_served() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let (spec, _) = layer_spec().expect("unit3x3 artifact");
+    let (spec, _) = layer_spec();
     let wd = spec.inputs[1].clone();
     let xd = spec.inputs[0].clone();
     let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 5);
     let server = std::sync::Arc::new(
-        ConvServer::start(
-            artifact_dir(), "unit3x3/blocked", weights, Duration::from_millis(2),
-        )
-        .expect("server"),
+        ConvServer::start_builtin(KEY, weights, Duration::from_millis(2))
+            .expect("server"),
     );
 
     let mut handles = Vec::new();
@@ -138,4 +109,52 @@ fn concurrent_submitters_all_served() {
     let server = std::sync::Arc::into_inner(server).expect("sole owner");
     let stats = server.shutdown().expect("shutdown");
     assert_eq!(stats.requests, 32);
+}
+
+/// Regression: shutdown under load must return promptly.
+///
+/// The seed's linger loop handled a `Stop` arriving inside the linger
+/// window by only breaking batch assembly; the executor then flushed the
+/// batch and re-blocked on `recv()` while `shutdown()` joined with the
+/// sender half still alive — a permanent deadlock. This test fails
+/// (times out after 10 s) against that logic and passes with the stop
+/// flag propagated to the outer loop.
+#[test]
+fn shutdown_under_load_returns_promptly_and_flushes() {
+    let (spec, shape) = layer_spec();
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    assert!(xd[0] > 1, "need batch > 1 so a single request leaves the batch unfilled");
+
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 3);
+    // a linger far longer than the test: the Stop must land inside the
+    // linger window, not after it
+    let server = ConvServer::start_builtin(KEY, weights.clone(), Duration::from_secs(30))
+        .expect("server");
+
+    // fewer images than the batch size -> the batcher lingers
+    let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 4);
+    let rx = server.submit(img.clone()).expect("submit");
+    // give the executor a moment to pick the job up and enter the window
+    std::thread::sleep(Duration::from_millis(100));
+
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = done_tx.send(server.shutdown());
+    });
+    let stats = done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("shutdown() must return, not deadlock")
+        .expect("shutdown result");
+
+    // the in-flight batch was flushed, not dropped
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.padded_slots as usize, xd[0] - 1);
+
+    let resp = rx
+        .recv_timeout(Duration::from_secs(1))
+        .expect("in-flight request must still be answered");
+    let want = conv7nl_naive(&img, &weights, &shape);
+    assert!(resp.output.rel_l2(&want) < 1e-5);
 }

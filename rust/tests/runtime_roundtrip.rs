@@ -1,48 +1,32 @@
-//! Integration: the full AOT bridge.
+//! Integration: the execution layer over the native backend — builtin
+//! manifest, on-disk manifests without HLO files, shape derivation, caching
+//! and the error paths. Runs with no `artifacts/` directory, no Python and
+//! no PJRT.
 //!
-//! python/compile/aot.py lowered JAX+Pallas convolutions to HLO text; here
-//! the Rust PJRT CPU client loads, compiles and executes every artifact and
-//! the numerics are validated against the crate's own naive 7NL CNN oracle.
+//! Numerics: `blocked` executes the seven-loop nest, `im2col` executes a
+//! patch-matrix + GEMM path, so blocked-vs-im2col agreement is a real
+//! cross-validation of two independent kernels.
 //!
-//! Requires `make artifacts` to have run (skipped with a message otherwise).
+//! With the `pjrt` feature and a populated `artifacts/` directory, the
+//! original AOT round-trip (PJRT vs the naive oracle) runs as well.
 
 use convbound::conv::{conv7nl_naive, ConvShape, Tensor4};
-use convbound::runtime::Runtime;
+use convbound::runtime::{ArtifactSpec, Manifest, Runtime};
 
-fn artifact_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+/// Recover the ConvShape of a single-layer artifact through the manifest's
+/// one authoritative (validated) inversion.
+fn shape_of(spec: &ArtifactSpec) -> ConvShape {
+    spec.layer_shape().expect("single-layer spec")
 }
 
-fn have_artifacts() -> bool {
-    artifact_dir().join("manifest.json").exists()
-}
-
-/// Recover the ConvShape of a single-layer artifact from its manifest entry
-/// (input is paper-convention sized: WI = σw·wO + wF).
-fn shape_of(spec: &convbound::runtime::ArtifactSpec) -> ConvShape {
-    let i = &spec.inputs[0];
-    let f = &spec.inputs[1];
-    let o = &spec.output;
-    ConvShape::new(
-        o[0] as u64, f[0] as u64, f[1] as u64, o[2] as u64, o[3] as u64,
-        f[2] as u64, f[3] as u64,
-        ((i[2] - f[2]) / o[2]) as u64,
-        ((i[3] - f[3]) / o[3]) as u64,
-    )
+fn dims4(v: &[usize]) -> [usize; 4] {
+    [v[0], v[1], v[2], v[3]]
 }
 
 #[test]
-fn every_single_layer_artifact_matches_naive_oracle() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
-    let platform = rt.platform().to_lowercase();
-    assert!(
-        platform.contains("cpu") || platform.contains("host"),
-        "unexpected platform {platform}"
-    );
+fn builtin_layer_artifacts_match_naive_oracle() {
+    let mut rt = Runtime::builtin();
+    assert_eq!(rt.platform(), "native-cpu");
 
     let layer_keys: Vec<String> = rt
         .manifest()
@@ -51,15 +35,13 @@ fn every_single_layer_artifact_matches_naive_oracle() {
         .filter(|a| a.kind == "blocked" || a.kind == "im2col")
         .map(|a| a.key())
         .collect();
-    assert!(layer_keys.len() >= 4, "expected several layer artifacts");
+    assert!(layer_keys.len() >= 3, "expected several layer artifacts");
 
     for key in layer_keys {
         let spec = rt.manifest().find(&key).unwrap().clone();
         let shape = shape_of(&spec);
-        let xd = spec.inputs[0].clone();
-        let wd = spec.inputs[1].clone();
-        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 7);
-        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 8);
+        let x = Tensor4::randn(dims4(&spec.inputs[0]), 7);
+        let w = Tensor4::randn(dims4(&spec.inputs[1]), 8);
 
         let got = rt.run_loading(&key, &[&x, &w]).expect(&key);
         let want = conv7nl_naive(&x, &w, &shape);
@@ -69,97 +51,67 @@ fn every_single_layer_artifact_matches_naive_oracle() {
             rel < 1e-5,
             "{key}: rel L2 error {rel} vs naive oracle (shape {shape})"
         );
+        assert_eq!(got.dims.to_vec(), spec.output);
     }
 }
 
 #[test]
 fn blocked_and_im2col_agree_with_each_other() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
-    let names: Vec<String> = rt
-        .manifest()
-        .artifacts
-        .iter()
-        .filter(|a| a.kind == "blocked")
-        .map(|a| a.name.clone())
-        .collect();
-    assert!(!names.is_empty());
-    for name in names {
-        let spec = rt.manifest().find(&format!("{name}/blocked")).unwrap().clone();
-        let xd = spec.inputs[0].clone();
-        let wd = spec.inputs[1].clone();
-        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 21);
-        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 22);
-        let a = rt.run_loading(&format!("{name}/blocked"), &[&x, &w]).unwrap();
-        let b = rt.run_loading(&format!("{name}/im2col"), &[&x, &w]).unwrap();
-        let rel = a.rel_l2(&b);
-        assert!(rel < 1e-5, "{name}: blocked vs im2col rel_l2={rel}");
-    }
+    let mut rt = Runtime::builtin();
+    let spec = rt.manifest().find("unit3x3/blocked").unwrap().clone();
+    let x = Tensor4::randn(dims4(&spec.inputs[0]), 21);
+    let w = Tensor4::randn(dims4(&spec.inputs[1]), 22);
+    let a = rt.run_loading("unit3x3/blocked", &[&x, &w]).unwrap();
+    let b = rt.run_loading("unit3x3/im2col", &[&x, &w]).unwrap();
+    let rel = a.rel_l2(&b);
+    assert!(rel < 1e-5, "blocked vs im2col rel_l2={rel}");
 }
 
 #[test]
-fn gradient_artifacts_match_naive_oracles() {
-    use convbound::conv::{dfilter_naive, dinput_naive};
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
-    let fwd = match rt.manifest().find("unit3x3/blocked") {
-        Some(s) => s.clone(),
-        None => return,
-    };
-    let shape = shape_of(&fwd);
+fn strided_builtin_layer_round_trips() {
+    // unit5x5 is strided (σ = 2): exercises the shape derivation and the
+    // strided indexing of the native kernel.
+    let mut rt = Runtime::builtin();
+    let spec = rt.manifest().find("unit5x5/blocked").unwrap().clone();
+    let shape = shape_of(&spec);
+    assert_eq!(shape.s_w, 2);
+    let x = Tensor4::randn(dims4(&spec.inputs[0]), 31);
+    let w = Tensor4::randn(dims4(&spec.inputs[1]), 32);
+    let got = rt.run_loading("unit5x5/blocked", &[&x, &w]).expect("run");
+    let want = conv7nl_naive(&x, &w, &shape);
+    assert!(got.rel_l2(&want) < 1e-5);
+}
 
-    // dFilter: inputs (x, dOut) -> dF
-    if rt.manifest().find("unit3x3/dfilter").is_some() {
-        let spec = rt.manifest().find("unit3x3/dfilter").unwrap().clone();
-        let xd = spec.inputs[0].clone();
-        let gd = spec.inputs[1].clone();
-        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 31);
-        let g = Tensor4::randn([gd[0], gd[1], gd[2], gd[3]], 32);
-        let full_batch_shape = convbound::conv::ConvShape {
-            n: xd[0] as u64, ..shape
-        };
-        let got = rt.run_loading("unit3x3/dfilter", &[&x, &g]).expect("dfilter");
-        let want = dfilter_naive(&x, &g, &full_batch_shape);
-        let rel = got.rel_l2(&want);
-        assert!(rel < 1e-5, "dfilter rel_l2 {rel}");
-    } else {
-        eprintln!("SKIP dfilter: artifact absent (regenerate artifacts)");
-    }
+#[test]
+fn dir_backed_native_runtime_needs_no_hlo_files() {
+    // A manifest.json on disk with NO .hlo.txt files next to it: the
+    // native backend executes from the spec alone.
+    let dir = std::env::temp_dir().join("convbound_native_dir_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"batch": 2, "artifacts": [
+            {"name": "t", "kind": "blocked", "path": "missing.hlo.txt",
+             "inputs": [[2,3,8,8],[3,4,3,3]], "output": [2,4,5,5],
+             "updates": 5400}]}"#,
+    )
+    .unwrap();
 
-    // dInput: inputs (dOut, w) -> dIn
-    if rt.manifest().find("unit3x3/dinput").is_some() {
-        let spec = rt.manifest().find("unit3x3/dinput").unwrap().clone();
-        let gd = spec.inputs[0].clone();
-        let wd = spec.inputs[1].clone();
-        let od = spec.output.clone();
-        let g = Tensor4::randn([gd[0], gd[1], gd[2], gd[3]], 33);
-        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 34);
-        let full_batch_shape = convbound::conv::ConvShape {
-            n: gd[0] as u64, ..shape
-        };
-        let got = rt.run_loading("unit3x3/dinput", &[&g, &w]).expect("dinput");
-        let want = dinput_naive(&g, &w, &full_batch_shape, od[2], od[3]);
-        let rel = got.rel_l2(&want);
-        assert!(rel < 1e-5, "dinput rel_l2 {rel}");
-    } else {
-        eprintln!("SKIP dinput: artifact absent (regenerate artifacts)");
-    }
+    let mut rt = Runtime::native(&dir).expect("native runtime over dir");
+    let spec = rt.manifest().find("t/blocked").unwrap().clone();
+    let shape = shape_of(&spec);
+    let x = Tensor4::randn(dims4(&spec.inputs[0]), 41);
+    let w = Tensor4::randn(dims4(&spec.inputs[1]), 42);
+    let got = rt.run_loading("t/blocked", &[&x, &w]).expect("run");
+    let want = conv7nl_naive(&x, &w, &shape);
+    assert!(got.rel_l2(&want) < 1e-5);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
 fn runtime_failure_injection() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
     // unknown artifact key
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    let mut rt = Runtime::builtin();
     assert!(rt.load("missing/kind").is_err());
 
     // run before load
@@ -168,8 +120,7 @@ fn runtime_failure_injection() {
     // wrong input count and wrong shapes
     let spec = rt.manifest().find("unit3x3/blocked").unwrap().clone();
     rt.load("unit3x3/blocked").unwrap();
-    let xd = spec.inputs[0].clone();
-    let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 1);
+    let x = Tensor4::randn(dims4(&spec.inputs[0]), 1);
     assert!(rt.run("unit3x3/blocked", &[&x]).is_err(), "one input must fail");
     let bad = Tensor4::zeros([1, 1, 1, 1]);
     assert!(rt.run("unit3x3/blocked", &[&x, &bad]).is_err(), "bad filter shape");
@@ -183,7 +134,7 @@ fn runtime_failure_injection() {
     std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
     assert!(Runtime::new(&dir).is_err());
 
-    // manifest pointing at a missing HLO file
+    // a spec that is not a consistent conv layer must fail at load
     std::fs::write(
         dir.join("manifest.json"),
         r#"{"batch": 1, "artifacts": [{"name": "ghost", "kind": "blocked",
@@ -191,78 +142,217 @@ fn runtime_failure_injection() {
             "output": [1,1,3,3], "updates": 9}]}"#,
     )
     .unwrap();
-    let mut rt2 = Runtime::new(&dir).expect("manifest parses");
-    assert!(rt2.load("ghost/blocked").is_err(), "missing HLO file must fail");
+    let mut rt2 = Runtime::native(&dir).expect("manifest parses");
+    assert!(rt2.load("ghost/blocked").is_err(), "inconsistent spec must fail");
 
-    // garbage HLO text
-    std::fs::write(dir.join("ghost.hlo.txt"), "this is not HLO").unwrap();
-    assert!(rt2.load("ghost/blocked").is_err(), "unparsable HLO must fail");
+    // kinds the native backend cannot execute point at the pjrt feature
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"batch": 1, "artifacts": [{"name": "net", "kind": "network",
+            "path": "net.hlo.txt", "inputs": [[1,3,17,17],[3,8,5,5]],
+            "output": [1,8,7,7], "updates": 1}]}"#,
+    )
+    .unwrap();
+    let mut rt3 = Runtime::native(&dir).expect("manifest parses");
+    let e = rt3.load("net/network").unwrap_err().to_string();
+    assert!(e.contains("pjrt"), "error should mention the pjrt feature: {e}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
-/// Zero-pad a tensor's spatial dims up to (tw, th).
-fn pad_spatial(t: &Tensor4, tw: usize, th: usize) -> Tensor4 {
-    assert!(tw >= t.dims[2] && th >= t.dims[3]);
-    let mut out = Tensor4::zeros([t.dims[0], t.dims[1], tw, th]);
-    for a in 0..t.dims[0] {
-        for b in 0..t.dims[1] {
-            for c in 0..t.dims[2] {
-                for d in 0..t.dims[3] {
-                    *out.at_mut(a, b, c, d) = t.at(a, b, c, d);
+// ---------------------------------------------------------------------
+// PJRT round-trip against compiled artifacts (feature-gated; needs
+// `make artifacts`).
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_roundtrip {
+    use super::*;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn every_single_layer_artifact_matches_naive_oracle() {
+        if !artifact_dir().join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+        let platform = rt.platform().to_lowercase();
+        assert!(
+            platform.contains("cpu") || platform.contains("host"),
+            "unexpected platform {platform}"
+        );
+        let layer_keys: Vec<String> = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "blocked" || a.kind == "im2col")
+            .map(|a| a.key())
+            .collect();
+        for key in layer_keys {
+            let spec = rt.manifest().find(&key).unwrap().clone();
+            let shape = shape_of(&spec);
+            let x = Tensor4::randn(dims4(&spec.inputs[0]), 7);
+            let w = Tensor4::randn(dims4(&spec.inputs[1]), 8);
+            let got = rt.run_loading(&key, &[&x, &w]).expect(&key);
+            let want = conv7nl_naive(&x, &w, &shape);
+            let rel = got.rel_l2(&want);
+            assert!(rel < 1e-5, "{key}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn blocked_and_im2col_agree_for_every_artifact_pair() {
+        if !artifact_dir().join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+        let names: Vec<String> = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "blocked")
+            .map(|a| a.name.clone())
+            .collect();
+        assert!(!names.is_empty());
+        for name in names {
+            if rt.manifest().find(&format!("{name}/im2col")).is_none() {
+                continue;
+            }
+            let spec =
+                rt.manifest().find(&format!("{name}/blocked")).unwrap().clone();
+            let x = Tensor4::randn(dims4(&spec.inputs[0]), 21);
+            let w = Tensor4::randn(dims4(&spec.inputs[1]), 22);
+            let a = rt.run_loading(&format!("{name}/blocked"), &[&x, &w]).unwrap();
+            let b = rt.run_loading(&format!("{name}/im2col"), &[&x, &w]).unwrap();
+            let rel = a.rel_l2(&b);
+            assert!(rel < 1e-5, "{name}: blocked vs im2col rel_l2={rel}");
+        }
+    }
+
+    #[test]
+    fn gradient_artifacts_match_naive_oracles() {
+        use convbound::conv::{dfilter_naive, dinput_naive};
+        if !artifact_dir().join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+        let fwd = match rt.manifest().find("unit3x3/blocked") {
+            Some(s) => s.clone(),
+            None => return,
+        };
+        let shape = shape_of(&fwd);
+
+        // dFilter: inputs (x, dOut) -> dF
+        if rt.manifest().find("unit3x3/dfilter").is_some() {
+            let spec = rt.manifest().find("unit3x3/dfilter").unwrap().clone();
+            let x = Tensor4::randn(dims4(&spec.inputs[0]), 31);
+            let g = Tensor4::randn(dims4(&spec.inputs[1]), 32);
+            let full = ConvShape { n: spec.inputs[0][0] as u64, ..shape };
+            let got = rt.run_loading("unit3x3/dfilter", &[&x, &g]).expect("dfilter");
+            let want = dfilter_naive(&x, &g, &full);
+            let rel = got.rel_l2(&want);
+            assert!(rel < 1e-5, "dfilter rel_l2 {rel}");
+        } else {
+            eprintln!("SKIP dfilter: artifact absent (regenerate artifacts)");
+        }
+
+        // dInput: inputs (dOut, w) -> dIn
+        if rt.manifest().find("unit3x3/dinput").is_some() {
+            let spec = rt.manifest().find("unit3x3/dinput").unwrap().clone();
+            let od = spec.output.clone();
+            let g = Tensor4::randn(dims4(&spec.inputs[0]), 33);
+            let w = Tensor4::randn(dims4(&spec.inputs[1]), 34);
+            let full = ConvShape { n: spec.inputs[0][0] as u64, ..shape };
+            let got = rt.run_loading("unit3x3/dinput", &[&g, &w]).expect("dinput");
+            let want = dinput_naive(&g, &w, &full, od[2], od[3]);
+            let rel = got.rel_l2(&want);
+            assert!(rel < 1e-5, "dinput rel_l2 {rel}");
+        } else {
+            eprintln!("SKIP dinput: artifact absent (regenerate artifacts)");
+        }
+    }
+
+    /// Zero-pad a tensor's spatial dims up to (tw, th).
+    fn pad_spatial(t: &Tensor4, tw: usize, th: usize) -> Tensor4 {
+        assert!(tw >= t.dims[2] && th >= t.dims[3]);
+        let mut out = Tensor4::zeros([t.dims[0], t.dims[1], tw, th]);
+        for a in 0..t.dims[0] {
+            for b in 0..t.dims[1] {
+                for c in 0..t.dims[2] {
+                    for d in 0..t.dims[3] {
+                        *out.at_mut(a, b, c, d) = t.at(a, b, c, d);
+                    }
                 }
             }
         }
+        out
     }
-    out
+
+    #[test]
+    fn network_artifact_matches_layerwise_oracle() {
+        if !artifact_dir().join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+        let spec = match rt.manifest().find("tiny_resnet/network") {
+            Some(s) => s.clone(),
+            None => {
+                eprintln!("SKIP: no network artifact");
+                return;
+            }
+        };
+        let batch = spec.inputs[0][0] as u64;
+        // tiny_resnet geometry — must mirror model.tiny_resnet_specs()
+        let layers = [
+            ConvShape::new(batch, 3, 12, 15, 15, 5, 5, 2, 2),
+            ConvShape::new(batch, 12, 16, 12, 12, 3, 3, 1, 1),
+            ConvShape::new(batch, 16, 32, 5, 5, 3, 3, 2, 2),
+        ];
+        assert_eq!(spec.inputs.len(), 1 + layers.len());
+
+        let tensors: Vec<Tensor4> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 100 + i as u64))
+            .collect();
+        let refs: Vec<&Tensor4> = tensors.iter().collect();
+        let out = rt.run_loading("tiny_resnet/network", &refs).expect("network run");
+        assert_eq!(out.dims.to_vec(), spec.output);
+
+        // layerwise oracle: pad-to-input -> conv -> relu, mirroring model.py
+        let mut act = tensors[0].clone();
+        for (li, shape) in layers.iter().enumerate() {
+            let want_w = shape.in_w() as usize;
+            let want_h = shape.in_h() as usize;
+            if act.dims[2] < want_w || act.dims[3] < want_h {
+                act = pad_spatial(&act, want_w, want_h);
+            }
+            let w = &tensors[1 + li];
+            act = conv7nl_naive(&act, w, shape);
+            for v in act.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        let rel = out.rel_l2(&act);
+        assert!(rel < 1e-4, "network vs layerwise oracle rel_l2={rel}");
+    }
 }
 
 #[test]
-fn network_artifact_matches_layerwise_oracle() {
-    if !have_artifacts() {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        return;
-    }
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
-    let spec = match rt.manifest().find("tiny_resnet/network") {
-        Some(s) => s.clone(),
-        None => {
-            eprintln!("SKIP: no network artifact");
-            return;
-        }
-    };
-    let batch = spec.inputs[0][0] as u64;
-    // tiny_resnet geometry — must mirror model.tiny_resnet_specs()
-    let layers = [
-        ConvShape::new(batch, 3, 12, 15, 15, 5, 5, 2, 2),
-        ConvShape::new(batch, 12, 16, 12, 12, 3, 3, 1, 1),
-        ConvShape::new(batch, 16, 32, 5, 5, 3, 3, 2, 2),
-    ];
-    assert_eq!(spec.inputs.len(), 1 + layers.len());
-
-    let tensors: Vec<Tensor4> = spec
-        .inputs
-        .iter()
-        .enumerate()
-        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 100 + i as u64))
-        .collect();
-    let refs: Vec<&Tensor4> = tensors.iter().collect();
-    let out = rt.run_loading("tiny_resnet/network", &refs).expect("network run");
-    assert_eq!(out.dims.to_vec(), spec.output);
-
-    // layerwise oracle: pad-to-input -> conv -> relu, mirroring model.py
-    let mut act = tensors[0].clone();
-    for (li, shape) in layers.iter().enumerate() {
-        let want_w = shape.in_w() as usize;
-        let want_h = shape.in_h() as usize;
-        if act.dims[2] < want_w || act.dims[3] < want_h {
-            act = pad_spatial(&act, want_w, want_h);
-        }
-        let w = &tensors[1 + li];
-        act = conv7nl_naive(&act, w, shape);
-        for v in act.data.iter_mut() {
-            *v = v.max(0.0);
-        }
-    }
-    let rel = out.rel_l2(&act);
-    assert!(rel < 1e-4, "network vs layerwise oracle rel_l2={rel}");
+fn manifest_find_semantics_hold_for_builtin() {
+    let m = Manifest::builtin(4);
+    // exact key
+    assert!(m.find("unit3x3/blocked").is_some());
+    // bare name is ambiguous for unit3x3 (blocked + im2col)
+    assert!(m.find("unit3x3").is_none());
+    // bare name unique for unit1x1
+    assert!(m.find("unit1x1").is_some());
+    assert!(m.find("missing").is_none());
 }
