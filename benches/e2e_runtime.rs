@@ -1,5 +1,7 @@
-//! End-to-end runtime benchmarks: the execute hot path per layer artifact
-//! and the batching server's request throughput.
+//! End-to-end runtime benchmarks: the execute hot path per layer artifact,
+//! the batching server's request throughput, and a per-kernel catalog
+//! sweep (naive vs im2col vs tiled) emitted as machine-readable
+//! `BENCH_kernels.json` for the perf trajectory.
 //!
 //! Runs out of the box on the built-in native backend (no artifacts, no
 //! PJRT); with an `artifacts/` directory present the same harness drives
@@ -7,19 +9,186 @@
 //! compiled XLA path including the whole-network artifact).
 //!
 //! Run: `cargo bench --bench e2e_runtime`
+//! Smoke (CI): `cargo bench --bench e2e_runtime -- --smoke` — scaled-down
+//! shapes and short measurement windows, still writing the JSON.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use convbound::bench::bench;
-use convbound::conv::Tensor4;
+use convbound::commvol::seq::{blocking_volume, im2col_volume, naive_volume};
+use convbound::conv::{
+    conv7nl_naive, paper_operands, resnet50_layers, scaled, Precision, Tensor4,
+};
 use convbound::coordinator::ConvServer;
+use convbound::kernels::{
+    conv_im2col, conv_tiled, conv_tiled_counted, conv_tiled_parallel,
+    default_workers, TilePlan, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+};
 use convbound::runtime::Runtime;
+use convbound::util::json::Json;
+use convbound::util::threadpool::ThreadPool;
 
 fn artifact_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// One kernel variant's result on one layer.
+struct KernelRow {
+    kernel: &'static str,
+    secs: f64,
+    mmac_per_s: f64,
+    /// measured word traffic (tiled variants only; 0 for model-only rows)
+    measured_words: u64,
+    /// commvol::seq model volume for this kernel at the bench M
+    model_words: f64,
+}
+
+impl KernelRow {
+    fn json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kernel".to_string(), Json::Str(self.kernel.to_string()));
+        o.insert("secs".to_string(), Json::Num(self.secs));
+        o.insert("mmac_per_s".to_string(), Json::Num(self.mmac_per_s));
+        o.insert(
+            "measured_words".to_string(),
+            Json::Num(self.measured_words as f64),
+        );
+        o.insert("model_words".to_string(), Json::Num(self.model_words));
+        Json::Obj(o)
+    }
+}
+
+/// The four measured variants. `tiled_serial` is the apples-to-apples
+/// comparison against the single-threaded naive/im2col rows (the paper's
+/// blocking claim); `tiled` is the production path over the worker pool.
+const VARIANTS: [&str; 4] = ["naive", "im2col", "tiled_serial", "tiled"];
+
+/// Per-kernel sweep over the ResNet catalog; returns the JSON document.
+fn kernels_sweep(smoke: bool) -> Json {
+    let batch = if smoke { 1 } else { 2 };
+    let scale = if smoke { 4 } else { 1 };
+    let m = DEFAULT_TILE_MEM_WORDS;
+    let p = Precision::uniform();
+    let workers = default_workers();
+    let pool = ThreadPool::new(workers);
+
+    println!(
+        "\n== kernel sweep: ResNet catalog, batch {batch}, scale 1/{scale}, \
+         M = {m} words, {workers} workers =="
+    );
+    let mut layers = Vec::new();
+    for l in resnet50_layers(batch) {
+        let s = scaled(l.shape, scale);
+        let (x, w) = paper_operands(&s, 3);
+        let (x, w) = (Arc::new(x), Arc::new(w));
+        let plan = Arc::new(TilePlan::new(&s, p, m));
+        let macs = s.updates() as f64;
+
+        let ktarget = if smoke { 0.05 } else { 0.6 };
+        let mut rows: Vec<KernelRow> = Vec::new();
+        // one counted run serves both tiled rows: serial and parallel
+        // charge identical traffic (asserted by the property tests)
+        let mut tiled_measured: Option<u64> = None;
+        for kernel in VARIANTS {
+            let counters = Arc::new(TrafficCounters::new());
+            let r = bench(
+                &format!("kernels: {} {kernel}", l.name),
+                ktarget,
+                || {
+                    match kernel {
+                        "naive" => std::hint::black_box(conv7nl_naive(&x, &w, &s)),
+                        "im2col" => std::hint::black_box(conv_im2col(&x, &w, &s)),
+                        "tiled_serial" => {
+                            std::hint::black_box(conv_tiled(&x, &w, &plan))
+                        }
+                        _ => std::hint::black_box(conv_tiled_parallel(
+                            &x, &w, &plan, &pool, &counters,
+                        )),
+                    };
+                },
+            );
+            let secs = r.summary.p50.max(1e-9);
+            // live counters from exactly one execution (the bench loop
+            // accumulated warmup + timed iterations, so reset first) —
+            // a counter regression shows up here, not just in unit tests
+            let measured_words = if kernel.starts_with("tiled") {
+                *tiled_measured.get_or_insert_with(|| {
+                    counters.reset();
+                    std::hint::black_box(conv_tiled_counted(
+                        &x, &w, &plan, &counters,
+                    ));
+                    counters.snapshot().total()
+                })
+            } else {
+                0
+            };
+            let model_words = match kernel {
+                "naive" => naive_volume(&s, p),
+                "im2col" => im2col_volume(&s, p, m),
+                _ => blocking_volume(&s, p, m),
+            };
+            rows.push(KernelRow {
+                kernel,
+                secs,
+                mmac_per_s: macs / secs / 1e6,
+                measured_words,
+                model_words,
+            });
+        }
+
+        let find = |name: &str| rows.iter().find(|r| r.kernel == name).unwrap();
+        let (im2col, tser, tiled) =
+            (find("im2col"), find("tiled_serial"), find("tiled"));
+        println!(
+            "  {:<8} {:>9.0} kMAC: naive {:>7.1} | im2col {:>7.1} | tiled-serial \
+             {:>7.1} | tiled/{workers}w {:>7.1} MMAC/s (serial blocking speedup \
+             {:.2}x vs im2col, traffic {:.2}x of model)",
+            l.name,
+            macs / 1e3,
+            find("naive").mmac_per_s,
+            im2col.mmac_per_s,
+            tser.mmac_per_s,
+            tiled.mmac_per_s,
+            tser.mmac_per_s / im2col.mmac_per_s,
+            tser.measured_words as f64 / tser.model_words.max(1.0),
+        );
+
+        let mut lo = BTreeMap::new();
+        lo.insert("name".to_string(), Json::Str(l.name.to_string()));
+        lo.insert("shape".to_string(), Json::Str(s.to_string()));
+        lo.insert("updates".to_string(), Json::Num(s.updates() as f64));
+        lo.insert(
+            "kernels".to_string(),
+            Json::Arr(rows.iter().map(|r| r.json()).collect()),
+        );
+        layers.push(Json::Obj(lo));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("kernels".to_string()));
+    doc.insert("smoke".to_string(), Json::Bool(smoke));
+    doc.insert("mem_words".to_string(), Json::Num(m));
+    doc.insert("workers".to_string(), Json::Num(workers as f64));
+    doc.insert("layers".to_string(), Json::Arr(layers));
+    Json::Obj(doc)
+}
+
+fn write_kernels_json(doc: &Json) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_kernels.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nWARN: could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // measurement windows: long enough for stable numbers normally, a few
+    // iterations only in smoke mode
+    let target = if smoke { 0.05 } else { 1.5 };
+
     let have_artifacts = artifact_dir().join("manifest.json").exists();
     let mut rt = if have_artifacts {
         Runtime::new(artifact_dir()).expect("runtime")
@@ -27,14 +196,14 @@ fn main() {
         println!("artifacts/ missing — benchmarking the built-in native backend");
         Runtime::builtin()
     };
-    println!("platform: {}\n", rt.platform());
+    println!("platform: {}{}\n", rt.platform(), if smoke { " (smoke)" } else { "" });
 
-    // per-layer artifacts
+    // per-layer artifacts across all three native kernel kinds
     let layer_keys: Vec<String> = rt
         .manifest()
         .artifacts
         .iter()
-        .filter(|a| a.kind == "blocked" || a.kind == "im2col")
+        .filter(|a| a.kind == "blocked" || a.kind == "im2col" || a.kind == "tiled")
         .map(|a| a.key())
         .collect();
     for key in &layer_keys {
@@ -51,7 +220,7 @@ fn main() {
         }
         let refs: Vec<&Tensor4> = tensors.iter().collect();
         let macs = spec.updates as f64;
-        let r = bench(&format!("runtime: execute {key}"), 1.5, || {
+        let r = bench(&format!("runtime: execute {key}"), target, || {
             std::hint::black_box(rt.run(key, &refs).expect("run"));
         });
         println!(
@@ -72,7 +241,7 @@ fn main() {
                     .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 10 + i as u64))
                     .collect();
                 let refs: Vec<&Tensor4> = tensors.iter().collect();
-                let r = bench("runtime: execute tiny_resnet network", 2.0, || {
+                let r = bench("runtime: execute tiny_resnet network", target, || {
                     std::hint::black_box(
                         rt.run("tiny_resnet/network", &refs).expect("run"),
                     );
@@ -87,10 +256,12 @@ fn main() {
         }
     }
 
-    // serving path
-    {
-        let key = "unit3x3/blocked";
-        let spec = rt.manifest().find(key).expect(key).clone();
+    // serving path — once through the naive-blocked artifact, once tiled
+    for key in ["unit3x3/blocked", "unit3x3/tiled"] {
+        let spec = match rt.manifest().find(key) {
+            Some(s) => s.clone(),
+            None => continue,
+        };
         let wd = spec.inputs[1].clone();
         let xd = spec.inputs[0].clone();
         let batch = xd[0];
@@ -104,8 +275,8 @@ fn main() {
         .expect("server");
         let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 9);
         let r = bench(
-            &format!("server: 64-request burst (batch {batch})"),
-            2.0,
+            &format!("server: 64-request burst, {key} (batch {batch})"),
+            target,
             || {
                 let pending: Vec<_> = (0..64)
                     .map(|_| server.submit(img.clone()).expect("submit"))
@@ -125,4 +296,8 @@ fn main() {
                 * 100.0
         );
     }
+
+    // catalog kernel sweep + machine-readable output
+    let doc = kernels_sweep(smoke);
+    write_kernels_json(&doc);
 }

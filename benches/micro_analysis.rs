@@ -17,11 +17,11 @@ fn main() {
     println!("=== analysis-layer micro benchmarks ===\n");
 
     bench("hbl: analyze_7nl (lattice + exact LP)", 2.0, || {
-        std::hint::black_box(analyze_7nl(2, 2));
+        std::hint::black_box(analyze_7nl(2, 2).expect("7NL LP feasible"));
     });
 
     bench("hbl: small-filter lift analysis", 1.0, || {
-        std::hint::black_box(analyze_small_filter());
+        std::hint::black_box(analyze_small_filter().expect("LP feasible"));
     });
 
     bench("lp: exact rational simplex (8 vars)", 1.0, || {

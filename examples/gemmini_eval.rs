@@ -12,7 +12,11 @@ use convbound::util::stats::geomean;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let batch = args.opt_u64("batch", 1000);
+    let batch = args.opt_u64("batch", 1000).unwrap_or_else(|e| {
+        // same rendering + exit code as the convbound CLI's error contract
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    });
     let cfg = GemminiConfig::default();
 
     println!("=== Figure 4: GEMMINI, batch {batch}, paper objective ===\n");

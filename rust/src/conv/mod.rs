@@ -10,7 +10,23 @@ pub mod tensor;
 pub mod training;
 
 pub use catalog::{alexnet_layers, find_layer, resnet50_layers, scaled};
-pub use naive::conv7nl_naive;
+pub use naive::{assert_conv_operands, conv7nl_naive};
 pub use shapes::{ConvShape, Precision};
 pub use tensor::Tensor4;
 pub use training::{backward_shapes, dfilter_naive, dinput_naive, TrainingShapes};
+
+/// Random paper-convention operands for `s`: image `(N, cI, WI, HI)` with
+/// `WI = σw·wO + wF` seeded from `seed`, filter `(cI, cO, wF, hF)` seeded
+/// from `seed + 1`. The one constructor the kernels, benches, examples and
+/// tests all share, so the input-sizing convention lives in a single place.
+pub fn paper_operands(s: &ConvShape, seed: u64) -> (Tensor4, Tensor4) {
+    let x = Tensor4::randn(
+        [s.n as usize, s.c_i as usize, s.in_w() as usize, s.in_h() as usize],
+        seed,
+    );
+    let w = Tensor4::randn(
+        [s.c_i as usize, s.c_o as usize, s.w_f as usize, s.h_f as usize],
+        seed + 1,
+    );
+    (x, w)
+}

@@ -7,20 +7,32 @@
 use super::shapes::ConvShape;
 use super::tensor::Tensor4;
 
-/// Execute the seven-loop nest exactly as written in the paper (eq. 1).
-///
-/// `x`: (N, cI, WI, HI) with WI ≥ σw(wO−1)+wF, `w`: (cI, cO, wF, hF).
-/// Returns (N, cO, wO, hO).
-pub fn conv7nl_naive(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
+/// Validate the (image, filter) operand shapes against `s` under the
+/// paper's input convention `WI ≥ σw(wO−1)+wF` — the one shape contract
+/// every in-tree conv kernel (naive, im2col, tiled) enforces identically.
+pub fn assert_conv_operands(x: &Tensor4, w: &Tensor4, s: &ConvShape) {
     let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
     let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
     let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
     let (sw, sh) = (s.s_w as usize, s.s_h as usize);
     assert_eq!(x.dims[0], n, "batch mismatch");
     assert_eq!(x.dims[1], c_i, "input channel mismatch");
-    assert!(x.dims[2] >= sw * (w_o - 1) + w_f, "input width too small");
-    assert!(x.dims[3] >= sh * (h_o - 1) + h_f, "input height too small");
+    // max(1) so zero-extent outputs (degenerate shapes) don't underflow
+    assert!(x.dims[2] >= sw * (w_o.max(1) - 1) + w_f, "input width too small");
+    assert!(x.dims[3] >= sh * (h_o.max(1) - 1) + h_f, "input height too small");
     assert_eq!(w.dims, [c_i, c_o, w_f, h_f], "filter shape mismatch");
+}
+
+/// Execute the seven-loop nest exactly as written in the paper (eq. 1).
+///
+/// `x`: (N, cI, WI, HI) with WI ≥ σw(wO−1)+wF, `w`: (cI, cO, wF, hF).
+/// Returns (N, cO, wO, hO).
+pub fn conv7nl_naive(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
+    assert_conv_operands(x, w, s);
+    let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
 
     let mut out = Tensor4::zeros([n, c_o, w_o, h_o]);
     // Loop order chosen for locality of the inner accumulation; any order

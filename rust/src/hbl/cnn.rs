@@ -15,6 +15,7 @@
 //! `s = (1/2, 1/2, 1/2)` (Σ = 3/2) for the small-filter lift.
 
 use crate::lp::Rat;
+use crate::util::error::Result;
 
 use super::exponents::{solve_exponents, HblSolution};
 use super::linalg::Mat;
@@ -111,13 +112,13 @@ pub fn homs_small_filter() -> [Mat; 3] {
 /// Full HBL analysis for 7NL CNN: constraints from the lattice closure of
 /// the kernels *plus* the paper's explicit C_{j,k} subgroups (so the
 /// reported table matches §3.1 row for row).
-pub fn analyze_7nl(sw: i128, sh: i128) -> HblSolution {
+pub fn analyze_7nl(sw: i128, sh: i128) -> Result<HblSolution> {
     let homs = homs_7nl(sw, sh);
     solve_exponents(&homs, &paper_subgroups(sw, sh))
 }
 
 /// HBL analysis for the small-filter lift.
-pub fn analyze_small_filter() -> HblSolution {
+pub fn analyze_small_filter() -> Result<HblSolution> {
     solve_exponents(&homs_small_filter(), &[])
 }
 
@@ -150,7 +151,7 @@ mod tests {
         // (2/3,2/3,2/3) — the one minimizing the bound's constant — must be
         // feasible, and the LP solution must satisfy every constraint.
         for (sw, sh) in [(1, 1), (2, 2), (1, 2), (3, 1)] {
-            let sol = analyze_7nl(sw, sh);
+            let sol = analyze_7nl(sw, sh).expect("7NL LP feasible");
             assert_eq!(sol.total, Rat::int(2), "σ=({sw},{sh})");
             assert!(super::super::exponents::is_feasible(
                 &sol.constraints,
@@ -169,13 +170,13 @@ mod tests {
         // generated by the kernels forces Σ s ≥ 2 (via e.g.
         // span{e3..e6} = (kerF ∩ (kerI+kerO)) + (kerO ∩ (kerI+kerF))).
         let homs = homs_7nl(1, 1);
-        let sol = solve_exponents(&homs, &[]);
+        let sol = solve_exponents(&homs, &[]).expect("closure LP feasible");
         assert_eq!(sol.total, Rat::int(2));
     }
 
     #[test]
     fn paper_table_constraints_present() {
-        let sol = analyze_7nl(1, 1);
+        let sol = analyze_7nl(1, 1).expect("7NL LP feasible");
         let names = ["I", "F", "O"];
         let printed: Vec<String> =
             sol.constraints.iter().map(|c| c.pretty(&names)).collect();
@@ -223,16 +224,19 @@ mod tests {
 
     #[test]
     fn small_filter_exponents_are_halves() {
-        let sol = analyze_small_filter();
+        let sol = analyze_small_filter().expect("small-filter LP feasible");
         assert_eq!(sol.total, Rat::new(3, 2));
         assert_eq!(sol.s, vec![Rat::new(1, 2); 3]);
     }
 
     #[test]
     fn communication_exponent_values() {
-        assert_eq!(communication_exponent(&analyze_7nl(1, 1)), Rat::ONE);
         assert_eq!(
-            communication_exponent(&analyze_small_filter()),
+            communication_exponent(&analyze_7nl(1, 1).expect("feasible")),
+            Rat::ONE
+        );
+        assert_eq!(
+            communication_exponent(&analyze_small_filter().expect("feasible")),
             Rat::new(1, 2)
         );
     }

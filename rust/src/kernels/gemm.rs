@@ -1,0 +1,172 @@
+//! The inner tile microkernel: a register-friendly MAC loop over packed
+//! buffers.
+//!
+//! For one (output tile × reduction tile) pair the update is
+//!
+//! ```text
+//! out[n][i4][i5][co] += in[n][ci][r6][r7][i4+q6][i5+q7] · f[ci][q6][q7][r6][r7][co]
+//! ```
+//!
+//! organised so the innermost loop is a contiguous axpy over the cO block:
+//! one input scalar broadcast against one cached filter row, accumulating
+//! into one contiguous output row — the shape LLVM auto-vectorizes. The
+//! filter row (`bcO` floats) stays hot across the whole `n × i4 × i5`
+//! sweep.
+
+/// All block extents and absolute split offsets one tile-pair MAC needs.
+pub(crate) struct TileDims {
+    pub bn: usize,
+    pub bci: usize,
+    pub bco: usize,
+    pub bwo: usize,
+    pub bho: usize,
+    pub bqw: usize,
+    pub bqh: usize,
+    pub brw: usize,
+    pub brh: usize,
+    /// extended input patch dims: `ew = bwo + bqw − 1`, `eh = bho + bqh − 1`
+    pub ew: usize,
+    pub eh: usize,
+    /// absolute starts of the split-filter blocks
+    pub q6_0: usize,
+    pub q7_0: usize,
+    pub r6_0: usize,
+    pub r7_0: usize,
+    /// strides and true filter extents, for split-coordinate validity
+    pub sw: usize,
+    pub sh: usize,
+    pub wf: usize,
+    pub hf: usize,
+}
+
+/// `out[co] += x · f[co]` over one contiguous cO row.
+#[inline]
+fn axpy(out: &mut [f32], f_row: &[f32], x: f32) {
+    for (o, f) in out.iter_mut().zip(f_row.iter()) {
+        *o += x * *f;
+    }
+}
+
+/// Accumulate one reduction tile into one resident output tile.
+///
+/// `out`: `[bn][bwo][bho][bco]`, `xin`: `[bn][bci][brw][brh][ew][eh]`,
+/// `fil`: `[bci][bqw][bqh][brw][brh][bco]` (layouts from `pack.rs`).
+pub(crate) fn conv_tile_mac(out: &mut [f32], xin: &[f32], fil: &[f32], d: &TileDims) {
+    debug_assert_eq!(out.len(), d.bn * d.bwo * d.bho * d.bco);
+    debug_assert_eq!(xin.len(), d.bn * d.bci * d.brw * d.brh * d.ew * d.eh);
+    debug_assert_eq!(fil.len(), d.bci * d.bqw * d.bqh * d.brw * d.brh * d.bco);
+    for ci in 0..d.bci {
+        for q6 in 0..d.bqw {
+            let i6_base = d.sw * (d.q6_0 + q6);
+            for r6 in 0..d.brw {
+                if i6_base + d.r6_0 + r6 >= d.wf {
+                    continue; // split coordinate beyond the true filter
+                }
+                for q7 in 0..d.bqh {
+                    let i7_base = d.sh * (d.q7_0 + q7);
+                    for r7 in 0..d.brh {
+                        if i7_base + d.r7_0 + r7 >= d.hf {
+                            continue;
+                        }
+                        let f_off = ((((ci * d.bqw + q6) * d.bqh + q7) * d.brw
+                            + r6)
+                            * d.brh
+                            + r7)
+                            * d.bco;
+                        let f_row = &fil[f_off..f_off + d.bco];
+                        for n in 0..d.bn {
+                            let x_plane =
+                                ((n * d.bci + ci) * d.brw + r6) * d.brh + r7;
+                            for i4 in 0..d.bwo {
+                                let x_row =
+                                    (x_plane * d.ew + (i4 + q6)) * d.eh + q7;
+                                let o_row = (n * d.bwo + i4) * d.bho * d.bco;
+                                for i5 in 0..d.bho {
+                                    let xv = xin[x_row + i5];
+                                    let o = &mut out[o_row + i5 * d.bco
+                                        ..o_row + (i5 + 1) * d.bco];
+                                    axpy(o, f_row, xv);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One 2x2 output tile, 1x1 filter, single channel: the MAC reduces to
+    /// an elementwise scale of the packed input.
+    #[test]
+    fn one_by_one_filter_scales_input() {
+        let d = TileDims {
+            bn: 1,
+            bci: 1,
+            bco: 1,
+            bwo: 2,
+            bho: 2,
+            bqw: 1,
+            bqh: 1,
+            brw: 1,
+            brh: 1,
+            ew: 2,
+            eh: 2,
+            q6_0: 0,
+            q7_0: 0,
+            r6_0: 0,
+            r7_0: 0,
+            sw: 1,
+            sh: 1,
+            wf: 1,
+            hf: 1,
+        };
+        let xin = vec![1.0, 2.0, 3.0, 4.0];
+        let fil = vec![0.5];
+        let mut out = vec![0.0; 4];
+        conv_tile_mac(&mut out, &xin, &fil, &d);
+        assert_eq!(out, vec![0.5, 1.0, 1.5, 2.0]);
+        // accumulation: a second pass doubles
+        conv_tile_mac(&mut out, &xin, &fil, &d);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    /// Invalid split coordinates must contribute nothing even when the
+    /// filter buffer holds garbage there.
+    #[test]
+    fn invalid_split_coords_skipped() {
+        // wf = 1, stride 2: q range = 1, r range = 2; (q=0, r=1) invalid
+        let d = TileDims {
+            bn: 1,
+            bci: 1,
+            bco: 1,
+            bwo: 1,
+            bho: 1,
+            bqw: 1,
+            bqh: 1,
+            brw: 2,
+            brh: 1,
+            ew: 1,
+            eh: 1,
+            q6_0: 0,
+            q7_0: 0,
+            r6_0: 0,
+            r7_0: 0,
+            sw: 2,
+            sh: 1,
+            wf: 1,
+            hf: 1,
+        };
+        // xin layout [n][ci][r6][r7][ew][eh]: r6=0 -> 3.0, r6=1 -> 100.0
+        let xin = vec![3.0, 100.0];
+        // fil layout [ci][q6][q7][r6][r7][co]: r6=1 slot holds garbage
+        let fil = vec![2.0, 999.0];
+        let mut out = vec![0.0];
+        conv_tile_mac(&mut out, &xin, &fil, &d);
+        assert_eq!(out, vec![6.0]);
+    }
+}

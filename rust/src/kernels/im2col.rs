@@ -1,0 +1,96 @@
+//! im2col reference convolution: materialize the `(N·wO·hO) × (cI·wF·hF)`
+//! patch matrix, reshape the filter to `(cI·wF·hF) × cO`, multiply, and
+//! scatter back to `(N, cO, wO, hO)`.
+//!
+//! A deliberately different accumulation order from
+//! [`crate::conv::conv7nl_naive`], so agreement between the two is a
+//! meaningful numerics check — and the baseline the tiled engine is
+//! benchmarked against (the paper's §3.2 claim is precisely that the LP
+//! blocking beats im2col's patch-matrix traffic).
+
+use crate::conv::{assert_conv_operands, ConvShape, Tensor4};
+
+/// Explicit im2col + GEMM convolution.
+pub fn conv_im2col(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
+    assert_conv_operands(x, w, s);
+    let (n, ci, co) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (wo, ho) = (s.w_o as usize, s.h_o as usize);
+    let (wf, hf) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+
+    let k = ci * wf * hf;
+    let rows = n * wo * ho;
+
+    // A: patch matrix, row r = (i1, i4, i5), column c = (i2, i6, i7)
+    let mut a = vec![0.0f32; rows * k];
+    for i1 in 0..n {
+        for i4 in 0..wo {
+            for i5 in 0..ho {
+                let r = (i1 * wo + i4) * ho + i5;
+                for i2 in 0..ci {
+                    for i6 in 0..wf {
+                        for i7 in 0..hf {
+                            let c = (i2 * wf + i6) * hf + i7;
+                            a[r * k + c] = x.at(i1, i2, sw * i4 + i6, sh * i5 + i7);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // B: reshaped filter, row c = (i2, i6, i7), column i3
+    let mut b = vec![0.0f32; k * co];
+    for i2 in 0..ci {
+        for i3 in 0..co {
+            for i6 in 0..wf {
+                for i7 in 0..hf {
+                    let c = (i2 * wf + i6) * hf + i7;
+                    b[c * co + i3] = w.at(i2, i3, i6, i7);
+                }
+            }
+        }
+    }
+
+    // C = A·B, scattered to NCWH
+    let mut out = Tensor4::zeros([n, co, wo, ho]);
+    for r in 0..rows {
+        let i1 = r / (wo * ho);
+        let rem = r % (wo * ho);
+        let (i4, i5) = (rem / ho, rem % ho);
+        for i3 in 0..co {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[r * k + kk] * b[kk * co + i3];
+            }
+            *out.at_mut(i1, i3, i4, i5) = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv7nl_naive;
+
+    #[test]
+    fn im2col_matches_naive_unit_stride() {
+        let s = ConvShape::new(2, 3, 4, 5, 5, 3, 3, 1, 1);
+        let x = Tensor4::randn([2, 3, 8, 8], 1);
+        let w = Tensor4::randn([3, 4, 3, 3], 2);
+        let a = conv7nl_naive(&x, &w, &s);
+        let b = conv_im2col(&x, &w, &s);
+        assert!(a.rel_l2(&b) < 1e-5, "rel {}", a.rel_l2(&b));
+    }
+
+    #[test]
+    fn im2col_matches_naive_strided() {
+        let s = ConvShape::new(1, 2, 3, 4, 4, 3, 3, 2, 2);
+        let x = Tensor4::randn([1, 2, 11, 11], 3);
+        let w = Tensor4::randn([2, 3, 3, 3], 4);
+        let a = conv7nl_naive(&x, &w, &s);
+        let b = conv_im2col(&x, &w, &s);
+        assert!(a.rel_l2(&b) < 1e-5, "rel {}", a.rel_l2(&b));
+    }
+}

@@ -1,0 +1,36 @@
+//! The tiled CPU execution engine: the subsystem that actually *runs* the
+//! §3.2 LP blockings the rest of the crate only reasons about.
+//!
+//! * [`plan`] — [`TilePlan`]: LP blocking → balanced integral loop bounds,
+//!   plus the memoizing [`TilePlanCache`].
+//! * [`tiles`] — enumeration of output tiles (disjoint output regions, the
+//!   unit of parallelism) and reduction tiles (accumulated while an output
+//!   tile stays resident), including the split-filter `q/r` loops.
+//! * [`exec`] — the engine: pack → microkernel → scatter per tile, serial
+//!   or fanned out over `util::threadpool::ThreadPool`, with word-traffic
+//!   counters whose totals are checked against the `commvol::seq` blocking
+//!   model (within 2×) by the property tests.
+//! * [`im2col`] — the explicit patch-matrix + GEMM baseline the engine is
+//!   benchmarked against.
+//! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled),
+//!   heuristic or measure-once.
+//!
+//! `pack` and `gemm` are crate-private: the packing layouts and the
+//! microkernel index arithmetic are implementation details of [`exec`].
+
+pub mod autotune;
+pub mod exec;
+mod gemm;
+pub mod im2col;
+mod pack;
+pub mod plan;
+pub mod tiles;
+
+pub use autotune::{Autotuner, KernelKind};
+pub use exec::{
+    conv_tiled, conv_tiled_counted, conv_tiled_parallel, default_workers,
+    expected_traffic, Traffic, TrafficCounters,
+};
+pub use im2col::conv_im2col;
+pub use plan::{TilePlan, TilePlanCache, DEFAULT_TILE_MEM_WORDS};
+pub use tiles::{output_tiles, reduction_tiles, Blk, OutTile, RedTile};

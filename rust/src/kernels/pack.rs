@@ -1,0 +1,190 @@
+//! Operand packing: copy one tile's input/filter working set into dense
+//! buffers whose sizes are exactly the per-operand footprints the §3.2 LP
+//! budgets for (the word-traffic the engine's counters charge).
+//!
+//! Layouts (innermost last, contiguous):
+//!
+//! * input  `[bn][bcI][brw][brh][ew][eh]` with `ew = bwO + bq6 − 1` and
+//!   `eh = bhO + bq7 − 1`: for each residue `(r6, r7)` a decimated patch of
+//!   the image — entry `(aw, ah)` holds `x[σw·(a0+aw)+r6, σh·(b0+ah)+r7]`,
+//!   so the microkernel reads `(i4+q6, i5+q7)` with unit stride in `i5`.
+//! * filter `[bcI][bq6][bq7][brw][brh][bcO]`: cO innermost so the inner
+//!   update is a contiguous axpy. Split coordinates with
+//!   `σw·q6 + r6 ≥ wF` (the over-approximation of the small-filter split)
+//!   are zero-filled and skipped by the microkernel.
+
+use crate::conv::Tensor4;
+
+use super::tiles::{OutTile, RedTile};
+
+/// Pack the input working set of `(ot, rt)` into `buf` (cleared and
+/// resized — callers reuse one buffer across the reduction loop to avoid
+/// per-tile allocation). Returns the extended patch dims `(ew, eh)`.
+pub(crate) fn pack_input(
+    x: &Tensor4,
+    sw: usize,
+    sh: usize,
+    ot: &OutTile,
+    rt: &RedTile,
+    buf: &mut Vec<f32>,
+) -> (usize, usize) {
+    let bn = ot.n.len as usize;
+    let bci = rt.ci.len as usize;
+    let brw = rt.rw.len as usize;
+    let brh = rt.rh.len as usize;
+    let ew = ot.wo.len as usize + rt.qw.len as usize - 1;
+    let eh = ot.ho.len as usize + rt.qh.len as usize - 1;
+    let (wi, hi) = (x.dims[2], x.dims[3]);
+    let a0 = ot.wo.start as usize + rt.qw.start as usize;
+    let b0 = ot.ho.start as usize + rt.qh.start as usize;
+    // no zero-fill: the loop below writes every element (out-of-image
+    // corners explicitly get 0.0), so stale data from a reused buffer
+    // never survives — only the length needs fixing up at ragged edges
+    let len = bn * bci * brw * brh * ew * eh;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+    let mut k = 0;
+    for n in 0..bn {
+        let na = ot.n.start as usize + n;
+        for ci in 0..bci {
+            let ca = rt.ci.start as usize + ci;
+            for r6 in 0..brw {
+                let r6a = rt.rw.start as usize + r6;
+                for r7 in 0..brh {
+                    let r7a = rt.rh.start as usize + r7;
+                    for aw in 0..ew {
+                        let col = sw * (a0 + aw) + r6a;
+                        for ah in 0..eh {
+                            let row = sh * (b0 + ah) + r7a;
+                            // corners of the (aw, ah) rectangle can exceed
+                            // the image when they correspond only to
+                            // invalid split coordinates; the microkernel
+                            // never reads those zeros
+                            buf[k] = if col < wi && row < hi {
+                                x.at(na, ca, col, row)
+                            } else {
+                                0.0
+                            };
+                            k += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (ew, eh)
+}
+
+/// Pack the filter working set of `(ot, rt)` into `buf` (cleared and
+/// resized). Returns the number of words actually read from the filter
+/// tensor (invalid split coordinates are zero-filled, not read).
+pub(crate) fn pack_filter(
+    w: &Tensor4,
+    sw: usize,
+    sh: usize,
+    wf: usize,
+    hf: usize,
+    ot: &OutTile,
+    rt: &RedTile,
+    buf: &mut Vec<f32>,
+) -> u64 {
+    let bci = rt.ci.len as usize;
+    let bco = ot.co.len as usize;
+    let bqw = rt.qw.len as usize;
+    let bqh = rt.qh.len as usize;
+    let brw = rt.rw.len as usize;
+    let brh = rt.rh.len as usize;
+    buf.clear();
+    buf.resize(bci * bqw * bqh * brw * brh * bco, 0.0);
+    let mut words = 0u64;
+    let mut k = 0;
+    for ci in 0..bci {
+        let ca = rt.ci.start as usize + ci;
+        for q6 in 0..bqw {
+            let i6b = sw * (rt.qw.start as usize + q6);
+            for q7 in 0..bqh {
+                let i7b = sh * (rt.qh.start as usize + q7);
+                for r6 in 0..brw {
+                    let i6 = i6b + rt.rw.start as usize + r6;
+                    for r7 in 0..brh {
+                        let i7 = i7b + rt.rh.start as usize + r7;
+                        if i6 < wf && i7 < hf {
+                            words += bco as u64;
+                            for co in 0..bco {
+                                buf[k + co] =
+                                    w.at(ca, ot.co.start as usize + co, i6, i7);
+                            }
+                        }
+                        k += bco;
+                    }
+                }
+            }
+        }
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::tiles::Blk;
+
+    fn blk(start: u64, len: u64) -> Blk {
+        Blk { start, len }
+    }
+
+    #[test]
+    fn input_pack_matches_direct_indexing() {
+        // unit stride: packed (aw, ah) must equal x[a0+aw, b0+ah]
+        let x = Tensor4::randn([1, 2, 8, 8], 7);
+        let ot = OutTile { n: blk(0, 1), co: blk(0, 1), wo: blk(1, 2), ho: blk(2, 3) };
+        let rt = RedTile {
+            ci: blk(1, 1),
+            qw: blk(0, 2),
+            qh: blk(0, 2),
+            rw: blk(0, 1),
+            rh: blk(0, 1),
+        };
+        let mut buf = Vec::new();
+        let (ew, eh) = pack_input(&x, 1, 1, &ot, &rt, &mut buf);
+        assert_eq!((ew, eh), (3, 4));
+        assert_eq!(buf.len(), 12); // bn·bcI·brw·brh·ew·eh = 1·1·1·1·3·4
+        for aw in 0..ew {
+            for ah in 0..eh {
+                assert_eq!(buf[aw * eh + ah], x.at(0, 1, 1 + aw, 2 + ah));
+            }
+        }
+    }
+
+    #[test]
+    fn filter_pack_zero_fills_invalid_split_coords() {
+        // 3x3 filter, stride 2: q range = ceil(3/2) = 2, r range = 2;
+        // (q=1, r=1) -> i6 = 3 >= wf is invalid
+        let w = Tensor4::randn([1, 2, 3, 3], 9);
+        let ot = OutTile { n: blk(0, 1), co: blk(0, 2), wo: blk(0, 1), ho: blk(0, 1) };
+        let rt = RedTile {
+            ci: blk(0, 1),
+            qw: blk(0, 2),
+            qh: blk(0, 1),
+            rw: blk(0, 2),
+            rh: blk(0, 1),
+        };
+        // stale garbage in the reused buffer must not leak into zero-filled
+        // (invalid) slots
+        let mut buf = vec![777.0; 64];
+        let words = pack_filter(&w, 2, 2, 3, 3, &ot, &rt, &mut buf);
+        // layout [ci=1][q6=2][q7=1][r6=2][r7=1][co=2]
+        assert_eq!(buf.len(), 2 * 2 * 2);
+        // q6=0, r6=0 -> i6 = 0; q6=0, r6=1 -> i6 = 1; q6=1, r6=0 -> i6 = 2
+        assert_eq!(buf[0], w.at(0, 0, 0, 0));
+        assert_eq!(buf[2], w.at(0, 0, 1, 0));
+        assert_eq!(buf[4], w.at(0, 0, 2, 0));
+        // q6=1, r6=1 -> i6 = 3: invalid, zero-filled
+        assert_eq!(buf[6], 0.0);
+        assert_eq!(buf[7], 0.0);
+        // three valid coords x bco=2 words read
+        assert_eq!(words, 6);
+    }
+}

@@ -1,0 +1,240 @@
+//! Tile plans: the bridge from the §3.2 LP blocking to executable loop
+//! bounds, plus a process-wide plan cache.
+//!
+//! A [`TilePlan`] takes the continuous-then-rounded [`SeqBlocking`] and
+//! turns it into the nine concrete loop ranges and block sizes the tiled
+//! engine iterates. Block sizes are *balanced* before use: for each dim the
+//! tile count `t = ceil(range/block)` is kept but the block is shrunk to
+//! `ceil(range/t)`, so ragged edge tiles stay within one element of the
+//! interior tiles instead of degenerating (range 5, block 4 → blocks of
+//! 3+2 rather than 4+1). Balancing never increases the tile footprint, so
+//! a blocking that fit in `M` words still fits.
+//!
+//! Solving the blocking LP is not free (a 9-variable simplex per shape), so
+//! [`TilePlanCache`] memoizes plans keyed on `(shape, precision, M)`; the
+//! native backend and the autotuner share one cache per backend instance.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::conv::{ConvShape, Precision};
+use crate::tiling::{sequential_blocking, SeqBlocking};
+use crate::util::ceil_div;
+
+/// Default fast-memory budget for tile planning: 64 Ki words = 256 KiB of
+/// f32 — a typical per-core L2 slice.
+pub const DEFAULT_TILE_MEM_WORDS: f64 = 65536.0;
+
+/// Executable loop bounds derived from one LP blocking.
+///
+/// Dim order everywhere in `kernels/`:
+/// `[n, cI, cO, wO, hO, q6, q7, r6, r7]` — the filter loops are split as
+/// `i6 = σw·q6 + r6` (and likewise `i7`), following the small-filter trick
+/// the blocking LP assumes.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub shape: ConvShape,
+    pub precision: Precision,
+    /// fast-memory budget the blocking was solved for, in words
+    pub mem_words: f64,
+    /// the raw LP blocking this plan executes
+    pub blocking: SeqBlocking,
+    /// loop ranges of the nine blocked dims
+    pub ranges: [u64; 9],
+    /// balanced block sizes, `1 ≤ blocks[i] ≤ ranges[i]`
+    pub blocks: [u64; 9],
+}
+
+/// Indices of the output-owning dims (n, cO, wO, hO) in the nine-dim order.
+pub(crate) const OUT_DIMS: [usize; 4] = [0, 2, 3, 4];
+/// Indices of the reduction dims (cI, q6, q7, r6, r7).
+pub(crate) const RED_DIMS: [usize; 5] = [1, 5, 6, 7, 8];
+
+impl TilePlan {
+    /// Solve (or re-use) the §3.2 LP for `shape` at memory size `m` and
+    /// derive balanced integral loop bounds.
+    pub fn new(shape: &ConvShape, p: Precision, m: f64) -> TilePlan {
+        let blocking = sequential_blocking(shape, p, m);
+        let ranges = [
+            shape.n,
+            shape.c_i,
+            shape.c_o,
+            shape.w_o,
+            shape.h_o,
+            ceil_div(shape.w_f, shape.s_w),
+            ceil_div(shape.h_f, shape.s_h),
+            shape.s_w,
+            shape.s_h,
+        ];
+        let raw = [
+            blocking.b_n,
+            blocking.b_ci,
+            blocking.b_co,
+            blocking.b_wo,
+            blocking.b_ho,
+            blocking.b_wf_q,
+            blocking.b_hf_q,
+            blocking.b_wf_r,
+            blocking.b_hf_r,
+        ];
+        let mut blocks = [1u64; 9];
+        for i in 0..9 {
+            let r = ranges[i].max(1);
+            let b = raw[i].clamp(1, r);
+            blocks[i] = ceil_div(r, ceil_div(r, b));
+        }
+        TilePlan { shape: *shape, precision: p, mem_words: m, blocking, ranges, blocks }
+    }
+
+    /// Tiles along each of the nine dims.
+    pub fn tile_counts(&self) -> [u64; 9] {
+        let mut t = [1u64; 9];
+        for i in 0..9 {
+            t[i] = ceil_div(self.ranges[i].max(1), self.blocks[i]);
+        }
+        t
+    }
+
+    /// Number of output tiles (blocks of n × cO × wO × hO) — the unit of
+    /// parallelism: distinct output tiles write disjoint output regions.
+    pub fn output_tiles(&self) -> u64 {
+        let t = self.tile_counts();
+        OUT_DIMS.iter().map(|&i| t[i]).product()
+    }
+
+    /// Number of reduction tiles (blocks of cI × q6 × q7 × r6 × r7) each
+    /// output tile accumulates over while staying resident.
+    pub fn reduction_tiles(&self) -> u64 {
+        let t = self.tile_counts();
+        RED_DIMS.iter().map(|&i| t[i]).product()
+    }
+
+    /// Total tile executions.
+    pub fn total_tiles(&self) -> u64 {
+        self.output_tiles() * self.reduction_tiles()
+    }
+}
+
+/// Cache key: the shape plus the bit patterns of the precision triple and
+/// the memory size (both are configuration constants, not computed floats,
+/// so bit equality is the right notion).
+type PlanKey = (ConvShape, [u64; 4]);
+
+/// Memoizes [`TilePlan`]s so repeated loads of the same shape (server
+/// restarts, autotuner probes, per-request planning) never re-solve the LP.
+pub struct TilePlanCache {
+    inner: Mutex<HashMap<PlanKey, Arc<TilePlan>>>,
+}
+
+impl TilePlanCache {
+    pub fn new() -> TilePlanCache {
+        TilePlanCache { inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch the plan for `(shape, p, m)`, solving and caching on miss.
+    /// The LP runs under the cache lock: concurrent loaders of the *same*
+    /// shape would otherwise race to duplicate work.
+    pub fn plan(&self, shape: &ConvShape, p: Precision, m: f64) -> Arc<TilePlan> {
+        let key = (
+            *shape,
+            [p.p_i.to_bits(), p.p_f.to_bits(), p.p_o.to_bits(), m.to_bits()],
+        );
+        let mut cache = self.inner.lock().expect("plan cache poisoned");
+        if let Some(plan) = cache.get(&key) {
+            return Arc::clone(plan);
+        }
+        let plan = Arc::new(TilePlan::new(shape, p, m));
+        cache.insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    /// Number of distinct plans currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for TilePlanCache {
+    fn default() -> Self {
+        TilePlanCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::resnet50_layers;
+
+    #[test]
+    fn blocks_within_ranges_and_cover() {
+        for l in resnet50_layers(8) {
+            let plan = TilePlan::new(&l.shape, Precision::uniform(), 65536.0);
+            for i in 0..9 {
+                assert!(plan.blocks[i] >= 1, "{}: dim {i}", l.name);
+                assert!(
+                    plan.blocks[i] <= plan.ranges[i].max(1),
+                    "{}: dim {i}: block {} > range {}",
+                    l.name,
+                    plan.blocks[i],
+                    plan.ranges[i]
+                );
+            }
+            assert!(plan.output_tiles() >= 1);
+            assert!(plan.reduction_tiles() >= 1);
+        }
+    }
+
+    #[test]
+    fn balancing_preserves_tile_count() {
+        // for every dim: ceil(range / balanced) == ceil(range / raw-clamped)
+        let l = resnet50_layers(16)[2]; // conv3_x
+        let plan = TilePlan::new(&l.shape, Precision::uniform(), 16384.0);
+        let raw = [
+            plan.blocking.b_n,
+            plan.blocking.b_ci,
+            plan.blocking.b_co,
+            plan.blocking.b_wo,
+            plan.blocking.b_ho,
+            plan.blocking.b_wf_q,
+            plan.blocking.b_hf_q,
+            plan.blocking.b_wf_r,
+            plan.blocking.b_hf_r,
+        ];
+        for i in 0..9 {
+            let r = plan.ranges[i].max(1);
+            let b = raw[i].clamp(1, r);
+            assert_eq!(
+                (r + plan.blocks[i] - 1) / plan.blocks[i],
+                (r + b - 1) / b,
+                "dim {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn filter_split_ranges_match_shape() {
+        let s = resnet50_layers(4)[0].shape; // conv1: 7x7 stride 2
+        let plan = TilePlan::new(&s, Precision::uniform(), 65536.0);
+        assert_eq!(plan.ranges[5], 4); // ceil(7/2)
+        assert_eq!(plan.ranges[7], 2); // σw
+    }
+
+    #[test]
+    fn cache_returns_shared_plan() {
+        let cache = TilePlanCache::new();
+        let s = resnet50_layers(2)[1].shape;
+        let p = Precision::uniform();
+        let a = cache.plan(&s, p, 65536.0);
+        let b = cache.plan(&s, p, 65536.0);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        // different memory size is a different plan
+        let c = cache.plan(&s, p, 4096.0);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+}

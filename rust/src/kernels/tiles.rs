@@ -1,0 +1,147 @@
+//! Tile enumeration over the nine blocked loops.
+//!
+//! A tile is addressed by one [`Blk`] (half-open index range) per blocked
+//! dim. Tiles split into the output-owning coordinates ([`OutTile`]: blocks
+//! of n, cO, wO, hO — disjoint output regions, the unit of parallelism) and
+//! the reduction coordinates ([`RedTile`]: blocks of cI and the split
+//! filter loops q6, q7, r6, r7 — accumulated serially while an output tile
+//! stays resident).
+
+use crate::util::ceil_div;
+
+use super::plan::{TilePlan, OUT_DIMS, RED_DIMS};
+
+/// Half-open range `[start, start + len)` of one blocked loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blk {
+    pub start: u64,
+    pub len: u64,
+}
+
+/// Split `range` into blocks of `block` (the last one ragged).
+pub fn split(range: u64, block: u64) -> Vec<Blk> {
+    let range = range.max(1);
+    let block = block.clamp(1, range);
+    let mut out = Vec::with_capacity(ceil_div(range, block) as usize);
+    let mut start = 0;
+    while start < range {
+        let len = block.min(range - start);
+        out.push(Blk { start, len });
+        start += len;
+    }
+    out
+}
+
+/// One output tile: blocks of (n, cO, wO, hO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutTile {
+    pub n: Blk,
+    pub co: Blk,
+    pub wo: Blk,
+    pub ho: Blk,
+}
+
+/// One reduction tile: blocks of (cI, q6, q7, r6, r7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RedTile {
+    pub ci: Blk,
+    pub qw: Blk,
+    pub qh: Blk,
+    pub rw: Blk,
+    pub rh: Blk,
+}
+
+/// Every output tile of `plan`, in a fixed row-major order (n outermost).
+pub fn output_tiles(plan: &TilePlan) -> Vec<OutTile> {
+    let [n, co, wo, ho] =
+        OUT_DIMS.map(|i| split(plan.ranges[i], plan.blocks[i]));
+    let mut tiles = Vec::with_capacity(n.len() * co.len() * wo.len() * ho.len());
+    for &bn in &n {
+        for &bco in &co {
+            for &bwo in &wo {
+                for &bho in &ho {
+                    tiles.push(OutTile { n: bn, co: bco, wo: bwo, ho: bho });
+                }
+            }
+        }
+    }
+    tiles
+}
+
+/// Every reduction tile of `plan` (cI outermost, r7 innermost).
+pub fn reduction_tiles(plan: &TilePlan) -> Vec<RedTile> {
+    let [ci, qw, qh, rw, rh] =
+        RED_DIMS.map(|i| split(plan.ranges[i], plan.blocks[i]));
+    let mut tiles =
+        Vec::with_capacity(ci.len() * qw.len() * qh.len() * rw.len() * rh.len());
+    for &bci in &ci {
+        for &bqw in &qw {
+            for &bqh in &qh {
+                for &brw in &rw {
+                    for &brh in &rh {
+                        tiles.push(RedTile {
+                            ci: bci,
+                            qw: bqw,
+                            qh: bqh,
+                            rw: brw,
+                            rh: brh,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{ConvShape, Precision};
+
+    #[test]
+    fn split_covers_range_exactly() {
+        for (range, block) in [(10, 3), (7, 7), (5, 4), (1, 1), (9, 2)] {
+            let blks = split(range, block);
+            let total: u64 = blks.iter().map(|b| b.len).sum();
+            assert_eq!(total, range, "range {range} block {block}");
+            assert_eq!(blks[0].start, 0);
+            for w in blks.windows(2) {
+                assert_eq!(w[0].start + w[0].len, w[1].start);
+            }
+            assert!(blks.iter().all(|b| b.len >= 1 && b.len <= block));
+        }
+    }
+
+    #[test]
+    fn tile_lists_match_plan_counts() {
+        let s = ConvShape::new(3, 5, 7, 11, 13, 3, 2, 1, 1);
+        let plan = TilePlan::new(&s, Precision::uniform(), 2048.0);
+        assert_eq!(output_tiles(&plan).len() as u64, plan.output_tiles());
+        assert_eq!(reduction_tiles(&plan).len() as u64, plan.reduction_tiles());
+    }
+
+    #[test]
+    fn output_tiles_are_disjoint_and_cover() {
+        let s = ConvShape::new(2, 3, 5, 6, 7, 3, 3, 1, 1);
+        let plan = TilePlan::new(&s, Precision::uniform(), 1024.0);
+        let tiles = output_tiles(&plan);
+        let mut seen =
+            vec![false; (s.n * s.c_o * s.w_o * s.h_o) as usize];
+        for t in &tiles {
+            for n in t.n.start..t.n.start + t.n.len {
+                for co in t.co.start..t.co.start + t.co.len {
+                    for wo in t.wo.start..t.wo.start + t.wo.len {
+                        for ho in t.ho.start..t.ho.start + t.ho.len {
+                            let idx = (((n * s.c_o + co) * s.w_o + wo) * s.h_o
+                                + ho) as usize;
+                            assert!(!seen[idx], "overlapping output tiles");
+                            seen[idx] = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.into_iter().all(|v| v), "output not covered");
+    }
+}

@@ -22,6 +22,11 @@
 //! * [`gemmini`] — a cycle-approximate simulator of the GEMMINI accelerator
 //!   (scratchpad / accumulator / double-buffered DMA / 16×16 systolic
 //!   array), the substrate for Figure 4.
+//! * [`kernels`] — the tiled CPU execution engine: packs per-tile working
+//!   sets sized to the LP's operand footprints, runs a small GEMM-style
+//!   microkernel over the nine blocked loops (including the split-filter
+//!   `q/r` dims), counts word traffic against the `commvol` predictions,
+//!   and autotunes naive/im2col/tiled per shape.
 //! * [`runtime`] — the execution layer behind a pluggable
 //!   [`runtime::ExecBackend`]: the default **native** backend runs conv
 //!   specs with in-tree kernels (zero setup, zero dependencies), while the
@@ -42,6 +47,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod gemmini;
 pub mod hbl;
+pub mod kernels;
 pub mod lp;
 pub mod report;
 pub mod runtime;

@@ -7,41 +7,79 @@
 //! convbound fig3    --layer conv2_x ...     parallel comm volumes vs P
 //! convbound fig4    [--claims]              GEMMINI sim, ours vs vendor
 //! convbound plan    --layer conv4_x ...     full layer plan (blocking+tile)
+//! convbound exec    --layer conv4_x ...     run a layer through the CPU
+//!                                           kernels (naive|im2col|tiled|auto)
+//!                                           with measured word traffic
 //! convbound serve   --key unit3x3/blocked   batched serving demo (native
 //!                                           backend; PJRT with artifacts)
 //! ```
+//!
+//! Bad arguments (unknown layers, malformed numbers) exit with a one-line
+//! error, not a panic backtrace: every subcommand returns
+//! `util::error::Result` and `main` renders the failure.
+
+use std::time::Instant;
 
 use convbound::bounds::{parallel_bound_terms, sequential_bound_terms};
-use convbound::conv::{find_layer, Precision, Tensor4};
+use convbound::commvol;
+use convbound::conv::{
+    conv7nl_naive, find_layer, paper_operands, scaled, Precision, Tensor4,
+};
 use convbound::coordinator::{plan_layer, ConvServer};
+use convbound::err;
 use convbound::gemmini::GemminiConfig;
 use convbound::hbl::{analyze_7nl, analyze_small_filter};
+use convbound::kernels::{
+    conv_tiled_counted, Autotuner, KernelKind, TrafficCounters,
+    DEFAULT_TILE_MEM_WORDS,
+};
 use convbound::report::{
     self, default_mem_sweep, default_proc_sweep, fig2_series, fig3_series,
     fig4_rows, fig4_table, ratio_table, Table,
 };
 use convbound::tiling::OptOptions;
 use convbound::util::cli::Args;
+use convbound::util::error::Result;
 
-fn precision_of(args: &Args) -> Precision {
+fn precision_of(args: &Args) -> Result<Precision> {
     match args.opt_str("precision", "mixed") {
-        "uniform" => Precision::uniform(),
-        "mixed" => Precision::paper_mixed(),
-        "gemmini" => Precision::gemmini(),
-        other => panic!("unknown --precision {other} (uniform|mixed|gemmini)"),
+        "uniform" => Ok(Precision::uniform()),
+        "mixed" => Ok(Precision::paper_mixed()),
+        "gemmini" => Ok(Precision::gemmini()),
+        other => Err(err!(
+            "unknown --precision '{other}' (uniform|mixed|gemmini)"
+        )),
     }
 }
 
-fn layer_of(args: &Args, default: &str) -> (String, convbound::conv::ConvShape) {
-    let name = args.opt_str("layer", default).to_string();
-    let batch = args.opt_u64("batch", 1000);
-    let l = find_layer(&name, batch)
-        .unwrap_or_else(|| panic!("unknown layer '{name}' (conv1..conv5_x, alex1..alex5)"));
-    (name, l.shape)
+/// Parse `--mem` and validate it can hold at least one tile of any
+/// supported precision (the blocking LP asserts `M ≥ 4·p_T`), so bad
+/// values exit with a message instead of a solver panic.
+fn mem_of(args: &Args, default: f64) -> Result<f64> {
+    let m = args.opt_f64("mem", default)?;
+    if !m.is_finite() || m < 64.0 {
+        return Err(err!(
+            "--mem must be a finite word count >= 64, got {m}"
+        ));
+    }
+    Ok(m)
 }
 
-fn cmd_hbl_table() {
-    let sol = analyze_7nl(1, 1);
+fn layer_of(
+    args: &Args,
+    default: &str,
+    default_batch: u64,
+) -> Result<(String, convbound::conv::ConvShape)> {
+    let name = args.opt_str("layer", default).to_string();
+    let batch = args.opt_u64("batch", default_batch)?;
+    let l = find_layer(&name, batch).ok_or_else(|| {
+        err!("unknown layer '{name}' (conv1..conv5_x, alex1..alex5)")
+    })?;
+    Ok((name, l.shape))
+}
+
+fn cmd_hbl_table() -> Result<()> {
+    let sol = analyze_7nl(1, 1)?;
     println!("7NL CNN HBL analysis (σw = σh = 1)\n");
     let mut t = Table::new(&["rank H", "rk φI(H)", "rk φF(H)", "rk φO(H)", "constraint"]);
     for c in &sol.constraints {
@@ -59,19 +97,20 @@ fn cmd_hbl_table() {
         sol.total,
         sol.s.iter().map(|r| r.to_string()).collect::<Vec<_>>()
     );
-    let sf = analyze_small_filter();
+    let sf = analyze_small_filter()?;
     println!(
         "small-filter lift: Σs = {} with s = {:?}",
         sf.total,
         sf.s.iter().map(|r| r.to_string()).collect::<Vec<_>>()
     );
+    Ok(())
 }
 
-fn cmd_bounds(args: &Args) {
-    let (name, shape) = layer_of(args, "conv2_x");
-    let p = precision_of(args);
-    let m = args.opt_f64("mem", 65536.0);
-    let procs = args.opt_f64("procs", 64.0);
+fn cmd_bounds(args: &Args) -> Result<()> {
+    let (name, shape) = layer_of(args, "conv2_x", 1000)?;
+    let p = precision_of(args)?;
+    let m = mem_of(args, 65536.0)?;
+    let procs = args.opt_f64("procs", 64.0)?;
     println!("layer {name}: {shape}");
     println!("precision: pI={} pF={} pO={} (C_p = {})", p.p_i, p.p_f, p.p_o, p.c_p());
     let t = sequential_bound_terms(&shape, p, m);
@@ -87,27 +126,30 @@ fn cmd_bounds(args: &Args) {
     println!("  Thm 2.3 mem-indep     = {:.3e}", pt.mem_indep);
     println!("  Thm 2.3 small-filter  = {:.3e}", pt.mem_indep_small_filter);
     println!("  X ≥ {:.3e}", pt.max());
+    Ok(())
 }
 
-fn cmd_fig2(args: &Args) {
-    let (name, shape) = layer_of(args, "conv1");
-    let p = precision_of(args);
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let (name, shape) = layer_of(args, "conv1", 1000)?;
+    let p = precision_of(args)?;
     println!("Figure 2 — sequential communication / bound, layer {name}, batch {}\n", shape.n);
     let rows = fig2_series(&shape, p, &default_mem_sweep());
     print!("{}", ratio_table("M (words)", &rows).render());
+    Ok(())
 }
 
-fn cmd_fig3(args: &Args) {
-    let (name, shape) = layer_of(args, "conv2_x");
-    let p = precision_of(args);
-    let m = args.opt_f64("mem", 1e6);
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let (name, shape) = layer_of(args, "conv2_x", 1000)?;
+    let p = precision_of(args)?;
+    let m = mem_of(args, 1e6)?;
     println!("Figure 3 — parallel communication / bound, layer {name}, batch {}, M = {m}\n", shape.n);
     let rows = fig3_series(&shape, p, &default_proc_sweep(), m);
     print!("{}", ratio_table("P", &rows).render());
+    Ok(())
 }
 
-fn cmd_fig4(args: &Args) {
-    let batch = args.opt_u64("batch", 1000);
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let batch = args.opt_u64("batch", 1000)?;
     let cfg = GemminiConfig::default();
     let fix = args.flag("conv5-fix");
     println!(
@@ -127,12 +169,13 @@ fn cmd_fig4(args: &Args) {
             );
         }
     }
+    Ok(())
 }
 
-fn cmd_plan(args: &Args) {
-    let (name, shape) = layer_of(args, "conv4_x");
-    let p = precision_of(args);
-    let m = args.opt_f64("mem", 65536.0);
+fn cmd_plan(args: &Args) -> Result<()> {
+    let (name, shape) = layer_of(args, "conv4_x", 1000)?;
+    let p = precision_of(args)?;
+    let m = mem_of(args, 65536.0)?;
     let plan = plan_layer(&name, shape, p, m, &GemminiConfig::default(), OptOptions::default());
     println!("plan for {name} ({shape}) at M = {m} words:");
     println!("  LP blocking: {:?}", plan.blocking);
@@ -142,23 +185,112 @@ fn cmd_plan(args: &Args) {
     println!("  GEMMINI tile (vendor): {:?}", plan.gemmini_vendor);
     println!("  bound: X ≥ {} words ({})", report::fmt_f(plan.bound.max()), plan.bound.dominant());
     println!("  blocking/bound ratio: {}", report::fmt_x(plan.blocking_ratio()));
+    Ok(())
 }
 
-fn cmd_serve(args: &Args) {
+/// Run one catalog layer through a CPU kernel and report throughput plus
+/// (for the tiled engine) measured vs modelled word traffic.
+fn cmd_exec(args: &Args) -> Result<()> {
+    let (name, full) = layer_of(args, "conv4_x", 2)?;
+    let scale = args.opt_u64("scale", 1)?.max(1);
+    let shape = scaled(full, scale);
+    let m = mem_of(args, DEFAULT_TILE_MEM_WORDS)?;
+    // --precision shapes the plan and the traffic model; execution itself
+    // is f32 either way
+    let p = precision_of(args)?;
+    let kernel_arg = args.opt_str("kernel", "tiled");
+    // one tuner = one plan cache: selection probes and the final run use
+    // the same (precision, M) tiling, solved once
+    let tuner = Autotuner::with_precision(m, p);
+
+    let (x, w) = paper_operands(&shape, 1);
+
+    let kind = match kernel_arg {
+        "auto" => {
+            let k = tuner.select(&shape);
+            println!("autotuner picked '{}'", k.name());
+            k
+        }
+        other => KernelKind::parse(other).ok_or_else(|| {
+            err!("unknown --kernel '{other}' (naive|im2col|tiled|auto)")
+        })?,
+    };
+
+    println!(
+        "exec {name}{} ({shape}) via {} at M = {m} words",
+        if scale > 1 { format!(" /{scale}") } else { String::new() },
+        kind.name()
+    );
+
+    let out;
+    let secs;
+    if kind == KernelKind::Tiled {
+        let plan = tuner.plan(&shape);
+        let counters = TrafficCounters::new();
+        let t0 = Instant::now();
+        out = conv_tiled_counted(&x, &w, &plan, &counters);
+        secs = t0.elapsed().as_secs_f64();
+        let t = counters.snapshot();
+        let predicted = commvol::seq::blocking_volume(&shape, p, m);
+        println!(
+            "  blocks: n={} cI={} cO={} wO={} hO={} q=({}, {}) r=({}, {}) -> {} tiles",
+            plan.blocks[0], plan.blocks[1], plan.blocks[2], plan.blocks[3],
+            plan.blocks[4], plan.blocks[5], plan.blocks[6], plan.blocks[7],
+            plan.blocks[8], plan.total_tiles()
+        );
+        println!(
+            "  traffic: input {} + filter {} + output {} = {} words \
+             ({:.2}x the commvol blocking model)",
+            t.input_words, t.filter_words, t.output_words, t.total(),
+            t.total() as f64 / predicted.max(1.0)
+        );
+    } else {
+        let t0 = Instant::now();
+        out = tuner.run_kernel(kind, &x, &w, &shape);
+        secs = t0.elapsed().as_secs_f64();
+    }
+    println!(
+        "  {secs:.3}s, {:.1} MMAC/s",
+        shape.updates() as f64 / secs.max(1e-9) / 1e6
+    );
+
+    if args.flag("check") {
+        // cross-validate against an *independent* kernel: the naive nest
+        // for im2col/tiled, and im2col for the naive nest itself
+        let (oracle, want) = if kind == KernelKind::Naive {
+            ("im2col", tuner.run_kernel(KernelKind::Im2col, &x, &w, &shape))
+        } else {
+            ("naive", conv7nl_naive(&x, &w, &shape))
+        };
+        let rel = out.rel_l2(&want);
+        println!("  check vs {oracle} oracle: rel_l2 = {rel:.2e}");
+        if rel >= 1e-4 {
+            return Err(err!("kernel disagrees with the {oracle} oracle: {rel}"));
+        }
+    } else {
+        // keep `out` observable so the kernel call is never optimized away
+        std::hint::black_box(&out);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.opt_str("artifacts", "artifacts").to_string();
     let key = args.opt_str("key", "unit3x3/blocked").to_string();
-    let requests = args.opt_u64("requests", 32);
+    let requests = args.opt_u64("requests", 32)?;
     let have_artifacts = std::path::Path::new(&dir).join("manifest.json").exists();
     let manifest = if have_artifacts {
         convbound::runtime::Manifest::load(
             std::path::Path::new(&dir).join("manifest.json"),
-        )
-        .expect("manifest")
+        )?
     } else {
         println!("no {dir}/manifest.json — serving over the built-in native backend");
         convbound::runtime::Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH)
     };
-    let spec = manifest.find(&key).expect("artifact key").clone();
+    let spec = manifest
+        .find(&key)
+        .ok_or_else(|| err!("artifact '{key}' not in manifest"))?
+        .clone();
     let wd = &spec.inputs[1];
     let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 1);
     let linger = std::time::Duration::from_millis(2);
@@ -166,42 +298,40 @@ fn cmd_serve(args: &Args) {
         ConvServer::start(&dir, &key, weights, linger)
     } else {
         ConvServer::start_builtin(&key, weights, linger)
-    }
-    .expect("server start");
+    }?;
     let xd = &spec.inputs[0];
     let mut pending = Vec::new();
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     for i in 0..requests {
         let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 100 + i);
-        pending.push(server.submit(img).expect("submit"));
+        pending.push(server.submit(img)?);
     }
     let mut total_latency = 0.0;
     for rx in pending {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().map_err(|_| err!("server dropped a response"))?;
         total_latency += resp.latency.as_secs_f64();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let stats = server.shutdown().expect("shutdown");
+    let stats = server.shutdown()?;
     println!("served {requests} requests in {wall:.3}s ({:.1} req/s)", requests as f64 / wall);
     println!("mean latency {:.2} ms", total_latency / requests as f64 * 1e3);
     println!(
         "batches {} (batch size {}), padded slots {}, exec time {:.3}s",
         stats.batches, spec.inputs[0][0], stats.padded_slots, stats.total_exec_secs
     );
+    Ok(())
 }
 
-fn cmd_hlo_stats(args: &Args) {
+fn cmd_hlo_stats(args: &Args) -> Result<()> {
     let dir = args.opt_str("artifacts", "artifacts").to_string();
     let manifest = convbound::runtime::Manifest::load(
         std::path::Path::new(&dir).join("manifest.json"),
-    )
-    .expect("manifest (run `make artifacts`)");
+    )?;
     let mut t = Table::new(&["artifact", "instrs", "dots", "dot MACs", "whiles", "fusions"]);
     for a in &manifest.artifacts {
         let st = convbound::runtime::analyze_file(
             std::path::Path::new(&dir).join(&a.path),
-        )
-        .expect("analyze");
+        )?;
         t.row(vec![
             a.key(),
             st.total.to_string(),
@@ -212,11 +342,12 @@ fn cmd_hlo_stats(args: &Args) {
         ]);
     }
     print!("{}", t.render());
+    Ok(())
 }
 
 fn main() {
     let args = Args::from_env();
-    match args.subcommand.as_deref() {
+    let result = match args.subcommand.as_deref() {
         Some("hbl-table") => cmd_hbl_table(),
         Some("hlo-stats") => cmd_hlo_stats(&args),
         Some("bounds") => cmd_bounds(&args),
@@ -224,16 +355,22 @@ fn main() {
         Some("fig3") => cmd_fig3(&args),
         Some("fig4") => cmd_fig4(&args),
         Some("plan") => cmd_plan(&args),
+        Some("exec") => cmd_exec(&args),
         Some("serve") => cmd_serve(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'\n");
             }
-            eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|serve> [options]");
+            eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|exec|serve> [options]");
             eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
             eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
+            eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
             std::process::exit(2);
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
     }
 }

@@ -30,6 +30,13 @@ pub trait Executable {
     /// first; [`super::LoadedArtifact::run`] does so and is the intended
     /// entry point.
     fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4>;
+
+    /// Cumulative word traffic this executable has charged, when the
+    /// backend instruments it (the native `"tiled"` kind does); `None`
+    /// for uninstrumented executables.
+    fn traffic(&self) -> Option<crate::kernels::Traffic> {
+        None
+    }
 }
 
 /// An execution substrate that prepares artifacts for execution.

@@ -19,7 +19,7 @@ pub const BUILTIN_BATCH: u64 = 4;
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
     pub name: String,
-    /// "blocked" | "im2col" | "network"
+    /// "blocked" | "im2col" | "tiled" | "network"
     pub kind: String,
     /// file name relative to the artifact directory
     pub path: String,
@@ -133,8 +133,11 @@ impl Manifest {
 
     /// The built-in synthetic manifest: small single-layer conv specs
     /// (unit-stride 3×3 and 1×1, plus a strided 5×5) sized so the native
-    /// backend answers in well under a millisecond per batch. This is what
-    /// [`super::Runtime::builtin`] and the no-artifact serving path use.
+    /// backend answers in well under a millisecond per batch, each exposed
+    /// through the kernel kinds the native backend implements (the 3×3 and
+    /// strided 5×5 also as `"tiled"`, routing through the `kernels/`
+    /// engine). This is what [`super::Runtime::builtin`] and the
+    /// no-artifact serving path use.
     pub fn builtin(batch: u64) -> Manifest {
         assert!(batch >= 1);
         let unit3x3 = ConvShape::new(batch, 8, 16, 12, 12, 3, 3, 1, 1);
@@ -145,8 +148,10 @@ impl Manifest {
             artifacts: vec![
                 ArtifactSpec::for_layer("unit3x3", "blocked", &unit3x3),
                 ArtifactSpec::for_layer("unit3x3", "im2col", &unit3x3),
+                ArtifactSpec::for_layer("unit3x3", "tiled", &unit3x3),
                 ArtifactSpec::for_layer("unit1x1", "blocked", &unit1x1),
                 ArtifactSpec::for_layer("unit5x5", "blocked", &unit5x5),
+                ArtifactSpec::for_layer("unit5x5", "tiled", &unit5x5),
             ],
         }
     }
@@ -280,6 +285,8 @@ mod tests {
         assert_eq!(m.batch, 4);
         assert!(m.find("unit3x3/blocked").is_some());
         assert!(m.find("unit3x3/im2col").is_some());
+        assert!(m.find("unit3x3/tiled").is_some());
+        assert!(m.find("unit5x5/tiled").is_some());
         assert!(m.find("unit1x1/blocked").is_some());
         for a in &m.artifacts {
             assert_eq!(a.inputs.len(), 2);

@@ -149,9 +149,21 @@ impl Runtime {
     pub fn run_loading(&mut self, key: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
         self.load(key)?.run(inputs)
     }
+
+    /// Cumulative measured word traffic of a loaded artifact, when its
+    /// executable is instrumented (the native `"tiled"` kind); `None` for
+    /// unloaded or uninstrumented artifacts.
+    pub fn traffic(&self, key: &str) -> Option<crate::kernels::Traffic> {
+        self.loaded.get(key).and_then(|a| a.traffic())
+    }
 }
 
 impl LoadedArtifact {
+    /// Measured word traffic, when the executable is instrumented.
+    pub fn traffic(&self) -> Option<crate::kernels::Traffic> {
+        self.exe.traffic()
+    }
+
     /// Execute with host tensors, validating input and output shapes
     /// against the manifest spec (backend-agnostic).
     pub fn run(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
@@ -213,6 +225,31 @@ mod tests {
         let bad = Tensor4::zeros([1, 1, 1, 1]);
         assert!(rt.run(key, &[&x, &bad]).is_err(), "bad filter shape");
         assert!(rt.run("missing/kind", &[]).is_err(), "unknown key");
+    }
+
+    #[test]
+    fn tiled_artifact_reports_traffic() {
+        let mut rt = Runtime::builtin();
+        let key = "unit3x3/tiled";
+        rt.load(key).expect("load tiled");
+        // instrumented but not yet run: zero counters
+        assert_eq!(
+            rt.traffic(key).expect("tiled is instrumented").total(),
+            0
+        );
+        // the naive kind is uninstrumented
+        rt.load("unit3x3/blocked").expect("load blocked");
+        assert!(rt.traffic("unit3x3/blocked").is_none());
+        assert!(rt.traffic("never/loaded").is_none());
+
+        let spec = rt.manifest().find(key).unwrap().clone();
+        let (xd, wd) = (&spec.inputs[0], &spec.inputs[1]);
+        let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 1);
+        let w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 2);
+        rt.run(key, &[&x, &w]).expect("run tiled");
+        let t = rt.traffic(key).expect("snapshot");
+        assert!(t.input_words > 0 && t.filter_words > 0);
+        assert_eq!(t.output_words as usize, spec.output.iter().product::<usize>());
     }
 
     // Artifact-directory round-trip tests live in

@@ -3,8 +3,11 @@
 //!
 //! An [`crate::runtime::ArtifactSpec`] of kind `"blocked"` executes through
 //! [`crate::conv::conv7nl_naive`]; kind `"im2col"` executes through a
-//! genuinely different code path ([`conv_im2col`]: patch-matrix + GEMM), so
-//! blocked-vs-im2col agreement tests exercise real cross-validation even
+//! genuinely different code path ([`conv_im2col`]: patch-matrix + GEMM);
+//! kind `"tiled"` routes through the `kernels/` LP-blocked tiled engine
+//! (packed per-tile working sets, traffic counters, output tiles fanned
+//! out over a shared thread pool). Three independent accumulation orders,
+//! so cross-kind agreement tests exercise real cross-validation even
 //! without compiled artifacts. Other kinds (`"network"`, gradient passes)
 //! require the PJRT backend.
 //!
@@ -12,23 +15,50 @@
 //! [`ArtifactSpec::layer_shape`] (the one authoritative inversion of the
 //! paper's input convention `WI = σw·wO + wF`): a spec that is not a
 //! consistent paper-convention conv layer is rejected at load time.
+//!
+//! Tiled executables share one [`TilePlanCache`] and one lazily spawned
+//! [`ThreadPool`] per backend instance (clones share both), so repeated
+//! loads of the same shape never re-solve the blocking LP and the worker
+//! threads only exist once a tiled artifact is actually loaded.
 
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
-use crate::conv::{conv7nl_naive, ConvShape, Tensor4};
+use crate::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
 use crate::err;
+use crate::kernels::{
+    conv_tiled_parallel, TilePlan, TilePlanCache, TrafficCounters,
+    DEFAULT_TILE_MEM_WORDS,
+};
 use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
+
+pub use crate::kernels::conv_im2col;
 
 use super::backend::{ExecBackend, Executable};
 use super::manifest::ArtifactSpec;
 
 /// The in-tree CPU backend.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct NativeBackend;
+#[derive(Clone, Default)]
+pub struct NativeBackend {
+    plans: Arc<TilePlanCache>,
+    pool: Arc<Mutex<Option<Arc<ThreadPool>>>>,
+}
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend::default()
+    }
+
+    /// The shared tile-execution pool, spawned on first use.
+    fn tiled_pool(&self) -> Arc<ThreadPool> {
+        let mut slot = self.pool.lock().expect("pool slot poisoned");
+        if let Some(pool) = slot.as_ref() {
+            return Arc::clone(pool);
+        }
+        let pool = Arc::new(ThreadPool::new(crate::kernels::default_workers()));
+        *slot = Some(Arc::clone(&pool));
+        pool
     }
 }
 
@@ -45,10 +75,23 @@ impl ExecBackend for NativeBackend {
         match spec.kind.as_str() {
             "blocked" => Ok(Box::new(NaiveExec { shape: spec.layer_shape()? })),
             "im2col" => Ok(Box::new(Im2colExec { shape: spec.layer_shape()? })),
+            "tiled" => {
+                let shape = spec.layer_shape()?;
+                let plan = self.plans.plan(
+                    &shape,
+                    Precision::uniform(),
+                    DEFAULT_TILE_MEM_WORDS,
+                );
+                Ok(Box::new(TiledExec {
+                    plan,
+                    pool: self.tiled_pool(),
+                    counters: Arc::new(TrafficCounters::new()),
+                }))
+            }
             other => Err(err!(
                 "native backend cannot execute artifact '{}' of kind '{other}' \
-                 (only single-layer 'blocked'/'im2col' specs); build with \
-                 --features pjrt to run it over XLA",
+                 (only single-layer 'blocked'/'im2col'/'tiled' specs); build \
+                 with --features pjrt to run it over XLA",
                 spec.key()
             )),
         }
@@ -77,70 +120,26 @@ impl Executable for Im2colExec {
     }
 }
 
-/// im2col reference convolution: materialize the `(N·wO·hO) × (cI·wF·hF)`
-/// patch matrix, reshape the filter to `(cI·wF·hF) × cO`, multiply, and
-/// scatter back to `(N, cO, wO, hO)`.
-///
-/// A deliberately different accumulation order from [`conv7nl_naive`], so
-/// agreement between the two is a meaningful numerics check.
-pub fn conv_im2col(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
-    let (n, ci, co) = (s.n as usize, s.c_i as usize, s.c_o as usize);
-    let (wo, ho) = (s.w_o as usize, s.h_o as usize);
-    let (wf, hf) = (s.w_f as usize, s.h_f as usize);
-    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
-    assert_eq!(x.dims[0], n, "batch mismatch");
-    assert_eq!(x.dims[1], ci, "input channel mismatch");
-    assert_eq!(w.dims, [ci, co, wf, hf], "filter shape mismatch");
+/// Executes through the `kernels/` tiled engine, output tiles fanned out
+/// over the backend's shared pool. The per-call `Arc` wrap copies the
+/// operands once (pool jobs must be `'static`); see the ROADMAP open item
+/// on scoped zero-copy dispatch.
+struct TiledExec {
+    plan: Arc<TilePlan>,
+    pool: Arc<ThreadPool>,
+    counters: Arc<TrafficCounters>,
+}
 
-    let k = ci * wf * hf;
-    let rows = n * wo * ho;
-
-    // A: patch matrix, row r = (i1, i4, i5), column c = (i2, i6, i7)
-    let mut a = vec![0.0f32; rows * k];
-    for i1 in 0..n {
-        for i4 in 0..wo {
-            for i5 in 0..ho {
-                let r = (i1 * wo + i4) * ho + i5;
-                for i2 in 0..ci {
-                    for i6 in 0..wf {
-                        for i7 in 0..hf {
-                            let c = (i2 * wf + i6) * hf + i7;
-                            a[r * k + c] = x.at(i1, i2, sw * i4 + i6, sh * i5 + i7);
-                        }
-                    }
-                }
-            }
-        }
+impl Executable for TiledExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let x = Arc::new(inputs[0].clone());
+        let w = Arc::new(inputs[1].clone());
+        Ok(conv_tiled_parallel(&x, &w, &self.plan, &self.pool, &self.counters))
     }
 
-    // B: reshaped filter, row c = (i2, i6, i7), column i3
-    let mut b = vec![0.0f32; k * co];
-    for i2 in 0..ci {
-        for i3 in 0..co {
-            for i6 in 0..wf {
-                for i7 in 0..hf {
-                    let c = (i2 * wf + i6) * hf + i7;
-                    b[c * co + i3] = w.at(i2, i3, i6, i7);
-                }
-            }
-        }
+    fn traffic(&self) -> Option<crate::kernels::Traffic> {
+        Some(self.counters.snapshot())
     }
-
-    // C = A·B, scattered to NCWH
-    let mut out = Tensor4::zeros([n, co, wo, ho]);
-    for r in 0..rows {
-        let i1 = r / (wo * ho);
-        let rem = r % (wo * ho);
-        let (i4, i5) = (rem / ho, rem % ho);
-        for i3 in 0..co {
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += a[r * k + kk] * b[kk * co + i3];
-            }
-            *out.at_mut(i1, i3, i4, i5) = acc;
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -180,6 +179,34 @@ mod tests {
         let a = conv7nl_naive(&x, &w, &s);
         let b = conv_im2col(&x, &w, &s);
         assert!(a.rel_l2(&b) < 1e-5, "rel {}", a.rel_l2(&b));
+    }
+
+    #[test]
+    fn tiled_kind_loads_and_matches_oracle() {
+        let shape = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let spec = ArtifactSpec::for_layer("t", "tiled", &shape);
+        let mut be = NativeBackend::new();
+        let exe = be.load(&spec, None).expect("tiled kind loads");
+        let x = Tensor4::randn(
+            [2, 3, shape.in_w() as usize, shape.in_h() as usize],
+            31,
+        );
+        let w = Tensor4::randn([3, 4, 3, 3], 32);
+        let got = exe.execute(&[&x, &w]).expect("tiled execute");
+        let want = conv7nl_naive(&x, &w, &shape);
+        assert!(got.rel_l2(&want) < 1e-4, "rel {}", got.rel_l2(&want));
+    }
+
+    #[test]
+    fn backend_clones_share_plan_cache() {
+        let shape = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let spec = ArtifactSpec::for_layer("t", "tiled", &shape);
+        let be = NativeBackend::new();
+        let mut a = be.clone();
+        let mut b = be.clone();
+        a.load(&spec, None).expect("first load");
+        b.load(&spec, None).expect("second load");
+        assert_eq!(be.plans.len(), 1, "clones must share one plan cache");
     }
 
     #[test]

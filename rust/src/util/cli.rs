@@ -1,8 +1,15 @@
 //! Tiny argv parser (clap is not vendored offline).
 //!
 //! Grammar: `convbound <subcommand> [--flag] [--key value] [positional...]`.
+//!
+//! Typed accessors return [`Result`] so malformed values (`--batch ten`)
+//! surface as a one-line error instead of a panic backtrace; `main`
+//! renders the message and exits nonzero.
 
 use std::collections::BTreeMap;
+
+use crate::err;
+use crate::util::error::Result;
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -53,16 +60,22 @@ impl Args {
         self.options.get(name).map(|s| s.as_str())
     }
 
-    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
-        self.opt(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer")))
-            .unwrap_or(default)
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| err!("--{name}: '{v}' is not an integer")),
+        }
     }
 
-    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
-        self.opt(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number")))
-            .unwrap_or(default)
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| err!("--{name}: '{v}' is not a number")),
+        }
     }
 
     pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -88,7 +101,7 @@ mod tests {
     #[test]
     fn options_with_value() {
         let a = parse("fig4 --batch 1000 --layer=conv1");
-        assert_eq!(a.opt_u64("batch", 1), 1000);
+        assert_eq!(a.opt_u64("batch", 1).unwrap(), 1000);
         assert_eq!(a.opt("layer"), Some("conv1"));
     }
 
@@ -97,7 +110,18 @@ mod tests {
         let a = parse("fig4 --claims --batch 10");
         assert!(a.flag("claims"));
         assert!(!a.flag("nope"));
-        assert_eq!(a.opt_u64("batch", 1), 10);
+        assert_eq!(a.opt_u64("batch", 1).unwrap(), 10);
+    }
+
+    #[test]
+    fn malformed_values_error_instead_of_panicking() {
+        let a = parse("fig4 --batch ten --mem 1e");
+        let e = a.opt_u64("batch", 1).unwrap_err().to_string();
+        assert!(e.contains("--batch"), "{e}");
+        assert!(e.contains("ten"), "{e}");
+        assert!(a.opt_f64("mem", 1.0).is_err());
+        // scientific notation is a valid f64
+        assert_eq!(parse("x --mem 1e6").opt_f64("mem", 0.0).unwrap(), 1e6);
     }
 
     #[test]
@@ -109,8 +133,8 @@ mod tests {
     #[test]
     fn defaults() {
         let a = parse("cmd");
-        assert_eq!(a.opt_u64("missing", 7), 7);
+        assert_eq!(a.opt_u64("missing", 7).unwrap(), 7);
         assert_eq!(a.opt_str("missing", "x"), "x");
-        assert_eq!(a.opt_f64("missing", 1.5), 1.5);
+        assert_eq!(a.opt_f64("missing", 1.5).unwrap(), 1.5);
     }
 }

@@ -56,6 +56,39 @@ fn server_answers_correctly_and_batches() {
 }
 
 #[test]
+fn server_routes_through_tiled_engine() {
+    // the same layer served via the "tiled" artifact kind: requests flow
+    // through the kernels/ engine and still match the per-image oracle
+    let m = Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH);
+    let spec = m.find("unit3x3/tiled").expect("builtin tiled").clone();
+    let shape = spec.layer_shape().expect("single-layer spec").with_batch(1);
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 55);
+    let server = ConvServer::start_builtin(
+        "unit3x3/tiled",
+        weights.clone(),
+        Duration::from_millis(2),
+    )
+    .expect("tiled server start");
+    let images: Vec<Tensor4> = (0..xd[0] + 1)
+        .map(|i| Tensor4::randn([1, xd[1], xd[2], xd[3]], 700 + i as u64))
+        .collect();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("submit"))
+        .collect();
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx.recv().expect("response");
+        let want = conv7nl_naive(img, &weights, &shape);
+        let rel = resp.output.rel_l2(&want);
+        assert!(rel < 1e-4, "tiled request: rel_l2 {rel}");
+    }
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, xd[0] as u64 + 1);
+}
+
+#[test]
 fn server_rejects_bad_shapes() {
     let (spec, _) = layer_spec();
     let wd = spec.inputs[1].clone();

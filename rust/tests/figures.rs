@@ -13,7 +13,7 @@ use convbound::util::stats::geomean;
 /// §3.1 table: the machinery rediscovers the paper's exponents.
 #[test]
 fn section_3_1_table() {
-    let sol = analyze_7nl(2, 2);
+    let sol = analyze_7nl(2, 2).expect("7NL exponent LP feasible");
     assert_eq!(sol.total, Rat::int(2));
     // the four distinct constraint patterns of the paper's table exist
     let names = ["I", "F", "O"];
@@ -21,7 +21,10 @@ fn section_3_1_table() {
     for want in ["1 ≤ s_I + s_O", "1 ≤ s_I + s_F", "1 ≤ s_F + s_O", "2 ≤ s_I + s_F + s_O"] {
         assert!(printed.iter().any(|p| p == want), "missing {want}");
     }
-    assert_eq!(analyze_small_filter().total, Rat::new(3, 2));
+    assert_eq!(
+        analyze_small_filter().expect("small-filter LP feasible").total,
+        Rat::new(3, 2)
+    );
 }
 
 /// Figure 2: sequential model shapes at batch 1000, pI=pF=1, pO=2.

@@ -3,8 +3,15 @@
 //! from the paper or a conservation law of the simulator.
 
 use convbound::bounds::{parallel_bound_terms, sequential_bound, sequential_bound_terms};
-use convbound::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
+use convbound::commvol::seq::blocking_volume;
+use convbound::conv::{
+    alexnet_layers, conv7nl_naive, paper_operands, resnet50_layers, scaled,
+    ConvShape, Precision, Tensor4,
+};
 use convbound::gemmini::{simulate_layer, GemminiConfig};
+use convbound::kernels::{
+    conv_tiled_counted, expected_traffic, TilePlan, TrafficCounters,
+};
 use convbound::hbl::{lattice_closure, Mat, Subspace};
 use convbound::lp::{solve, Constraint, Objective, Rat, Rel};
 use convbound::testkit::{forall, forall_shrink, shrink_u64s, Config};
@@ -300,6 +307,108 @@ fn prop_sim_mac_conservation_and_comm_floor() {
         },
         |v: &Vec<u64>| shrink_u64s(v),
     );
+}
+
+// ---------------- tiled execution engine ----------------
+
+/// Shapes that stress the tiled engine: strides > 1, non-square filters,
+/// and small prime-ish extents so tile edges are ragged. The paper's
+/// `σ ≤ f` model assumption is kept (the blocking LP's split-filter ranges
+/// assume it); `f ≤ σ·out` is irrelevant to execution.
+fn random_tiled_shape(r: &mut Rng) -> ConvShape {
+    let s_w = r.range(1, 3);
+    let s_h = r.range(1, 3);
+    let w_f = r.range(s_w, s_w + 4);
+    let h_f = r.range(s_h, s_h + 3);
+    ConvShape::new(
+        r.range(1, 4),
+        r.range(1, 6),
+        r.range(1, 6),
+        r.range(2, 11),
+        r.range(2, 11),
+        w_f,
+        h_f,
+        s_w,
+        s_h,
+    )
+}
+
+#[test]
+fn prop_tiled_kernel_matches_naive_oracle() {
+    forall(
+        Config { cases: 24, seed: 71 },
+        |r| {
+            let s = random_tiled_shape(r);
+            // small memories force deep, ragged tilings (≥ 512 words keeps
+            // tiles big enough that dev-profile runs stay fast)
+            let m = (1u64 << r.range(9, 13)) as f64;
+            (s, m, r.range(0, 1_000_000))
+        },
+        |(s, m, seed)| {
+            let (x, w) = paper_operands(s, *seed);
+            let plan = TilePlan::new(s, Precision::uniform(), *m);
+            let counters = TrafficCounters::new();
+            let got = conv_tiled_counted(&x, &w, &plan, &counters);
+            let want = conv7nl_naive(&x, &w, s);
+            let t = counters.snapshot();
+            got.rel_l2(&want) < 1e-4
+                && t.output_words == s.output_size()
+                && t.input_words > 0
+                && t.filter_words > 0
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_traffic_counters_match_analytic_model() {
+    // the engine's measured word traffic equals the tile-grid model exactly
+    forall(
+        Config { cases: 16, seed: 72 },
+        |r| {
+            let s = random_tiled_shape(r);
+            let m = (1u64 << r.range(9, 14)) as f64;
+            (s, m)
+        },
+        |(s, m)| {
+            let (x, w) = paper_operands(s, 7);
+            let plan = TilePlan::new(s, Precision::uniform(), *m);
+            let counters = TrafficCounters::new();
+            conv_tiled_counted(&x, &w, &plan, &counters);
+            counters.snapshot() == expected_traffic(&plan)
+        },
+    );
+}
+
+#[test]
+fn tiled_matches_naive_on_full_catalog_within_traffic_envelope() {
+    // every catalog layer (runnable-size variant), three checks per layer:
+    // numerics vs the oracle, exact counter/model agreement, and measured
+    // traffic within 2x of the commvol::seq blocking prediction
+    let p = Precision::uniform();
+    let m = 65536.0;
+    for l in resnet50_layers(2).into_iter().chain(alexnet_layers(2)) {
+        let s = scaled(l.shape, 4);
+        let (x, w) = paper_operands(&s, 101);
+        let plan = TilePlan::new(&s, p, m);
+        let counters = TrafficCounters::new();
+        let got = conv_tiled_counted(&x, &w, &plan, &counters);
+        let want = conv7nl_naive(&x, &w, &s);
+        let rel = got.rel_l2(&want);
+        assert!(rel < 1e-4, "{}: rel_l2 {rel}", l.name);
+
+        let t = counters.snapshot();
+        assert_eq!(t, expected_traffic(&plan), "{}", l.name);
+
+        let predicted = blocking_volume(&s, p, m);
+        let measured = t.total() as f64;
+        assert!(
+            measured > 0.0 && measured <= 2.0 * predicted,
+            "{}: measured {measured} vs commvol blocking prediction \
+             {predicted} ({}x)",
+            l.name,
+            measured / predicted
+        );
+    }
 }
 
 // ---------------- naive conv oracle ----------------

@@ -4,8 +4,9 @@
 //! no PJRT.
 //!
 //! Numerics: `blocked` executes the seven-loop nest, `im2col` executes a
-//! patch-matrix + GEMM path, so blocked-vs-im2col agreement is a real
-//! cross-validation of two independent kernels.
+//! patch-matrix + GEMM path, and `tiled` executes the kernels/ LP-blocked
+//! engine — three independent accumulation orders, so cross-kind agreement
+//! is a real cross-validation.
 //!
 //! With the `pjrt` feature and a populated `artifacts/` directory, the
 //! original AOT round-trip (PJRT vs the naive oracle) runs as well.
@@ -51,6 +52,32 @@ fn builtin_layer_artifacts_match_naive_oracle() {
             rel < 1e-5,
             "{key}: rel L2 error {rel} vs naive oracle (shape {shape})"
         );
+        assert_eq!(got.dims.to_vec(), spec.output);
+    }
+}
+
+#[test]
+fn tiled_builtin_artifacts_match_naive_oracle() {
+    // kind "tiled" routes through the kernels/ LP-blocked engine — a third
+    // independent accumulation order, validated per builtin layer.
+    let mut rt = Runtime::builtin();
+    let tiled_keys: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "tiled")
+        .map(|a| a.key())
+        .collect();
+    assert!(tiled_keys.len() >= 2, "builtin manifest must expose tiled kinds");
+    for key in tiled_keys {
+        let spec = rt.manifest().find(&key).unwrap().clone();
+        let shape = shape_of(&spec);
+        let x = Tensor4::randn(dims4(&spec.inputs[0]), 17);
+        let w = Tensor4::randn(dims4(&spec.inputs[1]), 18);
+        let got = rt.run_loading(&key, &[&x, &w]).expect(&key);
+        let want = conv7nl_naive(&x, &w, &shape);
+        let rel = got.rel_l2(&want);
+        assert!(rel < 1e-4, "{key}: rel L2 error {rel} vs naive oracle");
         assert_eq!(got.dims.to_vec(), spec.output);
     }
 }
