@@ -1,7 +1,9 @@
 //! End-to-end runtime benchmarks: the execute hot path per layer artifact,
-//! the batching server's request throughput, and a per-kernel catalog
-//! sweep (naive vs im2col vs tiled) emitted as machine-readable
-//! `BENCH_kernels.json` for the perf trajectory.
+//! the batching server's request throughput, a per-kernel catalog sweep
+//! (naive vs im2col vs tiled) emitted as machine-readable
+//! `BENCH_kernels.json`, and a whole-network sweep comparing layer-by-layer
+//! vs fused execution (throughput + measured per-stage traffic) emitted as
+//! `BENCH_network.json`.
 //!
 //! Runs out of the box on the built-in native backend (no artifacts, no
 //! PJRT); with an `artifacts/` directory present the same harness drives
@@ -23,10 +25,12 @@ use convbound::conv::{
 };
 use convbound::coordinator::ConvServer;
 use convbound::kernels::{
-    conv_im2col, conv_tiled, conv_tiled_counted, conv_tiled_parallel,
-    default_workers, TilePlan, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    conv_im2col, conv_network_fused, conv_network_staged, conv_tiled,
+    conv_tiled_counted, conv_tiled_parallel, default_workers, FusePlan,
+    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
+    DEFAULT_TILE_MEM_WORDS,
 };
-use convbound::runtime::Runtime;
+use convbound::runtime::{Manifest, Runtime};
 use convbound::util::json::Json;
 use convbound::util::threadpool::ThreadPool;
 
@@ -174,13 +178,158 @@ fn kernels_sweep(smoke: bool) -> Json {
     Json::Obj(doc)
 }
 
-fn write_kernels_json(doc: &Json) {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("BENCH_kernels.json");
+fn write_json(file: &str, doc: &Json) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
     match std::fs::write(&path, format!("{doc}\n")) {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => println!("\nWARN: could not write {}: {e}", path.display()),
     }
+}
+
+/// One execution mode's result on one network.
+struct NetworkRow {
+    mode: &'static str,
+    secs: f64,
+    mmac_per_s: f64,
+    /// measured per-stage word traffic, summed
+    measured_words: u64,
+    /// words crossing fused boundaries (must be 0 in fused mode)
+    boundary_words: u64,
+}
+
+impl NetworkRow {
+    fn json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("mode".to_string(), Json::Str(self.mode.to_string()));
+        o.insert("secs".to_string(), Json::Num(self.secs));
+        o.insert("mmac_per_s".to_string(), Json::Num(self.mmac_per_s));
+        o.insert(
+            "measured_words".to_string(),
+            Json::Num(self.measured_words as f64),
+        );
+        o.insert(
+            "boundary_words".to_string(),
+            Json::Num(self.boundary_words as f64),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Layer-by-layer vs fused execution over the builtin network pipelines;
+/// returns the `BENCH_network.json` document.
+fn network_sweep(smoke: bool) -> Json {
+    let m = DEFAULT_TILE_MEM_WORDS;
+    let workers = default_workers();
+    let pool = ThreadPool::new(workers);
+    let cache = TilePlanCache::new();
+    let target = if smoke { 0.05 } else { 0.6 };
+
+    println!(
+        "\n== network sweep: layer-by-layer vs fused, M = {m} words, \
+         {workers} workers =="
+    );
+    let mut nets_json = Vec::new();
+    for net in &Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH).networks {
+        let plan = Arc::new(FusePlan::new(&net.stages, m, &cache));
+        let image = Arc::new(Tensor4::randn(net.input_dims(), 21));
+        let filters: Vec<Arc<Tensor4>> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                Arc::new(Tensor4::randn(st.shape.filter_dims(), 22 + i as u64))
+            })
+            .collect();
+        let macs = net.updates() as f64;
+        let counters = NetTrafficCounters::new(net.stages.len());
+
+        let mut rows = Vec::new();
+        for mode in ["layered", "fused"] {
+            let r = bench(&format!("network: {} {mode}", net.name), target, || {
+                match mode {
+                    "layered" => std::hint::black_box(conv_network_staged(
+                        &image, &filters, &plan, &pool, &counters,
+                    )),
+                    _ => std::hint::black_box(conv_network_fused(
+                        &image, &filters, &plan, &pool, &counters,
+                    )),
+                };
+            });
+            // traffic from exactly one execution (bench accumulated
+            // warmup + timed iterations)
+            counters.reset();
+            match mode {
+                "layered" => std::hint::black_box(conv_network_staged(
+                    &image, &filters, &plan, &pool, &counters,
+                )),
+                _ => std::hint::black_box(conv_network_fused(
+                    &image, &filters, &plan, &pool, &counters,
+                )),
+            };
+            let per_stage = counters.snapshot();
+            let secs = r.summary.p50.max(1e-9);
+            rows.push(NetworkRow {
+                mode,
+                secs,
+                mmac_per_s: macs / secs / 1e6,
+                measured_words: Traffic::sum(&per_stage).total(),
+                // zero in fused mode; the layered baseline shows what the
+                // same boundary positions cost when materialized
+                boundary_words: plan.boundary_words(&per_stage),
+            });
+        }
+        let (layered, fused) = (&rows[0], &rows[1]);
+        println!(
+            "  {:<12} {} stages, {} fused boundaries: layered {:>7.1} | fused \
+             {:>7.1} MMAC/s; traffic {} -> {} words ({:.2}x saved), fused \
+             boundary words {}",
+            net.name,
+            net.stages.len(),
+            plan.fused_boundaries(),
+            layered.mmac_per_s,
+            fused.mmac_per_s,
+            layered.measured_words,
+            fused.measured_words,
+            layered.measured_words as f64 / fused.measured_words.max(1) as f64,
+            fused.boundary_words,
+        );
+
+        let mut no = BTreeMap::new();
+        no.insert("name".to_string(), Json::Str(net.name.clone()));
+        no.insert("batch".to_string(), Json::Num(net.batch() as f64));
+        no.insert("stages".to_string(), Json::Num(net.stages.len() as f64));
+        no.insert(
+            "fused_boundaries".to_string(),
+            Json::Num(plan.fused_boundaries() as f64),
+        );
+        no.insert(
+            "groups".to_string(),
+            Json::Arr(
+                plan.groups
+                    .iter()
+                    .map(|g| {
+                        let mut go = BTreeMap::new();
+                        go.insert("start".to_string(), Json::Num(g.start as f64));
+                        go.insert("end".to_string(), Json::Num(g.end as f64));
+                        go.insert("fused".to_string(), Json::Bool(g.is_fused()));
+                        Json::Obj(go)
+                    })
+                    .collect(),
+            ),
+        );
+        no.insert(
+            "modes".to_string(),
+            Json::Arr(rows.iter().map(|r| r.json()).collect()),
+        );
+        nets_json.push(Json::Obj(no));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("network".to_string()));
+    doc.insert("smoke".to_string(), Json::Bool(smoke));
+    doc.insert("mem_words".to_string(), Json::Num(m));
+    doc.insert("workers".to_string(), Json::Num(workers as f64));
+    doc.insert("networks".to_string(), Json::Arr(nets_json));
+    Json::Obj(doc)
 }
 
 fn main() {
@@ -273,13 +422,15 @@ fn main() {
             ConvServer::start_builtin(key, weights, linger)
         }
         .expect("server");
-        let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 9);
+        // zero-copy submit: the shared image crosses into the executor as
+        // an Arc clone, never as a tensor copy
+        let img = Arc::new(Tensor4::randn([1, xd[1], xd[2], xd[3]], 9));
         let r = bench(
             &format!("server: 64-request burst, {key} (batch {batch})"),
             target,
             || {
                 let pending: Vec<_> = (0..64)
-                    .map(|_| server.submit(img.clone()).expect("submit"))
+                    .map(|_| server.submit(Arc::clone(&img)).expect("submit"))
                     .collect();
                 for rx in pending {
                     std::hint::black_box(rx.recv().expect("resp"));
@@ -299,5 +450,9 @@ fn main() {
 
     // catalog kernel sweep + machine-readable output
     let doc = kernels_sweep(smoke);
-    write_kernels_json(&doc);
+    write_json("BENCH_kernels.json", &doc);
+
+    // whole-network sweep: layer-by-layer vs fused pipelines
+    let doc = network_sweep(smoke);
+    write_json("BENCH_network.json", &doc);
 }

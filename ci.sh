@@ -14,10 +14,14 @@ cargo test -q
 echo "==> cargo run --release --example quickstart"
 cargo run --release --example quickstart >/dev/null
 
-echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json)"
-rm -f BENCH_kernels.json   # a stale file must not mask a failed write
+echo "==> cargo run --release -- exec --network tiny_resnet --check"
+cargo run --release -- exec --network tiny_resnet --check >/dev/null
+
+echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json)"
+rm -f BENCH_kernels.json BENCH_network.json  # stale files must not mask a failed write
 cargo bench --bench e2e_runtime -- --smoke >/dev/null
 test -s BENCH_kernels.json || { echo "FAIL: BENCH_kernels.json missing"; exit 1; }
+test -s BENCH_network.json || { echo "FAIL: BENCH_network.json missing"; exit 1; }
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"

@@ -1,130 +1,130 @@
-//! End-to-end driver: proves all three layers compose on a real workload.
+//! End-to-end driver: proves the whole stack composes on a real workload —
+//! with **zero setup**: no artifacts directory, no Python, no PJRT. The
+//! builtin `tiny_resnet` pipeline runs through `Runtime::builtin()` and the
+//! fused network executor.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_network
+//! cargo run --release --example e2e_network
 //! ```
 //!
 //! Pipeline exercised:
-//!   1. **Plan** — every layer of the tiny CNN gets its LP blocking and
-//!      GEMMINI tile (the paper's contribution) from the coordinator.
-//!   2. **Execute** — the AOT-compiled JAX+Pallas network artifact
-//!      (`artifacts/network_tiny_resnet.hlo.txt`, blocked per the same
-//!      tiling scheme) runs batched inference on the PJRT CPU client.
-//!   3. **Serve** — single-image requests stream through the batching
-//!      ConvServer for one of the layer artifacts (latency/throughput).
-//!   4. **Validate** — outputs are checked against the in-Rust naive 7NL
-//!      oracle; the accelerator-level comm/cycle story is reported from
-//!      the GEMMINI simulator for the same shapes.
-//!
-//! Results from this driver are recorded in EXPERIMENTS.md §E2E.
+//!   1. **Plan** — every stage gets its LP blocking and GEMMINI tile from
+//!      the coordinator, and the fusion planner decides per boundary
+//!      whether the inter-layer activation stays resident or materializes.
+//!   2. **Execute** — the `tiny_resnet/network` artifact runs batched
+//!      fused inference on the native backend, reporting per-stage
+//!      measured word traffic (fused boundaries must move zero words).
+//!   3. **Validate** — the fused output is checked *bitwise* against the
+//!      stage-by-stage naive 7NL oracle.
+//!   4. **Serve** — single-image requests stream through the batching
+//!      ConvServer over the whole network (latency/throughput).
+//!   5. **Accelerate** — the GEMMINI comm/cycle story for the same shapes.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use convbound::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
+use convbound::conv::{ConvShape, Precision, Tensor4};
 use convbound::coordinator::{ConvServer, Planner};
 use convbound::gemmini::{simulate_layer, GemminiConfig};
+use convbound::kernels::{
+    naive_network, FusePlan, TilePlanCache, Traffic, DEFAULT_TILE_MEM_WORDS,
+};
 use convbound::runtime::Runtime;
 use convbound::tiling::vendor_tiling;
 
-fn artifact_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 fn main() {
-    if !artifact_dir().join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-
-    // the tiny CNN the artifacts encode (must mirror model.tiny_resnet_specs)
-    let batch = 4u64;
-    let layers = [
-        ("conv1", ConvShape::new(batch, 3, 12, 15, 15, 5, 5, 2, 2)),
-        ("conv2", ConvShape::new(batch, 12, 16, 12, 12, 3, 3, 1, 1)),
-        ("conv3", ConvShape::new(batch, 16, 32, 5, 5, 3, 3, 2, 2)),
-    ];
+    let mut rt = Runtime::builtin();
+    let key = "tiny_resnet/network";
+    let net = rt.manifest().network("tiny_resnet").expect("builtin network").clone();
+    let batch = net.batch();
 
     // ---- 1. plan ----------------------------------------------------
-    println!("== planning ({} layers) ==", layers.len());
+    println!("== planning ({} stages) ==", net.stages.len());
     let planner = Planner { precision: Precision::uniform(), ..Default::default() };
-    let named: Vec<(String, ConvShape)> =
-        layers.iter().map(|(n, s)| (n.to_string(), *s)).collect();
+    let named: Vec<(String, ConvShape)> = net
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| (format!("stage{i}"), st.shape))
+        .collect();
     let plans = planner.plan_network(&named);
     for plan in &plans {
         println!(
-            "  {:<6} blocking bN={} bcI={} bcO={} bwO={} bhO={} | gemmini tile {:?} | bound {:.2e} words",
+            "  {:<7} blocking bN={} bcI={} bcO={} bwO={} bhO={} | gemmini tile {:?} | bound {:.2e} words",
             plan.name, plan.blocking.b_n, plan.blocking.b_ci, plan.blocking.b_co,
             plan.blocking.b_wo, plan.blocking.b_ho, plan.gemmini, plan.bound.max()
         );
     }
+    let cache = TilePlanCache::new();
+    let fuse = FusePlan::new(&net.stages, DEFAULT_TILE_MEM_WORDS, &cache);
+    for g in &fuse.groups {
+        if g.is_fused() {
+            println!(
+                "  fusion: stages {}..={} fused (tile N={} wO={} hO={})",
+                g.start, g.end, g.b_n, g.b_wo, g.b_ho
+            );
+        } else {
+            println!("  fusion: stage {} materialized", g.start);
+        }
+    }
 
-    // ---- 2. execute the network artifact ----------------------------
-    println!("\n== batched network inference over PJRT ==");
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    // ---- 2. execute the fused network pipeline ----------------------
+    println!("\n== batched fused network inference (native backend) ==");
     println!("platform: {}", rt.platform());
-    let spec = rt.manifest().find("tiny_resnet/network").expect("network artifact").clone();
-    let inputs: Vec<Tensor4> = spec
+    let spec = rt.manifest().find(key).expect("network artifact").clone();
+    let inputs: Vec<Arc<Tensor4>> = spec
         .inputs
         .iter()
         .enumerate()
-        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 40 + i as u64))
+        .map(|(i, d)| Arc::new(Tensor4::randn([d[0], d[1], d[2], d[3]], 40 + i as u64)))
         .collect();
-    let refs: Vec<&Tensor4> = inputs.iter().collect();
-    rt.load("tiny_resnet/network").expect("compile network");
-    // warmup + timed steps
-    let _ = rt.run("tiny_resnet/network", &refs).expect("warmup");
-    let steps = 20;
+    rt.load(key).expect("load network");
+    // warmup + timed steps over the zero-copy Arc path
+    let _ = rt.run_arc(key, &inputs).expect("warmup");
+    let steps = 50;
     let t0 = Instant::now();
     let mut out = None;
     for _ in 0..steps {
-        out = Some(rt.run("tiny_resnet/network", &refs).expect("run"));
+        out = Some(rt.run_arc(key, &inputs).expect("run"));
     }
     let dt = t0.elapsed().as_secs_f64();
     let out = out.unwrap();
-    let macs = spec.updates as f64;
     println!(
         "ran {steps} batched steps in {dt:.3}s -> {:.1} inf/s, {:.2} MMAC/s",
         steps as f64 * batch as f64 / dt,
-        steps as f64 * macs / dt / 1e6
+        steps as f64 * spec.updates as f64 / dt / 1e6
     );
-
-    // ---- 4a. validate against the naive oracle ----------------------
-    let mut act = inputs[0].clone();
-    for (li, (_, shape)) in layers.iter().enumerate() {
-        let want_w = shape.in_w() as usize;
-        let want_h = shape.in_h() as usize;
-        if act.dims[2] < want_w || act.dims[3] < want_h {
-            let mut padded = Tensor4::zeros([act.dims[0], act.dims[1], want_w, want_h]);
-            for a in 0..act.dims[0] {
-                for b in 0..act.dims[1] {
-                    for c in 0..act.dims[2] {
-                        for d in 0..act.dims[3] {
-                            *padded.at_mut(a, b, c, d) = act.at(a, b, c, d);
-                        }
-                    }
-                }
-            }
-            act = padded;
-        }
-        act = conv7nl_naive(&act, &inputs[1 + li], shape);
-        for v in act.data.iter_mut() {
-            *v = v.max(0.0);
-        }
+    let stage_traffic = rt.stage_traffic(key).expect("instrumented network");
+    for (k, t) in stage_traffic.iter().enumerate() {
+        println!(
+            "  stage {k}: input {} + filter {} + output {} words",
+            t.input_words, t.filter_words, t.output_words
+        );
     }
-    let rel = out.rel_l2(&act);
-    println!("numerics vs naive 7NL oracle: rel_l2 = {rel:.2e} {}", if rel < 1e-4 { "OK" } else { "FAIL" });
-    assert!(rel < 1e-4, "network output diverged from the oracle");
+    let fused_total = Traffic::sum(&stage_traffic).total();
+    println!("  total measured traffic (all steps): {fused_total} words");
 
-    // ---- 3. serve single-image requests through the batcher ---------
-    println!("\n== batched serving (unit3x3/blocked) ==");
-    let layer_spec = rt.manifest().find("unit3x3/blocked").expect("layer artifact").clone();
-    let wd = &layer_spec.inputs[1];
-    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 7);
-    let server = ConvServer::start(
-        artifact_dir(), "unit3x3/blocked", weights.clone(), Duration::from_millis(2),
-    )
-    .expect("server");
-    let xd = layer_spec.inputs[0].clone();
+    // ---- 3. validate bitwise against the staged naive oracle --------
+    let frefs: Vec<&Tensor4> = inputs[1..].iter().map(|a| a.as_ref()).collect();
+    let want = naive_network(&inputs[0], &frefs, &net.stages);
+    let diff = out.max_abs_diff(&want);
+    println!(
+        "numerics vs staged naive 7NL oracle: max_abs_diff = {diff} {}",
+        if diff == 0.0 { "OK (bitwise)" } else { "FAIL" }
+    );
+    assert_eq!(diff, 0.0, "fused network diverged from the staged oracle");
+
+    // ---- 4. serve whole-network requests through the batcher --------
+    println!("\n== batched network serving ({key}) ==");
+    let weights: Vec<Tensor4> = spec.inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 7 + i as u64))
+        .collect();
+    let server =
+        ConvServer::start_builtin_network(key, weights, Duration::from_millis(2))
+            .expect("server");
+    let xd = spec.inputs[0].clone();
     let requests = 64;
     let t0 = Instant::now();
     let pending: Vec<_> = (0..requests)
@@ -139,6 +139,7 @@ fn main() {
     }
     let wall = t0.elapsed().as_secs_f64();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let batch_size = server.batch_size();
     let stats = server.shutdown().expect("shutdown");
     println!(
         "{requests} requests in {wall:.3}s -> {:.1} req/s; latency p50 {:.2} ms p95 {:.2} ms",
@@ -149,28 +150,24 @@ fn main() {
     println!(
         "batches {} (size {}), padded slots {} ({:.0}% waste)",
         stats.batches,
-        server_batch(&layer_spec),
+        batch_size,
         stats.padded_slots,
-        stats.padded_slots as f64 / (stats.batches as f64 * server_batch(&layer_spec) as f64) * 100.0
+        stats.padded_slots as f64 / (stats.batches.max(1) as f64 * batch_size as f64) * 100.0
     );
 
-    // ---- 4b. accelerator-level story for the same shapes ------------
-    println!("\n== GEMMINI comm/cycles for the tiny network's shapes ==");
+    // ---- 5. accelerator-level story for the same shapes -------------
+    println!("\n== GEMMINI comm/cycles for the network's shapes ==");
     let cfg = GemminiConfig::default();
-    for (plan, (name, shape)) in plans.iter().zip(&layers) {
-        let ours = simulate_layer(shape, &cfg, &plan.gemmini);
-        let vend = simulate_layer(shape, &cfg, &vendor_tiling(shape, &cfg));
+    for (plan, st) in plans.iter().zip(&net.stages) {
+        let ours = simulate_layer(&st.shape, &cfg, &plan.gemmini);
+        let vend = simulate_layer(&st.shape, &cfg, &vendor_tiling(&st.shape, &cfg));
         println!(
-            "  {:<6} comm {:>6.1}% of vendor, cycles {:.2}x, MXU util {:.1}%",
-            name,
+            "  {:<7} comm {:>6.1}% of vendor, cycles {:.2}x, MXU util {:.1}%",
+            plan.name,
             ours.comm_rows as f64 / vend.comm_rows as f64 * 100.0,
             ours.cycles as f64 / vend.cycles as f64,
             ours.mxu_utilization * 100.0
         );
     }
     println!("\nE2E driver complete.");
-}
-
-fn server_batch(spec: &convbound::runtime::ArtifactSpec) -> usize {
-    spec.inputs[0][0]
 }

@@ -11,7 +11,7 @@ pub mod training;
 
 pub use catalog::{alexnet_layers, find_layer, resnet50_layers, scaled};
 pub use naive::{assert_conv_operands, conv7nl_naive};
-pub use shapes::{ConvShape, Precision};
+pub use shapes::{ConvShape, NetworkStage, Precision};
 pub use tensor::Tensor4;
 pub use training::{backward_shapes, dfilter_naive, dinput_naive, TrainingShapes};
 
@@ -24,9 +24,6 @@ pub fn paper_operands(s: &ConvShape, seed: u64) -> (Tensor4, Tensor4) {
         [s.n as usize, s.c_i as usize, s.in_w() as usize, s.in_h() as usize],
         seed,
     );
-    let w = Tensor4::randn(
-        [s.c_i as usize, s.c_o as usize, s.w_f as usize, s.h_f as usize],
-        seed + 1,
-    );
+    let w = Tensor4::randn(s.filter_dims(), seed + 1);
     (x, w)
 }

@@ -158,6 +158,30 @@ impl ConvShape {
         self.n = n;
         self
     }
+
+    /// Filter tensor dims `(cI, cO, wF, hF)` as tensor-shape usizes — the
+    /// one place the filter layout is spelled out for tensor construction
+    /// and validation.
+    pub fn filter_dims(&self) -> [usize; 4] {
+        [
+            self.c_i as usize,
+            self.c_o as usize,
+            self.w_f as usize,
+            self.h_f as usize,
+        ]
+    }
+}
+
+/// One stage of a served network pipeline: a conv layer plus the
+/// word-precision model its tile plan is solved under. Defined here, next
+/// to [`ConvShape`] and [`Precision`], so the execution engine
+/// (`kernels/fuse`, `kernels/exec`) can consume stage chains without
+/// depending on the manifest layer; `runtime::manifest` re-exports it and
+/// owns the chain-validation logic (`NetworkSpec`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkStage {
+    pub shape: ConvShape,
+    pub precision: Precision,
 }
 
 impl fmt::Display for ConvShape {

@@ -15,10 +15,21 @@
 //!
 //! With the default native backend a server needs no artifacts at all:
 //! [`ConvServer::start_builtin`] serves the synthetic
-//! [`Manifest::builtin`] layers end to end.
+//! [`Manifest::builtin`] layers end to end, and
+//! [`ConvServer::start_builtin_network`] serves whole-network requests
+//! through the fused pipeline (one filter tensor per stage, one submit per
+//! image, the response is the final stage's activation slice).
+//!
+//! Zero-copy path: [`ConvServer::submit`] takes anything convertible into
+//! an `Arc<Tensor4>`, weights are held in `Arc`s for the lifetime of the
+//! executor, and each assembled batch reaches the backend through
+//! [`Runtime::run_arc`] — the native `"tiled"`/`"network"` dispatch hands
+//! those `Arc`s straight to its worker pool instead of cloning request
+//! tensors per batch.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -39,7 +50,7 @@ pub struct ConvResponse {
 
 struct Job {
     id: u64,
-    image: Tensor4,
+    image: Arc<Tensor4>,
     enqueued: Instant,
     reply: mpsc::Sender<ConvResponse>,
 }
@@ -108,7 +119,7 @@ impl ConvServer {
         ConvServer::start_source(
             Source::Dir(artifact_dir.as_ref().to_path_buf()),
             key,
-            weights,
+            vec![weights],
             linger,
         )
     }
@@ -121,13 +132,40 @@ impl ConvServer {
         weights: Tensor4,
         linger: Duration,
     ) -> Result<ConvServer> {
+        ConvServer::start_source(Source::Builtin, key, vec![weights], linger)
+    }
+
+    /// Start a server for a whole-network artifact from a directory: one
+    /// fixed filter tensor per stage, requests batched exactly like the
+    /// single-layer path, responses carrying the final stage's activation.
+    pub fn start_network(
+        artifact_dir: impl AsRef<Path>,
+        key: &str,
+        weights: Vec<Tensor4>,
+        linger: Duration,
+    ) -> Result<ConvServer> {
+        ConvServer::start_source(
+            Source::Dir(artifact_dir.as_ref().to_path_buf()),
+            key,
+            weights,
+            linger,
+        )
+    }
+
+    /// Start a whole-network server over the built-in native manifest
+    /// (key: `tiny_resnet/network`, one filter per stage).
+    pub fn start_builtin_network(
+        key: &str,
+        weights: Vec<Tensor4>,
+        linger: Duration,
+    ) -> Result<ConvServer> {
         ConvServer::start_source(Source::Builtin, key, weights, linger)
     }
 
     fn start_source(
         source: Source,
         key: &str,
-        weights: Tensor4,
+        weights: Vec<Tensor4>,
         linger: Duration,
     ) -> Result<ConvServer> {
         // Validate shapes from the manifest up front (plain data,
@@ -138,21 +176,34 @@ impl ConvServer {
             .find(key)
             .ok_or_else(|| err!("artifact '{key}' not found"))?
             .clone();
-        if spec.inputs.len() != 2 {
-            return Err(err!("'{key}' is not a single-layer artifact"));
+        if spec.inputs.len() < 2 {
+            return Err(err!("'{key}' takes no weights — cannot serve it"));
+        }
+        if weights.len() != spec.inputs.len() - 1 {
+            return Err(err!(
+                "artifact '{key}' wants {} weight tensors, got {}",
+                spec.inputs.len() - 1,
+                weights.len()
+            ));
         }
         let in_dims = {
             let d = &spec.inputs[0];
             [d[0], d[1], d[2], d[3]]
         };
-        let w_dims = &spec.inputs[1];
-        if weights.dims.to_vec() != *w_dims {
-            return Err(err!(
-                "weights shape {:?} != artifact filter {:?}",
-                weights.dims,
-                w_dims
-            ));
+        for (i, w) in weights.iter().enumerate() {
+            let want = &spec.inputs[i + 1];
+            if w.dims.to_vec() != *want {
+                return Err(err!(
+                    "weights[{i}] shape {:?} != artifact filter {:?}",
+                    w.dims,
+                    want
+                ));
+            }
         }
+        // weights live behind Arcs for the whole executor lifetime: each
+        // batch reuses them with zero copies
+        let weights: Vec<Arc<Tensor4>> =
+            weights.into_iter().map(Arc::new).collect();
         let key = key.to_string();
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -208,15 +259,22 @@ impl ConvServer {
                             }
                         }
                     }
-                    // assemble the batch (zero-padding the tail)
+                    // assemble the batch (zero-padding the tail); the
+                    // batch tensor and the shared weights reach the
+                    // backend as Arcs — no further copies on the way to
+                    // the worker pool
                     let mut x = Tensor4::zeros(in_dims);
                     let img_len = in_dims[1] * in_dims[2] * in_dims[3];
                     for (slot, job) in queue.iter().enumerate() {
                         x.data[slot * img_len..(slot + 1) * img_len]
                             .copy_from_slice(&job.image.data);
                     }
+                    let mut operands: Vec<Arc<Tensor4>> =
+                        Vec::with_capacity(1 + weights.len());
+                    operands.push(Arc::new(x));
+                    operands.extend(weights.iter().cloned());
                     let t0 = Instant::now();
-                    let out = rt.run(&key, &[&x, &weights])?;
+                    let out = rt.run_arc(&key, &operands)?;
                     stats.total_exec_secs += t0.elapsed().as_secs_f64();
                     stats.batches += 1;
                     stats.requests += queue.len() as u64;
@@ -260,8 +318,14 @@ impl ConvServer {
     }
 
     /// Submit one image (shape (1, cI, WI, HI)); returns the response
-    /// channel immediately.
-    pub fn submit(&self, image: Tensor4) -> Result<mpsc::Receiver<ConvResponse>> {
+    /// channel immediately. Accepts an owned [`Tensor4`] or an
+    /// `Arc<Tensor4>` — either way the image crosses into the executor
+    /// without being cloned.
+    pub fn submit(
+        &self,
+        image: impl Into<Arc<Tensor4>>,
+    ) -> Result<mpsc::Receiver<ConvResponse>> {
+        let image: Arc<Tensor4> = image.into();
         let want = [1, self.in_dims[1], self.in_dims[2], self.in_dims[3]];
         if image.dims != want {
             return Err(err!("image shape {:?} != {:?}", image.dims, want));

@@ -12,14 +12,25 @@
 //!   probe of the shape and caches the winner. Probes above a MAC budget
 //!   skip measurement and trust the heuristic, so selection never costs
 //!   more than a couple of probe convolutions.
+//! * **persistence** — [`Autotuner::save`] writes the cached choices (and
+//!   the tiled-engine word traffic of each shape, which the counters
+//!   measure exactly equal to [`super::exec::expected_traffic`]) to a JSON
+//!   sidecar; [`Autotuner::warm_start`] reloads them on the next process
+//!   start so servers skip the probe convolutions entirely. A sidecar
+//!   written under a different memory budget or precision is ignored —
+//!   its choices answered a different planning question.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
+use crate::err;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
 
-use super::exec::conv_tiled;
+use super::exec::{conv_tiled, expected_traffic};
 use super::im2col::conv_im2col;
 use super::plan::{TilePlan, TilePlanCache};
 
@@ -56,6 +67,15 @@ impl KernelKind {
 /// Probes above this many MACs trust the heuristic instead of measuring.
 const MEASURE_BUDGET_MACS: u64 = 200_000_000;
 
+/// One cached selection: the winning kernel plus the word traffic the
+/// tiled engine charges for the full shape (its counters match the
+/// analytic model exactly, so this *is* the measured tiled traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Tuned {
+    kernel: KernelKind,
+    traffic_words: u64,
+}
+
 /// Per-shape kernel chooser with a shared plan cache.
 pub struct Autotuner {
     pub mem_words: f64,
@@ -63,7 +83,7 @@ pub struct Autotuner {
     /// probing and execution always use the same plan either way)
     pub precision: Precision,
     plans: TilePlanCache,
-    choices: Mutex<HashMap<ConvShape, KernelKind>>,
+    choices: Mutex<HashMap<ConvShape, Tuned>>,
 }
 
 impl Autotuner {
@@ -100,20 +120,148 @@ impl Autotuner {
     /// probe of `s`, cache and return the fastest. Falls back to
     /// [`Autotuner::heuristic`] when even the probe would be too large.
     pub fn select(&self, s: &ConvShape) -> KernelKind {
-        if let Some(k) = self.choices.lock().expect("choices poisoned").get(s) {
-            return *k;
+        if let Some(t) = self.choices.lock().expect("choices poisoned").get(s) {
+            return t.kernel;
         }
         let probe = s.with_batch(s.n.min(2));
-        let choice = if probe.updates() > MEASURE_BUDGET_MACS {
+        let kernel = if probe.updates() > MEASURE_BUDGET_MACS {
             Autotuner::heuristic(s)
         } else {
             self.measure(&probe)
         };
+        // tiled traffic is only meaningful (and its plan only needed) when
+        // the tiled engine won — the heuristic early-out stays LP-free
+        let traffic_words = if kernel == KernelKind::Tiled {
+            expected_traffic(&self.plan(s)).total()
+        } else {
+            0
+        };
         self.choices
             .lock()
             .expect("choices poisoned")
-            .insert(*s, choice);
-        choice
+            .insert(*s, Tuned { kernel, traffic_words });
+        kernel
+    }
+
+    /// Every cached `(shape, kernel, tiled traffic words)` triple, in a
+    /// deterministic order (for stable sidecar files and reports).
+    pub fn tuned(&self) -> Vec<(ConvShape, KernelKind, u64)> {
+        let mut out: Vec<(ConvShape, KernelKind, u64)> = self
+            .choices
+            .lock()
+            .expect("choices poisoned")
+            .iter()
+            .map(|(s, t)| (*s, t.kernel, t.traffic_words))
+            .collect();
+        out.sort_by_key(|(s, _, _)| {
+            [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h]
+        });
+        out
+    }
+
+    /// Persist the cached kernel choices (and their tiled traffic) to a
+    /// JSON sidecar, together with the `(M, precision)` configuration they
+    /// were selected under.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("mem_words".to_string(), Json::Num(self.mem_words));
+        doc.insert(
+            "precision".to_string(),
+            Json::Arr(vec![
+                Json::Num(self.precision.p_i),
+                Json::Num(self.precision.p_f),
+                Json::Num(self.precision.p_o),
+            ]),
+        );
+        let entries: Vec<Json> = self
+            .tuned()
+            .into_iter()
+            .map(|(s, k, words)| {
+                let mut e = std::collections::BTreeMap::new();
+                e.insert(
+                    "shape".to_string(),
+                    Json::Arr(
+                        [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h]
+                            .iter()
+                            .map(|&d| Json::Num(d as f64))
+                            .collect(),
+                    ),
+                );
+                e.insert("kernel".to_string(), Json::Str(k.name().to_string()));
+                e.insert("traffic_words".to_string(), Json::Num(words as f64));
+                Json::Obj(e)
+            })
+            .collect();
+        doc.insert("entries".to_string(), Json::Arr(entries));
+        let path = path.as_ref();
+        std::fs::write(path, format!("{}\n", Json::Obj(doc)))
+            .with_context(|| format!("writing autotune sidecar {}", path.display()))
+    }
+
+    /// Warm-start the choice cache from a sidecar written by a previous
+    /// process. Returns the number of choices loaded: `0` when the file
+    /// does not exist or was written under a different `(M, precision)`
+    /// configuration (stale sidecars are ignored, not trusted). Malformed
+    /// files are an error.
+    pub fn warm_start(&self, path: impl AsRef<Path>) -> Result<usize> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(0);
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading autotune sidecar {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| err!("autotune sidecar {}: {e}", path.display()))?;
+        if v.get("mem_words").as_f64() != Some(self.mem_words) {
+            return Ok(0);
+        }
+        let p = v.get("precision").as_arr().unwrap_or(&[]);
+        if p.len() != 3
+            || p[0].as_f64() != Some(self.precision.p_i)
+            || p[1].as_f64() != Some(self.precision.p_f)
+            || p[2].as_f64() != Some(self.precision.p_o)
+        {
+            return Ok(0);
+        }
+        // parse everything before touching the live cache: a malformed
+        // sidecar must be rejected whole, not half-applied
+        let mut entries = Vec::new();
+        for e in v.get("entries").as_arr().unwrap_or(&[]) {
+            let dims = e
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| err!("sidecar entry missing 'shape'"))?;
+            if dims.len() != 9 {
+                return Err(err!("sidecar shape wants 9 dims, got {}", dims.len()));
+            }
+            let d: Vec<u64> = dims
+                .iter()
+                .map(|x| {
+                    x.as_u64_strict().ok_or_else(|| {
+                        err!("sidecar shape dim '{x}' is not an integer")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let shape = ConvShape::new(
+                d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7], d[8],
+            );
+            let kernel = e
+                .get("kernel")
+                .as_str()
+                .and_then(KernelKind::parse)
+                .ok_or_else(|| err!("sidecar entry has an unknown kernel"))?;
+            let traffic_words =
+                e.get("traffic_words").as_u64_strict().ok_or_else(|| {
+                    err!("sidecar entry has a malformed 'traffic_words'")
+                })?;
+            entries.push((shape, Tuned { kernel, traffic_words }));
+        }
+        let loaded = entries.len();
+        let mut choices = self.choices.lock().expect("choices poisoned");
+        for (shape, tuned) in entries {
+            choices.insert(shape, tuned);
+        }
+        Ok(loaded)
     }
 
     fn measure(&self, s: &ConvShape) -> KernelKind {
@@ -185,6 +333,67 @@ mod tests {
         let got = tuner.run(&x, &w, &s);
         let want = conv7nl_naive(&x, &w, &s);
         assert!(got.rel_l2(&want) < 1e-4, "rel {}", got.rel_l2(&want));
+    }
+
+    #[test]
+    fn sidecar_roundtrips_and_rejects_stale_configs() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "convbound_autotune_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+
+        let tuner = Autotuner::new(4096.0);
+        let a = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let b = ConvShape::new(1, 2, 3, 4, 4, 3, 3, 2, 2);
+        let ka = tuner.select(&a);
+        let kb = tuner.select(&b);
+        assert_eq!(tuner.tuned().len(), 2);
+        for (_, k, words) in tuner.tuned() {
+            if k == KernelKind::Tiled {
+                assert!(words > 0, "tiled choices record their traffic");
+            } else {
+                assert_eq!(words, 0, "non-tiled choices carry no tiled traffic");
+            }
+        }
+        tuner.save(&path).expect("save sidecar");
+
+        // same config: choices come back without re-probing
+        let warm = Autotuner::new(4096.0);
+        assert_eq!(warm.warm_start(&path).expect("warm start"), 2);
+        assert_eq!(warm.select(&a), ka);
+        assert_eq!(warm.select(&b), kb);
+        assert_eq!(warm.tuned(), tuner.tuned());
+
+        // different memory budget: the sidecar answers a different
+        // planning question and must be ignored
+        let other = Autotuner::new(8192.0);
+        assert_eq!(other.warm_start(&path).expect("stale ok"), 0);
+        assert!(other.tuned().is_empty());
+
+        // different precision: ignored too
+        let mixed = Autotuner::with_precision(4096.0, Precision::paper_mixed());
+        assert_eq!(mixed.warm_start(&path).expect("stale ok"), 0);
+
+        // missing file is not an error; garbage is
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(tuner.warm_start(&path).expect("missing ok"), 0);
+        std::fs::write(&path, "not json").unwrap();
+        assert!(tuner.warm_start(&path).is_err());
+        // structurally valid JSON with a non-integer shape dim is rejected,
+        // not coerced into a phantom shape
+        std::fs::write(
+            &path,
+            r#"{"mem_words":4096,"precision":[1,1,1],"entries":
+               [{"shape":[2.5,3,4,6,6,3,3,1,1],"kernel":"tiled","traffic_words":1}]}"#,
+        )
+        .unwrap();
+        assert!(tuner.warm_start(&path).is_err());
+        // a rejected sidecar must not have half-applied: cache unchanged
+        assert_eq!(tuner.tuned().len(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -28,13 +28,14 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::conv::{ConvShape, Tensor4};
+use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Tensor4};
 use crate::util::threadpool::ThreadPool;
 
+use super::fuse::{group_spans, group_tiles, input_span, FuseGroup, FusePlan};
 use super::gemm::{self, TileDims};
 use super::pack;
 use super::plan::TilePlan;
-use super::tiles::{self, OutTile, RedTile};
+use super::tiles::{self, Blk, OutTile, RedTile};
 
 /// Worker count for tile-execution pools: cores minus one (the spare runs
 /// the batcher/executor threads), capped at 8 — packed-tile MACs saturate
@@ -60,6 +61,17 @@ pub struct Traffic {
 impl Traffic {
     pub fn total(&self) -> u64 {
         self.input_words + self.filter_words + self.output_words
+    }
+
+    /// Element-wise sum over a slice of per-stage snapshots.
+    pub fn sum(stages: &[Traffic]) -> Traffic {
+        let mut t = Traffic::default();
+        for s in stages {
+            t.input_words += s.input_words;
+            t.filter_words += s.filter_words;
+            t.output_words += s.output_words;
+        }
+        t
     }
 }
 
@@ -293,6 +305,264 @@ pub fn expected_traffic(plan: &TilePlan) -> Traffic {
         t.output_words += ot.n.len * ot.co.len * ot.wo.len * ot.ho.len;
     }
     t
+}
+
+// ---------------- network pipelines ----------------
+
+/// Per-stage traffic counters for a network pipeline. Each stage owns one
+/// [`TrafficCounters`] behind an `Arc` so materialized stages can hand it
+/// straight to [`conv_tiled_parallel`] while fused sweeps charge it from
+/// worker threads.
+#[derive(Debug, Clone)]
+pub struct NetTrafficCounters {
+    stages: Vec<Arc<TrafficCounters>>,
+}
+
+impl NetTrafficCounters {
+    pub fn new(stages: usize) -> NetTrafficCounters {
+        NetTrafficCounters {
+            stages: (0..stages).map(|_| Arc::new(TrafficCounters::new())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Stage `k`'s counters.
+    pub fn stage(&self, k: usize) -> &Arc<TrafficCounters> {
+        &self.stages[k]
+    }
+
+    /// Per-stage snapshots, in stage order.
+    pub fn snapshot(&self) -> Vec<Traffic> {
+        self.stages.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// Sum of all stages.
+    pub fn total(&self) -> Traffic {
+        Traffic::sum(&self.snapshot())
+    }
+
+    pub fn reset(&self) {
+        for c in &self.stages {
+            c.reset();
+        }
+    }
+}
+
+/// Validate the (image, per-stage filters) operands of a network chain.
+fn assert_network_operands(image: &Tensor4, filters: &[&Tensor4], stages: &[NetworkStage]) {
+    assert!(!stages.is_empty(), "empty network");
+    assert_eq!(filters.len(), stages.len(), "one filter per stage");
+    crate::conv::assert_conv_operands(image, filters[0], &stages[0].shape);
+    for (k, st) in stages.iter().enumerate().skip(1) {
+        assert_eq!(
+            filters[k].dims,
+            st.shape.filter_dims(),
+            "stage {k} filter shape mismatch"
+        );
+    }
+}
+
+/// Execute one fused tile: copy the halo'd image patch out of `input`
+/// (the only input-side main-memory traffic the group charges), then run
+/// each stage as a patch-local [`conv7nl_naive`] — identical per-element
+/// accumulation order, so the fused result is bitwise identical to the
+/// stage-by-stage oracle — holding every inter-stage activation in the
+/// scratch tensor that ping-pongs between stages.
+fn run_fused_tile(
+    input: &Tensor4,
+    filters: &[&Tensor4],
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    tn: Blk,
+    tw: Blk,
+    th: Blk,
+    counters: &NetTrafficCounters,
+) -> Tensor4 {
+    let spans = group_spans(stages, g.start, g.end, tw, th);
+    let head = &stages[g.start].shape;
+    let in_sp = input_span(head, &spans[0]);
+    let bn = tn.len as usize;
+    let ci0 = head.c_i as usize;
+    let (iw, ih) = (in_sp.w_len() as usize, in_sp.h_len() as usize);
+    let mut cur = Tensor4::zeros([bn, ci0, iw, ih]);
+    // the h-axis is contiguous in both the source tensor and the patch:
+    // copy whole rows, no per-element bounds checks on the hot path
+    let mut k = 0;
+    for n in 0..bn {
+        let na = tn.start as usize + n;
+        for c in 0..ci0 {
+            for a in 0..iw {
+                let wa = in_sp.w0 as usize + a;
+                let src = input.idx(na, c, wa, in_sp.h0 as usize);
+                cur.data[k..k + ih].copy_from_slice(&input.data[src..src + ih]);
+                k += ih;
+            }
+        }
+    }
+    counters.stage(g.start).add_input(cur.len() as u64);
+    for (ki, stage) in (g.start..=g.end).enumerate() {
+        let st = &stages[stage];
+        let sp = &spans[ki];
+        let sub = ConvShape {
+            n: tn.len,
+            w_o: sp.w_len(),
+            h_o: sp.h_len(),
+            ..st.shape
+        };
+        cur = conv7nl_naive(&cur, filters[stage], &sub);
+        counters.stage(stage).add_filter(st.shape.filter_size());
+    }
+    counters.stage(g.end).add_output(cur.len() as u64);
+    cur
+}
+
+/// Write one finished fused tile into the network output tensor
+/// (contiguous h-rows on both sides, so whole-row copies).
+fn scatter_network(out: &mut Tensor4, tn: Blk, tw: Blk, th: Blk, tile: &Tensor4) {
+    let bh = tile.dims[3];
+    let mut k = 0;
+    for n in 0..tile.dims[0] {
+        for c in 0..tile.dims[1] {
+            for a in 0..tile.dims[2] {
+                let dst = out.idx(
+                    tn.start as usize + n,
+                    c,
+                    tw.start as usize + a,
+                    th.start as usize,
+                );
+                out.data[dst..dst + bh].copy_from_slice(&tile.data[k..k + bh]);
+                k += bh;
+            }
+        }
+    }
+}
+
+fn network_out_dims(stages: &[NetworkStage], g: &FuseGroup) -> [usize; 4] {
+    let s = &stages[g.end].shape;
+    [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize]
+}
+
+/// Serial fused network execution with per-stage traffic accounting.
+/// Fused groups sweep the last stage's output tiles, recomputing upstream
+/// halo regions in scratch; materialized (single-stage) groups run the
+/// stage's LP-tiled engine. Within fused groups the per-element operation
+/// order equals the oracle's, so a plan that fuses end to end is bitwise
+/// identical to [`super::fuse::naive_network`] (materialized stages use
+/// the tiled engine's accumulation order and agree to float tolerance).
+pub fn conv_network_fused_counted(
+    image: &Tensor4,
+    filters: &[&Tensor4],
+    plan: &FusePlan,
+    counters: &NetTrafficCounters,
+) -> Tensor4 {
+    assert_network_operands(image, filters, &plan.stages);
+    assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let mut act: Option<Tensor4> = None;
+    for g in &plan.groups {
+        let input: &Tensor4 = act.as_ref().unwrap_or(image);
+        let next = if g.is_fused() {
+            let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
+            for (tn, tw, th) in group_tiles(&plan.stages, g) {
+                let tile =
+                    run_fused_tile(input, filters, &plan.stages, g, tn, tw, th, counters);
+                scatter_network(&mut out, tn, tw, th, &tile);
+            }
+            out
+        } else {
+            let k = g.start;
+            conv_tiled_counted(
+                input,
+                filters[k],
+                &plan.stage_plans[k],
+                counters.stage(k),
+            )
+        };
+        act = Some(next);
+    }
+    act.expect("network has at least one stage")
+}
+
+/// Fused network execution with tiles of each fused group fanned out over
+/// a [`ThreadPool`] (materialized stages fan out through
+/// [`conv_tiled_parallel`]). Bitwise identical to the serial path: every
+/// tile is computed by one worker in the same per-element order.
+pub fn conv_network_fused(
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &Arc<FusePlan>,
+    pool: &ThreadPool,
+    counters: &NetTrafficCounters,
+) -> Tensor4 {
+    {
+        let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
+        assert_network_operands(image, &frefs, &plan.stages);
+    }
+    assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let mut act: Arc<Tensor4> = Arc::clone(image);
+    for (gi, g) in plan.groups.iter().enumerate() {
+        let next = if g.is_fused() {
+            let tiles = group_tiles(&plan.stages, g);
+            let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
+            let (x2, p2) = (Arc::clone(&act), Arc::clone(plan));
+            let f2: Vec<Arc<Tensor4>> = filters.to_vec();
+            let c2 = counters.clone();
+            let bufs = pool.map(tiles.clone(), move |(tn, tw, th)| {
+                let g = p2.groups[gi];
+                let frefs: Vec<&Tensor4> = f2.iter().map(|f| f.as_ref()).collect();
+                run_fused_tile(&x2, &frefs, &p2.stages, &g, tn, tw, th, &c2)
+            });
+            for ((tn, tw, th), tile) in tiles.iter().zip(&bufs) {
+                scatter_network(&mut out, *tn, *tw, *th, tile);
+            }
+            out
+        } else {
+            let k = g.start;
+            conv_tiled_parallel(
+                &act,
+                &filters[k],
+                &plan.stage_plans[k],
+                pool,
+                counters.stage(k),
+            )
+        };
+        act = Arc::new(next);
+    }
+    Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
+}
+
+/// Layer-by-layer baseline: every stage runs the LP-tiled engine and every
+/// activation round-trips through a materialized tensor — the traffic the
+/// fusion planner's `fused ≤ unfused` claim is measured against.
+pub fn conv_network_staged(
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &FusePlan,
+    pool: &ThreadPool,
+    counters: &NetTrafficCounters,
+) -> Tensor4 {
+    {
+        let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
+        assert_network_operands(image, &frefs, &plan.stages);
+    }
+    assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let mut act: Arc<Tensor4> = Arc::clone(image);
+    for k in 0..plan.stages.len() {
+        act = Arc::new(conv_tiled_parallel(
+            &act,
+            &filters[k],
+            &plan.stage_plans[k],
+            pool,
+            counters.stage(k),
+        ));
+    }
+    Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
 }
 
 #[cfg(test)]

@@ -1,0 +1,475 @@
+//! The multi-layer fusion planner: walks adjacent stages of a
+//! [`NetworkSpec`] chain and decides, per boundary, whether the two stages
+//! execute inside one tile sweep (fused — the inter-layer activation stays
+//! resident in scratch buffers and never touches main memory) or
+//! materialize the full activation tensor between them.
+//!
+//! **Halo math.** Sweeping output tiles of the *last* stage of a fused
+//! group, an output block of extent `e` needs an input span of
+//! `σ·(e − 1) + f` rows from the stage above ([`halo_extent`]); applied
+//! recursively up the group, each upstream stage's required activation
+//! tile grows by one halo per layer. [`group_spans`] performs exactly this
+//! walk for one concrete tile and is shared by the fused executor and the
+//! analytic traffic model, so measured and expected traffic agree word for
+//! word.
+//!
+//! **Fuse-vs-materialize rule** (DESIGN.md §7). A boundary fuses when
+//! (a) a tile of the candidate group exists whose peak ping-pong working
+//! set — input patch + output patch + filter of the widest stage — fits in
+//! the memory budget `M` ([`fit_group_tile`]), and (b) the analytic fused
+//! traffic of the extended group does not exceed the traffic of leaving
+//! the boundary materialized (the current group plus the next stage run
+//! layer-by-layer through the LP-tiled engine). Rule (b) guards against
+//! fusing past the point where halo recompute and per-tile filter re-reads
+//! outweigh the saved activation round-trip, and makes `fused ≤ unfused`
+//! hold by construction.
+
+use std::sync::Arc;
+
+use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Tensor4};
+
+use super::exec::{expected_traffic, Traffic};
+use super::plan::{TilePlan, TilePlanCache};
+use super::tiles::{split, Blk};
+
+/// Input span one output block of `len` elements needs upstream:
+/// `σ·(len − 1) + f`.
+pub fn halo_extent(len: u64, stride: u64, filter: u64) -> u64 {
+    stride * (len.max(1) - 1) + filter
+}
+
+/// One contiguous run of stages executed per tile sweep. `start..=end`
+/// index into the network's stage list; `b_n`/`b_wo`/`b_ho` are the
+/// output-tile blocks of the *last* stage the fused sweep iterates
+/// (meaningful when `is_fused()`; single-stage groups execute through the
+/// stage's own LP [`TilePlan`] instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuseGroup {
+    pub start: usize,
+    pub end: usize,
+    pub b_n: u64,
+    pub b_wo: u64,
+    pub b_ho: u64,
+}
+
+impl FuseGroup {
+    pub fn len(&self) -> usize {
+        self.end - self.start + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// More than one stage per tile sweep?
+    pub fn is_fused(&self) -> bool {
+        self.len() > 1
+    }
+}
+
+/// The execution plan for one network pipeline: per-stage LP tile plans
+/// (used by materialized stages) plus the fused grouping.
+#[derive(Debug, Clone)]
+pub struct FusePlan {
+    pub stages: Vec<NetworkStage>,
+    /// fast-memory budget (words) the grouping was decided under
+    pub mem_words: f64,
+    pub stage_plans: Vec<Arc<TilePlan>>,
+    pub groups: Vec<FuseGroup>,
+}
+
+impl FusePlan {
+    /// Plan a network: solve every stage's blocking LP (through the shared
+    /// cache) and greedily fuse boundaries under the rule above.
+    pub fn new(stages: &[NetworkStage], mem_words: f64, cache: &TilePlanCache) -> FusePlan {
+        assert!(!stages.is_empty(), "network must have at least one stage");
+        let stage_plans: Vec<Arc<TilePlan>> = stages
+            .iter()
+            .map(|st| cache.plan(&st.shape, st.precision, mem_words))
+            .collect();
+        let singles: Vec<u64> = stage_plans
+            .iter()
+            .map(|p| expected_traffic(p).total())
+            .collect();
+        let single_group = |i: usize| {
+            let (b_n, b_wo, b_ho) =
+                fit_group_tile(stages, i, i, mem_words).unwrap_or((1, 1, 1));
+            FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
+        };
+        let mut groups = Vec::new();
+        let mut cur = single_group(0);
+        let mut cur_cost = singles[0];
+        for i in 1..stages.len() {
+            let mut extended = None;
+            if let Some((b_n, b_wo, b_ho)) =
+                fit_group_tile(stages, cur.start, i, mem_words)
+            {
+                let cand = FuseGroup { start: cur.start, end: i, b_n, b_wo, b_ho };
+                let cost = fused_group_traffic(stages, &cand).total();
+                if cost <= cur_cost + singles[i] {
+                    extended = Some((cand, cost));
+                }
+            }
+            match extended {
+                Some((cand, cost)) => {
+                    cur = cand;
+                    cur_cost = cost;
+                }
+                None => {
+                    groups.push(cur);
+                    cur = single_group(i);
+                    cur_cost = singles[i];
+                }
+            }
+        }
+        groups.push(cur);
+        FusePlan {
+            stages: stages.to_vec(),
+            mem_words,
+            stage_plans,
+            groups,
+        }
+    }
+
+    /// Number of fused boundaries (adjacent stage pairs whose activation
+    /// never materializes).
+    pub fn fused_boundaries(&self) -> usize {
+        self.groups.iter().map(|g| g.len() - 1).sum()
+    }
+
+    /// Words a per-stage traffic vector moves across this plan's *fused*
+    /// boundaries: reads by any non-head fused stage plus writes by any
+    /// non-tail fused stage. Zero for traffic measured by the fused
+    /// executor — the engine's core claim, asserted by the CLI `--check`,
+    /// the property tests and `BENCH_network.json` through this one
+    /// definition.
+    pub fn boundary_words(&self, stages: &[Traffic]) -> u64 {
+        let mut words = 0;
+        for g in &self.groups {
+            for k in g.start + 1..=g.end {
+                words += stages[k].input_words;
+            }
+            for k in g.start..g.end {
+                words += stages[k].output_words;
+            }
+        }
+        words
+    }
+
+    /// The analytic per-stage traffic this plan executes — fused groups
+    /// charge the image patch (with halo) at the group head, the full
+    /// filter per stage per tile, and the output tile at the group tail;
+    /// materialized stages charge their LP tile plan's
+    /// [`expected_traffic`]. The fused executor's counters match these
+    /// totals exactly.
+    pub fn expected_network_traffic(&self) -> Vec<Traffic> {
+        let mut t = vec![Traffic::default(); self.stages.len()];
+        for g in &self.groups {
+            if g.is_fused() {
+                charge_fused_group(&self.stages, g, &mut t);
+            } else {
+                t[g.start] = expected_traffic(&self.stage_plans[g.start]);
+            }
+        }
+        t
+    }
+}
+
+/// Absolute half-open output spans `[w0, w1) × [h0, h1)` of one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Span {
+    pub w0: u64,
+    pub w1: u64,
+    pub h0: u64,
+    pub h1: u64,
+}
+
+impl Span {
+    pub(crate) fn w_len(&self) -> u64 {
+        self.w1 - self.w0
+    }
+
+    pub(crate) fn h_len(&self) -> u64 {
+        self.h1 - self.h0
+    }
+}
+
+/// The input span `s` reads to produce output span `o`: starts at `σ·o0`,
+/// ends one halo past the last output row. Never exceeds the stage's
+/// paper-convention input extent, so no clamping is required anywhere.
+pub(crate) fn input_span(s: &ConvShape, o: &Span) -> Span {
+    Span {
+        w0: s.s_w * o.w0,
+        w1: s.s_w * (o.w1 - 1) + s.w_f,
+        h0: s.s_h * o.h0,
+        h1: s.s_h * (o.h1 - 1) + s.h_f,
+    }
+}
+
+/// Output spans each stage of `stages[a..=b]` computes for one tile
+/// `(tw, th)` of the last stage, in stage order (index 0 ↔ stage `a`).
+/// Element `k−1` is both stage `k−1`'s output span and stage `k`'s input
+/// span — the fused boundary where no main-memory traffic is charged.
+pub(crate) fn group_spans(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    tw: Blk,
+    th: Blk,
+) -> Vec<Span> {
+    let mut spans = vec![
+        Span { w0: 0, w1: 0, h0: 0, h1: 0 };
+        b - a + 1
+    ];
+    let mut cur = Span {
+        w0: tw.start,
+        w1: tw.start + tw.len,
+        h0: th.start,
+        h1: th.start + th.len,
+    };
+    for k in (a..=b).rev() {
+        spans[k - a] = cur;
+        cur = input_span(&stages[k].shape, &cur);
+    }
+    spans
+}
+
+/// Every (batch, wO, hO) tile of a fused group's last stage.
+pub(crate) fn group_tiles(stages: &[NetworkStage], g: &FuseGroup) -> Vec<(Blk, Blk, Blk)> {
+    let last = &stages[g.end].shape;
+    let ns = split(last.n, g.b_n);
+    let ws = split(last.w_o, g.b_wo);
+    let hs = split(last.h_o, g.b_ho);
+    let mut tiles = Vec::with_capacity(ns.len() * ws.len() * hs.len());
+    for &tn in &ns {
+        for &tw in &ws {
+            for &th in &hs {
+                tiles.push((tn, tw, th));
+            }
+        }
+    }
+    tiles
+}
+
+/// Peak ping-pong working set (words, under each stage's precision) of one
+/// fused tile with last-stage output blocks `(bn, bwo, bho)`: at every
+/// stage the input patch, the output patch and the full filter are live
+/// simultaneously; patches of other stages are recycled.
+pub(crate) fn group_footprint(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    bn: u64,
+    bwo: u64,
+    bho: u64,
+) -> f64 {
+    let mut peak: f64 = 0.0;
+    let (mut ow, mut oh) = (bwo, bho);
+    for k in (a..=b).rev() {
+        let st = &stages[k];
+        let s = &st.shape;
+        let iw = halo_extent(ow, s.s_w, s.w_f);
+        let ih = halo_extent(oh, s.s_h, s.h_f);
+        let words = st.precision.p_i * (bn * s.c_i * iw * ih) as f64
+            + st.precision.p_o * (bn * s.c_o * ow * oh) as f64
+            + st.precision.p_f * s.filter_size() as f64;
+        peak = peak.max(words);
+        ow = iw;
+        oh = ih;
+    }
+    peak
+}
+
+/// Find last-stage output tile blocks whose fused working set fits in
+/// `mem` words, shrinking the batch block first (halving N costs no halo
+/// recompute) and then the larger spatial block. `None` when even a
+/// 1×1×1 tile does not fit — the boundary must materialize.
+pub(crate) fn fit_group_tile(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    mem: f64,
+) -> Option<(u64, u64, u64)> {
+    let last = &stages[b].shape;
+    let (mut bn, mut bwo, mut bho) =
+        (last.n.max(1), last.w_o.max(1), last.h_o.max(1));
+    loop {
+        if group_footprint(stages, a, b, bn, bwo, bho) <= mem {
+            return Some((bn, bwo, bho));
+        }
+        if bn > 1 {
+            bn = (bn + 1) / 2;
+        } else if bwo >= bho && bwo > 1 {
+            bwo = (bwo + 1) / 2;
+        } else if bho > 1 {
+            bho = (bho + 1) / 2;
+        } else {
+            return None;
+        }
+    }
+}
+
+/// Add one fused group's analytic per-stage traffic into `t` (indexed by
+/// absolute stage number). Charges: head stage reads its halo'd image
+/// patch per tile; every stage reads its full filter per tile; the tail
+/// stage writes its output tile. Interior boundaries charge nothing —
+/// the invariant the property tests pin down.
+pub(crate) fn charge_fused_group(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    t: &mut [Traffic],
+) {
+    let head = &stages[g.start].shape;
+    let tail = &stages[g.end].shape;
+    for (tn, tw, th) in group_tiles(stages, g) {
+        let spans = group_spans(stages, g.start, g.end, tw, th);
+        let in_sp = input_span(head, &spans[0]);
+        t[g.start].input_words +=
+            tn.len * head.c_i * in_sp.w_len() * in_sp.h_len();
+        for k in g.start..=g.end {
+            t[k].filter_words += stages[k].shape.filter_size();
+        }
+        t[g.end].output_words += tn.len * tail.c_o * tw.len * th.len;
+    }
+}
+
+/// Total analytic traffic of one fused group in isolation.
+pub(crate) fn fused_group_traffic(stages: &[NetworkStage], g: &FuseGroup) -> Traffic {
+    let mut t = vec![Traffic::default(); stages.len()];
+    charge_fused_group(stages, g, &mut t);
+    Traffic::sum(&t)
+}
+
+/// The stage-by-stage oracle: run the chain through [`conv7nl_naive`] on
+/// full tensors, materializing every activation. Fused groups of the
+/// network executor perform this exact per-element accumulation order, so
+/// a plan fused end to end reproduces this output bitwise.
+pub fn naive_network(image: &Tensor4, filters: &[&Tensor4], stages: &[NetworkStage]) -> Tensor4 {
+    assert_eq!(filters.len(), stages.len(), "one filter per stage");
+    let mut act = image.clone();
+    for (k, st) in stages.iter().enumerate() {
+        act = conv7nl_naive(&act, filters[k], &st.shape);
+    }
+    act
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::Precision;
+    use crate::runtime::manifest::NetworkSpec;
+
+    fn tiny(batch: u64) -> Vec<NetworkStage> {
+        NetworkSpec::tiny_resnet(batch).stages
+    }
+
+    #[test]
+    fn halo_extent_matches_hand_cases() {
+        assert_eq!(halo_extent(4, 1, 3), 6); // unit stride 3x3: len + 2
+        assert_eq!(halo_extent(4, 2, 2), 8); // stride-2 2x2: 2·3 + 2
+        assert_eq!(halo_extent(1, 3, 5), 5); // single row: just the filter
+    }
+
+    #[test]
+    fn spans_chain_through_the_group() {
+        let stages = tiny(2);
+        let tw = Blk { start: 1, len: 2 };
+        let th = Blk { start: 0, len: 4 };
+        let spans = group_spans(&stages, 0, 2, tw, th);
+        assert_eq!(spans.len(), 3);
+        // last stage's span is the tile itself
+        assert_eq!(spans[2], Span { w0: 1, w1: 3, h0: 0, h1: 4 });
+        // stage 1 output span = stage 2 input span (stride 2, 2x2 filter)
+        assert_eq!(spans[1], Span { w0: 2, w1: 6, h0: 0, h1: 8 });
+        // stage 0 output span = stage 1 input span (unit stride, 3x3)
+        assert_eq!(spans[0], Span { w0: 2, w1: 8, h0: 0, h1: 10 });
+        // the image patch adds one more halo
+        let img = input_span(&stages[0].shape, &spans[0]);
+        assert_eq!(img, Span { w0: 2, w1: 10, h0: 0, h1: 12 });
+    }
+
+    #[test]
+    fn tiny_resnet_fuses_end_to_end_at_default_memory() {
+        let cache = TilePlanCache::new();
+        let plan = FusePlan::new(&tiny(4), super::super::plan::DEFAULT_TILE_MEM_WORDS, &cache);
+        assert_eq!(plan.groups.len(), 1, "groups {:?}", plan.groups);
+        assert!(plan.groups[0].is_fused());
+        assert_eq!(plan.fused_boundaries(), 2);
+        // fused traffic strictly below the layer-by-layer sum
+        let fused: u64 = Traffic::sum(&plan.expected_network_traffic()).total();
+        let layered: u64 = plan
+            .stage_plans
+            .iter()
+            .map(|p| expected_traffic(p).total())
+            .sum();
+        assert!(fused < layered, "fused {fused} vs layered {layered}");
+    }
+
+    #[test]
+    fn tight_memory_forces_materialization() {
+        // a budget below any two-stage working set must split every
+        // boundary; every group then runs the plain LP-tiled path
+        let stages = tiny(4);
+        let two_stage_floor = group_footprint(&stages, 0, 1, 1, 1, 1)
+            .min(group_footprint(&stages, 1, 2, 1, 1, 1));
+        let cache = TilePlanCache::new();
+        let plan = FusePlan::new(&stages, two_stage_floor - 1.0, &cache);
+        assert_eq!(plan.groups.len(), 3, "groups {:?}", plan.groups);
+        assert_eq!(plan.fused_boundaries(), 0);
+    }
+
+    #[test]
+    fn footprint_grows_with_tile_and_group() {
+        let stages = tiny(2);
+        let small = group_footprint(&stages, 1, 1, 1, 2, 2);
+        let wider = group_footprint(&stages, 1, 1, 1, 4, 4);
+        assert!(wider > small);
+        let deeper = group_footprint(&stages, 0, 2, 1, 2, 2);
+        let tail_only = group_footprint(&stages, 2, 2, 1, 2, 2);
+        assert!(deeper >= tail_only);
+    }
+
+    #[test]
+    fn fit_group_tile_respects_budget() {
+        let stages = tiny(4);
+        let (bn, bwo, bho) =
+            fit_group_tile(&stages, 0, 2, 4096.0).expect("some tile fits");
+        assert!(group_footprint(&stages, 0, 2, bn, bwo, bho) <= 4096.0);
+        let last = &stages[2].shape;
+        assert!(bn <= last.n && bwo <= last.w_o && bho <= last.h_o);
+        // absurdly small budgets cannot host even a unit tile
+        assert!(fit_group_tile(&stages, 0, 2, 8.0).is_none());
+    }
+
+    #[test]
+    fn group_tiles_cover_last_stage_output() {
+        let stages = tiny(3);
+        let g = FuseGroup { start: 0, end: 2, b_n: 2, b_wo: 3, b_ho: 2 };
+        let tiles = group_tiles(&stages, &g);
+        let last = &stages[2].shape;
+        let mut seen = vec![false; (last.n * last.w_o * last.h_o) as usize];
+        for (tn, tw, th) in tiles {
+            for n in tn.start..tn.start + tn.len {
+                for w in tw.start..tw.start + tw.len {
+                    for h in th.start..th.start + th.len {
+                        let i = ((n * last.w_o + w) * last.h_o + h) as usize;
+                        assert!(!seen[i], "overlap");
+                        seen[i] = true;
+                    }
+                }
+            }
+        }
+        assert!(seen.into_iter().all(|v| v), "not covered");
+    }
+
+    #[test]
+    fn per_stage_precision_shapes_the_footprint() {
+        let shape = ConvShape::new(2, 4, 4, 6, 6, 3, 3, 1, 1);
+        let cheap = [NetworkStage { shape, precision: Precision::gemmini() }];
+        let wide = [NetworkStage { shape, precision: Precision::paper_mixed() }];
+        assert!(
+            group_footprint(&cheap, 0, 0, 2, 6, 6)
+                < group_footprint(&wide, 0, 0, 2, 6, 6)
+        );
+    }
+}

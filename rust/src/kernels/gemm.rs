@@ -39,10 +39,39 @@ pub(crate) struct TileDims {
     pub hf: usize,
 }
 
-/// `out[co] += x · f[co]` over one contiguous cO row.
+/// Scalar reference axpy: `out[co] += x · f[co]` over one contiguous cO
+/// row. Kept as the semantics oracle the unrolled form is pinned to
+/// bitwise (each lane performs the identical single mul-add per element).
 #[inline]
-fn axpy(out: &mut [f32], f_row: &[f32], x: f32) {
+pub fn axpy_scalar(out: &mut [f32], f_row: &[f32], x: f32) {
     for (o, f) in out.iter_mut().zip(f_row.iter()) {
+        *o += x * *f;
+    }
+}
+
+/// `out[co] += x · f[co]` over one contiguous cO row, unrolled into eight
+/// independent accumulator lanes. The bounds are hoisted out of the body
+/// via `split_at`, so the eight updates carry no per-element bounds checks
+/// or cross-lane dependencies — the shape LLVM reliably turns into packed
+/// mul-add vectors. Lane `i` still computes exactly `out[i] += x · f[i]`
+/// once, so the result is bitwise identical to [`axpy_scalar`].
+#[inline]
+pub fn axpy(out: &mut [f32], f_row: &[f32], x: f32) {
+    let n = out.len().min(f_row.len());
+    let main = n - n % 8;
+    let (o_main, o_tail) = out[..n].split_at_mut(main);
+    let (f_main, f_tail) = f_row[..n].split_at(main);
+    for (o8, f8) in o_main.chunks_exact_mut(8).zip(f_main.chunks_exact(8)) {
+        o8[0] += x * f8[0];
+        o8[1] += x * f8[1];
+        o8[2] += x * f8[2];
+        o8[3] += x * f8[3];
+        o8[4] += x * f8[4];
+        o8[5] += x * f8[5];
+        o8[6] += x * f8[6];
+        o8[7] += x * f8[7];
+    }
+    for (o, f) in o_tail.iter_mut().zip(f_tail.iter()) {
         *o += x * *f;
     }
 }
@@ -133,6 +162,26 @@ mod tests {
         // accumulation: a second pass doubles
         conv_tile_mac(&mut out, &xin, &fil, &d);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    /// The unrolled axpy must agree with the scalar reference bit for bit
+    /// across main-block and tail lengths.
+    #[test]
+    fn unrolled_axpy_bitwise_matches_scalar() {
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 24, 31] {
+            let f_row: Vec<f32> =
+                (0..len).map(|i| (i as f32 - 3.5) * 0.37).collect();
+            let base: Vec<f32> =
+                (0..len).map(|i| (i as f32) * 1.25 - 2.0).collect();
+            let x = 0.731f32;
+            let mut a = base.clone();
+            let mut b = base.clone();
+            axpy(&mut a, &f_row, x);
+            axpy_scalar(&mut b, &f_row, x);
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "len {len}");
+            }
+        }
     }
 
     /// Invalid split coordinates must contribute nothing even when the

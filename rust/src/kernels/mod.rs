@@ -9,17 +9,28 @@
 //! * [`exec`] — the engine: pack → microkernel → scatter per tile, serial
 //!   or fanned out over `util::threadpool::ThreadPool`, with word-traffic
 //!   counters whose totals are checked against the `commvol::seq` blocking
-//!   model (within 2×) by the property tests.
+//!   model (within 2×) by the property tests; plus the fused network
+//!   executor, which sweeps the last fused stage's output tiles and
+//!   recomputes/holds upstream activation tiles in scratch so fused
+//!   boundaries never touch main memory.
+//! * [`fuse`] — the multi-layer fusion planner: halo math per boundary,
+//!   the fuse-vs-materialize rule (tile footprints vs. `M`), and the
+//!   analytic per-stage traffic model the executor's counters match
+//!   exactly.
 //! * [`im2col`] — the explicit patch-matrix + GEMM baseline the engine is
 //!   benchmarked against.
 //! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled),
-//!   heuristic or measure-once.
+//!   heuristic or measure-once, with a JSON sidecar for warm-starting
+//!   selection across process restarts.
 //!
-//! `pack` and `gemm` are crate-private: the packing layouts and the
-//! microkernel index arithmetic are implementation details of [`exec`].
+//! `pack` is crate-private: the packing layouts are implementation details
+//! of [`exec`]. `gemm` is private too, but its axpy microkernels are
+//! re-exported so the property tests can pin the unrolled form to the
+//! scalar reference bitwise.
 
 pub mod autotune;
 pub mod exec;
+pub mod fuse;
 mod gemm;
 pub mod im2col;
 mod pack;
@@ -28,9 +39,12 @@ pub mod tiles;
 
 pub use autotune::{Autotuner, KernelKind};
 pub use exec::{
+    conv_network_fused, conv_network_fused_counted, conv_network_staged,
     conv_tiled, conv_tiled_counted, conv_tiled_parallel, default_workers,
-    expected_traffic, Traffic, TrafficCounters,
+    expected_traffic, NetTrafficCounters, Traffic, TrafficCounters,
 };
+pub use fuse::{halo_extent, naive_network, FuseGroup, FusePlan};
+pub use gemm::{axpy, axpy_scalar};
 pub use im2col::conv_im2col;
 pub use plan::{TilePlan, TilePlanCache, DEFAULT_TILE_MEM_WORDS};
 pub use tiles::{output_tiles, reduction_tiles, Blk, OutTile, RedTile};

@@ -26,7 +26,10 @@
 //!   sets sized to the LP's operand footprints, runs a small GEMM-style
 //!   microkernel over the nine blocked loops (including the split-filter
 //!   `q/r` dims), counts word traffic against the `commvol` predictions,
-//!   and autotunes naive/im2col/tiled per shape.
+//!   autotunes naive/im2col/tiled per shape (persisting choices to a JSON
+//!   sidecar), and executes whole-network pipelines with multi-layer
+//!   fusion: adjacent stages share one tile sweep so inter-layer
+//!   activations never touch main memory.
 //! * [`runtime`] — the execution layer behind a pluggable
 //!   [`runtime::ExecBackend`]: the default **native** backend runs conv
 //!   specs with in-tree kernels (zero setup, zero dependencies), while the

@@ -10,8 +10,13 @@
 //! convbound exec    --layer conv4_x ...     run a layer through the CPU
 //!                                           kernels (naive|im2col|tiled|auto)
 //!                                           with measured word traffic
+//! convbound exec    --network tiny_resnet   run a whole network through the
+//!                                           fused pipeline (--check compares
+//!                                           bitwise vs the staged oracle)
 //! convbound serve   --key unit3x3/blocked   batched serving demo (native
-//!                                           backend; PJRT with artifacts)
+//!                                           backend; PJRT with artifacts;
+//!                                           network keys serve the fused
+//!                                           pipeline)
 //! ```
 //!
 //! Bad arguments (unknown layers, malformed numbers) exit with a one-line
@@ -30,8 +35,9 @@ use convbound::err;
 use convbound::gemmini::GemminiConfig;
 use convbound::hbl::{analyze_7nl, analyze_small_filter};
 use convbound::kernels::{
-    conv_tiled_counted, Autotuner, KernelKind, TrafficCounters,
-    DEFAULT_TILE_MEM_WORDS,
+    conv_network_fused_counted, conv_tiled_counted, expected_traffic,
+    naive_network, Autotuner, FusePlan, KernelKind, NetTrafficCounters,
+    TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::report::{
     self, default_mem_sweep, default_proc_sweep, fig2_series, fig3_series,
@@ -188,9 +194,139 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run a builtin network pipeline through the fused executor and report
+/// fusion decisions, per-stage traffic, and the layer-by-layer comparison;
+/// `--check` cross-validates against the stage-by-stage naive oracle
+/// (bitwise).
+fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
+    let batch = args.opt_u64("batch", convbound::runtime::manifest::BUILTIN_BATCH)?;
+    if batch < 1 {
+        return Err(err!("--batch must be >= 1"));
+    }
+    let m = mem_of(args, DEFAULT_TILE_MEM_WORDS)?;
+    let manifest = convbound::runtime::Manifest::builtin(batch);
+    let net = manifest.network(name).ok_or_else(|| {
+        err!(
+            "unknown --network '{name}' (builtin networks: {})",
+            manifest
+                .networks
+                .iter()
+                .map(|n| n.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })?;
+    let cache = TilePlanCache::new();
+    let plan = FusePlan::new(&net.stages, m, &cache);
+    println!(
+        "exec network {name} (batch {batch}, {} stages, {} MACs) at M = {m} words",
+        net.stages.len(),
+        net.updates()
+    );
+    for g in &plan.groups {
+        if g.is_fused() {
+            println!(
+                "  stages {}..={} FUSED (last-stage tile N={} wO={} hO={}; \
+                 inter-layer activations stay resident)",
+                g.start, g.end, g.b_n, g.b_wo, g.b_ho
+            );
+        } else {
+            println!("  stage {} materialized (LP-tiled)", g.start);
+        }
+    }
+
+    let d = net.input_dims();
+    let image = Tensor4::randn(d, 1);
+    let filters: Vec<Tensor4> = net
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 2 + i as u64))
+        .collect();
+    let frefs: Vec<&Tensor4> = filters.iter().collect();
+    let counters = NetTrafficCounters::new(net.stages.len());
+    let t0 = Instant::now();
+    let out = conv_network_fused_counted(&image, &frefs, &plan, &counters);
+    let secs = t0.elapsed().as_secs_f64();
+
+    let measured = counters.snapshot();
+    let expected = plan.expected_network_traffic();
+    for (k, (t, e)) in measured.iter().zip(&expected).enumerate() {
+        println!(
+            "  stage {k}: input {} + filter {} + output {} = {} words \
+             (model {}{})",
+            t.input_words,
+            t.filter_words,
+            t.output_words,
+            t.total(),
+            e.total(),
+            if t == e { ", exact" } else { ", MISMATCH" }
+        );
+    }
+    let fused_total = Traffic::sum(&measured).total();
+    let layered_total: u64 = plan
+        .stage_plans
+        .iter()
+        .map(|p| expected_traffic(p).total())
+        .sum();
+    println!(
+        "  fused total {} words vs layer-by-layer {} words ({:.2}x saved)",
+        fused_total,
+        layered_total,
+        layered_total as f64 / fused_total.max(1) as f64
+    );
+    println!(
+        "  {secs:.3}s, {:.1} MMAC/s",
+        net.updates() as f64 / secs.max(1e-9) / 1e6
+    );
+
+    if args.flag("check") {
+        let want = naive_network(&image, &frefs, &net.stages);
+        // a fully fused plan performs the oracle's exact per-element ops
+        // in order -> bitwise; materialized stages run the LP-tiled
+        // engine's accumulation order -> tolerance check
+        if plan.groups.len() == 1 && plan.groups[0].is_fused() {
+            let diff = out.max_abs_diff(&want);
+            println!(
+                "  check vs stage-by-stage naive oracle: max_abs_diff = {diff}"
+            );
+            if diff != 0.0 {
+                return Err(err!(
+                    "fused network diverged from the staged oracle: {diff}"
+                ));
+            }
+        } else {
+            let rel = out.rel_l2(&want);
+            println!("  check vs stage-by-stage naive oracle: rel_l2 = {rel:.2e}");
+            if rel >= 1e-4 {
+                return Err(err!(
+                    "network pipeline diverged from the staged oracle: {rel}"
+                ));
+            }
+        }
+        if measured != expected {
+            return Err(err!("measured traffic disagrees with the model"));
+        }
+        let boundary = plan.boundary_words(&measured);
+        if boundary != 0 {
+            return Err(err!(
+                "{boundary} words crossed fused boundaries (must be 0)"
+            ));
+        }
+        println!("  fused boundaries touched 0 main-memory words: OK");
+    } else {
+        std::hint::black_box(&out);
+    }
+    Ok(())
+}
+
 /// Run one catalog layer through a CPU kernel and report throughput plus
 /// (for the tiled engine) measured vs modelled word traffic.
 fn cmd_exec(args: &Args) -> Result<()> {
+    if let Some(net) = args.opt("network") {
+        let net = net.to_string();
+        return cmd_exec_network(args, &net);
+    }
     let (name, full) = layer_of(args, "conv4_x", 2)?;
     let scale = args.opt_u64("scale", 1)?.max(1);
     let shape = scaled(full, scale);
@@ -202,6 +338,13 @@ fn cmd_exec(args: &Args) -> Result<()> {
     // one tuner = one plan cache: selection probes and the final run use
     // the same (precision, M) tiling, solved once
     let tuner = Autotuner::with_precision(m, p);
+    // warm-start measured kernel choices from a previous process, if asked
+    if let Some(path) = args.opt("tune-cache") {
+        let loaded = tuner.warm_start(path)?;
+        if loaded > 0 {
+            println!("warm-started {loaded} kernel choice(s) from {path}");
+        }
+    }
 
     let (x, w) = paper_operands(&shape, 1);
 
@@ -271,6 +414,10 @@ fn cmd_exec(args: &Args) -> Result<()> {
         // keep `out` observable so the kernel call is never optimized away
         std::hint::black_box(&out);
     }
+    // persist whatever the tuner learned this run for the next process
+    if let Some(path) = args.opt("tune-cache") {
+        tuner.save(path)?;
+    }
     Ok(())
 }
 
@@ -291,13 +438,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .find(&key)
         .ok_or_else(|| err!("artifact '{key}' not in manifest"))?
         .clone();
-    let wd = &spec.inputs[1];
-    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 1);
+    // one random filter tensor per weight input: single-layer artifacts
+    // take one, network pipelines one per stage
+    let weights: Vec<Tensor4> = spec.inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 1 + i as u64))
+        .collect();
     let linger = std::time::Duration::from_millis(2);
     let server = if have_artifacts {
-        ConvServer::start(&dir, &key, weights, linger)
+        ConvServer::start_network(&dir, &key, weights, linger)
     } else {
-        ConvServer::start_builtin(&key, weights, linger)
+        ConvServer::start_builtin_network(&key, weights, linger)
     }?;
     let xd = &spec.inputs[0];
     let mut pending = Vec::new();
@@ -364,7 +516,8 @@ fn main() {
             eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|exec|serve> [options]");
             eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
             eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
-            eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check");
+            eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check --tune-cache <path>");
+            eprintln!("        --network tiny_resnet [--batch N] [--mem M] [--check]");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
             std::process::exit(2);
         }

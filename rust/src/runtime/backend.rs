@@ -16,11 +16,12 @@
 //! to [`ExecBackend`], never to a concrete runtime.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::conv::Tensor4;
 use crate::util::error::Result;
 
-use super::manifest::ArtifactSpec;
+use super::manifest::{ArtifactSpec, NetworkSpec};
 
 /// A prepared (compiled / lowered / specialized) artifact, ready to run.
 pub trait Executable {
@@ -31,10 +32,25 @@ pub trait Executable {
     /// entry point.
     fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4>;
 
+    /// Execute on shared host tensors. The default delegates to
+    /// [`Executable::execute`]; backends whose hot path hands operands to
+    /// worker threads (the native `"tiled"`/`"network"` kinds) override it
+    /// to reuse the caller's `Arc`s instead of cloning the tensors.
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        let refs: Vec<&Tensor4> = inputs.iter().map(|t| t.as_ref()).collect();
+        self.execute(&refs)
+    }
+
     /// Cumulative word traffic this executable has charged, when the
-    /// backend instruments it (the native `"tiled"` kind does); `None`
-    /// for uninstrumented executables.
+    /// backend instruments it (the native `"tiled"` and `"network"` kinds
+    /// do); `None` for uninstrumented executables.
     fn traffic(&self) -> Option<crate::kernels::Traffic> {
+        None
+    }
+
+    /// Per-stage traffic snapshots for network pipelines (stage order);
+    /// `None` for single-layer executables.
+    fn stage_traffic(&self) -> Option<Vec<crate::kernels::Traffic>> {
         None
     }
 }
@@ -54,4 +70,21 @@ pub trait ExecBackend {
         spec: &ArtifactSpec,
         path: Option<&Path>,
     ) -> Result<Box<dyn Executable>>;
+
+    /// Prepare a whole-network pipeline artifact. `net` is the resolved
+    /// [`NetworkSpec`] the `"network"` spec's name refers to (strides of
+    /// interior stages are not recoverable from the spec's dims alone).
+    /// The default refuses: backends opt into network execution.
+    fn load_network(
+        &mut self,
+        net: &NetworkSpec,
+        spec: &ArtifactSpec,
+    ) -> Result<Box<dyn Executable>> {
+        let _ = net;
+        Err(crate::err!(
+            "backend '{}' cannot execute network pipeline '{}'",
+            self.platform(),
+            spec.key()
+        ))
+    }
 }

@@ -1,11 +1,12 @@
 //! Artifact manifest: the JSON index written by python/compile/aot.py
 //! describing every AOT-compiled HLO module's entry shapes — plus
 //! [`Manifest::builtin`], a synthetic manifest of small single-layer conv
-//! specs that the native backend executes with no files on disk at all.
+//! specs *and* a whole-network pipeline ([`NetworkSpec`]) that the native
+//! backend executes with no files on disk at all.
 
 use std::path::Path;
 
-use crate::conv::ConvShape;
+use crate::conv::{ConvShape, Precision};
 use crate::err;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
@@ -14,6 +15,147 @@ use crate::util::json::Json;
 /// (`Runtime::builtin`, `ConvServer::start_builtin`) — one constant so the
 /// validator and the executor can never disagree.
 pub const BUILTIN_BATCH: u64 = 4;
+
+// One stage of a network pipeline — a conv layer plus the word-precision
+// model its tile plan is solved under. The type lives in `conv::shapes`
+// (next to ConvShape/Precision) so the kernels layer never depends on the
+// manifest; the chain-validation logic below is what this module owns.
+pub use crate::conv::NetworkStage;
+
+/// An ordered chain of conv layers served as one unit: the first-class
+/// network pipeline the fusion planner (`kernels/fuse.rs`) and the fused
+/// executor operate on. Stage `k+1` consumes stage `k`'s activation
+/// directly, so the chain must satisfy the paper's input convention at
+/// every boundary: `cI(k+1) = cO(k)` and
+/// `σw(k+1)·wO(k+1) + wF(k+1) = wO(k)` (likewise in h).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub stages: Vec<NetworkStage>,
+}
+
+impl NetworkSpec {
+    /// Build and validate a network chain. Errors on an empty chain, a
+    /// degenerate stage (zero-extent dim), a stride exceeding its filter
+    /// (the split-filter loops assume `σ ≤ f`), or a boundary where stage
+    /// `k+1`'s paper-convention input is not exactly stage `k`'s output.
+    pub fn new(name: &str, stages: Vec<NetworkStage>) -> Result<NetworkSpec> {
+        if stages.is_empty() {
+            return Err(err!("network '{name}': empty stage chain"));
+        }
+        for (k, st) in stages.iter().enumerate() {
+            let s = &st.shape;
+            // checked product: parsed dims near the strict-integer cap
+            // must surface as an error, not a multiply overflow
+            let macs = [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f]
+                .iter()
+                .try_fold(1u64, |acc, &d| acc.checked_mul(d));
+            match macs {
+                None => {
+                    return Err(err!(
+                        "network '{name}' stage {k}: MAC count overflows \
+                         u64 ({s})"
+                    ))
+                }
+                Some(0) => {
+                    return Err(err!(
+                        "network '{name}' stage {k}: degenerate shape ({s})"
+                    ))
+                }
+                Some(_) => {}
+            }
+            if s.s_w == 0 || s.s_h == 0 {
+                return Err(err!(
+                    "network '{name}' stage {k}: zero stride ({s})"
+                ));
+            }
+            if s.s_w > s.w_f || s.s_h > s.h_f {
+                return Err(err!(
+                    "network '{name}' stage {k}: stride exceeds filter ({s})"
+                ));
+            }
+        }
+        for k in 1..stages.len() {
+            let prev = &stages[k - 1].shape;
+            let cur = &stages[k].shape;
+            if cur.n != prev.n {
+                return Err(err!(
+                    "network '{name}': stage {k} batch {} != stage {} batch {}",
+                    cur.n,
+                    k - 1,
+                    prev.n
+                ));
+            }
+            if cur.c_i != prev.c_o
+                || cur.in_w() != prev.w_o
+                || cur.in_h() != prev.h_o
+            {
+                return Err(err!(
+                    "network '{name}': stage {k} input ({} ch, {}x{}) does \
+                     not chain onto stage {} output ({} ch, {}x{})",
+                    cur.c_i,
+                    cur.in_w(),
+                    cur.in_h(),
+                    k - 1,
+                    prev.c_o,
+                    prev.w_o,
+                    prev.h_o
+                ));
+            }
+        }
+        Ok(NetworkSpec { name: name.to_string(), stages })
+    }
+
+    /// A uniform-precision chain from bare shapes.
+    pub fn uniform(name: &str, shapes: &[ConvShape]) -> Result<NetworkSpec> {
+        NetworkSpec::new(
+            name,
+            shapes
+                .iter()
+                .map(|s| NetworkStage { shape: *s, precision: Precision::uniform() })
+                .collect(),
+        )
+    }
+
+    /// The builtin three-stage tiny ResNet-style chain: a unit-stride 3×3
+    /// head, a unit-stride 3×3 body, and a strided 2×2 tail, sized so the
+    /// whole pipeline's fused working set fits comfortably in the default
+    /// tile-memory budget (one fused group end to end).
+    pub fn tiny_resnet(batch: u64) -> NetworkSpec {
+        assert!(batch >= 1);
+        NetworkSpec::uniform(
+            "tiny_resnet",
+            &[
+                ConvShape::new(batch, 3, 8, 13, 13, 3, 3, 1, 1),
+                ConvShape::new(batch, 8, 16, 10, 10, 3, 3, 1, 1),
+                ConvShape::new(batch, 16, 32, 4, 4, 2, 2, 2, 2),
+            ],
+        )
+        .expect("builtin tiny_resnet chain is valid")
+    }
+
+    /// Batch size N shared by every stage.
+    pub fn batch(&self) -> u64 {
+        self.stages[0].shape.n
+    }
+
+    /// Image input dims `(N, cI, WI, HI)` of the first stage.
+    pub fn input_dims(&self) -> [usize; 4] {
+        let s = &self.stages[0].shape;
+        [s.n as usize, s.c_i as usize, s.in_w() as usize, s.in_h() as usize]
+    }
+
+    /// Output dims `(N, cO, wO, hO)` of the last stage.
+    pub fn output_dims(&self) -> [usize; 4] {
+        let s = &self.stages[self.stages.len() - 1].shape;
+        [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize]
+    }
+
+    /// Total MAC updates across the chain.
+    pub fn updates(&self) -> u64 {
+        self.stages.iter().map(|st| st.shape.updates()).sum()
+    }
+}
 
 /// One artifact entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,6 +208,31 @@ impl ArtifactSpec {
                 s.h_o as usize,
             ],
             updates: s.updates(),
+        }
+    }
+
+    /// Synthesize the spec of a whole-network artifact from a validated
+    /// [`NetworkSpec`]: inputs are the image followed by one filter per
+    /// stage, the output is the last stage's activation. The strides of
+    /// interior stages are not recoverable from these dims alone, so
+    /// backends resolve the chain through [`Manifest::network`] rather
+    /// than inverting the spec.
+    pub fn for_network(net: &NetworkSpec) -> ArtifactSpec {
+        let mut inputs = vec![{
+            let d = net.input_dims();
+            vec![d[0], d[1], d[2], d[3]]
+        }];
+        for st in &net.stages {
+            inputs.push(st.shape.filter_dims().to_vec());
+        }
+        let o = net.output_dims();
+        ArtifactSpec {
+            name: net.name.clone(),
+            kind: "network".to_string(),
+            path: format!("{}_network.hlo.txt", net.name),
+            inputs,
+            output: vec![o[0], o[1], o[2], o[3]],
+            updates: net.updates(),
         }
     }
 
@@ -122,6 +289,9 @@ impl ArtifactSpec {
 pub struct Manifest {
     pub batch: usize,
     pub artifacts: Vec<ArtifactSpec>,
+    /// Network pipelines the `"network"` artifact kinds resolve to; empty
+    /// for manifests that only carry single-layer artifacts.
+    pub networks: Vec<NetworkSpec>,
 }
 
 impl Manifest {
@@ -136,13 +306,15 @@ impl Manifest {
     /// backend answers in well under a millisecond per batch, each exposed
     /// through the kernel kinds the native backend implements (the 3×3 and
     /// strided 5×5 also as `"tiled"`, routing through the `kernels/`
-    /// engine). This is what [`super::Runtime::builtin`] and the
-    /// no-artifact serving path use.
+    /// engine), plus the [`NetworkSpec::tiny_resnet`] pipeline exposed as
+    /// the `"network"` kind. This is what [`super::Runtime::builtin`] and
+    /// the no-artifact serving path use.
     pub fn builtin(batch: u64) -> Manifest {
         assert!(batch >= 1);
         let unit3x3 = ConvShape::new(batch, 8, 16, 12, 12, 3, 3, 1, 1);
         let unit1x1 = ConvShape::new(batch, 16, 32, 14, 14, 1, 1, 1, 1);
         let unit5x5 = ConvShape::new(batch, 3, 12, 6, 6, 5, 5, 2, 2);
+        let tiny = NetworkSpec::tiny_resnet(batch);
         Manifest {
             batch: batch as usize,
             artifacts: vec![
@@ -152,7 +324,9 @@ impl Manifest {
                 ArtifactSpec::for_layer("unit1x1", "blocked", &unit1x1),
                 ArtifactSpec::for_layer("unit5x5", "blocked", &unit5x5),
                 ArtifactSpec::for_layer("unit5x5", "tiled", &unit5x5),
+                ArtifactSpec::for_network(&tiny),
             ],
+            networks: vec![tiny],
         }
     }
 
@@ -211,7 +385,76 @@ impl Manifest {
                 updates: a.get("updates").as_u64().unwrap_or(0),
             });
         }
-        Ok(Manifest { batch, artifacts })
+        let mut networks = Vec::new();
+        for nv in v.get("networks").as_arr().unwrap_or(&[]) {
+            let name = nv
+                .get("name")
+                .as_str()
+                .ok_or_else(|| err!("network missing 'name'"))?
+                .to_string();
+            let mut stages = Vec::new();
+            for sv in nv
+                .get("stages")
+                .as_arr()
+                .ok_or_else(|| err!("network '{name}' missing 'stages'"))?
+            {
+                let dims = sv
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| err!("network '{name}': stage missing 'shape'"))?;
+                if dims.len() != 9 {
+                    return Err(err!(
+                        "network '{name}': stage shape wants 9 dims \
+                         [N,cI,cO,wO,hO,wF,hF,sw,sh], got {}",
+                        dims.len()
+                    ));
+                }
+                // strict: a truncated or defaulted dim would silently load
+                // a semantically different network
+                let d: Vec<u64> = dims
+                    .iter()
+                    .map(|x| {
+                        x.as_u64_strict().ok_or_else(|| {
+                            err!(
+                                "network '{name}': shape dim '{x}' is not \
+                                 an integer"
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let shape = ConvShape::new(
+                    d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7], d[8],
+                );
+                let precision = match sv.get("precision").as_arr() {
+                    None => Precision::uniform(),
+                    Some(p) if p.len() == 3 => {
+                        // equally strict: a defaulted precision would solve
+                        // every tile plan under the wrong word model
+                        let word = |j: &Json| match j.as_f64() {
+                            Some(v) if v.is_finite() && v > 0.0 => Ok(v),
+                            _ => Err(err!(
+                                "network '{name}': precision entry '{j}' is \
+                                 not a positive number"
+                            )),
+                        };
+                        Precision::new(word(&p[0])?, word(&p[1])?, word(&p[2])?)
+                    }
+                    Some(_) => {
+                        return Err(err!(
+                            "network '{name}': 'precision' wants [pI, pF, pO]"
+                        ))
+                    }
+                };
+                stages.push(NetworkStage { shape, precision });
+            }
+            networks.push(NetworkSpec::new(&name, stages)?);
+        }
+        Ok(Manifest { batch, artifacts, networks })
+    }
+
+    /// Find the network pipeline a `"network"` artifact's name refers to.
+    pub fn network(&self, name: &str) -> Option<&NetworkSpec> {
+        self.networks.iter().find(|n| n.name == name)
     }
 
     /// Find by `<name>/<kind>` key or bare name (if unique).
@@ -288,8 +531,9 @@ mod tests {
         assert!(m.find("unit3x3/tiled").is_some());
         assert!(m.find("unit5x5/tiled").is_some());
         assert!(m.find("unit1x1/blocked").is_some());
+        assert!(m.find("tiny_resnet/network").is_some());
         for a in &m.artifacts {
-            assert_eq!(a.inputs.len(), 2);
+            assert!(a.inputs.len() >= 2, "{}", a.key());
             assert_eq!(a.output.len(), 4);
             assert_eq!(a.inputs[0][0], 4, "batch dim");
             assert!(a.updates > 0);
@@ -299,6 +543,87 @@ mod tests {
         keys.sort();
         keys.dedup();
         assert_eq!(keys.len(), m.artifacts.len());
+    }
+
+    #[test]
+    fn builtin_network_chains_and_matches_artifact() {
+        let m = Manifest::builtin(4);
+        let net = m.network("tiny_resnet").expect("builtin network");
+        assert_eq!(net.stages.len(), 3);
+        assert_eq!(net.batch(), 4);
+        for w in net.stages.windows(2) {
+            assert_eq!(w[1].shape.c_i, w[0].shape.c_o);
+            assert_eq!(w[1].shape.in_w(), w[0].shape.w_o);
+            assert_eq!(w[1].shape.in_h(), w[0].shape.h_o);
+            assert!(w[1].shape.paper_assumptions_hold());
+        }
+        let spec = m.find("tiny_resnet/network").unwrap();
+        assert_eq!(spec.inputs.len(), net.stages.len() + 1);
+        assert_eq!(spec.inputs[0], net.input_dims().to_vec());
+        assert_eq!(spec.output, net.output_dims().to_vec());
+        assert_eq!(spec.updates, net.updates());
+        // the network artifact is not a single-layer spec
+        assert!(spec.layer_shape().is_err());
+    }
+
+    #[test]
+    fn network_spec_rejects_broken_chains() {
+        let a = ConvShape::new(2, 3, 8, 13, 13, 3, 3, 1, 1);
+        let good = ConvShape::new(2, 8, 16, 10, 10, 3, 3, 1, 1);
+        assert!(NetworkSpec::uniform("ok", &[a, good]).is_ok());
+        assert!(NetworkSpec::uniform("empty", &[]).is_err());
+        // channel mismatch
+        let bad_c = ConvShape::new(2, 9, 16, 10, 10, 3, 3, 1, 1);
+        assert!(NetworkSpec::uniform("c", &[a, bad_c]).is_err());
+        // spatial mismatch (input 15 != previous output 13)
+        let bad_w = ConvShape::new(2, 8, 16, 12, 12, 3, 3, 1, 1);
+        assert!(NetworkSpec::uniform("w", &[a, bad_w]).is_err());
+        // batch mismatch: channels/spatial chain but N differs
+        let bad_n = ConvShape::new(3, 8, 16, 10, 10, 3, 3, 1, 1);
+        assert!(NetworkSpec::uniform("n", &[a, bad_n]).is_err());
+        // degenerate stage
+        let degenerate = ConvShape::new(0, 3, 8, 13, 13, 3, 3, 1, 1);
+        assert!(NetworkSpec::uniform("d", &[degenerate]).is_err());
+        // stride > filter breaks the split-filter assumption
+        let wide_stride = ConvShape::new(2, 3, 8, 4, 4, 2, 2, 3, 3);
+        assert!(NetworkSpec::uniform("s", &[wide_stride]).is_err());
+        // zero stride is not a convolution this stack executes
+        let zero_stride = ConvShape::new(2, 3, 8, 4, 4, 2, 2, 0, 1);
+        assert!(NetworkSpec::uniform("z", &[zero_stride]).is_err());
+    }
+
+    #[test]
+    fn parse_networks_section() {
+        let text = r#"{
+          "batch": 2,
+          "artifacts": [],
+          "networks": [
+            {"name": "two", "stages": [
+              {"shape": [2,3,8,13,13,3,3,1,1]},
+              {"shape": [2,8,16,10,10,3,3,1,1], "precision": [1, 1, 2]}
+            ]}
+          ]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        let net = m.network("two").expect("parsed network");
+        assert_eq!(net.stages.len(), 2);
+        assert_eq!(net.stages[0].precision, Precision::uniform());
+        assert_eq!(net.stages[1].precision, Precision::new(1.0, 1.0, 2.0));
+        // an inconsistent chain fails to parse
+        let bad = r#"{"batch": 2, "artifacts": [], "networks": [
+          {"name": "x", "stages": [
+            {"shape": [2,3,8,13,13,3,3,1,1]},
+            {"shape": [2,9,16,10,10,3,3,1,1]}
+          ]}]}"#;
+        assert!(Manifest::parse(bad).is_err());
+        // a fractional dim must error, not silently truncate the stride
+        let frac = r#"{"batch": 2, "artifacts": [], "networks": [
+          {"name": "f", "stages": [
+            {"shape": [2,3,8,13,13,3,3,1.9,1]}
+          ]}]}"#;
+        assert!(Manifest::parse(frac).is_err());
+        // manifests without the key parse to no networks
+        assert!(Manifest::parse(SAMPLE).unwrap().networks.is_empty());
     }
 
     #[test]

@@ -28,12 +28,13 @@ pub mod pjrt;
 
 pub use backend::{ExecBackend, Executable};
 pub use hlostats::{analyze_file, analyze_text, HloStats};
-pub use manifest::{ArtifactSpec, Manifest};
+pub use manifest::{ArtifactSpec, Manifest, NetworkSpec, NetworkStage};
 pub use native::NativeBackend;
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::conv::Tensor4;
 use crate::err;
@@ -108,7 +109,10 @@ impl Runtime {
 
     /// Prepare one artifact by key (`<name>/<kind>`), caching the result.
     /// The freshly inserted entry is returned directly — no second hash
-    /// lookup on either the hit or the miss path.
+    /// lookup on either the hit or the miss path. `"network"` kinds whose
+    /// manifest carries a matching [`NetworkSpec`] load through
+    /// [`ExecBackend::load_network`]; without one they fall back to the
+    /// backend's file loader (the legacy AOT route).
     pub fn load(&mut self, key: &str) -> Result<&LoadedArtifact> {
         match self.loaded.entry(key.to_string()) {
             Entry::Occupied(hit) => Ok(hit.into_mut()),
@@ -118,8 +122,21 @@ impl Runtime {
                     .find(key)
                     .ok_or_else(|| err!("artifact '{key}' not in manifest"))?
                     .clone();
-                let path = self.dir.as_ref().map(|d| d.join(&spec.path));
-                let exe = self.backend.load(&spec, path.as_deref())?;
+                let net = if spec.kind == "network" {
+                    self.manifest.network(&spec.name).cloned()
+                } else {
+                    None
+                };
+                let exe = match net {
+                    Some(net) => self.backend.load_network(&net, &spec)?,
+                    // single-layer kinds, and legacy file-based network
+                    // artifacts whose manifest carries no NetworkSpec
+                    // (the AOT/PJRT route): the backend's file loader
+                    None => {
+                        let path = self.dir.as_ref().map(|d| d.join(&spec.path));
+                        self.backend.load(&spec, path.as_deref())?
+                    }
+                };
                 Ok(slot.insert(LoadedArtifact { spec, exe }))
             }
         }
@@ -145,16 +162,35 @@ impl Runtime {
         art.run(inputs)
     }
 
+    /// Like [`Runtime::run`], but with shared tensors: instrumented
+    /// backends (native `"tiled"`/`"network"`) hand the `Arc`s straight to
+    /// their worker pools instead of cloning each operand per request —
+    /// the zero-copy serving hot path [`crate::coordinator::ConvServer`]
+    /// uses.
+    pub fn run_arc(&self, key: &str, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        let art = self
+            .loaded
+            .get(key)
+            .ok_or_else(|| err!("artifact '{key}' not loaded"))?;
+        art.run_arc(inputs)
+    }
+
     /// `load` + `run` in one call, reusing the entry `load` returns.
     pub fn run_loading(&mut self, key: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
         self.load(key)?.run(inputs)
     }
 
     /// Cumulative measured word traffic of a loaded artifact, when its
-    /// executable is instrumented (the native `"tiled"` kind); `None` for
-    /// unloaded or uninstrumented artifacts.
+    /// executable is instrumented (the native `"tiled"` and `"network"`
+    /// kinds); `None` for unloaded or uninstrumented artifacts.
     pub fn traffic(&self, key: &str) -> Option<crate::kernels::Traffic> {
         self.loaded.get(key).and_then(|a| a.traffic())
+    }
+
+    /// Per-stage measured traffic of a loaded `"network"` artifact (stage
+    /// order); `None` for unloaded or single-layer artifacts.
+    pub fn stage_traffic(&self, key: &str) -> Option<Vec<crate::kernels::Traffic>> {
+        self.loaded.get(key).and_then(|a| a.exe.stage_traffic())
     }
 }
 
@@ -164,20 +200,19 @@ impl LoadedArtifact {
         self.exe.traffic()
     }
 
-    /// Execute with host tensors, validating input and output shapes
-    /// against the manifest spec (backend-agnostic).
-    pub fn run(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
-        if inputs.len() != self.spec.inputs.len() {
+    /// Validate input arity and shapes against the manifest spec.
+    fn check_inputs(&self, dims: &[&[usize; 4]]) -> Result<()> {
+        if dims.len() != self.spec.inputs.len() {
             return Err(err!(
                 "artifact '{}' wants {} inputs, got {}",
                 self.spec.key(),
                 self.spec.inputs.len(),
-                inputs.len()
+                dims.len()
             ));
         }
-        for (i, t) in inputs.iter().enumerate() {
+        for (i, d) in dims.iter().enumerate() {
             let want = &self.spec.inputs[i];
-            let have: Vec<usize> = t.dims.to_vec();
+            let have: Vec<usize> = d.to_vec();
             if &have != want {
                 return Err(err!(
                     "artifact '{}' input {i}: shape {have:?} != manifest {want:?}",
@@ -185,7 +220,11 @@ impl LoadedArtifact {
                 ));
             }
         }
-        let out = self.exe.execute(inputs)?;
+        Ok(())
+    }
+
+    /// Validate the produced output shape against the manifest spec.
+    fn check_output(&self, out: Tensor4) -> Result<Tensor4> {
         if out.dims.to_vec() != self.spec.output {
             return Err(err!(
                 "artifact '{}': backend produced shape {:?}, manifest says {:?}",
@@ -195,6 +234,23 @@ impl LoadedArtifact {
             ));
         }
         Ok(out)
+    }
+
+    /// Execute with host tensors, validating input and output shapes
+    /// against the manifest spec (backend-agnostic).
+    pub fn run(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let dims: Vec<&[usize; 4]> = inputs.iter().map(|t| &t.dims).collect();
+        self.check_inputs(&dims)?;
+        self.check_output(self.exe.execute(inputs)?)
+    }
+
+    /// Execute with shared host tensors (same validation as
+    /// [`LoadedArtifact::run`]); instrumented backends skip the per-call
+    /// operand clone.
+    pub fn run_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        let dims: Vec<&[usize; 4]> = inputs.iter().map(|t| &t.dims).collect();
+        self.check_inputs(&dims)?;
+        self.check_output(self.exe.execute_arc(inputs)?)
     }
 }
 
@@ -250,6 +306,51 @@ mod tests {
         let t = rt.traffic(key).expect("snapshot");
         assert!(t.input_words > 0 && t.filter_words > 0);
         assert_eq!(t.output_words as usize, spec.output.iter().product::<usize>());
+    }
+
+    #[test]
+    fn network_artifact_runs_and_reports_stage_traffic() {
+        let mut rt = Runtime::builtin();
+        let key = "tiny_resnet/network";
+        let spec = rt.load(key).expect("load network").spec.clone();
+        assert_eq!(spec.inputs.len(), 4, "image + 3 filters");
+        // not yet run: instrumented with zero counters
+        assert_eq!(rt.traffic(key).expect("instrumented").total(), 0);
+        let inputs: Vec<Arc<Tensor4>> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                Arc::new(Tensor4::randn([d[0], d[1], d[2], d[3]], 30 + i as u64))
+            })
+            .collect();
+        let out = rt.run_arc(key, &inputs).expect("run network");
+        assert_eq!(out.dims.to_vec(), spec.output);
+        let stages = rt.stage_traffic(key).expect("per-stage traffic");
+        assert_eq!(stages.len(), 3);
+        assert_eq!(
+            stages[2].output_words as usize,
+            spec.output.iter().product::<usize>()
+        );
+        // single-layer artifacts expose no stage traffic
+        rt.load("unit3x3/tiled").expect("load tiled");
+        assert!(rt.stage_traffic("unit3x3/tiled").is_none());
+        // the non-arc entry point agrees with the arc one
+        let refs: Vec<&Tensor4> = inputs.iter().map(|a| a.as_ref()).collect();
+        let again = rt.run(key, &refs).expect("run network via refs");
+        assert_eq!(again.max_abs_diff(&out), 0.0);
+    }
+
+    #[test]
+    fn run_arc_validates_shapes() {
+        let mut rt = Runtime::builtin();
+        let key = "unit3x3/tiled";
+        let spec = rt.load(key).unwrap().spec.clone();
+        let xd = &spec.inputs[0];
+        let x = Arc::new(Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 1));
+        assert!(rt.run_arc(key, &[Arc::clone(&x)]).is_err(), "arity");
+        let bad = Arc::new(Tensor4::zeros([1, 1, 1, 1]));
+        assert!(rt.run_arc(key, &[x, bad]).is_err(), "bad filter shape");
     }
 
     // Artifact-directory round-trip tests live in

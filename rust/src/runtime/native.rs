@@ -6,10 +6,13 @@
 //! genuinely different code path ([`conv_im2col`]: patch-matrix + GEMM);
 //! kind `"tiled"` routes through the `kernels/` LP-blocked tiled engine
 //! (packed per-tile working sets, traffic counters, output tiles fanned
-//! out over a shared thread pool). Three independent accumulation orders,
-//! so cross-kind agreement tests exercise real cross-validation even
-//! without compiled artifacts. Other kinds (`"network"`, gradient passes)
-//! require the PJRT backend.
+//! out over a shared thread pool); kind `"network"` executes a whole
+//! [`crate::runtime::manifest::NetworkSpec`] pipeline through the
+//! `kernels/fuse` fused executor (resolved via
+//! [`ExecBackend::load_network`] — the single-layer `load` entry rejects
+//! it). Three independent single-layer accumulation orders, so cross-kind
+//! agreement tests exercise real cross-validation even without compiled
+//! artifacts. Gradient passes still require the PJRT backend.
 //!
 //! The [`ConvShape`] is recovered and validated by
 //! [`ArtifactSpec::layer_shape`] (the one authoritative inversion of the
@@ -27,8 +30,8 @@ use std::sync::{Arc, Mutex};
 use crate::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
 use crate::err;
 use crate::kernels::{
-    conv_tiled_parallel, TilePlan, TilePlanCache, TrafficCounters,
-    DEFAULT_TILE_MEM_WORDS,
+    conv_network_fused, conv_tiled_parallel, FusePlan, NetTrafficCounters,
+    TilePlan, TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -36,7 +39,7 @@ use crate::util::threadpool::ThreadPool;
 pub use crate::kernels::conv_im2col;
 
 use super::backend::{ExecBackend, Executable};
-use super::manifest::ArtifactSpec;
+use super::manifest::{ArtifactSpec, NetworkSpec};
 
 /// The in-tree CPU backend.
 #[derive(Clone, Default)]
@@ -88,13 +91,44 @@ impl ExecBackend for NativeBackend {
                     counters: Arc::new(TrafficCounters::new()),
                 }))
             }
+            "network" => Err(err!(
+                "artifact '{}' is a network pipeline but the manifest \
+                 carries no matching 'networks' entry to execute it \
+                 natively: add one (name '{}', a stage per conv), or build \
+                 with --features pjrt to run the compiled HLO over XLA",
+                spec.key(),
+                spec.name
+            )),
             other => Err(err!(
                 "native backend cannot execute artifact '{}' of kind '{other}' \
-                 (only single-layer 'blocked'/'im2col'/'tiled' specs); build \
-                 with --features pjrt to run it over XLA",
+                 (single-layer 'blocked'/'im2col'/'tiled' specs or 'network' \
+                 pipelines); build with --features pjrt to run it over XLA",
                 spec.key()
             )),
         }
+    }
+
+    fn load_network(
+        &mut self,
+        net: &NetworkSpec,
+        spec: &ArtifactSpec,
+    ) -> Result<Box<dyn Executable>> {
+        if spec.inputs.len() != net.stages.len() + 1 {
+            return Err(err!(
+                "network artifact '{}' wants image + {} filters, spec has {} \
+                 inputs",
+                spec.key(),
+                net.stages.len(),
+                spec.inputs.len()
+            ));
+        }
+        let plan = Arc::new(FusePlan::new(
+            &net.stages,
+            DEFAULT_TILE_MEM_WORDS,
+            &self.plans,
+        ));
+        let counters = NetTrafficCounters::new(net.stages.len());
+        Ok(Box::new(NetworkExec { plan, pool: self.tiled_pool(), counters }))
     }
 }
 
@@ -137,7 +171,55 @@ impl Executable for TiledExec {
         Ok(conv_tiled_parallel(&x, &w, &self.plan, &self.pool, &self.counters))
     }
 
-    fn traffic(&self) -> Option<crate::kernels::Traffic> {
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        Ok(conv_tiled_parallel(
+            &inputs[0],
+            &inputs[1],
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn traffic(&self) -> Option<Traffic> {
+        Some(self.counters.snapshot())
+    }
+}
+
+/// Executes a whole network pipeline through the `kernels/fuse` fused
+/// executor: fused groups sweep the last stage's output tiles with
+/// inter-layer activations held in scratch, materialized stages run the
+/// LP-tiled engine, tiles fanned out over the backend's shared pool.
+struct NetworkExec {
+    plan: Arc<FusePlan>,
+    pool: Arc<ThreadPool>,
+    counters: NetTrafficCounters,
+}
+
+impl Executable for NetworkExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let arcs: Vec<Arc<Tensor4>> =
+            inputs.iter().map(|t| Arc::new((*t).clone())).collect();
+        self.execute_arc(&arcs)
+    }
+
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        let image = &inputs[0];
+        let filters = &inputs[1..];
+        Ok(conv_network_fused(
+            image,
+            filters,
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn traffic(&self) -> Option<Traffic> {
+        Some(self.counters.total())
+    }
+
+    fn stage_traffic(&self) -> Option<Vec<Traffic>> {
         Some(self.counters.snapshot())
     }
 }
@@ -207,6 +289,35 @@ mod tests {
         a.load(&spec, None).expect("first load");
         b.load(&spec, None).expect("second load");
         assert_eq!(be.plans.len(), 1, "clones must share one plan cache");
+    }
+
+    #[test]
+    fn network_pipeline_loads_and_matches_staged_oracle() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let spec = ArtifactSpec::for_network(&net);
+        let mut be = NativeBackend::new();
+        let exe = be.load_network(&net, &spec).expect("load network");
+        let image = Tensor4::randn(net.input_dims(), 5);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 6 + i as u64))
+            .collect();
+        let mut ins: Vec<&Tensor4> = vec![&image];
+        ins.extend(filters.iter());
+        let got = exe.execute(&ins).expect("run network");
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let want = crate::kernels::naive_network(&image, &frefs, &net.stages);
+        assert_eq!(got.dims.to_vec(), spec.output);
+        assert_eq!(got.max_abs_diff(&want), 0.0, "fused must be bitwise");
+        let per_stage = exe.stage_traffic().expect("network is instrumented");
+        assert_eq!(per_stage.len(), net.stages.len());
+        assert!(exe.traffic().expect("aggregate").total() > 0);
+        // arity mismatch between spec and chain is rejected at load
+        let mut bad = spec.clone();
+        bad.inputs.pop();
+        assert!(be.load_network(&net, &bad).is_err());
     }
 
     #[test]

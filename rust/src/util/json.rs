@@ -29,6 +29,25 @@ impl Json {
         self.as_f64().map(|f| f as u64)
     }
 
+    /// Strict integer accessor: `Some` only for a finite, non-negative
+    /// number with no fractional part that is exactly representable as an
+    /// f64 integer (≤ 2⁵³) — no truncation, no saturation, no defaulting.
+    /// Use where coercing a malformed value would silently load different
+    /// semantics than its author wrote (manifest shapes, sidecar entries).
+    pub fn as_u64_strict(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = (1u64 << 53) as f64;
+        match self.as_f64() {
+            Some(v)
+                if v.is_finite()
+                    && (0.0..=MAX_EXACT).contains(&v)
+                    && v.fract() == 0.0 =>
+            {
+                Some(v as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -376,5 +395,21 @@ mod tests {
     fn missing_key_is_null() {
         let v = Json::parse("{}").unwrap();
         assert_eq!(v.get("nope"), &Json::Null);
+    }
+
+    #[test]
+    fn strict_u64_rejects_coercions_plain_u64_allows() {
+        assert_eq!(Json::Num(13.0).as_u64_strict(), Some(13));
+        assert_eq!(Json::Num(0.0).as_u64_strict(), Some(0));
+        assert_eq!(Json::Num(1.9).as_u64_strict(), None);
+        assert_eq!(Json::Num(-1.0).as_u64_strict(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64_strict(), None);
+        // integral but beyond exact-f64 range: would saturate, so refused
+        assert_eq!(Json::Num(1e19).as_u64_strict(), None);
+        assert_eq!(Json::Num((1u64 << 53) as f64).as_u64_strict(), Some(1 << 53));
+        assert_eq!(Json::Str("4".into()).as_u64_strict(), None);
+        assert_eq!(Json::Null.as_u64_strict(), None);
+        // the lenient accessor truncates where the strict one refuses
+        assert_eq!(Json::Num(1.9).as_u64(), Some(1));
     }
 }

@@ -89,6 +89,103 @@ fn server_routes_through_tiled_engine() {
 }
 
 #[test]
+fn server_serves_whole_network_requests() {
+    // whole-network serving: one submit per image, the response is the
+    // final stage's activation, validated bitwise against the staged
+    // naive oracle per request
+    let m = Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH);
+    let net = m.network("tiny_resnet").expect("builtin network").clone();
+    let spec = m.find("tiny_resnet/network").expect("network artifact").clone();
+    let weights: Vec<Tensor4> = spec.inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 60 + i as u64))
+        .collect();
+    let server = ConvServer::start_builtin_network(
+        "tiny_resnet/network",
+        weights.clone(),
+        Duration::from_millis(3),
+    )
+    .expect("network server start");
+    let xd = spec.inputs[0].clone();
+    assert_eq!(server.batch_size(), xd[0]);
+
+    // per-image oracle: the same chain at batch 1
+    let one_img_stages: Vec<convbound::runtime::NetworkStage> = net
+        .stages
+        .iter()
+        .map(|st| convbound::runtime::NetworkStage {
+            shape: st.shape.with_batch(1),
+            precision: st.precision,
+        })
+        .collect();
+    let wrefs: Vec<&Tensor4> = weights.iter().collect();
+
+    let n_req = xd[0] + 1; // forces a padded second batch
+    let images: Vec<Tensor4> = (0..n_req)
+        .map(|i| Tensor4::randn([1, xd[1], xd[2], xd[3]], 800 + i as u64))
+        .collect();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("submit"))
+        .collect();
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx.recv().expect("response");
+        let want =
+            convbound::kernels::naive_network(img, &wrefs, &one_img_stages);
+        assert_eq!(
+            resp.output.max_abs_diff(&want),
+            0.0,
+            "network request must match the staged oracle bitwise"
+        );
+    }
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, n_req as u64);
+    assert!(stats.padded_slots >= 1);
+
+    // wrong weight arity is rejected at start
+    let one = vec![Tensor4::randn(
+        [
+            spec.inputs[1][0],
+            spec.inputs[1][1],
+            spec.inputs[1][2],
+            spec.inputs[1][3],
+        ],
+        9,
+    )];
+    assert!(ConvServer::start_builtin_network(
+        "tiny_resnet/network",
+        one,
+        Duration::from_millis(1)
+    )
+    .is_err());
+}
+
+#[test]
+fn zero_copy_submit_accepts_shared_images() {
+    // submit takes Arc<Tensor4> directly: many requests can share one
+    // buffer with no per-submit copies
+    let (spec, shape) = layer_spec();
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 13);
+    let server =
+        ConvServer::start_builtin(KEY, weights.clone(), Duration::from_millis(2))
+            .expect("server");
+    let img =
+        std::sync::Arc::new(Tensor4::randn([1, xd[1], xd[2], xd[3]], 14));
+    let pending: Vec<_> = (0..xd[0])
+        .map(|_| server.submit(std::sync::Arc::clone(&img)).expect("submit"))
+        .collect();
+    let want = conv7nl_naive(&img, &weights, &shape);
+    for rx in pending {
+        let resp = rx.recv().expect("response");
+        assert!(resp.output.rel_l2(&want) < 1e-5);
+    }
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
 fn server_rejects_bad_shapes() {
     let (spec, _) = layer_spec();
     let wd = spec.inputs[1].clone();

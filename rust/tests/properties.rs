@@ -2,6 +2,8 @@
 //! is unavailable offline). Each property encodes a theorem-level invariant
 //! from the paper or a conservation law of the simulator.
 
+use std::sync::Arc;
+
 use convbound::bounds::{parallel_bound_terms, sequential_bound, sequential_bound_terms};
 use convbound::commvol::seq::blocking_volume;
 use convbound::conv::{
@@ -10,8 +12,12 @@ use convbound::conv::{
 };
 use convbound::gemmini::{simulate_layer, GemminiConfig};
 use convbound::kernels::{
-    conv_tiled_counted, expected_traffic, TilePlan, TrafficCounters,
+    axpy, axpy_scalar, conv_network_fused, conv_network_fused_counted,
+    conv_tiled_counted, expected_traffic, naive_network, FusePlan,
+    NetTrafficCounters, TilePlan, TilePlanCache, TrafficCounters,
 };
+use convbound::runtime::NetworkSpec;
+use convbound::util::threadpool::ThreadPool;
 use convbound::hbl::{lattice_closure, Mat, Subspace};
 use convbound::lp::{solve, Constraint, Objective, Rat, Rel};
 use convbound::testkit::{forall, forall_shrink, shrink_u64s, Config};
@@ -409,6 +415,206 @@ fn tiled_matches_naive_on_full_catalog_within_traffic_envelope() {
             measured / predicted
         );
     }
+}
+
+// ---------------- fused network pipelines ----------------
+
+/// Random 2–4 stage chains satisfying the paper's chaining convention
+/// `σ·wO + wF = previous wO` per axis: strided, non-square, ragged. The
+/// head stage is sized so at least one extension always exists.
+fn random_chain(r: &mut Rng) -> NetworkSpec {
+    let head = ConvShape::new(
+        r.range(1, 3),
+        r.range(1, 4),
+        r.range(1, 5),
+        r.range(6, 14),
+        r.range(6, 14),
+        r.range(1, 3),
+        r.range(1, 3),
+        1,
+        1,
+    );
+    let mut shapes = vec![head];
+    let want = r.range(2, 4) as usize;
+    while shapes.len() < want {
+        let prev = *shapes.last().unwrap();
+        let pick = |r: &mut Rng, extent: u64| -> Option<(u64, u64, u64)> {
+            // candidates (σ, f, out) with σ ≤ f, out ≥ 1, σ·out + f = extent
+            let mut cands = Vec::new();
+            for s in 1..=2u64 {
+                for f in s..=(s + 3) {
+                    if extent > f && (extent - f) % s == 0 {
+                        cands.push((s, f, (extent - f) / s));
+                    }
+                }
+            }
+            if cands.is_empty() {
+                None
+            } else {
+                Some(*r.choose(&cands))
+            }
+        };
+        let (Some((sw, wf, wo)), Some((sh, hf, ho))) =
+            (pick(r, prev.w_o), pick(r, prev.h_o))
+        else {
+            break;
+        };
+        shapes.push(ConvShape::new(
+            prev.n,
+            prev.c_o,
+            r.range(1, 5),
+            wo,
+            ho,
+            wf,
+            hf,
+            sw,
+            sh,
+        ));
+    }
+    if shapes.len() < 2 {
+        // head extents ≥ 6 always admit (σ=1, f=1, out=extent−1)
+        unreachable!("chain generator must produce at least two stages");
+    }
+    NetworkSpec::uniform("prop", &shapes).expect("generated chain is valid")
+}
+
+fn chain_filters(net: &NetworkSpec, seed: u64) -> Vec<Tensor4> {
+    net.stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), seed + 1 + i as u64))
+        .collect()
+}
+
+/// Words crossing fused boundaries must be zero (one shared definition:
+/// [`FusePlan::boundary_words`]).
+fn fused_boundaries_silent(plan: &FusePlan, measured: &[convbound::kernels::Traffic]) -> bool {
+    plan.boundary_words(measured) == 0
+}
+
+#[test]
+fn prop_fully_fused_network_bitwise_matches_staged_oracle() {
+    // with every boundary fused, the network executor performs exactly the
+    // oracle's per-element operations (in order), tile by tile — so the
+    // output is bitwise identical, for arbitrary (ragged) tile choices,
+    // and no words cross any inter-stage boundary
+    forall(
+        Config { cases: 14, seed: 81 },
+        |r| {
+            let net = random_chain(r);
+            let last = net.stages.last().unwrap().shape;
+            let tile = (
+                r.range(1, last.n),
+                r.range(1, last.w_o),
+                r.range(1, last.h_o),
+            );
+            (net, tile, r.range(0, 1_000_000))
+        },
+        |(net, (b_n, b_wo, b_ho), seed)| {
+            let cache = TilePlanCache::new();
+            // force one end-to-end fused group with the random tile: the
+            // executor's correctness must not depend on the planner's
+            // footprint rule
+            let mut plan = FusePlan::new(&net.stages, 65536.0, &cache);
+            plan.groups = vec![convbound::kernels::FuseGroup {
+                start: 0,
+                end: net.stages.len() - 1,
+                b_n: *b_n,
+                b_wo: *b_wo,
+                b_ho: *b_ho,
+            }];
+            let image = Tensor4::randn(net.input_dims(), *seed);
+            let filters = chain_filters(net, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let got = conv_network_fused_counted(&image, &frefs, &plan, &counters);
+            let want = naive_network(&image, &frefs, &net.stages);
+            let measured = counters.snapshot();
+            got.max_abs_diff(&want) == 0.0
+                && measured == plan.expected_network_traffic()
+                && fused_boundaries_silent(&plan, &measured)
+        },
+    );
+}
+
+#[test]
+fn prop_planned_network_matches_oracle_with_exact_traffic() {
+    // the planner's own grouping (random memory budgets force mixed
+    // fuse/materialize decisions): numerics agree with the staged oracle
+    // (bitwise when the plan fused end to end, else within tolerance —
+    // materialized stages run the LP-tiled engine's accumulation order),
+    // measured per-stage traffic equals the analytic model exactly, and
+    // fused boundaries move zero words
+    forall(
+        Config { cases: 14, seed: 84 },
+        |r| (random_chain(r), (1u64 << r.range(9, 14)) as f64, r.range(0, 1_000_000)),
+        |(net, m, seed)| {
+            let cache = TilePlanCache::new();
+            let plan = FusePlan::new(&net.stages, *m, &cache);
+            let image = Tensor4::randn(net.input_dims(), *seed);
+            let filters = chain_filters(net, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let got = conv_network_fused_counted(&image, &frefs, &plan, &counters);
+            let want = naive_network(&image, &frefs, &net.stages);
+            let fully_fused =
+                plan.groups.len() == 1 && plan.groups[0].is_fused();
+            let numerics_ok = if fully_fused {
+                got.max_abs_diff(&want) == 0.0
+            } else {
+                got.rel_l2(&want) < 1e-4
+            };
+            let measured = counters.snapshot();
+            numerics_ok
+                && measured == plan.expected_network_traffic()
+                && fused_boundaries_silent(&plan, &measured)
+        },
+    );
+}
+
+#[test]
+fn prop_fused_parallel_bitwise_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(
+        Config { cases: 8, seed: 82 },
+        |r| (random_chain(r), (1u64 << r.range(9, 13)) as f64),
+        |(net, m)| {
+            let cache = TilePlanCache::new();
+            let plan = Arc::new(FusePlan::new(&net.stages, *m, &cache));
+            let image = Arc::new(Tensor4::randn(net.input_dims(), 3));
+            let filters: Vec<Arc<Tensor4>> =
+                chain_filters(net, 3).into_iter().map(Arc::new).collect();
+            let frefs: Vec<&Tensor4> =
+                filters.iter().map(|a| a.as_ref()).collect();
+            let serial_ctr = NetTrafficCounters::new(net.stages.len());
+            let serial =
+                conv_network_fused_counted(&image, &frefs, &plan, &serial_ctr);
+            let par_ctr = NetTrafficCounters::new(net.stages.len());
+            let par =
+                conv_network_fused(&image, &filters, &plan, &pool, &par_ctr);
+            par.max_abs_diff(&serial) == 0.0
+                && par_ctr.snapshot() == serial_ctr.snapshot()
+        },
+    );
+}
+
+#[test]
+fn prop_axpy_unrolled_bitwise_matches_scalar() {
+    forall(
+        Config { cases: 120, seed: 83 },
+        |r| (r.range(0, 40) as usize, r.range(0, 1_000_000)),
+        |(len, seed)| {
+            let mut rng = Rng::new(*seed);
+            let f_row = rng.normal_vec(*len);
+            let base = rng.normal_vec(*len);
+            let x = rng.normal_vec(1)[0];
+            let mut a = base.clone();
+            let mut b = base;
+            axpy(&mut a, &f_row, x);
+            axpy_scalar(&mut b, &f_row, x);
+            a.iter().zip(&b).all(|(va, vb)| va.to_bits() == vb.to_bits())
+        },
+    );
 }
 
 // ---------------- naive conv oracle ----------------
