@@ -2,7 +2,8 @@
 //! the batching server's request throughput, a per-kernel catalog sweep
 //! (naive vs im2col vs tiled) emitted as machine-readable
 //! `BENCH_kernels.json`, and a whole-network sweep comparing layer-by-layer
-//! vs fused execution (throughput + measured per-stage traffic) emitted as
+//! vs fused-reference vs fused-packed execution (throughput + measured
+//! per-stage traffic + sliding-window halo-cache savings) emitted as
 //! `BENCH_network.json`.
 //!
 //! Runs out of the box on the built-in native backend (no artifacts, no
@@ -25,10 +26,10 @@ use convbound::conv::{
 };
 use convbound::coordinator::ConvServer;
 use convbound::kernels::{
-    conv_im2col, conv_network_fused, conv_network_staged, conv_tiled,
-    conv_tiled_counted, conv_tiled_parallel, default_workers, FusePlan,
-    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
-    DEFAULT_TILE_MEM_WORDS,
+    conv_im2col, conv_network_fused, conv_network_fused_counted,
+    conv_network_staged, conv_tiled, conv_tiled_counted, conv_tiled_parallel,
+    default_workers, FuseGroup, FusePlan, FusedExec, NetTrafficCounters,
+    TilePlan, TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::runtime::{Manifest, Runtime};
 use convbound::util::json::Json;
@@ -215,8 +216,10 @@ impl NetworkRow {
     }
 }
 
-/// Layer-by-layer vs fused execution over the builtin network pipelines;
-/// returns the `BENCH_network.json` document.
+/// Layer-by-layer vs fused execution (naive-reference and packed
+/// microkernel) over the builtin network pipelines, plus a forced h-tiled
+/// fully fused sweep measuring the sliding-window halo cache; returns the
+/// `BENCH_network.json` document.
 fn network_sweep(smoke: bool) -> Json {
     let m = DEFAULT_TILE_MEM_WORDS;
     let workers = default_workers();
@@ -225,12 +228,17 @@ fn network_sweep(smoke: bool) -> Json {
     let target = if smoke { 0.05 } else { 0.6 };
 
     println!(
-        "\n== network sweep: layer-by-layer vs fused, M = {m} words, \
-         {workers} workers =="
+        "\n== network sweep: layered vs fused-reference vs fused-packed, \
+         M = {m} words, {workers} workers =="
     );
     let mut nets_json = Vec::new();
     for net in &Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH).networks {
-        let plan = Arc::new(FusePlan::new(&net.stages, m, &cache));
+        let packed = Arc::new(FusePlan::new(&net.stages, m, &cache));
+        let reference = Arc::new({
+            let mut p = (*packed).clone();
+            p.exec = FusedExec::Reference;
+            p
+        });
         let image = Arc::new(Tensor4::randn(net.input_dims(), 21));
         let filters: Vec<Arc<Tensor4>> = net
             .stages
@@ -240,18 +248,35 @@ fn network_sweep(smoke: bool) -> Json {
                 Arc::new(Tensor4::randn(st.shape.filter_dims(), 22 + i as u64))
             })
             .collect();
+        let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
         let macs = net.updates() as f64;
         let counters = NetTrafficCounters::new(net.stages.len());
 
+        // the accumulation-order contract, revalidated on every bench run:
+        // packed and reference fused execution agree bitwise
+        {
+            let ca = NetTrafficCounters::new(net.stages.len());
+            let cb = NetTrafficCounters::new(net.stages.len());
+            let a = conv_network_fused_counted(&image, &frefs, &packed, &ca);
+            let b = conv_network_fused_counted(&image, &frefs, &reference, &cb);
+            assert_eq!(
+                a.max_abs_diff(&b),
+                0.0,
+                "{}: packed fused diverged from the reference nest",
+                net.name
+            );
+        }
+
         let mut rows = Vec::new();
-        for mode in ["layered", "fused"] {
+        for mode in ["layered", "fused_reference", "fused_packed"] {
+            let plan = if mode == "fused_reference" { &reference } else { &packed };
             let r = bench(&format!("network: {} {mode}", net.name), target, || {
                 match mode {
                     "layered" => std::hint::black_box(conv_network_staged(
-                        &image, &filters, &plan, &pool, &counters,
+                        &image, &filters, plan, &pool, &counters,
                     )),
                     _ => std::hint::black_box(conv_network_fused(
-                        &image, &filters, &plan, &pool, &counters,
+                        &image, &filters, plan, &pool, &counters,
                     )),
                 };
             });
@@ -260,10 +285,10 @@ fn network_sweep(smoke: bool) -> Json {
             counters.reset();
             match mode {
                 "layered" => std::hint::black_box(conv_network_staged(
-                    &image, &filters, &plan, &pool, &counters,
+                    &image, &filters, plan, &pool, &counters,
                 )),
                 _ => std::hint::black_box(conv_network_fused(
-                    &image, &filters, &plan, &pool, &counters,
+                    &image, &filters, plan, &pool, &counters,
                 )),
             };
             let per_stage = counters.snapshot();
@@ -273,25 +298,68 @@ fn network_sweep(smoke: bool) -> Json {
                 secs,
                 mmac_per_s: macs / secs / 1e6,
                 measured_words: Traffic::sum(&per_stage).total(),
-                // zero in fused mode; the layered baseline shows what the
+                // zero in fused modes; the layered baseline shows what the
                 // same boundary positions cost when materialized
-                boundary_words: plan.boundary_words(&per_stage),
+                boundary_words: packed.boundary_words(&per_stage),
             });
         }
-        let (layered, fused) = (&rows[0], &rows[1]);
+        let find = |name: &str| rows.iter().find(|r| r.mode == name).unwrap();
+        let (layered, refr, packd) =
+            (find("layered"), find("fused_reference"), find("fused_packed"));
         println!(
-            "  {:<12} {} stages, {} fused boundaries: layered {:>7.1} | fused \
-             {:>7.1} MMAC/s; traffic {} -> {} words ({:.2}x saved), fused \
-             boundary words {}",
+            "  {:<12} {} stages, {} fused boundaries: layered {:>7.1} | \
+             fused-ref {:>7.1} | fused-packed {:>7.1} MMAC/s (packed \
+             {:.2}x layered, {:.2}x reference); traffic {} -> {} words \
+             ({:.2}x saved), fused boundary words {}",
             net.name,
             net.stages.len(),
-            plan.fused_boundaries(),
+            packed.fused_boundaries(),
             layered.mmac_per_s,
-            fused.mmac_per_s,
+            refr.mmac_per_s,
+            packd.mmac_per_s,
+            packd.mmac_per_s / layered.mmac_per_s.max(1e-9),
+            packd.mmac_per_s / refr.mmac_per_s.max(1e-9),
             layered.measured_words,
-            fused.measured_words,
-            layered.measured_words as f64 / fused.measured_words.max(1) as f64,
-            fused.boundary_words,
+            packd.measured_words,
+            layered.measured_words as f64 / packd.measured_words.max(1) as f64,
+            packd.boundary_words,
+        );
+
+        // ---- sliding-window halo study: force a fully fused plan swept
+        // in single-row h-tiles so adjacent tiles share halo rows, then
+        // run with the cache on and off (bitwise-identical outputs) ----
+        let last = net.stages.last().unwrap().shape;
+        let mut halo_on = (*packed).clone();
+        halo_on.exec = FusedExec::Packed;
+        halo_on.halo_cache = true;
+        halo_on.groups = vec![FuseGroup {
+            start: 0,
+            end: net.stages.len() - 1,
+            b_n: last.n,
+            b_wo: last.w_o,
+            b_ho: 1,
+        }];
+        let mut halo_off = halo_on.clone();
+        halo_off.halo_cache = false;
+        let ctr_on = NetTrafficCounters::new(net.stages.len());
+        let out_on = conv_network_fused_counted(&image, &frefs, &halo_on, &ctr_on);
+        let ctr_off = NetTrafficCounters::new(net.stages.len());
+        let out_off =
+            conv_network_fused_counted(&image, &frefs, &halo_off, &ctr_off);
+        assert_eq!(
+            out_on.max_abs_diff(&out_off),
+            0.0,
+            "{}: halo cache changed the result",
+            net.name
+        );
+        let saved = ctr_on.halo_snapshot();
+        let saved_total: u64 = saved.iter().sum();
+        let in_on = Traffic::sum(&ctr_on.snapshot()).input_words;
+        let in_off = Traffic::sum(&ctr_off.snapshot()).input_words;
+        println!(
+            "  {:<12} halo study (fully fused, b_ho=1): {} words served \
+             from the cache; head input {} -> {} words",
+            net.name, saved_total, in_off, in_on,
         );
 
         let mut no = BTreeMap::new();
@@ -300,12 +368,13 @@ fn network_sweep(smoke: bool) -> Json {
         no.insert("stages".to_string(), Json::Num(net.stages.len() as f64));
         no.insert(
             "fused_boundaries".to_string(),
-            Json::Num(plan.fused_boundaries() as f64),
+            Json::Num(packed.fused_boundaries() as f64),
         );
         no.insert(
             "groups".to_string(),
             Json::Arr(
-                plan.groups
+                packed
+                    .groups
                     .iter()
                     .map(|g| {
                         let mut go = BTreeMap::new();
@@ -321,6 +390,30 @@ fn network_sweep(smoke: bool) -> Json {
             "modes".to_string(),
             Json::Arr(rows.iter().map(|r| r.json()).collect()),
         );
+        no.insert(
+            "speedup_fused_vs_layered".to_string(),
+            Json::Num(packd.mmac_per_s / layered.mmac_per_s.max(1e-9)),
+        );
+        no.insert(
+            "speedup_packed_vs_reference".to_string(),
+            Json::Num(packd.mmac_per_s / refr.mmac_per_s.max(1e-9)),
+        );
+        // the CI gate: the packed microkernel must not regress below the
+        // fused naive baseline (5% slack absorbs measurement noise)
+        no.insert(
+            "fused_packed_ge_reference".to_string(),
+            Json::Bool(packd.mmac_per_s >= 0.95 * refr.mmac_per_s),
+        );
+        no.insert(
+            "halo_saved_words_total".to_string(),
+            Json::Num(saved_total as f64),
+        );
+        no.insert(
+            "halo_saved_words".to_string(),
+            Json::Arr(saved.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        no.insert("halo_input_words_on".to_string(), Json::Num(in_on as f64));
+        no.insert("halo_input_words_off".to_string(), Json::Num(in_off as f64));
         nets_json.push(Json::Obj(no));
     }
     let mut doc = BTreeMap::new();
@@ -379,9 +472,18 @@ fn main() {
         );
     }
 
-    // whole network (needs the compiled artifact + a backend that runs it)
-    if let Some(spec) = rt.manifest().find("tiny_resnet/network").cloned() {
-        match rt.load("tiny_resnet/network").map(|_| ()) {
+    // whole networks (fused pipelines on the native backend; compiled
+    // artifacts under pjrt)
+    let network_keys: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "network")
+        .map(|a| a.key())
+        .collect();
+    for key in &network_keys {
+        let spec = rt.manifest().find(key).expect("manifest key").clone();
+        match rt.load(key).map(|_| ()) {
             Ok(()) => {
                 let tensors: Vec<Tensor4> = spec
                     .inputs
@@ -390,10 +492,8 @@ fn main() {
                     .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 10 + i as u64))
                     .collect();
                 let refs: Vec<&Tensor4> = tensors.iter().collect();
-                let r = bench("runtime: execute tiny_resnet network", target, || {
-                    std::hint::black_box(
-                        rt.run("tiny_resnet/network", &refs).expect("run"),
-                    );
+                let r = bench(&format!("runtime: execute {key}"), target, || {
+                    std::hint::black_box(rt.run(key, &refs).expect("run"));
                 });
                 println!(
                     "    -> {:.1} inferences/s, {:.1} MMAC/s",
@@ -401,7 +501,7 @@ fn main() {
                     spec.updates as f64 / r.summary.mean / 1e6
                 );
             }
-            Err(e) => println!("SKIP tiny_resnet/network: {e}"),
+            Err(e) => println!("SKIP {key}: {e}"),
         }
     }
 

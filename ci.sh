@@ -17,11 +17,30 @@ cargo run --release --example quickstart >/dev/null
 echo "==> cargo run --release -- exec --network tiny_resnet --check"
 cargo run --release -- exec --network tiny_resnet --check >/dev/null
 
+echo "==> cargo run --release -- exec --network deep_mixnet --check  (mixed fused/materialized plan)"
+cargo run --release -- exec --network deep_mixnet --check >/dev/null
+
 echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json)"
 rm -f BENCH_kernels.json BENCH_network.json  # stale files must not mask a failed write
 cargo bench --bench e2e_runtime -- --smoke >/dev/null
 test -s BENCH_kernels.json || { echo "FAIL: BENCH_kernels.json missing"; exit 1; }
 test -s BENCH_network.json || { echo "FAIL: BENCH_network.json missing"; exit 1; }
+
+echo "==> BENCH_network.json: fused speedup fields + packed-vs-reference gate + halo savings"
+grep -q '"speedup_fused_vs_layered":' BENCH_network.json \
+    || { echo "FAIL: speedup_fused_vs_layered missing from BENCH_network.json"; exit 1; }
+# the packed fused microkernel must not regress below the fused naive
+# baseline on any builtin network (the bench applies a 5% noise slack)
+if grep -q '"fused_packed_ge_reference":false' BENCH_network.json; then
+    echo "FAIL: fused packed throughput regressed below the fused naive baseline"
+    exit 1
+fi
+grep -q '"halo_saved_words_total":' BENCH_network.json \
+    || { echo "FAIL: halo_saved_words_total missing from BENCH_network.json"; exit 1; }
+# the sliding-window halo cache must save recompute/re-read words on at
+# least one network (a nonzero total starts with a nonzero digit)
+grep -Eq '"halo_saved_words_total":[1-9]' BENCH_network.json \
+    || { echo "FAIL: halo cache saved no words on any builtin network"; exit 1; }
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"

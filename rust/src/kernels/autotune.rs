@@ -25,12 +25,15 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
+use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Precision, Tensor4};
 use crate::err;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
-use super::exec::{conv_tiled, expected_traffic};
+use super::exec::{
+    conv_network_fused_counted, conv_tiled, expected_traffic, NetTrafficCounters,
+};
+use super::fuse::{FusePlan, FusedExec};
 use super::im2col::conv_im2col;
 use super::plan::{TilePlan, TilePlanCache};
 
@@ -64,6 +67,43 @@ impl KernelKind {
     }
 }
 
+/// The three ways to execute a whole network pipeline — the candidate
+/// fusion groupings the tuner probes the way it probes kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetKernelKind {
+    /// fused groups through the packed LP microkernel (the default)
+    FusedPacked,
+    /// fused groups through the patch-local naive reference nest
+    FusedReference,
+    /// every stage materialized through the LP-tiled engine
+    Materialized,
+}
+
+impl NetKernelKind {
+    pub const ALL: [NetKernelKind; 3] = [
+        NetKernelKind::FusedPacked,
+        NetKernelKind::FusedReference,
+        NetKernelKind::Materialized,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetKernelKind::FusedPacked => "fused_packed",
+            NetKernelKind::FusedReference => "fused_reference",
+            NetKernelKind::Materialized => "materialized",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetKernelKind> {
+        match s {
+            "fused_packed" => Some(NetKernelKind::FusedPacked),
+            "fused_reference" => Some(NetKernelKind::FusedReference),
+            "materialized" => Some(NetKernelKind::Materialized),
+            _ => None,
+        }
+    }
+}
+
 /// Probes above this many MACs trust the heuristic instead of measuring.
 const MEASURE_BUDGET_MACS: u64 = 200_000_000;
 
@@ -76,7 +116,8 @@ struct Tuned {
     traffic_words: u64,
 }
 
-/// Per-shape kernel chooser with a shared plan cache.
+/// Per-shape kernel chooser (and per-network mode chooser) with a shared
+/// plan cache.
 pub struct Autotuner {
     pub mem_words: f64,
     /// word model the tile plans are solved under (f32 uniform by default;
@@ -84,6 +125,36 @@ pub struct Autotuner {
     pub precision: Precision,
     plans: TilePlanCache,
     choices: Mutex<HashMap<ConvShape, Tuned>>,
+    /// per-network execution-mode choices, keyed on (name, batch, stage
+    /// fingerprint) — the fingerprint guards against a renamed-in-place
+    /// chain reusing a stale choice, the way `choices` keys on the full
+    /// [`ConvShape`]; the sidecar persists them next to the kernel
+    /// choices, under the same (M, precision) staleness rule
+    net_choices: Mutex<HashMap<(String, u64, u64), NetKernelKind>>,
+}
+
+/// Deterministic fingerprint of a stage chain (shapes and precision bit
+/// patterns, FNV-folded — stable across processes and toolchains): the
+/// staleness guard that keeps a cached or persisted network choice from
+/// answering for a *different* chain that shares its name and batch.
+fn stages_fingerprint(stages: &[NetworkStage]) -> u64 {
+    let mut f: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        f ^= v;
+        f = f.wrapping_mul(0x100000001b3);
+    };
+    mix(stages.len() as u64);
+    for st in stages {
+        let s = &st.shape;
+        for d in [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h] {
+            mix(d);
+        }
+        mix(st.precision.p_i.to_bits());
+        mix(st.precision.p_f.to_bits());
+        mix(st.precision.p_o.to_bits());
+    }
+    drop(mix);
+    f
 }
 
 impl Autotuner {
@@ -97,6 +168,7 @@ impl Autotuner {
             precision,
             plans: TilePlanCache::new(),
             choices: Mutex::new(HashMap::new()),
+            net_choices: Mutex::new(HashMap::new()),
         }
     }
 
@@ -141,6 +213,158 @@ impl Autotuner {
             .expect("choices poisoned")
             .insert(*s, Tuned { kernel, traffic_words });
         kernel
+    }
+
+    /// The fusion plan this tuner would execute `stages` with under a
+    /// given network mode (tile plans come from the shared cache). The
+    /// halo flag feeds the *planner* too — fusion decisions and tile
+    /// fitting must use the model the run will execute under, or the
+    /// `fused ≤ unfused` rule silently evaluates the wrong traffic.
+    /// Ignored by `Materialized` (nothing fuses, nothing carries).
+    pub fn network_plan(
+        &self,
+        stages: &[NetworkStage],
+        kind: NetKernelKind,
+        halo_cache: bool,
+    ) -> FusePlan {
+        match kind {
+            NetKernelKind::FusedPacked => FusePlan::with_options(
+                stages,
+                self.mem_words,
+                &self.plans,
+                FusedExec::Packed,
+                halo_cache,
+            ),
+            NetKernelKind::FusedReference => FusePlan::with_options(
+                stages,
+                self.mem_words,
+                &self.plans,
+                FusedExec::Reference,
+                halo_cache,
+            ),
+            NetKernelKind::Materialized => {
+                FusePlan::materialized(stages, self.mem_words, &self.plans)
+            }
+        }
+    }
+
+    /// Zero-cost network selection from plan structure alone: fuse
+    /// (packed) when the planner fuses any boundary at this tuner's
+    /// budget, else materialize.
+    pub fn heuristic_network(&self, stages: &[NetworkStage]) -> NetKernelKind {
+        let plan = FusePlan::new(stages, self.mem_words, &self.plans);
+        if plan.fused_boundaries() > 0 {
+            NetKernelKind::FusedPacked
+        } else {
+            NetKernelKind::Materialized
+        }
+    }
+
+    /// Measure-once network-mode selection: time the three execution modes
+    /// (fused-packed, fused-naive, materialized) on a batch-clamped probe
+    /// of the chain, cache and return the fastest, keyed on
+    /// `(name, batch, stage fingerprint)`. Falls back to
+    /// [`Autotuner::heuristic_network`] when even the probe would exceed
+    /// the MAC budget.
+    pub fn select_network(&self, name: &str, stages: &[NetworkStage]) -> NetKernelKind {
+        assert!(!stages.is_empty(), "empty network");
+        let key = (name.to_string(), stages[0].shape.n, stages_fingerprint(stages));
+        if let Some(k) = self
+            .net_choices
+            .lock()
+            .expect("net choices poisoned")
+            .get(&key)
+        {
+            return *k;
+        }
+        let probe: Vec<NetworkStage> = stages
+            .iter()
+            .map(|st| NetworkStage {
+                shape: st.shape.with_batch(st.shape.n.min(2)),
+                precision: st.precision,
+            })
+            .collect();
+        let macs: u64 = probe.iter().map(|st| st.shape.updates()).sum();
+        let kind = if macs > MEASURE_BUDGET_MACS {
+            self.heuristic_network(stages)
+        } else {
+            self.measure_network(&probe)
+        };
+        self.net_choices
+            .lock()
+            .expect("net choices poisoned")
+            .insert(key, kind);
+        kind
+    }
+
+    fn measure_network(&self, stages: &[NetworkStage]) -> NetKernelKind {
+        let head = &stages[0].shape;
+        let image = Tensor4::randn(
+            [
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize,
+            ],
+            1,
+        );
+        let filters: Vec<Tensor4> = stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 2 + i as u64))
+            .collect();
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let mut best = (NetKernelKind::FusedPacked, f64::INFINITY);
+        for kind in NetKernelKind::ALL {
+            let plan = self.network_plan(stages, kind, true);
+            let counters = NetTrafficCounters::new(stages.len());
+            let t0 = Instant::now();
+            std::hint::black_box(conv_network_fused_counted(
+                &image, &frefs, &plan, &counters,
+            ));
+            let secs = t0.elapsed().as_secs_f64();
+            if secs < best.1 {
+                best = (kind, secs);
+            }
+        }
+        best.0
+    }
+
+    /// Execute a whole network (serially) under the autotuned mode.
+    pub fn run_network(
+        &self,
+        image: &Tensor4,
+        filters: &[&Tensor4],
+        name: &str,
+        stages: &[NetworkStage],
+    ) -> Tensor4 {
+        let kind = self.select_network(name, stages);
+        let plan = self.network_plan(stages, kind, true);
+        let counters = NetTrafficCounters::new(stages.len());
+        conv_network_fused_counted(image, filters, &plan, &counters)
+    }
+
+    /// Every cached network choice with its full key, sorted for stable
+    /// sidecar files.
+    fn tuned_networks_raw(&self) -> Vec<((String, u64, u64), NetKernelKind)> {
+        let mut out: Vec<((String, u64, u64), NetKernelKind)> = self
+            .net_choices
+            .lock()
+            .expect("net choices poisoned")
+            .iter()
+            .map(|(key, k)| (key.clone(), *k))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Every cached `(network, batch, mode)` triple, in a deterministic
+    /// order (for reports and tests).
+    pub fn tuned_networks(&self) -> Vec<(String, u64, NetKernelKind)> {
+        self.tuned_networks_raw()
+            .into_iter()
+            .map(|((n, b, _), k)| (n, b, k))
+            .collect()
     }
 
     /// Every cached `(shape, kernel, tiled traffic words)` triple, in a
@@ -193,6 +417,19 @@ impl Autotuner {
             })
             .collect();
         doc.insert("entries".to_string(), Json::Arr(entries));
+        let networks: Vec<Json> = self
+            .tuned_networks_raw()
+            .into_iter()
+            .map(|((name, batch, fp), k)| {
+                let mut e = std::collections::BTreeMap::new();
+                e.insert("name".to_string(), Json::Str(name));
+                e.insert("batch".to_string(), Json::Num(batch as f64));
+                e.insert("stages".to_string(), Json::Str(format!("{fp:016x}")));
+                e.insert("kernel".to_string(), Json::Str(k.name().to_string()));
+                Json::Obj(e)
+            })
+            .collect();
+        doc.insert("networks".to_string(), Json::Arr(networks));
         let path = path.as_ref();
         std::fs::write(path, format!("{}\n", Json::Obj(doc)))
             .with_context(|| format!("writing autotune sidecar {}", path.display()))
@@ -256,10 +493,47 @@ impl Autotuner {
                 })?;
             entries.push((shape, Tuned { kernel, traffic_words }));
         }
-        let loaded = entries.len();
-        let mut choices = self.choices.lock().expect("choices poisoned");
-        for (shape, tuned) in entries {
-            choices.insert(shape, tuned);
+        let mut networks = Vec::new();
+        for e in v.get("networks").as_arr().unwrap_or(&[]) {
+            let name = e
+                .get("name")
+                .as_str()
+                .ok_or_else(|| err!("sidecar network entry missing 'name'"))?
+                .to_string();
+            let batch = e.get("batch").as_u64_strict().ok_or_else(|| {
+                err!("sidecar network entry has a malformed 'batch'")
+            })?;
+            let fp = e
+                .get("stages")
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| {
+                    err!(
+                        "sidecar network entry has a malformed 'stages' \
+                         fingerprint"
+                    )
+                })?;
+            let kernel = e
+                .get("kernel")
+                .as_str()
+                .and_then(NetKernelKind::parse)
+                .ok_or_else(|| {
+                    err!("sidecar network entry has an unknown kernel")
+                })?;
+            networks.push(((name, batch, fp), kernel));
+        }
+        let loaded = entries.len() + networks.len();
+        {
+            let mut choices = self.choices.lock().expect("choices poisoned");
+            for (shape, tuned) in entries {
+                choices.insert(shape, tuned);
+            }
+        }
+        {
+            let mut nets = self.net_choices.lock().expect("net choices poisoned");
+            for (key, kind) in networks {
+                nets.insert(key, kind);
+            }
         }
         Ok(loaded)
     }
@@ -402,5 +676,69 @@ mod tests {
             assert_eq!(KernelKind::parse(k.name()), Some(k));
         }
         assert_eq!(KernelKind::parse("auto"), None);
+    }
+
+    #[test]
+    fn net_kernel_kind_names_roundtrip() {
+        for k in NetKernelKind::ALL {
+            assert_eq!(NetKernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(NetKernelKind::parse("auto"), None);
+    }
+
+    #[test]
+    fn network_selection_caches_runs_and_roundtrips() {
+        let tuner = Autotuner::new(65536.0);
+        let net = crate::runtime::manifest::NetworkSpec::tiny_resnet(2);
+        let k1 = tuner.select_network("tiny_resnet", &net.stages);
+        assert_eq!(tuner.select_network("tiny_resnet", &net.stages), k1);
+        assert_eq!(tuner.tuned_networks().len(), 1);
+        // execution under the tuned mode agrees with the staged oracle
+        let image = Tensor4::randn(net.input_dims(), 31);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 32 + i as u64))
+            .collect();
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let got = tuner.run_network(&image, &frefs, "tiny_resnet", &net.stages);
+        let want = super::super::fuse::naive_network(&image, &frefs, &net.stages);
+        assert!(got.rel_l2(&want) < 1e-4, "rel {}", got.rel_l2(&want));
+
+        // sidecar roundtrip keyed to (network, M, precision)
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "convbound_autotune_net_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        tuner.save(&path).expect("save sidecar");
+        let warm = Autotuner::new(65536.0);
+        assert_eq!(warm.warm_start(&path).expect("warm start"), 1);
+        assert_eq!(warm.tuned_networks(), tuner.tuned_networks());
+        assert_eq!(warm.select_network("tiny_resnet", &net.stages), k1);
+        // a different memory budget answers a different planning question
+        let other = Autotuner::new(4096.0);
+        assert_eq!(other.warm_start(&path).expect("stale ok"), 0);
+        assert!(other.tuned_networks().is_empty());
+        // an unknown network mode (or a missing stage fingerprint) is
+        // rejected, not coerced
+        std::fs::write(
+            &path,
+            r#"{"mem_words":65536,"precision":[1,1,1],"entries":[],
+               "networks":[{"name":"x","batch":2,"kernel":"winograd"}]}"#,
+        )
+        .unwrap();
+        assert!(warm.warm_start(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+
+        // same name and batch but a *different* chain must re-probe, not
+        // reuse the cached mode — the stage-fingerprint staleness guard
+        let mut altered = net.stages.clone();
+        altered[0].shape.c_i += 1;
+        let _ = tuner.select_network("tiny_resnet", &altered);
+        assert_eq!(tuner.tuned_networks().len(), 2);
     }
 }

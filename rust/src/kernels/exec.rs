@@ -24,6 +24,16 @@
 //! beyond the traffic counters (relaxed atomics). Each output tile is
 //! computed serially by one worker in a fixed reduction order, so the
 //! parallel result is bitwise identical to the serial one.
+//!
+//! Network pipelines (the fused executor at the bottom of this file) sweep
+//! the last fused stage's output tiles; every fused stage runs through the
+//! same packed panels and axpy microkernel as one full reduction tile —
+//! which pins its per-element accumulation order to the naive nest's
+//! ascending `(cI, i6, i7)` (the contract `gemm.rs` documents), keeping
+//! fused output bitwise identical to the stage-by-stage oracle — while a
+//! sliding-window halo cache carries each level's overlap rows between
+//! adjacent h-tiles so the head re-reads and the upstream recompute only
+//! cover fresh rows.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -31,10 +41,13 @@ use std::sync::Arc;
 use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Tensor4};
 use crate::util::threadpool::ThreadPool;
 
-use super::fuse::{group_spans, group_tiles, input_span, FuseGroup, FusePlan};
+use super::fuse::{
+    group_spans, group_tile_columns, input_overlap_rows, input_span, FuseGroup,
+    FusePlan, FusedExec,
+};
 use super::gemm::{self, TileDims};
 use super::pack;
-use super::plan::TilePlan;
+use super::plan::{filter_split_ranges, TilePlan};
 use super::tiles::{self, Blk, OutTile, RedTile};
 
 /// Worker count for tile-execution pools: cores minus one (the spare runs
@@ -312,16 +325,22 @@ pub fn expected_traffic(plan: &TilePlan) -> Traffic {
 /// Per-stage traffic counters for a network pipeline. Each stage owns one
 /// [`TrafficCounters`] behind an `Arc` so materialized stages can hand it
 /// straight to [`conv_tiled_parallel`] while fused sweeps charge it from
-/// worker threads.
+/// worker threads. A parallel per-stage halo counter records the words the
+/// fused executor served from its sliding-window cache.
 #[derive(Debug, Clone)]
 pub struct NetTrafficCounters {
     stages: Vec<Arc<TrafficCounters>>,
+    /// per-stage words of input patch served from the sliding-window halo
+    /// cache: group heads avoid main-memory re-reads, interior fused
+    /// stages avoid upstream recompute
+    halo: Vec<Arc<AtomicU64>>,
 }
 
 impl NetTrafficCounters {
     pub fn new(stages: usize) -> NetTrafficCounters {
         NetTrafficCounters {
             stages: (0..stages).map(|_| Arc::new(TrafficCounters::new())).collect(),
+            halo: (0..stages).map(|_| Arc::new(AtomicU64::new(0))).collect(),
         }
     }
 
@@ -338,9 +357,19 @@ impl NetTrafficCounters {
         &self.stages[k]
     }
 
+    fn add_halo(&self, k: usize, words: u64) {
+        self.halo[k].fetch_add(words, Ordering::Relaxed);
+    }
+
     /// Per-stage snapshots, in stage order.
     pub fn snapshot(&self) -> Vec<Traffic> {
         self.stages.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// Per-stage words served from the halo cache, in stage order. Matches
+    /// [`FusePlan::expected_halo_words`] exactly.
+    pub fn halo_snapshot(&self) -> Vec<u64> {
+        self.halo.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// Sum of all stages.
@@ -351,6 +380,9 @@ impl NetTrafficCounters {
     pub fn reset(&self) {
         for c in &self.stages {
             c.reset();
+        }
+        for h in &self.halo {
+            h.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -369,13 +401,169 @@ fn assert_network_operands(image: &Tensor4, filters: &[&Tensor4], stages: &[Netw
     }
 }
 
-/// Execute one fused tile: copy the halo'd image patch out of `input`
-/// (the only input-side main-memory traffic the group charges), then run
-/// each stage as a patch-local [`conv7nl_naive`] — identical per-element
-/// accumulation order, so the fused result is bitwise identical to the
-/// stage-by-stage oracle — holding every inter-stage activation in the
-/// scratch tensor that ping-pongs between stages.
-fn run_fused_tile(
+/// Repoint a reusable tensor at new dims WITHOUT zeroing the retained
+/// payload — every caller either overwrites all elements (carry prefix +
+/// fresh copies / microkernel scatter) or zeroes exactly the rows it
+/// accumulates into ([`zero_rows_from`]). `resize` keeps the allocation,
+/// so reuse across tiles costs no allocator calls after warmup.
+fn reset_tensor(t: &mut Tensor4, dims: [usize; 4]) {
+    let len = dims.iter().product();
+    t.dims = dims;
+    t.data.resize(len, 0.0);
+}
+
+/// Zero rows `[h0, dims[3])` of every (n, c, w) line — the fresh region
+/// the reference nest accumulates into.
+fn zero_rows_from(t: &mut Tensor4, h0: usize) {
+    let h = t.dims[3];
+    let lines = t.dims[0] * t.dims[1] * t.dims[2];
+    let mut d = h0;
+    for _ in 0..lines {
+        t.data[d..d + (h - h0)].fill(0.0);
+        d += h;
+    }
+}
+
+/// Copy the carry's rows into the leading h-rows of every (n, c, w) line
+/// of `dst` (h is the contiguous axis on both sides).
+fn copy_carry_prefix(dst: &mut Tensor4, src: &Tensor4, rows: usize) {
+    debug_assert_eq!(src.dims[3], rows);
+    debug_assert_eq!(src.dims[..3], dst.dims[..3]);
+    let dh = dst.dims[3];
+    let lines = dst.dims[0] * dst.dims[1] * dst.dims[2];
+    let mut s = 0;
+    let mut d = 0;
+    for _ in 0..lines {
+        dst.data[d..d + rows].copy_from_slice(&src.data[s..s + rows]);
+        s += rows;
+        d += dh;
+    }
+}
+
+/// Save the trailing `rows` h-rows of every (n, c, w) line of `src` into
+/// `dst` (resized to match) — the sliding-window carry the next h-tile
+/// starts from.
+fn save_carry_tail(dst: &mut Tensor4, src: &Tensor4, rows: usize) {
+    let sh = src.dims[3];
+    debug_assert!(rows <= sh);
+    reset_tensor(dst, [src.dims[0], src.dims[1], src.dims[2], rows]);
+    let lines = src.dims[0] * src.dims[1] * src.dims[2];
+    let mut s = sh - rows;
+    let mut d = 0;
+    for _ in 0..lines {
+        dst.data[d..d + rows].copy_from_slice(&src.data[s..s + rows]);
+        s += sh;
+        d += rows;
+    }
+}
+
+/// Reusable per-worker scratch for a fused group's tile sweeps: the
+/// ping-pong activation patches, the packed panels, the microkernel output
+/// buffer and the per-level sliding-window carries. Hoisted out of the
+/// tile and stage loops so the hot path performs no allocator calls after
+/// warmup (every buffer keeps its capacity across reuse).
+struct FusedScratch {
+    /// current stage's input patch (level j)
+    cur: Tensor4,
+    /// current stage's output patch (level j + 1); swapped into `cur`
+    next: Tensor4,
+    /// packed input panel, reused across stages and tiles
+    xin: Vec<f32>,
+    /// packed filter panel, reused across stages and tiles
+    fil: Vec<f32>,
+    /// microkernel output buffer for the fresh rows
+    mac_out: Vec<f32>,
+    /// per-level carries: `carry[j]` holds the trailing overlap rows of
+    /// level j's input (level 0 = the head image patch) from the previous
+    /// h-tile of the column
+    carry: Vec<Tensor4>,
+    carry_valid: Vec<bool>,
+    /// constant per-level overlap row counts ([`input_overlap_rows`]);
+    /// all zero with the halo cache off
+    overlap: Vec<u64>,
+}
+
+impl FusedScratch {
+    fn for_group(stages: &[NetworkStage], g: &FuseGroup, halo: bool) -> FusedScratch {
+        let levels = g.len();
+        FusedScratch {
+            cur: Tensor4::zeros([0, 0, 0, 0]),
+            next: Tensor4::zeros([0, 0, 0, 0]),
+            xin: Vec::new(),
+            fil: Vec::new(),
+            mac_out: Vec::new(),
+            carry: (0..levels).map(|_| Tensor4::zeros([0, 0, 0, 0])).collect(),
+            carry_valid: vec![false; levels],
+            overlap: if halo {
+                input_overlap_rows(stages, g.start, g.end)
+            } else {
+                vec![0; levels]
+            },
+        }
+    }
+
+    /// Start a fresh (batch, wO) column: the previous column's carries are
+    /// stale.
+    fn reset_column(&mut self) {
+        for v in self.carry_valid.iter_mut() {
+            *v = false;
+        }
+    }
+}
+
+/// The patch-local naive 7NL nest restricted to output rows
+/// `[h0, s.h_o)`, accumulating into `out` (`[n][cO][wO][hO]`, the target
+/// rows pre-zeroed). Loop order and the zero-tap skip match
+/// [`conv7nl_naive`] exactly, so row-restricted execution stays bitwise
+/// identical to the full nest.
+fn conv7nl_naive_rows(
+    x: &Tensor4,
+    w: &Tensor4,
+    s: &ConvShape,
+    h0: usize,
+    out: &mut Tensor4,
+) {
+    let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    for i1 in 0..n {
+        for i3 in 0..c_o {
+            for i2 in 0..c_i {
+                for i6 in 0..w_f {
+                    for i7 in 0..h_f {
+                        let f = w.at(i2, i3, i6, i7);
+                        if f == 0.0 {
+                            continue;
+                        }
+                        for i4 in 0..w_o {
+                            for i5 in h0..h_o {
+                                *out.at_mut(i1, i3, i4, i5) +=
+                                    x.at(i1, i2, sw * i4 + i6, sh * i5 + i7) * f;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute one fused tile and return (a reference to) its finished tail
+/// activation, held in the scratch ping-pong buffers.
+///
+/// **Accumulation-order contract** (DESIGN.md §7). Every stage computes
+/// each output element by accumulating over `(cI, i6, i7)` in ascending
+/// order — the 7NL naive nest's order. The [`FusedExec::Packed`] path
+/// realizes it as one full reduction tile through the `pack.rs` panels and
+/// the `gemm.rs` axpy MAC; [`FusedExec::Reference`] is the patch-local
+/// naive nest itself. Both are therefore bitwise identical to the
+/// stage-by-stage [`super::fuse::naive_network`] oracle, halo cache on or
+/// off: a cached row is bitwise equal to what recompute would produce,
+/// because an activation element's value depends only on its absolute
+/// position, never on which tile computed it.
+#[allow(clippy::too_many_arguments)]
+fn run_fused_tile<'a>(
     input: &Tensor4,
     filters: &[&Tensor4],
     stages: &[NetworkStage],
@@ -383,44 +571,159 @@ fn run_fused_tile(
     tn: Blk,
     tw: Blk,
     th: Blk,
+    exec: FusedExec,
+    halo: bool,
+    scratch: &'a mut FusedScratch,
     counters: &NetTrafficCounters,
-) -> Tensor4 {
+) -> &'a Tensor4 {
     let spans = group_spans(stages, g.start, g.end, tw, th);
     let head = &stages[g.start].shape;
     let in_sp = input_span(head, &spans[0]);
     let bn = tn.len as usize;
     let ci0 = head.c_i as usize;
     let (iw, ih) = (in_sp.w_len() as usize, in_sp.h_len() as usize);
-    let mut cur = Tensor4::zeros([bn, ci0, iw, ih]);
-    // the h-axis is contiguous in both the source tensor and the patch:
-    // copy whole rows, no per-element bounds checks on the hot path
-    let mut k = 0;
-    for n in 0..bn {
-        let na = tn.start as usize + n;
-        for c in 0..ci0 {
-            for a in 0..iw {
-                let wa = in_sp.w0 as usize + a;
-                let src = input.idx(na, c, wa, in_sp.h0 as usize);
-                cur.data[k..k + ih].copy_from_slice(&input.data[src..src + ih]);
-                k += ih;
+    // a column's h-blocks cover [0, h_o) of the group tail, so the tile
+    // ending at h_o is the column's last: nothing follows to consume a
+    // carry, and saving one would be wasted copies
+    let more_tiles = th.start + th.len < stages[g.end].shape.h_o;
+
+    // ---- level 0: the halo'd image patch. Carried rows come from the
+    // previous h-tile; only the fresh rows are read from main memory (the
+    // only input-side traffic the group charges). ----
+    let ov0 = scratch.overlap[0] as usize;
+    let carried = if halo && scratch.carry_valid[0] && ov0 > 0 { ov0 } else { 0 };
+    reset_tensor(&mut scratch.cur, [bn, ci0, iw, ih]);
+    if carried > 0 {
+        let FusedScratch { cur, carry, .. } = &mut *scratch;
+        copy_carry_prefix(cur, &carry[0], carried);
+        counters.add_halo(g.start, (bn * ci0 * iw * carried) as u64);
+    }
+    {
+        let cur = &mut scratch.cur;
+        let fresh = ih - carried;
+        for n in 0..bn {
+            let na = tn.start as usize + n;
+            for c in 0..ci0 {
+                for a in 0..iw {
+                    let wa = in_sp.w0 as usize + a;
+                    let src = input.idx(na, c, wa, in_sp.h0 as usize + carried);
+                    let dst = cur.idx(n, c, a, carried);
+                    cur.data[dst..dst + fresh]
+                        .copy_from_slice(&input.data[src..src + fresh]);
+                }
             }
         }
+        counters
+            .stage(g.start)
+            .add_input((bn * ci0 * iw * fresh) as u64);
     }
-    counters.stage(g.start).add_input(cur.len() as u64);
-    for (ki, stage) in (g.start..=g.end).enumerate() {
+    if halo && more_tiles && ov0 > 0 {
+        let FusedScratch { cur, carry, carry_valid, .. } = &mut *scratch;
+        save_carry_tail(&mut carry[0], cur, ov0);
+        carry_valid[0] = true;
+    }
+
+    // ---- the stage chain: level j input -> level j+1 output ----
+    for (j, stage) in (g.start..=g.end).enumerate() {
         let st = &stages[stage];
-        let sp = &spans[ki];
+        let sp = &spans[j];
+        let (ow, oh) = (sp.w_len() as usize, sp.h_len() as usize);
+        let co = st.shape.c_o as usize;
+        // this stage's output is stage `stage + 1`'s input: its carry is
+        // the next level's (the group tail's tiles never overlap)
+        let next_level = j + 1 < g.len();
+        let ov_next = if next_level { scratch.overlap[j + 1] as usize } else { 0 };
+        let carried_out =
+            if halo && next_level && scratch.carry_valid[j + 1] && ov_next > 0 {
+                ov_next
+            } else {
+                0
+            };
+        reset_tensor(&mut scratch.next, [bn, co, ow, oh]);
+        if carried_out > 0 {
+            let FusedScratch { next, carry, .. } = &mut *scratch;
+            copy_carry_prefix(next, &carry[j + 1], carried_out);
+            counters.add_halo(stage + 1, (bn * co * ow * carried_out) as u64);
+        }
         let sub = ConvShape {
             n: tn.len,
             w_o: sp.w_len(),
             h_o: sp.h_len(),
             ..st.shape
         };
-        cur = conv7nl_naive(&cur, filters[stage], &sub);
+        let fresh = oh - carried_out;
+        match exec {
+            FusedExec::Packed => {
+                let FusedScratch { cur, next, xin, fil, mac_out, .. } =
+                    &mut *scratch;
+                let (ew, eh) = pack::pack_fused_stage(
+                    cur,
+                    filters[stage],
+                    &sub,
+                    carried_out,
+                    fresh,
+                    xin,
+                    fil,
+                );
+                mac_out.clear();
+                mac_out.resize(bn * ow * fresh * co, 0.0);
+                let (qw, qh, rw, rh) = filter_split_ranges(&sub);
+                let d = TileDims {
+                    bn,
+                    bci: sub.c_i as usize,
+                    bco: co,
+                    bwo: ow,
+                    bho: fresh,
+                    bqw: qw as usize,
+                    bqh: qh as usize,
+                    brw: rw as usize,
+                    brh: rh as usize,
+                    ew,
+                    eh,
+                    q6_0: 0,
+                    q7_0: 0,
+                    r6_0: 0,
+                    r7_0: 0,
+                    sw: sub.s_w as usize,
+                    sh: sub.s_h as usize,
+                    wf: sub.w_f as usize,
+                    hf: sub.h_f as usize,
+                };
+                gemm::conv_tile_mac(mac_out, xin, fil, &d);
+                // scatter the fresh rows into the output patch
+                // ([bn][ow][fresh][co] -> [bn][co][ow][oh] at row offset)
+                let mut k = 0;
+                for n in 0..bn {
+                    for a in 0..ow {
+                        for h in 0..fresh {
+                            for c in 0..co {
+                                *next.at_mut(n, c, a, carried_out + h) =
+                                    mac_out[k];
+                                k += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            FusedExec::Reference => {
+                let FusedScratch { cur, next, .. } = &mut *scratch;
+                // the nest accumulates: its fresh rows must start at zero
+                // (the carry prefix was copied, nothing else is read)
+                zero_rows_from(next, carried_out);
+                conv7nl_naive_rows(cur, filters[stage], &sub, carried_out, next);
+            }
+        }
         counters.stage(stage).add_filter(st.shape.filter_size());
+        // rotate the ping-pong and save this level's sliding-window carry
+        std::mem::swap(&mut scratch.cur, &mut scratch.next);
+        if halo && more_tiles && next_level && ov_next > 0 {
+            let FusedScratch { cur, carry, carry_valid, .. } = &mut *scratch;
+            save_carry_tail(&mut carry[j + 1], cur, ov_next);
+            carry_valid[j + 1] = true;
+        }
     }
-    counters.stage(g.end).add_output(cur.len() as u64);
-    cur
+    counters.stage(g.end).add_output(scratch.cur.len() as u64);
+    &scratch.cur
 }
 
 /// Write one finished fused tile into the network output tensor
@@ -450,12 +753,15 @@ fn network_out_dims(stages: &[NetworkStage], g: &FuseGroup) -> [usize; 4] {
 }
 
 /// Serial fused network execution with per-stage traffic accounting.
-/// Fused groups sweep the last stage's output tiles, recomputing upstream
-/// halo regions in scratch; materialized (single-stage) groups run the
-/// stage's LP-tiled engine. Within fused groups the per-element operation
-/// order equals the oracle's, so a plan that fuses end to end is bitwise
-/// identical to [`super::fuse::naive_network`] (materialized stages use
-/// the tiled engine's accumulation order and agree to float tolerance).
+/// Fused groups sweep the last stage's output tiles through the plan's
+/// [`FusedExec`] path (packed panels + axpy MAC by default), holding every
+/// inter-stage activation in ping-pong scratch and carrying sliding-window
+/// halo rows between adjacent h-tiles when the plan's cache is on;
+/// materialized (single-stage) groups run the stage's LP-tiled engine.
+/// Within fused groups the per-element operation order equals the
+/// oracle's, so a plan that fuses end to end is bitwise identical to
+/// [`super::fuse::naive_network`] (materialized stages use the tiled
+/// engine's accumulation order and agree to float tolerance).
 pub fn conv_network_fused_counted(
     image: &Tensor4,
     filters: &[&Tensor4],
@@ -469,10 +775,26 @@ pub fn conv_network_fused_counted(
         let input: &Tensor4 = act.as_ref().unwrap_or(image);
         let next = if g.is_fused() {
             let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
-            for (tn, tw, th) in group_tiles(&plan.stages, g) {
-                let tile =
-                    run_fused_tile(input, filters, &plan.stages, g, tn, tw, th, counters);
-                scatter_network(&mut out, tn, tw, th, &tile);
+            let mut scratch =
+                FusedScratch::for_group(&plan.stages, g, plan.halo_cache);
+            for (tn, tw, hs) in group_tile_columns(&plan.stages, g) {
+                scratch.reset_column();
+                for th in hs {
+                    let tile = run_fused_tile(
+                        input,
+                        filters,
+                        &plan.stages,
+                        g,
+                        tn,
+                        tw,
+                        th,
+                        plan.exec,
+                        plan.halo_cache,
+                        &mut scratch,
+                        counters,
+                    );
+                    scatter_network(&mut out, tn, tw, th, tile);
+                }
             }
             out
         } else {
@@ -489,10 +811,12 @@ pub fn conv_network_fused_counted(
     act.expect("network has at least one stage")
 }
 
-/// Fused network execution with tiles of each fused group fanned out over
-/// a [`ThreadPool`] (materialized stages fan out through
-/// [`conv_tiled_parallel`]). Bitwise identical to the serial path: every
-/// tile is computed by one worker in the same per-element order.
+/// Fused network execution fanned out over a [`ThreadPool`]. The unit of
+/// parallelism is one (batch, wO) tile *column*: the sliding-window carry
+/// chains a column's h-tiles serially on one worker, and distinct columns
+/// write disjoint output regions. Bitwise identical to the serial path:
+/// every tile is computed in the same per-element order. Materialized
+/// stages fan out through [`conv_tiled_parallel`].
 pub fn conv_network_fused(
     image: &Arc<Tensor4>,
     filters: &[Arc<Tensor4>],
@@ -508,18 +832,40 @@ pub fn conv_network_fused(
     let mut act: Arc<Tensor4> = Arc::clone(image);
     for (gi, g) in plan.groups.iter().enumerate() {
         let next = if g.is_fused() {
-            let tiles = group_tiles(&plan.stages, g);
+            let cols = group_tile_columns(&plan.stages, g);
             let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
             let (x2, p2) = (Arc::clone(&act), Arc::clone(plan));
             let f2: Vec<Arc<Tensor4>> = filters.to_vec();
             let c2 = counters.clone();
-            let bufs = pool.map(tiles.clone(), move |(tn, tw, th)| {
+            let bufs = pool.map(cols.clone(), move |(tn, tw, hs)| {
                 let g = p2.groups[gi];
-                let frefs: Vec<&Tensor4> = f2.iter().map(|f| f.as_ref()).collect();
-                run_fused_tile(&x2, &frefs, &p2.stages, &g, tn, tw, th, &c2)
+                let frefs: Vec<&Tensor4> =
+                    f2.iter().map(|f| f.as_ref()).collect();
+                let mut scratch =
+                    FusedScratch::for_group(&p2.stages, &g, p2.halo_cache);
+                let mut tiles = Vec::with_capacity(hs.len());
+                for th in hs {
+                    let tile = run_fused_tile(
+                        &x2,
+                        &frefs,
+                        &p2.stages,
+                        &g,
+                        tn,
+                        tw,
+                        th,
+                        p2.exec,
+                        p2.halo_cache,
+                        &mut scratch,
+                        &c2,
+                    );
+                    tiles.push(tile.clone());
+                }
+                tiles
             });
-            for ((tn, tw, th), tile) in tiles.iter().zip(&bufs) {
-                scatter_network(&mut out, *tn, *tw, *th, tile);
+            for ((tn, tw, hs), tiles) in cols.iter().zip(&bufs) {
+                for (th, tile) in hs.iter().zip(tiles) {
+                    scatter_network(&mut out, *tn, *tw, *th, tile);
+                }
             }
             out
         } else {
@@ -569,6 +915,8 @@ pub fn conv_network_staged(
 mod tests {
     use super::*;
     use crate::conv::{conv7nl_naive, Precision};
+    use crate::kernels::TilePlanCache;
+    use crate::runtime::manifest::NetworkSpec;
 
     fn run_pair(s: &ConvShape, m: f64, seed: u64) -> (Tensor4, Tensor4, Traffic) {
         let (x, w) = crate::conv::paper_operands(s, seed);
@@ -666,5 +1014,70 @@ mod tests {
         assert_eq!(c.snapshot().total(), 10);
         c.reset();
         assert_eq!(c.snapshot(), Traffic::default());
+    }
+
+    /// Packed and reference fused execution, halo cache on and off, must
+    /// all be bitwise identical to the staged naive oracle, with measured
+    /// traffic and halo words matching the plan's analytic models exactly.
+    #[test]
+    fn fused_packed_reference_and_halo_agree_bitwise() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let mut base = FusePlan::new(&net.stages, 65536.0, &cache);
+        // force one fused group swept in single-row h-tiles so the
+        // sliding-window cache engages on every boundary
+        base.groups = vec![FuseGroup {
+            start: 0,
+            end: 2,
+            b_n: 2,
+            b_wo: 4,
+            b_ho: 1,
+        }];
+        let image = Tensor4::randn(net.input_dims(), 9);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 10 + i as u64))
+            .collect();
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let want = super::super::fuse::naive_network(&image, &frefs, &net.stages);
+        let mut cached_halo_words = 0u64;
+        for (exec, halo) in [
+            (FusedExec::Packed, true),
+            (FusedExec::Packed, false),
+            (FusedExec::Reference, true),
+            (FusedExec::Reference, false),
+        ] {
+            let mut plan = base.clone();
+            plan.exec = exec;
+            plan.halo_cache = halo;
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let got = conv_network_fused_counted(&image, &frefs, &plan, &counters);
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "{exec:?} halo={halo} diverged from the oracle"
+            );
+            assert_eq!(
+                counters.snapshot(),
+                plan.expected_network_traffic(),
+                "{exec:?} halo={halo} traffic"
+            );
+            assert_eq!(
+                counters.halo_snapshot(),
+                plan.expected_halo_words(),
+                "{exec:?} halo={halo} halo words"
+            );
+            if halo {
+                cached_halo_words = counters.halo_snapshot().iter().sum();
+            } else {
+                assert!(counters.halo_snapshot().iter().all(|&w| w == 0));
+            }
+        }
+        assert!(
+            cached_halo_words > 0,
+            "single-row sweep must serve words from the halo cache"
+        );
     }
 }

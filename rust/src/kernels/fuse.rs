@@ -13,29 +13,73 @@
 //! analytic traffic model, so measured and expected traffic agree word for
 //! word.
 //!
+//! **Sliding-window halo reuse.** Adjacent h-tiles of a fused sweep need
+//! overlapping input rows at every level — a constant
+//! [`input_overlap_rows`] per stage, independent of the tile. With the
+//! halo cache on, the executor carries each level's trailing overlap rows
+//! from one h-tile to the next, so the group head re-reads only the fresh
+//! rows from main memory and interior stages recompute only the fresh
+//! rows. The carry buffers' footprint is folded into the fuse budget
+//! ([`group_footprint`]) and the saved head re-reads into the analytic
+//! traffic model ([`charge_fused_group`]).
+//!
 //! **Fuse-vs-materialize rule** (DESIGN.md §7). A boundary fuses when
-//! (a) a tile of the candidate group exists whose peak ping-pong working
-//! set — input patch + output patch + filter of the widest stage — fits in
-//! the memory budget `M` ([`fit_group_tile`]), and (b) the analytic fused
-//! traffic of the extended group does not exceed the traffic of leaving
-//! the boundary materialized (the current group plus the next stage run
-//! layer-by-layer through the LP-tiled engine). Rule (b) guards against
-//! fusing past the point where halo recompute and per-tile filter re-reads
-//! outweigh the saved activation round-trip, and makes `fused ≤ unfused`
-//! hold by construction.
+//! (a) a tile of the candidate group exists whose peak working set under
+//! the packed execution model — scratch input patch + packed input panel +
+//! output patch + packed filter panel of the widest stage, plus the
+//! sliding-window carries — fits in the memory budget `M`
+//! ([`fit_group_tile`]), and (b) the analytic fused traffic of the
+//! extended group does not exceed the traffic of leaving the boundary
+//! materialized (the current group plus the next stage run layer-by-layer
+//! through the LP-tiled engine). Rule (b) guards against fusing past the
+//! point where halo recompute and per-tile filter re-reads outweigh the
+//! saved activation round-trip, and makes `fused ≤ unfused` hold by
+//! construction.
 
 use std::sync::Arc;
 
 use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Tensor4};
 
 use super::exec::{expected_traffic, Traffic};
-use super::plan::{TilePlan, TilePlanCache};
+use super::plan::{filter_split_ranges, TilePlan, TilePlanCache};
 use super::tiles::{split, Blk};
 
 /// Input span one output block of `len` elements needs upstream:
 /// `σ·(len − 1) + f`.
 pub fn halo_extent(len: u64, stride: u64, filter: u64) -> u64 {
     stride * (len.max(1) - 1) + filter
+}
+
+/// Which compute path fused stages run through. Both paths follow the
+/// same accumulation-order contract (ascending `(cI, i6, i7)` per output
+/// element — see `gemm.rs` and DESIGN.md §7), so they are bitwise
+/// interchangeable; `Packed` is the production path, `Reference` the
+/// oracle it is pinned to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusedExec {
+    /// The packed LP microkernel: each stage packs its scratch activation
+    /// patch and filter into the `pack.rs` panels (one full reduction
+    /// tile) and drives them through the `gemm.rs` axpy MAC.
+    Packed,
+    /// The patch-local naive 7NL nest — the bitwise oracle.
+    Reference,
+}
+
+impl FusedExec {
+    pub fn name(self) -> &'static str {
+        match self {
+            FusedExec::Packed => "packed",
+            FusedExec::Reference => "reference",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FusedExec> {
+        match s {
+            "packed" => Some(FusedExec::Packed),
+            "reference" => Some(FusedExec::Reference),
+            _ => None,
+        }
+    }
 }
 
 /// One contiguous run of stages executed per tile sweep. `start..=end`
@@ -68,7 +112,8 @@ impl FuseGroup {
 }
 
 /// The execution plan for one network pipeline: per-stage LP tile plans
-/// (used by materialized stages) plus the fused grouping.
+/// (used by materialized stages) plus the fused grouping, the compute path
+/// fused stages run ([`FusedExec`]) and the halo-cache switch.
 #[derive(Debug, Clone)]
 pub struct FusePlan {
     pub stages: Vec<NetworkStage>,
@@ -76,24 +121,40 @@ pub struct FusePlan {
     pub mem_words: f64,
     pub stage_plans: Vec<Arc<TilePlan>>,
     pub groups: Vec<FuseGroup>,
+    /// compute path fused stages run (bitwise-identical numerics and
+    /// identical traffic either way)
+    pub exec: FusedExec,
+    /// sliding-window halo cache on/off — shapes both the footprint rule
+    /// and the analytic traffic model
+    pub halo_cache: bool,
 }
 
 impl FusePlan {
+    /// Plan a network with the production defaults: packed fused stages
+    /// and the sliding-window halo cache on.
+    pub fn new(stages: &[NetworkStage], mem_words: f64, cache: &TilePlanCache) -> FusePlan {
+        FusePlan::with_options(stages, mem_words, cache, FusedExec::Packed, true)
+    }
+
     /// Plan a network: solve every stage's blocking LP (through the shared
     /// cache) and greedily fuse boundaries under the rule above.
-    pub fn new(stages: &[NetworkStage], mem_words: f64, cache: &TilePlanCache) -> FusePlan {
+    pub fn with_options(
+        stages: &[NetworkStage],
+        mem_words: f64,
+        cache: &TilePlanCache,
+        exec: FusedExec,
+        halo_cache: bool,
+    ) -> FusePlan {
         assert!(!stages.is_empty(), "network must have at least one stage");
-        let stage_plans: Vec<Arc<TilePlan>> = stages
-            .iter()
-            .map(|st| cache.plan(&st.shape, st.precision, mem_words))
-            .collect();
+        let stage_plans = solve_stage_plans(stages, mem_words, cache);
         let singles: Vec<u64> = stage_plans
             .iter()
             .map(|p| expected_traffic(p).total())
             .collect();
         let single_group = |i: usize| {
             let (b_n, b_wo, b_ho) =
-                fit_group_tile(stages, i, i, mem_words).unwrap_or((1, 1, 1));
+                fit_group_tile(stages, i, i, mem_words, halo_cache)
+                    .unwrap_or((1, 1, 1));
             FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
         };
         let mut groups = Vec::new();
@@ -102,10 +163,10 @@ impl FusePlan {
         for i in 1..stages.len() {
             let mut extended = None;
             if let Some((b_n, b_wo, b_ho)) =
-                fit_group_tile(stages, cur.start, i, mem_words)
+                fit_group_tile(stages, cur.start, i, mem_words, halo_cache)
             {
                 let cand = FuseGroup { start: cur.start, end: i, b_n, b_wo, b_ho };
-                let cost = fused_group_traffic(stages, &cand).total();
+                let cost = fused_group_traffic(stages, &cand, halo_cache).total();
                 if cost <= cur_cost + singles[i] {
                     extended = Some((cand, cost));
                 }
@@ -128,6 +189,36 @@ impl FusePlan {
             mem_words,
             stage_plans,
             groups,
+            exec,
+            halo_cache,
+        }
+    }
+
+    /// A plan with every boundary materialized: each stage is a singleton
+    /// group running the LP-tiled engine — the layer-by-layer execution
+    /// mode the autotuner probes against the fused ones.
+    pub fn materialized(
+        stages: &[NetworkStage],
+        mem_words: f64,
+        cache: &TilePlanCache,
+    ) -> FusePlan {
+        assert!(!stages.is_empty(), "network must have at least one stage");
+        let stage_plans = solve_stage_plans(stages, mem_words, cache);
+        let groups = (0..stages.len())
+            .map(|i| {
+                let (b_n, b_wo, b_ho) =
+                    fit_group_tile(stages, i, i, mem_words, false)
+                        .unwrap_or((1, 1, 1));
+                FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
+            })
+            .collect();
+        FusePlan {
+            stages: stages.to_vec(),
+            mem_words,
+            stage_plans,
+            groups,
+            exec: FusedExec::Packed,
+            halo_cache: false,
         }
     }
 
@@ -157,7 +248,8 @@ impl FusePlan {
     }
 
     /// The analytic per-stage traffic this plan executes — fused groups
-    /// charge the image patch (with halo) at the group head, the full
+    /// charge the image patch (with halo; only the fresh rows once the
+    /// sliding-window cache holds the overlap) at the group head, the full
     /// filter per stage per tile, and the output tile at the group tail;
     /// materialized stages charge their LP tile plan's
     /// [`expected_traffic`]. The fused executor's counters match these
@@ -166,13 +258,66 @@ impl FusePlan {
         let mut t = vec![Traffic::default(); self.stages.len()];
         for g in &self.groups {
             if g.is_fused() {
-                charge_fused_group(&self.stages, g, &mut t);
+                charge_fused_group(&self.stages, g, self.halo_cache, &mut t);
             } else {
                 t[g.start] = expected_traffic(&self.stage_plans[g.start]);
             }
         }
         t
     }
+
+    /// Words each stage's input patch is expected to receive from the
+    /// sliding-window halo cache instead of main memory (group heads) or
+    /// upstream recompute (interior fused stages), per stage. All zero
+    /// when the cache is off or every fused sweep has a single h-tile.
+    /// The fused executor's halo counters match these exactly.
+    pub fn expected_halo_words(&self) -> Vec<u64> {
+        let mut words = vec![0u64; self.stages.len()];
+        if !self.halo_cache {
+            return words;
+        }
+        for g in &self.groups {
+            if !g.is_fused() {
+                continue;
+            }
+            let overlaps = input_overlap_rows(&self.stages, g.start, g.end);
+            for (tn, tw, hs) in group_tile_columns(&self.stages, g) {
+                for (i, th) in hs.iter().enumerate() {
+                    if i == 0 {
+                        continue;
+                    }
+                    let spans =
+                        group_spans(&self.stages, g.start, g.end, tw, *th);
+                    for k in g.start..=g.end {
+                        let ov = overlaps[k - g.start];
+                        if ov == 0 {
+                            continue;
+                        }
+                        let s = &self.stages[k].shape;
+                        let iw = if k == g.start {
+                            input_span(s, &spans[0]).w_len()
+                        } else {
+                            spans[k - g.start - 1].w_len()
+                        };
+                        words[k] += tn.len * s.c_i * iw * ov;
+                    }
+                }
+            }
+        }
+        words
+    }
+}
+
+/// Solve (through the shared cache) every stage's LP tile plan.
+fn solve_stage_plans(
+    stages: &[NetworkStage],
+    mem_words: f64,
+    cache: &TilePlanCache,
+) -> Vec<Arc<TilePlan>> {
+    stages
+        .iter()
+        .map(|st| cache.plan(&st.shape, st.precision, mem_words))
+        .collect()
 }
 
 /// Absolute half-open output spans `[w0, w1) × [h0, h1)` of one stage.
@@ -234,27 +379,53 @@ pub(crate) fn group_spans(
     spans
 }
 
-/// Every (batch, wO, hO) tile of a fused group's last stage.
-pub(crate) fn group_tiles(stages: &[NetworkStage], g: &FuseGroup) -> Vec<(Blk, Blk, Blk)> {
+/// Sliding-window overlap per stage: the number of h-rows of stage `k`'s
+/// *input* that adjacent h-tiles of the group tail share. With
+/// `S = Π σh` (stage `k` down to the tail) and `F` the accumulated halo
+/// extent of one tail row, consecutive tail tiles `[t0, t1)` / `[t1, t2)`
+/// need stage-k input rows `[S·t0, S·(t1−1) + F)` / `[S·t1, …)`: the
+/// overlap `F − S` is tile-independent, and `σ ≤ f` (validated per stage)
+/// keeps it ≥ 0. Index 0 ↔ stage `a` (the group head's image patch).
+pub(crate) fn input_overlap_rows(stages: &[NetworkStage], a: usize, b: usize) -> Vec<u64> {
+    let mut out = vec![0u64; b - a + 1];
+    let (mut s, mut f) = (1u64, 1u64);
+    for k in (a..=b).rev() {
+        let sh = stages[k].shape.s_h;
+        f = sh * (f - 1) + stages[k].shape.h_f;
+        s *= sh;
+        out[k - a] = f - s;
+    }
+    out
+}
+
+/// The (batch, wO) tile columns of a fused group's last stage, each with
+/// the ordered h-blocks its sliding-window sweep iterates (h innermost).
+/// The executor and the analytic traffic model walk these identically,
+/// which is what keeps measured == expected exact with the halo cache on.
+pub(crate) fn group_tile_columns(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+) -> Vec<(Blk, Blk, Vec<Blk>)> {
     let last = &stages[g.end].shape;
     let ns = split(last.n, g.b_n);
     let ws = split(last.w_o, g.b_wo);
     let hs = split(last.h_o, g.b_ho);
-    let mut tiles = Vec::with_capacity(ns.len() * ws.len() * hs.len());
+    let mut cols = Vec::with_capacity(ns.len() * ws.len());
     for &tn in &ns {
         for &tw in &ws {
-            for &th in &hs {
-                tiles.push((tn, tw, th));
-            }
+            cols.push((tn, tw, hs.clone()));
         }
     }
-    tiles
+    cols
 }
 
-/// Peak ping-pong working set (words, under each stage's precision) of one
-/// fused tile with last-stage output blocks `(bn, bwo, bho)`: at every
-/// stage the input patch, the output patch and the full filter are live
-/// simultaneously; patches of other stages are recycled.
+/// Peak fast-memory working set (words, under each stage's precision) of
+/// one fused tile with last-stage output blocks `(bn, bwo, bho)` under the
+/// packed execution model: at every stage the scratch input patch, its
+/// packed panel, the output patch and the packed filter panel are live
+/// simultaneously; patches of other stages are recycled. With `halo` the
+/// per-stage sliding-window carry buffers — which persist across the
+/// whole h-sweep — are added on top of the peak.
 pub(crate) fn group_footprint(
     stages: &[NetworkStage],
     a: usize,
@@ -262,22 +433,32 @@ pub(crate) fn group_footprint(
     bn: u64,
     bwo: u64,
     bho: u64,
+    halo: bool,
 ) -> f64 {
+    let overlaps = input_overlap_rows(stages, a, b);
     let mut peak: f64 = 0.0;
+    let mut carry: f64 = 0.0;
     let (mut ow, mut oh) = (bwo, bho);
     for k in (a..=b).rev() {
         let st = &stages[k];
         let s = &st.shape;
         let iw = halo_extent(ow, s.s_w, s.w_f);
         let ih = halo_extent(oh, s.s_h, s.h_f);
-        let words = st.precision.p_i * (bn * s.c_i * iw * ih) as f64
+        let (qw, qh, rw, rh) = filter_split_ranges(s);
+        let (ew, eh) = (ow + qw - 1, oh + qh - 1);
+        let words = st.precision.p_i
+            * (bn * s.c_i * (iw * ih + rw * rh * ew * eh)) as f64
             + st.precision.p_o * (bn * s.c_o * ow * oh) as f64
-            + st.precision.p_f * s.filter_size() as f64;
+            + st.precision.p_f * (s.c_i * qw * qh * rw * rh * s.c_o) as f64;
         peak = peak.max(words);
+        if halo {
+            carry += st.precision.p_i
+                * (bn * s.c_i * iw * overlaps[k - a].min(ih)) as f64;
+        }
         ow = iw;
         oh = ih;
     }
-    peak
+    peak + carry
 }
 
 /// Find last-stage output tile blocks whose fused working set fits in
@@ -289,12 +470,13 @@ pub(crate) fn fit_group_tile(
     a: usize,
     b: usize,
     mem: f64,
+    halo: bool,
 ) -> Option<(u64, u64, u64)> {
     let last = &stages[b].shape;
     let (mut bn, mut bwo, mut bho) =
         (last.n.max(1), last.w_o.max(1), last.h_o.max(1));
     loop {
-        if group_footprint(stages, a, b, bn, bwo, bho) <= mem {
+        if group_footprint(stages, a, b, bn, bwo, bho, halo) <= mem {
             return Some((bn, bwo, bho));
         }
         if bn > 1 {
@@ -311,32 +493,45 @@ pub(crate) fn fit_group_tile(
 
 /// Add one fused group's analytic per-stage traffic into `t` (indexed by
 /// absolute stage number). Charges: head stage reads its halo'd image
-/// patch per tile; every stage reads its full filter per tile; the tail
-/// stage writes its output tile. Interior boundaries charge nothing —
-/// the invariant the property tests pin down.
+/// patch per tile — only the fresh rows for non-first tiles of a column
+/// when the sliding-window cache is on; every stage reads its full filter
+/// per tile; the tail stage writes its output tile. Interior boundaries
+/// charge nothing — the invariant the property tests pin down.
 pub(crate) fn charge_fused_group(
     stages: &[NetworkStage],
     g: &FuseGroup,
+    halo: bool,
     t: &mut [Traffic],
 ) {
     let head = &stages[g.start].shape;
     let tail = &stages[g.end].shape;
-    for (tn, tw, th) in group_tiles(stages, g) {
-        let spans = group_spans(stages, g.start, g.end, tw, th);
-        let in_sp = input_span(head, &spans[0]);
-        t[g.start].input_words +=
-            tn.len * head.c_i * in_sp.w_len() * in_sp.h_len();
-        for k in g.start..=g.end {
-            t[k].filter_words += stages[k].shape.filter_size();
+    for (tn, tw, hs) in group_tile_columns(stages, g) {
+        let mut prev_in_h1: Option<u64> = None;
+        for th in hs {
+            let spans = group_spans(stages, g.start, g.end, tw, th);
+            let in_sp = input_span(head, &spans[0]);
+            let fresh_h0 = prev_in_h1.map_or(in_sp.h0, |p| p.max(in_sp.h0));
+            t[g.start].input_words +=
+                tn.len * head.c_i * in_sp.w_len() * (in_sp.h1 - fresh_h0);
+            for k in g.start..=g.end {
+                t[k].filter_words += stages[k].shape.filter_size();
+            }
+            t[g.end].output_words += tn.len * tail.c_o * tw.len * th.len;
+            if halo {
+                prev_in_h1 = Some(in_sp.h1);
+            }
         }
-        t[g.end].output_words += tn.len * tail.c_o * tw.len * th.len;
     }
 }
 
 /// Total analytic traffic of one fused group in isolation.
-pub(crate) fn fused_group_traffic(stages: &[NetworkStage], g: &FuseGroup) -> Traffic {
+pub(crate) fn fused_group_traffic(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    halo: bool,
+) -> Traffic {
     let mut t = vec![Traffic::default(); stages.len()];
-    charge_fused_group(stages, g, &mut t);
+    charge_fused_group(stages, g, halo, &mut t);
     Traffic::sum(&t)
 }
 
@@ -389,6 +584,24 @@ mod tests {
     }
 
     #[test]
+    fn overlap_rows_match_hand_cases() {
+        let stages = tiny(2);
+        // walking up from the tail: stage 2 (2x2 stride 2) -> F=2, S=2:
+        // adjacent tiles share nothing; stage 1 (3x3 unit) -> F=4, S=2:
+        // overlap 2; stage 0 image patch -> F=6, S=2: overlap 4
+        assert_eq!(input_overlap_rows(&stages, 0, 2), vec![4, 2, 0]);
+        // single unit-stride 3x3 stage: classic f − σ = 2
+        assert_eq!(input_overlap_rows(&stages, 0, 0), vec![2]);
+        // consistency with the span walk: consecutive tiles of stage 2
+        let a = group_spans(&stages, 0, 2, Blk { start: 0, len: 4 }, Blk { start: 0, len: 2 });
+        let b = group_spans(&stages, 0, 2, Blk { start: 0, len: 4 }, Blk { start: 2, len: 2 });
+        let ia = input_span(&stages[0].shape, &a[0]);
+        let ib = input_span(&stages[0].shape, &b[0]);
+        assert_eq!(ia.h1 - ib.h0, 4, "head overlap");
+        assert_eq!(a[0].h1 - b[0].h0, 2, "stage-1 input overlap");
+    }
+
+    #[test]
     fn tiny_resnet_fuses_end_to_end_at_default_memory() {
         let cache = TilePlanCache::new();
         let plan = FusePlan::new(&tiny(4), super::super::plan::DEFAULT_TILE_MEM_WORDS, &cache);
@@ -406,12 +619,56 @@ mod tests {
     }
 
     #[test]
+    fn deep_mixnet_plan_mixes_fused_and_materialized_groups() {
+        // the builtin deep pipeline: the 5x5 stage's filter panel alone
+        // exceeds the default budget, so it must land in a materialized
+        // singleton while the shallow head fuses — the mixed path CI
+        // exercises by default
+        let net = NetworkSpec::deep_mixnet(4);
+        let cache = TilePlanCache::new();
+        let plan = FusePlan::new(
+            &net.stages,
+            super::super::plan::DEFAULT_TILE_MEM_WORDS,
+            &cache,
+        );
+        assert!(
+            plan.groups.iter().any(|g| g.is_fused()),
+            "groups {:?}",
+            plan.groups
+        );
+        assert!(
+            plan.groups.iter().any(|g| !g.is_fused()),
+            "groups {:?}",
+            plan.groups
+        );
+        assert!(
+            plan.groups.iter().any(|g| g.start == 3 && g.end == 3),
+            "the 5x5 stage must materialize: {:?}",
+            plan.groups
+        );
+    }
+
+    #[test]
+    fn materialized_plan_has_no_fused_groups() {
+        let cache = TilePlanCache::new();
+        let stages = tiny(4);
+        let plan = FusePlan::materialized(
+            &stages,
+            super::super::plan::DEFAULT_TILE_MEM_WORDS,
+            &cache,
+        );
+        assert_eq!(plan.groups.len(), stages.len());
+        assert_eq!(plan.fused_boundaries(), 0);
+        assert!(plan.expected_halo_words().iter().all(|&w| w == 0));
+    }
+
+    #[test]
     fn tight_memory_forces_materialization() {
         // a budget below any two-stage working set must split every
         // boundary; every group then runs the plain LP-tiled path
         let stages = tiny(4);
-        let two_stage_floor = group_footprint(&stages, 0, 1, 1, 1, 1)
-            .min(group_footprint(&stages, 1, 2, 1, 1, 1));
+        let two_stage_floor = group_footprint(&stages, 0, 1, 1, 1, 1, true)
+            .min(group_footprint(&stages, 1, 2, 1, 1, 1, true));
         let cache = TilePlanCache::new();
         let plan = FusePlan::new(&stages, two_stage_floor - 1.0, &cache);
         assert_eq!(plan.groups.len(), 3, "groups {:?}", plan.groups);
@@ -421,40 +678,46 @@ mod tests {
     #[test]
     fn footprint_grows_with_tile_and_group() {
         let stages = tiny(2);
-        let small = group_footprint(&stages, 1, 1, 1, 2, 2);
-        let wider = group_footprint(&stages, 1, 1, 1, 4, 4);
+        let small = group_footprint(&stages, 1, 1, 1, 2, 2, true);
+        let wider = group_footprint(&stages, 1, 1, 1, 4, 4, true);
         assert!(wider > small);
-        let deeper = group_footprint(&stages, 0, 2, 1, 2, 2);
-        let tail_only = group_footprint(&stages, 2, 2, 1, 2, 2);
+        let deeper = group_footprint(&stages, 0, 2, 1, 2, 2, true);
+        let tail_only = group_footprint(&stages, 2, 2, 1, 2, 2, true);
         assert!(deeper >= tail_only);
+        // the halo carries only add footprint
+        assert!(
+            group_footprint(&stages, 0, 2, 1, 2, 2, true)
+                >= group_footprint(&stages, 0, 2, 1, 2, 2, false)
+        );
     }
 
     #[test]
     fn fit_group_tile_respects_budget() {
         let stages = tiny(4);
         let (bn, bwo, bho) =
-            fit_group_tile(&stages, 0, 2, 4096.0).expect("some tile fits");
-        assert!(group_footprint(&stages, 0, 2, bn, bwo, bho) <= 4096.0);
+            fit_group_tile(&stages, 0, 2, 4096.0, true).expect("some tile fits");
+        assert!(group_footprint(&stages, 0, 2, bn, bwo, bho, true) <= 4096.0);
         let last = &stages[2].shape;
         assert!(bn <= last.n && bwo <= last.w_o && bho <= last.h_o);
         // absurdly small budgets cannot host even a unit tile
-        assert!(fit_group_tile(&stages, 0, 2, 8.0).is_none());
+        assert!(fit_group_tile(&stages, 0, 2, 8.0, true).is_none());
     }
 
     #[test]
-    fn group_tiles_cover_last_stage_output() {
+    fn group_tile_columns_cover_last_stage_output() {
         let stages = tiny(3);
         let g = FuseGroup { start: 0, end: 2, b_n: 2, b_wo: 3, b_ho: 2 };
-        let tiles = group_tiles(&stages, &g);
         let last = &stages[2].shape;
         let mut seen = vec![false; (last.n * last.w_o * last.h_o) as usize];
-        for (tn, tw, th) in tiles {
-            for n in tn.start..tn.start + tn.len {
-                for w in tw.start..tw.start + tw.len {
-                    for h in th.start..th.start + th.len {
-                        let i = ((n * last.w_o + w) * last.h_o + h) as usize;
-                        assert!(!seen[i], "overlap");
-                        seen[i] = true;
+        for (tn, tw, hs) in group_tile_columns(&stages, &g) {
+            for th in hs {
+                for n in tn.start..tn.start + tn.len {
+                    for w in tw.start..tw.start + tw.len {
+                        for h in th.start..th.start + th.len {
+                            let i = ((n * last.w_o + w) * last.h_o + h) as usize;
+                            assert!(!seen[i], "overlap");
+                            seen[i] = true;
+                        }
                     }
                 }
             }
@@ -463,13 +726,26 @@ mod tests {
     }
 
     #[test]
+    fn halo_model_discounts_head_re_reads_only() {
+        // with several h-tiles the cached model must charge strictly less
+        // head input traffic, identical filter/output traffic
+        let stages = tiny(4);
+        let g = FuseGroup { start: 0, end: 2, b_n: 4, b_wo: 4, b_ho: 1 };
+        let with = fused_group_traffic(&stages, &g, true);
+        let without = fused_group_traffic(&stages, &g, false);
+        assert!(with.input_words < without.input_words);
+        assert_eq!(with.filter_words, without.filter_words);
+        assert_eq!(with.output_words, without.output_words);
+    }
+
+    #[test]
     fn per_stage_precision_shapes_the_footprint() {
         let shape = ConvShape::new(2, 4, 4, 6, 6, 3, 3, 1, 1);
         let cheap = [NetworkStage { shape, precision: Precision::gemmini() }];
         let wide = [NetworkStage { shape, precision: Precision::paper_mixed() }];
         assert!(
-            group_footprint(&cheap, 0, 0, 2, 6, 6)
-                < group_footprint(&wide, 0, 0, 2, 6, 6)
+            group_footprint(&cheap, 0, 0, 2, 6, 6, true)
+                < group_footprint(&wide, 0, 0, 2, 6, 6, true)
         );
     }
 }

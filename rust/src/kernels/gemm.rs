@@ -80,6 +80,18 @@ pub fn axpy(out: &mut [f32], f_row: &[f32], x: f32) {
 ///
 /// `out`: `[bn][bwo][bho][bco]`, `xin`: `[bn][bci][brw][brh][ew][eh]`,
 /// `fil`: `[bci][bqw][bqh][brw][brh][bco]` (layouts from `pack.rs`).
+///
+/// **Accumulation-order contract** (DESIGN.md §7). Per output element the
+/// reduction terms are added in loop order `ci → (q6, r6) → (q7, r7)`;
+/// since `i6 = σw·q6 + r6` with `r6 < σw`, lexicographic `(q6, r6)`
+/// enumerates `i6` ascending (likewise `i7`). A tile covering the *whole*
+/// reduction — full `cI` and complete split ranges, as the fused executor
+/// packs it — therefore accumulates in ascending `(cI, i6, i7)` order,
+/// exactly the naive 7NL nest's order, and each update is the same single
+/// mul-add: the fused packed path is bitwise identical to the naive
+/// reference. (The nest skips exact-zero filter taps where this path adds
+/// `x·0`; that changes no bits for the finite, nonzero operands the stack
+/// computes on.)
 pub(crate) fn conv_tile_mac(out: &mut [f32], xin: &[f32], fil: &[f32], d: &TileDims) {
     debug_assert_eq!(out.len(), d.bn * d.bwo * d.bho * d.bco);
     debug_assert_eq!(xin.len(), d.bn * d.bci * d.brw * d.brh * d.ew * d.eh);

@@ -10,18 +10,23 @@
 //!   or fanned out over `util::threadpool::ThreadPool`, with word-traffic
 //!   counters whose totals are checked against the `commvol::seq` blocking
 //!   model (within 2×) by the property tests; plus the fused network
-//!   executor, which sweeps the last fused stage's output tiles and
-//!   recomputes/holds upstream activation tiles in scratch so fused
-//!   boundaries never touch main memory.
+//!   executor, which sweeps the last fused stage's output tiles, runs
+//!   every fused stage through the same packed panels + axpy microkernel
+//!   (bitwise-pinned to the naive reference by the accumulation-order
+//!   contract), and carries sliding-window halo rows between adjacent
+//!   h-tiles so fused boundaries never touch main memory and overlap rows
+//!   are neither re-read nor recomputed.
 //! * [`fuse`] — the multi-layer fusion planner: halo math per boundary,
-//!   the fuse-vs-materialize rule (tile footprints vs. `M`), and the
-//!   analytic per-stage traffic model the executor's counters match
+//!   the fuse-vs-materialize rule (packed tile footprints + halo carries
+//!   vs. `M`), the [`FusedExec`] packed/reference switch, and the analytic
+//!   per-stage traffic + halo-savings models the executor's counters match
 //!   exactly.
 //! * [`im2col`] — the explicit patch-matrix + GEMM baseline the engine is
 //!   benchmarked against.
-//! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled),
-//!   heuristic or measure-once, with a JSON sidecar for warm-starting
-//!   selection across process restarts.
+//! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled)
+//!   and per-network mode selection (fused-packed / fused-reference /
+//!   materialized), heuristic or measure-once, with a JSON sidecar for
+//!   warm-starting selection across process restarts.
 //!
 //! `pack` is crate-private: the packing layouts are implementation details
 //! of [`exec`]. `gemm` is private too, but its axpy microkernels are
@@ -37,13 +42,13 @@ mod pack;
 pub mod plan;
 pub mod tiles;
 
-pub use autotune::{Autotuner, KernelKind};
+pub use autotune::{Autotuner, KernelKind, NetKernelKind};
 pub use exec::{
     conv_network_fused, conv_network_fused_counted, conv_network_staged,
     conv_tiled, conv_tiled_counted, conv_tiled_parallel, default_workers,
     expected_traffic, NetTrafficCounters, Traffic, TrafficCounters,
 };
-pub use fuse::{halo_extent, naive_network, FuseGroup, FusePlan};
+pub use fuse::{halo_extent, naive_network, FuseGroup, FusePlan, FusedExec};
 pub use gemm::{axpy, axpy_scalar};
 pub use im2col::conv_im2col;
 pub use plan::{TilePlan, TilePlanCache, DEFAULT_TILE_MEM_WORDS};

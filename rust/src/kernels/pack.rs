@@ -13,9 +13,10 @@
 //!   `σw·q6 + r6 ≥ wF` (the over-approximation of the small-filter split)
 //!   are zero-filled and skipped by the microkernel.
 
-use crate::conv::Tensor4;
+use crate::conv::{ConvShape, Tensor4};
 
-use super::tiles::{OutTile, RedTile};
+use super::plan::filter_split_ranges;
+use super::tiles::{Blk, OutTile, RedTile};
 
 /// Pack the input working set of `(ot, rt)` into `buf` (cleared and
 /// resized — callers reuse one buffer across the reduction loop to avoid
@@ -126,10 +127,60 @@ pub(crate) fn pack_filter(
     words
 }
 
+/// Pack one fused stage's panels from a patch-local scratch activation:
+/// all of `cI` and the complete split-filter ranges as **one** reduction
+/// tile, with the output restricted to rows `[h0, h0 + rows)` — the
+/// sliding-window fresh region of the fused sweep. Packing the whole
+/// reduction at once is what makes the microkernel's per-element
+/// accumulation order equal the naive nest's ascending `(cI, i6, i7)`
+/// order (the fused accumulation-order contract, DESIGN.md §7).
+///
+/// `x` is the stage's scratch input patch (`[bn][cI][iw][ih]`, origin at
+/// the patch's first row) and `s` the patch-local sub-shape whose
+/// `n/w_o/h_o` are the tile extents. Returns the extended patch dims
+/// `(ew, eh)` the microkernel indexes with.
+pub(crate) fn pack_fused_stage(
+    x: &Tensor4,
+    w: &Tensor4,
+    s: &ConvShape,
+    h0: usize,
+    rows: usize,
+    xin: &mut Vec<f32>,
+    fil: &mut Vec<f32>,
+) -> (usize, usize) {
+    let (qw, qh, rw, rh) = filter_split_ranges(s);
+    let ot = OutTile {
+        n: Blk { start: 0, len: s.n },
+        co: Blk { start: 0, len: s.c_o },
+        wo: Blk { start: 0, len: s.w_o },
+        ho: Blk { start: h0 as u64, len: rows as u64 },
+    };
+    let rt = RedTile {
+        ci: Blk { start: 0, len: s.c_i },
+        qw: Blk { start: 0, len: qw },
+        qh: Blk { start: 0, len: qh },
+        rw: Blk { start: 0, len: rw },
+        rh: Blk { start: 0, len: rh },
+    };
+    let dims = pack_input(x, s.s_w as usize, s.s_h as usize, &ot, &rt, xin);
+    let _ = pack_filter(
+        w,
+        s.s_w as usize,
+        s.s_h as usize,
+        s.w_f as usize,
+        s.h_f as usize,
+        &ot,
+        &rt,
+        fil,
+    );
+    dims
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::tiles::Blk;
+    use crate::conv::conv7nl_naive;
+    use crate::kernels::gemm::{conv_tile_mac, TileDims};
 
     fn blk(start: u64, len: u64) -> Blk {
         Blk { start, len }
@@ -154,6 +205,106 @@ mod tests {
         for aw in 0..ew {
             for ah in 0..eh {
                 assert_eq!(buf[aw * eh + ah], x.at(0, 1, 1 + aw, 2 + ah));
+            }
+        }
+    }
+
+    /// Packing a whole strided stage as ONE reduction tile and driving it
+    /// through the axpy microkernel reproduces the naive 7NL nest bitwise
+    /// — the fused accumulation-order contract (DESIGN.md §7).
+    #[test]
+    fn fused_stage_pack_plus_mac_is_bitwise_naive() {
+        let s = ConvShape::new(2, 3, 5, 4, 3, 3, 4, 2, 2);
+        let iw = (s.s_w * (s.w_o - 1) + s.w_f) as usize;
+        let ih = (s.s_h * (s.h_o - 1) + s.h_f) as usize;
+        let x = Tensor4::randn([2, 3, iw, ih], 11);
+        let w = Tensor4::randn([3, 5, 3, 4], 12);
+        let (mut xin, mut fil) = (Vec::new(), Vec::new());
+        let (qw, qh, rw, rh) = filter_split_ranges(&s);
+        let (bn, bco) = (s.n as usize, s.c_o as usize);
+        let (bwo, bho) = (s.w_o as usize, s.h_o as usize);
+        let want = conv7nl_naive(&x, &w, &s);
+
+        let (ew, eh) =
+            pack_fused_stage(&x, &w, &s, 0, bho, &mut xin, &mut fil);
+        let mut out = vec![0.0f32; bn * bwo * bho * bco];
+        let d = TileDims {
+            bn,
+            bci: s.c_i as usize,
+            bco,
+            bwo,
+            bho,
+            bqw: qw as usize,
+            bqh: qh as usize,
+            brw: rw as usize,
+            brh: rh as usize,
+            ew,
+            eh,
+            q6_0: 0,
+            q7_0: 0,
+            r6_0: 0,
+            r7_0: 0,
+            sw: s.s_w as usize,
+            sh: s.s_h as usize,
+            wf: s.w_f as usize,
+            hf: s.h_f as usize,
+        };
+        conv_tile_mac(&mut out, &xin, &fil, &d);
+        let mut k = 0;
+        for n in 0..bn {
+            for a in 0..bwo {
+                for h in 0..bho {
+                    for c in 0..bco {
+                        assert_eq!(
+                            out[k].to_bits(),
+                            want.at(n, c, a, h).to_bits(),
+                            "({n},{c},{a},{h})"
+                        );
+                        k += 1;
+                    }
+                }
+            }
+        }
+
+        // row-restricted packing (the sliding-window fresh region of a
+        // fused sweep) agrees bitwise on the packed rows
+        let (ew2, eh2) = pack_fused_stage(&x, &w, &s, 1, 2, &mut xin, &mut fil);
+        let mut out2 = vec![0.0f32; bn * bwo * 2 * bco];
+        let d2 = TileDims {
+            bn,
+            bci: s.c_i as usize,
+            bco,
+            bwo,
+            bho: 2,
+            bqw: qw as usize,
+            bqh: qh as usize,
+            brw: rw as usize,
+            brh: rh as usize,
+            ew: ew2,
+            eh: eh2,
+            q6_0: 0,
+            q7_0: 0,
+            r6_0: 0,
+            r7_0: 0,
+            sw: s.s_w as usize,
+            sh: s.s_h as usize,
+            wf: s.w_f as usize,
+            hf: s.h_f as usize,
+        };
+        conv_tile_mac(&mut out2, &xin, &fil, &d2);
+        let mut k = 0;
+        for n in 0..bn {
+            for a in 0..bwo {
+                for h in 0..2 {
+                    for c in 0..bco {
+                        assert_eq!(
+                            out2[k].to_bits(),
+                            want.at(n, c, a, 1 + h).to_bits(),
+                            "restricted ({n},{c},{a},{h})"
+                        );
+                        k += 1;
+                    }
+                }
             }
         }
     }

@@ -50,21 +50,35 @@ pub(crate) const OUT_DIMS: [usize; 4] = [0, 2, 3, 4];
 /// Indices of the reduction dims (cI, q6, q7, r6, r7).
 pub(crate) const RED_DIMS: [usize; 5] = [1, 5, 6, 7, 8];
 
+/// The split-filter loop ranges of one shape:
+/// `(q6, q7, r6, r7) = (ceil(wF/σw), ceil(hF/σh), σw, σh)` — the
+/// `i6 = σw·q6 + r6` change of variables the §3.2 LP, the tile plans and
+/// the fused packed panels all share.
+pub(crate) fn filter_split_ranges(s: &ConvShape) -> (u64, u64, u64, u64) {
+    (
+        ceil_div(s.w_f, s.s_w),
+        ceil_div(s.h_f, s.s_h),
+        s.s_w,
+        s.s_h,
+    )
+}
+
 impl TilePlan {
     /// Solve (or re-use) the §3.2 LP for `shape` at memory size `m` and
     /// derive balanced integral loop bounds.
     pub fn new(shape: &ConvShape, p: Precision, m: f64) -> TilePlan {
         let blocking = sequential_blocking(shape, p, m);
+        let (qw, qh, rw, rh) = filter_split_ranges(shape);
         let ranges = [
             shape.n,
             shape.c_i,
             shape.c_o,
             shape.w_o,
             shape.h_o,
-            ceil_div(shape.w_f, shape.s_w),
-            ceil_div(shape.h_f, shape.s_h),
-            shape.s_w,
-            shape.s_h,
+            qw,
+            qh,
+            rw,
+            rh,
         ];
         let raw = [
             blocking.b_n,

@@ -11,8 +11,12 @@
 //!                                           kernels (naive|im2col|tiled|auto)
 //!                                           with measured word traffic
 //! convbound exec    --network tiny_resnet   run a whole network through the
-//!                                           fused pipeline (--check compares
-//!                                           bitwise vs the staged oracle)
+//!                                           fused pipeline (--fused-kernel
+//!                                           packed|reference|auto,
+//!                                           --halo-cache on|off; --check
+//!                                           compares bitwise vs the staged
+//!                                           oracle and validates the
+//!                                           traffic + halo models)
 //! convbound serve   --key unit3x3/blocked   batched serving demo (native
 //!                                           backend; PJRT with artifacts;
 //!                                           network keys serve the fused
@@ -36,8 +40,9 @@ use convbound::gemmini::GemminiConfig;
 use convbound::hbl::{analyze_7nl, analyze_small_filter};
 use convbound::kernels::{
     conv_network_fused_counted, conv_tiled_counted, expected_traffic,
-    naive_network, Autotuner, FusePlan, KernelKind, NetTrafficCounters,
-    TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    naive_network, Autotuner, FusePlan, FusedExec, KernelKind,
+    NetTrafficCounters, TilePlanCache, Traffic, TrafficCounters,
+    DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::report::{
     self, default_mem_sweep, default_proc_sweep, fig2_series, fig3_series,
@@ -195,15 +200,22 @@ fn cmd_plan(args: &Args) -> Result<()> {
 }
 
 /// Run a builtin network pipeline through the fused executor and report
-/// fusion decisions, per-stage traffic, and the layer-by-layer comparison;
-/// `--check` cross-validates against the stage-by-stage naive oracle
-/// (bitwise).
+/// fusion decisions, per-stage traffic, the halo-cache savings, and the
+/// layer-by-layer comparison; `--fused-kernel` picks the packed
+/// microkernel (default), the naive reference oracle, or the autotuner's
+/// measured choice; `--check` cross-validates against the stage-by-stage
+/// naive oracle (bitwise on fully fused plans).
 fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
     let batch = args.opt_u64("batch", convbound::runtime::manifest::BUILTIN_BATCH)?;
     if batch < 1 {
         return Err(err!("--batch must be >= 1"));
     }
     let m = mem_of(args, DEFAULT_TILE_MEM_WORDS)?;
+    let halo = match args.opt_str("halo-cache", "on") {
+        "on" => true,
+        "off" => false,
+        other => return Err(err!("unknown --halo-cache '{other}' (on|off)")),
+    };
     let manifest = convbound::runtime::Manifest::builtin(batch);
     let net = manifest.network(name).ok_or_else(|| {
         err!(
@@ -217,11 +229,47 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
         )
     })?;
     let cache = TilePlanCache::new();
-    let plan = FusePlan::new(&net.stages, m, &cache);
+    let plan = match args.opt_str("fused-kernel", "packed") {
+        "auto" => {
+            // the measured network-mode choice (fused-packed vs
+            // fused-naive vs materialized), probed the way the kernel
+            // autotuner probes kernels and persisted through the same
+            // sidecar as the per-layer choices
+            let tuner = Autotuner::new(m);
+            if let Some(path) = args.opt("tune-cache") {
+                let loaded = tuner.warm_start(path)?;
+                if loaded > 0 {
+                    println!("warm-started {loaded} tuned choice(s) from {path}");
+                }
+            }
+            let kind = tuner.select_network(name, &net.stages);
+            println!("autotuner picked '{}'", kind.name());
+            // the requested halo flag reaches the *planner*, so fusion
+            // decisions are made under the model this run executes
+            let p = tuner.network_plan(&net.stages, kind, halo);
+            if let Some(path) = args.opt("tune-cache") {
+                tuner.save(path)?;
+            }
+            p
+        }
+        other => match FusedExec::parse(other) {
+            Some(exec) => FusePlan::with_options(&net.stages, m, &cache, exec, halo),
+            None => {
+                return Err(err!(
+                    "unknown --fused-kernel '{other}' (packed|reference|auto)"
+                ))
+            }
+        },
+    };
     println!(
         "exec network {name} (batch {batch}, {} stages, {} MACs) at M = {m} words",
         net.stages.len(),
         net.updates()
+    );
+    println!(
+        "  fused kernel '{}', halo cache {}",
+        plan.exec.name(),
+        if plan.halo_cache { "on" } else { "off" }
     );
     for g in &plan.groups {
         if g.is_fused() {
@@ -314,6 +362,30 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
             ));
         }
         println!("  fused boundaries touched 0 main-memory words: OK");
+        // halo-cache report: measured carried words per stage vs the
+        // plan's analytic savings model (exact, like the traffic model)
+        let halo_meas = counters.halo_snapshot();
+        let halo_want = plan.expected_halo_words();
+        for (k, (got, want)) in halo_meas.iter().zip(&halo_want).enumerate() {
+            if *got != 0 || *want != 0 {
+                println!(
+                    "  stage {k}: {got} input words served from the halo \
+                     cache (model {want}{})",
+                    if got == want { ", exact" } else { ", MISMATCH" }
+                );
+            }
+        }
+        if halo_meas != halo_want {
+            return Err(err!(
+                "measured halo-cache words disagree with the model"
+            ));
+        }
+        let served: u64 = halo_meas.iter().sum();
+        println!(
+            "  halo cache ({}) served {served} words without re-read or \
+             recompute",
+            if plan.halo_cache { "on" } else { "off" }
+        );
     } else {
         std::hint::black_box(&out);
     }
@@ -517,7 +589,8 @@ fn main() {
             eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
             eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
             eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check --tune-cache <path>");
-            eprintln!("        --network tiny_resnet [--batch N] [--mem M] [--check]");
+            eprintln!("        --network tiny_resnet|deep_mixnet [--batch N] [--mem M] [--check]");
+            eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
             std::process::exit(2);
         }

@@ -53,6 +53,14 @@ pub trait Executable {
     fn stage_traffic(&self) -> Option<Vec<crate::kernels::Traffic>> {
         None
     }
+
+    /// Per-stage words the fused executor served from its sliding-window
+    /// halo cache (stage order): group heads avoided main-memory re-reads,
+    /// interior fused stages avoided upstream recompute. `None` for
+    /// single-layer executables.
+    fn halo_words(&self) -> Option<Vec<u64>> {
+        None
+    }
 }
 
 /// An execution substrate that prepares artifacts for execution.

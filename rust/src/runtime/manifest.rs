@@ -134,6 +134,28 @@ impl NetworkSpec {
         .expect("builtin tiny_resnet chain is valid")
     }
 
+    /// The builtin six-stage mixed pipeline: a shallow fusable head
+    /// (3×3 → 3×3 → 2×2 at growing channel counts), a 48→64-channel 5×5
+    /// stage whose filter panel alone exceeds the default tile-memory
+    /// budget — forcing the fusion planner to materialize around it — and
+    /// a strided tail. CI exercises the mixed fused/materialized network
+    /// path by default through this entry.
+    pub fn deep_mixnet(batch: u64) -> NetworkSpec {
+        assert!(batch >= 1);
+        NetworkSpec::uniform(
+            "deep_mixnet",
+            &[
+                ConvShape::new(batch, 3, 8, 20, 20, 3, 3, 1, 1),
+                ConvShape::new(batch, 8, 16, 17, 17, 3, 3, 1, 1),
+                ConvShape::new(batch, 16, 48, 15, 15, 2, 2, 1, 1),
+                ConvShape::new(batch, 48, 64, 10, 10, 5, 5, 1, 1),
+                ConvShape::new(batch, 64, 16, 7, 7, 3, 3, 1, 1),
+                ConvShape::new(batch, 16, 32, 2, 2, 3, 3, 2, 2),
+            ],
+        )
+        .expect("builtin deep_mixnet chain is valid")
+    }
+
     /// Batch size N shared by every stage.
     pub fn batch(&self) -> u64 {
         self.stages[0].shape.n
@@ -306,15 +328,18 @@ impl Manifest {
     /// backend answers in well under a millisecond per batch, each exposed
     /// through the kernel kinds the native backend implements (the 3×3 and
     /// strided 5×5 also as `"tiled"`, routing through the `kernels/`
-    /// engine), plus the [`NetworkSpec::tiny_resnet`] pipeline exposed as
-    /// the `"network"` kind. This is what [`super::Runtime::builtin`] and
-    /// the no-artifact serving path use.
+    /// engine), plus two `"network"` pipelines: the fully-fusable
+    /// [`NetworkSpec::tiny_resnet`] and the six-stage
+    /// [`NetworkSpec::deep_mixnet`], whose plan mixes fused and
+    /// materialized groups at the default budget. This is what
+    /// [`super::Runtime::builtin`] and the no-artifact serving path use.
     pub fn builtin(batch: u64) -> Manifest {
         assert!(batch >= 1);
         let unit3x3 = ConvShape::new(batch, 8, 16, 12, 12, 3, 3, 1, 1);
         let unit1x1 = ConvShape::new(batch, 16, 32, 14, 14, 1, 1, 1, 1);
         let unit5x5 = ConvShape::new(batch, 3, 12, 6, 6, 5, 5, 2, 2);
         let tiny = NetworkSpec::tiny_resnet(batch);
+        let deep = NetworkSpec::deep_mixnet(batch);
         Manifest {
             batch: batch as usize,
             artifacts: vec![
@@ -325,8 +350,9 @@ impl Manifest {
                 ArtifactSpec::for_layer("unit5x5", "blocked", &unit5x5),
                 ArtifactSpec::for_layer("unit5x5", "tiled", &unit5x5),
                 ArtifactSpec::for_network(&tiny),
+                ArtifactSpec::for_network(&deep),
             ],
-            networks: vec![tiny],
+            networks: vec![tiny, deep],
         }
     }
 
@@ -564,6 +590,25 @@ mod tests {
         assert_eq!(spec.updates, net.updates());
         // the network artifact is not a single-layer spec
         assert!(spec.layer_shape().is_err());
+    }
+
+    #[test]
+    fn builtin_deep_network_chains_and_matches_artifact() {
+        let m = Manifest::builtin(4);
+        let net = m.network("deep_mixnet").expect("builtin deep network");
+        assert!(net.stages.len() >= 6, "deep pipeline wants 6+ stages");
+        assert_eq!(net.batch(), 4);
+        for w in net.stages.windows(2) {
+            assert_eq!(w[1].shape.c_i, w[0].shape.c_o);
+            assert_eq!(w[1].shape.in_w(), w[0].shape.w_o);
+            assert_eq!(w[1].shape.in_h(), w[0].shape.h_o);
+            assert!(w[1].shape.paper_assumptions_hold());
+        }
+        let spec = m.find("deep_mixnet/network").expect("deep artifact");
+        assert_eq!(spec.inputs.len(), net.stages.len() + 1);
+        assert_eq!(spec.inputs[0], net.input_dims().to_vec());
+        assert_eq!(spec.output, net.output_dims().to_vec());
+        assert_eq!(spec.updates, net.updates());
     }
 
     #[test]

@@ -192,6 +192,13 @@ impl Runtime {
     pub fn stage_traffic(&self, key: &str) -> Option<Vec<crate::kernels::Traffic>> {
         self.loaded.get(key).and_then(|a| a.exe.stage_traffic())
     }
+
+    /// Per-stage words a loaded `"network"` artifact served from the fused
+    /// executor's sliding-window halo cache; `None` for unloaded or
+    /// single-layer artifacts.
+    pub fn halo_words(&self, key: &str) -> Option<Vec<u64>> {
+        self.loaded.get(key).and_then(|a| a.exe.halo_words())
+    }
 }
 
 impl LoadedArtifact {
@@ -332,9 +339,13 @@ mod tests {
             stages[2].output_words as usize,
             spec.output.iter().product::<usize>()
         );
-        // single-layer artifacts expose no stage traffic
+        // the fused executor is halo-instrumented (words may be zero when
+        // the plan needs no h-tiling, but the counters must exist)
+        assert!(rt.halo_words(key).is_some());
+        // single-layer artifacts expose no stage traffic or halo counters
         rt.load("unit3x3/tiled").expect("load tiled");
         assert!(rt.stage_traffic("unit3x3/tiled").is_none());
+        assert!(rt.halo_words("unit3x3/tiled").is_none());
         // the non-arc entry point agrees with the arc one
         let refs: Vec<&Tensor4> = inputs.iter().map(|a| a.as_ref()).collect();
         let again = rt.run(key, &refs).expect("run network via refs");

@@ -222,6 +222,10 @@ impl Executable for NetworkExec {
     fn stage_traffic(&self) -> Option<Vec<Traffic>> {
         Some(self.counters.snapshot())
     }
+
+    fn halo_words(&self) -> Option<Vec<u64>> {
+        Some(self.counters.halo_snapshot())
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +238,12 @@ mod tests {
         let m = Manifest::builtin(4);
         assert!(m.artifacts.len() >= 3);
         for spec in &m.artifacts {
+            if spec.kind == "network" {
+                // whole-network artifacts resolve through
+                // Manifest::network, never the single-layer inversion
+                assert!(spec.layer_shape().is_err(), "{}", spec.key());
+                continue;
+            }
             let s = spec.layer_shape().expect("builtin spec must be derivable");
             assert_eq!(s.n, spec.output[0] as u64, "{}", spec.key());
             assert_eq!(s.in_w() as usize, spec.inputs[0][2], "{}", spec.key());

@@ -13,8 +13,8 @@ use convbound::conv::{
 use convbound::gemmini::{simulate_layer, GemminiConfig};
 use convbound::kernels::{
     axpy, axpy_scalar, conv_network_fused, conv_network_fused_counted,
-    conv_tiled_counted, expected_traffic, naive_network, FusePlan,
-    NetTrafficCounters, TilePlan, TilePlanCache, TrafficCounters,
+    conv_tiled_counted, expected_traffic, naive_network, FusePlan, FusedExec,
+    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
 };
 use convbound::runtime::NetworkSpec;
 use convbound::util::threadpool::ThreadPool;
@@ -568,6 +568,104 @@ fn prop_planned_network_matches_oracle_with_exact_traffic() {
             numerics_ok
                 && measured == plan.expected_network_traffic()
                 && fused_boundaries_silent(&plan, &measured)
+        },
+    );
+}
+
+#[test]
+fn prop_packed_fused_bitwise_matches_reference_and_oracle() {
+    // the packed microkernel path performs the reference nest's exact
+    // per-element accumulation order (one full reduction tile per stage),
+    // so packed, reference and the staged oracle agree bitwise — for
+    // arbitrary ragged tiles on strided, non-square chains — and both
+    // fused paths charge identical traffic and halo words
+    forall(
+        Config { cases: 10, seed: 85 },
+        |r| {
+            let net = random_chain(r);
+            let last = net.stages.last().unwrap().shape;
+            let tile = (
+                r.range(1, last.n),
+                r.range(1, last.w_o),
+                r.range(1, last.h_o),
+            );
+            (net, tile, r.range(0, 1_000_000))
+        },
+        |(net, (b_n, b_wo, b_ho), seed)| {
+            let cache = TilePlanCache::new();
+            let mut packed = FusePlan::new(&net.stages, 65536.0, &cache);
+            packed.groups = vec![convbound::kernels::FuseGroup {
+                start: 0,
+                end: net.stages.len() - 1,
+                b_n: *b_n,
+                b_wo: *b_wo,
+                b_ho: *b_ho,
+            }];
+            let mut reference = packed.clone();
+            reference.exec = FusedExec::Reference;
+            let image = Tensor4::randn(net.input_dims(), *seed);
+            let filters = chain_filters(net, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let pc = NetTrafficCounters::new(net.stages.len());
+            let rc = NetTrafficCounters::new(net.stages.len());
+            let p = conv_network_fused_counted(&image, &frefs, &packed, &pc);
+            let q = conv_network_fused_counted(&image, &frefs, &reference, &rc);
+            let want = naive_network(&image, &frefs, &net.stages);
+            p.max_abs_diff(&q) == 0.0
+                && p.max_abs_diff(&want) == 0.0
+                && pc.snapshot() == rc.snapshot()
+                && pc.halo_snapshot() == rc.halo_snapshot()
+        },
+    );
+}
+
+#[test]
+fn prop_halo_cache_bitwise_with_exact_adjusted_traffic() {
+    // the sliding-window halo cache never changes a bit of the output
+    // (cached rows are bitwise equal to what recompute would produce);
+    // measured traffic equals the cache-adjusted analytic model exactly,
+    // measured halo words equal the analytic savings model exactly, and
+    // caching can only reduce total traffic
+    forall(
+        Config { cases: 10, seed: 86 },
+        |r| {
+            let net = random_chain(r);
+            let last = net.stages.last().unwrap().shape;
+            // small h-blocks force multi-tile sweeps where the cache works
+            let tile = (
+                r.range(1, last.n),
+                r.range(1, last.w_o),
+                r.range(1, (last.h_o / 2).max(1)),
+            );
+            (net, tile, r.range(0, 1_000_000))
+        },
+        |(net, (b_n, b_wo, b_ho), seed)| {
+            let cache = TilePlanCache::new();
+            let mut on = FusePlan::new(&net.stages, 65536.0, &cache);
+            on.groups = vec![convbound::kernels::FuseGroup {
+                start: 0,
+                end: net.stages.len() - 1,
+                b_n: *b_n,
+                b_wo: *b_wo,
+                b_ho: *b_ho,
+            }];
+            on.halo_cache = true;
+            let mut off = on.clone();
+            off.halo_cache = false;
+            let image = Tensor4::randn(net.input_dims(), *seed);
+            let filters = chain_filters(net, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let c_on = NetTrafficCounters::new(net.stages.len());
+            let c_off = NetTrafficCounters::new(net.stages.len());
+            let a = conv_network_fused_counted(&image, &frefs, &on, &c_on);
+            let b = conv_network_fused_counted(&image, &frefs, &off, &c_off);
+            a.max_abs_diff(&b) == 0.0
+                && c_on.snapshot() == on.expected_network_traffic()
+                && c_off.snapshot() == off.expected_network_traffic()
+                && c_on.halo_snapshot() == on.expected_halo_words()
+                && c_off.halo_snapshot().iter().all(|&w| w == 0)
+                && Traffic::sum(&c_on.snapshot()).total()
+                    <= Traffic::sum(&c_off.snapshot()).total()
         },
     );
 }
