@@ -22,13 +22,15 @@ use std::time::Duration;
 use convbound::bench::bench;
 use convbound::commvol::seq::{blocking_volume, im2col_volume, naive_volume};
 use convbound::conv::{
-    conv7nl_naive, paper_operands, resnet50_layers, scaled, Precision, Tensor4,
+    conv7nl_naive, paper_operands, pass_operands, resnet50_layers, scaled,
+    ConvPass, Precision, Tensor4,
 };
 use convbound::coordinator::ConvServer;
 use convbound::kernels::{
     conv_im2col, conv_network_fused, conv_network_fused_counted,
-    conv_network_staged, conv_tiled, conv_tiled_counted, conv_tiled_parallel,
-    default_workers, FuseGroup, FusePlan, FusedExec, NetTrafficCounters,
+    conv_network_staged, conv_pass_tiled, conv_pass_tiled_counted, conv_tiled,
+    conv_tiled_counted, conv_tiled_parallel, default_workers,
+    expected_pass_traffic, FuseGroup, FusePlan, FusedExec, NetTrafficCounters,
     TilePlan, TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::runtime::{Manifest, Runtime};
@@ -425,6 +427,126 @@ fn network_sweep(smoke: bool) -> Json {
     Json::Obj(doc)
 }
 
+/// Naive vs tiled throughput for the two backward convolutions of a
+/// training step, per catalog layer, with the tiled gradients revalidated
+/// bitwise against the `conv/training.rs` oracles and their measured
+/// traffic against the per-pass analytic model on every bench run;
+/// returns the `BENCH_training.json` document.
+fn training_sweep(smoke: bool) -> Json {
+    let batch = if smoke { 1 } else { 2 };
+    let scale = if smoke { 4 } else { 2 };
+    let m = DEFAULT_TILE_MEM_WORDS;
+    let p = Precision::uniform();
+    let target = if smoke { 0.05 } else { 0.6 };
+
+    println!(
+        "\n== training sweep: naive vs tiled dFilter/dInput, ResNet catalog, \
+         batch {batch}, scale 1/{scale}, M = {m} words =="
+    );
+    let mut layers = Vec::new();
+    for l in resnet50_layers(batch) {
+        let s = scaled(l.shape, scale);
+        let macs = s.updates() as f64;
+        let mut passes_json = Vec::new();
+        let mut summary = Vec::new();
+        for pass in [ConvPass::DFilter, ConvPass::DInput] {
+            let (a, b) = pass_operands(pass, &s, 5);
+            let plan = TilePlan::for_pass(pass, &s, p, m);
+            let oracle = || pass.naive_oracle(&a, &b, &s);
+            // the backward accumulation-order contract, revalidated on
+            // every bench run: tiled gradients are bitwise the oracles,
+            // counters exactly the analytic per-pass model
+            let counters = TrafficCounters::new();
+            let tiled_out = conv_pass_tiled_counted(pass, &a, &b, &plan, &counters);
+            assert_eq!(
+                tiled_out.max_abs_diff(&oracle()),
+                0.0,
+                "{} {}: tiled gradient diverged from the oracle",
+                l.name,
+                pass.name()
+            );
+            let measured = counters.snapshot();
+            let model = expected_pass_traffic(&plan);
+            assert_eq!(
+                measured, model,
+                "{} {}: measured traffic != analytic model",
+                l.name,
+                pass.name()
+            );
+
+            let mut rows = Vec::new();
+            for kernel in ["naive", "tiled"] {
+                let r = bench(
+                    &format!("training: {} {} {kernel}", l.name, pass.name()),
+                    target,
+                    || {
+                        match kernel {
+                            "naive" => std::hint::black_box(oracle()),
+                            _ => std::hint::black_box(conv_pass_tiled(
+                                pass, &a, &b, &plan,
+                            )),
+                        };
+                    },
+                );
+                let secs = r.summary.p50.max(1e-9);
+                let mut o = BTreeMap::new();
+                o.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+                o.insert("secs".to_string(), Json::Num(secs));
+                o.insert("mmac_per_s".to_string(), Json::Num(macs / secs / 1e6));
+                o.insert(
+                    "measured_words".to_string(),
+                    Json::Num(if kernel == "tiled" {
+                        measured.total() as f64
+                    } else {
+                        0.0
+                    }),
+                );
+                o.insert(
+                    "model_words".to_string(),
+                    Json::Num(model.total() as f64),
+                );
+                rows.push((kernel, secs, Json::Obj(o)));
+            }
+            summary.push(format!(
+                "{} naive {:.1} | tiled {:.1} MMAC/s",
+                pass.name(),
+                macs / rows[0].1 / 1e6,
+                macs / rows[1].1 / 1e6
+            ));
+            let mut po = BTreeMap::new();
+            po.insert("pass".to_string(), Json::Str(pass.name().to_string()));
+            po.insert(
+                "traffic_words".to_string(),
+                Json::Num(measured.total() as f64),
+            );
+            po.insert("bitwise_vs_oracle".to_string(), Json::Bool(true));
+            po.insert(
+                "kernels".to_string(),
+                Json::Arr(rows.into_iter().map(|(_, _, j)| j).collect()),
+            );
+            passes_json.push(Json::Obj(po));
+        }
+        println!(
+            "  {:<8} {:>9.0} kMAC: {}",
+            l.name,
+            macs / 1e3,
+            summary.join(" || ")
+        );
+        let mut lo = BTreeMap::new();
+        lo.insert("name".to_string(), Json::Str(l.name.to_string()));
+        lo.insert("shape".to_string(), Json::Str(s.to_string()));
+        lo.insert("updates".to_string(), Json::Num(macs));
+        lo.insert("passes".to_string(), Json::Arr(passes_json));
+        layers.push(Json::Obj(lo));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("training".to_string()));
+    doc.insert("smoke".to_string(), Json::Bool(smoke));
+    doc.insert("mem_words".to_string(), Json::Num(m));
+    doc.insert("layers".to_string(), Json::Arr(layers));
+    Json::Obj(doc)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     // measurement windows: long enough for stable numbers normally, a few
@@ -555,4 +677,8 @@ fn main() {
     // whole-network sweep: layer-by-layer vs fused pipelines
     let doc = network_sweep(smoke);
     write_json("BENCH_network.json", &doc);
+
+    // backward passes: naive vs tiled dFilter/dInput per catalog layer
+    let doc = training_sweep(smoke);
+    write_json("BENCH_training.json", &doc);
 }

@@ -20,11 +20,28 @@ cargo run --release -- exec --network tiny_resnet --check >/dev/null
 echo "==> cargo run --release -- exec --network deep_mixnet --check  (mixed fused/materialized plan)"
 cargo run --release -- exec --network deep_mixnet --check >/dev/null
 
-echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json)"
-rm -f BENCH_kernels.json BENCH_network.json  # stale files must not mask a failed write
+echo "==> cargo run --release -- exec --pass dfilter --check  (tiled filter gradient, bitwise vs oracle)"
+cargo run --release -- exec --layer conv4_x --scale 4 --pass dfilter --check >/dev/null
+
+echo "==> cargo run --release -- exec --pass dinput --check  (tiled input gradient, bitwise vs oracle)"
+cargo run --release -- exec --layer conv4_x --scale 4 --pass dinput --check >/dev/null
+
+echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json + BENCH_training.json)"
+rm -f BENCH_kernels.json BENCH_network.json BENCH_training.json  # stale files must not mask a failed write
 cargo bench --bench e2e_runtime -- --smoke >/dev/null
 test -s BENCH_kernels.json || { echo "FAIL: BENCH_kernels.json missing"; exit 1; }
 test -s BENCH_network.json || { echo "FAIL: BENCH_network.json missing"; exit 1; }
+test -s BENCH_training.json || { echo "FAIL: BENCH_training.json missing"; exit 1; }
+
+echo "==> BENCH_training.json: per-pass entries present"
+# the bitwise tiled-vs-oracle gate lives INSIDE the bench (training_sweep
+# asserts before timing): a violation panics the bench and the `test -s`
+# above fails on the missing file. Here we only assert both passes were
+# actually swept.
+grep -q '"pass":"dfilter"' BENCH_training.json \
+    || { echo "FAIL: dfilter entries missing from BENCH_training.json"; exit 1; }
+grep -q '"pass":"dinput"' BENCH_training.json \
+    || { echo "FAIL: dinput entries missing from BENCH_training.json"; exit 1; }
 
 echo "==> BENCH_network.json: fused speedup fields + packed-vs-reference gate + halo savings"
 grep -q '"speedup_fused_vs_layered":' BENCH_network.json \

@@ -1,14 +1,18 @@
-//! Training-step driver: forward + both backward convolutions through the
-//! AOT artifacts, with an SGD update loop showing the loss actually falls.
+//! Training-step driver: forward + backward convolutions through the
+//! runtime, with an SGD update loop showing the loss actually falls.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example training_step
+//! cargo run --release --example training_step          # builtin, no setup
+//! make artifacts && cargo run --release --example training_step  # AOT
 //! ```
 //!
 //! This exercises the paper's point that a training step is *three* 7NL
-//! CNN computations (forward, dFilter, dInput — see conv/training.rs): all
-//! three run as Pallas kernels AOT-lowered to HLO, executed by the Rust
-//! runtime, with gradients validated against the in-Rust naive oracles.
+//! CNN computations (forward, dFilter, dInput — see conv/training.rs).
+//! With an `artifacts/` directory the passes run as AOT-lowered HLO; with
+//! none, `Manifest::builtin`'s `"dfilter"` artifact routes the gradient
+//! through the pass-generic LP-tiled engine (`kernels/`), which is bitwise
+//! identical to the naive oracle — so the same driver runs end to end with
+//! zero setup.
 
 use convbound::bounds::sequential_bound;
 use convbound::conv::{
@@ -21,11 +25,12 @@ fn artifact_dir() -> std::path::PathBuf {
 }
 
 fn main() {
-    if !artifact_dir().join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let mut rt = Runtime::new(artifact_dir()).expect("runtime");
+    let mut rt = if artifact_dir().join("manifest.json").exists() {
+        Runtime::new(artifact_dir()).expect("runtime")
+    } else {
+        println!("no artifacts/ — training on the built-in native backend");
+        Runtime::builtin()
+    };
     let fwd = rt.manifest().find("unit3x3/blocked").expect("fwd artifact").clone();
     let has_grad = rt.manifest().find("unit3x3/dfilter").is_some();
     if !has_grad {

@@ -12,7 +12,15 @@ outputs are newer than the compile/ sources).
 
 Besides the .hlo.txt files this writes artifacts/manifest.json describing
 every artifact's entry shapes so the Rust runtime can set up buffers without
-parsing HLO.
+parsing HLO. The manifest carries two sections the Rust side consumes:
+
+  * "artifacts": one entry per lowered module -- name, kind ("blocked",
+    "im2col", "dfilter", "dinput", "network"), path, inputs (shape list in
+    call order), output shape, and the MAC count `updates`;
+  * "networks": one entry per exactly-chaining pipeline (see
+    network_manifest_entry for the stage schema), so backends that execute
+    pipelines natively (the Rust fused planner) can run the same plans as
+    Manifest::builtin; file-based backends keep using the lowered HLO.
 """
 
 import argparse
@@ -104,6 +112,36 @@ def lower_network(specs, batch: int):
     return to_hlo_text(jax.jit(entry).lower(x_spec, *w_specs))
 
 
+def network_manifest_entry(name: str, specs) -> dict:
+    """The `networks` manifest entry for one exactly-chaining spec list.
+
+    Schema (mirrors runtime/manifest.rs::Manifest::parse, which validates
+    it strictly — see the manifest notes in the module docstring):
+
+        {"name": <str>,
+         "stages": [{"shape": [N, cI, cO, wO, hO, wF, hF, sw, sh],
+                     "precision": [pI, pF, pO]}, ...]}
+
+    `precision` is optional (defaults to uniform f32 words on the Rust
+    side); every boundary must satisfy cI(k+1) == cO(k) and
+    sigma(k+1)*out(k+1) + filt(k+1) == out(k) per axis, which this helper
+    re-checks so a drifted spec list fails at build time, not at load.
+    """
+    for prev, nxt in zip(specs, specs[1:]):
+        assert prev.c_out == nxt.c_in, f"{name}: channel chain broken"
+        assert (prev.out_w, prev.out_h) == (nxt.in_w, nxt.in_h), (
+            f"{name}: spatial chain broken at {nxt.name} "
+            f"({prev.out_w}x{prev.out_h} -> {nxt.in_w}x{nxt.in_h})")
+    return {
+        "name": name,
+        "stages": [{
+            "shape": [s.n, s.c_in, s.c_out, s.out_w, s.out_h,
+                      s.filt_w, s.filt_h, s.stride_w, s.stride_h],
+            "precision": [1.0, 1.0, 1.0],
+        } for s in specs],
+    }
+
+
 def build_all(out_dir: str, batch: int = 4) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     manifest = {"batch": batch, "artifacts": []}
@@ -156,6 +194,13 @@ def build_all(out_dir: str, batch: int = 4) -> dict:
         "updates": sum(s.updates for s in net_specs),
     })
     print(f"wrote {net_path} ({len(text)} chars)")
+
+    # the networks section: lets runtimes that execute pipelines natively
+    # (the Rust native backend's fused planner) run the same chain as
+    # Manifest::builtin, while file-based backends (PJRT) keep loading the
+    # lowered HLO module above (ExecBackend::supports_networks gates the
+    # routing on the Rust side)
+    manifest["networks"] = [network_manifest_entry("tiny_resnet", net_specs)]
 
     man_path = os.path.join(out_dir, "manifest.json")
     with open(man_path, "w") as f:

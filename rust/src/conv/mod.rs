@@ -13,7 +13,10 @@ pub use catalog::{alexnet_layers, find_layer, resnet50_layers, scaled};
 pub use naive::{assert_conv_operands, conv7nl_naive};
 pub use shapes::{ConvShape, NetworkStage, Precision};
 pub use tensor::Tensor4;
-pub use training::{backward_shapes, dfilter_naive, dinput_naive, TrainingShapes};
+pub use training::{
+    assert_pass_operands, backward_shapes, dfilter_naive, dfilter_precision,
+    dinput_naive, dinput_precision, ConvPass, TrainingShapes,
+};
 
 /// Random paper-convention operands for `s`: image `(N, cI, WI, HI)` with
 /// `WI = σw·wO + wF` seeded from `seed`, filter `(cI, cO, wF, hF)` seeded
@@ -26,4 +29,12 @@ pub fn paper_operands(s: &ConvShape, seed: u64) -> (Tensor4, Tensor4) {
     );
     let w = Tensor4::randn(s.filter_dims(), seed + 1);
     (x, w)
+}
+
+/// Random operands for one pass of `s`, in the pass's `(a, b)` call order
+/// ([`ConvPass::operand_dims`]): the pass-generic extension of
+/// [`paper_operands`] (which it reproduces exactly for the forward pass).
+pub fn pass_operands(pass: ConvPass, s: &ConvShape, seed: u64) -> (Tensor4, Tensor4) {
+    let (da, db) = pass.operand_dims(s);
+    (Tensor4::randn(da, seed), Tensor4::randn(db, seed + 1))
 }

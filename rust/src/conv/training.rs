@@ -16,6 +16,159 @@
 use super::shapes::{ConvShape, Precision};
 use super::tensor::Tensor4;
 
+/// The three convolution passes of one training step, as instantiations of
+/// the same 7NL machinery. The tiled engine (`kernels/`) is generic over
+/// this enum: each pass maps its seven loops onto the nine blocked LP dims
+/// (`ConvPass::lp_shape` / [`ConvPass::lp_precision`] feed the §3.2
+/// blocking LP the pass's permuted operand sizes), and the per-pass
+/// kernels realize the blocking with the accumulation order of the naive
+/// oracles below, so tiled backward execution is bitwise identical to
+/// [`dfilter_naive`] / [`dinput_naive`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ConvPass {
+    Forward,
+    DFilter,
+    DInput,
+}
+
+impl ConvPass {
+    pub const ALL: [ConvPass; 3] =
+        [ConvPass::Forward, ConvPass::DFilter, ConvPass::DInput];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvPass::Forward => "fwd",
+            ConvPass::DFilter => "dfilter",
+            ConvPass::DInput => "dinput",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ConvPass> {
+        match s {
+            "fwd" | "forward" => Some(ConvPass::Forward),
+            "dfilter" => Some(ConvPass::DFilter),
+            "dinput" => Some(ConvPass::DInput),
+            _ => None,
+        }
+    }
+
+    /// The permuted 7NL shape whose nine loop ranges the §3.2 blocking LP
+    /// solves for this pass: the forward shape itself, the
+    /// [`backward_shapes`] dFilter permutation (output = the filter
+    /// gradient, batch contracted), or the channel-swapped forward shape
+    /// for dInput (cO contracted, cI owned by the output).
+    pub fn lp_shape(self, s: &ConvShape) -> ConvShape {
+        match self {
+            ConvPass::Forward => *s,
+            ConvPass::DFilter => backward_shapes(*s).dfilter,
+            ConvPass::DInput => ConvShape { c_i: s.c_o, c_o: s.c_i, ..*s },
+        }
+    }
+
+    /// Precision triple under this pass's (input, filter, output) role
+    /// map: (In, F, Out), (In, dOut, dF), (dOut, F, dIn).
+    pub fn lp_precision(self, p: Precision) -> Precision {
+        match self {
+            ConvPass::Forward => p,
+            ConvPass::DFilter => dfilter_precision(p),
+            ConvPass::DInput => dinput_precision(p),
+        }
+    }
+
+    /// Output tensor dims of this pass on layer `s`.
+    pub fn out_dims(self, s: &ConvShape) -> [usize; 4] {
+        match self {
+            ConvPass::Forward => [
+                s.n as usize,
+                s.c_o as usize,
+                s.w_o as usize,
+                s.h_o as usize,
+            ],
+            ConvPass::DFilter => s.filter_dims(),
+            ConvPass::DInput => [
+                s.n as usize,
+                s.c_i as usize,
+                s.in_w() as usize,
+                s.in_h() as usize,
+            ],
+        }
+    }
+
+    /// Run this pass's naive oracle on its `(a, b)` operands: the 7NL
+    /// nest for forward, [`dfilter_naive`] / [`dinput_naive`] (at the
+    /// paper-convention input extent) for the gradients. The one dispatch
+    /// every check path — CLI `--check`, benches, property and unit tests
+    /// — validates the tiled engine against.
+    pub fn naive_oracle(self, a: &Tensor4, b: &Tensor4, s: &ConvShape) -> Tensor4 {
+        match self {
+            ConvPass::Forward => super::naive::conv7nl_naive(a, b, s),
+            ConvPass::DFilter => dfilter_naive(a, b, s),
+            ConvPass::DInput => {
+                dinput_naive(a, b, s, s.in_w() as usize, s.in_h() as usize)
+            }
+        }
+    }
+
+    /// Operand tensor dims `(a, b)` in call order: (image, filter) for
+    /// forward, (image, dOut) for dFilter, (dOut, filter) for dInput.
+    pub fn operand_dims(self, s: &ConvShape) -> ([usize; 4], [usize; 4]) {
+        let image = [
+            s.n as usize,
+            s.c_i as usize,
+            s.in_w() as usize,
+            s.in_h() as usize,
+        ];
+        let gout = [
+            s.n as usize,
+            s.c_o as usize,
+            s.w_o as usize,
+            s.h_o as usize,
+        ];
+        match self {
+            ConvPass::Forward => (image, s.filter_dims()),
+            ConvPass::DFilter => (image, gout),
+            ConvPass::DInput => (gout, s.filter_dims()),
+        }
+    }
+}
+
+/// Validate the `(a, b)` operand shapes of `pass` on layer `s` — the
+/// pass-generic extension of [`super::naive::assert_conv_operands`] (whose
+/// relaxed image bound forward keeps).
+pub fn assert_pass_operands(pass: ConvPass, a: &Tensor4, b: &Tensor4, s: &ConvShape) {
+    match pass {
+        ConvPass::Forward => super::naive::assert_conv_operands(a, b, s),
+        ConvPass::DFilter => {
+            // image under the same relaxed WI >= σw(wO−1)+wF bound the
+            // forward kernels accept (max(1) guards degenerate outputs)
+            assert_eq!(a.dims[0], s.n as usize, "batch mismatch");
+            assert_eq!(a.dims[1], s.c_i as usize, "input channel mismatch");
+            assert!(
+                a.dims[2] as u64 >= s.s_w * (s.w_o.max(1) - 1) + s.w_f,
+                "input width too small"
+            );
+            assert!(
+                a.dims[3] as u64 >= s.s_h * (s.h_o.max(1) - 1) + s.h_f,
+                "input height too small"
+            );
+            assert_eq!(
+                b.dims,
+                [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize],
+                "output-gradient shape mismatch"
+            );
+        }
+        ConvPass::DInput => {
+            assert_eq!(
+                a.dims,
+                [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize],
+                "output-gradient shape mismatch"
+            );
+            assert_eq!(b.dims, s.filter_dims(), "filter shape mismatch");
+        }
+    }
+}
+
 /// The three communication problems of one training step. `G` is identical
 /// for all three (every MAC has a mirror in each pass).
 #[derive(Debug, Clone, Copy)]
@@ -69,6 +222,12 @@ pub fn backward_shapes(f: ConvShape) -> TrainingShapes {
 /// roles (I,F,O) = (dOut, F, dIn) → (p_O, p_F, p_I).
 pub fn dinput_precision(p: Precision) -> Precision {
     Precision::new(p.p_o, p.p_f, p.p_i)
+}
+
+/// Precision triple for the dFilter problem given forward precisions:
+/// roles (I,F,O) = (In, dOut, dF) → (p_I, p_O, p_F).
+pub fn dfilter_precision(p: Precision) -> Precision {
+    Precision::new(p.p_i, p.p_o, p.p_f)
 }
 
 /// Naive filter gradient: `dF(ci,co,i6,i7) += x(n,ci,σw·w+i6,σh·h+i7)·g(n,co,w,h)`.
@@ -208,5 +367,47 @@ mod tests {
         let p = Precision::new(0.25, 0.5, 1.0);
         let q = dinput_precision(p);
         assert_eq!((q.p_i, q.p_f, q.p_o), (1.0, 0.5, 0.25));
+        let r = dfilter_precision(p);
+        assert_eq!((r.p_i, r.p_f, r.p_o), (0.25, 1.0, 0.5));
+    }
+
+    #[test]
+    fn pass_names_roundtrip() {
+        for pass in ConvPass::ALL {
+            assert_eq!(ConvPass::parse(pass.name()), Some(pass));
+        }
+        assert_eq!(ConvPass::parse("forward"), Some(ConvPass::Forward));
+        assert_eq!(ConvPass::parse("dweight"), None);
+    }
+
+    #[test]
+    fn pass_dims_match_oracles() {
+        let s = ConvShape::new(2, 3, 4, 5, 6, 3, 2, 1, 1);
+        let (xa, xb) = ConvPass::DFilter.operand_dims(&s);
+        let x = Tensor4::randn(xa, 1);
+        let g = Tensor4::randn(xb, 2);
+        assert_eq!(dfilter_naive(&x, &g, &s).dims, ConvPass::DFilter.out_dims(&s));
+        assert_pass_operands(ConvPass::DFilter, &x, &g, &s);
+
+        let (ga, gb) = ConvPass::DInput.operand_dims(&s);
+        let g2 = Tensor4::randn(ga, 3);
+        let w = Tensor4::randn(gb, 4);
+        let din = dinput_naive(&g2, &w, &s, s.in_w() as usize, s.in_h() as usize);
+        assert_eq!(din.dims, ConvPass::DInput.out_dims(&s));
+        assert_pass_operands(ConvPass::DInput, &g2, &w, &s);
+    }
+
+    #[test]
+    fn lp_shapes_carry_the_permuted_operand_sizes() {
+        let s = ConvShape::new(4, 3, 8, 10, 10, 5, 5, 2, 2);
+        // dFilter: LP "output" = |dF|, LP "filter" = |dOut|
+        let df = ConvPass::DFilter.lp_shape(&s);
+        assert_eq!(df.output_size(), s.filter_size());
+        assert_eq!(df.filter_size(), s.output_size());
+        // dInput: channel swap puts the contracted cO in the cI slot
+        let di = ConvPass::DInput.lp_shape(&s);
+        assert_eq!(di.c_i, s.c_o);
+        assert_eq!(di.c_o, s.c_i);
+        assert_eq!(ConvPass::Forward.lp_shape(&s), s);
     }
 }

@@ -1,41 +1,61 @@
 //! Kernel selection: a heuristic pre-filter plus a measure-once autotuner
 //! choosing between the naive loop nest, im2col+GEMM and the LP-tiled
-//! engine per [`ConvShape`].
+//! engine per `(`[`ConvPass`]`, `[`ConvShape`]`)` — the gradient passes
+//! probe naive vs tiled (no im2col lowering exists for them).
 //!
-//! Policy (see DESIGN.md §6):
+//! Policy (see DESIGN.md §6 and §8):
 //!
 //! * **heuristic** — tiny problems stay on the naive nest (tile/pack setup
 //!   cannot amortize); thin reductions (`cI·wF·hF` small) favor im2col
 //!   (the patch matrix is cheap and the GEMM is wide); everything else
 //!   goes tiled.
-//! * **measured** — `select` times each kernel once on a batch-clamped
-//!   probe of the shape and caches the winner. Probes above a MAC budget
-//!   skip measurement and trust the heuristic, so selection never costs
-//!   more than a couple of probe convolutions.
+//! * **measured** — `select_pass` times each applicable kernel once on a
+//!   batch-clamped probe of the shape and caches the winner. Probes above
+//!   a MAC budget skip measurement and trust the heuristic, so selection
+//!   never costs more than a couple of probe convolutions.
 //! * **persistence** — [`Autotuner::save`] writes the cached choices (and
 //!   the tiled-engine word traffic of each shape, which the counters
-//!   measure exactly equal to [`super::exec::expected_traffic`]) to a JSON
-//!   sidecar; [`Autotuner::warm_start`] reloads them on the next process
-//!   start so servers skip the probe convolutions entirely. A sidecar
-//!   written under a different memory budget or precision is ignored —
-//!   its choices answered a different planning question.
+//!   measure exactly equal to [`super::exec::expected_pass_traffic`]) to a
+//!   versioned JSON sidecar; [`Autotuner::warm_start`] reloads them on the
+//!   next process start so servers skip the probe convolutions entirely.
+//!   A sidecar written under a different memory budget or precision is
+//!   ignored — its choices answered a different planning question — and
+//!   the schema is forward-compatible across binaries (see
+//!   [`SIDECAR_VERSION`]).
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Precision, Tensor4};
+use crate::conv::{
+    conv7nl_naive, pass_operands, ConvPass, ConvShape, NetworkStage,
+    Precision, Tensor4,
+};
 use crate::err;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 use super::exec::{
-    conv_network_fused_counted, conv_tiled, expected_traffic, NetTrafficCounters,
+    conv_network_fused_counted, conv_pass_tiled, conv_tiled,
+    expected_pass_traffic, NetTrafficCounters,
 };
 use super::fuse::{FusePlan, FusedExec};
 use super::im2col::conv_im2col;
 use super::plan::{TilePlan, TilePlanCache};
+
+/// Sidecar schema version this binary writes. Readers accept any version
+/// up to this one (older sidecars default the fields that did not exist
+/// yet — entries without a `pass` are forward choices) and ignore files
+/// from the future wholesale; unknown keys and unknown enum values inside
+/// entries are skipped, not errors. Gradient-pass records live under
+/// their own `pass_entries` key — `entries` stays forward-only in the
+/// exact v1 schema — so the file is safe in *both* directions: a pass
+/// binary reads a PR 3/4 sidecar (no version, no pass fields), and a
+/// PR 3/4 binary reading a pass sidecar sees only the forward entries it
+/// understands instead of having its per-shape choices silently
+/// overwritten by same-shape gradient records.
+pub const SIDECAR_VERSION: u64 = 2;
 
 /// The three executable kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -124,7 +144,9 @@ pub struct Autotuner {
     /// probing and execution always use the same plan either way)
     pub precision: Precision,
     plans: TilePlanCache,
-    choices: Mutex<HashMap<ConvShape, Tuned>>,
+    /// per-(pass, shape) kernel choices — the forward entries are what the
+    /// pass-less [`Autotuner::select`] reads and writes
+    choices: Mutex<HashMap<(ConvPass, ConvShape), Tuned>>,
     /// per-network execution-mode choices, keyed on (name, batch, stage
     /// fingerprint) — the fingerprint guards against a renamed-in-place
     /// chain reusing a stale choice, the way `choices` keys on the full
@@ -172,12 +194,27 @@ impl Autotuner {
         }
     }
 
-    /// The (cached) tile plan this tuner would execute `s` with.
+    /// The (cached) forward tile plan this tuner would execute `s` with.
     pub fn plan(&self, s: &ConvShape) -> Arc<TilePlan> {
         self.plans.plan(s, self.precision, self.mem_words)
     }
 
-    /// Zero-cost selection from shape structure alone.
+    /// The (cached) tile plan this tuner would execute pass `pass` of `s`
+    /// with.
+    pub fn plan_pass(&self, pass: ConvPass, s: &ConvShape) -> Arc<TilePlan> {
+        self.plans.plan_pass(pass, s, self.precision, self.mem_words)
+    }
+
+    /// The kernels that can execute `pass`: the forward pass has an
+    /// im2col lowering, the gradient passes run naive-oracle vs tiled.
+    pub fn pass_kernels(pass: ConvPass) -> &'static [KernelKind] {
+        match pass {
+            ConvPass::Forward => &KernelKind::ALL,
+            _ => &[KernelKind::Naive, KernelKind::Tiled],
+        }
+    }
+
+    /// Zero-cost selection from shape structure alone (forward pass).
     pub fn heuristic(s: &ConvShape) -> KernelKind {
         if s.updates() < (1 << 16) {
             return KernelKind::Naive;
@@ -188,30 +225,60 @@ impl Autotuner {
         KernelKind::Tiled
     }
 
+    /// Zero-cost per-pass selection: forward keeps the three-way
+    /// heuristic; the gradient passes stay naive only when tiny (tile
+    /// setup cannot amortize) and go tiled otherwise.
+    pub fn heuristic_pass(pass: ConvPass, s: &ConvShape) -> KernelKind {
+        match pass {
+            ConvPass::Forward => Autotuner::heuristic(s),
+            _ => {
+                if s.updates() < (1 << 16) {
+                    KernelKind::Naive
+                } else {
+                    KernelKind::Tiled
+                }
+            }
+        }
+    }
+
     /// Measure-once selection: time all three kernels on a batch-clamped
     /// probe of `s`, cache and return the fastest. Falls back to
     /// [`Autotuner::heuristic`] when even the probe would be too large.
     pub fn select(&self, s: &ConvShape) -> KernelKind {
-        if let Some(t) = self.choices.lock().expect("choices poisoned").get(s) {
+        self.select_pass(ConvPass::Forward, s)
+    }
+
+    /// Measure-once per-pass selection: time each of
+    /// [`Autotuner::pass_kernels`] on a batch-clamped probe, cache keyed
+    /// `(pass, shape)` and return the fastest. Falls back to
+    /// [`Autotuner::heuristic_pass`] when even the probe would be too
+    /// large.
+    pub fn select_pass(&self, pass: ConvPass, s: &ConvShape) -> KernelKind {
+        if let Some(t) = self
+            .choices
+            .lock()
+            .expect("choices poisoned")
+            .get(&(pass, *s))
+        {
             return t.kernel;
         }
         let probe = s.with_batch(s.n.min(2));
         let kernel = if probe.updates() > MEASURE_BUDGET_MACS {
-            Autotuner::heuristic(s)
+            Autotuner::heuristic_pass(pass, s)
         } else {
-            self.measure(&probe)
+            self.measure_pass(pass, &probe)
         };
         // tiled traffic is only meaningful (and its plan only needed) when
         // the tiled engine won — the heuristic early-out stays LP-free
         let traffic_words = if kernel == KernelKind::Tiled {
-            expected_traffic(&self.plan(s)).total()
+            expected_pass_traffic(&self.plan_pass(pass, s)).total()
         } else {
             0
         };
         self.choices
             .lock()
             .expect("choices poisoned")
-            .insert(*s, Tuned { kernel, traffic_words });
+            .insert((pass, *s), Tuned { kernel, traffic_words });
         kernel
     }
 
@@ -367,27 +434,31 @@ impl Autotuner {
             .collect()
     }
 
-    /// Every cached `(shape, kernel, tiled traffic words)` triple, in a
-    /// deterministic order (for stable sidecar files and reports).
-    pub fn tuned(&self) -> Vec<(ConvShape, KernelKind, u64)> {
-        let mut out: Vec<(ConvShape, KernelKind, u64)> = self
+    /// Every cached `(pass, shape, kernel, tiled traffic words)` record,
+    /// in a deterministic order (for stable sidecar files and reports).
+    pub fn tuned(&self) -> Vec<(ConvPass, ConvShape, KernelKind, u64)> {
+        let mut out: Vec<(ConvPass, ConvShape, KernelKind, u64)> = self
             .choices
             .lock()
             .expect("choices poisoned")
             .iter()
-            .map(|(s, t)| (*s, t.kernel, t.traffic_words))
+            .map(|((pass, s), t)| (*pass, *s, t.kernel, t.traffic_words))
             .collect();
-        out.sort_by_key(|(s, _, _)| {
-            [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h]
+        out.sort_by_key(|(pass, s, _, _)| {
+            (
+                *pass as u8,
+                [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h],
+            )
         });
         out
     }
 
     /// Persist the cached kernel choices (and their tiled traffic) to a
     /// JSON sidecar, together with the `(M, precision)` configuration they
-    /// were selected under.
+    /// were selected under and the schema [`SIDECAR_VERSION`].
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut doc = std::collections::BTreeMap::new();
+        doc.insert("version".to_string(), Json::Num(SIDECAR_VERSION as f64));
         doc.insert("mem_words".to_string(), Json::Num(self.mem_words));
         doc.insert(
             "precision".to_string(),
@@ -397,26 +468,37 @@ impl Autotuner {
                 Json::Num(self.precision.p_o),
             ]),
         );
-        let entries: Vec<Json> = self
-            .tuned()
-            .into_iter()
-            .map(|(s, k, words)| {
-                let mut e = std::collections::BTreeMap::new();
-                e.insert(
-                    "shape".to_string(),
-                    Json::Arr(
-                        [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h]
-                            .iter()
-                            .map(|&d| Json::Num(d as f64))
-                            .collect(),
-                    ),
-                );
-                e.insert("kernel".to_string(), Json::Str(k.name().to_string()));
-                e.insert("traffic_words".to_string(), Json::Num(words as f64));
-                Json::Obj(e)
-            })
-            .collect();
+        let entry_json = |pass: ConvPass, s: ConvShape, k: KernelKind, words: u64| {
+            let mut e = std::collections::BTreeMap::new();
+            e.insert("pass".to_string(), Json::Str(pass.name().to_string()));
+            e.insert(
+                "shape".to_string(),
+                Json::Arr(
+                    [s.n, s.c_i, s.c_o, s.w_o, s.h_o, s.w_f, s.h_f, s.s_w, s.s_h]
+                        .iter()
+                        .map(|&d| Json::Num(d as f64))
+                        .collect(),
+                ),
+            );
+            e.insert("kernel".to_string(), Json::Str(k.name().to_string()));
+            e.insert("traffic_words".to_string(), Json::Num(words as f64));
+            Json::Obj(e)
+        };
+        // forward choices keep the v1 `entries` key (pre-pass binaries
+        // read it as-is); gradient-pass choices go under `pass_entries`,
+        // which those binaries ignore — otherwise a same-shape dfilter or
+        // dinput record would overwrite their forward choice
+        let mut entries = Vec::new();
+        let mut pass_entries = Vec::new();
+        for (pass, s, k, words) in self.tuned() {
+            if pass == ConvPass::Forward {
+                entries.push(entry_json(pass, s, k, words));
+            } else {
+                pass_entries.push(entry_json(pass, s, k, words));
+            }
+        }
         doc.insert("entries".to_string(), Json::Arr(entries));
+        doc.insert("pass_entries".to_string(), Json::Arr(pass_entries));
         let networks: Vec<Json> = self
             .tuned_networks_raw()
             .into_iter()
@@ -437,9 +519,12 @@ impl Autotuner {
 
     /// Warm-start the choice cache from a sidecar written by a previous
     /// process. Returns the number of choices loaded: `0` when the file
-    /// does not exist or was written under a different `(M, precision)`
-    /// configuration (stale sidecars are ignored, not trusted). Malformed
-    /// files are an error.
+    /// does not exist, was written under a different `(M, precision)`
+    /// configuration, or carries a schema version newer than this binary
+    /// (stale or future sidecars are ignored, not trusted). Structurally
+    /// malformed files are an error; entries whose `pass` or `kernel`
+    /// carries an *unknown value* (a record from a newer binary) are
+    /// skipped individually — forward compatibility, not corruption.
     pub fn warm_start(&self, path: impl AsRef<Path>) -> Result<usize> {
         let path = path.as_ref();
         if !path.exists() {
@@ -449,6 +534,11 @@ impl Autotuner {
             .with_context(|| format!("reading autotune sidecar {}", path.display()))?;
         let v = Json::parse(&text)
             .map_err(|e| err!("autotune sidecar {}: {e}", path.display()))?;
+        // pre-version sidecars (PR 3/4 binaries) carry no field: version 1
+        let version = v.get("version").as_u64().unwrap_or(1);
+        if version > SIDECAR_VERSION {
+            return Ok(0);
+        }
         if v.get("mem_words").as_f64() != Some(self.mem_words) {
             return Ok(0);
         }
@@ -461,9 +551,17 @@ impl Autotuner {
             return Ok(0);
         }
         // parse everything before touching the live cache: a malformed
-        // sidecar must be rejected whole, not half-applied
+        // sidecar must be rejected whole, not half-applied. `entries` is
+        // the forward-only v1 list; `pass_entries` holds the gradient
+        // passes (same record schema, absent in v1 files)
         let mut entries = Vec::new();
-        for e in v.get("entries").as_arr().unwrap_or(&[]) {
+        for e in v
+            .get("entries")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .chain(v.get("pass_entries").as_arr().unwrap_or(&[]))
+        {
             let dims = e
                 .get("shape")
                 .as_arr()
@@ -482,16 +580,26 @@ impl Autotuner {
             let shape = ConvShape::new(
                 d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7], d[8],
             );
-            let kernel = e
-                .get("kernel")
-                .as_str()
-                .and_then(KernelKind::parse)
-                .ok_or_else(|| err!("sidecar entry has an unknown kernel"))?;
+            // a missing 'pass' is a pre-pass (v1) forward entry; an
+            // unrecognized pass or kernel name is a record from a newer
+            // binary — skip it, the rest of the file is still good
+            let pass = match e.get("pass") {
+                Json::Null => ConvPass::Forward,
+                other => match other.as_str().and_then(ConvPass::parse) {
+                    Some(pass) => pass,
+                    None => continue,
+                },
+            };
+            let kernel = match e.get("kernel").as_str().map(KernelKind::parse) {
+                Some(Some(k)) => k,
+                Some(None) => continue,
+                None => return Err(err!("sidecar entry missing 'kernel'")),
+            };
             let traffic_words =
                 e.get("traffic_words").as_u64_strict().ok_or_else(|| {
                     err!("sidecar entry has a malformed 'traffic_words'")
                 })?;
-            entries.push((shape, Tuned { kernel, traffic_words }));
+            entries.push(((pass, shape), Tuned { kernel, traffic_words }));
         }
         let mut networks = Vec::new();
         for e in v.get("networks").as_arr().unwrap_or(&[]) {
@@ -513,20 +621,22 @@ impl Autotuner {
                          fingerprint"
                     )
                 })?;
-            let kernel = e
-                .get("kernel")
-                .as_str()
-                .and_then(NetKernelKind::parse)
-                .ok_or_else(|| {
-                    err!("sidecar network entry has an unknown kernel")
-                })?;
+            // same forward-compat rule as entries: an unknown network mode
+            // came from a newer binary and is skipped, not fatal
+            let kernel = match e.get("kernel").as_str().map(NetKernelKind::parse) {
+                Some(Some(k)) => k,
+                Some(None) => continue,
+                None => {
+                    return Err(err!("sidecar network entry missing 'kernel'"))
+                }
+            };
             networks.push(((name, batch, fp), kernel));
         }
         let loaded = entries.len() + networks.len();
         {
             let mut choices = self.choices.lock().expect("choices poisoned");
-            for (shape, tuned) in entries {
-                choices.insert(shape, tuned);
+            for (key, tuned) in entries {
+                choices.insert(key, tuned);
             }
         }
         {
@@ -538,16 +648,16 @@ impl Autotuner {
         Ok(loaded)
     }
 
-    fn measure(&self, s: &ConvShape) -> KernelKind {
-        let (x, w) = crate::conv::paper_operands(s, 1);
+    fn measure_pass(&self, pass: ConvPass, s: &ConvShape) -> KernelKind {
+        let (a, b) = pass_operands(pass, s, 1);
         // solve (and cache) the blocking LP outside the timed region: the
         // probe compares steady-state kernels, and the plan is a one-time
         // per-shape cost every later tiled run reuses
-        let _ = self.plan(s);
+        let _ = self.plan_pass(pass, s);
         let mut best = (KernelKind::Naive, f64::INFINITY);
-        for k in KernelKind::ALL {
+        for &k in Autotuner::pass_kernels(pass) {
             let t0 = Instant::now();
-            std::hint::black_box(self.run_kernel(k, &x, &w, s));
+            std::hint::black_box(self.run_pass_kernel(pass, k, &a, &b, s));
             let secs = t0.elapsed().as_secs_f64();
             if secs < best.1 {
                 best = (k, secs);
@@ -556,7 +666,7 @@ impl Autotuner {
         best.0
     }
 
-    /// Execute `s` with an explicit kernel.
+    /// Execute the forward pass of `s` with an explicit kernel.
     pub fn run_kernel(
         &self,
         k: KernelKind,
@@ -571,7 +681,27 @@ impl Autotuner {
         }
     }
 
-    /// Execute `s` with the autotuned kernel.
+    /// Execute one pass of `s` with an explicit kernel. No im2col
+    /// lowering exists for the gradient passes ([`Autotuner::pass_kernels`]
+    /// never offers it there); asking for it anyway runs the naive oracle.
+    pub fn run_pass_kernel(
+        &self,
+        pass: ConvPass,
+        k: KernelKind,
+        a: &Tensor4,
+        b: &Tensor4,
+        s: &ConvShape,
+    ) -> Tensor4 {
+        match (pass, k) {
+            (ConvPass::Forward, _) => self.run_kernel(k, a, b, s),
+            (_, KernelKind::Tiled) => {
+                conv_pass_tiled(pass, a, b, &self.plan_pass(pass, s))
+            }
+            _ => pass.naive_oracle(a, b, s),
+        }
+    }
+
+    /// Execute the forward pass of `s` with the autotuned kernel.
     pub fn run(&self, x: &Tensor4, w: &Tensor4, s: &ConvShape) -> Tensor4 {
         let k = self.select(s);
         self.run_kernel(k, x, w, s)
@@ -625,7 +755,7 @@ mod tests {
         let ka = tuner.select(&a);
         let kb = tuner.select(&b);
         assert_eq!(tuner.tuned().len(), 2);
-        for (_, k, words) in tuner.tuned() {
+        for (_, _, k, words) in tuner.tuned() {
             if k == KernelKind::Tiled {
                 assert!(words > 0, "tiled choices record their traffic");
             } else {
@@ -667,6 +797,112 @@ mod tests {
         assert!(tuner.warm_start(&path).is_err());
         // a rejected sidecar must not have half-applied: cache unchanged
         assert_eq!(tuner.tuned().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn per_pass_selection_caches_independently_and_matches_oracles() {
+        let tuner = Autotuner::new(4096.0);
+        let s = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let kf = tuner.select_pass(ConvPass::Forward, &s);
+        let kd = tuner.select_pass(ConvPass::DFilter, &s);
+        let ki = tuner.select_pass(ConvPass::DInput, &s);
+        // cached per (pass, shape): three independent records
+        assert_eq!(tuner.tuned().len(), 3);
+        assert_eq!(tuner.select_pass(ConvPass::DFilter, &s), kd);
+        assert_eq!(tuner.select(&s), kf);
+        // gradient probes never pick im2col (no such lowering)
+        assert_ne!(kd, KernelKind::Im2col);
+        assert_ne!(ki, KernelKind::Im2col);
+        // tuned execution agrees with the oracles (bitwise when tiled won)
+        for pass in [ConvPass::DFilter, ConvPass::DInput] {
+            let (a, b) = pass_operands(pass, &s, 3);
+            let k = tuner.select_pass(pass, &s);
+            let got = tuner.run_pass_kernel(pass, k, &a, &b, &s);
+            let want = pass.naive_oracle(&a, &b, &s);
+            assert_eq!(got.max_abs_diff(&want), 0.0, "{}", pass.name());
+        }
+    }
+
+    #[test]
+    fn sidecar_is_pass_keyed_and_forward_compatible() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "convbound_autotune_pass_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+
+        let tuner = Autotuner::new(4096.0);
+        let s = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let kf = tuner.select_pass(ConvPass::Forward, &s);
+        let kd = tuner.select_pass(ConvPass::DFilter, &s);
+        let ki = tuner.select_pass(ConvPass::DInput, &s);
+        tuner.save(&path).expect("save sidecar");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"version\":2"), "{text}");
+        assert!(text.contains("\"pass\":\"dfilter\""), "{text}");
+        // `entries` must stay forward-only (the exact v1 schema a PR 3/4
+        // binary reads): gradient records live under `pass_entries`, so an
+        // old binary can never have its per-shape forward choice silently
+        // overwritten by a same-shape dfilter/dinput record
+        let doc = Json::parse(&text).unwrap();
+        let fwd_entries = doc.get("entries").as_arr().unwrap();
+        assert_eq!(fwd_entries.len(), 1, "{text}");
+        assert_eq!(fwd_entries[0].get("pass").as_str(), Some("fwd"));
+        assert_eq!(doc.get("pass_entries").as_arr().unwrap().len(), 2);
+
+        // pass-keyed roundtrip
+        let warm = Autotuner::new(4096.0);
+        assert_eq!(warm.warm_start(&path).expect("warm start"), 3);
+        assert_eq!(warm.tuned(), tuner.tuned());
+        assert_eq!(warm.select_pass(ConvPass::Forward, &s), kf);
+        assert_eq!(warm.select_pass(ConvPass::DFilter, &s), kd);
+        assert_eq!(warm.select_pass(ConvPass::DInput, &s), ki);
+
+        // a v1 sidecar (PR 3/4 binary: no version, no pass) loads as
+        // forward choices, and unknown keys anywhere are ignored
+        std::fs::write(
+            &path,
+            r#"{"mem_words":4096,"precision":[1,1,1],"surprise":true,
+               "entries":[{"shape":[2,3,4,6,6,3,3,1,1],"kernel":"tiled",
+                           "traffic_words":7,"note":"from the past"}]}"#,
+        )
+        .unwrap();
+        let v1 = Autotuner::new(4096.0);
+        assert_eq!(v1.warm_start(&path).expect("v1 loads"), 1);
+        assert_eq!(v1.select_pass(ConvPass::Forward, &s), KernelKind::Tiled);
+        assert_eq!(v1.tuned()[0].0, ConvPass::Forward);
+
+        // records from a NEWER binary: an unknown pass or kernel skips
+        // that entry only; a whole-file version from the future is
+        // ignored wholesale. Either way: no error, no half-trusted cache.
+        std::fs::write(
+            &path,
+            r#"{"version":2,"mem_words":4096,"precision":[1,1,1],
+               "entries":[
+                 {"pass":"dweight","shape":[2,3,4,6,6,3,3,1,1],
+                  "kernel":"tiled","traffic_words":1},
+                 {"pass":"dfilter","shape":[2,3,4,6,6,3,3,1,1],
+                  "kernel":"winograd","traffic_words":1},
+                 {"pass":"dfilter","shape":[2,3,4,6,6,3,3,1,1],
+                  "kernel":"naive","traffic_words":0}]}"#,
+        )
+        .unwrap();
+        let fresh = Autotuner::new(4096.0);
+        assert_eq!(fresh.warm_start(&path).expect("skips unknowns"), 1);
+        assert_eq!(fresh.select_pass(ConvPass::DFilter, &s), KernelKind::Naive);
+        std::fs::write(
+            &path,
+            r#"{"version":99,"mem_words":4096,"precision":[1,1,1],
+               "entries":[{"pass":"fwd","shape":[2,3,4,6,6,3,3,1,1],
+                           "kernel":"tiled","traffic_words":1}]}"#,
+        )
+        .unwrap();
+        let future = Autotuner::new(4096.0);
+        assert_eq!(future.warm_start(&path).expect("future ignored"), 0);
+        assert!(future.tuned().is_empty());
         let _ = std::fs::remove_file(&path);
     }
 
@@ -723,12 +959,21 @@ mod tests {
         let other = Autotuner::new(4096.0);
         assert_eq!(other.warm_start(&path).expect("stale ok"), 0);
         assert!(other.tuned_networks().is_empty());
-        // an unknown network mode (or a missing stage fingerprint) is
-        // rejected, not coerced
+        // an unknown network mode is a record from a newer binary: the
+        // entry is skipped (forward compat), while a missing stage
+        // fingerprint on a known mode is still structural corruption
         std::fs::write(
             &path,
             r#"{"mem_words":65536,"precision":[1,1,1],"entries":[],
-               "networks":[{"name":"x","batch":2,"kernel":"winograd"}]}"#,
+               "networks":[{"name":"x","batch":2,"stages":"0f",
+                            "kernel":"winograd"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(warm.warm_start(&path).expect("unknown mode skipped"), 0);
+        std::fs::write(
+            &path,
+            r#"{"mem_words":65536,"precision":[1,1,1],"entries":[],
+               "networks":[{"name":"x","batch":2,"kernel":"materialized"}]}"#,
         )
         .unwrap();
         assert!(warm.warm_start(&path).is_err());

@@ -38,7 +38,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Tensor4};
+use crate::conv::{
+    assert_pass_operands, conv7nl_naive, ConvPass, ConvShape, NetworkStage,
+    Tensor4,
+};
 use crate::util::threadpool::ThreadPool;
 
 use super::fuse::{
@@ -318,6 +321,335 @@ pub fn expected_traffic(plan: &TilePlan) -> Traffic {
         t.output_words += ot.n.len * ot.co.len * ot.wo.len * ot.ho.len;
     }
     t
+}
+
+// ---------------- backward passes (dFilter / dInput) ----------------
+//
+// The gradient convolutions run the same machinery — LP-derived
+// [`TilePlan`], `tiles.rs` enumeration, packed per-step working sets,
+// resident output tiles, exact traffic counters — instantiated for the
+// pass's permuted dim roles (`TilePlan::for_pass`).
+//
+// **Backward accumulation-order contract.** Tiled gradients are *bitwise*
+// identical to the `conv/training.rs` naive oracles, for every plan:
+//
+// * the only blocked reduction dim is the contracted channel (N for
+//   dFilter, cO for dInput), and its blocks are swept in ascending order
+//   — so per output element the reduction visits the contracted channel
+//   exactly as the oracle's flat nest does, regardless of the block size;
+// * within one reduction step the pass's remaining reduction loops run in
+//   full, in the oracle's own order — dFilter forms one scalar
+//   accumulator per (element, n) over ascending (wO, hO) and adds it once
+//   (the oracle's `acc` structure), dInput adds directly per ascending
+//   (i6, i7) tap with the oracle's zero-tap skip;
+// * every term is the same single mul-add on the same operand values.
+//
+// Blocking the swept loops would interleave their term order across tiles
+// and break bitwise equality — which is why `TilePlan::for_pass` pins
+// those blocks to the full range (the backward analogue of the fused
+// forward contract in `gemm.rs`).
+
+/// Execute every reduction step of one resident dFilter output tile;
+/// returns the accumulated `[bcI][bcO][e6][e7]` buffer.
+fn run_dfilter_tile(
+    x: &Tensor4,
+    g: &Tensor4,
+    plan: &TilePlan,
+    ot: &OutTile,
+    red: &[RedTile],
+    counters: &TrafficCounters,
+) -> Vec<f32> {
+    let s = &plan.shape;
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let bci = ot.n.len as usize;
+    let bco = ot.co.len as usize;
+    let e6 = ot.wo.len as usize;
+    let e7 = ot.ho.len as usize;
+    let mut out = vec![0.0f32; bci * bco * e6 * e7];
+    let mut xin: Vec<f32> = Vec::new();
+    let mut gbuf: Vec<f32> = Vec::new();
+    for rt in red {
+        let (spw, sph) = pack::pack_dfilter_input(x, s, ot, rt, &mut xin);
+        pack::pack_dfilter_gout(g, s, ot, rt, &mut gbuf);
+        counters.add_input(xin.len() as u64);
+        counters.add_filter(gbuf.len() as u64);
+        let bn = rt.ci.len as usize;
+        let mut k = 0;
+        for ci in 0..bci {
+            for co in 0..bco {
+                for a in 0..e6 {
+                    for b in 0..e7 {
+                        let mut elem = out[k];
+                        for n in 0..bn {
+                            let xpl = (n * bci + ci) * spw;
+                            let gpl = (n * bco + co) * w_o;
+                            // one scalar accumulator per (element, n),
+                            // added once — dfilter_naive's structure
+                            let mut acc = 0.0f32;
+                            for wo in 0..w_o {
+                                let xrow = (xpl + a + sw * wo) * sph + b;
+                                let grow = (gpl + wo) * h_o;
+                                for ho in 0..h_o {
+                                    acc += xin[xrow + sh * ho] * gbuf[grow + ho];
+                                }
+                            }
+                            elem += acc;
+                        }
+                        out[k] = elem;
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+    counters.add_output(out.len() as u64);
+    out
+}
+
+/// Execute every reduction step of one resident dInput output tile;
+/// returns the accumulated `[bn][bcI][ex][ey]` buffer.
+fn run_dinput_tile(
+    g: &Tensor4,
+    w: &Tensor4,
+    plan: &TilePlan,
+    ot: &OutTile,
+    red: &[RedTile],
+    counters: &TrafficCounters,
+) -> Vec<f32> {
+    let s = &plan.shape;
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let bn = ot.n.len as usize;
+    let bci = ot.co.len as usize;
+    let ex = ot.wo.len as usize;
+    let ey = ot.ho.len as usize;
+    let mut out = vec![0.0f32; bn * bci * ex * ey];
+    let mut gbuf: Vec<f32> = Vec::new();
+    let mut fbuf: Vec<f32> = Vec::new();
+    // valid (tap, output coordinate) pairs per tile column/row — identical
+    // across reduction steps, computed once; taps ascend in each list, so
+    // the per-element accumulation runs in the oracle's (i6, i7) order
+    let pairs = |x0: u64, extent: usize, stride: u64, filt: usize, range: u64| {
+        (0..extent)
+            .map(|dx| {
+                let xcol = x0 + dx as u64;
+                (0..filt)
+                    .filter_map(|tap| {
+                        let t = xcol.checked_sub(tap as u64)?;
+                        if t % stride != 0 || t / stride >= range {
+                            return None;
+                        }
+                        Some((tap, (t / stride) as usize))
+                    })
+                    .collect::<Vec<(usize, usize)>>()
+            })
+            .collect::<Vec<_>>()
+    };
+    let wpairs = pairs(ot.wo.start, ex, s.s_w, w_f, s.w_o);
+    let hpairs = pairs(ot.ho.start, ey, s.s_h, h_f, s.h_o);
+    for rt in red {
+        let (wo_lo, wo_len, ho_lo, ho_len) =
+            pack::pack_dinput_gout(g, s, ot, rt, &mut gbuf);
+        pack::pack_dinput_filter(w, s, ot, rt, &mut fbuf);
+        counters.add_input(gbuf.len() as u64);
+        counters.add_filter(fbuf.len() as u64);
+        let bco = rt.ci.len as usize;
+        let mut k = 0;
+        for n in 0..bn {
+            for ci in 0..bci {
+                for dx in 0..ex {
+                    let wp = &wpairs[dx];
+                    for dy in 0..ey {
+                        let hp = &hpairs[dy];
+                        let mut elem = out[k];
+                        for co in 0..bco {
+                            let fpl = (ci * bco + co) * w_f;
+                            let gpl = (n * bco + co) * wo_len;
+                            for &(i6, wo) in wp {
+                                let frow = (fpl + i6) * h_f;
+                                let grow = (gpl + (wo - wo_lo)) * ho_len;
+                                for &(i7, ho) in hp {
+                                    let f = fbuf[frow + i7];
+                                    if f == 0.0 {
+                                        // the oracle's zero-tap skip
+                                        continue;
+                                    }
+                                    elem += gbuf[grow + (ho - ho_lo)] * f;
+                                }
+                            }
+                        }
+                        out[k] = elem;
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+    counters.add_output(out.len() as u64);
+    out
+}
+
+/// Dispatch one output tile of a backward pass.
+fn run_pass_out_tile(
+    pass: ConvPass,
+    a: &Tensor4,
+    b: &Tensor4,
+    plan: &TilePlan,
+    ot: &OutTile,
+    red: &[RedTile],
+    counters: &TrafficCounters,
+) -> Vec<f32> {
+    match pass {
+        ConvPass::DFilter => run_dfilter_tile(a, b, plan, ot, red, counters),
+        ConvPass::DInput => run_dinput_tile(a, b, plan, ot, red, counters),
+        ConvPass::Forward => unreachable!("forward runs run_out_tile"),
+    }
+}
+
+/// Write one finished backward output tile (natural `[d0][d1][d2][d3]`
+/// layout) into the pass's output tensor.
+fn scatter_pass(out: &mut Tensor4, ot: &OutTile, buf: &[f32]) {
+    let b0 = ot.n.len as usize;
+    let b1 = ot.co.len as usize;
+    let b2 = ot.wo.len as usize;
+    let b3 = ot.ho.len as usize;
+    let mut k = 0;
+    for i0 in 0..b0 {
+        for i1 in 0..b1 {
+            for i2 in 0..b2 {
+                let dst = out.idx(
+                    ot.n.start as usize + i0,
+                    ot.co.start as usize + i1,
+                    ot.wo.start as usize + i2,
+                    ot.ho.start as usize,
+                );
+                out.data[dst..dst + b3].copy_from_slice(&buf[k..k + b3]);
+                k += b3;
+            }
+        }
+    }
+}
+
+/// Serial pass-generic tiled convolution with traffic accounting: the
+/// forward pass runs [`conv_tiled_counted`] unchanged, the gradient passes
+/// run the LP-blocked backward sweeps above — bitwise identical to
+/// [`crate::conv::dfilter_naive`] / [`crate::conv::dinput_naive`] (the
+/// backward accumulation-order contract), with measured traffic equal to
+/// [`expected_pass_traffic`] exactly.
+pub fn conv_pass_tiled_counted(
+    pass: ConvPass,
+    a: &Tensor4,
+    b: &Tensor4,
+    plan: &TilePlan,
+    counters: &TrafficCounters,
+) -> Tensor4 {
+    assert_eq!(plan.pass, pass, "plan solved for a different pass");
+    if pass == ConvPass::Forward {
+        return conv_tiled_counted(a, b, plan, counters);
+    }
+    let s = &plan.shape;
+    assert_pass_operands(pass, a, b, s);
+    if s.updates() == 0 {
+        return Tensor4::zeros(pass.out_dims(s));
+    }
+    let outs = tiles::output_tiles(plan);
+    let red = tiles::reduction_tiles(plan);
+    let mut out = Tensor4::zeros(pass.out_dims(s));
+    for ot in &outs {
+        let buf = run_pass_out_tile(pass, a, b, plan, ot, &red, counters);
+        scatter_pass(&mut out, ot, &buf);
+    }
+    out
+}
+
+/// Serial pass-generic tiled convolution (counters discarded).
+pub fn conv_pass_tiled(pass: ConvPass, a: &Tensor4, b: &Tensor4, plan: &TilePlan) -> Tensor4 {
+    conv_pass_tiled_counted(pass, a, b, plan, &TrafficCounters::new())
+}
+
+/// Pass-generic tiled convolution with output tiles fanned out over a
+/// [`ThreadPool`]. Distinct output tiles of every pass write disjoint
+/// output regions, and each tile reduces serially in the fixed order, so
+/// the parallel result is bitwise identical to the serial one.
+pub fn conv_pass_tiled_parallel(
+    pass: ConvPass,
+    a: &Arc<Tensor4>,
+    b: &Arc<Tensor4>,
+    plan: &Arc<TilePlan>,
+    pool: &ThreadPool,
+    counters: &Arc<TrafficCounters>,
+) -> Tensor4 {
+    assert_eq!(plan.pass, pass, "plan solved for a different pass");
+    if pass == ConvPass::Forward {
+        return conv_tiled_parallel(a, b, plan, pool, counters);
+    }
+    let s = plan.shape;
+    assert_pass_operands(pass, a, b, &s);
+    if s.updates() == 0 {
+        return Tensor4::zeros(pass.out_dims(&s));
+    }
+    let outs = tiles::output_tiles(plan);
+    let red = Arc::new(tiles::reduction_tiles(plan));
+    let (a2, b2, p2) = (Arc::clone(a), Arc::clone(b), Arc::clone(plan));
+    let (r2, c2) = (Arc::clone(&red), Arc::clone(counters));
+    let bufs = pool.map(outs.clone(), move |ot| {
+        run_pass_out_tile(pass, &a2, &b2, &p2, &ot, &r2, &c2)
+    });
+    let mut out = Tensor4::zeros(pass.out_dims(&s));
+    for (ot, buf) in outs.iter().zip(&bufs) {
+        scatter_pass(&mut out, ot, buf);
+    }
+    out
+}
+
+/// The traffic [`conv_pass_tiled_counted`] *will* charge for `plan`,
+/// computed analytically from the pass's tile grid — the per-pass
+/// extension of [`expected_traffic`] (to which the forward case
+/// delegates). Shares the span helpers with the pack loops, so measured
+/// and analytic totals agree word for word.
+pub fn expected_pass_traffic(plan: &TilePlan) -> Traffic {
+    let s = &plan.shape;
+    match plan.pass {
+        ConvPass::Forward => expected_traffic(plan),
+        ConvPass::DFilter => {
+            if s.updates() == 0 {
+                return Traffic::default();
+            }
+            let mut t = Traffic::default();
+            let outs = tiles::output_tiles(plan);
+            let red = tiles::reduction_tiles(plan);
+            for ot in &outs {
+                let spw = pack::dfilter_span(ot.wo.len, s.s_w, s.w_o);
+                let sph = pack::dfilter_span(ot.ho.len, s.s_h, s.h_o);
+                for rt in &red {
+                    t.input_words += rt.ci.len * ot.n.len * spw * sph;
+                    t.filter_words += rt.ci.len * ot.co.len * s.w_o * s.h_o;
+                }
+                t.output_words += ot.n.len * ot.co.len * ot.wo.len * ot.ho.len;
+            }
+            t
+        }
+        ConvPass::DInput => {
+            if s.updates() == 0 {
+                return Traffic::default();
+            }
+            let mut t = Traffic::default();
+            let outs = tiles::output_tiles(plan);
+            let red = tiles::reduction_tiles(plan);
+            for ot in &outs {
+                let (_, wo_len) =
+                    pack::dinput_span(ot.wo.start, ot.wo.len, s.s_w, s.w_f, s.w_o);
+                let (_, ho_len) =
+                    pack::dinput_span(ot.ho.start, ot.ho.len, s.s_h, s.h_f, s.h_o);
+                for rt in &red {
+                    t.input_words += ot.n.len * rt.ci.len * wo_len * ho_len;
+                    t.filter_words += ot.co.len * rt.ci.len * s.w_f * s.h_f;
+                }
+                t.output_words += ot.n.len * ot.co.len * ot.wo.len * ot.ho.len;
+            }
+            t
+        }
+    }
 }
 
 // ---------------- network pipelines ----------------
@@ -1003,6 +1335,90 @@ mod tests {
         let out2 = conv_tiled(&x2, &w2, &plan2);
         assert_eq!(out2.dims, [2, 4, 5, 5]);
         assert!(out2.data.iter().all(|&v| v == 0.0));
+    }
+
+    /// Tiled gradients are bitwise identical to the naive oracles — the
+    /// backward accumulation-order contract — with exact traffic, on
+    /// strided, non-square, ragged shapes.
+    #[test]
+    fn backward_passes_bitwise_match_oracles() {
+        for (s, m) in [
+            (ConvShape::new(2, 3, 4, 5, 5, 3, 3, 1, 1), 1024.0),
+            (ConvShape::new(2, 3, 5, 7, 5, 5, 4, 2, 3), 512.0),
+            (ConvShape::new(3, 4, 6, 9, 11, 3, 2, 1, 1), 96.0),
+            (ConvShape::new(1, 2, 3, 4, 4, 3, 3, 2, 2), 128.0),
+        ] {
+            for pass in [ConvPass::DFilter, ConvPass::DInput] {
+                let plan = TilePlan::for_pass(pass, &s, Precision::uniform(), m);
+                let (a, b) = crate::conv::pass_operands(pass, &s, 7);
+                let ctr = TrafficCounters::new();
+                let got = conv_pass_tiled_counted(pass, &a, &b, &plan, &ctr);
+                let want = pass.naive_oracle(&a, &b, &s);
+                assert_eq!(got.dims, want.dims, "{s} {}", pass.name());
+                assert_eq!(
+                    got.max_abs_diff(&want),
+                    0.0,
+                    "{s} {}: tiled diverged from the oracle",
+                    pass.name()
+                );
+                assert_eq!(
+                    ctr.snapshot(),
+                    expected_pass_traffic(&plan),
+                    "{s} {}: traffic",
+                    pass.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_parallel_is_bitwise_identical_to_serial() {
+        let s = ConvShape::new(3, 4, 8, 10, 9, 3, 3, 1, 1);
+        let pool = ThreadPool::new(4);
+        for pass in [ConvPass::DFilter, ConvPass::DInput] {
+            let plan =
+                Arc::new(TilePlan::for_pass(pass, &s, Precision::uniform(), 512.0));
+            let (a, b) = crate::conv::pass_operands(pass, &s, 23);
+            let (a, b) = (Arc::new(a), Arc::new(b));
+            let serial = conv_pass_tiled(pass, &a, &b, &plan);
+            let ctr = Arc::new(TrafficCounters::new());
+            let par = conv_pass_tiled_parallel(pass, &a, &b, &plan, &pool, &ctr);
+            assert_eq!(par.max_abs_diff(&serial), 0.0, "{}", pass.name());
+            assert_eq!(ctr.snapshot(), expected_pass_traffic(&plan), "{}", pass.name());
+        }
+    }
+
+    #[test]
+    fn degenerate_backward_shapes_return_empty_or_zero_gradients() {
+        // zero batch: dFilter is the full-size zero gradient, dInput empty
+        let s = ConvShape::new(0, 3, 4, 5, 5, 3, 3, 1, 1);
+        let (a, b) = crate::conv::pass_operands(ConvPass::DFilter, &s, 1);
+        let plan = TilePlan::for_pass(ConvPass::DFilter, &s, Precision::uniform(), 1024.0);
+        let out = conv_pass_tiled(ConvPass::DFilter, &a, &b, &plan);
+        assert_eq!(out.dims, [3, 4, 3, 3]);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        assert_eq!(expected_pass_traffic(&plan), Traffic::default());
+
+        // zero output channels: dInput is the full-size zero gradient
+        let s2 = ConvShape::new(2, 3, 0, 5, 5, 3, 3, 1, 1);
+        let (a2, b2) = crate::conv::pass_operands(ConvPass::DInput, &s2, 2);
+        let plan2 = TilePlan::for_pass(ConvPass::DInput, &s2, Precision::uniform(), 1024.0);
+        let out2 = conv_pass_tiled(ConvPass::DInput, &a2, &b2, &plan2);
+        assert_eq!(out2.dims, [2, 3, 8, 8]);
+        assert!(out2.data.iter().all(|&v| v == 0.0));
+    }
+
+    /// The forward pass through the pass-generic entry point is the
+    /// existing engine, bit for bit.
+    #[test]
+    fn forward_pass_entry_is_the_existing_engine() {
+        let s = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let (x, w) = crate::conv::paper_operands(&s, 9);
+        let plan = TilePlan::for_pass(ConvPass::Forward, &s, Precision::uniform(), 256.0);
+        let via_pass = conv_pass_tiled(ConvPass::Forward, &x, &w, &plan);
+        let direct = conv_tiled(&x, &w, &plan);
+        assert_eq!(via_pass.max_abs_diff(&direct), 0.0);
+        assert_eq!(expected_pass_traffic(&plan), expected_traffic(&plan));
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! The tiled CPU execution engine: the subsystem that actually *runs* the
-//! §3.2 LP blockings the rest of the crate only reasons about.
+//! §3.2 LP blockings the rest of the crate only reasons about — for all
+//! three convolution passes of a training step ([`ConvPass`]: forward,
+//! dFilter, dInput), each mapped onto the nine blocked LP dims.
 //!
-//! * [`plan`] — [`TilePlan`]: LP blocking → balanced integral loop bounds,
-//!   plus the memoizing [`TilePlanCache`].
+//! * [`plan`] — [`TilePlan`]: LP blocking → balanced integral loop bounds
+//!   per pass ([`TilePlan::for_pass`]), plus the memoizing
+//!   [`TilePlanCache`] keyed by pass.
 //! * [`tiles`] — enumeration of output tiles (disjoint output regions, the
 //!   unit of parallelism) and reduction tiles (accumulated while an output
 //!   tile stays resident), including the split-filter `q/r` loops.
@@ -42,11 +45,14 @@ mod pack;
 pub mod plan;
 pub mod tiles;
 
+pub use crate::conv::ConvPass;
 pub use autotune::{Autotuner, KernelKind, NetKernelKind};
 pub use exec::{
     conv_network_fused, conv_network_fused_counted, conv_network_staged,
+    conv_pass_tiled, conv_pass_tiled_counted, conv_pass_tiled_parallel,
     conv_tiled, conv_tiled_counted, conv_tiled_parallel, default_workers,
-    expected_traffic, NetTrafficCounters, Traffic, TrafficCounters,
+    expected_pass_traffic, expected_traffic, NetTrafficCounters, Traffic,
+    TrafficCounters,
 };
 pub use fuse::{halo_extent, naive_network, FuseGroup, FusePlan, FusedExec};
 pub use gemm::{axpy, axpy_scalar};

@@ -176,6 +176,178 @@ pub(crate) fn pack_fused_stage(
     dims
 }
 
+// ---------------- backward-pass packing ----------------
+//
+// The gradient passes pack per (output tile × reduction step) exactly like
+// the forward engine, with layouts sized to the pass's LP footprints. Both
+// sweep the pass's "filter" loops in full per step (see
+// `TilePlan::for_pass`), so the only blocked reduction dim is the
+// contracted channel — N for dFilter, cO for dInput. The span helpers
+// below are shared by the pack loops and `exec::expected_pass_traffic`,
+// which is what keeps measured == analytic traffic exact per pass.
+
+/// Dense image-column span one dFilter tile reads: gradient columns
+/// `[i6₀, i6₀ + e)` correlated against every output column touch image
+/// columns `[i6₀, i6₀ + e + σ·(out − 1))`.
+pub(crate) fn dfilter_span(e: u64, stride: u64, out: u64) -> u64 {
+    e + stride * (out.max(1) - 1)
+}
+
+/// Half-open output-coordinate span `(lo, len)` feeding dInput columns
+/// `[x0, x0 + ex)`: the `wo` with `σ·wo + i6 ∈ [x0, x0 + ex)` for some
+/// tap `i6 ∈ [0, filt)`. Empty for the trailing paper-convention padding
+/// rows no gradient reaches.
+pub(crate) fn dinput_span(x0: u64, ex: u64, stride: u64, filt: u64, out: u64) -> (u64, u64) {
+    if out == 0 || ex == 0 {
+        return (0, 0);
+    }
+    let lo = if x0 + 1 > filt {
+        crate::util::ceil_div(x0 + 1 - filt, stride)
+    } else {
+        0
+    };
+    let hi = ((x0 + ex - 1) / stride).min(out - 1);
+    if lo > hi {
+        (0, 0)
+    } else {
+        (lo, hi - lo + 1)
+    }
+}
+
+/// Pack the image working set of one dFilter tile and reduction step:
+/// `[bn][bcI][spanW][spanH]` — `bn` the contracted batch block, `bcI` the
+/// tile's cI block, spans per [`dfilter_span`]. Rows are copied whole (h
+/// is the contiguous axis). Returns `(spanW, spanH)`.
+pub(crate) fn pack_dfilter_input(
+    x: &Tensor4,
+    s: &ConvShape,
+    ot: &OutTile,
+    rt: &RedTile,
+    buf: &mut Vec<f32>,
+) -> (usize, usize) {
+    let bn = rt.ci.len as usize;
+    let n0 = rt.ci.start as usize;
+    let bci = ot.n.len as usize;
+    let ci0 = ot.n.start as usize;
+    let spw = dfilter_span(ot.wo.len, s.s_w, s.w_o) as usize;
+    let sph = dfilter_span(ot.ho.len, s.s_h, s.h_o) as usize;
+    let (col0, row0) = (ot.wo.start as usize, ot.ho.start as usize);
+    let len = bn * bci * spw * sph;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+    let mut k = 0;
+    for n in 0..bn {
+        for ci in 0..bci {
+            for c in 0..spw {
+                let src = x.idx(n0 + n, ci0 + ci, col0 + c, row0);
+                buf[k..k + sph].copy_from_slice(&x.data[src..src + sph]);
+                k += sph;
+            }
+        }
+    }
+    (spw, sph)
+}
+
+/// Pack the output-gradient working set of one dFilter tile and reduction
+/// step: `[bn][bcO][wO][hO]` — the pass's "filter" operand, full spatial
+/// extent per step (whole planes are contiguous in `g`).
+pub(crate) fn pack_dfilter_gout(
+    g: &Tensor4,
+    s: &ConvShape,
+    ot: &OutTile,
+    rt: &RedTile,
+    buf: &mut Vec<f32>,
+) {
+    let bn = rt.ci.len as usize;
+    let n0 = rt.ci.start as usize;
+    let bco = ot.co.len as usize;
+    let co0 = ot.co.start as usize;
+    let plane = (s.w_o * s.h_o) as usize;
+    let len = bn * bco * plane;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+    let mut k = 0;
+    for n in 0..bn {
+        for co in 0..bco {
+            let src = g.idx(n0 + n, co0 + co, 0, 0);
+            buf[k..k + plane].copy_from_slice(&g.data[src..src + plane]);
+            k += plane;
+        }
+    }
+}
+
+/// Pack the output-gradient working set of one dInput tile and reduction
+/// step: `[bn][bcO][woLen][hoLen]` with spans per [`dinput_span`].
+/// Returns `(wo_lo, wo_len, ho_lo, ho_len)`.
+pub(crate) fn pack_dinput_gout(
+    g: &Tensor4,
+    s: &ConvShape,
+    ot: &OutTile,
+    rt: &RedTile,
+    buf: &mut Vec<f32>,
+) -> (usize, usize, usize, usize) {
+    let (wo_lo, wo_len) = dinput_span(ot.wo.start, ot.wo.len, s.s_w, s.w_f, s.w_o);
+    let (ho_lo, ho_len) = dinput_span(ot.ho.start, ot.ho.len, s.s_h, s.h_f, s.h_o);
+    let (wo_lo, wo_len) = (wo_lo as usize, wo_len as usize);
+    let (ho_lo, ho_len) = (ho_lo as usize, ho_len as usize);
+    let bn = ot.n.len as usize;
+    let n0 = ot.n.start as usize;
+    let bco = rt.ci.len as usize;
+    let co0 = rt.ci.start as usize;
+    let len = bn * bco * wo_len * ho_len;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+    let mut k = 0;
+    if len > 0 {
+        for n in 0..bn {
+            for co in 0..bco {
+                for a in 0..wo_len {
+                    let src = g.idx(n0 + n, co0 + co, wo_lo + a, ho_lo);
+                    buf[k..k + ho_len].copy_from_slice(&g.data[src..src + ho_len]);
+                    k += ho_len;
+                }
+            }
+        }
+    }
+    (wo_lo, wo_len, ho_lo, ho_len)
+}
+
+/// Pack the filter working set of one dInput tile and reduction step:
+/// `[bcI][bcO][wF][hF]` — cI from the tile (it owns the output), cO from
+/// the reduction step; whole taps are contiguous in `w`.
+pub(crate) fn pack_dinput_filter(
+    w: &Tensor4,
+    s: &ConvShape,
+    ot: &OutTile,
+    rt: &RedTile,
+    buf: &mut Vec<f32>,
+) {
+    let bci = ot.co.len as usize;
+    let ci0 = ot.co.start as usize;
+    let bco = rt.ci.len as usize;
+    let co0 = rt.ci.start as usize;
+    let taps = (s.w_f * s.h_f) as usize;
+    let len = bci * bco * taps;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+    let mut k = 0;
+    for ci in 0..bci {
+        for co in 0..bco {
+            let src = w.idx(ci0 + ci, co0 + co, 0, 0);
+            buf[k..k + taps].copy_from_slice(&w.data[src..src + taps]);
+            k += taps;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +479,90 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dinput_span_hand_cases() {
+        // unit stride, 3-tap filter, 5 outputs: column x is fed by
+        // wo in [x-2, x] clamped to [0, 4]
+        assert_eq!(dinput_span(0, 1, 1, 3, 5), (0, 1));
+        assert_eq!(dinput_span(3, 1, 1, 3, 5), (1, 3));
+        assert_eq!(dinput_span(0, 8, 1, 3, 5), (0, 5));
+        // trailing paper-convention padding rows get no gradient
+        assert_eq!(dinput_span(7, 1, 1, 3, 5), (0, 0));
+        // stride 2, 2-tap filter: x = 2·wo + i6
+        assert_eq!(dinput_span(4, 1, 2, 2, 4), (2, 1));
+        assert_eq!(dinput_span(3, 2, 2, 2, 4), (1, 2));
+        // degenerate
+        assert_eq!(dinput_span(0, 0, 1, 3, 5), (0, 0));
+        assert_eq!(dinput_span(0, 1, 1, 3, 0), (0, 0));
+    }
+
+    #[test]
+    fn dfilter_packs_match_direct_indexing() {
+        let s = ConvShape::new(3, 2, 2, 4, 3, 3, 2, 2, 1);
+        let x = Tensor4::randn(
+            [3, 2, s.in_w() as usize, s.in_h() as usize],
+            3,
+        );
+        let g = Tensor4::randn([3, 2, 4, 3], 4);
+        // tile: ci block {1}, co block {0,1}, i6 block {1,2}, i7 block {0};
+        // reduction step: n block {1,2}
+        let ot = OutTile { n: blk(1, 1), co: blk(0, 2), wo: blk(1, 2), ho: blk(0, 2) };
+        let rt = RedTile {
+            ci: blk(1, 2),
+            qw: blk(0, 4),
+            qh: blk(0, 3),
+            rw: blk(0, 1),
+            rh: blk(0, 1),
+        };
+        let mut xb = Vec::new();
+        let (spw, sph) = pack_dfilter_input(&x, &s, &ot, &rt, &mut xb);
+        assert_eq!(spw as u64, dfilter_span(2, 2, 4)); // 2 + 2·3 = 8
+        assert_eq!(sph as u64, dfilter_span(2, 1, 3)); // 2 + 2 = 4
+        assert_eq!(xb.len(), 2 * 1 * spw * sph);
+        // entry (n=0, ci=0, c, r) = x[1+0, 1+0, 1+c, 0+r]
+        for c in 0..spw {
+            for r in 0..sph {
+                assert_eq!(xb[c * sph + r], x.at(1, 1, 1 + c, r));
+            }
+        }
+        let mut gb = Vec::new();
+        pack_dfilter_gout(&g, &s, &ot, &rt, &mut gb);
+        assert_eq!(gb.len(), 2 * 2 * 4 * 3);
+        assert_eq!(gb[0], g.at(1, 0, 0, 0));
+        assert_eq!(gb[4 * 3], g.at(1, 1, 0, 0));
+    }
+
+    #[test]
+    fn dinput_packs_match_direct_indexing() {
+        let s = ConvShape::new(2, 3, 4, 5, 5, 3, 3, 1, 1);
+        let g = Tensor4::randn([2, 4, 5, 5], 5);
+        let w = Tensor4::randn([3, 4, 3, 3], 6);
+        // dIn tile columns [3, 6) x rows [0, 2); co reduction block {1, 2}
+        let ot = OutTile { n: blk(0, 2), co: blk(1, 2), wo: blk(3, 3), ho: blk(0, 2) };
+        let rt = RedTile {
+            ci: blk(1, 2),
+            qw: blk(0, 3),
+            qh: blk(0, 3),
+            rw: blk(0, 1),
+            rh: blk(0, 1),
+        };
+        let mut gb = Vec::new();
+        let (wo_lo, wo_len, ho_lo, ho_len) =
+            pack_dinput_gout(&g, &s, &ot, &rt, &mut gb);
+        assert_eq!((wo_lo, wo_len), (1, 4)); // wo in [1, 4]
+        assert_eq!((ho_lo, ho_len), (0, 2)); // ho in [0, 1]
+        assert_eq!(gb.len(), 2 * 2 * 4 * 2);
+        // entry (n=0, co=0, a=0, b=1) = g[0, 1+0, 1+0, 0+1]
+        assert_eq!(gb[1], g.at(0, 1, 1, 1));
+        let mut fb = Vec::new();
+        pack_dinput_filter(&w, &s, &ot, &rt, &mut fb);
+        // layout [bci=2][bco=2][3][3], ci from the tile's dim-2 block
+        assert_eq!(fb.len(), 2 * 2 * 9);
+        assert_eq!(fb[0], w.at(1, 1, 0, 0));
+        assert_eq!(fb[9], w.at(1, 2, 0, 0));
+        assert_eq!(fb[2 * 2 * 9 - 1], w.at(2, 2, 2, 2));
     }
 
     #[test]

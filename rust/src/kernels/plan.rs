@@ -17,7 +17,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::conv::{ConvShape, Precision};
+use crate::conv::{ConvPass, ConvShape, Precision};
 use crate::tiling::{sequential_blocking, SeqBlocking};
 use crate::util::ceil_div;
 
@@ -33,6 +33,10 @@ pub const DEFAULT_TILE_MEM_WORDS: f64 = 65536.0;
 /// the blocking LP assumes.
 #[derive(Debug, Clone)]
 pub struct TilePlan {
+    /// which convolution pass these loop bounds execute; the dim roles of
+    /// `ranges`/`blocks` are pass-specific (see [`TilePlan::for_pass`])
+    pub pass: ConvPass,
+    /// the *forward* layer shape all three passes are keyed off
     pub shape: ConvShape,
     pub precision: Precision,
     /// fast-memory budget the blocking was solved for, in words
@@ -65,7 +69,7 @@ pub(crate) fn filter_split_ranges(s: &ConvShape) -> (u64, u64, u64, u64) {
 
 impl TilePlan {
     /// Solve (or re-use) the §3.2 LP for `shape` at memory size `m` and
-    /// derive balanced integral loop bounds.
+    /// derive balanced integral loop bounds (the forward pass).
     pub fn new(shape: &ConvShape, p: Precision, m: f64) -> TilePlan {
         let blocking = sequential_blocking(shape, p, m);
         let (qw, qh, rw, rh) = filter_split_ranges(shape);
@@ -91,13 +95,97 @@ impl TilePlan {
             blocking.b_wf_r,
             blocking.b_hf_r,
         ];
-        let mut blocks = [1u64; 9];
-        for i in 0..9 {
-            let r = ranges[i].max(1);
-            let b = raw[i].clamp(1, r);
-            blocks[i] = ceil_div(r, ceil_div(r, b));
+        TilePlan {
+            pass: ConvPass::Forward,
+            shape: *shape,
+            precision: p,
+            mem_words: m,
+            blocking,
+            ranges,
+            blocks: balanced_blocks(&ranges, &raw),
         }
-        TilePlan { shape: *shape, precision: p, mem_words: m, blocking, ranges, blocks }
+    }
+
+    /// Solve the pass's permuted §3.2 LP and derive the pass's loop
+    /// bounds. Dim roles of the nine `ranges`/`blocks` slots per pass
+    /// (same `[i1, i2, i3, i4, i5, i6, i7, r, r]` positions everywhere —
+    /// slot 1 is the contracted reduction channel, slots 0/2/3/4 own the
+    /// output):
+    ///
+    /// * `Forward` — `[N, cI, cO, wO, hO, q6, q7, r6, r7]` (the existing
+    ///   plan, bit-for-bit: this constructor delegates to
+    ///   [`TilePlan::new`]).
+    /// * `DFilter` — `[cI, N, cO, wF, hF, wO, hO, 1, 1]`: the output is
+    ///   the filter gradient, the batch is contracted, and the permuted
+    ///   "filter" loops (wO, hO) are swept in full per reduction step —
+    ///   the dilated index map `σ·wO + i6` admits no stride split, and the
+    ///   full sweep is what keeps the per-element accumulation order equal
+    ///   to `dfilter_naive`'s (bitwise, for any N blocking).
+    /// * `DInput` — `[N, cO, cI, WI, HI, wF, hF, 1, 1]`: the output is the
+    ///   input gradient (spatial extent `WI = σ·wO + wF`), cO is
+    ///   contracted, and the filter taps are swept in full per reduction
+    ///   step for the same ascending-order contract vs `dinput_naive`.
+    ///   Spatial blocks scale the LP's output blocks by the stride (one
+    ///   dIn block of `σ·b` rows is fed by `b` output rows).
+    pub fn for_pass(pass: ConvPass, shape: &ConvShape, p: Precision, m: f64) -> TilePlan {
+        if pass == ConvPass::Forward {
+            return TilePlan::new(shape, p, m);
+        }
+        let blocking =
+            sequential_blocking(&pass.lp_shape(shape), pass.lp_precision(p), m);
+        let (ranges, raw) = match pass {
+            ConvPass::DFilter => (
+                [
+                    shape.c_i, shape.n, shape.c_o, shape.w_f, shape.h_f,
+                    shape.w_o, shape.h_o, 1, 1,
+                ],
+                [
+                    blocking.b_n,
+                    blocking.b_ci,
+                    blocking.b_co,
+                    blocking.b_wo,
+                    blocking.b_ho,
+                    shape.w_o,
+                    shape.h_o,
+                    1,
+                    1,
+                ],
+            ),
+            ConvPass::DInput => (
+                [
+                    shape.n,
+                    shape.c_o,
+                    shape.c_i,
+                    shape.in_w(),
+                    shape.in_h(),
+                    shape.w_f,
+                    shape.h_f,
+                    1,
+                    1,
+                ],
+                [
+                    blocking.b_n,
+                    blocking.b_ci,
+                    blocking.b_co,
+                    shape.s_w * blocking.b_wo,
+                    shape.s_h * blocking.b_ho,
+                    shape.w_f,
+                    shape.h_f,
+                    1,
+                    1,
+                ],
+            ),
+            ConvPass::Forward => unreachable!("handled above"),
+        };
+        TilePlan {
+            pass,
+            shape: *shape,
+            precision: p,
+            mem_words: m,
+            blocking,
+            ranges,
+            blocks: balanced_blocks(&ranges, &raw),
+        }
     }
 
     /// Tiles along each of the nine dims.
@@ -129,10 +217,24 @@ impl TilePlan {
     }
 }
 
-/// Cache key: the shape plus the bit patterns of the precision triple and
-/// the memory size (both are configuration constants, not computed floats,
-/// so bit equality is the right notion).
-type PlanKey = (ConvShape, [u64; 4]);
+/// Clamp the raw LP blocks to their ranges and balance them: for each dim
+/// the tile count `t = ceil(range/block)` is kept but the block shrinks to
+/// `ceil(range/t)`, so ragged edge tiles stay within one element of the
+/// interior tiles.
+fn balanced_blocks(ranges: &[u64; 9], raw: &[u64; 9]) -> [u64; 9] {
+    let mut blocks = [1u64; 9];
+    for i in 0..9 {
+        let r = ranges[i].max(1);
+        let b = raw[i].clamp(1, r);
+        blocks[i] = ceil_div(r, ceil_div(r, b));
+    }
+    blocks
+}
+
+/// Cache key: the pass and shape plus the bit patterns of the precision
+/// triple and the memory size (both are configuration constants, not
+/// computed floats, so bit equality is the right notion).
+type PlanKey = (ConvPass, ConvShape, [u64; 4]);
 
 /// Memoizes [`TilePlan`]s so repeated loads of the same shape (server
 /// restarts, autotuner probes, per-request planning) never re-solve the LP.
@@ -145,11 +247,24 @@ impl TilePlanCache {
         TilePlanCache { inner: Mutex::new(HashMap::new()) }
     }
 
-    /// Fetch the plan for `(shape, p, m)`, solving and caching on miss.
-    /// The LP runs under the cache lock: concurrent loaders of the *same*
-    /// shape would otherwise race to duplicate work.
+    /// Fetch the forward plan for `(shape, p, m)`, solving and caching on
+    /// miss.
     pub fn plan(&self, shape: &ConvShape, p: Precision, m: f64) -> Arc<TilePlan> {
+        self.plan_pass(ConvPass::Forward, shape, p, m)
+    }
+
+    /// Fetch the plan for `(pass, shape, p, m)`, solving and caching on
+    /// miss. The LP runs under the cache lock: concurrent loaders of the
+    /// *same* shape would otherwise race to duplicate work.
+    pub fn plan_pass(
+        &self,
+        pass: ConvPass,
+        shape: &ConvShape,
+        p: Precision,
+        m: f64,
+    ) -> Arc<TilePlan> {
         let key = (
+            pass,
             *shape,
             [p.p_i.to_bits(), p.p_f.to_bits(), p.p_o.to_bits(), m.to_bits()],
         );
@@ -157,7 +272,7 @@ impl TilePlanCache {
         if let Some(plan) = cache.get(&key) {
             return Arc::clone(plan);
         }
-        let plan = Arc::new(TilePlan::new(shape, p, m));
+        let plan = Arc::new(TilePlan::for_pass(pass, shape, p, m));
         cache.insert(key, Arc::clone(&plan));
         plan
     }
@@ -235,6 +350,56 @@ mod tests {
         let plan = TilePlan::new(&s, Precision::uniform(), 65536.0);
         assert_eq!(plan.ranges[5], 4); // ceil(7/2)
         assert_eq!(plan.ranges[7], 2); // σw
+    }
+
+    #[test]
+    fn backward_plans_map_the_pass_dims() {
+        let s = resnet50_layers(8)[0].shape; // conv1: 7x7 stride 2
+        let df = TilePlan::for_pass(ConvPass::DFilter, &s, Precision::uniform(), 65536.0);
+        assert_eq!(
+            df.ranges,
+            [s.c_i, s.n, s.c_o, s.w_f, s.h_f, s.w_o, s.h_o, 1, 1]
+        );
+        // the permuted "filter" loops are swept in full: one reduction
+        // step covers all of (wO, hO), so reduction tiles block N only
+        assert_eq!(df.blocks[5], s.w_o);
+        assert_eq!(df.blocks[6], s.h_o);
+        assert_eq!(df.reduction_tiles(), df.tile_counts()[1]);
+
+        let di = TilePlan::for_pass(ConvPass::DInput, &s, Precision::uniform(), 65536.0);
+        assert_eq!(
+            di.ranges,
+            [s.n, s.c_o, s.c_i, s.in_w(), s.in_h(), s.w_f, s.h_f, 1, 1]
+        );
+        assert_eq!(di.blocks[5], s.w_f);
+        assert_eq!(di.blocks[6], s.h_f);
+        assert_eq!(di.reduction_tiles(), di.tile_counts()[1]);
+
+        for p in [&df, &di] {
+            for i in 0..9 {
+                assert!(p.blocks[i] >= 1 && p.blocks[i] <= p.ranges[i].max(1));
+            }
+            assert!(p.output_tiles() >= 1);
+        }
+        // Forward delegation is bit-identical to TilePlan::new
+        let fwd = TilePlan::for_pass(ConvPass::Forward, &s, Precision::uniform(), 65536.0);
+        let new = TilePlan::new(&s, Precision::uniform(), 65536.0);
+        assert_eq!(fwd.pass, ConvPass::Forward);
+        assert_eq!(fwd.ranges, new.ranges);
+        assert_eq!(fwd.blocks, new.blocks);
+    }
+
+    #[test]
+    fn cache_keys_plans_by_pass() {
+        let cache = TilePlanCache::new();
+        let s = resnet50_layers(2)[1].shape;
+        let p = Precision::uniform();
+        let fwd = cache.plan_pass(ConvPass::Forward, &s, p, 65536.0);
+        let df = cache.plan_pass(ConvPass::DFilter, &s, p, 65536.0);
+        assert!(!Arc::ptr_eq(&fwd, &df));
+        assert_eq!(cache.len(), 2);
+        // the pass-less entry point is the Forward instantiation
+        assert!(Arc::ptr_eq(&fwd, &cache.plan(&s, p, 65536.0)));
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! convbound exec    --layer conv4_x ...     run a layer through the CPU
 //!                                           kernels (naive|im2col|tiled|auto)
 //!                                           with measured word traffic
+//! convbound exec    --pass dfilter --check  run a backward convolution
+//!                                           (dfilter|dinput) through the
+//!                                           pass-generic tiled engine,
+//!                                           bitwise vs the naive training
+//!                                           oracle, traffic vs the exact
+//!                                           per-pass model
 //! convbound exec    --network tiny_resnet   run a whole network through the
 //!                                           fused pipeline (--fused-kernel
 //!                                           packed|reference|auto,
@@ -32,14 +38,16 @@ use std::time::Instant;
 use convbound::bounds::{parallel_bound_terms, sequential_bound_terms};
 use convbound::commvol;
 use convbound::conv::{
-    conv7nl_naive, find_layer, paper_operands, scaled, Precision, Tensor4,
+    conv7nl_naive, find_layer, paper_operands, pass_operands, scaled,
+    ConvPass, Precision, Tensor4,
 };
 use convbound::coordinator::{plan_layer, ConvServer};
 use convbound::err;
 use convbound::gemmini::GemminiConfig;
 use convbound::hbl::{analyze_7nl, analyze_small_filter};
 use convbound::kernels::{
-    conv_network_fused_counted, conv_tiled_counted, expected_traffic,
+    conv_network_fused_counted, conv_pass_tiled, conv_pass_tiled_counted,
+    conv_tiled_counted, expected_pass_traffic, expected_traffic,
     naive_network, Autotuner, FusePlan, FusedExec, KernelKind,
     NetTrafficCounters, TilePlanCache, Traffic, TrafficCounters,
     DEFAULT_TILE_MEM_WORDS,
@@ -392,12 +400,144 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
     Ok(())
 }
 
+/// Run one backward convolution (dFilter or dInput) of a catalog layer
+/// through the pass-generic tiled engine (or the naive oracle), reporting
+/// throughput and measured vs analytic word traffic; `--check`
+/// cross-validates the tiled gradient against the `conv/training.rs`
+/// naive oracle *bitwise* (the backward accumulation-order contract) and
+/// requires the traffic counters to match the per-pass tile-grid model
+/// exactly.
+fn cmd_exec_pass(args: &Args, pass: ConvPass) -> Result<()> {
+    let (name, full) = layer_of(args, "conv4_x", 2)?;
+    let scale = args.opt_u64("scale", 1)?.max(1);
+    let shape = scaled(full, scale);
+    let m = mem_of(args, DEFAULT_TILE_MEM_WORDS)?;
+    let p = precision_of(args)?;
+    let tuner = Autotuner::with_precision(m, p);
+    if let Some(path) = args.opt("tune-cache") {
+        let loaded = tuner.warm_start(path)?;
+        if loaded > 0 {
+            println!("warm-started {loaded} tuned choice(s) from {path}");
+        }
+    }
+    let (a, b) = pass_operands(pass, &shape, 1);
+
+    let kind = match args.opt_str("kernel", "tiled") {
+        "auto" => {
+            let k = tuner.select_pass(pass, &shape);
+            println!("autotuner picked '{}'", k.name());
+            k
+        }
+        other => match KernelKind::parse(other) {
+            Some(k) if k != KernelKind::Im2col => k,
+            _ => {
+                return Err(err!(
+                    "unknown --kernel '{other}' for --pass {} \
+                     (naive|tiled|auto)",
+                    pass.name()
+                ))
+            }
+        },
+    };
+
+    println!(
+        "exec {name}{} ({shape}) pass {} via {} at M = {m} words",
+        if scale > 1 { format!(" /{scale}") } else { String::new() },
+        pass.name(),
+        kind.name()
+    );
+
+    let out;
+    let secs;
+    let mut traffic_pair: Option<(Traffic, Traffic)> = None;
+    if kind == KernelKind::Tiled {
+        let plan = tuner.plan_pass(pass, &shape);
+        let counters = TrafficCounters::new();
+        let t0 = Instant::now();
+        out = conv_pass_tiled_counted(pass, &a, &b, &plan, &counters);
+        secs = t0.elapsed().as_secs_f64();
+        let t = counters.snapshot();
+        let e = expected_pass_traffic(&plan);
+        let fmt9 = |v: &[u64; 9]| {
+            v.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(" ")
+        };
+        println!(
+            "  blocks: [{}] over ranges [{}] -> {} tiles",
+            fmt9(&plan.blocks),
+            fmt9(&plan.ranges),
+            plan.total_tiles()
+        );
+        println!(
+            "  traffic: input {} + filter {} + output {} = {} words \
+             (model {}{})",
+            t.input_words,
+            t.filter_words,
+            t.output_words,
+            t.total(),
+            e.total(),
+            if t == e { ", exact" } else { ", MISMATCH" }
+        );
+        traffic_pair = Some((t, e));
+    } else {
+        let t0 = Instant::now();
+        out = tuner.run_pass_kernel(pass, kind, &a, &b, &shape);
+        secs = t0.elapsed().as_secs_f64();
+    }
+    println!(
+        "  {secs:.3}s, {:.1} MMAC/s",
+        shape.updates() as f64 / secs.max(1e-9) / 1e6
+    );
+
+    if args.flag("check") {
+        // the naive oracle and the tiled engine cross-validate each other:
+        // whichever one just ran is held against the other, bitwise
+        let (other, want) = if kind == KernelKind::Tiled {
+            ("naive", pass.naive_oracle(&a, &b, &shape))
+        } else {
+            ("tiled", conv_pass_tiled(pass, &a, &b, &tuner.plan_pass(pass, &shape)))
+        };
+        let diff = out.max_abs_diff(&want);
+        println!("  check vs {other} oracle: max_abs_diff = {diff}");
+        if diff != 0.0 {
+            return Err(err!(
+                "{} pass diverged from the {other} oracle: {diff}",
+                pass.name()
+            ));
+        }
+        if let Some((t, e)) = traffic_pair {
+            if t != e {
+                return Err(err!(
+                    "measured {} traffic disagrees with the analytic model",
+                    pass.name()
+                ));
+            }
+            println!("  measured traffic matches the analytic model exactly: OK");
+        }
+    } else {
+        std::hint::black_box(&out);
+    }
+    if let Some(path) = args.opt("tune-cache") {
+        tuner.save(path)?;
+    }
+    Ok(())
+}
+
 /// Run one catalog layer through a CPU kernel and report throughput plus
 /// (for the tiled engine) measured vs modelled word traffic.
 fn cmd_exec(args: &Args) -> Result<()> {
     if let Some(net) = args.opt("network") {
         let net = net.to_string();
         return cmd_exec_network(args, &net);
+    }
+    match ConvPass::parse(args.opt_str("pass", "fwd")) {
+        Some(ConvPass::Forward) => {}
+        Some(pass) => return cmd_exec_pass(args, pass),
+        None => {
+            return Err(err!(
+                "unknown --pass '{}' (fwd|dfilter|dinput)",
+                args.opt_str("pass", "fwd")
+            ))
+        }
     }
     let (name, full) = layer_of(args, "conv4_x", 2)?;
     let scale = args.opt_u64("scale", 1)?.max(1);
@@ -589,6 +729,7 @@ fn main() {
             eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
             eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
             eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check --tune-cache <path>");
+            eprintln!("        --pass fwd|dfilter|dinput (backward passes: --kernel naive|tiled|auto)");
             eprintln!("        --network tiny_resnet|deep_mixnet [--batch N] [--mem M] [--check]");
             eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");

@@ -79,6 +79,17 @@ pub trait ExecBackend {
         path: Option<&Path>,
     ) -> Result<Box<dyn Executable>>;
 
+    /// Does this backend execute whole-network pipelines natively through
+    /// [`ExecBackend::load_network`]? Default `false`: when a manifest
+    /// carries a `networks` section (AOT manifests from
+    /// `python/compile/aot.py` now emit one) the runtime only routes
+    /// `"network"` artifacts through `load_network` on backends that opt
+    /// in — file-based backends (PJRT) keep loading the lowered HLO
+    /// module instead.
+    fn supports_networks(&self) -> bool {
+        false
+    }
+
     /// Prepare a whole-network pipeline artifact. `net` is the resolved
     /// [`NetworkSpec`] the `"network"` spec's name refers to (strides of
     /// interior stages are not recoverable from the spec's dims alone).

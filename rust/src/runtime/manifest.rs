@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use crate::conv::{ConvShape, Precision};
+use crate::conv::{ConvPass, ConvShape, Precision};
 use crate::err;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
@@ -233,6 +233,24 @@ impl ArtifactSpec {
         }
     }
 
+    /// Synthesize the spec of a gradient-pass artifact (kind `"dfilter"`
+    /// or `"dinput"`) for the backward convolutions of layer `s`: inputs
+    /// are the pass's `(a, b)` operands ([`ConvPass::operand_dims`] —
+    /// (image, dOut) for dFilter, (dOut, filter) for dInput), the output
+    /// is the gradient tensor. `updates` is the layer's G (identical for
+    /// all three passes of a training step).
+    pub fn for_pass(name: &str, pass: ConvPass, s: &ConvShape) -> ArtifactSpec {
+        let (a, b) = pass.operand_dims(s);
+        ArtifactSpec {
+            name: name.to_string(),
+            kind: pass.name().to_string(),
+            path: format!("{name}_{}.hlo.txt", pass.name()),
+            inputs: vec![a.to_vec(), b.to_vec()],
+            output: pass.out_dims(s).to_vec(),
+            updates: s.updates(),
+        }
+    }
+
     /// Synthesize the spec of a whole-network artifact from a validated
     /// [`NetworkSpec`]: inputs are the image followed by one filter per
     /// stage, the output is the last stage's activation. The strides of
@@ -304,6 +322,92 @@ impl ArtifactSpec {
         }
         Ok(s)
     }
+
+    /// Recover the *forward* [`ConvShape`] a gradient-pass spec encodes —
+    /// the per-pass counterpart of [`ArtifactSpec::layer_shape`] (to which
+    /// the forward pass delegates). Validation is by round-trip: the
+    /// reconstructed shape must reproduce every operand and output dim of
+    /// the spec under the pass's own dim maps, so a spec that is not a
+    /// consistent paper-convention gradient problem is rejected at load.
+    pub fn pass_shape(&self, pass: ConvPass) -> Result<ConvShape> {
+        if pass == ConvPass::Forward {
+            return self.layer_shape();
+        }
+        if self.inputs.len() != 2 {
+            return Err(err!(
+                "'{}': expected two {} operands, got {} inputs",
+                self.key(),
+                pass.name(),
+                self.inputs.len()
+            ));
+        }
+        let (a, b, o) = (&self.inputs[0], &self.inputs[1], &self.output);
+        if a.len() != 4 || b.len() != 4 || o.len() != 4 {
+            return Err(err!("'{}': inputs and output must be rank 4", self.key()));
+        }
+        let bad = || {
+            err!(
+                "'{}': not a paper-convention {} problem (inputs {:?} / {:?}, \
+                 output {:?})",
+                self.key(),
+                pass.name(),
+                a,
+                b,
+                o
+            )
+        };
+        let s = match pass {
+            // a = image (N, cI, WI, HI), b = dOut (N, cO, wO, hO),
+            // o = dF (cI, cO, wF, hF)
+            ConvPass::DFilter => {
+                let (wo, ho, wf, hf) = (b[2], b[3], o[2], o[3]);
+                if wo == 0 || ho == 0 || a[2] < wf || a[3] < hf {
+                    return Err(bad());
+                }
+                ConvShape::new(
+                    a[0] as u64,
+                    a[1] as u64,
+                    b[1] as u64,
+                    wo as u64,
+                    ho as u64,
+                    wf as u64,
+                    hf as u64,
+                    ((a[2] - wf) / wo) as u64,
+                    ((a[3] - hf) / ho) as u64,
+                )
+            }
+            // a = dOut (N, cO, wO, hO), b = filter (cI, cO, wF, hF),
+            // o = dIn (N, cI, WI, HI)
+            ConvPass::DInput => {
+                let (wo, ho, wf, hf) = (a[2], a[3], b[2], b[3]);
+                if wo == 0 || ho == 0 || o[2] < wf || o[3] < hf {
+                    return Err(bad());
+                }
+                ConvShape::new(
+                    a[0] as u64,
+                    b[0] as u64,
+                    a[1] as u64,
+                    wo as u64,
+                    ho as u64,
+                    wf as u64,
+                    hf as u64,
+                    ((o[2] - wf) / wo) as u64,
+                    ((o[3] - hf) / ho) as u64,
+                )
+            }
+            ConvPass::Forward => unreachable!("handled above"),
+        };
+        let (wa, wb) = pass.operand_dims(&s);
+        if s.s_w == 0
+            || s.s_h == 0
+            || *a != wa.to_vec()
+            || *b != wb.to_vec()
+            || *o != pass.out_dims(&s).to_vec()
+        {
+            return Err(bad());
+        }
+        Ok(s)
+    }
 }
 
 /// The whole manifest.
@@ -328,8 +432,10 @@ impl Manifest {
     /// backend answers in well under a millisecond per batch, each exposed
     /// through the kernel kinds the native backend implements (the 3×3 and
     /// strided 5×5 also as `"tiled"`, routing through the `kernels/`
-    /// engine), plus two `"network"` pipelines: the fully-fusable
-    /// [`NetworkSpec::tiny_resnet`] and the six-stage
+    /// engine, and both also as the training kinds
+    /// `"dfilter"`/`"dinput"`, routing the backward convolutions through
+    /// the same pass-generic engine), plus two `"network"` pipelines: the
+    /// fully-fusable [`NetworkSpec::tiny_resnet`] and the six-stage
     /// [`NetworkSpec::deep_mixnet`], whose plan mixes fused and
     /// materialized groups at the default budget. This is what
     /// [`super::Runtime::builtin`] and the no-artifact serving path use.
@@ -346,9 +452,13 @@ impl Manifest {
                 ArtifactSpec::for_layer("unit3x3", "blocked", &unit3x3),
                 ArtifactSpec::for_layer("unit3x3", "im2col", &unit3x3),
                 ArtifactSpec::for_layer("unit3x3", "tiled", &unit3x3),
+                ArtifactSpec::for_pass("unit3x3", ConvPass::DFilter, &unit3x3),
+                ArtifactSpec::for_pass("unit3x3", ConvPass::DInput, &unit3x3),
                 ArtifactSpec::for_layer("unit1x1", "blocked", &unit1x1),
                 ArtifactSpec::for_layer("unit5x5", "blocked", &unit5x5),
                 ArtifactSpec::for_layer("unit5x5", "tiled", &unit5x5),
+                ArtifactSpec::for_pass("unit5x5", ConvPass::DFilter, &unit5x5),
+                ArtifactSpec::for_pass("unit5x5", ConvPass::DInput, &unit5x5),
                 ArtifactSpec::for_network(&tiny),
                 ArtifactSpec::for_network(&deep),
             ],
@@ -557,6 +667,10 @@ mod tests {
         assert!(m.find("unit3x3/tiled").is_some());
         assert!(m.find("unit5x5/tiled").is_some());
         assert!(m.find("unit1x1/blocked").is_some());
+        assert!(m.find("unit3x3/dfilter").is_some());
+        assert!(m.find("unit3x3/dinput").is_some());
+        assert!(m.find("unit5x5/dfilter").is_some());
+        assert!(m.find("unit5x5/dinput").is_some());
         assert!(m.find("tiny_resnet/network").is_some());
         for a in &m.artifacts {
             assert!(a.inputs.len() >= 2, "{}", a.key());
@@ -569,6 +683,32 @@ mod tests {
         keys.sort();
         keys.dedup();
         assert_eq!(keys.len(), m.artifacts.len());
+    }
+
+    #[test]
+    fn gradient_specs_roundtrip_through_pass_shape() {
+        let s = ConvShape::new(4, 3, 12, 6, 5, 5, 4, 2, 1);
+        for pass in [ConvPass::DFilter, ConvPass::DInput] {
+            let spec = ArtifactSpec::for_pass("g", pass, &s);
+            assert_eq!(spec.kind, pass.name());
+            assert_eq!(spec.updates, s.updates());
+            assert_eq!(spec.pass_shape(pass).expect("roundtrip"), s);
+            // a gradient spec is not a single-layer (image, filter) spec
+            assert!(spec.layer_shape().is_err(), "{}", spec.key());
+            // corrupting any operand dim breaks the round-trip validation
+            let mut bad = spec.clone();
+            bad.inputs[1][1] += 1;
+            assert!(bad.pass_shape(pass).is_err());
+            let mut bad = spec.clone();
+            bad.output[3] += 1;
+            assert!(bad.pass_shape(pass).is_err());
+            let mut bad = spec.clone();
+            bad.inputs.pop();
+            assert!(bad.pass_shape(pass).is_err());
+        }
+        // the Forward case is the existing layer inversion
+        let fwd = ArtifactSpec::for_layer("f", "tiled", &s);
+        assert_eq!(fwd.pass_shape(ConvPass::Forward).expect("layer"), s);
     }
 
     #[test]

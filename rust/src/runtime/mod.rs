@@ -111,8 +111,10 @@ impl Runtime {
     /// The freshly inserted entry is returned directly — no second hash
     /// lookup on either the hit or the miss path. `"network"` kinds whose
     /// manifest carries a matching [`NetworkSpec`] load through
-    /// [`ExecBackend::load_network`]; without one they fall back to the
-    /// backend's file loader (the legacy AOT route).
+    /// [`ExecBackend::load_network`] on backends that opt in
+    /// ([`ExecBackend::supports_networks`]); otherwise they fall back to
+    /// the backend's file loader (the AOT/PJRT route, which executes the
+    /// lowered HLO module rather than the native fused pipeline).
     pub fn load(&mut self, key: &str) -> Result<&LoadedArtifact> {
         match self.loaded.entry(key.to_string()) {
             Entry::Occupied(hit) => Ok(hit.into_mut()),
@@ -122,7 +124,7 @@ impl Runtime {
                     .find(key)
                     .ok_or_else(|| err!("artifact '{key}' not in manifest"))?
                     .clone();
-                let net = if spec.kind == "network" {
+                let net = if spec.kind == "network" && self.backend.supports_networks() {
                     self.manifest.network(&spec.name).cloned()
                 } else {
                     None

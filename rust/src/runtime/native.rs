@@ -6,13 +6,16 @@
 //! genuinely different code path ([`conv_im2col`]: patch-matrix + GEMM);
 //! kind `"tiled"` routes through the `kernels/` LP-blocked tiled engine
 //! (packed per-tile working sets, traffic counters, output tiles fanned
-//! out over a shared thread pool); kind `"network"` executes a whole
+//! out over a shared thread pool); kinds `"dfilter"`/`"dinput"` run the
+//! backward convolutions of a training step through the same pass-generic
+//! tiled engine (bitwise identical to the `conv/training.rs` naive
+//! oracles); kind `"network"` executes a whole
 //! [`crate::runtime::manifest::NetworkSpec`] pipeline through the
 //! `kernels/fuse` fused executor (resolved via
 //! [`ExecBackend::load_network`] — the single-layer `load` entry rejects
 //! it). Three independent single-layer accumulation orders, so cross-kind
 //! agreement tests exercise real cross-validation even without compiled
-//! artifacts. Gradient passes still require the PJRT backend.
+//! artifacts.
 //!
 //! The [`ConvShape`] is recovered and validated by
 //! [`ArtifactSpec::layer_shape`] (the one authoritative inversion of the
@@ -27,11 +30,12 @@
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use crate::conv::{conv7nl_naive, ConvShape, Precision, Tensor4};
+use crate::conv::{conv7nl_naive, ConvPass, ConvShape, Precision, Tensor4};
 use crate::err;
 use crate::kernels::{
-    conv_network_fused, conv_tiled_parallel, FusePlan, NetTrafficCounters,
-    TilePlan, TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    conv_network_fused, conv_pass_tiled_parallel, conv_tiled_parallel,
+    FusePlan, NetTrafficCounters, TilePlan, TilePlanCache, Traffic,
+    TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -70,6 +74,10 @@ impl ExecBackend for NativeBackend {
         "native-cpu".to_string()
     }
 
+    fn supports_networks(&self) -> bool {
+        true
+    }
+
     fn load(
         &mut self,
         spec: &ArtifactSpec,
@@ -91,6 +99,23 @@ impl ExecBackend for NativeBackend {
                     counters: Arc::new(TrafficCounters::new()),
                 }))
             }
+            "dfilter" | "dinput" => {
+                let pass = ConvPass::parse(&spec.kind)
+                    .expect("matched kinds parse as passes");
+                let shape = spec.pass_shape(pass)?;
+                let plan = self.plans.plan_pass(
+                    pass,
+                    &shape,
+                    Precision::uniform(),
+                    DEFAULT_TILE_MEM_WORDS,
+                );
+                Ok(Box::new(PassExec {
+                    pass,
+                    plan,
+                    pool: self.tiled_pool(),
+                    counters: Arc::new(TrafficCounters::new()),
+                }))
+            }
             "network" => Err(err!(
                 "artifact '{}' is a network pipeline but the manifest \
                  carries no matching 'networks' entry to execute it \
@@ -101,8 +126,9 @@ impl ExecBackend for NativeBackend {
             )),
             other => Err(err!(
                 "native backend cannot execute artifact '{}' of kind '{other}' \
-                 (single-layer 'blocked'/'im2col'/'tiled' specs or 'network' \
-                 pipelines); build with --features pjrt to run it over XLA",
+                 (single-layer 'blocked'/'im2col'/'tiled' specs, training \
+                 'dfilter'/'dinput' specs, or 'network' pipelines); build \
+                 with --features pjrt to run it over XLA",
                 spec.key()
             )),
         }
@@ -186,6 +212,47 @@ impl Executable for TiledExec {
     }
 }
 
+/// Executes one backward convolution (dFilter or dInput) through the
+/// pass-generic `kernels/` tiled engine, output tiles fanned out over the
+/// backend's shared pool — bitwise identical to the `conv/training.rs`
+/// naive oracles by the backward accumulation-order contract.
+struct PassExec {
+    pass: ConvPass,
+    plan: Arc<TilePlan>,
+    pool: Arc<ThreadPool>,
+    counters: Arc<TrafficCounters>,
+}
+
+impl Executable for PassExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let a = Arc::new(inputs[0].clone());
+        let b = Arc::new(inputs[1].clone());
+        Ok(conv_pass_tiled_parallel(
+            self.pass,
+            &a,
+            &b,
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        Ok(conv_pass_tiled_parallel(
+            self.pass,
+            &inputs[0],
+            &inputs[1],
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn traffic(&self) -> Option<Traffic> {
+        Some(self.counters.snapshot())
+    }
+}
+
 /// Executes a whole network pipeline through the `kernels/fuse` fused
 /// executor: fused groups sweep the last stage's output tiles with
 /// inter-layer activations held in scratch, materialized stages run the
@@ -244,12 +311,47 @@ mod tests {
                 assert!(spec.layer_shape().is_err(), "{}", spec.key());
                 continue;
             }
+            if let Some(pass) = ConvPass::parse(&spec.kind) {
+                // gradient artifacts invert through the pass-aware
+                // reconstruction instead of the (image, filter) one
+                let s = spec.pass_shape(pass).expect("builtin gradient spec");
+                assert_eq!(s.updates(), spec.updates, "{}", spec.key());
+                assert!(s.paper_assumptions_hold(), "{}", spec.key());
+                continue;
+            }
             let s = spec.layer_shape().expect("builtin spec must be derivable");
             assert_eq!(s.n, spec.output[0] as u64, "{}", spec.key());
             assert_eq!(s.in_w() as usize, spec.inputs[0][2], "{}", spec.key());
             assert_eq!(s.in_h() as usize, spec.inputs[0][3], "{}", spec.key());
             assert_eq!(s.updates(), spec.updates, "{}", spec.key());
             assert!(s.paper_assumptions_hold(), "{}", spec.key());
+        }
+    }
+
+    #[test]
+    fn gradient_kinds_load_and_match_oracles_bitwise() {
+        let shape = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 2, 2);
+        let mut be = NativeBackend::new();
+        for pass in [ConvPass::DFilter, ConvPass::DInput] {
+            let spec = ArtifactSpec::for_pass("g", pass, &shape);
+            let exe = be.load(&spec, None).expect("gradient kind loads");
+            let (a, b) = crate::conv::pass_operands(pass, &shape, 41);
+            let got = exe.execute(&[&a, &b]).expect("gradient execute");
+            let want = pass.naive_oracle(&a, &b, &shape);
+            assert_eq!(got.dims.to_vec(), spec.output, "{}", pass.name());
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "{}: native gradient diverged from the oracle",
+                pass.name()
+            );
+            // instrumented like the forward tiled kind
+            assert!(exe.traffic().expect("instrumented").total() > 0);
+            // a spec whose dims are not a consistent gradient problem is
+            // rejected at load
+            let mut bad = spec.clone();
+            bad.inputs[0][0] += 1;
+            assert!(be.load(&bad, None).is_err(), "{}", pass.name());
         }
     }
 

@@ -7,14 +7,16 @@ use std::sync::Arc;
 use convbound::bounds::{parallel_bound_terms, sequential_bound, sequential_bound_terms};
 use convbound::commvol::seq::blocking_volume;
 use convbound::conv::{
-    alexnet_layers, conv7nl_naive, paper_operands, resnet50_layers, scaled,
-    ConvShape, Precision, Tensor4,
+    alexnet_layers, conv7nl_naive, paper_operands, pass_operands,
+    resnet50_layers, scaled, ConvPass, ConvShape, Precision, Tensor4,
 };
 use convbound::gemmini::{simulate_layer, GemminiConfig};
 use convbound::kernels::{
     axpy, axpy_scalar, conv_network_fused, conv_network_fused_counted,
-    conv_tiled_counted, expected_traffic, naive_network, FusePlan, FusedExec,
-    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
+    conv_pass_tiled, conv_pass_tiled_counted, conv_pass_tiled_parallel,
+    conv_tiled_counted, expected_pass_traffic, expected_traffic,
+    naive_network, FusePlan, FusedExec, NetTrafficCounters, TilePlan,
+    TilePlanCache, Traffic, TrafficCounters,
 };
 use convbound::runtime::NetworkSpec;
 use convbound::util::threadpool::ThreadPool;
@@ -414,6 +416,123 @@ fn tiled_matches_naive_on_full_catalog_within_traffic_envelope() {
             l.name,
             measured / predicted
         );
+    }
+}
+
+// ---------------- backward passes (dFilter / dInput) ----------------
+
+#[test]
+fn prop_tiled_backward_passes_bitwise_match_oracles() {
+    // the backward accumulation-order contract: tiled dFilter/dInput are
+    // bitwise identical to the conv/training.rs naive oracles for any
+    // shape (strided, non-square, ragged), any memory budget, and any
+    // (mixed) precision the plan is solved under — and the measured word
+    // traffic equals the per-pass analytic tile-grid model exactly
+    forall(
+        Config { cases: 18, seed: 91 },
+        |r| {
+            (
+                random_tiled_shape(r),
+                random_precision(r),
+                (1u64 << r.range(9, 14)) as f64,
+                r.range(0, 1_000_000),
+            )
+        },
+        |(s, p, m, seed)| {
+            [ConvPass::DFilter, ConvPass::DInput].iter().all(|&pass| {
+                let plan = TilePlan::for_pass(pass, s, *p, *m);
+                let (a, b) = pass_operands(pass, s, *seed);
+                let counters = TrafficCounters::new();
+                let got = conv_pass_tiled_counted(pass, &a, &b, &plan, &counters);
+                let want = pass.naive_oracle(&a, &b, s);
+                got.dims == want.dims
+                    && got.max_abs_diff(&want) == 0.0
+                    && counters.snapshot() == expected_pass_traffic(&plan)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_backward_parallel_bitwise_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(
+        Config { cases: 8, seed: 92 },
+        |r| (random_tiled_shape(r), (1u64 << r.range(9, 13)) as f64),
+        |(s, m)| {
+            [ConvPass::DFilter, ConvPass::DInput].iter().all(|&pass| {
+                let plan =
+                    Arc::new(TilePlan::for_pass(pass, s, Precision::uniform(), *m));
+                let (a, b) = pass_operands(pass, s, 13);
+                let (a, b) = (Arc::new(a), Arc::new(b));
+                let serial = conv_pass_tiled(pass, &a, &b, &plan);
+                let ctr = Arc::new(TrafficCounters::new());
+                let par =
+                    conv_pass_tiled_parallel(pass, &a, &b, &plan, &pool, &ctr);
+                par.max_abs_diff(&serial) == 0.0
+                    && ctr.snapshot() == expected_pass_traffic(&plan)
+            })
+        },
+    );
+}
+
+#[test]
+fn tiled_backward_passes_bitwise_match_oracles_on_full_catalog() {
+    // every catalog layer (runnable-size variant), both gradient passes:
+    // bitwise vs the naive oracles and exact counter/model agreement —
+    // the acceptance gate of the pass-generic engine
+    let p = Precision::uniform();
+    let m = 65536.0;
+    for l in resnet50_layers(2).into_iter().chain(alexnet_layers(2)) {
+        let s = scaled(l.shape, 4);
+        for pass in [ConvPass::DFilter, ConvPass::DInput] {
+            let plan = TilePlan::for_pass(pass, &s, p, m);
+            let (a, b) = pass_operands(pass, &s, 103);
+            let counters = TrafficCounters::new();
+            let got = conv_pass_tiled_counted(pass, &a, &b, &plan, &counters);
+            let want = pass.naive_oracle(&a, &b, &s);
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "{} {}: tiled gradient diverged from the oracle",
+                l.name,
+                pass.name()
+            );
+            assert_eq!(
+                counters.snapshot(),
+                expected_pass_traffic(&plan),
+                "{} {}",
+                l.name,
+                pass.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_backward_shapes_return_empty_or_zero_gradients() {
+    let p = Precision::uniform();
+    // zero batch: dFilter is the full-size all-zero gradient (like the
+    // oracle), dInput is empty on the batch axis
+    let s = ConvShape::new(0, 3, 4, 5, 5, 3, 3, 1, 1);
+    for pass in [ConvPass::DFilter, ConvPass::DInput] {
+        let plan = TilePlan::for_pass(pass, &s, p, 1024.0);
+        let (a, b) = pass_operands(pass, &s, 1);
+        let got = conv_pass_tiled(pass, &a, &b, &plan);
+        let want = pass.naive_oracle(&a, &b, &s);
+        assert_eq!(got.dims, want.dims, "{}", pass.name());
+        assert!(got.data.iter().all(|&v| v == 0.0), "{}", pass.name());
+        assert_eq!(expected_pass_traffic(&plan), Traffic::default());
+    }
+    // zero input channels: dFilter empty, dInput full-size zero
+    let s2 = ConvShape::new(2, 0, 4, 5, 5, 3, 3, 1, 1);
+    for pass in [ConvPass::DFilter, ConvPass::DInput] {
+        let plan = TilePlan::for_pass(pass, &s2, p, 1024.0);
+        let (a, b) = pass_operands(pass, &s2, 2);
+        let got = conv_pass_tiled(pass, &a, &b, &plan);
+        let want = pass.naive_oracle(&a, &b, &s2);
+        assert_eq!(got.dims, want.dims, "{}", pass.name());
+        assert!(got.data.iter().all(|&v| v == 0.0), "{}", pass.name());
     }
 }
 

@@ -11,7 +11,7 @@
 //! With the `pjrt` feature and a populated `artifacts/` directory, the
 //! original AOT round-trip (PJRT vs the naive oracle) runs as well.
 
-use convbound::conv::{conv7nl_naive, ConvShape, Tensor4};
+use convbound::conv::{conv7nl_naive, ConvPass, ConvShape, Tensor4};
 use convbound::runtime::{ArtifactSpec, Manifest, Runtime};
 
 /// Recover the ConvShape of a single-layer artifact through the manifest's
@@ -79,6 +79,40 @@ fn tiled_builtin_artifacts_match_naive_oracle() {
         let rel = got.rel_l2(&want);
         assert!(rel < 1e-4, "{key}: rel L2 error {rel} vs naive oracle");
         assert_eq!(got.dims.to_vec(), spec.output);
+    }
+}
+
+#[test]
+fn builtin_gradient_artifacts_match_training_oracles_bitwise() {
+    // the training kinds run the pass-generic tiled engine natively: no
+    // artifacts directory, no PJRT, bitwise vs the conv/training.rs
+    // oracles (the backward accumulation-order contract), traffic
+    // surfaced through the same Runtime::traffic entry as forward tiled
+    let mut rt = Runtime::builtin();
+    let grad_keys: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "dfilter" || a.kind == "dinput")
+        .map(|a| a.key())
+        .collect();
+    assert!(grad_keys.len() >= 4, "builtin manifest must expose training kinds");
+    for key in grad_keys {
+        let spec = rt.manifest().find(&key).unwrap().clone();
+        let pass = ConvPass::parse(&spec.kind).expect("gradient kind");
+        let shape = spec.pass_shape(pass).expect("gradient spec inverts");
+        let a = Tensor4::randn(dims4(&spec.inputs[0]), 61);
+        let b = Tensor4::randn(dims4(&spec.inputs[1]), 62);
+        let got = rt.run_loading(&key, &[&a, &b]).expect(&key);
+        let want = pass.naive_oracle(&a, &b, &shape);
+        assert_eq!(got.dims.to_vec(), spec.output, "{key}");
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "{key}: native gradient diverged from the oracle"
+        );
+        let t = rt.traffic(&key).expect("gradient kinds are instrumented");
+        assert!(t.input_words > 0 && t.output_words > 0, "{key}");
     }
 }
 
