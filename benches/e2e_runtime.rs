@@ -4,7 +4,9 @@
 //! `BENCH_kernels.json`, and a whole-network sweep comparing layer-by-layer
 //! vs fused-reference vs fused-packed execution (throughput + measured
 //! per-stage traffic + sliding-window halo-cache savings) emitted as
-//! `BENCH_network.json`.
+//! `BENCH_network.json`. `BENCH_training.json` carries the per-layer
+//! backward-pass sweep plus a `fused_step` section: the whole training
+//! step as fused sweeps vs the materialized layer-by-layer plan.
 //!
 //! Runs out of the box on the built-in native backend (no artifacts, no
 //! PJRT); with an `artifacts/` directory present the same harness drives
@@ -28,10 +30,12 @@ use convbound::conv::{
 use convbound::coordinator::ConvServer;
 use convbound::kernels::{
     conv_im2col, conv_network_fused, conv_network_fused_counted,
-    conv_network_staged, conv_pass_tiled, conv_pass_tiled_counted, conv_tiled,
-    conv_tiled_counted, conv_tiled_parallel, default_workers,
-    expected_pass_traffic, FuseGroup, FusePlan, FusedExec, NetTrafficCounters,
-    TilePlan, TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    conv_network_staged, conv_network_step_counted, conv_pass_tiled,
+    conv_pass_tiled_counted, conv_tiled, conv_tiled_counted,
+    conv_tiled_parallel, default_workers, expected_pass_traffic,
+    naive_network_step, FuseGroup, FusePlan, FusedExec, NetPass,
+    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
+    DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::runtime::{Manifest, Runtime};
 use convbound::util::json::Json;
@@ -430,8 +434,11 @@ fn network_sweep(smoke: bool) -> Json {
 /// Naive vs tiled throughput for the two backward convolutions of a
 /// training step, per catalog layer, with the tiled gradients revalidated
 /// bitwise against the `conv/training.rs` oracles and their measured
-/// traffic against the per-pass analytic model on every bench run;
-/// returns the `BENCH_training.json` document.
+/// traffic against the per-pass analytic model on every bench run; plus a
+/// `fused_step` section comparing the whole training step as fused sweeps
+/// (`NetPass::Step`) against the fully materialized layer-by-layer plan on
+/// the builtin networks (throughput + measured traffic + fused-boundary
+/// words, which must be zero). Returns the `BENCH_training.json` document.
 fn training_sweep(smoke: bool) -> Json {
     let batch = if smoke { 1 } else { 2 };
     let scale = if smoke { 4 } else { 2 };
@@ -539,11 +546,158 @@ fn training_sweep(smoke: bool) -> Json {
         lo.insert("passes".to_string(), Json::Arr(passes_json));
         layers.push(Json::Obj(lo));
     }
+    // ---- fused training step: the whole step as fused sweeps vs the
+    // fully materialized layer-by-layer step plan, per builtin network ----
+    println!(
+        "\n== fused training step: fused sweeps vs layer-by-layer, \
+         builtin networks, M = {m} words =="
+    );
+    let cache = TilePlanCache::new();
+    let mut steps_json = Vec::new();
+    for net in &Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH).networks {
+        let fused = FusePlan::for_pass(NetPass::Step, &net.stages, m, &cache);
+        let layered =
+            FusePlan::materialized_pass(NetPass::Step, &net.stages, m, &cache);
+        let image = Tensor4::randn(net.input_dims(), 31);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 32 + i as u64))
+            .collect();
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let gout = {
+            let s = &net.stages[net.stages.len() - 1].shape;
+            Tensor4::randn(
+                [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize],
+                33,
+            )
+        };
+        // a step performs all three passes per layer: forward recompute,
+        // dFilter, dInput
+        let step_macs = 3.0 * net.updates() as f64;
+
+        // the step contract, revalidated on every bench run: when every
+        // non-last group is fused, the fused step's gradients are bitwise
+        // the layer-by-layer SGD oracle's
+        if fused.step_bitwise() {
+            let c = NetTrafficCounters::new(net.stages.len());
+            let (dw, din) =
+                conv_network_step_counted(&image, &frefs, &gout, &fused, &c);
+            let (dw_ref, din_ref) =
+                naive_network_step(&image, &frefs, &gout, &net.stages);
+            assert_eq!(
+                din.max_abs_diff(&din_ref),
+                0.0,
+                "{}: fused step dImage diverged from the SGD oracle",
+                net.name
+            );
+            for (k, (a, b)) in dw.iter().zip(&dw_ref).enumerate() {
+                assert_eq!(
+                    a.max_abs_diff(b),
+                    0.0,
+                    "{} stage {k}: fused step dFilter diverged",
+                    net.name
+                );
+            }
+        }
+
+        let mut rows = Vec::new();
+        for (mode, plan) in [("fused", &fused), ("layered", &layered)] {
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let r = bench(
+                &format!("training step: {} {mode}", net.name),
+                target,
+                || {
+                    std::hint::black_box(conv_network_step_counted(
+                        &image, &frefs, &gout, plan, &counters,
+                    ));
+                },
+            );
+            // traffic from exactly one execution (the bench loop
+            // accumulated warmup + timed iterations)
+            counters.reset();
+            std::hint::black_box(conv_network_step_counted(
+                &image, &frefs, &gout, plan, &counters,
+            ));
+            let per_stage = counters.snapshot();
+            assert_eq!(
+                per_stage,
+                plan.expected_network_traffic(),
+                "{} {mode}: measured step traffic != analytic model",
+                net.name
+            );
+            let boundary = plan.boundary_words(&per_stage);
+            assert_eq!(
+                boundary, 0,
+                "{} {mode}: fused boundaries moved words",
+                net.name
+            );
+            let secs = r.summary.p50.max(1e-9);
+            rows.push(NetworkRow {
+                mode,
+                secs,
+                mmac_per_s: step_macs / secs / 1e6,
+                measured_words: Traffic::sum(&per_stage).total(),
+                boundary_words: boundary,
+            });
+        }
+        let find = |name: &str| rows.iter().find(|r| r.mode == name).unwrap();
+        let (f, l) = (find("fused"), find("layered"));
+        println!(
+            "  {:<12} {} stages, {} fused boundaries{}: layered {:>7.1} | \
+             fused {:>7.1} MMAC/s ({:.2}x); traffic {} -> {} words ({:.2}x \
+             saved), fused boundary words {}",
+            net.name,
+            net.stages.len(),
+            fused.fused_boundaries(),
+            if fused.step_bitwise() { " (bitwise)" } else { "" },
+            l.mmac_per_s,
+            f.mmac_per_s,
+            f.mmac_per_s / l.mmac_per_s.max(1e-9),
+            l.measured_words,
+            f.measured_words,
+            l.measured_words as f64 / f.measured_words.max(1) as f64,
+            f.boundary_words,
+        );
+
+        let mut so = BTreeMap::new();
+        so.insert("name".to_string(), Json::Str(net.name.clone()));
+        so.insert("batch".to_string(), Json::Num(net.batch() as f64));
+        so.insert("stages".to_string(), Json::Num(net.stages.len() as f64));
+        so.insert(
+            "fused_boundaries".to_string(),
+            Json::Num(fused.fused_boundaries() as f64),
+        );
+        so.insert(
+            "step_bitwise".to_string(),
+            Json::Bool(fused.step_bitwise()),
+        );
+        so.insert(
+            "modes".to_string(),
+            Json::Arr(rows.iter().map(|r| r.json()).collect()),
+        );
+        so.insert(
+            "speedup_fused_vs_layered".to_string(),
+            Json::Num(f.mmac_per_s / l.mmac_per_s.max(1e-9)),
+        );
+        so.insert(
+            "boundary_words_fused".to_string(),
+            Json::Num(f.boundary_words as f64),
+        );
+        so.insert(
+            "traffic_saved_x".to_string(),
+            Json::Num(l.measured_words as f64 / f.measured_words.max(1) as f64),
+        );
+        steps_json.push(Json::Obj(so));
+    }
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("training".to_string()));
     doc.insert("smoke".to_string(), Json::Bool(smoke));
     doc.insert("mem_words".to_string(), Json::Num(m));
     doc.insert("layers".to_string(), Json::Arr(layers));
+    doc.insert("fused_step".to_string(), Json::Arr(steps_json));
     Json::Obj(doc)
 }
 
@@ -594,13 +748,13 @@ fn main() {
         );
     }
 
-    // whole networks (fused pipelines on the native backend; compiled
-    // artifacts under pjrt)
+    // whole networks, forward and training sweeps (fused pipelines on the
+    // native backend; compiled artifacts under pjrt)
     let network_keys: Vec<String> = rt
         .manifest()
         .artifacts
         .iter()
-        .filter(|a| a.kind == "network")
+        .filter(|a| a.kind == "network" || a.kind == "training")
         .map(|a| a.key())
         .collect();
     for key in &network_keys {

@@ -26,6 +26,12 @@ cargo run --release -- exec --layer conv4_x --scale 4 --pass dfilter --check >/d
 echo "==> cargo run --release -- exec --pass dinput --check  (tiled input gradient, bitwise vs oracle)"
 cargo run --release -- exec --layer conv4_x --scale 4 --pass dinput --check >/dev/null
 
+echo "==> cargo run --release -- exec --network tiny_resnet --pass bwd --check  (fused backward sweep, bitwise vs chained oracle)"
+cargo run --release -- exec --network tiny_resnet --pass bwd --check >/dev/null
+
+echo "==> cargo run --release -- exec --network tiny_resnet --pass step --check  (fused training step, bitwise vs SGD oracle)"
+cargo run --release -- exec --network tiny_resnet --pass step --check >/dev/null
+
 echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json + BENCH_training.json)"
 rm -f BENCH_kernels.json BENCH_network.json BENCH_training.json  # stale files must not mask a failed write
 cargo bench --bench e2e_runtime -- --smoke >/dev/null
@@ -42,6 +48,18 @@ grep -q '"pass":"dfilter"' BENCH_training.json \
     || { echo "FAIL: dfilter entries missing from BENCH_training.json"; exit 1; }
 grep -q '"pass":"dinput"' BENCH_training.json \
     || { echo "FAIL: dinput entries missing from BENCH_training.json"; exit 1; }
+
+echo "==> BENCH_training.json: fused_step section present, bitwise, zero boundary words"
+# the hard invariants (fused step bitwise vs the layer-by-layer SGD oracle,
+# measured traffic == analytic model) are asserted INSIDE the bench — a
+# violation panics it. Here we gate on the fields being present and on the
+# fused step's boundaries actually being dry.
+grep -q '"fused_step":' BENCH_training.json \
+    || { echo "FAIL: fused_step section missing from BENCH_training.json"; exit 1; }
+grep -q '"step_bitwise":true' BENCH_training.json \
+    || { echo "FAIL: no builtin network runs its fused step bitwise"; exit 1; }
+grep -q '"boundary_words_fused":0' BENCH_training.json \
+    || { echo "FAIL: fused training step moved words across a fused boundary"; exit 1; }
 
 echo "==> BENCH_network.json: fused speedup fields + packed-vs-reference gate + halo savings"
 grep -q '"speedup_fused_vs_layered":' BENCH_network.json \

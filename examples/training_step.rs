@@ -1,103 +1,162 @@
-//! Training-step driver: forward + backward convolutions through the
-//! runtime, with an SGD update loop showing the loss actually falls.
+//! Training-step driver: one fused sweep per SGD step through a whole
+//! network, with the loss boundary as the only materialization.
 //!
 //! ```bash
-//! cargo run --release --example training_step          # builtin, no setup
-//! make artifacts && cargo run --release --example training_step  # AOT
+//! cargo run --release --example training_step
 //! ```
 //!
 //! This exercises the paper's point that a training step is *three* 7NL
-//! CNN computations (forward, dFilter, dInput — see conv/training.rs).
-//! With an `artifacts/` directory the passes run as AOT-lowered HLO; with
-//! none, `Manifest::builtin`'s `"dfilter"` artifact routes the gradient
-//! through the pass-generic LP-tiled engine (`kernels/`), which is bitwise
-//! identical to the naive oracle — so the same driver runs end to end with
-//! zero setup.
+//! CNN computations per layer (forward, dFilter, dInput — see
+//! conv/training.rs), and the engine's answer to it: plan the whole chain
+//! once with `FusePlan::for_pass(NetPass::Step, ..)` and run every step as
+//! a single fused sweep (`conv_network_step_counted`). Inside a fused
+//! group the forward activations are recomputed in-tile and the gradients
+//! stay resident, so the only tensors that touch main memory between the
+//! stages are the ones SGD itself needs — the loss gradient in, the
+//! filter gradients and the image gradient out. The driver checks all
+//! three claims every run:
+//!
+//! * the fused gradients are bitwise identical to the layer-by-layer
+//!   SGD oracle (`naive_network_step`) — tiny_resnet fuses into a single
+//!   group, so `FusePlan::step_bitwise` holds;
+//! * the measured per-stage traffic matches the plan's analytic model
+//!   (`expected_network_traffic`) exactly, with zero words crossing the
+//!   fused boundaries;
+//! * the loss actually falls.
 
 use convbound::bounds::sequential_bound;
-use convbound::conv::{
-    backward_shapes, conv7nl_naive, dfilter_naive, ConvShape, Precision, Tensor4,
+use convbound::conv::Tensor4;
+use convbound::kernels::{
+    conv_network_fused_counted, conv_network_step_counted, naive_network,
+    naive_network_step, FusePlan, NetPass, NetTrafficCounters, TilePlanCache,
+    Traffic, DEFAULT_TILE_MEM_WORDS,
 };
-use convbound::runtime::Runtime;
-
-fn artifact_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+use convbound::runtime::NetworkSpec;
 
 fn main() {
-    let mut rt = if artifact_dir().join("manifest.json").exists() {
-        Runtime::new(artifact_dir()).expect("runtime")
-    } else {
-        println!("no artifacts/ — training on the built-in native backend");
-        Runtime::builtin()
-    };
-    let fwd = rt.manifest().find("unit3x3/blocked").expect("fwd artifact").clone();
-    let has_grad = rt.manifest().find("unit3x3/dfilter").is_some();
-    if !has_grad {
-        eprintln!("gradient artifacts missing — re-run `make artifacts`");
-        std::process::exit(1);
+    let net = NetworkSpec::tiny_resnet(2);
+    let cache = TilePlanCache::new();
+
+    // the communication story of the step, stage by stage
+    println!("== per-stage Theorem 2.1 bounds at M = 64K words ==");
+    for (k, st) in net.stages.iter().enumerate() {
+        println!(
+            "  stage {k}: G = {:>9}  X >= {:.3e} words",
+            st.shape.updates(),
+            sequential_bound(&st.shape, st.precision, DEFAULT_TILE_MEM_WORDS)
+        );
     }
 
-    let xd = fwd.inputs[0].clone();
-    let wd = fwd.inputs[1].clone();
-    let od = fwd.output.clone();
-    let shape = ConvShape::new(
-        xd[0] as u64, wd[0] as u64, wd[1] as u64, od[2] as u64, od[3] as u64,
-        wd[2] as u64, wd[3] as u64,
-        ((xd[2] - wd[2]) / od[2]) as u64,
-        ((xd[3] - wd[3]) / od[3]) as u64,
+    // one plan per pass, solved once and reused for every SGD step
+    let fwd = FusePlan::new(&net.stages, DEFAULT_TILE_MEM_WORDS, &cache);
+    let step = FusePlan::for_pass(
+        NetPass::Step,
+        &net.stages,
+        DEFAULT_TILE_MEM_WORDS,
+        &cache,
+    );
+    println!(
+        "\n== fused training step: {} stages, {} fused boundaries ==",
+        net.stages.len(),
+        step.fused_boundaries()
+    );
+    assert!(
+        step.step_bitwise(),
+        "tiny_resnet must fuse into one group at the default budget"
     );
 
-    // the communication story of the step: three bounds
-    let t = backward_shapes(shape);
-    let p = Precision::uniform();
-    println!("== per-pass Theorem 2.1 bounds at M = 64K words ==");
-    for (name, s) in [("forward", t.forward), ("dFilter", t.dfilter), ("dInput", t.dinput)] {
-        println!("  {name:<8} G = {:>10}  X >= {:.3e} words", s.updates(),
-                 sequential_bound(&s, p, 65536.0));
-    }
+    // teacher-student: fit the filters to reproduce a fixed teacher
+    let image = Tensor4::randn(net.input_dims(), 11);
+    let teacher: Vec<Tensor4> = net
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 20 + i as u64))
+        .collect();
+    let trefs: Vec<&Tensor4> = teacher.iter().collect();
+    let target = naive_network(&image, &trefs, &net.stages);
+    let mut filters: Vec<Tensor4> = net
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 30 + i as u64))
+        .collect();
 
-    // teacher-student: fit w to reproduce a fixed teacher's outputs
-    let x = Tensor4::randn([xd[0], xd[1], xd[2], xd[3]], 11);
-    let w_teacher = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 12);
-    let target = conv7nl_naive(&x, &w_teacher, &shape);
-    let mut w = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 13);
-
-    rt.load("unit3x3/blocked").expect("compile fwd");
-    rt.load("unit3x3/dfilter").expect("compile dfilter");
-
-    println!("\n== SGD on ||conv(x, w) - target||² through the artifacts ==");
-    let lr = 1e-3_f32;
+    println!("\n== SGD on ||net(x) - target||² as one fused sweep per step ==");
+    let lr = 2e-3_f32;
+    let counters = NetTrafficCounters::new(net.stages.len());
     let mut first_loss = None;
     let mut last_loss = 0.0;
-    for step in 0..30 {
-        let out = rt.run("unit3x3/blocked", &[&x, &w]).expect("fwd");
+    for sgd_step in 0..30 {
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        // forward sweep for the loss boundary
+        let fwd_counters = NetTrafficCounters::new(net.stages.len());
+        let out = conv_network_fused_counted(&image, &frefs, &fwd, &fwd_counters);
         // residual g = out - target; loss = ||g||²/2
-        let mut g = out.clone();
-        for (gv, tv) in g.data.iter_mut().zip(&target.data) {
+        let mut gout = out.clone();
+        for (gv, tv) in gout.data.iter_mut().zip(&target.data) {
             *gv -= tv;
         }
-        let loss: f32 = g.data.iter().map(|v| v * v).sum::<f32>() / 2.0;
-        if step == 0 {
+        let loss: f32 = gout.data.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        // the whole backward half of the step: one fused sweep
+        let (dfilters, _dimage) =
+            conv_network_step_counted(&image, &frefs, &gout, &step, &counters);
+        if sgd_step == 0 {
             first_loss = Some(loss);
-            // validate the artifact gradient against the naive oracle once
-            let dw_art = rt.run("unit3x3/dfilter", &[&x, &g]).expect("dfilter");
-            let dw_ref = dfilter_naive(&x, &g, &shape);
-            let rel = dw_art.rel_l2(&dw_ref);
-            assert!(rel < 1e-5, "dfilter artifact vs oracle rel_l2 {rel}");
-            println!("  gradient check vs naive oracle: rel_l2 = {rel:.2e} OK");
+            // validate the fused gradients against the layer-by-layer SGD
+            // oracle once — bitwise, since the plan is a single fused group
+            let (dw_ref, din_ref) =
+                naive_network_step(&image, &frefs, &gout, &net.stages);
+            assert_eq!(_dimage.max_abs_diff(&din_ref), 0.0, "dImage");
+            for (k, (dw, want)) in
+                dfilters.iter().zip(dw_ref.iter()).enumerate()
+            {
+                assert_eq!(dw.max_abs_diff(want), 0.0, "dFilter stage {k}");
+            }
+            println!("  gradient check vs layer-by-layer oracle: bitwise OK");
         }
-        let dw = rt.run("unit3x3/dfilter", &[&x, &g]).expect("dfilter");
-        for (wv, gv) in w.data.iter_mut().zip(&dw.data) {
-            *wv -= lr * gv;
+        for (w, dw) in filters.iter_mut().zip(dfilters.iter()) {
+            for (wv, gv) in w.data.iter_mut().zip(&dw.data) {
+                *wv -= lr * gv;
+            }
         }
         last_loss = loss;
-        if step % 10 == 0 {
-            println!("  step {step:>3}: loss {loss:.4}");
+        if sgd_step % 10 == 0 {
+            println!("  step {sgd_step:>3}: loss {loss:.4}");
         }
     }
     let first = first_loss.unwrap();
     println!("  final loss {last_loss:.4} (from {first:.4})");
     assert!(last_loss < first * 0.5, "SGD must reduce the loss");
-    println!("\ntraining step driver complete: loss reduced {:.1}x", first / last_loss);
+
+    // the traffic story: measured == analytic model, fused boundaries dry
+    let measured = counters.snapshot();
+    let per_step: Vec<Traffic> = {
+        let want = step.expected_network_traffic();
+        measured
+            .iter()
+            .zip(want.iter())
+            .map(|(m, w)| {
+                assert_eq!(m.total() % 30, 0, "30 identical sweeps");
+                let once = Traffic {
+                    input_words: m.input_words / 30,
+                    filter_words: m.filter_words / 30,
+                    output_words: m.output_words / 30,
+                };
+                assert_eq!(
+                    once.total(),
+                    w.total(),
+                    "measured step traffic must match the analytic model"
+                );
+                once
+            })
+            .collect()
+    };
+    assert_eq!(step.boundary_words(&per_step), 0, "fused boundaries");
+    println!(
+        "\nper-step traffic {} words, fused boundaries 0 words — \
+         training driver complete: loss reduced {:.1}x",
+        Traffic::sum(&per_step).total(),
+        first / last_loss
+    );
 }

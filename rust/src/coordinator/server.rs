@@ -15,10 +15,16 @@
 //!
 //! With the default native backend a server needs no artifacts at all:
 //! [`ConvServer::start_builtin`] serves the synthetic
-//! [`Manifest::builtin`] layers end to end, and
+//! [`Manifest::builtin`] layers end to end,
 //! [`ConvServer::start_builtin_network`] serves whole-network requests
 //! through the fused pipeline (one filter tensor per stage, one submit per
-//! image, the response is the final stage's activation slice).
+//! image, the response is the final stage's activation slice), and
+//! [`ConvServer::start_builtin_training`] serves the same pipeline's fused
+//! *backward* sweep (`"training"` artifacts: submit a tail loss-gradient
+//! slice, receive the head image-gradient slice) — the batcher, padding
+//! accounting and zero-copy path are identical because a training artifact
+//! has the same shape contract: one batched request operand plus fixed
+//! per-stage weights.
 //!
 //! Zero-copy path: [`ConvServer::submit`] takes anything convertible into
 //! an `Arc<Tensor4>`, weights are held in `Arc`s for the lifetime of the
@@ -155,6 +161,19 @@ impl ConvServer {
     /// Start a whole-network server over the built-in native manifest
     /// (key: `tiny_resnet/network`, one filter per stage).
     pub fn start_builtin_network(
+        key: &str,
+        weights: Vec<Tensor4>,
+        linger: Duration,
+    ) -> Result<ConvServer> {
+        ConvServer::start_source(Source::Builtin, key, weights, linger)
+    }
+
+    /// Start a gradient server over the built-in native manifest (key:
+    /// `tiny_resnet/training`, one fixed filter per stage). Requests are
+    /// tail loss-gradient slices `(1, cO, wO, hO)`; each response is the
+    /// head image-gradient slice the fused backward sweep produces —
+    /// bitwise identical to chaining the per-stage dInput oracles.
+    pub fn start_builtin_training(
         key: &str,
         weights: Vec<Tensor4>,
         linger: Duration,

@@ -39,14 +39,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::conv::{
-    assert_pass_operands, conv7nl_naive, ConvPass, ConvShape, NetworkStage,
-    Tensor4,
+    assert_pass_operands, conv7nl_naive, dinput_naive, ConvPass, ConvShape,
+    NetworkStage, Tensor4,
 };
 use crate::util::threadpool::ThreadPool;
 
 use super::fuse::{
-    group_spans, group_tile_columns, input_overlap_rows, input_span, FuseGroup,
-    FusePlan, FusedExec,
+    bwd_group_spans, bwd_group_tile_columns, group_spans, group_tile_columns,
+    input_overlap_rows, input_span, FuseGroup, FusePlan, FusedExec, NetPass,
+    Span,
 };
 use super::gemm::{self, TileDims};
 use super::pack;
@@ -429,24 +430,8 @@ fn run_dinput_tile(
     // valid (tap, output coordinate) pairs per tile column/row — identical
     // across reduction steps, computed once; taps ascend in each list, so
     // the per-element accumulation runs in the oracle's (i6, i7) order
-    let pairs = |x0: u64, extent: usize, stride: u64, filt: usize, range: u64| {
-        (0..extent)
-            .map(|dx| {
-                let xcol = x0 + dx as u64;
-                (0..filt)
-                    .filter_map(|tap| {
-                        let t = xcol.checked_sub(tap as u64)?;
-                        if t % stride != 0 || t / stride >= range {
-                            return None;
-                        }
-                        Some((tap, (t / stride) as usize))
-                    })
-                    .collect::<Vec<(usize, usize)>>()
-            })
-            .collect::<Vec<_>>()
-    };
-    let wpairs = pairs(ot.wo.start, ex, s.s_w, w_f, s.w_o);
-    let hpairs = pairs(ot.ho.start, ey, s.s_h, h_f, s.h_o);
+    let wpairs = pack::dinput_pairs(ot.wo.start, ot.wo.len, s.s_w, s.w_f, s.w_o, 0);
+    let hpairs = pack::dinput_pairs(ot.ho.start, ot.ho.len, s.s_h, s.h_f, s.h_o, 0);
     for rt in red {
         let (wo_lo, wo_len, ho_lo, ho_len) =
             pack::pack_dinput_gout(g, s, ot, rt, &mut gbuf);
@@ -1243,6 +1228,576 @@ pub fn conv_network_staged(
     Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
 }
 
+// ---------------- fused training sweeps (NetPass::Backward / Step) ----------------
+//
+// The backward sweep chains dInput through a fused group the way the
+// forward sweep chains activations: tiles cover the group *head's*
+// input-gradient grid, each tile pulls its loss-gradient span at the tail
+// and walks the transposed stencil head-ward, with every interior gradient
+// held in ping-pong scratch (zero boundary words). The step sweep runs the
+// whole training step per batch block: recompute the group's activations,
+// then walk dFilter + dInput back down, with the filter gradients resident
+// across blocks. Both sweeps obey the backward accumulation-order contract
+// above, so fused gradients are bitwise identical to the
+// `conv/training.rs` oracles.
+
+/// Validate the (loss gradient, per-stage filters) operands of a backward
+/// network sweep: `gout` must carry the tail stage's output dims.
+fn assert_bwd_network_operands(
+    gout: &Tensor4,
+    filters: &[&Tensor4],
+    stages: &[NetworkStage],
+) {
+    assert!(!stages.is_empty(), "empty network");
+    assert_eq!(filters.len(), stages.len(), "one filter per stage");
+    let tail = &stages[stages.len() - 1].shape;
+    assert_eq!(gout.dims, out_dims(tail), "loss gradient shape mismatch");
+    for (k, st) in stages.iter().enumerate() {
+        assert_eq!(
+            filters[k].dims,
+            st.shape.filter_dims(),
+            "stage {k} filter shape mismatch"
+        );
+    }
+}
+
+/// The patch-local transposed-stencil nest: produce the input-gradient
+/// span `osp` of stage `s` from the output-gradient patch `gpatch`
+/// (absolute span `gsp = dout_span(s, osp)`), overwriting `out`
+/// (`[bn][cI][osp.w][osp.h]`). Per element the accumulation runs over
+/// ascending `(cO, i6, i7)` with the oracle's zero-tap skip — exactly
+/// [`dinput_naive`]'s per-element term order, so span-restricted execution
+/// stays bitwise identical to the full nest. Elements no stencil tap
+/// reaches (the trailing σ padding rows) come out exactly zero.
+fn dinput_patch(
+    gpatch: &Tensor4,
+    gsp: Span,
+    filter: &Tensor4,
+    s: &ConvShape,
+    osp: Span,
+    out: &mut Tensor4,
+) {
+    let bn = out.dims[0];
+    let c_i = s.c_i as usize;
+    let c_o = s.c_o as usize;
+    let (ow, oh) = (osp.w_len() as usize, osp.h_len() as usize);
+    // valid (tap, patch-relative output coordinate) pairs per input
+    // column/row; taps ascend, giving the oracle's (i6, i7) order
+    let wpairs =
+        pack::dinput_pairs(osp.w0, osp.w_len(), s.s_w, s.w_f, s.w_o, gsp.w0);
+    let hpairs =
+        pack::dinput_pairs(osp.h0, osp.h_len(), s.s_h, s.h_f, s.h_o, gsp.h0);
+    for n in 0..bn {
+        for ci in 0..c_i {
+            for dx in 0..ow {
+                let wp = &wpairs[dx];
+                for dy in 0..oh {
+                    let hp = &hpairs[dy];
+                    let mut elem = 0.0f32;
+                    for co in 0..c_o {
+                        for &(i6, wo) in wp {
+                            for &(i7, ho) in hp {
+                                let f = filter.at(ci, co, i6, i7);
+                                if f == 0.0 {
+                                    // the oracle's zero-tap skip
+                                    continue;
+                                }
+                                elem += gpatch.at(n, co, wo, ho) * f;
+                            }
+                        }
+                    }
+                    *out.at_mut(n, ci, dx, dy) = elem;
+                }
+            }
+        }
+    }
+}
+
+/// Reusable per-worker scratch for a backward sweep: the gradient
+/// ping-pong patches and the previous h-tile's full tail loss-gradient
+/// patch (the sliding-window carry — the carried span is remembered
+/// because boundary clamping makes the overlap non-constant, unlike the
+/// forward sweep's fixed per-level row counts).
+struct BwdScratch {
+    cur: Tensor4,
+    next: Tensor4,
+    carry: Tensor4,
+    carry_span: Option<Span>,
+}
+
+impl BwdScratch {
+    fn new() -> BwdScratch {
+        BwdScratch {
+            cur: Tensor4::zeros([0, 0, 0, 0]),
+            next: Tensor4::zeros([0, 0, 0, 0]),
+            carry: Tensor4::zeros([0, 0, 0, 0]),
+            carry_span: None,
+        }
+    }
+}
+
+/// Execute one backward tile of a fused group and return (a reference to)
+/// the head's finished input-gradient tile, held in scratch.
+///
+/// The tail loss-gradient patch is assembled from the previous h-tile's
+/// carried patch (rows already in fast memory — counted as halo words)
+/// plus fresh rows read from `grad`; the dInput chain then walks tail →
+/// head through [`dinput_patch`], charging each stage's filter once per
+/// tile and the head's full tile write. A gradient element's value
+/// depends only on its absolute position, so cached rows are bitwise
+/// equal to re-read ones and the sweep stays bitwise identical to the
+/// layer-by-layer [`dinput_naive`] chain.
+#[allow(clippy::too_many_arguments)]
+fn run_bwd_tile<'a>(
+    grad: &Tensor4,
+    filters: &[&Tensor4],
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    tn: Blk,
+    tw: Blk,
+    th: Blk,
+    halo: bool,
+    scratch: &'a mut BwdScratch,
+    counters: &NetTrafficCounters,
+) -> &'a Tensor4 {
+    let spans = bwd_group_spans(stages, g.start, g.end, tw, th);
+    let head = &stages[g.start].shape;
+    let tail = &stages[g.end].shape;
+    let bn = tn.len as usize;
+    let co_b = tail.c_o as usize;
+    let gsp = spans[g.end - g.start];
+    let (gw, gh) = (gsp.w_len() as usize, gsp.h_len() as usize);
+    let more_tiles = th.start + th.len < head.in_h();
+
+    // ---- assemble the tail loss-gradient patch ----
+    let fresh_h0 = match (halo, scratch.carry_span) {
+        (true, Some(p)) => p.h1.clamp(gsp.h0, gsp.h1),
+        _ => gsp.h0,
+    };
+    let carried = (fresh_h0 - gsp.h0) as usize;
+    reset_tensor(&mut scratch.cur, [bn, co_b, gw, gh]);
+    if carried > 0 {
+        let off = (gsp.h0 - scratch.carry_span.unwrap().h0) as usize;
+        let BwdScratch { cur, carry, .. } = &mut *scratch;
+        for n in 0..bn {
+            for c in 0..co_b {
+                for a in 0..gw {
+                    let src = carry.idx(n, c, a, off);
+                    let dst = cur.idx(n, c, a, 0);
+                    cur.data[dst..dst + carried]
+                        .copy_from_slice(&carry.data[src..src + carried]);
+                }
+            }
+        }
+        counters.add_halo(g.end, (bn * co_b * gw * carried) as u64);
+    }
+    {
+        let cur = &mut scratch.cur;
+        let fresh = gh - carried;
+        for n in 0..bn {
+            let na = tn.start as usize + n;
+            for c in 0..co_b {
+                for a in 0..gw {
+                    let wa = gsp.w0 as usize + a;
+                    let src = grad.idx(na, c, wa, fresh_h0 as usize);
+                    let dst = cur.idx(n, c, a, carried);
+                    cur.data[dst..dst + fresh]
+                        .copy_from_slice(&grad.data[src..src + fresh]);
+                }
+            }
+        }
+        counters
+            .stage(g.end)
+            .add_input((bn * co_b * gw * fresh) as u64);
+    }
+    if halo && more_tiles {
+        let BwdScratch { cur, carry, .. } = &mut *scratch;
+        reset_tensor(carry, cur.dims);
+        carry.data.copy_from_slice(&cur.data);
+        scratch.carry_span = Some(gsp);
+    }
+
+    // ---- the dInput chain: stage k's output gradient -> its input
+    // gradient (= stage k−1's output gradient), tail to head ----
+    for k in (g.start..=g.end).rev() {
+        let st = &stages[k].shape;
+        let osp = if k > g.start {
+            spans[k - 1 - g.start]
+        } else {
+            Span {
+                w0: tw.start,
+                w1: tw.start + tw.len,
+                h0: th.start,
+                h1: th.start + th.len,
+            }
+        };
+        let gsp_k = spans[k - g.start];
+        reset_tensor(
+            &mut scratch.next,
+            [bn, st.c_i as usize, osp.w_len() as usize, osp.h_len() as usize],
+        );
+        {
+            let BwdScratch { cur, next, .. } = &mut *scratch;
+            dinput_patch(cur, gsp_k, filters[k], st, osp, next);
+        }
+        counters.stage(k).add_filter(st.filter_size());
+        std::mem::swap(&mut scratch.cur, &mut scratch.next);
+    }
+    counters.stage(g.start).add_output(scratch.cur.len() as u64);
+    &scratch.cur
+}
+
+/// Serial fused backward (dInput-chain) execution with per-stage traffic
+/// accounting: groups run tail to head, fused groups sweep the group
+/// head's input-gradient tiles through [`run_bwd_tile`], materialized
+/// groups run the stage's LP-tiled dInput engine. Every path obeys the
+/// backward accumulation-order contract, so the result is bitwise
+/// identical to [`super::fuse::naive_network_bwd`] for *every* plan, and
+/// measured traffic equals [`FusePlan::expected_network_traffic`] exactly.
+pub fn conv_network_bwd_counted(
+    gout: &Tensor4,
+    filters: &[&Tensor4],
+    plan: &FusePlan,
+    counters: &NetTrafficCounters,
+) -> Tensor4 {
+    assert_eq!(plan.pass, NetPass::Backward, "plan solved for a different pass");
+    assert_bwd_network_operands(gout, filters, &plan.stages);
+    assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let mut grad: Option<Tensor4> = None;
+    for g in plan.groups.iter().rev() {
+        let gin: &Tensor4 = grad.as_ref().unwrap_or(gout);
+        let next = if g.is_fused() {
+            let head = &plan.stages[g.start].shape;
+            let mut out = Tensor4::zeros([
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize,
+            ]);
+            let mut scratch = BwdScratch::new();
+            for (tn, tw, hs) in bwd_group_tile_columns(&plan.stages, g) {
+                scratch.carry_span = None;
+                for th in hs {
+                    let tile = run_bwd_tile(
+                        gin,
+                        filters,
+                        &plan.stages,
+                        g,
+                        tn,
+                        tw,
+                        th,
+                        plan.halo_cache,
+                        &mut scratch,
+                        counters,
+                    );
+                    scatter_network(&mut out, tn, tw, th, tile);
+                }
+            }
+            out
+        } else {
+            let k = g.start;
+            conv_pass_tiled_counted(
+                ConvPass::DInput,
+                gin,
+                filters[k],
+                &plan.dinput_plans[k],
+                counters.stage(k),
+            )
+        };
+        grad = Some(next);
+    }
+    grad.expect("network has at least one stage")
+}
+
+/// Fused backward execution fanned out over a [`ThreadPool`]. As in the
+/// forward sweep, the unit of parallelism is one (batch, w) tile column of
+/// the group head's input-gradient grid: a column's h-tiles chain through
+/// the sliding-window carry on one worker, and distinct columns write
+/// disjoint gradient regions. Bitwise identical to
+/// [`conv_network_bwd_counted`].
+pub fn conv_network_bwd(
+    gout: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &Arc<FusePlan>,
+    pool: &ThreadPool,
+    counters: &NetTrafficCounters,
+) -> Tensor4 {
+    assert_eq!(plan.pass, NetPass::Backward, "plan solved for a different pass");
+    {
+        let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
+        assert_bwd_network_operands(gout, &frefs, &plan.stages);
+    }
+    assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let mut grad: Arc<Tensor4> = Arc::clone(gout);
+    for gi in (0..plan.groups.len()).rev() {
+        let g = &plan.groups[gi];
+        let next = if g.is_fused() {
+            let cols = bwd_group_tile_columns(&plan.stages, g);
+            let head = &plan.stages[g.start].shape;
+            let mut out = Tensor4::zeros([
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize,
+            ]);
+            let (g2, p2) = (Arc::clone(&grad), Arc::clone(plan));
+            let f2: Vec<Arc<Tensor4>> = filters.to_vec();
+            let c2 = counters.clone();
+            let bufs = pool.map(cols.clone(), move |(tn, tw, hs)| {
+                let g = p2.groups[gi];
+                let frefs: Vec<&Tensor4> =
+                    f2.iter().map(|f| f.as_ref()).collect();
+                let mut scratch = BwdScratch::new();
+                let mut tiles = Vec::with_capacity(hs.len());
+                for th in hs {
+                    let tile = run_bwd_tile(
+                        &g2,
+                        &frefs,
+                        &p2.stages,
+                        &g,
+                        tn,
+                        tw,
+                        th,
+                        p2.halo_cache,
+                        &mut scratch,
+                        &c2,
+                    );
+                    tiles.push(tile.clone());
+                }
+                tiles
+            });
+            for ((tn, tw, hs), tiles) in cols.iter().zip(&bufs) {
+                for (th, tile) in hs.iter().zip(tiles) {
+                    scatter_network(&mut out, *tn, *tw, *th, tile);
+                }
+            }
+            out
+        } else {
+            let k = g.start;
+            conv_pass_tiled_parallel(
+                ConvPass::DInput,
+                &grad,
+                &filters[k],
+                &plan.dinput_plans[k],
+                pool,
+                counters.stage(k),
+            )
+        };
+        grad = Arc::new(next);
+    }
+    Arc::try_unwrap(grad).unwrap_or_else(|a| (*a).clone())
+}
+
+/// Extract batch rows `tn` of `t` as an owned tensor (the batch axis is
+/// outermost, so a block is one contiguous slice).
+fn batch_block(t: &Tensor4, tn: Blk) -> Tensor4 {
+    let stride = t.dims[1] * t.dims[2] * t.dims[3];
+    let s0 = tn.start as usize * stride;
+    let s1 = s0 + tn.len as usize * stride;
+    Tensor4 {
+        dims: [tn.len as usize, t.dims[1], t.dims[2], t.dims[3]],
+        data: t.data[s0..s1].to_vec(),
+    }
+}
+
+/// Write a batch block back at rows `tn` of `out`.
+fn scatter_batch_block(out: &mut Tensor4, tn: Blk, blk: &Tensor4) {
+    let stride = out.dims[1] * out.dims[2] * out.dims[3];
+    let s0 = tn.start as usize * stride;
+    out.data[s0..s0 + blk.data.len()].copy_from_slice(&blk.data);
+}
+
+/// [`crate::conv::dfilter_naive`]'s exact nest, accumulating into the
+/// resident filter-gradient tensor instead of a fresh one. The step sweep
+/// feeds batch blocks in ascending order and this nest adds one scalar
+/// accumulator per (element, n) over ascending `(wO, hO)` — so across
+/// blocks every dFilter element receives its per-sample terms exactly as
+/// the oracle's flat `i1` loop does, keeping the blocked sweep bitwise.
+fn dfilter_accumulate(x: &Tensor4, g: &Tensor4, s: &ConvShape, out: &mut Tensor4) {
+    let (n, c_i, c_o) = (s.n as usize, s.c_i as usize, s.c_o as usize);
+    let (w_o, h_o) = (s.w_o as usize, s.h_o as usize);
+    let (w_f, h_f) = (s.w_f as usize, s.h_f as usize);
+    let (sw, sh) = (s.s_w as usize, s.s_h as usize);
+    for i1 in 0..n {
+        for i2 in 0..c_i {
+            for i3 in 0..c_o {
+                for i6 in 0..w_f {
+                    for i7 in 0..h_f {
+                        let mut acc = 0.0f32;
+                        for i4 in 0..w_o {
+                            for i5 in 0..h_o {
+                                acc += x.at(i1, i2, sw * i4 + i6, sh * i5 + i7)
+                                    * g.at(i1, i3, i4, i5);
+                            }
+                        }
+                        *out.at_mut(i2, i3, i6, i7) += acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One fused training step: forward to the loss boundary, then every
+/// filter and the image gradient, with fused groups materializing nothing
+/// between their stages. Returns `(per-stage dFilter, dInput of stage 0)`.
+///
+/// Phase 1 runs the forward network, materializing only the boundary
+/// activations between groups (the last group's forward output feeds
+/// nothing — the loss gradient arrives from outside — so it is skipped).
+/// Phase 2 walks the groups tail to head; a fused group processes one
+/// batch block at a time in ascending order: re-read the head activation
+/// block, recompute the interior activations, read the loss-gradient
+/// block at the tail, then walk dFilter + dInput back down with the
+/// group's filter gradients resident across blocks (spilled once per
+/// group). Batch blocking is the only blocking — dFilter's accumulation
+/// contract forbids spatial tiles — so when every non-last group is fused
+/// ([`FusePlan::step_bitwise`]) the whole step is bitwise identical to
+/// [`super::fuse::naive_network_step`]; materialized groups run the
+/// LP-tiled engine (gradients bitwise, forward to float tolerance).
+/// Measured per-stage traffic equals
+/// [`FusePlan::expected_network_traffic`] exactly.
+pub fn conv_network_step_counted(
+    image: &Tensor4,
+    filters: &[&Tensor4],
+    gout: &Tensor4,
+    plan: &FusePlan,
+    counters: &NetTrafficCounters,
+) -> (Vec<Tensor4>, Tensor4) {
+    assert_eq!(plan.pass, NetPass::Step, "plan solved for a different pass");
+    assert_network_operands(image, filters, &plan.stages);
+    {
+        let tail = &plan.stages[plan.stages.len() - 1].shape;
+        assert_eq!(gout.dims, out_dims(tail), "loss gradient shape mismatch");
+    }
+    assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let groups = &plan.groups;
+    let last = groups.len() - 1;
+
+    // ---- phase 1: forward, materializing only group-boundary activations ----
+    let mut boundary: Vec<Option<Tensor4>> = vec![None; groups.len()];
+    for (gi, g) in groups[..last].iter().enumerate() {
+        let input: &Tensor4 = if gi == 0 {
+            image
+        } else {
+            boundary[gi - 1].as_ref().unwrap()
+        };
+        let out = if g.is_fused() {
+            let head = &plan.stages[g.start].shape;
+            let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
+            for tn in tiles::split(head.n, g.b_n) {
+                let mut act = batch_block(input, tn);
+                counters.stage(g.start).add_input(act.len() as u64);
+                for k in g.start..=g.end {
+                    let st = &plan.stages[k].shape;
+                    let sub = ConvShape { n: tn.len, ..*st };
+                    act = conv7nl_naive(&act, filters[k], &sub);
+                    counters.stage(k).add_filter(st.filter_size());
+                }
+                counters.stage(g.end).add_output(act.len() as u64);
+                scatter_batch_block(&mut out, tn, &act);
+            }
+            out
+        } else {
+            let k = g.start;
+            conv_tiled_counted(
+                input,
+                filters[k],
+                &plan.stage_plans[k],
+                counters.stage(k),
+            )
+        };
+        boundary[gi] = Some(out);
+    }
+
+    // ---- phase 2: the training sweep, tail group to head group ----
+    let mut dfilters: Vec<Tensor4> = plan
+        .stages
+        .iter()
+        .map(|st| Tensor4::zeros(st.shape.filter_dims()))
+        .collect();
+    let mut grad = gout.clone();
+    for gi in (0..groups.len()).rev() {
+        let g = &groups[gi];
+        let input: &Tensor4 = if gi == 0 {
+            image
+        } else {
+            boundary[gi - 1].as_ref().unwrap()
+        };
+        if g.is_fused() {
+            let head = &plan.stages[g.start].shape;
+            let mut din = Tensor4::zeros([
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize,
+            ]);
+            for tn in tiles::split(head.n, g.b_n) {
+                // head activation block + interior recompute (the tail
+                // stage's forward output is never needed)
+                let act0 = batch_block(input, tn);
+                counters.stage(g.start).add_input(act0.len() as u64);
+                let mut acts: Vec<Tensor4> = Vec::with_capacity(g.len());
+                acts.push(act0);
+                for k in g.start..g.end {
+                    let st = &plan.stages[k].shape;
+                    let sub = ConvShape { n: tn.len, ..*st };
+                    let next = conv7nl_naive(acts.last().unwrap(), filters[k], &sub);
+                    counters.stage(k).add_filter(st.filter_size());
+                    acts.push(next);
+                }
+                // loss-gradient block at the tail
+                let mut gblk = batch_block(&grad, tn);
+                counters.stage(g.end).add_input(gblk.len() as u64);
+                // backward walk: dFilter accumulates into the resident
+                // group gradients, dInput chains the block head-ward
+                for k in (g.start..=g.end).rev() {
+                    let st = &plan.stages[k].shape;
+                    let sub = ConvShape { n: tn.len, ..*st };
+                    dfilter_accumulate(
+                        &acts[k - g.start],
+                        &gblk,
+                        &sub,
+                        &mut dfilters[k],
+                    );
+                    counters.stage(k).add_filter(st.filter_size());
+                    gblk = dinput_naive(
+                        &gblk,
+                        filters[k],
+                        &sub,
+                        sub.in_w() as usize,
+                        sub.in_h() as usize,
+                    );
+                }
+                counters.stage(g.start).add_output(gblk.len() as u64);
+                scatter_batch_block(&mut din, tn, &gblk);
+            }
+            // the group's filter gradients spill once
+            for k in g.start..=g.end {
+                counters.stage(k).add_filter(plan.stages[k].shape.filter_size());
+            }
+            grad = din;
+        } else {
+            let k = g.start;
+            dfilters[k] = conv_pass_tiled_counted(
+                ConvPass::DFilter,
+                input,
+                &grad,
+                &plan.dfilter_plans[k],
+                counters.stage(k),
+            );
+            grad = conv_pass_tiled_counted(
+                ConvPass::DInput,
+                &grad,
+                filters[k],
+                &plan.dinput_plans[k],
+                counters.stage(k),
+            );
+        }
+    }
+    (dfilters, grad)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1495,5 +2050,199 @@ mod tests {
             cached_halo_words > 0,
             "single-row sweep must serve words from the halo cache"
         );
+    }
+
+    fn training_operands(
+        net: &NetworkSpec,
+        seed: u64,
+    ) -> (Tensor4, Vec<Tensor4>, Tensor4) {
+        let image = Tensor4::randn(net.input_dims(), seed);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                Tensor4::randn(st.shape.filter_dims(), seed + 1 + i as u64)
+            })
+            .collect();
+        let tail = &net.stages[net.stages.len() - 1].shape;
+        let gout = Tensor4::randn(out_dims(tail), seed + 100);
+        (image, filters, gout)
+    }
+
+    /// The fused backward sweep is bitwise identical to the dInput-chain
+    /// oracle, halo cache on or off, with measured traffic and halo words
+    /// matching the plan's analytic models exactly and zero words across
+    /// fused gradient boundaries.
+    #[test]
+    fn fused_backward_matches_oracle_bitwise_with_exact_traffic() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let mut base =
+            FusePlan::for_pass(NetPass::Backward, &net.stages, 65536.0, &cache);
+        // force one fused group swept in short h-tiles so consecutive
+        // tail gradient spans overlap and the carry engages
+        base.groups = vec![FuseGroup {
+            start: 0,
+            end: 2,
+            b_n: 2,
+            b_wo: 8,
+            b_ho: 2,
+        }];
+        let (_, filters, gout) = training_operands(&net, 31);
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let want = super::super::fuse::naive_network_bwd(&gout, &frefs, &net.stages);
+        let mut cached_halo_words = 0u64;
+        for halo in [true, false] {
+            let mut plan = base.clone();
+            plan.halo_cache = halo;
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let got = conv_network_bwd_counted(&gout, &frefs, &plan, &counters);
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "halo={halo} diverged from the oracle"
+            );
+            let snap = counters.snapshot();
+            assert_eq!(snap, plan.expected_network_traffic(), "halo={halo} traffic");
+            assert_eq!(
+                counters.halo_snapshot(),
+                plan.expected_halo_words(),
+                "halo={halo} halo words"
+            );
+            assert_eq!(plan.boundary_words(&snap), 0, "halo={halo} boundary");
+            if halo {
+                cached_halo_words = counters.halo_snapshot().iter().sum();
+            }
+        }
+        assert!(
+            cached_halo_words > 0,
+            "short h-tiles must serve gradient rows from the carry"
+        );
+    }
+
+    #[test]
+    fn backward_network_parallel_is_bitwise_identical_to_serial() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let plan = Arc::new(FusePlan::for_pass(
+            NetPass::Backward,
+            &net.stages,
+            65536.0,
+            &cache,
+        ));
+        let (_, filters, gout) = training_operands(&net, 47);
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let serial_ctr = NetTrafficCounters::new(net.stages.len());
+        let serial = conv_network_bwd_counted(&gout, &frefs, &plan, &serial_ctr);
+        let gout = Arc::new(gout);
+        let farcs: Vec<Arc<Tensor4>> =
+            filters.into_iter().map(Arc::new).collect();
+        let pool = ThreadPool::new(4);
+        let ctr = NetTrafficCounters::new(net.stages.len());
+        let par = conv_network_bwd(&gout, &farcs, &plan, &pool, &ctr);
+        assert_eq!(par.max_abs_diff(&serial), 0.0);
+        assert_eq!(ctr.snapshot(), serial_ctr.snapshot());
+        assert_eq!(ctr.snapshot(), plan.expected_network_traffic());
+    }
+
+    /// A step plan whose groups are all fused runs the whole training
+    /// step bitwise identical to the layer-by-layer SGD oracle — every
+    /// filter gradient and the image gradient — with exact traffic and
+    /// zero boundary words, including when batch blocking splits the
+    /// sweep.
+    #[test]
+    fn fused_step_matches_sgd_oracle_bitwise() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let base =
+            FusePlan::for_pass(NetPass::Step, &net.stages, 65536.0, &cache);
+        assert!(base.step_bitwise(), "tiny_resnet step must fuse end to end");
+        let (image, filters, gout) = training_operands(&net, 59);
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let (want_df, want_din) = super::super::fuse::naive_network_step(
+            &image,
+            &frefs,
+            &gout,
+            &net.stages,
+        );
+        for b_n in [2, 1] {
+            let mut plan = base.clone();
+            plan.groups[0].b_n = b_n;
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let (df, din) =
+                conv_network_step_counted(&image, &frefs, &gout, &plan, &counters);
+            for (k, (got, want)) in df.iter().zip(&want_df).enumerate() {
+                assert_eq!(
+                    got.max_abs_diff(want),
+                    0.0,
+                    "b_n={b_n} dFilter[{k}] diverged from the oracle"
+                );
+            }
+            assert_eq!(
+                din.max_abs_diff(&want_din),
+                0.0,
+                "b_n={b_n} image gradient diverged from the oracle"
+            );
+            let snap = counters.snapshot();
+            assert_eq!(snap, plan.expected_network_traffic(), "b_n={b_n} traffic");
+            assert_eq!(plan.boundary_words(&snap), 0, "b_n={b_n} boundary");
+            assert!(counters.halo_snapshot().iter().all(|&w| w == 0));
+        }
+    }
+
+    /// A fully materialized step plan keeps its gradients bitwise at the
+    /// last stage (tiled backward passes honor the contract) but its
+    /// layered forward reassociates sums — so the step agrees to float
+    /// tolerance, is not `step_bitwise`, and still measures its traffic
+    /// exactly.
+    #[test]
+    fn materialized_step_stays_close_with_exact_traffic() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let plan = FusePlan::materialized_pass(
+            NetPass::Step,
+            &net.stages,
+            65536.0,
+            &cache,
+        );
+        assert!(!plan.step_bitwise());
+        let (image, filters, gout) = training_operands(&net, 73);
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let (want_df, want_din) = super::super::fuse::naive_network_step(
+            &image,
+            &frefs,
+            &gout,
+            &net.stages,
+        );
+        let counters = NetTrafficCounters::new(net.stages.len());
+        let (df, din) =
+            conv_network_step_counted(&image, &frefs, &gout, &plan, &counters);
+        for (got, want) in df.iter().zip(&want_df) {
+            assert!(got.rel_l2(want) < 1e-4, "dFilter rel {}", got.rel_l2(want));
+        }
+        assert!(din.rel_l2(&want_din) < 1e-4, "dIn rel {}", din.rel_l2(&want_din));
+        assert_eq!(counters.snapshot(), plan.expected_network_traffic());
+    }
+
+    /// Backward plans stay bitwise for *every* grouping — materialized
+    /// singles use the tiled dInput engine, which honors the contract.
+    #[test]
+    fn materialized_backward_is_bitwise_too() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let plan = FusePlan::materialized_pass(
+            NetPass::Backward,
+            &net.stages,
+            65536.0,
+            &cache,
+        );
+        let (_, filters, gout) = training_operands(&net, 83);
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let want = super::super::fuse::naive_network_bwd(&gout, &frefs, &net.stages);
+        let counters = NetTrafficCounters::new(net.stages.len());
+        let got = conv_network_bwd_counted(&gout, &frefs, &plan, &counters);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+        assert_eq!(counters.snapshot(), plan.expected_network_traffic());
     }
 }

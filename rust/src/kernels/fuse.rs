@@ -35,12 +35,36 @@
 //! point where halo recompute and per-tile filter re-reads outweigh the
 //! saved activation round-trip, and makes `fused ≤ unfused` hold by
 //! construction.
+//!
+//! **Pass-generic planning** (DESIGN.md §9). The same planner now covers
+//! the whole training step through [`NetPass`]:
+//!
+//! * [`NetPass::Backward`] chains dInput through the network the way
+//!   forward activations chain — mirrored for the transposed stencil. The
+//!   sweep iterates tiles of the group *head's* input-gradient grid; each
+//!   stage's required output-gradient span follows from [`dout_span`] (the
+//!   half-open set of output rows whose stencil touches the tile), growing
+//!   up the group toward the tail the way forward halos grow toward the
+//!   head. Interior gradient boundaries move zero words; a tail-side
+//!   sliding-window cache carries the previous h-tile's gradient patch so
+//!   only fresh rows are read from main memory.
+//! * [`NetPass::Step`] fuses each stage's forward recompute with its own
+//!   dFilter (they share the resident activation patch) and with the
+//!   dInput chain — one sweep per batch block covering the full spatial
+//!   extent. Spatial tiling is forbidden here by the backward bitwise
+//!   contract (dFilter adds one scalar accumulator per `(element, n)` over
+//!   the *full* ascending `(wO, hO)` sweep), so [`fit_step_group_tile`]
+//!   shrinks the batch block only.
 
 use std::sync::Arc;
 
-use crate::conv::{conv7nl_naive, ConvShape, NetworkStage, Tensor4};
+use crate::conv::{
+    conv7nl_naive, dfilter_naive, dinput_naive, ConvPass, ConvShape,
+    NetworkStage, Tensor4,
+};
 
-use super::exec::{expected_traffic, Traffic};
+use super::exec::{expected_pass_traffic, expected_traffic, Traffic};
+use super::pack::dinput_span;
 use super::plan::{filter_split_ranges, TilePlan, TilePlanCache};
 use super::tiles::{split, Blk};
 
@@ -82,11 +106,49 @@ impl FusedExec {
     }
 }
 
+/// Which network-level sweep a [`FusePlan`] drives — the pass-generic
+/// fusion axis. `Forward` is the activation pipeline (PR 3/4), `Backward`
+/// the dInput gradient chain mirrored through the transposed stencil, and
+/// `Step` the whole training step (forward recompute + dFilter + dInput
+/// fused per batch block, loss boundary as the only materialization).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NetPass {
+    Forward,
+    Backward,
+    Step,
+}
+
+impl NetPass {
+    pub const ALL: [NetPass; 3] = [NetPass::Forward, NetPass::Backward, NetPass::Step];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetPass::Forward => "fwd",
+            NetPass::Backward => "bwd",
+            NetPass::Step => "step",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetPass> {
+        match s {
+            "fwd" | "forward" => Some(NetPass::Forward),
+            "bwd" | "backward" => Some(NetPass::Backward),
+            "step" | "training" => Some(NetPass::Step),
+            _ => None,
+        }
+    }
+}
+
 /// One contiguous run of stages executed per tile sweep. `start..=end`
 /// index into the network's stage list; `b_n`/`b_wo`/`b_ho` are the
 /// output-tile blocks of the *last* stage the fused sweep iterates
 /// (meaningful when `is_fused()`; single-stage groups execute through the
 /// stage's own LP [`TilePlan`] instead).
+///
+/// Pass-generic reinterpretation: in a [`NetPass::Backward`] plan the
+/// sweep iterates the group *head's* input-gradient grid, so `b_wo`/`b_ho`
+/// block `in_w(start)`/`in_h(start)`; in a [`NetPass::Step`] plan only the
+/// batch is tiled and `b_wo`/`b_ho` hold the full head input extents.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FuseGroup {
     pub start: usize,
@@ -116,16 +178,29 @@ impl FuseGroup {
 /// fused stages run ([`FusedExec`]) and the halo-cache switch.
 #[derive(Debug, Clone)]
 pub struct FusePlan {
+    /// which network-level sweep this plan drives; shapes the grouping
+    /// rule, the traffic model and the executor dispatch
+    pub pass: NetPass,
     pub stages: Vec<NetworkStage>,
     /// fast-memory budget (words) the grouping was decided under
     pub mem_words: f64,
+    /// per-stage *forward* LP tile plans (materialized forward stages and
+    /// the step plan's phase-1 forward)
     pub stage_plans: Vec<Arc<TilePlan>>,
+    /// per-stage dInput LP tile plans — materialized stages of backward
+    /// and step plans; empty for forward plans
+    pub dinput_plans: Vec<Arc<TilePlan>>,
+    /// per-stage dFilter LP tile plans — materialized stages of step
+    /// plans; empty otherwise
+    pub dfilter_plans: Vec<Arc<TilePlan>>,
     pub groups: Vec<FuseGroup>,
     /// compute path fused stages run (bitwise-identical numerics and
-    /// identical traffic either way)
+    /// identical traffic either way; the backward/step sweeps always run
+    /// the contract-preserving reference nests)
     pub exec: FusedExec,
     /// sliding-window halo cache on/off — shapes both the footprint rule
-    /// and the analytic traffic model
+    /// and the analytic traffic model (forward: per-level input carries;
+    /// backward: the tail gradient patch; step: unused)
     pub halo_cache: bool,
 }
 
@@ -145,15 +220,47 @@ impl FusePlan {
         exec: FusedExec,
         halo_cache: bool,
     ) -> FusePlan {
+        FusePlan::for_pass_with_options(
+            NetPass::Forward,
+            stages,
+            mem_words,
+            cache,
+            exec,
+            halo_cache,
+        )
+    }
+
+    /// Plan `pass` over the network with the production defaults.
+    pub fn for_pass(
+        pass: NetPass,
+        stages: &[NetworkStage],
+        mem_words: f64,
+        cache: &TilePlanCache,
+    ) -> FusePlan {
+        FusePlan::for_pass_with_options(pass, stages, mem_words, cache, FusedExec::Packed, true)
+    }
+
+    /// Pass-generic planner: solve the pass's per-stage LPs (through the
+    /// shared cache) and greedily fuse boundaries under the pass's fit and
+    /// traffic rules — the same greedy walk for all three sweeps, with
+    /// [`fit_pass_group_tile`] / [`pass_group_traffic`] supplying the
+    /// pass-specific geometry.
+    pub fn for_pass_with_options(
+        pass: NetPass,
+        stages: &[NetworkStage],
+        mem_words: f64,
+        cache: &TilePlanCache,
+        exec: FusedExec,
+        halo_cache: bool,
+    ) -> FusePlan {
         assert!(!stages.is_empty(), "network must have at least one stage");
         let stage_plans = solve_stage_plans(stages, mem_words, cache);
-        let singles: Vec<u64> = stage_plans
-            .iter()
-            .map(|p| expected_traffic(p).total())
-            .collect();
+        let (dinput_plans, dfilter_plans) =
+            solve_grad_plans(pass, stages, mem_words, cache);
+        let singles = pass_singles(pass, &stage_plans, &dinput_plans, &dfilter_plans);
         let single_group = |i: usize| {
             let (b_n, b_wo, b_ho) =
-                fit_group_tile(stages, i, i, mem_words, halo_cache)
+                fit_pass_group_tile(pass, stages, i, i, mem_words, halo_cache)
                     .unwrap_or((1, 1, 1));
             FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
         };
@@ -163,10 +270,10 @@ impl FusePlan {
         for i in 1..stages.len() {
             let mut extended = None;
             if let Some((b_n, b_wo, b_ho)) =
-                fit_group_tile(stages, cur.start, i, mem_words, halo_cache)
+                fit_pass_group_tile(pass, stages, cur.start, i, mem_words, halo_cache)
             {
                 let cand = FuseGroup { start: cur.start, end: i, b_n, b_wo, b_ho };
-                let cost = fused_group_traffic(stages, &cand, halo_cache).total();
+                let cost = pass_group_traffic(pass, stages, &cand, halo_cache).total();
                 if cost <= cur_cost + singles[i] {
                     extended = Some((cand, cost));
                 }
@@ -185,9 +292,12 @@ impl FusePlan {
         }
         groups.push(cur);
         FusePlan {
+            pass,
             stages: stages.to_vec(),
             mem_words,
             stage_plans,
+            dinput_plans,
+            dfilter_plans,
             groups,
             exec,
             halo_cache,
@@ -202,20 +312,36 @@ impl FusePlan {
         mem_words: f64,
         cache: &TilePlanCache,
     ) -> FusePlan {
+        FusePlan::materialized_pass(NetPass::Forward, stages, mem_words, cache)
+    }
+
+    /// A fully materialized plan for `pass` — the layer-by-layer
+    /// backward / training-step baseline.
+    pub fn materialized_pass(
+        pass: NetPass,
+        stages: &[NetworkStage],
+        mem_words: f64,
+        cache: &TilePlanCache,
+    ) -> FusePlan {
         assert!(!stages.is_empty(), "network must have at least one stage");
         let stage_plans = solve_stage_plans(stages, mem_words, cache);
+        let (dinput_plans, dfilter_plans) =
+            solve_grad_plans(pass, stages, mem_words, cache);
         let groups = (0..stages.len())
             .map(|i| {
                 let (b_n, b_wo, b_ho) =
-                    fit_group_tile(stages, i, i, mem_words, false)
+                    fit_pass_group_tile(pass, stages, i, i, mem_words, false)
                         .unwrap_or((1, 1, 1));
                 FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
             })
             .collect();
         FusePlan {
+            pass,
             stages: stages.to_vec(),
             mem_words,
             stage_plans,
+            dinput_plans,
+            dfilter_plans,
             groups,
             exec: FusedExec::Packed,
             halo_cache: false,
@@ -229,55 +355,155 @@ impl FusePlan {
     }
 
     /// Words a per-stage traffic vector moves across this plan's *fused*
-    /// boundaries: reads by any non-head fused stage plus writes by any
-    /// non-tail fused stage. Zero for traffic measured by the fused
-    /// executor — the engine's core claim, asserted by the CLI `--check`,
-    /// the property tests and `BENCH_network.json` through this one
-    /// definition.
+    /// boundaries. Zero for traffic measured by the fused executor — the
+    /// engine's core claim, asserted by the CLI `--check`, the property
+    /// tests and the bench JSON through this one definition. Which
+    /// counters are boundary counters depends on the pass:
+    ///
+    /// * `Forward` — reads by any non-head fused stage plus writes by any
+    ///   non-tail fused stage (the inter-layer activations).
+    /// * `Backward` — the mirror: gradient reads (`input_words`) by any
+    ///   non-*tail* stage plus gradient writes by any non-*head* stage;
+    ///   legal traffic is the loss gradient in at the tail and the image
+    ///   gradient out at the head.
+    /// * `Step` — strict interior both ways: the head's activation read /
+    ///   dInput write and the tail's loss-gradient read / boundary-act
+    ///   write are the sweep's legal materializations (dFilter spills
+    ///   live in `filter_words`), everything strictly between is fused.
     pub fn boundary_words(&self, stages: &[Traffic]) -> u64 {
         let mut words = 0;
         for g in &self.groups {
-            for k in g.start + 1..=g.end {
-                words += stages[k].input_words;
-            }
-            for k in g.start..g.end {
-                words += stages[k].output_words;
+            match self.pass {
+                NetPass::Forward => {
+                    for k in g.start + 1..=g.end {
+                        words += stages[k].input_words;
+                    }
+                    for k in g.start..g.end {
+                        words += stages[k].output_words;
+                    }
+                }
+                NetPass::Backward => {
+                    for k in g.start..g.end {
+                        words += stages[k].input_words;
+                    }
+                    for k in g.start + 1..=g.end {
+                        words += stages[k].output_words;
+                    }
+                }
+                NetPass::Step => {
+                    for k in g.start + 1..g.end {
+                        words += stages[k].input_words;
+                        words += stages[k].output_words;
+                    }
+                }
             }
         }
         words
     }
 
-    /// The analytic per-stage traffic this plan executes — fused groups
-    /// charge the image patch (with halo; only the fresh rows once the
-    /// sliding-window cache holds the overlap) at the group head, the full
-    /// filter per stage per tile, and the output tile at the group tail;
-    /// materialized stages charge their LP tile plan's
-    /// [`expected_traffic`]. The fused executor's counters match these
-    /// totals exactly.
+    /// Whether this training-step plan is bitwise identical to the
+    /// layer-by-layer SGD oracle: true iff every group that must
+    /// materialize a boundary activation for downstream groups (all but
+    /// the last) is fused. The fused phase-1 recompute and the backward
+    /// nests follow the oracle accumulation order exactly; a materialized
+    /// stage's forward runs the LP-tiled engine, whose reduction blocking
+    /// reassociates sums.
+    pub fn step_bitwise(&self) -> bool {
+        self.pass == NetPass::Step
+            && self.groups[..self.groups.len() - 1]
+                .iter()
+                .all(|g| g.is_fused())
+    }
+
+    /// The analytic per-stage traffic this plan executes. Fused forward
+    /// groups charge the image patch (with halo; only the fresh rows once
+    /// the sliding-window cache holds the overlap) at the group head, the
+    /// full filter per stage per tile, and the output tile at the group
+    /// tail; fused backward groups mirror that through the transposed
+    /// stencil ([`charge_bwd_group`]); fused step groups charge per batch
+    /// block ([`charge_step_group`]). Materialized stages charge their
+    /// pass's LP tile plans. The executors' counters match these totals
+    /// exactly.
     pub fn expected_network_traffic(&self) -> Vec<Traffic> {
         let mut t = vec![Traffic::default(); self.stages.len()];
-        for g in &self.groups {
-            if g.is_fused() {
-                charge_fused_group(&self.stages, g, self.halo_cache, &mut t);
-            } else {
-                t[g.start] = expected_traffic(&self.stage_plans[g.start]);
+        let last = self.groups.len() - 1;
+        for (gi, g) in self.groups.iter().enumerate() {
+            match self.pass {
+                NetPass::Forward => {
+                    if g.is_fused() {
+                        charge_fused_group(&self.stages, g, self.halo_cache, &mut t);
+                    } else {
+                        t[g.start] = expected_traffic(&self.stage_plans[g.start]);
+                    }
+                }
+                NetPass::Backward => {
+                    if g.is_fused() {
+                        charge_bwd_group(&self.stages, g, self.halo_cache, &mut t);
+                    } else {
+                        t[g.start] = expected_pass_traffic(&self.dinput_plans[g.start]);
+                    }
+                }
+                NetPass::Step => {
+                    if g.is_fused() {
+                        charge_step_group(&self.stages, g, gi == last, &mut t);
+                    } else {
+                        let k = g.start;
+                        let mut sum = Traffic::default();
+                        if gi != last {
+                            // phase 1 materializes this stage's output for
+                            // the groups downstream; the last group's
+                            // forward output is never needed
+                            sum = expected_traffic(&self.stage_plans[k]);
+                        }
+                        for p in [
+                            expected_pass_traffic(&self.dfilter_plans[k]),
+                            expected_pass_traffic(&self.dinput_plans[k]),
+                        ] {
+                            sum.input_words += p.input_words;
+                            sum.filter_words += p.filter_words;
+                            sum.output_words += p.output_words;
+                        }
+                        t[k] = sum;
+                    }
+                }
             }
         }
         t
     }
 
-    /// Words each stage's input patch is expected to receive from the
-    /// sliding-window halo cache instead of main memory (group heads) or
-    /// upstream recompute (interior fused stages), per stage. All zero
-    /// when the cache is off or every fused sweep has a single h-tile.
-    /// The fused executor's halo counters match these exactly.
+    /// Words each stage's patches are expected to receive from the
+    /// sliding-window halo cache instead of main memory, per stage. In a
+    /// forward plan these are input rows served at group heads and rows
+    /// spared from recompute at interior fused stages; in a backward plan
+    /// they are tail gradient rows served from the previous h-tile's
+    /// carried patch. All zero when the cache is off, for step plans
+    /// (batch blocks never overlap), or when every fused sweep has a
+    /// single h-tile. The executors' halo counters match these exactly.
     pub fn expected_halo_words(&self) -> Vec<u64> {
         let mut words = vec![0u64; self.stages.len()];
-        if !self.halo_cache {
+        if !self.halo_cache || self.pass == NetPass::Step {
             return words;
         }
         for g in &self.groups {
             if !g.is_fused() {
+                continue;
+            }
+            if self.pass == NetPass::Backward {
+                let tail = &self.stages[g.end].shape;
+                for (tn, tw, hs) in bwd_group_tile_columns(&self.stages, g) {
+                    let mut prev: Option<Span> = None;
+                    for th in hs {
+                        let spans =
+                            bwd_group_spans(&self.stages, g.start, g.end, tw, th);
+                        let gsp = spans[g.end - g.start];
+                        if let Some(p) = prev {
+                            let fresh_h0 = p.h1.clamp(gsp.h0, gsp.h1);
+                            words[g.end] +=
+                                tn.len * tail.c_o * gsp.w_len() * (fresh_h0 - gsp.h0);
+                        }
+                        prev = Some(gsp);
+                    }
+                }
                 continue;
             }
             let overlaps = input_overlap_rows(&self.stages, g.start, g.end);
@@ -318,6 +544,101 @@ fn solve_stage_plans(
         .iter()
         .map(|st| cache.plan(&st.shape, st.precision, mem_words))
         .collect()
+}
+
+/// Solve the gradient LP tile plans a pass's materialized stages run:
+/// dInput for backward and step plans, dFilter additionally for step
+/// plans. Forward plans carry neither.
+fn solve_grad_plans(
+    pass: NetPass,
+    stages: &[NetworkStage],
+    mem_words: f64,
+    cache: &TilePlanCache,
+) -> (Vec<Arc<TilePlan>>, Vec<Arc<TilePlan>>) {
+    let dinput = if pass == NetPass::Forward {
+        Vec::new()
+    } else {
+        stages
+            .iter()
+            .map(|st| {
+                cache.plan_pass(ConvPass::DInput, &st.shape, st.precision, mem_words)
+            })
+            .collect()
+    };
+    let dfilter = if pass == NetPass::Step {
+        stages
+            .iter()
+            .map(|st| {
+                cache.plan_pass(ConvPass::DFilter, &st.shape, st.precision, mem_words)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    (dinput, dfilter)
+}
+
+/// Per-stage analytic traffic of running stage `k` alone through the
+/// pass's LP-tiled engine — the greedy planner's materialization
+/// baseline. A step stage runs forward + dFilter + dInput.
+fn pass_singles(
+    pass: NetPass,
+    stage_plans: &[Arc<TilePlan>],
+    dinput_plans: &[Arc<TilePlan>],
+    dfilter_plans: &[Arc<TilePlan>],
+) -> Vec<u64> {
+    match pass {
+        NetPass::Forward => stage_plans
+            .iter()
+            .map(|p| expected_traffic(p).total())
+            .collect(),
+        NetPass::Backward => dinput_plans
+            .iter()
+            .map(|p| expected_pass_traffic(p).total())
+            .collect(),
+        NetPass::Step => (0..stage_plans.len())
+            .map(|k| {
+                expected_traffic(&stage_plans[k]).total()
+                    + expected_pass_traffic(&dfilter_plans[k]).total()
+                    + expected_pass_traffic(&dinput_plans[k]).total()
+            })
+            .collect(),
+    }
+}
+
+/// Pass dispatch for the fit rule: find sweep tile blocks for
+/// `stages[a..=b]` whose working set fits in `mem` words, or `None` when
+/// the boundary must materialize. Forward tiles the tail's output grid,
+/// backward the head's input-gradient grid, step the batch only.
+pub(crate) fn fit_pass_group_tile(
+    pass: NetPass,
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    mem: f64,
+    halo: bool,
+) -> Option<(u64, u64, u64)> {
+    match pass {
+        NetPass::Forward => fit_group_tile(stages, a, b, mem, halo),
+        NetPass::Backward => fit_bwd_group_tile(stages, a, b, mem, halo),
+        NetPass::Step => fit_step_group_tile(stages, a, b, mem),
+    }
+}
+
+/// Pass dispatch for the greedy cost rule: total analytic traffic of one
+/// fused group in isolation. Step groups are costed with their phase-1
+/// forward included (conservative — the network's last group skips it).
+pub(crate) fn pass_group_traffic(
+    pass: NetPass,
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    halo: bool,
+) -> Traffic {
+    match pass {
+        NetPass::Forward => fused_group_traffic(stages, g, halo),
+        NetPass::Backward => bwd_group_traffic(stages, g, halo),
+        NetPass::Step => step_group_traffic(stages, g),
+    }
 }
 
 /// Absolute half-open output spans `[w0, w1) × [h0, h1)` of one stage.
@@ -535,6 +856,314 @@ pub(crate) fn fused_group_traffic(
     Traffic::sum(&t)
 }
 
+// ---------------------------------------------------------------------------
+// Backward (dInput-chain) sweep geometry — NetPass::Backward
+// ---------------------------------------------------------------------------
+
+/// The output-gradient span stage `s` must consume to produce the
+/// input-gradient span `o` — the transposed-stencil mirror of
+/// [`input_span`]. Per axis this is `pack::dinput_span`: the output
+/// positions whose forward stencil touches the input span. Input rows no
+/// forward tap reads (the trailing `σ` paper-convention padding) collapse
+/// the span to the canonical empty `0..0 × 0..0` — their gradient is
+/// identically zero.
+pub(crate) fn dout_span(s: &ConvShape, o: &Span) -> Span {
+    let (w0, wl) = dinput_span(o.w0, o.w1 - o.w0, s.s_w, s.w_f, s.w_o);
+    let (h0, hl) = dinput_span(o.h0, o.h1 - o.h0, s.s_h, s.h_f, s.h_o);
+    if wl == 0 || hl == 0 {
+        return Span { w0: 0, w1: 0, h0: 0, h1: 0 };
+    }
+    Span { w0, w1: w0 + wl, h0, h1: h0 + hl }
+}
+
+/// Output-gradient spans each stage of `stages[a..=b]` consumes for one
+/// tile `(tw, th)` of the group *head's* input-gradient grid, in stage
+/// order (index `k−a` ↔ stage `k`'s output-gradient span). Element
+/// `b−a` is the span of `g_b` read from main memory; every earlier
+/// element is produced in scratch by the next stage's dInput — the fused
+/// gradient boundary where no traffic is charged. The walk runs head →
+/// tail because gradient halos grow toward the tail, mirroring how
+/// forward halos ([`group_spans`]) grow toward the head.
+pub(crate) fn bwd_group_spans(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    tw: Blk,
+    th: Blk,
+) -> Vec<Span> {
+    let mut spans = vec![
+        Span { w0: 0, w1: 0, h0: 0, h1: 0 };
+        b - a + 1
+    ];
+    let mut cur = Span {
+        w0: tw.start,
+        w1: tw.start + tw.len,
+        h0: th.start,
+        h1: th.start + th.len,
+    };
+    for k in a..=b {
+        cur = dout_span(&stages[k].shape, &cur);
+        spans[k - a] = cur;
+    }
+    spans
+}
+
+/// The (batch, w) tile columns of a backward sweep over the group head's
+/// input-gradient grid, each with the ordered h-blocks its sliding-window
+/// sweep iterates (h innermost). Walked identically by the fused backward
+/// executor and the analytic model — measured == expected exact.
+pub(crate) fn bwd_group_tile_columns(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+) -> Vec<(Blk, Blk, Vec<Blk>)> {
+    let head = &stages[g.start].shape;
+    let ns = split(head.n, g.b_n);
+    let ws = split(head.in_w(), g.b_wo);
+    let hs = split(head.in_h(), g.b_ho);
+    let mut cols = Vec::with_capacity(ns.len() * ws.len());
+    for &tn in &ns {
+        for &tw in &ws {
+            cols.push((tn, tw, hs.clone()));
+        }
+    }
+    cols
+}
+
+/// Upper bound on the output-gradient span length one input span of
+/// extent `e` can require: `⌊(e + f − 2)/σ⌋ + 1`, clamped to the output
+/// extent — the transposed-stencil analogue of [`halo_extent`], used by
+/// the footprint rule (the exact span depends on boundary clamping, the
+/// bound does not).
+pub(crate) fn bwd_span_len_bound(e: u64, stride: u64, filter: u64, out: u64) -> u64 {
+    if e == 0 || out == 0 {
+        return 0;
+    }
+    (((e + filter - 2) / stride) + 1).min(out)
+}
+
+/// Peak fast-memory working set (words) of one backward tile with
+/// head-input blocks `(bn, bwi, bhi)`: at each stage the output-gradient
+/// patch, the input-gradient patch being produced and the stage's filter
+/// are live simultaneously; patches ping-pong between stages. With `halo`
+/// the carried copy of the previous tile's tail gradient patch persists
+/// across the h-sweep and is added on top of the peak.
+pub(crate) fn bwd_group_footprint(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    bn: u64,
+    bwi: u64,
+    bhi: u64,
+    halo: bool,
+) -> f64 {
+    let mut peak: f64 = 0.0;
+    let mut tail_patch: f64 = 0.0;
+    let (mut ow, mut oh) = (bwi, bhi);
+    for k in a..=b {
+        let st = &stages[k];
+        let s = &st.shape;
+        let gw = bwd_span_len_bound(ow, s.s_w, s.w_f, s.w_o);
+        let gh = bwd_span_len_bound(oh, s.s_h, s.h_f, s.h_o);
+        let words = st.precision.p_o * (bn * s.c_o * gw * gh) as f64
+            + st.precision.p_i * (bn * s.c_i * ow * oh) as f64
+            + st.precision.p_f * s.filter_size() as f64;
+        peak = peak.max(words);
+        if k == b {
+            tail_patch = st.precision.p_o * (bn * s.c_o * gw * gh) as f64;
+        }
+        ow = gw;
+        oh = gh;
+    }
+    peak + if halo { tail_patch } else { 0.0 }
+}
+
+/// Find head input-gradient tile blocks whose backward working set fits
+/// in `mem` words, shrinking the batch first and then the larger spatial
+/// block — the mirror of [`fit_group_tile`]. `None` when even a 1×1×1
+/// tile does not fit.
+pub(crate) fn fit_bwd_group_tile(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    mem: f64,
+    halo: bool,
+) -> Option<(u64, u64, u64)> {
+    let head = &stages[a].shape;
+    let (mut bn, mut bwi, mut bhi) =
+        (head.n.max(1), head.in_w().max(1), head.in_h().max(1));
+    loop {
+        if bwd_group_footprint(stages, a, b, bn, bwi, bhi, halo) <= mem {
+            return Some((bn, bwi, bhi));
+        }
+        if bn > 1 {
+            bn = (bn + 1) / 2;
+        } else if bwi >= bhi && bwi > 1 {
+            bwi = (bwi + 1) / 2;
+        } else if bhi > 1 {
+            bhi = (bhi + 1) / 2;
+        } else {
+            return None;
+        }
+    }
+}
+
+/// Add one fused backward group's analytic per-stage traffic into `t`.
+/// Charges: the tail stage reads its loss-gradient span per tile — only
+/// the fresh rows for non-first tiles of a column when the sliding-window
+/// cache carries the previous patch; every stage reads its full filter
+/// per tile; the head stage writes its full input-gradient tile (zeros
+/// where no stencil tap lands). Interior gradient boundaries charge
+/// nothing.
+pub(crate) fn charge_bwd_group(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    halo: bool,
+    t: &mut [Traffic],
+) {
+    let head = &stages[g.start].shape;
+    let tail = &stages[g.end].shape;
+    for (tn, tw, hs) in bwd_group_tile_columns(stages, g) {
+        let mut prev: Option<Span> = None;
+        for th in hs {
+            let spans = bwd_group_spans(stages, g.start, g.end, tw, th);
+            let gsp = spans[g.end - g.start];
+            let fresh_h0 = prev.map_or(gsp.h0, |p| p.h1.clamp(gsp.h0, gsp.h1));
+            t[g.end].input_words +=
+                tn.len * tail.c_o * gsp.w_len() * (gsp.h1 - fresh_h0);
+            for k in g.start..=g.end {
+                t[k].filter_words += stages[k].shape.filter_size();
+            }
+            t[g.start].output_words += tn.len * head.c_i * tw.len * th.len;
+            if halo {
+                prev = Some(gsp);
+            }
+        }
+    }
+}
+
+/// Total analytic traffic of one fused backward group in isolation.
+pub(crate) fn bwd_group_traffic(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    halo: bool,
+) -> Traffic {
+    let mut t = vec![Traffic::default(); stages.len()];
+    charge_bwd_group(stages, g, halo, &mut t);
+    Traffic::sum(&t)
+}
+
+// ---------------------------------------------------------------------------
+// Training-step sweep geometry — NetPass::Step
+// ---------------------------------------------------------------------------
+
+/// Fast-memory working set (words) of one step-sweep batch block: every
+/// stage's activation patch stays resident across the forward recompute
+/// and the backward walk (they are re-read by dFilter), the gradient
+/// ping-pongs between two buffers sized by the largest per-stage
+/// output-gradient block, the filter-gradient accumulators of the whole
+/// group are resident (they receive direct `+=` in oracle order), and one
+/// stage's filter is live at a time.
+pub(crate) fn step_group_footprint(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    bn: u64,
+) -> f64 {
+    let mut acts = 0.0;
+    let mut g_max: f64 = 0.0;
+    let mut dfilters = 0.0;
+    let mut filter_max: f64 = 0.0;
+    for st in &stages[a..=b] {
+        let s = &st.shape;
+        acts += st.precision.p_i * (bn * s.c_i * s.in_w() * s.in_h()) as f64;
+        g_max = g_max.max(st.precision.p_o * (bn * s.c_o * s.w_o * s.h_o) as f64);
+        let fil = st.precision.p_f * s.filter_size() as f64;
+        dfilters += fil;
+        filter_max = filter_max.max(fil);
+    }
+    acts + 2.0 * g_max + dfilters + filter_max
+}
+
+/// Find a step-sweep batch block whose working set fits in `mem` words.
+/// Only the batch shrinks: spatial tiling would split the dFilter
+/// reduction over `(wO, hO)` and partial-batch blocks inside one
+/// accumulator step would split it over `n`, both of which break the
+/// backward bitwise contract (one scalar accumulator per `(element, n)`
+/// over the full ascending `(wO, hO)` sweep, accumulators added in
+/// ascending `n`). `b_wo`/`b_ho` carry the full head input extents.
+pub(crate) fn fit_step_group_tile(
+    stages: &[NetworkStage],
+    a: usize,
+    b: usize,
+    mem: f64,
+) -> Option<(u64, u64, u64)> {
+    let head = &stages[a].shape;
+    let mut bn = head.n.max(1);
+    loop {
+        if step_group_footprint(stages, a, b, bn) <= mem {
+            return Some((bn, head.in_w().max(1), head.in_h().max(1)));
+        }
+        if bn > 1 {
+            bn = (bn + 1) / 2;
+        } else {
+            return None;
+        }
+    }
+}
+
+/// Add one fused step group's analytic per-stage traffic into `t`. Per
+/// batch block: unless this is the network's last group, a phase-1
+/// forward pass materializes the group's output activation for the
+/// groups downstream (head read + per-stage filters + tail write); the
+/// phase-2 training sweep then re-reads the head activation block,
+/// recomputes the interior activations (filters of every stage but the
+/// tail — the tail's forward output is never needed), reads the tail
+/// loss-gradient block, walks the dInput chain (every stage's filter once
+/// more, a single live filter slot at a time), and writes the head
+/// input-gradient block. The filter gradients spill exactly once per
+/// group at the end of the sweep, charged to `filter_words`.
+pub(crate) fn charge_step_group(
+    stages: &[NetworkStage],
+    g: &FuseGroup,
+    last_group: bool,
+    t: &mut [Traffic],
+) {
+    let head = &stages[g.start].shape;
+    let tail = &stages[g.end].shape;
+    let head_words = head.c_i * head.in_w() * head.in_h();
+    let tail_words = tail.c_o * tail.w_o * tail.h_o;
+    for tn in split(head.n, g.b_n) {
+        if !last_group {
+            t[g.start].input_words += tn.len * head_words;
+            for k in g.start..=g.end {
+                t[k].filter_words += stages[k].shape.filter_size();
+            }
+            t[g.end].output_words += tn.len * tail_words;
+        }
+        t[g.start].input_words += tn.len * head_words;
+        for k in g.start..g.end {
+            t[k].filter_words += stages[k].shape.filter_size();
+        }
+        t[g.end].input_words += tn.len * tail_words;
+        for k in g.start..=g.end {
+            t[k].filter_words += stages[k].shape.filter_size();
+        }
+        t[g.start].output_words += tn.len * head_words;
+    }
+    for k in g.start..=g.end {
+        t[k].filter_words += stages[k].shape.filter_size();
+    }
+}
+
+/// Total analytic traffic of one fused step group in isolation, costed
+/// with its phase-1 forward included (the greedy rule's conservative
+/// estimate — the network's last group skips phase 1 at execution).
+pub(crate) fn step_group_traffic(stages: &[NetworkStage], g: &FuseGroup) -> Traffic {
+    let mut t = vec![Traffic::default(); stages.len()];
+    charge_step_group(stages, g, false, &mut t);
+    Traffic::sum(&t)
+}
+
 /// The stage-by-stage oracle: run the chain through [`conv7nl_naive`] on
 /// full tensors, materializing every activation. Fused groups of the
 /// network executor perform this exact per-element accumulation order, so
@@ -546,6 +1175,55 @@ pub fn naive_network(image: &Tensor4, filters: &[&Tensor4], stages: &[NetworkSta
         act = conv7nl_naive(&act, filters[k], &st.shape);
     }
     act
+}
+
+/// The layer-by-layer backward oracle: chain [`dinput_naive`] from the
+/// loss gradient at the tail down to the image gradient, materializing
+/// every intermediate gradient. The fused backward executor performs this
+/// exact per-element accumulation order, so every backward plan — fused,
+/// mixed or materialized — reproduces it bitwise.
+pub fn naive_network_bwd(
+    gout: &Tensor4,
+    filters: &[&Tensor4],
+    stages: &[NetworkStage],
+) -> Tensor4 {
+    assert_eq!(filters.len(), stages.len(), "one filter per stage");
+    let mut g = gout.clone();
+    for (k, st) in stages.iter().enumerate().rev() {
+        let s = &st.shape;
+        g = dinput_naive(&g, filters[k], s, s.in_w() as usize, s.in_h() as usize);
+    }
+    g
+}
+
+/// The layer-by-layer SGD training-step oracle: forward through
+/// [`conv7nl_naive`] materializing every activation, then walk the stages
+/// in reverse chaining [`dfilter_naive`] / [`dinput_naive`]. Returns the
+/// per-stage filter gradients and the image gradient. A step plan whose
+/// non-last groups are all fused ([`FusePlan::step_bitwise`]) reproduces
+/// both bitwise.
+pub fn naive_network_step(
+    image: &Tensor4,
+    filters: &[&Tensor4],
+    gout: &Tensor4,
+    stages: &[NetworkStage],
+) -> (Vec<Tensor4>, Tensor4) {
+    assert_eq!(filters.len(), stages.len(), "one filter per stage");
+    let mut acts = Vec::with_capacity(stages.len());
+    acts.push(image.clone());
+    for (k, st) in stages.iter().enumerate().take(stages.len() - 1) {
+        let next = conv7nl_naive(&acts[k], filters[k], &st.shape);
+        acts.push(next);
+    }
+    let mut dfilters: Vec<Tensor4> = Vec::with_capacity(stages.len());
+    let mut g = gout.clone();
+    for (k, st) in stages.iter().enumerate().rev() {
+        let s = &st.shape;
+        dfilters.push(dfilter_naive(&acts[k], &g, s));
+        g = dinput_naive(&g, filters[k], s, s.in_w() as usize, s.in_h() as usize);
+    }
+    dfilters.reverse();
+    (dfilters, g)
 }
 
 #[cfg(test)]
@@ -747,5 +1425,274 @@ mod tests {
             group_footprint(&cheap, 0, 0, 2, 6, 6, true)
                 < group_footprint(&wide, 0, 0, 2, 6, 6, true)
         );
+    }
+
+    #[test]
+    fn net_pass_names_round_trip() {
+        for pass in NetPass::ALL {
+            assert_eq!(NetPass::parse(pass.name()), Some(pass));
+        }
+        assert_eq!(NetPass::parse("forward"), Some(NetPass::Forward));
+        assert_eq!(NetPass::parse("backward"), Some(NetPass::Backward));
+        assert_eq!(NetPass::parse("training"), Some(NetPass::Step));
+        assert_eq!(NetPass::parse("sideways"), None);
+    }
+
+    #[test]
+    fn dout_spans_chain_through_the_group() {
+        let stages = tiny(2);
+        let tw = Blk { start: 0, len: 4 };
+        let th = Blk { start: 2, len: 3 };
+        let spans = bwd_group_spans(&stages, 0, 2, tw, th);
+        assert_eq!(spans.len(), 3);
+        // stage 0 (unit stride 3x3, 13x13 out): input rows [2,5) are
+        // touched by output rows [0,5); cols [0,4) by outputs [0,4)
+        assert_eq!(spans[0], Span { w0: 0, w1: 4, h0: 0, h1: 5 });
+        // stage 1 consumes stage 0's output grid directly
+        assert_eq!(spans[1], Span { w0: 0, w1: 4, h0: 0, h1: 5 });
+        // stage 2 (2x2 stride 2, 4x4 out): rows [0,5) -> outputs [0,3)
+        assert_eq!(spans[2], Span { w0: 0, w1: 2, h0: 0, h1: 3 });
+    }
+
+    #[test]
+    fn dout_span_collapses_on_padding_rows() {
+        // the paper convention pads σ trailing rows no forward tap reads:
+        // their gradient span is empty and stays empty up the chain
+        let stages = tiny(2);
+        let pad = Span { w0: 0, w1: 1, h0: 15, h1: 16 };
+        let sp = dout_span(&stages[0].shape, &pad);
+        assert_eq!(sp, Span { w0: 0, w1: 0, h0: 0, h1: 0 });
+        let spans = bwd_group_spans(
+            &stages,
+            0,
+            2,
+            Blk { start: 0, len: 1 },
+            Blk { start: 15, len: 1 },
+        );
+        assert!(spans.iter().all(|s| s.w_len() == 0 && s.h_len() == 0));
+    }
+
+    #[test]
+    fn bwd_span_len_bound_dominates_actual_spans() {
+        let stages = tiny(2);
+        let s = &stages[2].shape;
+        for start in 0..s.in_h() {
+            for len in 1..=(s.in_h() - start) {
+                let (_, hl) = super::super::pack::dinput_span(
+                    start, len, s.s_h, s.h_f, s.h_o,
+                );
+                assert!(hl <= bwd_span_len_bound(len, s.s_h, s.h_f, s.h_o));
+            }
+        }
+        assert_eq!(bwd_span_len_bound(0, 2, 2, 4), 0);
+        assert_eq!(bwd_span_len_bound(5, 1, 1, 2), 2); // clamped to out
+    }
+
+    #[test]
+    fn bwd_tile_columns_cover_head_input_grid() {
+        let stages = tiny(3);
+        let g = FuseGroup { start: 0, end: 2, b_n: 2, b_wo: 5, b_ho: 7 };
+        let head = &stages[0].shape;
+        let (iw, ih) = (head.in_w(), head.in_h());
+        let mut seen = vec![false; (head.n * iw * ih) as usize];
+        for (tn, tw, hs) in bwd_group_tile_columns(&stages, &g) {
+            for th in hs {
+                for n in tn.start..tn.start + tn.len {
+                    for w in tw.start..tw.start + tw.len {
+                        for h in th.start..th.start + th.len {
+                            let i = ((n * iw + w) * ih + h) as usize;
+                            assert!(!seen[i], "overlap");
+                            seen[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.into_iter().all(|v| v), "not covered");
+    }
+
+    #[test]
+    fn backward_plan_fuses_tiny_resnet_below_layered_traffic() {
+        let cache = TilePlanCache::new();
+        let plan = FusePlan::for_pass(
+            NetPass::Backward,
+            &tiny(4),
+            super::super::plan::DEFAULT_TILE_MEM_WORDS,
+            &cache,
+        );
+        assert_eq!(plan.pass, NetPass::Backward);
+        assert_eq!(plan.groups.len(), 1, "groups {:?}", plan.groups);
+        assert!(plan.groups[0].is_fused());
+        assert_eq!(plan.dinput_plans.len(), 3);
+        assert!(plan.dfilter_plans.is_empty());
+        let fused = Traffic::sum(&plan.expected_network_traffic()).total();
+        let layered: u64 = plan
+            .dinput_plans
+            .iter()
+            .map(|p| expected_pass_traffic(p).total())
+            .sum();
+        assert!(fused < layered, "fused {fused} vs layered {layered}");
+    }
+
+    #[test]
+    fn bwd_halo_model_discounts_tail_re_reads_only() {
+        let stages = tiny(4);
+        let g = FuseGroup { start: 0, end: 2, b_n: 4, b_wo: 16, b_ho: 2 };
+        let with = bwd_group_traffic(&stages, &g, true);
+        let without = bwd_group_traffic(&stages, &g, false);
+        assert!(with.input_words < without.input_words);
+        assert_eq!(with.filter_words, without.filter_words);
+        assert_eq!(with.output_words, without.output_words);
+        // the full-tile dIn writes and per-tile filter reads are exact:
+        // one (n, w) column of 8 h-tiles covers the whole head input grid
+        let head = &stages[0].shape;
+        assert_eq!(
+            without.output_words,
+            head.n * head.c_i * head.in_w() * head.in_h()
+        );
+        let per_tile_filters: u64 =
+            (0..3).map(|k| stages[k].shape.filter_size()).sum();
+        assert_eq!(without.filter_words, 8 * per_tile_filters);
+    }
+
+    #[test]
+    fn step_plan_tiles_batch_only_and_is_bitwise() {
+        let cache = TilePlanCache::new();
+        let stages = tiny(4);
+        let plan = FusePlan::for_pass(
+            NetPass::Step,
+            &stages,
+            super::super::plan::DEFAULT_TILE_MEM_WORDS,
+            &cache,
+        );
+        assert_eq!(plan.groups.len(), 1, "groups {:?}", plan.groups);
+        let g = plan.groups[0];
+        assert!(g.is_fused());
+        let head = &stages[0].shape;
+        assert_eq!((g.b_wo, g.b_ho), (head.in_w(), head.in_h()));
+        assert!(plan.step_bitwise());
+        assert_eq!(plan.dinput_plans.len(), 3);
+        assert_eq!(plan.dfilter_plans.len(), 3);
+        // step plans have no halo discount by construction
+        assert!(plan.expected_halo_words().iter().all(|&w| w == 0));
+        // a materialized step plan is never bitwise on a multi-stage net
+        let mat = FusePlan::materialized_pass(
+            NetPass::Step,
+            &stages,
+            super::super::plan::DEFAULT_TILE_MEM_WORDS,
+            &cache,
+        );
+        assert!(!mat.step_bitwise());
+    }
+
+    #[test]
+    fn step_footprint_forces_batch_halving_under_tight_memory() {
+        let stages = tiny(4);
+        let full = step_group_footprint(&stages, 0, 2, 4);
+        let (bn, bwi, bhi) =
+            fit_step_group_tile(&stages, 0, 2, full - 1.0).expect("halved fits");
+        assert!(bn < 4);
+        let head = &stages[0].shape;
+        assert_eq!((bwi, bhi), (head.in_w(), head.in_h()));
+        assert!(step_group_footprint(&stages, 0, 2, bn) <= full - 1.0);
+        assert!(fit_step_group_tile(&stages, 0, 2, 8.0).is_none());
+    }
+
+    #[test]
+    fn boundary_words_are_pass_aware() {
+        let mk = |pass| FusePlan {
+            pass,
+            stages: tiny(2),
+            mem_words: 0.0,
+            stage_plans: Vec::new(),
+            dinput_plans: Vec::new(),
+            dfilter_plans: Vec::new(),
+            groups: vec![FuseGroup { start: 0, end: 2, b_n: 1, b_wo: 1, b_ho: 1 }],
+            exec: FusedExec::Reference,
+            halo_cache: false,
+        };
+        let t = [
+            Traffic { input_words: 1, filter_words: 100, output_words: 10 },
+            Traffic { input_words: 2, filter_words: 100, output_words: 20 },
+            Traffic { input_words: 4, filter_words: 100, output_words: 40 },
+        ];
+        // forward: interior reads are stages 1..=2, interior writes 0..2
+        assert_eq!(mk(NetPass::Forward).boundary_words(&t), 2 + 4 + 10 + 20);
+        // backward mirror: reads 0..2, writes 1..=2
+        assert_eq!(mk(NetPass::Backward).boundary_words(&t), 1 + 2 + 20 + 40);
+        // step: strict interior both ways (stage 1 only); dF spills are
+        // filter_words and never boundary traffic
+        assert_eq!(mk(NetPass::Step).boundary_words(&t), 2 + 20);
+    }
+
+    #[test]
+    fn step_charge_skips_phase_one_for_the_last_group() {
+        let stages = tiny(4);
+        let g = FuseGroup { start: 0, end: 2, b_n: 4, b_wo: 16, b_ho: 16 };
+        let mut interior = vec![Traffic::default(); 3];
+        charge_step_group(&stages, &g, false, &mut interior);
+        let mut last = vec![Traffic::default(); 3];
+        charge_step_group(&stages, &g, true, &mut last);
+        let (ti, tl) = (Traffic::sum(&interior), Traffic::sum(&last));
+        assert!(ti.total() > tl.total());
+        // the last group writes only the head input gradient
+        let head = &stages[0].shape;
+        assert_eq!(tl.output_words, head.n * head.c_i * head.in_w() * head.in_h());
+        assert_eq!(last[1].input_words, 0);
+        assert_eq!(last[1].output_words, 0);
+    }
+
+    #[test]
+    fn training_oracles_are_shape_consistent() {
+        use crate::conv::pass_operands;
+        let stages = tiny(2);
+        let head = &stages[0].shape;
+        let tail = &stages[2].shape;
+        let (image, _) = crate::conv::paper_operands(head, 7);
+        let filters: Vec<Tensor4> = stages
+            .iter()
+            .enumerate()
+            .map(|(k, st)| crate::conv::paper_operands(&st.shape, 11 + k as u64).1)
+            .collect();
+        let refs: Vec<&Tensor4> = filters.iter().collect();
+        let (gout, _) = pass_operands(ConvPass::DInput, tail, 23);
+        let din = naive_network_bwd(&gout, &refs, &stages);
+        assert_eq!(
+            din.dims,
+            [
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize
+            ]
+        );
+        let (dfs, din2) = naive_network_step(&image, &refs, &gout, &stages);
+        assert_eq!(dfs.len(), 3);
+        for (k, df) in dfs.iter().enumerate() {
+            let s = &stages[k].shape;
+            assert_eq!(
+                df.dims,
+                [
+                    s.c_i as usize,
+                    s.c_o as usize,
+                    s.w_f as usize,
+                    s.h_f as usize
+                ]
+            );
+        }
+        // the step oracle's dInput chain is the backward oracle verbatim
+        assert_eq!(din2.data, din.data);
+        // trailing padding rows of the image carry zero gradient
+        for n in 0..head.n as usize {
+            for c in 0..head.c_i as usize {
+                for w in 0..head.in_w() as usize {
+                    for h in (head.in_h() as usize - head.s_h as usize)
+                        ..head.in_h() as usize
+                    {
+                        assert_eq!(din.at(n, c, w, h), 0.0);
+                    }
+                }
+            }
+        }
     }
 }

@@ -48,13 +48,17 @@ pub mod tiles;
 pub use crate::conv::ConvPass;
 pub use autotune::{Autotuner, KernelKind, NetKernelKind};
 pub use exec::{
-    conv_network_fused, conv_network_fused_counted, conv_network_staged,
+    conv_network_bwd, conv_network_bwd_counted, conv_network_fused,
+    conv_network_fused_counted, conv_network_staged, conv_network_step_counted,
     conv_pass_tiled, conv_pass_tiled_counted, conv_pass_tiled_parallel,
     conv_tiled, conv_tiled_counted, conv_tiled_parallel, default_workers,
     expected_pass_traffic, expected_traffic, NetTrafficCounters, Traffic,
     TrafficCounters,
 };
-pub use fuse::{halo_extent, naive_network, FuseGroup, FusePlan, FusedExec};
+pub use fuse::{
+    halo_extent, naive_network, naive_network_bwd, naive_network_step,
+    FuseGroup, FusePlan, FusedExec, NetPass,
+};
 pub use gemm::{axpy, axpy_scalar};
 pub use im2col::conv_im2col;
 pub use plan::{TilePlan, TilePlanCache, DEFAULT_TILE_MEM_WORDS};

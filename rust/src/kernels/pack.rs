@@ -214,6 +214,39 @@ pub(crate) fn dinput_span(x0: u64, ex: u64, stride: u64, filt: u64, out: u64) ->
     }
 }
 
+/// Per input coordinate of the span `[x0, x0 + ex)`, the valid
+/// `(tap, output − g0)` pairs of one dInput axis: the taps `i6 ∈ [0, filt)`
+/// whose output position `(x − i6)/σ` exists, paired with that position
+/// relative to the gradient patch origin `g0`. Taps ascend within each
+/// list — per element the dInput nests accumulate in the oracle's
+/// `(i6, i7)` tap order, which is what keeps the tiled and fused backward
+/// sweeps bitwise identical to `dinput_naive`. Shared by
+/// `exec::run_dinput_tile` (patch origin = the packed span's `lo`) and the
+/// fused backward chain's patch-local nest.
+pub(crate) fn dinput_pairs(
+    x0: u64,
+    ex: u64,
+    stride: u64,
+    filt: u64,
+    out: u64,
+    g0: u64,
+) -> Vec<Vec<(usize, usize)>> {
+    (0..ex)
+        .map(|dx| {
+            let xcol = x0 + dx;
+            (0..filt)
+                .filter_map(|tap| {
+                    let t = xcol.checked_sub(tap)?;
+                    if t % stride != 0 || t / stride >= out {
+                        return None;
+                    }
+                    Some((tap as usize, (t / stride - g0) as usize))
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// Pack the image working set of one dFilter tile and reduction step:
 /// `[bn][bcI][spanW][spanH]` — `bn` the contracted batch block, `bcI` the
 /// tile's cI block, spans per [`dfilter_span`]. Rows are copied whole (h

@@ -23,6 +23,13 @@
 //!                                           compares bitwise vs the staged
 //!                                           oracle and validates the
 //!                                           traffic + halo models)
+//! convbound exec    --network tiny_resnet   run the fused backward sweep or
+//!           --pass bwd|step --check         the whole training step as one
+//!                                           fused sweep per group (--check
+//!                                           compares bitwise vs the
+//!                                           layer-by-layer SGD oracles and
+//!                                           requires zero fused-boundary
+//!                                           words)
 //! convbound serve   --key unit3x3/blocked   batched serving demo (native
 //!                                           backend; PJRT with artifacts;
 //!                                           network keys serve the fused
@@ -46,11 +53,12 @@ use convbound::err;
 use convbound::gemmini::GemminiConfig;
 use convbound::hbl::{analyze_7nl, analyze_small_filter};
 use convbound::kernels::{
-    conv_network_fused_counted, conv_pass_tiled, conv_pass_tiled_counted,
+    conv_network_bwd_counted, conv_network_fused_counted,
+    conv_network_step_counted, conv_pass_tiled, conv_pass_tiled_counted,
     conv_tiled_counted, expected_pass_traffic, expected_traffic,
-    naive_network, Autotuner, FusePlan, FusedExec, KernelKind,
-    NetTrafficCounters, TilePlanCache, Traffic, TrafficCounters,
-    DEFAULT_TILE_MEM_WORDS,
+    naive_network, naive_network_bwd, naive_network_step, Autotuner,
+    FusePlan, FusedExec, KernelKind, NetPass, NetTrafficCounters,
+    TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::report::{
     self, default_mem_sweep, default_proc_sweep, fig2_series, fig3_series,
@@ -207,13 +215,98 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run a builtin network pipeline through the fused executor and report
-/// fusion decisions, per-stage traffic, the halo-cache savings, and the
-/// layer-by-layer comparison; `--fused-kernel` picks the packed
-/// microkernel (default), the naive reference oracle, or the autotuner's
-/// measured choice; `--check` cross-validates against the stage-by-stage
-/// naive oracle (bitwise on fully fused plans).
+/// Per-stage measured-vs-model traffic report shared by the three
+/// network passes; returns the snapshots so `--check` can gate on them.
+fn report_network_traffic(
+    plan: &FusePlan,
+    counters: &NetTrafficCounters,
+    layered_total: u64,
+) -> (Vec<Traffic>, Vec<Traffic>) {
+    let measured = counters.snapshot();
+    let expected = plan.expected_network_traffic();
+    for (k, (t, e)) in measured.iter().zip(&expected).enumerate() {
+        println!(
+            "  stage {k}: input {} + filter {} + output {} = {} words \
+             (model {}{})",
+            t.input_words,
+            t.filter_words,
+            t.output_words,
+            t.total(),
+            e.total(),
+            if t == e { ", exact" } else { ", MISMATCH" }
+        );
+    }
+    let fused_total = Traffic::sum(&measured).total();
+    println!(
+        "  fused total {} words vs layer-by-layer {} words ({:.2}x saved)",
+        fused_total,
+        layered_total,
+        layered_total as f64 / fused_total.max(1) as f64
+    );
+    (measured, expected)
+}
+
+/// The `--check` traffic gates shared by the three network passes:
+/// measured == model exactly, zero fused-boundary words, and the
+/// halo-cache counters matching the analytic savings model.
+fn check_network_traffic(
+    plan: &FusePlan,
+    counters: &NetTrafficCounters,
+    measured: &[Traffic],
+    expected: &[Traffic],
+) -> Result<()> {
+    if measured != expected {
+        return Err(err!("measured traffic disagrees with the model"));
+    }
+    let boundary = plan.boundary_words(measured);
+    if boundary != 0 {
+        return Err(err!(
+            "{boundary} words crossed fused boundaries (must be 0)"
+        ));
+    }
+    println!("  fused boundaries touched 0 main-memory words: OK");
+    // halo-cache report: measured carried words per stage vs the plan's
+    // analytic savings model (exact, like the traffic model)
+    let halo_meas = counters.halo_snapshot();
+    let halo_want = plan.expected_halo_words();
+    for (k, (got, want)) in halo_meas.iter().zip(&halo_want).enumerate() {
+        if *got != 0 || *want != 0 {
+            println!(
+                "  stage {k}: {got} input words served from the halo \
+                 cache (model {want}{})",
+                if got == want { ", exact" } else { ", MISMATCH" }
+            );
+        }
+    }
+    if halo_meas != halo_want {
+        return Err(err!(
+            "measured halo-cache words disagree with the model"
+        ));
+    }
+    let served: u64 = halo_meas.iter().sum();
+    println!(
+        "  halo cache ({}) served {served} words without re-read or \
+         recompute",
+        if plan.halo_cache { "on" } else { "off" }
+    );
+    Ok(())
+}
+
+/// Run a builtin network through the fused executor for any [`NetPass`]
+/// (`--pass fwd|bwd|step`) and report fusion decisions, per-stage traffic,
+/// the halo-cache savings, and the layer-by-layer comparison;
+/// `--fused-kernel` picks the packed microkernel (default), the naive
+/// reference oracle, or the autotuner's measured choice; `--check`
+/// cross-validates against the layer-by-layer oracles (bitwise on fully
+/// fused plans — and on *every* backward plan) and requires the traffic,
+/// boundary and halo models to hold exactly.
 fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
+    let pass = NetPass::parse(args.opt_str("pass", "fwd")).ok_or_else(|| {
+        err!(
+            "unknown --pass '{}' for --network (fwd|bwd|step)",
+            args.opt_str("pass", "fwd")
+        )
+    })?;
     let batch = args.opt_u64("batch", convbound::runtime::manifest::BUILTIN_BATCH)?;
     if batch < 1 {
         return Err(err!("--batch must be >= 1"));
@@ -240,9 +333,9 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
     let plan = match args.opt_str("fused-kernel", "packed") {
         "auto" => {
             // the measured network-mode choice (fused-packed vs
-            // fused-naive vs materialized), probed the way the kernel
-            // autotuner probes kernels and persisted through the same
-            // sidecar as the per-layer choices
+            // fused-naive vs materialized), probed per pass the way the
+            // kernel autotuner probes kernels and persisted through the
+            // same sidecar as the per-layer choices
             let tuner = Autotuner::new(m);
             if let Some(path) = args.opt("tune-cache") {
                 let loaded = tuner.warm_start(path)?;
@@ -250,18 +343,25 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
                     println!("warm-started {loaded} tuned choice(s) from {path}");
                 }
             }
-            let kind = tuner.select_network(name, &net.stages);
+            let kind = tuner.select_network_pass(pass, name, &net.stages);
             println!("autotuner picked '{}'", kind.name());
             // the requested halo flag reaches the *planner*, so fusion
             // decisions are made under the model this run executes
-            let p = tuner.network_plan(&net.stages, kind, halo);
+            let p = tuner.network_pass_plan(pass, &net.stages, kind, halo);
             if let Some(path) = args.opt("tune-cache") {
                 tuner.save(path)?;
             }
             p
         }
         other => match FusedExec::parse(other) {
-            Some(exec) => FusePlan::with_options(&net.stages, m, &cache, exec, halo),
+            Some(exec) => FusePlan::for_pass_with_options(
+                pass,
+                &net.stages,
+                m,
+                &cache,
+                exec,
+                halo,
+            ),
             None => {
                 return Err(err!(
                     "unknown --fused-kernel '{other}' (packed|reference|auto)"
@@ -270,7 +370,9 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
         },
     };
     println!(
-        "exec network {name} (batch {batch}, {} stages, {} MACs) at M = {m} words",
+        "exec network {name} pass {} (batch {batch}, {} stages, {} MACs) \
+         at M = {m} words",
+        pass.name(),
         net.stages.len(),
         net.updates()
     );
@@ -281,18 +383,39 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
     );
     for g in &plan.groups {
         if g.is_fused() {
-            println!(
-                "  stages {}..={} FUSED (last-stage tile N={} wO={} hO={}; \
-                 inter-layer activations stay resident)",
-                g.start, g.end, g.b_n, g.b_wo, g.b_ho
-            );
+            match pass {
+                NetPass::Forward => println!(
+                    "  stages {}..={} FUSED (last-stage tile N={} wO={} \
+                     hO={}; inter-layer activations stay resident)",
+                    g.start, g.end, g.b_n, g.b_wo, g.b_ho
+                ),
+                NetPass::Backward => println!(
+                    "  stages {}..={} FUSED (head input-gradient tile N={} \
+                     w={} h={}; inter-layer gradients stay resident)",
+                    g.start, g.end, g.b_n, g.b_wo, g.b_ho
+                ),
+                NetPass::Step => println!(
+                    "  stages {}..={} FUSED (batch block N={}; activations \
+                     recomputed in-tile, gradients stay resident)",
+                    g.start, g.end, g.b_n
+                ),
+            }
         } else {
             println!("  stage {} materialized (LP-tiled)", g.start);
         }
     }
 
-    let d = net.input_dims();
-    let image = Tensor4::randn(d, 1);
+    let tail = &net.stages[net.stages.len() - 1].shape;
+    let image = Tensor4::randn(net.input_dims(), 1);
+    let gout = Tensor4::randn(
+        [
+            tail.n as usize,
+            tail.c_o as usize,
+            tail.w_o as usize,
+            tail.h_o as usize,
+        ],
+        99,
+    );
     let filters: Vec<Tensor4> = net
         .stages
         .iter()
@@ -301,101 +424,155 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
         .collect();
     let frefs: Vec<&Tensor4> = filters.iter().collect();
     let counters = NetTrafficCounters::new(net.stages.len());
-    let t0 = Instant::now();
-    let out = conv_network_fused_counted(&image, &frefs, &plan, &counters);
-    let secs = t0.elapsed().as_secs_f64();
 
-    let measured = counters.snapshot();
-    let expected = plan.expected_network_traffic();
-    for (k, (t, e)) in measured.iter().zip(&expected).enumerate() {
-        println!(
-            "  stage {k}: input {} + filter {} + output {} = {} words \
-             (model {}{})",
-            t.input_words,
-            t.filter_words,
-            t.output_words,
-            t.total(),
-            e.total(),
-            if t == e { ", exact" } else { ", MISMATCH" }
-        );
-    }
-    let fused_total = Traffic::sum(&measured).total();
-    let layered_total: u64 = plan
-        .stage_plans
-        .iter()
-        .map(|p| expected_traffic(p).total())
-        .sum();
-    println!(
-        "  fused total {} words vs layer-by-layer {} words ({:.2}x saved)",
-        fused_total,
-        layered_total,
-        layered_total as f64 / fused_total.max(1) as f64
-    );
-    println!(
-        "  {secs:.3}s, {:.1} MMAC/s",
-        net.updates() as f64 / secs.max(1e-9) / 1e6
-    );
-
-    if args.flag("check") {
-        let want = naive_network(&image, &frefs, &net.stages);
-        // a fully fused plan performs the oracle's exact per-element ops
-        // in order -> bitwise; materialized stages run the LP-tiled
-        // engine's accumulation order -> tolerance check
-        if plan.groups.len() == 1 && plan.groups[0].is_fused() {
-            let diff = out.max_abs_diff(&want);
+    match pass {
+        NetPass::Forward => {
+            let t0 = Instant::now();
+            let out = conv_network_fused_counted(&image, &frefs, &plan, &counters);
+            let secs = t0.elapsed().as_secs_f64();
+            let layered: u64 = plan
+                .stage_plans
+                .iter()
+                .map(|p| expected_traffic(p).total())
+                .sum();
+            let (measured, expected) =
+                report_network_traffic(&plan, &counters, layered);
             println!(
-                "  check vs stage-by-stage naive oracle: max_abs_diff = {diff}"
+                "  {secs:.3}s, {:.1} MMAC/s",
+                net.updates() as f64 / secs.max(1e-9) / 1e6
             );
-            if diff != 0.0 {
-                return Err(err!(
-                    "fused network diverged from the staged oracle: {diff}"
-                ));
+            if args.flag("check") {
+                let want = naive_network(&image, &frefs, &net.stages);
+                // a fully fused plan performs the oracle's exact
+                // per-element ops in order -> bitwise; materialized stages
+                // run the LP-tiled engine's accumulation order -> tolerance
+                if plan.groups.len() == 1 && plan.groups[0].is_fused() {
+                    let diff = out.max_abs_diff(&want);
+                    println!(
+                        "  check vs stage-by-stage naive oracle: \
+                         max_abs_diff = {diff}"
+                    );
+                    if diff != 0.0 {
+                        return Err(err!(
+                            "fused network diverged from the staged oracle: {diff}"
+                        ));
+                    }
+                } else {
+                    let rel = out.rel_l2(&want);
+                    println!(
+                        "  check vs stage-by-stage naive oracle: rel_l2 = {rel:.2e}"
+                    );
+                    if rel >= 1e-4 {
+                        return Err(err!(
+                            "network pipeline diverged from the staged oracle: {rel}"
+                        ));
+                    }
+                }
+                check_network_traffic(&plan, &counters, &measured, &expected)?;
+            } else {
+                std::hint::black_box(&out);
             }
-        } else {
-            let rel = out.rel_l2(&want);
-            println!("  check vs stage-by-stage naive oracle: rel_l2 = {rel:.2e}");
-            if rel >= 1e-4 {
-                return Err(err!(
-                    "network pipeline diverged from the staged oracle: {rel}"
-                ));
-            }
         }
-        if measured != expected {
-            return Err(err!("measured traffic disagrees with the model"));
-        }
-        let boundary = plan.boundary_words(&measured);
-        if boundary != 0 {
-            return Err(err!(
-                "{boundary} words crossed fused boundaries (must be 0)"
-            ));
-        }
-        println!("  fused boundaries touched 0 main-memory words: OK");
-        // halo-cache report: measured carried words per stage vs the
-        // plan's analytic savings model (exact, like the traffic model)
-        let halo_meas = counters.halo_snapshot();
-        let halo_want = plan.expected_halo_words();
-        for (k, (got, want)) in halo_meas.iter().zip(&halo_want).enumerate() {
-            if *got != 0 || *want != 0 {
+        NetPass::Backward => {
+            let t0 = Instant::now();
+            let din = conv_network_bwd_counted(&gout, &frefs, &plan, &counters);
+            let secs = t0.elapsed().as_secs_f64();
+            let layered: u64 = plan
+                .dinput_plans
+                .iter()
+                .map(|p| expected_pass_traffic(p).total())
+                .sum();
+            let (measured, expected) =
+                report_network_traffic(&plan, &counters, layered);
+            println!(
+                "  {secs:.3}s, {:.1} MMAC/s",
+                net.updates() as f64 / secs.max(1e-9) / 1e6
+            );
+            if args.flag("check") {
+                // the backward accumulation-order contract makes *every*
+                // backward plan bitwise — fused, mixed or materialized
+                let want = naive_network_bwd(&gout, &frefs, &net.stages);
+                let diff = din.max_abs_diff(&want);
                 println!(
-                    "  stage {k}: {got} input words served from the halo \
-                     cache (model {want}{})",
-                    if got == want { ", exact" } else { ", MISMATCH" }
+                    "  check vs layer-by-layer dInput oracle: \
+                     max_abs_diff = {diff}"
                 );
+                if diff != 0.0 {
+                    return Err(err!(
+                        "fused backward sweep diverged from the oracle: {diff}"
+                    ));
+                }
+                check_network_traffic(&plan, &counters, &measured, &expected)?;
+            } else {
+                std::hint::black_box(&din);
             }
         }
-        if halo_meas != halo_want {
-            return Err(err!(
-                "measured halo-cache words disagree with the model"
-            ));
+        NetPass::Step => {
+            let t0 = Instant::now();
+            let (dfilters, din) =
+                conv_network_step_counted(&image, &frefs, &gout, &plan, &counters);
+            let secs = t0.elapsed().as_secs_f64();
+            let layered: u64 = plan
+                .stage_plans
+                .iter()
+                .map(|p| expected_traffic(p).total())
+                .sum::<u64>()
+                + plan
+                    .dfilter_plans
+                    .iter()
+                    .map(|p| expected_pass_traffic(p).total())
+                    .sum::<u64>()
+                + plan
+                    .dinput_plans
+                    .iter()
+                    .map(|p| expected_pass_traffic(p).total())
+                    .sum::<u64>();
+            let (measured, expected) =
+                report_network_traffic(&plan, &counters, layered);
+            println!(
+                "  {secs:.3}s, {:.1} MMAC/s (forward recompute + dFilter + \
+                 dInput)",
+                3.0 * net.updates() as f64 / secs.max(1e-9) / 1e6
+            );
+            if args.flag("check") {
+                let (want_df, want_din) =
+                    naive_network_step(&image, &frefs, &gout, &net.stages);
+                if plan.step_bitwise() {
+                    let mut diff = din.max_abs_diff(&want_din);
+                    for (df, want) in dfilters.iter().zip(&want_df) {
+                        diff = diff.max(df.max_abs_diff(want));
+                    }
+                    println!(
+                        "  check vs layer-by-layer SGD oracle: \
+                         max_abs_diff = {diff}"
+                    );
+                    if diff != 0.0 {
+                        return Err(err!(
+                            "fused training step diverged from the SGD \
+                             oracle: {diff}"
+                        ));
+                    }
+                } else {
+                    // a materialized phase-1 forward runs the LP-tiled
+                    // engine's accumulation order -> tolerance check
+                    let mut rel = din.rel_l2(&want_din);
+                    for (df, want) in dfilters.iter().zip(&want_df) {
+                        rel = rel.max(df.rel_l2(want));
+                    }
+                    println!(
+                        "  check vs layer-by-layer SGD oracle: rel_l2 = {rel:.2e}"
+                    );
+                    if rel >= 1e-4 {
+                        return Err(err!(
+                            "training step diverged from the SGD oracle: {rel}"
+                        ));
+                    }
+                }
+                check_network_traffic(&plan, &counters, &measured, &expected)?;
+            } else {
+                std::hint::black_box((&dfilters, &din));
+            }
         }
-        let served: u64 = halo_meas.iter().sum();
-        println!(
-            "  halo cache ({}) served {served} words without re-read or \
-             recompute",
-            if plan.halo_cache { "on" } else { "off" }
-        );
-    } else {
-        std::hint::black_box(&out);
     }
     Ok(())
 }
@@ -526,6 +703,9 @@ fn cmd_exec_pass(args: &Args, pass: ConvPass) -> Result<()> {
 /// (for the tiled engine) measured vs modelled word traffic.
 fn cmd_exec(args: &Args) -> Result<()> {
     if let Some(net) = args.opt("network") {
+        // network runs parse `--pass` themselves (fwd|bwd|step — the
+        // network-sweep axis, not the single-layer ConvPass below), so an
+        // unknown pass string errors instead of being silently ignored
         let net = net.to_string();
         return cmd_exec_network(args, &net);
     }
@@ -709,6 +889,35 @@ fn cmd_hlo_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn exec_rejects_unknown_pass_for_networks() {
+        // regression: the --network branch used to return before --pass
+        // parsing, so a bad pass string was silently ignored instead of
+        // producing a Result error listing the valid values
+        let a = parse("exec --network tiny_resnet --pass nonsense");
+        let e = cmd_exec(&a).unwrap_err().to_string();
+        assert!(e.contains("--pass"), "{e}");
+        assert!(e.contains("nonsense"), "{e}");
+        assert!(e.contains("fwd|bwd|step"), "{e}");
+    }
+
+    #[test]
+    fn exec_rejects_unknown_pass_for_layers() {
+        let a = parse("exec --pass sideways");
+        let e = cmd_exec(&a).unwrap_err().to_string();
+        assert!(e.contains("sideways"), "{e}");
+        assert!(e.contains("fwd|dfilter|dinput"), "{e}");
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -732,6 +941,7 @@ fn main() {
             eprintln!("        --pass fwd|dfilter|dinput (backward passes: --kernel naive|tiled|auto)");
             eprintln!("        --network tiny_resnet|deep_mixnet [--batch N] [--mem M] [--check]");
             eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off");
+            eprintln!("        --pass fwd|bwd|step (with --network: fused backward / training-step sweeps)");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
             std::process::exit(2);
         }

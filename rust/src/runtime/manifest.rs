@@ -183,7 +183,8 @@ impl NetworkSpec {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
     pub name: String,
-    /// "blocked" | "im2col" | "tiled" | "network"
+    /// "blocked" | "im2col" | "tiled" | "dfilter" | "dinput" | "network"
+    /// | "training"
     pub kind: String,
     /// file name relative to the artifact directory
     pub path: String,
@@ -272,6 +273,30 @@ impl ArtifactSpec {
             path: format!("{}_network.hlo.txt", net.name),
             inputs,
             output: vec![o[0], o[1], o[2], o[3]],
+            updates: net.updates(),
+        }
+    }
+
+    /// Synthesize the spec of a training-network artifact (kind
+    /// `"training"`) from a validated [`NetworkSpec`]: the fused backward
+    /// sweep through the whole chain. Inputs are the loss gradient at the
+    /// tail followed by one (fixed) filter per stage; the output is the
+    /// image gradient `dIn_0` (the head's input dims). As with the
+    /// `"network"` kind, interior strides are not recoverable from these
+    /// dims, so backends resolve the chain through [`Manifest::network`].
+    pub fn for_training(net: &NetworkSpec) -> ArtifactSpec {
+        let o = net.output_dims();
+        let mut inputs = vec![vec![o[0], o[1], o[2], o[3]]];
+        for st in &net.stages {
+            inputs.push(st.shape.filter_dims().to_vec());
+        }
+        let d = net.input_dims();
+        ArtifactSpec {
+            name: net.name.clone(),
+            kind: "training".to_string(),
+            path: format!("{}_training.hlo.txt", net.name),
+            inputs,
+            output: vec![d[0], d[1], d[2], d[3]],
             updates: net.updates(),
         }
     }
@@ -437,8 +462,11 @@ impl Manifest {
     /// the same pass-generic engine), plus two `"network"` pipelines: the
     /// fully-fusable [`NetworkSpec::tiny_resnet`] and the six-stage
     /// [`NetworkSpec::deep_mixnet`], whose plan mixes fused and
-    /// materialized groups at the default budget. This is what
-    /// [`super::Runtime::builtin`] and the no-artifact serving path use.
+    /// materialized groups at the default budget. Each pipeline is also
+    /// exposed as a `"training"` artifact: the fused backward sweep that
+    /// turns a tail loss gradient into the head image gradient. This is
+    /// what [`super::Runtime::builtin`] and the no-artifact serving path
+    /// use.
     pub fn builtin(batch: u64) -> Manifest {
         assert!(batch >= 1);
         let unit3x3 = ConvShape::new(batch, 8, 16, 12, 12, 3, 3, 1, 1);
@@ -461,6 +489,8 @@ impl Manifest {
                 ArtifactSpec::for_pass("unit5x5", ConvPass::DInput, &unit5x5),
                 ArtifactSpec::for_network(&tiny),
                 ArtifactSpec::for_network(&deep),
+                ArtifactSpec::for_training(&tiny),
+                ArtifactSpec::for_training(&deep),
             ],
             networks: vec![tiny, deep],
         }
@@ -672,6 +702,8 @@ mod tests {
         assert!(m.find("unit5x5/dfilter").is_some());
         assert!(m.find("unit5x5/dinput").is_some());
         assert!(m.find("tiny_resnet/network").is_some());
+        assert!(m.find("tiny_resnet/training").is_some());
+        assert!(m.find("deep_mixnet/training").is_some());
         for a in &m.artifacts {
             assert!(a.inputs.len() >= 2, "{}", a.key());
             assert_eq!(a.output.len(), 4);
@@ -749,6 +781,28 @@ mod tests {
         assert_eq!(spec.inputs[0], net.input_dims().to_vec());
         assert_eq!(spec.output, net.output_dims().to_vec());
         assert_eq!(spec.updates, net.updates());
+    }
+
+    #[test]
+    fn training_artifacts_mirror_their_network() {
+        let m = Manifest::builtin(4);
+        for name in ["tiny_resnet", "deep_mixnet"] {
+            let net = m.network(name).expect("builtin network");
+            let spec = m
+                .find(&format!("{name}/training"))
+                .expect("training artifact");
+            assert_eq!(spec.kind, "training");
+            // operands: tail loss gradient, then one filter per stage
+            assert_eq!(spec.inputs.len(), net.stages.len() + 1);
+            assert_eq!(spec.inputs[0], net.output_dims().to_vec());
+            for (k, st) in net.stages.iter().enumerate() {
+                assert_eq!(spec.inputs[k + 1], st.shape.filter_dims().to_vec());
+            }
+            // the product is the image gradient at the head
+            assert_eq!(spec.output, net.input_dims().to_vec());
+            assert_eq!(spec.updates, net.updates());
+            assert!(spec.layer_shape().is_err());
+        }
     }
 
     #[test]

@@ -109,8 +109,9 @@ impl Runtime {
 
     /// Prepare one artifact by key (`<name>/<kind>`), caching the result.
     /// The freshly inserted entry is returned directly — no second hash
-    /// lookup on either the hit or the miss path. `"network"` kinds whose
-    /// manifest carries a matching [`NetworkSpec`] load through
+    /// lookup on either the hit or the miss path. `"network"` (fused
+    /// forward pipeline) and `"training"` (fused backward sweep) kinds
+    /// whose manifest carries a matching [`NetworkSpec`] load through
     /// [`ExecBackend::load_network`] on backends that opt in
     /// ([`ExecBackend::supports_networks`]); otherwise they fall back to
     /// the backend's file loader (the AOT/PJRT route, which executes the
@@ -124,7 +125,9 @@ impl Runtime {
                     .find(key)
                     .ok_or_else(|| err!("artifact '{key}' not in manifest"))?
                     .clone();
-                let net = if spec.kind == "network" && self.backend.supports_networks() {
+                let is_pipeline =
+                    spec.kind == "network" || spec.kind == "training";
+                let net = if is_pipeline && self.backend.supports_networks() {
                     self.manifest.network(&spec.name).cloned()
                 } else {
                     None
@@ -352,6 +355,32 @@ mod tests {
         let refs: Vec<&Tensor4> = inputs.iter().map(|a| a.as_ref()).collect();
         let again = rt.run(key, &refs).expect("run network via refs");
         assert_eq!(again.max_abs_diff(&out), 0.0);
+    }
+
+    #[test]
+    fn training_artifact_runs_the_backward_sweep() {
+        let mut rt = Runtime::builtin();
+        let key = "tiny_resnet/training";
+        let spec = rt.load(key).expect("load training").spec.clone();
+        assert_eq!(spec.inputs.len(), 4, "loss gradient + 3 filters");
+        // instrumented but not yet run: zero counters
+        assert_eq!(rt.traffic(key).expect("instrumented").total(), 0);
+        let inputs: Vec<Arc<Tensor4>> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                Arc::new(Tensor4::randn([d[0], d[1], d[2], d[3]], 60 + i as u64))
+            })
+            .collect();
+        let out = rt.run_arc(key, &inputs).expect("run training sweep");
+        assert_eq!(out.dims.to_vec(), spec.output);
+        let stages = rt.stage_traffic(key).expect("per-stage traffic");
+        assert_eq!(stages.len(), 3);
+        assert!(rt.halo_words(key).is_some());
+        // the image gradient has the forward network's input geometry
+        let fwd = rt.manifest().find("tiny_resnet/network").unwrap();
+        assert_eq!(spec.output, fwd.inputs[0]);
     }
 
     #[test]

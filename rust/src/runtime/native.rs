@@ -11,9 +11,12 @@
 //! tiled engine (bitwise identical to the `conv/training.rs` naive
 //! oracles); kind `"network"` executes a whole
 //! [`crate::runtime::manifest::NetworkSpec`] pipeline through the
-//! `kernels/fuse` fused executor (resolved via
-//! [`ExecBackend::load_network`] — the single-layer `load` entry rejects
-//! it). Three independent single-layer accumulation orders, so cross-kind
+//! `kernels/fuse` fused executor, and kind `"training"` runs the same
+//! pipeline's fused *backward* sweep — tail loss gradient in, head image
+//! gradient out, dInput chained stage to stage without materializing
+//! interior gradients (both resolved via [`ExecBackend::load_network`] —
+//! the single-layer `load` entry rejects them). Three independent
+//! single-layer accumulation orders, so cross-kind
 //! agreement tests exercise real cross-validation even without compiled
 //! artifacts.
 //!
@@ -33,9 +36,9 @@ use std::sync::{Arc, Mutex};
 use crate::conv::{conv7nl_naive, ConvPass, ConvShape, Precision, Tensor4};
 use crate::err;
 use crate::kernels::{
-    conv_network_fused, conv_pass_tiled_parallel, conv_tiled_parallel,
-    FusePlan, NetTrafficCounters, TilePlan, TilePlanCache, Traffic,
-    TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    conv_network_bwd, conv_network_fused, conv_pass_tiled_parallel,
+    conv_tiled_parallel, FusePlan, NetPass, NetTrafficCounters, TilePlan,
+    TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -116,7 +119,7 @@ impl ExecBackend for NativeBackend {
                     counters: Arc::new(TrafficCounters::new()),
                 }))
             }
-            "network" => Err(err!(
+            "network" | "training" => Err(err!(
                 "artifact '{}' is a network pipeline but the manifest \
                  carries no matching 'networks' entry to execute it \
                  natively: add one (name '{}', a stage per conv), or build \
@@ -127,8 +130,8 @@ impl ExecBackend for NativeBackend {
             other => Err(err!(
                 "native backend cannot execute artifact '{}' of kind '{other}' \
                  (single-layer 'blocked'/'im2col'/'tiled' specs, training \
-                 'dfilter'/'dinput' specs, or 'network' pipelines); build \
-                 with --features pjrt to run it over XLA",
+                 'dfilter'/'dinput' specs, or 'network'/'training' \
+                 pipelines); build with --features pjrt to run it over XLA",
                 spec.key()
             )),
         }
@@ -141,20 +144,42 @@ impl ExecBackend for NativeBackend {
     ) -> Result<Box<dyn Executable>> {
         if spec.inputs.len() != net.stages.len() + 1 {
             return Err(err!(
-                "network artifact '{}' wants image + {} filters, spec has {} \
+                "network artifact '{}' wants {} + {} filters, spec has {} \
                  inputs",
                 spec.key(),
+                if spec.kind == "training" { "loss gradient" } else { "image" },
                 net.stages.len(),
                 spec.inputs.len()
             ));
         }
-        let plan = Arc::new(FusePlan::new(
-            &net.stages,
-            DEFAULT_TILE_MEM_WORDS,
-            &self.plans,
-        ));
         let counters = NetTrafficCounters::new(net.stages.len());
-        Ok(Box::new(NetworkExec { plan, pool: self.tiled_pool(), counters }))
+        match spec.kind.as_str() {
+            "training" => {
+                let plan = Arc::new(FusePlan::for_pass(
+                    NetPass::Backward,
+                    &net.stages,
+                    DEFAULT_TILE_MEM_WORDS,
+                    &self.plans,
+                ));
+                Ok(Box::new(TrainingExec {
+                    plan,
+                    pool: self.tiled_pool(),
+                    counters,
+                }))
+            }
+            _ => {
+                let plan = Arc::new(FusePlan::new(
+                    &net.stages,
+                    DEFAULT_TILE_MEM_WORDS,
+                    &self.plans,
+                ));
+                Ok(Box::new(NetworkExec {
+                    plan,
+                    pool: self.tiled_pool(),
+                    counters,
+                }))
+            }
+        }
     }
 }
 
@@ -295,6 +320,49 @@ impl Executable for NetworkExec {
     }
 }
 
+/// Executes a network pipeline's fused backward sweep (kind `"training"`):
+/// the tail loss gradient chains through the transposed stencils back to
+/// the head image gradient, fused groups keeping interior stage gradients
+/// in scratch. Bitwise identical to chaining the per-stage dInput oracles
+/// by the backward accumulation-order contract.
+struct TrainingExec {
+    plan: Arc<FusePlan>,
+    pool: Arc<ThreadPool>,
+    counters: NetTrafficCounters,
+}
+
+impl Executable for TrainingExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let arcs: Vec<Arc<Tensor4>> =
+            inputs.iter().map(|t| Arc::new((*t).clone())).collect();
+        self.execute_arc(&arcs)
+    }
+
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        let gout = &inputs[0];
+        let filters = &inputs[1..];
+        Ok(conv_network_bwd(
+            gout,
+            filters,
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn traffic(&self) -> Option<Traffic> {
+        Some(self.counters.total())
+    }
+
+    fn stage_traffic(&self) -> Option<Vec<Traffic>> {
+        Some(self.counters.snapshot())
+    }
+
+    fn halo_words(&self) -> Option<Vec<u64>> {
+        Some(self.counters.halo_snapshot())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,7 +373,7 @@ mod tests {
         let m = Manifest::builtin(4);
         assert!(m.artifacts.len() >= 3);
         for spec in &m.artifacts {
-            if spec.kind == "network" {
+            if spec.kind == "network" || spec.kind == "training" {
                 // whole-network artifacts resolve through
                 // Manifest::network, never the single-layer inversion
                 assert!(spec.layer_shape().is_err(), "{}", spec.key());
@@ -430,6 +498,44 @@ mod tests {
         let mut bad = spec.clone();
         bad.inputs.pop();
         assert!(be.load_network(&net, &bad).is_err());
+    }
+
+    #[test]
+    fn training_pipeline_loads_and_matches_backward_oracle() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let spec = ArtifactSpec::for_training(&net);
+        let mut be = NativeBackend::new();
+        let exe = be.load_network(&net, &spec).expect("load training");
+        let gd = &spec.inputs[0];
+        let gout = Tensor4::randn([gd[0], gd[1], gd[2], gd[3]], 7);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 8 + i as u64))
+            .collect();
+        let mut ins: Vec<&Tensor4> = vec![&gout];
+        ins.extend(filters.iter());
+        let got = exe.execute(&ins).expect("run training sweep");
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let want =
+            crate::kernels::naive_network_bwd(&gout, &frefs, &net.stages);
+        assert_eq!(got.dims.to_vec(), spec.output);
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "fused backward must be bitwise"
+        );
+        let per_stage = exe.stage_traffic().expect("training is instrumented");
+        assert_eq!(per_stage.len(), net.stages.len());
+        assert!(exe.traffic().expect("aggregate").total() > 0);
+        assert!(exe.halo_words().is_some());
+        // arity mismatch between spec and chain is rejected at load
+        let mut bad = spec.clone();
+        bad.inputs.pop();
+        assert!(be.load_network(&net, &bad).is_err());
+        // the single-layer load entry rejects the kind outright
+        assert!(be.load(&spec, None).is_err());
     }
 
     #[test]

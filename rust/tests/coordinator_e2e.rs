@@ -162,6 +162,64 @@ fn server_serves_whole_network_requests() {
 }
 
 #[test]
+fn server_serves_gradient_requests_through_training_kind() {
+    // gradient serving: one submit per tail loss-gradient slice, the
+    // response is the head image gradient from the fused backward sweep,
+    // validated bitwise against the chained dInput oracle per request
+    // (the backward accumulation-order contract makes every plan bitwise)
+    let m = Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH);
+    let net = m.network("tiny_resnet").expect("builtin network").clone();
+    let spec = m.find("tiny_resnet/training").expect("training artifact").clone();
+    let weights: Vec<Tensor4> = spec.inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, d)| Tensor4::randn([d[0], d[1], d[2], d[3]], 40 + i as u64))
+        .collect();
+    let server = ConvServer::start_builtin_training(
+        "tiny_resnet/training",
+        weights.clone(),
+        Duration::from_millis(3),
+    )
+    .expect("training server start");
+    let gd = spec.inputs[0].clone();
+    assert_eq!(server.batch_size(), gd[0]);
+
+    // per-request oracle: the same chain at batch 1
+    let one_img_stages: Vec<convbound::runtime::NetworkStage> = net
+        .stages
+        .iter()
+        .map(|st| convbound::runtime::NetworkStage {
+            shape: st.shape.with_batch(1),
+            precision: st.precision,
+        })
+        .collect();
+    let wrefs: Vec<&Tensor4> = weights.iter().collect();
+
+    let n_req = gd[0] + 1; // forces a padded second batch
+    let grads: Vec<Tensor4> = (0..n_req)
+        .map(|i| Tensor4::randn([1, gd[1], gd[2], gd[3]], 500 + i as u64))
+        .collect();
+    let pending: Vec<_> = grads
+        .iter()
+        .map(|g| server.submit(g.clone()).expect("submit"))
+        .collect();
+    for (g, rx) in grads.iter().zip(pending) {
+        let resp = rx.recv().expect("response");
+        let want =
+            convbound::kernels::naive_network_bwd(g, &wrefs, &one_img_stages);
+        assert_eq!(
+            resp.output.max_abs_diff(&want),
+            0.0,
+            "gradient request must match the chained dInput oracle bitwise"
+        );
+        assert_eq!(resp.output.dims[1..], spec.output[1..]);
+    }
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, n_req as u64);
+    assert!(stats.padded_slots >= 1);
+}
+
+#[test]
 fn zero_copy_submit_accepts_shared_images() {
     // submit takes Arc<Tensor4> directly: many requests can share one
     // buffer with no per-submit copies

@@ -12,13 +12,15 @@ use convbound::conv::{
 };
 use convbound::gemmini::{simulate_layer, GemminiConfig};
 use convbound::kernels::{
-    axpy, axpy_scalar, conv_network_fused, conv_network_fused_counted,
+    axpy, axpy_scalar, conv_network_bwd, conv_network_bwd_counted,
+    conv_network_fused, conv_network_fused_counted, conv_network_step_counted,
     conv_pass_tiled, conv_pass_tiled_counted, conv_pass_tiled_parallel,
     conv_tiled_counted, expected_pass_traffic, expected_traffic,
-    naive_network, FusePlan, FusedExec, NetTrafficCounters, TilePlan,
-    TilePlanCache, Traffic, TrafficCounters,
+    naive_network, naive_network_bwd, naive_network_step, FusePlan, FusedExec,
+    NetPass, NetTrafficCounters, TilePlan, TilePlanCache, Traffic,
+    TrafficCounters,
 };
-use convbound::runtime::NetworkSpec;
+use convbound::runtime::{NetworkSpec, NetworkStage};
 use convbound::util::threadpool::ThreadPool;
 use convbound::hbl::{lattice_closure, Mat, Subspace};
 use convbound::lp::{solve, Constraint, Objective, Rat, Rel};
@@ -813,6 +815,249 @@ fn prop_fused_parallel_bitwise_matches_serial() {
                 && par_ctr.snapshot() == serial_ctr.snapshot()
         },
     );
+}
+
+// ---------------- fused training sweeps (backward / step) ----------------
+
+/// Re-precision a generated chain: same shapes, independently random
+/// per-stage precisions — the planner's LP solves and the traffic model
+/// must hold for mixed-precision chains too (numerics are unaffected; the
+/// data stays f32).
+fn mixed_precision_stages(net: &NetworkSpec, r: &mut Rng) -> Vec<NetworkStage> {
+    net.stages
+        .iter()
+        .map(|st| NetworkStage { shape: st.shape, precision: random_precision(r) })
+        .collect()
+}
+
+fn stage_filters(stages: &[NetworkStage], seed: u64) -> Vec<Tensor4> {
+    stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), seed + 1 + i as u64))
+        .collect()
+}
+
+fn tail_gradient(stages: &[NetworkStage], seed: u64) -> Tensor4 {
+    let s = &stages[stages.len() - 1].shape;
+    Tensor4::randn(
+        [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize],
+        seed,
+    )
+}
+
+#[test]
+fn prop_fused_backward_bitwise_matches_chained_oracle() {
+    // the backward accumulation-order contract extends to whole networks:
+    // ANY backward plan — fused, mixed or materialized, any memory budget,
+    // any (mixed) precision it was solved under — reproduces the chained
+    // dInput oracle bitwise; measured per-stage traffic equals the
+    // analytic model exactly and fused boundaries move zero words
+    forall(
+        Config { cases: 12, seed: 87 },
+        |r| {
+            let net = random_chain(r);
+            let stages = mixed_precision_stages(&net, r);
+            (stages, (1u64 << r.range(9, 14)) as f64, r.range(0, 1_000_000))
+        },
+        |(stages, m, seed)| {
+            let cache = TilePlanCache::new();
+            let plan = FusePlan::for_pass(NetPass::Backward, stages, *m, &cache);
+            let gout = tail_gradient(stages, *seed);
+            let filters = stage_filters(stages, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let counters = NetTrafficCounters::new(stages.len());
+            let got = conv_network_bwd_counted(&gout, &frefs, &plan, &counters);
+            let want = naive_network_bwd(&gout, &frefs, stages);
+            let measured = counters.snapshot();
+            got.max_abs_diff(&want) == 0.0
+                && measured == plan.expected_network_traffic()
+                && fused_boundaries_silent(&plan, &measured)
+        },
+    );
+}
+
+#[test]
+fn prop_fused_backward_parallel_bitwise_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(
+        Config { cases: 8, seed: 88 },
+        |r| (random_chain(r), (1u64 << r.range(9, 13)) as f64),
+        |(net, m)| {
+            let cache = TilePlanCache::new();
+            let plan = Arc::new(FusePlan::for_pass(
+                NetPass::Backward,
+                &net.stages,
+                *m,
+                &cache,
+            ));
+            let gout = Arc::new(tail_gradient(&net.stages, 5));
+            let filters: Vec<Arc<Tensor4>> =
+                stage_filters(&net.stages, 5).into_iter().map(Arc::new).collect();
+            let frefs: Vec<&Tensor4> =
+                filters.iter().map(|a| a.as_ref()).collect();
+            let serial_ctr = NetTrafficCounters::new(net.stages.len());
+            let serial =
+                conv_network_bwd_counted(&gout, &frefs, &plan, &serial_ctr);
+            let par_ctr = NetTrafficCounters::new(net.stages.len());
+            let par = conv_network_bwd(&gout, &filters, &plan, &pool, &par_ctr);
+            par.max_abs_diff(&serial) == 0.0
+                && par_ctr.snapshot() == serial_ctr.snapshot()
+        },
+    );
+}
+
+#[test]
+fn prop_backward_halo_on_off_bitwise_with_exact_traffic() {
+    // the transposed-stencil halo cache of the backward sweep: toggling it
+    // on an otherwise identical plan never changes a bit of the image
+    // gradient; measured traffic equals each variant's analytic model
+    // exactly, measured halo words equal the savings model (and are all
+    // zero with the cache off), and caching can only reduce total traffic
+    forall(
+        Config { cases: 10, seed: 89 },
+        |r| (random_chain(r), r.range(0, 1_000_000)),
+        |(net, seed)| {
+            let cache = TilePlanCache::new();
+            let on = FusePlan::for_pass(
+                NetPass::Backward,
+                &net.stages,
+                65536.0,
+                &cache,
+            );
+            let mut off = on.clone();
+            off.halo_cache = false;
+            let gout = tail_gradient(&net.stages, *seed);
+            let filters = stage_filters(&net.stages, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let c_on = NetTrafficCounters::new(net.stages.len());
+            let c_off = NetTrafficCounters::new(net.stages.len());
+            let a = conv_network_bwd_counted(&gout, &frefs, &on, &c_on);
+            let b = conv_network_bwd_counted(&gout, &frefs, &off, &c_off);
+            a.max_abs_diff(&b) == 0.0
+                && c_on.snapshot() == on.expected_network_traffic()
+                && c_off.snapshot() == off.expected_network_traffic()
+                && c_on.halo_snapshot() == on.expected_halo_words()
+                && c_off.halo_snapshot().iter().all(|&w| w == 0)
+                && Traffic::sum(&c_on.snapshot()).total()
+                    <= Traffic::sum(&c_off.snapshot()).total()
+        },
+    );
+}
+
+#[test]
+fn prop_fused_step_matches_sgd_oracle() {
+    // the tentpole invariant: a whole training step as fused sweeps. When
+    // every non-last group is fused ([`FusePlan::step_bitwise`]) the
+    // step's filter and image gradients reproduce the layer-by-layer SGD
+    // oracle bitwise; otherwise (materialized activations re-enter through
+    // the tiled engine's accumulation order) within tolerance. Measured
+    // per-stage traffic equals the analytic model exactly and fused
+    // boundaries move zero words — mixed precisions, random budgets
+    forall(
+        Config { cases: 10, seed: 90 },
+        |r| {
+            let net = random_chain(r);
+            let stages = mixed_precision_stages(&net, r);
+            (stages, (1u64 << r.range(10, 15)) as f64, r.range(0, 1_000_000))
+        },
+        |(stages, m, seed)| {
+            let cache = TilePlanCache::new();
+            let plan = FusePlan::for_pass(NetPass::Step, stages, *m, &cache);
+            let head = &stages[0].shape;
+            let image = Tensor4::randn(
+                [
+                    head.n as usize,
+                    head.c_i as usize,
+                    head.in_w() as usize,
+                    head.in_h() as usize,
+                ],
+                seed + 100,
+            );
+            let gout = tail_gradient(stages, *seed);
+            let filters = stage_filters(stages, *seed);
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            let counters = NetTrafficCounters::new(stages.len());
+            let (dw, din) =
+                conv_network_step_counted(&image, &frefs, &gout, &plan, &counters);
+            let (dw_ref, din_ref) =
+                naive_network_step(&image, &frefs, &gout, stages);
+            let numerics_ok = if plan.step_bitwise() {
+                din.max_abs_diff(&din_ref) == 0.0
+                    && dw
+                        .iter()
+                        .zip(&dw_ref)
+                        .all(|(a, b)| a.max_abs_diff(b) == 0.0)
+            } else {
+                din.rel_l2(&din_ref) < 1e-4
+                    && dw.iter().zip(&dw_ref).all(|(a, b)| a.rel_l2(b) < 1e-4)
+            };
+            let measured = counters.snapshot();
+            numerics_ok
+                && measured == plan.expected_network_traffic()
+                && fused_boundaries_silent(&plan, &measured)
+        },
+    );
+}
+
+#[test]
+fn degenerate_network_sweeps_return_zero_gradients() {
+    let p = Precision::uniform();
+    let cache = TilePlanCache::new();
+    // two degenerate chains NetworkSpec would reject (zero updates), built
+    // as raw stages: a zero-batch chain, and a chain whose interior
+    // boundary carries zero channels. Both backward and step sweeps must
+    // agree with the oracles' dims and zero values without panicking.
+    let chains: [Vec<ConvShape>; 2] = [
+        vec![
+            ConvShape::new(0, 3, 4, 8, 8, 3, 3, 1, 1),
+            ConvShape::new(0, 4, 2, 6, 6, 2, 2, 1, 1),
+        ],
+        vec![
+            ConvShape::new(2, 3, 0, 8, 8, 3, 3, 1, 1),
+            ConvShape::new(2, 0, 2, 6, 6, 2, 2, 1, 1),
+        ],
+    ];
+    for shapes in &chains {
+        let stages: Vec<NetworkStage> = shapes
+            .iter()
+            .map(|s| NetworkStage { shape: *s, precision: p })
+            .collect();
+        let gout = tail_gradient(&stages, 3);
+        let filters = stage_filters(&stages, 3);
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+
+        let bwd = FusePlan::for_pass(NetPass::Backward, &stages, 4096.0, &cache);
+        let counters = NetTrafficCounters::new(stages.len());
+        let got = conv_network_bwd_counted(&gout, &frefs, &bwd, &counters);
+        let want = naive_network_bwd(&gout, &frefs, &stages);
+        assert_eq!(got.dims, want.dims);
+        assert!(got.data.iter().all(|&v| v == 0.0), "bwd zero gradient");
+        assert_eq!(counters.snapshot(), bwd.expected_network_traffic());
+
+        let head = &stages[0].shape;
+        let image = Tensor4::randn(
+            [
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize,
+            ],
+            4,
+        );
+        let step = FusePlan::for_pass(NetPass::Step, &stages, 4096.0, &cache);
+        let counters = NetTrafficCounters::new(stages.len());
+        let (dw, din) =
+            conv_network_step_counted(&image, &frefs, &gout, &step, &counters);
+        let (dw_ref, din_ref) = naive_network_step(&image, &frefs, &gout, &stages);
+        assert_eq!(din.dims, din_ref.dims);
+        assert!(din.data.iter().all(|&v| v == 0.0), "step zero dImage");
+        for (k, (a, b)) in dw.iter().zip(&dw_ref).enumerate() {
+            assert_eq!(a.dims, b.dims, "stage {k}");
+            assert!(a.data.iter().all(|&v| v == 0.0), "stage {k} zero dFilter");
+        }
+        assert_eq!(counters.snapshot(), step.expected_network_traffic());
+    }
 }
 
 #[test]
