@@ -37,6 +37,7 @@ use convbound::kernels::{
     NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
     DEFAULT_TILE_MEM_WORDS,
 };
+use convbound::obs;
 use convbound::runtime::{Manifest, Runtime};
 use convbound::util::json::Json;
 use convbound::util::threadpool::ThreadPool;
@@ -176,13 +177,62 @@ fn kernels_sweep(smoke: bool) -> Json {
         );
         layers.push(Json::Obj(lo));
     }
+    // observability cost gate: the same tiled hot path with the JSONL
+    // sink off and on
+    let (overhead_x, overhead_ok) = trace_overhead(smoke);
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("kernels".to_string()));
     doc.insert("smoke".to_string(), Json::Bool(smoke));
     doc.insert("mem_words".to_string(), Json::Num(m));
     doc.insert("workers".to_string(), Json::Num(workers as f64));
+    doc.insert("trace_overhead_x".to_string(), Json::Num(overhead_x));
+    doc.insert("trace_overhead_ok".to_string(), Json::Bool(overhead_ok));
     doc.insert("layers".to_string(), Json::Arr(layers));
     Json::Obj(doc)
+}
+
+/// Traced-vs-untraced pair on the tiled hot path. The observability
+/// contract is "one branch when disabled, one buffered JSONL line per
+/// counted execution when enabled", so the traced run must stay within
+/// noise of the untraced one; the ratio and the pass/fail flag land in
+/// `BENCH_kernels.json` for the CI gate.
+fn trace_overhead(smoke: bool) -> (f64, bool) {
+    let batch = if smoke { 1 } else { 2 };
+    let scale = if smoke { 4 } else { 1 };
+    let m = DEFAULT_TILE_MEM_WORDS;
+    let p = Precision::uniform();
+    let target = if smoke { 0.05 } else { 0.6 };
+    let l = resnet50_layers(batch)
+        .into_iter()
+        .find(|l| l.name == "conv4_x")
+        .expect("catalog layer");
+    let s = scaled(l.shape, scale);
+    let (x, w) = paper_operands(&s, 7);
+    let plan = TilePlan::new(&s, p, m);
+    let counters = TrafficCounters::new();
+
+    assert!(!obs::enabled(), "global trace must start disabled");
+    let off = bench("trace overhead: tiled untraced", target, || {
+        std::hint::black_box(conv_tiled_counted(&x, &w, &plan, &counters));
+    });
+    let path = std::env::temp_dir().join("convbound_bench_trace.jsonl");
+    obs::install_file(path.to_str().unwrap()).expect("trace sink");
+    let on = bench("trace overhead: tiled traced", target, || {
+        std::hint::black_box(conv_tiled_counted(&x, &w, &plan, &counters));
+    });
+    obs::uninstall();
+    std::fs::remove_file(&path).ok();
+
+    let overhead = on.summary.p50 / off.summary.p50.max(1e-12);
+    // p50 is the stable statistic; the slack absorbs timer noise (wider
+    // in smoke mode, where windows are 50 ms on scaled-down shapes)
+    let limit = if smoke { 1.10 } else { 1.03 };
+    println!(
+        "\n== trace overhead: traced/untraced p50 {overhead:.4}x \
+         (limit {limit:.2}x) =="
+    );
+    (overhead, overhead <= limit)
 }
 
 fn write_json(file: &str, doc: &Json) {

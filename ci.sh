@@ -29,8 +29,21 @@ cargo run --release -- exec --layer conv4_x --scale 4 --pass dinput --check >/de
 echo "==> cargo run --release -- exec --network tiny_resnet --pass bwd --check  (fused backward sweep, bitwise vs chained oracle)"
 cargo run --release -- exec --network tiny_resnet --pass bwd --check >/dev/null
 
-echo "==> cargo run --release -- exec --network tiny_resnet --pass step --check  (fused training step, bitwise vs SGD oracle)"
-cargo run --release -- exec --network tiny_resnet --pass step --check >/dev/null
+echo "==> cargo run --release -- exec --network tiny_resnet --pass step --check --trace  (fused training step + JSONL event log)"
+rm -f /tmp/convbound_ci_trace.jsonl
+cargo run --release -- exec --network tiny_resnet --pass step --check \
+    --trace /tmp/convbound_ci_trace.jsonl >/dev/null
+test -s /tmp/convbound_ci_trace.jsonl \
+    || { echo "FAIL: --trace wrote no events"; exit 1; }
+
+echo "==> trace check: every line parses, spans balance"
+cargo run --release -- trace check /tmp/convbound_ci_trace.jsonl
+
+echo "==> trace summarize: zero measured-vs-expected traffic mismatches"
+cargo run --release -- trace summarize /tmp/convbound_ci_trace.jsonl \
+    | tee /tmp/convbound_ci_trace_summary.txt
+grep -q "measured-vs-expected mismatches: 0" /tmp/convbound_ci_trace_summary.txt \
+    || { echo "FAIL: traced run logged traffic that disagrees with the analytic model"; exit 1; }
 
 echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json + BENCH_training.json)"
 rm -f BENCH_kernels.json BENCH_network.json BENCH_training.json  # stale files must not mask a failed write
@@ -38,6 +51,12 @@ cargo bench --bench e2e_runtime -- --smoke >/dev/null
 test -s BENCH_kernels.json || { echo "FAIL: BENCH_kernels.json missing"; exit 1; }
 test -s BENCH_network.json || { echo "FAIL: BENCH_network.json missing"; exit 1; }
 test -s BENCH_training.json || { echo "FAIL: BENCH_training.json missing"; exit 1; }
+
+echo "==> BENCH_kernels.json: tracing overhead within budget"
+# the traced-vs-untraced pair runs INSIDE the bench; here we gate on the
+# flag it computed (p50 ratio within the slack)
+grep -q '"trace_overhead_ok":true' BENCH_kernels.json \
+    || { echo "FAIL: JSONL tracing slowed the tiled hot path beyond the budget"; exit 1; }
 
 echo "==> BENCH_training.json: per-pass entries present"
 # the bitwise tiled-vs-oracle gate lives INSIDE the bench (training_sweep

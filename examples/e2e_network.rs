@@ -33,6 +33,8 @@ use convbound::runtime::Runtime;
 use convbound::tiling::vendor_tiling;
 
 fn main() {
+    // CONVBOUND_TRACE=<path> streams the run's plan/traffic events
+    convbound::obs::init_from_env();
     let mut rt = Runtime::builtin();
     let key = "tiny_resnet/network";
     let net = rt.manifest().network("tiny_resnet").expect("builtin network").clone();

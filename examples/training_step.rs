@@ -34,6 +34,8 @@ use convbound::kernels::{
 use convbound::runtime::NetworkSpec;
 
 fn main() {
+    // CONVBOUND_TRACE=<path> streams the run's plan/traffic events
+    convbound::obs::init_from_env();
     let net = NetworkSpec::tiny_resnet(2);
     let cache = TilePlanCache::new();
 

@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use crate::obs;
 use crate::util::stats::Summary;
 
 /// One timed benchmark result.
@@ -49,7 +50,10 @@ pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchResult 
         summary: Summary::of(&samples),
         iters,
     };
-    println!("{}", r.report());
+    // through the trace sink's log channel: traced bench runs record every
+    // summary line as a `log` event, and `--quiet`-style verbosity control
+    // comes for free (Info prints at the default level)
+    obs::log(obs::Level::Info, &r.report());
     r
 }
 

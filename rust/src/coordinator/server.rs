@@ -34,6 +34,7 @@
 //! tensors per batch.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -41,8 +42,11 @@ use std::time::{Duration, Instant};
 
 use crate::conv::Tensor4;
 use crate::err;
+use crate::obs::{self, jb, jf, js, ju, SpanId, TraceSink};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
 
 /// A finished request.
 #[derive(Debug)]
@@ -56,6 +60,8 @@ pub struct ConvResponse {
 
 struct Job {
     id: u64,
+    /// trace span opened at enqueue (0 when tracing is off)
+    span: SpanId,
     image: Arc<Tensor4>,
     enqueued: Instant,
     reply: mpsc::Sender<ConvResponse>,
@@ -66,13 +72,24 @@ enum Msg {
     Stop,
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics, plus per-request latency percentiles
+/// and the peak batching-queue depth — both computed from the samples
+/// the executor records (via [`crate::util::stats::percentile`]), not
+/// estimated.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ServerStats {
+    /// Requests executed and replied to.
     pub requests: u64,
+    /// Requests accepted but never executed (still queued at shutdown).
+    pub failed: u64,
     pub batches: u64,
     pub padded_slots: u64,
     pub total_exec_secs: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    /// Max submitted-but-not-yet-drained requests observed at any enqueue.
+    pub peak_queue_depth: u64,
 }
 
 /// Where the executor thread gets its runtime. Backend handles may not be
@@ -107,7 +124,15 @@ impl Source {
 pub struct ConvServer {
     tx: mpsc::Sender<Msg>,
     handle: Option<thread::JoinHandle<Result<ServerStats>>>,
-    next_id: std::sync::atomic::AtomicU64,
+    /// shared with the executor: total requests accepted (the shutdown
+    /// path asserts completed + failed == this)
+    next_id: Arc<AtomicU64>,
+    /// submitted-but-not-yet-drained requests (incremented at submit,
+    /// decremented when the executor pulls the job off the channel)
+    queue_depth: Arc<AtomicU64>,
+    /// max queue depth ever observed at an enqueue
+    peak_depth: Arc<AtomicU64>,
+    trace: TraceSink,
     batch: usize,
     in_dims: [usize; 4],
 }
@@ -127,6 +152,7 @@ impl ConvServer {
             key,
             vec![weights],
             linger,
+            TraceSink::global(),
         )
     }
 
@@ -138,7 +164,27 @@ impl ConvServer {
         weights: Tensor4,
         linger: Duration,
     ) -> Result<ConvServer> {
-        ConvServer::start_source(Source::Builtin, key, vec![weights], linger)
+        ConvServer::start_source(
+            Source::Builtin,
+            key,
+            vec![weights],
+            linger,
+            TraceSink::global(),
+        )
+    }
+
+    /// Start a built-in server with an explicit [`TraceSink`] instead of
+    /// the process-global one — the wiring tests and embedders use to
+    /// capture exactly one server's events. Takes one weight tensor per
+    /// artifact filter input, so it serves single-layer, network and
+    /// training keys alike.
+    pub fn start_builtin_traced(
+        key: &str,
+        weights: Vec<Tensor4>,
+        linger: Duration,
+        trace: TraceSink,
+    ) -> Result<ConvServer> {
+        ConvServer::start_source(Source::Builtin, key, weights, linger, trace)
     }
 
     /// Start a server for a whole-network artifact from a directory: one
@@ -155,6 +201,7 @@ impl ConvServer {
             key,
             weights,
             linger,
+            TraceSink::global(),
         )
     }
 
@@ -165,7 +212,13 @@ impl ConvServer {
         weights: Vec<Tensor4>,
         linger: Duration,
     ) -> Result<ConvServer> {
-        ConvServer::start_source(Source::Builtin, key, weights, linger)
+        ConvServer::start_source(
+            Source::Builtin,
+            key,
+            weights,
+            linger,
+            TraceSink::global(),
+        )
     }
 
     /// Start a gradient server over the built-in native manifest (key:
@@ -178,7 +231,13 @@ impl ConvServer {
         weights: Vec<Tensor4>,
         linger: Duration,
     ) -> Result<ConvServer> {
-        ConvServer::start_source(Source::Builtin, key, weights, linger)
+        ConvServer::start_source(
+            Source::Builtin,
+            key,
+            weights,
+            linger,
+            TraceSink::global(),
+        )
     }
 
     fn start_source(
@@ -186,6 +245,7 @@ impl ConvServer {
         key: &str,
         weights: Vec<Tensor4>,
         linger: Duration,
+        trace: TraceSink,
     ) -> Result<ConvServer> {
         // Validate shapes from the manifest up front (plain data,
         // Send-safe); the runtime itself is created *inside* the executor
@@ -228,10 +288,17 @@ impl ConvServer {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let batch = in_dims[0];
         let out_dims = [spec.output[0], spec.output[1], spec.output[2], spec.output[3]];
+        let next_id = Arc::new(AtomicU64::new(0));
+        let queue_depth = Arc::new(AtomicU64::new(0));
+        let peak_depth = Arc::new(AtomicU64::new(0));
+        let (submitted, depth, peak) =
+            (Arc::clone(&next_id), Arc::clone(&queue_depth), Arc::clone(&peak_depth));
+        let exec_trace = trace.clone();
 
         let handle = thread::Builder::new()
             .name("convbound-executor".into())
             .spawn(move || -> Result<ServerStats> {
+                let trace = exec_trace;
                 let rt = (|| -> Result<Runtime> {
                     let mut rt = source.runtime()?;
                     rt.load(&key)?;
@@ -248,6 +315,10 @@ impl ConvServer {
                     }
                 };
                 let mut stats = ServerStats::default();
+                let mut latencies: Vec<f64> = Vec::new();
+                let mut completed: u64 = 0;
+                let mut failed: u64 = 0;
+                let mut seq: u64 = 0;
                 let mut queue: Vec<Job> = Vec::with_capacity(batch);
                 // Set when a Stop arrives inside the linger window: the
                 // in-flight batch must still be flushed, then the executor
@@ -261,12 +332,16 @@ impl ConvServer {
                         Ok(Msg::Run(j)) => j,
                         Ok(Msg::Stop) | Err(_) => break,
                     };
+                    depth.fetch_sub(1, Ordering::Relaxed);
                     queue.push(first);
                     let deadline = Instant::now() + linger;
                     while queue.len() < batch {
                         let left = deadline.saturating_duration_since(Instant::now());
                         match rx.recv_timeout(left) {
-                            Ok(Msg::Run(j)) => queue.push(j),
+                            Ok(Msg::Run(j)) => {
+                                depth.fetch_sub(1, Ordering::Relaxed);
+                                queue.push(j);
+                            }
                             Ok(Msg::Stop) => {
                                 stopping = true;
                                 break;
@@ -278,6 +353,24 @@ impl ConvServer {
                             }
                         }
                     }
+                    let batch_scope = if trace.enabled() {
+                        let reqs: Vec<Json> =
+                            queue.iter().map(|j| Json::Num(j.id as f64)).collect();
+                        Some(trace.scope(
+                            obs::kind::BATCH,
+                            &[
+                                ("seq", ju(seq)),
+                                ("key", js(&key)),
+                                ("size", ju(queue.len() as u64)),
+                                ("padded", ju((batch - queue.len()) as u64)),
+                                ("linger_flush", jb(queue.len() < batch)),
+                                ("reqs", Json::Arr(reqs)),
+                            ],
+                        ))
+                    } else {
+                        None
+                    };
+                    seq += 1;
                     // assemble the batch (zero-padding the tail); the
                     // batch tensor and the shared weights reach the
                     // backend as Arcs — no further copies on the way to
@@ -292,9 +385,18 @@ impl ConvServer {
                         Vec::with_capacity(1 + weights.len());
                     operands.push(Arc::new(x));
                     operands.extend(weights.iter().cloned());
+                    let dispatch_scope = if trace.enabled() {
+                        Some(trace.scope(obs::kind::DISPATCH, &[("key", js(&key))]))
+                    } else {
+                        None
+                    };
                     let t0 = Instant::now();
                     let out = rt.run_arc(&key, &operands)?;
-                    stats.total_exec_secs += t0.elapsed().as_secs_f64();
+                    let exec_secs = t0.elapsed().as_secs_f64();
+                    if let Some(g) = dispatch_scope {
+                        g.end(&[("secs", jf(exec_secs))]);
+                    }
+                    stats.total_exec_secs += exec_secs;
                     stats.batches += 1;
                     stats.requests += queue.len() as u64;
                     stats.padded_slots += (batch - queue.len()) as u64;
@@ -306,12 +408,75 @@ impl ConvServer {
                         o.data.copy_from_slice(
                             &out.data[slot * out_len..(slot + 1) * out_len],
                         );
+                        let latency = job.enqueued.elapsed();
+                        latencies.push(latency.as_secs_f64());
+                        completed += 1;
+                        trace.span_close(
+                            obs::kind::REQUEST,
+                            job.span,
+                            &[
+                                ("req", ju(job.id)),
+                                ("latency_secs", jf(latency.as_secs_f64())),
+                            ],
+                        );
                         let _ = job.reply.send(ConvResponse {
                             id: job.id,
                             output: o,
-                            latency: job.enqueued.elapsed(),
+                            latency,
                         });
                     }
+                    if let Some(g) = batch_scope {
+                        g.end(&[("exec_secs", jf(exec_secs))]);
+                    }
+                }
+                // drain requests that never ran (sent before Stop but
+                // still in the channel): their reply channels drop, and
+                // the accounting below must still balance
+                while let Ok(msg) = rx.try_recv() {
+                    if let Msg::Run(job) = msg {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        failed += 1;
+                        trace.span_close(
+                            obs::kind::REQUEST,
+                            job.span,
+                            &[("req", ju(job.id)), ("dropped", jb(true))],
+                        );
+                    }
+                }
+                stats.failed = failed;
+                stats.peak_queue_depth = peak.load(Ordering::Relaxed);
+                latencies.sort_by(f64::total_cmp);
+                if !latencies.is_empty() {
+                    stats.latency_p50_ms = percentile(&latencies, 0.50) * 1e3;
+                    stats.latency_p95_ms = percentile(&latencies, 0.95) * 1e3;
+                    stats.latency_p99_ms = percentile(&latencies, 0.99) * 1e3;
+                }
+                // the books must balance: every accepted request either
+                // got a reply or was drained above
+                let submitted_total = submitted.load(Ordering::SeqCst);
+                assert_eq!(
+                    completed + failed,
+                    submitted_total,
+                    "server accounting: completed + failed != submitted"
+                );
+                assert_eq!(completed, stats.requests, "server accounting");
+                if trace.enabled() {
+                    trace.event(
+                        obs::kind::SERVER_STATS,
+                        &[
+                            ("key", js(&key)),
+                            ("requests", ju(stats.requests)),
+                            ("failed", ju(stats.failed)),
+                            ("batches", ju(stats.batches)),
+                            ("padded_slots", ju(stats.padded_slots)),
+                            ("exec_secs", jf(stats.total_exec_secs)),
+                            ("latency_p50_ms", jf(stats.latency_p50_ms)),
+                            ("latency_p95_ms", jf(stats.latency_p95_ms)),
+                            ("latency_p99_ms", jf(stats.latency_p99_ms)),
+                            ("peak_queue_depth", ju(stats.peak_queue_depth)),
+                        ],
+                    );
+                    trace.flush();
                 }
                 Ok(stats)
             })
@@ -325,7 +490,10 @@ impl ConvServer {
         Ok(ConvServer {
             tx,
             handle: Some(handle),
-            next_id: std::sync::atomic::AtomicU64::new(0),
+            next_id,
+            queue_depth,
+            peak_depth,
+            trace,
             batch,
             in_dims,
         })
@@ -349,13 +517,30 @@ impl ConvServer {
         if image.dims != want {
             return Err(err!("image shape {:?} != {:?}", image.dims, want));
         }
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        let span = self.trace.span_id();
+        self.trace.span_open(
+            obs::kind::REQUEST,
+            span,
+            None,
+            &[("req", ju(id)), ("queue_depth", ju(depth))],
+        );
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Run(Job { id, image, enqueued: Instant::now(), reply }))
-            .map_err(|_| err!("server stopped"))?;
+            .send(Msg::Run(Job { id, span, image, enqueued: Instant::now(), reply }))
+            .map_err(|_| {
+                // the executor is gone: undo the books for this request
+                // and close its span so a captured trace still balances
+                self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.trace.span_close(
+                    obs::kind::REQUEST,
+                    span,
+                    &[("req", ju(id)), ("dropped", jb(true))],
+                );
+                err!("server stopped")
+            })?;
         Ok(rx)
     }
 

@@ -37,6 +37,7 @@ use crate::conv::{
     Precision, Tensor4,
 };
 use crate::err;
+use crate::obs::{self, jb, jf, js, ju};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
@@ -516,6 +517,18 @@ impl Autotuner {
                 && words > PRUNE_TRAFFIC_RATIO * floor
             {
                 pruned += 1;
+                if obs::enabled() {
+                    obs::event(
+                        obs::kind::AUTOTUNE_PROBE,
+                        &[
+                            ("pass", js(pass.name())),
+                            ("stages", ju(stages.len() as u64)),
+                            ("candidate", js(kind.name())),
+                            ("analytic_words", jf(words)),
+                            ("pruned", jb(true)),
+                        ],
+                    );
+                }
                 continue;
             }
             let counters = NetTrafficCounters::new(stages.len());
@@ -538,11 +551,35 @@ impl Autotuner {
                 }
             }
             let secs = t0.elapsed().as_secs_f64();
+            if obs::enabled() {
+                obs::event(
+                    obs::kind::AUTOTUNE_PROBE,
+                    &[
+                        ("pass", js(pass.name())),
+                        ("stages", ju(stages.len() as u64)),
+                        ("candidate", js(kind.name())),
+                        ("analytic_words", jf(words)),
+                        ("secs", jf(secs)),
+                        ("pruned", jb(false)),
+                    ],
+                );
+            }
             if secs < best.1 {
                 best = (kind, secs);
             }
         }
         self.note_pruned(pruned, candidates.len(), pass.name(), "network-mode");
+        if obs::enabled() {
+            obs::event(
+                obs::kind::AUTOTUNE_SELECT,
+                &[
+                    ("pass", js(pass.name())),
+                    ("stages", ju(stages.len() as u64)),
+                    ("kernel", js(best.0.name())),
+                    ("secs", jf(best.1)),
+                ],
+            );
+        }
         best.0
     }
 
@@ -858,9 +895,24 @@ impl Autotuner {
             return;
         }
         self.pruned.fetch_add(pruned, Ordering::Relaxed);
-        eprintln!(
-            "autotune: LP-pruned {pruned}/{total} {what} probes for pass \
-             '{pass}' (analytic traffic > {PRUNE_TRAFFIC_RATIO}x best)"
+        if obs::enabled() {
+            obs::event(
+                obs::kind::AUTOTUNE_PRUNE,
+                &[
+                    ("pass", js(pass)),
+                    ("what", js(what)),
+                    ("pruned", ju(pruned)),
+                    ("candidates", ju(total as u64)),
+                    ("ratio", jf(PRUNE_TRAFFIC_RATIO)),
+                ],
+            );
+        }
+        obs::log(
+            obs::Level::Debug,
+            &format!(
+                "autotune: LP-pruned {pruned}/{total} {what} probes for pass \
+                 '{pass}' (analytic traffic > {PRUNE_TRAFFIC_RATIO}x best)"
+            ),
         );
     }
 
@@ -885,16 +937,52 @@ impl Autotuner {
                 && words > PRUNE_TRAFFIC_RATIO * floor
             {
                 pruned += 1;
+                if obs::enabled() {
+                    obs::event(
+                        obs::kind::AUTOTUNE_PROBE,
+                        &[
+                            ("pass", js(pass.name())),
+                            ("shape", js(&s.to_string())),
+                            ("candidate", js(k.name())),
+                            ("analytic_words", jf(words)),
+                            ("pruned", jb(true)),
+                        ],
+                    );
+                }
                 continue;
             }
             let t0 = Instant::now();
             std::hint::black_box(self.run_pass_kernel(pass, k, &a, &b, s));
             let secs = t0.elapsed().as_secs_f64();
+            if obs::enabled() {
+                obs::event(
+                    obs::kind::AUTOTUNE_PROBE,
+                    &[
+                        ("pass", js(pass.name())),
+                        ("shape", js(&s.to_string())),
+                        ("candidate", js(k.name())),
+                        ("analytic_words", jf(words)),
+                        ("secs", jf(secs)),
+                        ("pruned", jb(false)),
+                    ],
+                );
+            }
             if secs < best.1 {
                 best = (k, secs);
             }
         }
         self.note_pruned(pruned, candidates.len(), pass.name(), "kernel");
+        if obs::enabled() {
+            obs::event(
+                obs::kind::AUTOTUNE_SELECT,
+                &[
+                    ("pass", js(pass.name())),
+                    ("shape", js(&s.to_string())),
+                    ("kernel", js(best.0.name())),
+                    ("secs", jf(best.1)),
+                ],
+            );
+        }
         best.0
     }
 

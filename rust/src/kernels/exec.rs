@@ -35,13 +35,16 @@
 //! adjacent h-tiles so the head re-reads and the upstream recompute only
 //! cover fresh rows.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::conv::{
     assert_pass_operands, conv7nl_naive, dinput_naive, ConvPass, ConvShape,
     NetworkStage, Tensor4,
 };
+use crate::obs::{self, jf, js, ju};
 use crate::util::threadpool::ThreadPool;
 
 use super::fuse::{
@@ -136,6 +139,134 @@ fn out_dims(s: &ConvShape) -> [usize; 4] {
     [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize]
 }
 
+// ---------------- trace guards ----------------
+//
+// Every traced traffic event pairs the measured counter delta with the
+// analytic expectation computed from the same plan, so `trace summarize`
+// can flag any divergence offline — the measured == expected invariant
+// the property tests assert, re-checked on every traced run.
+
+thread_local! {
+    /// Depth of enclosing traced network sweeps on this thread. The
+    /// network sweeps charge their materialized stages through the
+    /// single-layer entry points below; suppressing the single-layer
+    /// `traffic` events inside a sweep keeps the sweep's `stage_traffic`
+    /// events the only charge for those words (summarize totals would
+    /// otherwise double-count).
+    static NET_SWEEP_DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+fn traffic_delta(after: &Traffic, before: &Traffic) -> Traffic {
+    Traffic {
+        input_words: after.input_words - before.input_words,
+        filter_words: after.filter_words - before.filter_words,
+        output_words: after.output_words - before.output_words,
+    }
+}
+
+/// Emits one `traffic` event for a single-layer tiled run: the measured
+/// counter delta next to [`expected_pass_traffic`]'s analytic words.
+/// Inert (no snapshot, one branch) when tracing is off or a network
+/// sweep above is already charging these words.
+struct PassTraceGuard {
+    before: Option<(Traffic, Instant)>,
+}
+
+impl PassTraceGuard {
+    fn start(counters: &TrafficCounters) -> PassTraceGuard {
+        if !obs::enabled() || NET_SWEEP_DEPTH.with(|d| d.get()) > 0 {
+            return PassTraceGuard { before: None };
+        }
+        PassTraceGuard { before: Some((counters.snapshot(), Instant::now())) }
+    }
+
+    fn finish(self, plan: &TilePlan, counters: &TrafficCounters) {
+        let Some((before, t0)) = self.before else { return };
+        let m = traffic_delta(&counters.snapshot(), &before);
+        let e = expected_pass_traffic(plan);
+        obs::event(
+            obs::kind::TRAFFIC,
+            &[
+                ("pass", js(plan.pass.name())),
+                ("shape", js(&plan.shape.to_string())),
+                ("secs", jf(t0.elapsed().as_secs_f64())),
+                ("measured_input", ju(m.input_words)),
+                ("measured_filter", ju(m.filter_words)),
+                ("measured_output", ju(m.output_words)),
+                ("expected_input", ju(e.input_words)),
+                ("expected_filter", ju(e.filter_words)),
+                ("expected_output", ju(e.output_words)),
+            ],
+        );
+    }
+}
+
+/// Emits one `net_exec` event plus one `stage_traffic` event per stage
+/// for a network sweep: per-stage measured deltas (word traffic and
+/// halo-cache words) next to the plan's analytic expectations. While
+/// live, single-layer guards on this thread are suppressed.
+struct NetTraceGuard {
+    before: Option<(Vec<Traffic>, Vec<u64>, Instant)>,
+}
+
+impl NetTraceGuard {
+    fn start(counters: &NetTrafficCounters) -> NetTraceGuard {
+        if !obs::enabled() {
+            return NetTraceGuard { before: None };
+        }
+        NET_SWEEP_DEPTH.with(|d| d.set(d.get() + 1));
+        NetTraceGuard {
+            before: Some((
+                counters.snapshot(),
+                counters.halo_snapshot(),
+                Instant::now(),
+            )),
+        }
+    }
+
+    fn finish(
+        self,
+        plan: &FusePlan,
+        expected: &[Traffic],
+        expected_halo: &[u64],
+        counters: &NetTrafficCounters,
+    ) {
+        let Some((before, halo_before, t0)) = self.before else { return };
+        NET_SWEEP_DEPTH.with(|d| d.set(d.get() - 1));
+        let after = counters.snapshot();
+        let halo_after = counters.halo_snapshot();
+        obs::event(
+            obs::kind::NET_EXEC,
+            &[
+                ("pass", js(plan.pass.name())),
+                ("stages", ju(plan.stages.len() as u64)),
+                ("groups", ju(plan.groups.len() as u64)),
+                ("fused_boundaries", ju(plan.fused_boundaries() as u64)),
+                ("secs", jf(t0.elapsed().as_secs_f64())),
+            ],
+        );
+        for k in 0..plan.stages.len() {
+            let m = traffic_delta(&after[k], &before[k]);
+            let e = expected[k];
+            obs::event(
+                obs::kind::STAGE_TRAFFIC,
+                &[
+                    ("pass", js(plan.pass.name())),
+                    ("stage", ju(k as u64)),
+                    ("measured_input", ju(m.input_words)),
+                    ("measured_filter", ju(m.filter_words)),
+                    ("measured_output", ju(m.output_words)),
+                    ("expected_input", ju(e.input_words)),
+                    ("expected_filter", ju(e.filter_words)),
+                    ("expected_output", ju(e.output_words)),
+                    ("halo_words", ju(halo_after[k] - halo_before[k])),
+                    ("expected_halo_words", ju(expected_halo[k])),
+                ],
+            );
+        }
+    }
+}
+
 /// Execute every reduction tile against one resident output tile; returns
 /// the accumulated `[bn][bwo][bho][bco]` buffer.
 fn run_out_tile(
@@ -225,6 +356,7 @@ pub fn conv_tiled_counted(
         // the tile grid must not fabricate a tile over an empty dim
         return Tensor4::zeros(out_dims(s));
     }
+    let tg = PassTraceGuard::start(counters);
     let outs = tiles::output_tiles(plan);
     let red = tiles::reduction_tiles(plan);
     let mut out = Tensor4::zeros(out_dims(s));
@@ -232,6 +364,7 @@ pub fn conv_tiled_counted(
         let buf = run_out_tile(x, w, plan, *ot, &red, counters);
         scatter(&mut out, ot, &buf);
     }
+    tg.finish(plan, counters);
     out
 }
 
@@ -260,6 +393,7 @@ pub fn conv_tiled_parallel(
     if s.updates() == 0 {
         return Tensor4::zeros(out_dims(&s));
     }
+    let tg = PassTraceGuard::start(counters);
     let outs = tiles::output_tiles(plan);
     let red = Arc::new(tiles::reduction_tiles(plan));
     let (x2, w2, p2) = (Arc::clone(x), Arc::clone(w), Arc::clone(plan));
@@ -271,6 +405,7 @@ pub fn conv_tiled_parallel(
     for (ot, buf) in outs.iter().zip(&bufs) {
         scatter(&mut out, ot, buf);
     }
+    tg.finish(plan, counters);
     out
 }
 
@@ -537,6 +672,7 @@ pub fn conv_pass_tiled_counted(
     if s.updates() == 0 {
         return Tensor4::zeros(pass.out_dims(s));
     }
+    let tg = PassTraceGuard::start(counters);
     let outs = tiles::output_tiles(plan);
     let red = tiles::reduction_tiles(plan);
     let mut out = Tensor4::zeros(pass.out_dims(s));
@@ -544,6 +680,7 @@ pub fn conv_pass_tiled_counted(
         let buf = run_pass_out_tile(pass, a, b, plan, ot, &red, counters);
         scatter_pass(&mut out, ot, &buf);
     }
+    tg.finish(plan, counters);
     out
 }
 
@@ -573,6 +710,7 @@ pub fn conv_pass_tiled_parallel(
     if s.updates() == 0 {
         return Tensor4::zeros(pass.out_dims(&s));
     }
+    let tg = PassTraceGuard::start(counters);
     let outs = tiles::output_tiles(plan);
     let red = Arc::new(tiles::reduction_tiles(plan));
     let (a2, b2, p2) = (Arc::clone(a), Arc::clone(b), Arc::clone(plan));
@@ -584,6 +722,7 @@ pub fn conv_pass_tiled_parallel(
     for (ot, buf) in outs.iter().zip(&bufs) {
         scatter_pass(&mut out, ot, buf);
     }
+    tg.finish(plan, counters);
     out
 }
 
@@ -1087,6 +1226,7 @@ pub fn conv_network_fused_counted(
 ) -> Tensor4 {
     assert_network_operands(image, filters, &plan.stages);
     assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let tg = NetTraceGuard::start(counters);
     let mut act: Option<Tensor4> = None;
     for g in &plan.groups {
         let input: &Tensor4 = act.as_ref().unwrap_or(image);
@@ -1125,7 +1265,14 @@ pub fn conv_network_fused_counted(
         };
         act = Some(next);
     }
-    act.expect("network has at least one stage")
+    let out = act.expect("network has at least one stage");
+    tg.finish(
+        plan,
+        &plan.expected_network_traffic(),
+        &plan.expected_halo_words(),
+        counters,
+    );
+    out
 }
 
 /// Fused network execution fanned out over a [`ThreadPool`]. The unit of
@@ -1146,6 +1293,7 @@ pub fn conv_network_fused(
         assert_network_operands(image, &frefs, &plan.stages);
     }
     assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let tg = NetTraceGuard::start(counters);
     let mut act: Arc<Tensor4> = Arc::clone(image);
     for (gi, g) in plan.groups.iter().enumerate() {
         let next = if g.is_fused() {
@@ -1197,7 +1345,14 @@ pub fn conv_network_fused(
         };
         act = Arc::new(next);
     }
-    Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
+    let out = Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone());
+    tg.finish(
+        plan,
+        &plan.expected_network_traffic(),
+        &plan.expected_halo_words(),
+        counters,
+    );
+    out
 }
 
 /// Layer-by-layer baseline: every stage runs the LP-tiled engine and every
@@ -1215,6 +1370,7 @@ pub fn conv_network_staged(
         assert_network_operands(image, &frefs, &plan.stages);
     }
     assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let tg = NetTraceGuard::start(counters);
     let mut act: Arc<Tensor4> = Arc::clone(image);
     for k in 0..plan.stages.len() {
         act = Arc::new(conv_tiled_parallel(
@@ -1225,7 +1381,13 @@ pub fn conv_network_staged(
             counters.stage(k),
         ));
     }
-    Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
+    let out = Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone());
+    // the staged baseline ignores the plan's grouping: each stage charges
+    // its own LP plan's analytic traffic, with no halo cache anywhere
+    let expected: Vec<Traffic> =
+        plan.stage_plans.iter().map(|p| expected_traffic(p)).collect();
+    tg.finish(plan, &expected, &vec![0; plan.stages.len()], counters);
+    out
 }
 
 // ---------------- fused training sweeps (NetPass::Backward / Step) ----------------
@@ -1463,6 +1625,7 @@ pub fn conv_network_bwd_counted(
     assert_eq!(plan.pass, NetPass::Backward, "plan solved for a different pass");
     assert_bwd_network_operands(gout, filters, &plan.stages);
     assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let tg = NetTraceGuard::start(counters);
     let mut grad: Option<Tensor4> = None;
     for g in plan.groups.iter().rev() {
         let gin: &Tensor4 = grad.as_ref().unwrap_or(gout);
@@ -1506,7 +1669,14 @@ pub fn conv_network_bwd_counted(
         };
         grad = Some(next);
     }
-    grad.expect("network has at least one stage")
+    let out = grad.expect("network has at least one stage");
+    tg.finish(
+        plan,
+        &plan.expected_network_traffic(),
+        &plan.expected_halo_words(),
+        counters,
+    );
+    out
 }
 
 /// Fused backward execution fanned out over a [`ThreadPool`]. As in the
@@ -1528,6 +1698,7 @@ pub fn conv_network_bwd(
         assert_bwd_network_operands(gout, &frefs, &plan.stages);
     }
     assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let tg = NetTraceGuard::start(counters);
     let mut grad: Arc<Tensor4> = Arc::clone(gout);
     for gi in (0..plan.groups.len()).rev() {
         let g = &plan.groups[gi];
@@ -1585,7 +1756,14 @@ pub fn conv_network_bwd(
         };
         grad = Arc::new(next);
     }
-    Arc::try_unwrap(grad).unwrap_or_else(|a| (*a).clone())
+    let out = Arc::try_unwrap(grad).unwrap_or_else(|a| (*a).clone());
+    tg.finish(
+        plan,
+        &plan.expected_network_traffic(),
+        &plan.expected_halo_words(),
+        counters,
+    );
+    out
 }
 
 /// Extract batch rows `tn` of `t` as an owned tensor (the batch axis is
@@ -1671,6 +1849,7 @@ pub fn conv_network_step_counted(
         assert_eq!(gout.dims, out_dims(tail), "loss gradient shape mismatch");
     }
     assert_eq!(counters.len(), plan.stages.len(), "counter arity");
+    let tg = NetTraceGuard::start(counters);
     let groups = &plan.groups;
     let last = groups.len() - 1;
 
@@ -1795,6 +1974,12 @@ pub fn conv_network_step_counted(
             );
         }
     }
+    tg.finish(
+        plan,
+        &plan.expected_network_traffic(),
+        &plan.expected_halo_words(),
+        counters,
+    );
     (dfilters, grad)
 }
 

@@ -56,12 +56,15 @@
 //!   the *full* ascending `(wO, hO)` sweep), so [`fit_step_group_tile`]
 //!   shrinks the batch block only.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::conv::{
     conv7nl_naive, dfilter_naive, dinput_naive, ConvPass, ConvShape,
     NetworkStage, Tensor4,
 };
+use crate::obs::{self, jf, js, ju};
+use crate::util::json::Json;
 
 use super::exec::{expected_pass_traffic, expected_traffic, Traffic};
 use super::pack::dinput_span;
@@ -291,7 +294,7 @@ impl FusePlan {
             }
         }
         groups.push(cur);
-        FusePlan {
+        let plan = FusePlan {
             pass,
             stages: stages.to_vec(),
             mem_words,
@@ -301,7 +304,9 @@ impl FusePlan {
             groups,
             exec,
             halo_cache,
-        }
+        };
+        plan.trace_plan();
+        plan
     }
 
     /// A plan with every boundary materialized: each stage is a singleton
@@ -335,7 +340,7 @@ impl FusePlan {
                 FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
             })
             .collect();
-        FusePlan {
+        let plan = FusePlan {
             pass,
             stages: stages.to_vec(),
             mem_words,
@@ -345,7 +350,45 @@ impl FusePlan {
             groups,
             exec: FusedExec::Packed,
             halo_cache: false,
+        };
+        plan.trace_plan();
+        plan
+    }
+
+    /// Emit a `fuse_plan` trace event recording every fuse-vs-materialize
+    /// decision this plan encodes (one entry per group, with the sweep's
+    /// tile blocks). One branch when tracing is off.
+    fn trace_plan(&self) {
+        if !obs::enabled() {
+            return;
         }
+        let groups = Json::Arr(
+            self.groups
+                .iter()
+                .map(|g| {
+                    let mut o = BTreeMap::new();
+                    o.insert("start".into(), ju(g.start as u64));
+                    o.insert("end".into(), ju(g.end as u64));
+                    o.insert("fused".into(), Json::Bool(g.is_fused()));
+                    o.insert("b_n".into(), ju(g.b_n));
+                    o.insert("b_wo".into(), ju(g.b_wo));
+                    o.insert("b_ho".into(), ju(g.b_ho));
+                    Json::Obj(o)
+                })
+                .collect(),
+        );
+        obs::event(
+            obs::kind::FUSE_PLAN,
+            &[
+                ("pass", js(self.pass.name())),
+                ("stages", ju(self.stages.len() as u64)),
+                ("mem_words", jf(self.mem_words)),
+                ("exec", js(self.exec.name())),
+                ("halo_cache", Json::Bool(self.halo_cache)),
+                ("fused_boundaries", ju(self.fused_boundaries() as u64)),
+                ("groups", groups),
+            ],
+        );
     }
 
     /// Number of fused boundaries (adjacent stage pairs whose activation

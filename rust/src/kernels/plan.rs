@@ -18,8 +18,10 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::conv::{ConvPass, ConvShape, Precision};
+use crate::obs::{self, jf, js, ju};
 use crate::tiling::{sequential_blocking, SeqBlocking};
 use crate::util::ceil_div;
+use crate::util::json::Json;
 
 /// Default fast-memory budget for tile planning: 64 Ki words = 256 KiB of
 /// f32 — a typical per-core L2 slice.
@@ -95,7 +97,7 @@ impl TilePlan {
             blocking.b_wf_r,
             blocking.b_hf_r,
         ];
-        TilePlan {
+        let plan = TilePlan {
             pass: ConvPass::Forward,
             shape: *shape,
             precision: p,
@@ -103,7 +105,9 @@ impl TilePlan {
             blocking,
             ranges,
             blocks: balanced_blocks(&ranges, &raw),
-        }
+        };
+        plan.trace_plan();
+        plan
     }
 
     /// Solve the pass's permuted §3.2 LP and derive the pass's loop
@@ -177,7 +181,7 @@ impl TilePlan {
             ),
             ConvPass::Forward => unreachable!("handled above"),
         };
-        TilePlan {
+        let plan = TilePlan {
             pass,
             shape: *shape,
             precision: p,
@@ -185,7 +189,33 @@ impl TilePlan {
             blocking,
             ranges,
             blocks: balanced_blocks(&ranges, &raw),
+        };
+        plan.trace_plan();
+        plan
+    }
+
+    /// Emit a `tile_plan` trace event carrying the LP-derived loop bounds
+    /// (nine ranges + balanced blocks) and tile counts. One branch when
+    /// tracing is off.
+    fn trace_plan(&self) {
+        if !obs::enabled() {
+            return;
         }
+        let dims = |v: &[u64; 9]| {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        };
+        obs::event(
+            obs::kind::TILE_PLAN,
+            &[
+                ("pass", js(self.pass.name())),
+                ("shape", js(&self.shape.to_string())),
+                ("mem_words", jf(self.mem_words)),
+                ("ranges", dims(&self.ranges)),
+                ("blocks", dims(&self.blocks)),
+                ("output_tiles", ju(self.output_tiles())),
+                ("reduction_tiles", ju(self.reduction_tiles())),
+            ],
+        );
     }
 
     /// Tiles along each of the nine dims.

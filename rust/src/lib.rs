@@ -39,6 +39,10 @@
 //!   batched network execution across a thread pool.
 //! * [`conv`] — problem shapes, the ResNet-50 / AlexNet layer catalogs and a
 //!   native naive convolution used to validate the runtime end to end.
+//! * [`obs`] — the observability layer: a process-wide JSONL trace sink
+//!   (every traffic event carries its analytic expectation next to the
+//!   measured words) plus offline replay (`convbound trace
+//!   check|summarize`), switchable via `--trace`/`CONVBOUND_TRACE`.
 //! * [`util`], [`testkit`], [`bench`] — in-tree substrates (errors, JSON,
 //!   CLI, RNG, thread pool, stats; property testing; timing harness) for
 //!   the fully offline build environment.
@@ -52,6 +56,7 @@ pub mod gemmini;
 pub mod hbl;
 pub mod kernels;
 pub mod lp;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod testkit;

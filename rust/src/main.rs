@@ -34,7 +34,18 @@
 //!                                           backend; PJRT with artifacts;
 //!                                           network keys serve the fused
 //!                                           pipeline)
+//! convbound trace   check     t.jsonl       validate a JSONL trace (parse,
+//!                                           span balance, required kinds)
+//! convbound trace   summarize t.jsonl       latency percentiles, batch
+//!                                           histogram, per-stage traffic
+//!                                           totals and measured-vs-expected
+//!                                           mismatches, from the log alone
 //! ```
+//!
+//! Every subcommand accepts `--trace <path>` (or the `CONVBOUND_TRACE`
+//! env var) to stream structured JSONL events — request/batch/dispatch
+//! spans, plan decisions, per-stage measured-vs-analytic traffic,
+//! autotuner probes — to a file while it runs; see DESIGN.md §10.
 //!
 //! Bad arguments (unknown layers, malformed numbers) exit with a one-line
 //! error, not a panic backtrace: every subcommand returns
@@ -60,6 +71,7 @@ use convbound::kernels::{
     FusePlan, FusedExec, KernelKind, NetPass, NetTrafficCounters,
     TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
 };
+use convbound::obs;
 use convbound::report::{
     self, default_mem_sweep, default_proc_sweep, fig2_series, fig3_series,
     fig4_rows, fig4_table, ratio_table, Table,
@@ -340,11 +352,19 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
             if let Some(path) = args.opt("tune-cache") {
                 let loaded = tuner.warm_start(path)?;
                 if loaded > 0 {
-                    println!("warm-started {loaded} tuned choice(s) from {path}");
+                    obs::log(
+                        obs::Level::Debug,
+                        &format!(
+                            "warm-started {loaded} tuned choice(s) from {path}"
+                        ),
+                    );
                 }
             }
             let kind = tuner.select_network_pass(pass, name, &net.stages);
-            println!("autotuner picked '{}'", kind.name());
+            obs::log(
+                obs::Level::Info,
+                &format!("autotuner picked '{}'", kind.name()),
+            );
             // the requested halo flag reaches the *planner*, so fusion
             // decisions are made under the model this run executes
             let p = tuner.network_pass_plan(pass, &net.stages, kind, halo);
@@ -594,7 +614,10 @@ fn cmd_exec_pass(args: &Args, pass: ConvPass) -> Result<()> {
     if let Some(path) = args.opt("tune-cache") {
         let loaded = tuner.warm_start(path)?;
         if loaded > 0 {
-            println!("warm-started {loaded} tuned choice(s) from {path}");
+            obs::log(
+                obs::Level::Debug,
+                &format!("warm-started {loaded} tuned choice(s) from {path}"),
+            );
         }
     }
     let (a, b) = pass_operands(pass, &shape, 1);
@@ -602,7 +625,10 @@ fn cmd_exec_pass(args: &Args, pass: ConvPass) -> Result<()> {
     let kind = match args.opt_str("kernel", "tiled") {
         "auto" => {
             let k = tuner.select_pass(pass, &shape);
-            println!("autotuner picked '{}'", k.name());
+            obs::log(
+                obs::Level::Info,
+                &format!("autotuner picked '{}'", k.name()),
+            );
             k
         }
         other => match KernelKind::parse(other) {
@@ -734,7 +760,10 @@ fn cmd_exec(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("tune-cache") {
         let loaded = tuner.warm_start(path)?;
         if loaded > 0 {
-            println!("warm-started {loaded} kernel choice(s) from {path}");
+            obs::log(
+                obs::Level::Debug,
+                &format!("warm-started {loaded} kernel choice(s) from {path}"),
+            );
         }
     }
 
@@ -743,7 +772,10 @@ fn cmd_exec(args: &Args) -> Result<()> {
     let kind = match kernel_arg {
         "auto" => {
             let k = tuner.select(&shape);
-            println!("autotuner picked '{}'", k.name());
+            obs::log(
+                obs::Level::Info,
+                &format!("autotuner picked '{}'", k.name()),
+            );
             k
         }
         other => KernelKind::parse(other).ok_or_else(|| {
@@ -863,6 +895,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "batches {} (batch size {}), padded slots {}, exec time {:.3}s",
         stats.batches, spec.inputs[0][0], stats.padded_slots, stats.total_exec_secs
     );
+    println!(
+        "latency p50 {:.2} / p95 {:.2} / p99 {:.2} ms, peak queue depth {}",
+        stats.latency_p50_ms,
+        stats.latency_p95_ms,
+        stats.latency_p99_ms,
+        stats.peak_queue_depth
+    );
+    Ok(())
+}
+
+/// Offline trace replay: `convbound trace check|summarize <file.jsonl>`.
+/// `check` validates structure (every line parses, timestamps are
+/// monotone, spans balance) and `summarize` reconstructs the run's
+/// metrics — latency percentiles, batch histogram, per-stage traffic
+/// totals, measured-vs-expected mismatches — from the log alone.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let usage = "usage: convbound trace <check|summarize> <trace.jsonl>";
+    let mode = args
+        .positional
+        .first()
+        .ok_or_else(|| err!("{usage}"))?
+        .as_str();
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| err!("{usage}"))?
+        .as_str();
+    match mode {
+        "check" => {
+            let report = obs::replay::check_file(path)?;
+            println!("{}", report.render());
+        }
+        "summarize" => {
+            let summary = obs::replay::summarize_file(path)?;
+            print!("{}", summary.render());
+        }
+        other => {
+            return Err(err!("unknown trace mode '{other}' (check|summarize)"))
+        }
+    }
     Ok(())
 }
 
@@ -910,6 +982,47 @@ mod tests {
     }
 
     #[test]
+    fn trace_rejects_missing_or_unknown_modes() {
+        let e = cmd_trace(&parse("trace")).unwrap_err().to_string();
+        assert!(e.contains("usage"), "{e}");
+        let e = cmd_trace(&parse("trace summarize")).unwrap_err().to_string();
+        assert!(e.contains("usage"), "{e}");
+        let e = cmd_trace(&parse("trace frobnicate x.jsonl"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("frobnicate"), "{e}");
+        assert!(e.contains("check|summarize"), "{e}");
+    }
+
+    #[test]
+    fn trace_check_and_summarize_roundtrip_a_real_log() {
+        use convbound::obs::{self, js, ju};
+        let path = std::env::temp_dir().join("convbound_cli_trace_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let sink = obs::TraceSink::to_file(&path).unwrap();
+        obs::install(&sink).unwrap();
+        obs::event(
+            obs::kind::TRAFFIC,
+            &[
+                ("pass", js("fwd")),
+                ("measured_input", ju(10)),
+                ("measured_filter", ju(4)),
+                ("measured_output", ju(6)),
+                ("expected_input", ju(10)),
+                ("expected_filter", ju(4)),
+                ("expected_output", ju(6)),
+            ],
+        );
+        obs::uninstall();
+        assert!(cmd_trace(&parse(&format!("trace check {path}"))).is_ok());
+        assert!(cmd_trace(&parse(&format!("trace summarize {path}"))).is_ok());
+        let s = obs::replay::summarize_file(&path).unwrap();
+        assert_eq!(s.measured_words, 20);
+        assert_eq!(s.mismatches, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn exec_rejects_unknown_pass_for_layers() {
         let a = parse("exec --pass sideways");
         let e = cmd_exec(&a).unwrap_err().to_string();
@@ -920,6 +1033,18 @@ mod tests {
 
 fn main() {
     let args = Args::from_env();
+    // --trace wins over the CONVBOUND_TRACE env var; init_from_env also
+    // picks up CONVBOUND_VERBOSE either way
+    obs::init_from_env();
+    if let Some(path) = args.opt("trace") {
+        if let Err(e) = obs::install_file(path) {
+            eprintln!("error: --trace {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+    if args.flag("verbose") {
+        obs::set_verbosity(obs::Level::Debug as u8);
+    }
     let result = match args.subcommand.as_deref() {
         Some("hbl-table") => cmd_hbl_table(),
         Some("hlo-stats") => cmd_hlo_stats(&args),
@@ -930,11 +1055,12 @@ fn main() {
         Some("plan") => cmd_plan(&args),
         Some("exec") => cmd_exec(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'\n");
             }
-            eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|exec|serve> [options]");
+            eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|exec|serve|trace> [options]");
             eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
             eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
             eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check --tune-cache <path>");
@@ -943,9 +1069,15 @@ fn main() {
             eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off");
             eprintln!("        --pass fwd|bwd|step (with --network: fused backward / training-step sweeps)");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
+            eprintln!("  trace: check|summarize <trace.jsonl> (replay a structured log offline)");
+            eprintln!("  any:  --trace <path> (JSONL event log; CONVBOUND_TRACE env works too)");
+            eprintln!("        --verbose (debug-level diagnostics on stderr; CONVBOUND_VERBOSE=2)");
             std::process::exit(2);
         }
     };
+    // close the span-free tail of the log deterministically: flush and
+    // drop the sink before the process exits (nothing is written after)
+    obs::uninstall();
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);

@@ -1,0 +1,29 @@
+//! Observability: structured JSONL tracing for the whole stack.
+//!
+//! The paper's reproduction *measures* everything — exact per-pass
+//! traffic, halo words, autotuner prune counts — and this module is how
+//! those measurements leave the process: a thread-safe event sink
+//! ([`TraceSink`]) that writes one JSON object per line, every traffic
+//! event carrying the *analytic* expectation next to the *measured*
+//! value so the trace itself is a correctness gate, and a replay half
+//! ([`replay`]) that validates and summarizes a log offline
+//! (`convbound trace check|summarize`).
+//!
+//! The sink is off by default and the disabled fast path is one atomic
+//! load ([`enabled`]), so instrumented hot paths pay one branch. Enable
+//! it with `--trace <path>` on `serve`/`exec` or the `CONVBOUND_TRACE`
+//! env var. The event schema (kinds, fields, span nesting) is documented
+//! in DESIGN.md §10.
+
+pub mod replay;
+pub mod sink;
+
+pub use replay::{
+    check_file, check_text, summarize_file, summarize_text, CheckReport,
+    TraceSummary,
+};
+pub use sink::{
+    enabled, event, flush, init_from_env, install, install_file, jb, jf, js,
+    ju, kind, log, scope, set_verbosity, uninstall, verbosity, Level,
+    ScopeGuard, SpanId, TraceSink, TRACE_VERSION,
+};

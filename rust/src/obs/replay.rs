@@ -1,0 +1,462 @@
+//! Offline replay of a trace log: `trace check` validates
+//! well-formedness (every line parses, required fields present, span
+//! begin/end balance, timestamps monotone, the header is present), and
+//! `trace summarize` reconstructs what the run did — per-request latency
+//! percentiles, batch-size histogram, per-stage traffic totals — from
+//! the log alone, flagging every traffic event whose measured words
+//! differ from the analytic expectation embedded next to them.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::err;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+use super::sink::kind;
+
+/// What `trace check` found in a well-formed log.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// Total events (lines).
+    pub events: u64,
+    /// Balanced span pairs (one `B` + one `E`).
+    pub spans: u64,
+    /// Events per kind.
+    pub kinds: BTreeMap<String, u64>,
+}
+
+impl CheckReport {
+    pub fn render(&self) -> String {
+        let kinds: Vec<String> = self
+            .kinds
+            .iter()
+            .map(|(k, n)| format!("{k}:{n}"))
+            .collect();
+        format!(
+            "trace OK: {} events, {} spans balanced\nkinds: {}",
+            self.events,
+            self.spans,
+            kinds.join(" ")
+        )
+    }
+}
+
+/// Validate one log. Errors name the first offending line.
+pub fn check_text(text: &str) -> Result<CheckReport> {
+    let mut open: BTreeMap<u64, String> = BTreeMap::new();
+    let mut known: BTreeSet<u64> = BTreeSet::new();
+    let mut report = CheckReport::default();
+    let mut prev_ts = f64::NEG_INFINITY;
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        let v: Json =
+            Json::parse(line).with_context(|| format!("trace line {n}"))?;
+        if v.as_obj().is_none() {
+            return Err(err!("trace line {n}: not a JSON object"));
+        }
+        let ts = v
+            .get("ts_us")
+            .as_f64()
+            .ok_or_else(|| err!("trace line {n}: missing ts_us"))?;
+        if ts < prev_ts {
+            return Err(err!("trace line {n}: timestamp regressed"));
+        }
+        prev_ts = ts;
+        v.get("tid")
+            .as_f64()
+            .ok_or_else(|| err!("trace line {n}: missing tid"))?;
+        let k = v
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| err!("trace line {n}: missing kind"))?
+            .to_string();
+        let ph = v
+            .get("ph")
+            .as_str()
+            .ok_or_else(|| err!("trace line {n}: missing ph"))?;
+        if n == 1 && k != kind::TRACE {
+            return Err(err!(
+                "trace line 1: log must start with the '{}' header",
+                kind::TRACE
+            ));
+        }
+        match ph {
+            "I" => {}
+            "B" => {
+                let span = v.get("span").as_u64_strict().ok_or_else(|| {
+                    err!("trace line {n}: 'B' event without a span id")
+                })?;
+                if span == 0 || !known.insert(span) {
+                    return Err(err!("trace line {n}: span {span} reused"));
+                }
+                if let Some(p) = v.get("parent").as_u64() {
+                    if !known.contains(&p) {
+                        return Err(err!(
+                            "trace line {n}: parent span {p} never opened"
+                        ));
+                    }
+                }
+                open.insert(span, k.clone());
+            }
+            "E" => {
+                let span = v.get("span").as_u64_strict().ok_or_else(|| {
+                    err!("trace line {n}: 'E' event without a span id")
+                })?;
+                match open.remove(&span) {
+                    Some(bk) if bk == k => report.spans += 1,
+                    Some(bk) => {
+                        return Err(err!(
+                            "trace line {n}: span {span} opened as '{bk}' but closed as '{k}'"
+                        ))
+                    }
+                    None => {
+                        return Err(err!(
+                            "trace line {n}: 'E' for span {span} that is not open"
+                        ))
+                    }
+                }
+            }
+            other => return Err(err!("trace line {n}: bad ph '{other}'")),
+        }
+        *report.kinds.entry(k).or_insert(0) += 1;
+        report.events += 1;
+    }
+    if report.events == 0 {
+        return Err(err!("empty trace"));
+    }
+    if let Some((span, k)) = open.iter().next() {
+        return Err(err!(
+            "{} span(s) never closed (first: '{k}' span {span})",
+            open.len()
+        ));
+    }
+    Ok(report)
+}
+
+/// Validate the log at `path`.
+pub fn check_file(path: &str) -> Result<CheckReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    check_text(&text)
+}
+
+/// Everything `trace summarize` reconstructs from a log.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    pub events: u64,
+    /// Completed requests (`request` `E` events without `dropped:true`).
+    pub requests: u64,
+    /// Requests accepted but never executed (`request` `E` events
+    /// carrying `dropped:true`).
+    pub dropped_requests: u64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    /// Batch size → number of batches dispatched at that size.
+    pub batch_hist: BTreeMap<u64, u64>,
+    pub linger_flushes: u64,
+    /// Max queue depth observed at any enqueue.
+    pub peak_queue_depth: u64,
+    /// Sum of per-batch executor seconds.
+    pub total_exec_secs: f64,
+    pub artifact_loads: u64,
+    pub tile_plans: u64,
+    pub fuse_plans: u64,
+    pub autotune_probes: u64,
+    pub autotune_pruned: u64,
+    /// Traffic events seen (`traffic` + `stage_traffic`).
+    pub traffic_events: u64,
+    pub measured_words: u64,
+    pub expected_words: u64,
+    pub halo_words: u64,
+    pub expected_halo_words: u64,
+    /// Traffic events where any measured component ≠ its analytic
+    /// expectation — the number the CI gate greps for zero of.
+    pub mismatches: u64,
+    /// Per `pass/stage` totals: (measured words, expected words).
+    pub stage_words: BTreeMap<String, (u64, u64)>,
+    pub logs: u64,
+}
+
+fn words(v: &Json, prefix: &str) -> (u64, u64, u64) {
+    (
+        v.get(&format!("{prefix}_input")).as_u64().unwrap_or(0),
+        v.get(&format!("{prefix}_filter")).as_u64().unwrap_or(0),
+        v.get(&format!("{prefix}_output")).as_u64().unwrap_or(0),
+    )
+}
+
+/// Reconstruct a run summary from one log. Every line must parse; span
+/// balance is `check`'s business, not this one's.
+pub fn summarize_text(text: &str) -> Result<TraceSummary> {
+    let mut s = TraceSummary::default();
+    let mut latencies: Vec<f64> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let v: Json = Json::parse(line)
+            .with_context(|| format!("trace line {}", i + 1))?;
+        s.events += 1;
+        let k = v.get("kind").as_str().unwrap_or("");
+        let ph = v.get("ph").as_str().unwrap_or("I");
+        match (k, ph) {
+            (kind::REQUEST, "B") => {
+                let d = v.get("queue_depth").as_u64().unwrap_or(0);
+                s.peak_queue_depth = s.peak_queue_depth.max(d);
+            }
+            (kind::REQUEST, "E") => {
+                if v.get("dropped") == &Json::Bool(true) {
+                    s.dropped_requests += 1;
+                } else {
+                    s.requests += 1;
+                    if let Some(l) = v.get("latency_secs").as_f64() {
+                        latencies.push(l);
+                    }
+                }
+            }
+            (kind::BATCH, "B") => {
+                s.batches += 1;
+                s.padded_slots += v.get("padded").as_u64().unwrap_or(0);
+                let size = v.get("size").as_u64().unwrap_or(0);
+                *s.batch_hist.entry(size).or_insert(0) += 1;
+                if v.get("linger_flush") == &Json::Bool(true) {
+                    s.linger_flushes += 1;
+                }
+            }
+            (kind::BATCH, "E") => {
+                s.total_exec_secs += v.get("exec_secs").as_f64().unwrap_or(0.0);
+            }
+            (kind::ARTIFACT_LOAD, _) => s.artifact_loads += 1,
+            (kind::TILE_PLAN, _) => s.tile_plans += 1,
+            (kind::FUSE_PLAN, _) => s.fuse_plans += 1,
+            (kind::AUTOTUNE_PROBE, _) => {
+                s.autotune_probes += 1;
+                if v.get("pruned") == &Json::Bool(true) {
+                    s.autotune_pruned += 1;
+                }
+            }
+            (kind::LOG, _) => s.logs += 1,
+            (kind::TRAFFIC, _) | (kind::STAGE_TRAFFIC, _) => {
+                s.traffic_events += 1;
+                let (mi, mf, mo) = words(&v, "measured");
+                let (ei, ef, eo) = words(&v, "expected");
+                let halo = v.get("halo_words").as_u64().unwrap_or(0);
+                let ehalo =
+                    v.get("expected_halo_words").as_u64().unwrap_or(0);
+                s.measured_words += mi + mf + mo;
+                s.expected_words += ei + ef + eo;
+                s.halo_words += halo;
+                s.expected_halo_words += ehalo;
+                if (mi, mf, mo) != (ei, ef, eo) || halo != ehalo {
+                    s.mismatches += 1;
+                }
+                let pass = v.get("pass").as_str().unwrap_or("?");
+                let label = match v.get("stage").as_u64() {
+                    Some(st) => format!("{pass}/stage{st}"),
+                    None => format!("{pass}/layer"),
+                };
+                let e = s.stage_words.entry(label).or_insert((0, 0));
+                e.0 += mi + mf + mo;
+                e.1 += ei + ef + eo;
+            }
+            _ => {}
+        }
+    }
+    if s.events == 0 {
+        return Err(err!("empty trace"));
+    }
+    latencies.sort_by(f64::total_cmp);
+    if !latencies.is_empty() {
+        s.latency_p50_ms = percentile(&latencies, 0.50) * 1e3;
+        s.latency_p95_ms = percentile(&latencies, 0.95) * 1e3;
+        s.latency_p99_ms = percentile(&latencies, 0.99) * 1e3;
+    }
+    Ok(s)
+}
+
+/// Summarize the log at `path`.
+pub fn summarize_file(path: &str) -> Result<TraceSummary> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    summarize_text(&text)
+}
+
+impl TraceSummary {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut push = |line: String| {
+            out.push_str(&line);
+            out.push('\n');
+        };
+        push(format!("events: {}", self.events));
+        push(format!("requests: {}", self.requests));
+        if self.dropped_requests > 0 {
+            push(format!("dropped_requests: {}", self.dropped_requests));
+        }
+        if self.requests > 0 {
+            push(format!(
+                "latency_ms: p50={:.3} p95={:.3} p99={:.3}",
+                self.latency_p50_ms, self.latency_p95_ms, self.latency_p99_ms
+            ));
+            push(format!("peak_queue_depth: {}", self.peak_queue_depth));
+        }
+        if self.batches > 0 {
+            let hist: Vec<String> = self
+                .batch_hist
+                .iter()
+                .map(|(size, n)| format!("{n}x{size}"))
+                .collect();
+            push(format!(
+                "batches: {} (sizes {}), padded_slots: {}, linger_flushes: {}",
+                self.batches,
+                hist.join(" "),
+                self.padded_slots,
+                self.linger_flushes
+            ));
+            push(format!("exec_secs: {}", self.total_exec_secs));
+        }
+        push(format!(
+            "plans: {} tile, {} fuse; artifact_loads: {}; autotune_probes: {} ({} LP-pruned); log_lines: {}",
+            self.tile_plans,
+            self.fuse_plans,
+            self.artifact_loads,
+            self.autotune_probes,
+            self.autotune_pruned,
+            self.logs
+        ));
+        push(format!(
+            "traffic_events: {} (measured {} words, expected {} words; halo {} vs {})",
+            self.traffic_events,
+            self.measured_words,
+            self.expected_words,
+            self.halo_words,
+            self.expected_halo_words
+        ));
+        for (label, (m, e)) in &self.stage_words {
+            push(format!("  {label}: measured={m} expected={e}"));
+        }
+        push(format!(
+            "measured-vs-expected mismatches: {}",
+            self.mismatches
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(s: &str) -> String {
+        // tests write fields; the scaffold adds the required envelope
+        format!("{s}\n")
+    }
+
+    fn hdr() -> String {
+        line(r#"{"kind":"trace","ph":"I","tid":0,"ts_us":0,"version":1}"#)
+    }
+
+    #[test]
+    fn check_accepts_balanced_nested_log() {
+        let log = hdr()
+            + &line(r#"{"kind":"batch","ph":"B","span":1,"tid":1,"ts_us":5,"size":4,"padded":2}"#)
+            + &line(r#"{"kind":"dispatch","ph":"B","span":2,"parent":1,"tid":1,"ts_us":6}"#)
+            + &line(r#"{"kind":"log","ph":"I","tid":1,"ts_us":7,"msg":"x"}"#)
+            + &line(r#"{"kind":"dispatch","ph":"E","span":2,"tid":1,"ts_us":9}"#)
+            + &line(r#"{"kind":"batch","ph":"E","span":1,"tid":1,"ts_us":9,"exec_secs":0.5}"#);
+        let r = check_text(&log).unwrap();
+        assert_eq!(r.events, 6);
+        assert_eq!(r.spans, 2);
+        assert_eq!(r.kinds["batch"], 2);
+        assert!(r.render().contains("trace OK"));
+    }
+
+    #[test]
+    fn check_rejects_malformed_logs() {
+        // garbage line
+        let garbage = hdr() + "not json\n";
+        assert!(check_text(&garbage).unwrap_err().to_string().contains("line 2"));
+        // missing header
+        let no_hdr =
+            line(r#"{"kind":"log","ph":"I","tid":0,"ts_us":0}"#);
+        assert!(check_text(&no_hdr)
+            .unwrap_err()
+            .to_string()
+            .contains("header"));
+        // unclosed span
+        let unclosed = hdr()
+            + &line(r#"{"kind":"batch","ph":"B","span":1,"tid":0,"ts_us":1}"#);
+        assert!(check_text(&unclosed)
+            .unwrap_err()
+            .to_string()
+            .contains("never closed"));
+        // E without B
+        let stray = hdr()
+            + &line(r#"{"kind":"batch","ph":"E","span":9,"tid":0,"ts_us":1}"#);
+        assert!(check_text(&stray)
+            .unwrap_err()
+            .to_string()
+            .contains("not open"));
+        // close under a different kind
+        let crossed = hdr()
+            + &line(r#"{"kind":"batch","ph":"B","span":1,"tid":0,"ts_us":1}"#)
+            + &line(r#"{"kind":"dispatch","ph":"E","span":1,"tid":0,"ts_us":2}"#);
+        assert!(check_text(&crossed)
+            .unwrap_err()
+            .to_string()
+            .contains("closed as"));
+        // timestamp regression
+        let regress = hdr()
+            + &line(r#"{"kind":"log","ph":"I","tid":0,"ts_us":5}"#)
+            + &line(r#"{"kind":"log","ph":"I","tid":0,"ts_us":4}"#);
+        assert!(check_text(&regress)
+            .unwrap_err()
+            .to_string()
+            .contains("regressed"));
+        // missing required field
+        let no_ts = hdr() + &line(r#"{"kind":"log","ph":"I","tid":0}"#);
+        assert!(check_text(&no_ts)
+            .unwrap_err()
+            .to_string()
+            .contains("ts_us"));
+        assert!(check_text("").is_err());
+    }
+
+    #[test]
+    fn summarize_reconstructs_counts_latency_and_traffic() {
+        let log = hdr()
+            + &line(r#"{"kind":"request","ph":"B","span":1,"tid":0,"ts_us":1,"req":0,"queue_depth":1}"#)
+            + &line(r#"{"kind":"request","ph":"B","span":2,"tid":0,"ts_us":2,"req":1,"queue_depth":2}"#)
+            + &line(r#"{"kind":"batch","ph":"B","span":3,"tid":1,"ts_us":3,"seq":0,"size":2,"padded":1,"linger_flush":true}"#)
+            + &line(r#"{"kind":"stage_traffic","ph":"I","tid":1,"ts_us":4,"pass":"fwd","stage":0,"measured_input":10,"measured_filter":4,"measured_output":6,"expected_input":10,"expected_filter":4,"expected_output":6,"halo_words":3,"expected_halo_words":3}"#)
+            + &line(r#"{"kind":"traffic","ph":"I","tid":1,"ts_us":5,"pass":"dfilter","measured_input":7,"measured_filter":2,"measured_output":1,"expected_input":7,"expected_filter":3,"expected_output":1}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":1,"tid":1,"ts_us":6,"req":0,"latency_secs":0.001}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":2,"tid":1,"ts_us":7,"req":1,"latency_secs":0.003}"#)
+            + &line(r#"{"kind":"batch","ph":"E","span":3,"tid":1,"ts_us":8,"exec_secs":0.25}"#);
+        let s = summarize_text(&log).unwrap();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.padded_slots, 1);
+        assert_eq!(s.linger_flushes, 1);
+        assert_eq!(s.batch_hist[&2], 1);
+        assert_eq!(s.peak_queue_depth, 2);
+        assert_eq!(s.total_exec_secs, 0.25);
+        assert_eq!(s.traffic_events, 2);
+        assert_eq!(s.measured_words, 20 + 10);
+        assert_eq!(s.expected_words, 20 + 11);
+        assert_eq!(s.halo_words, 3);
+        assert_eq!(s.expected_halo_words, 3);
+        // the dfilter event's filter words disagree → exactly one flag
+        assert_eq!(s.mismatches, 1);
+        assert_eq!(s.stage_words["fwd/stage0"], (20, 20));
+        assert_eq!(s.stage_words["dfilter/layer"], (10, 11));
+        // percentiles via util::stats::percentile on the sorted samples
+        let lat = [0.001, 0.003];
+        assert_eq!(s.latency_p50_ms, percentile(&lat, 0.50) * 1e3);
+        assert_eq!(s.latency_p99_ms, percentile(&lat, 0.99) * 1e3);
+        let text = s.render();
+        assert!(text.contains("measured-vs-expected mismatches: 1"));
+        assert!(text.contains("fwd/stage0"));
+    }
+}

@@ -1,0 +1,661 @@
+//! The event sink: a process-wide, thread-safe JSONL trace writer.
+//!
+//! One event is one JSON object on one line, built with
+//! [`crate::util::json::Json`] (no external serializers). Every event
+//! carries:
+//!
+//! * `ts_us`  — monotonic microseconds since the sink was created,
+//!   stamped under the writer lock so lines land in non-decreasing order;
+//! * `tid`    — a small per-thread tag (threadpool workers get their own);
+//! * `kind`   — the event kind (see [`kind`]);
+//! * `ph`     — the phase: `"B"` opens a span, `"E"` closes it, `"I"` is
+//!   an instant event (the Chrome-trace convention);
+//! * `span` / `parent` — span ids for `"B"`/`"E"` events. Same-thread
+//!   nesting (batch → dispatch → exec → stage) is inferred from a
+//!   thread-local span stack; cross-thread spans (a request enqueued on
+//!   the caller's thread and completed on the executor's) carry their id
+//!   explicitly via [`TraceSink::span_id`]/[`TraceSink::span_open`].
+//!
+//! Sinks come in three flavors: [`TraceSink::disabled`] (every call is a
+//! no-op), [`TraceSink::to_file`]/[`TraceSink::to_writer`] (an owned
+//! writer — what tests and per-server tracing use), and
+//! [`TraceSink::global`] (defers to the process-wide sink installed by
+//! [`install`]/[`init_from_env`] — what `--trace` and `CONVBOUND_TRACE`
+//! switch on). The disabled/uninstalled fast path is a single relaxed
+//! atomic load.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::err;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Schema version stamped into the `trace` header event (the first line
+/// of every log).
+pub const TRACE_VERSION: u64 = 1;
+
+/// Event kind names — one vocabulary shared by the emitters, the replay
+/// tools and the tests. See DESIGN.md §10 for each kind's fields.
+pub mod kind {
+    /// Header event: first line of every log (`version`).
+    pub const TRACE: &str = "trace";
+    /// Server request span: `B` at enqueue (`req`, `queue_depth`), `E` at
+    /// reply (`req`, `latency_secs`).
+    pub const REQUEST: &str = "request";
+    /// Server batch span: `B` when the batch forms (`seq`, `size`,
+    /// `padded`, `linger_flush`, `reqs`), `E` after replies (`exec_secs`).
+    pub const BATCH: &str = "batch";
+    /// Runtime dispatch span inside a batch (`key`; `E` adds `secs`).
+    pub const DISPATCH: &str = "dispatch";
+    /// Instant: an artifact entered the runtime cache (`key`, `artifact`).
+    pub const ARTIFACT_LOAD: &str = "artifact_load";
+    /// Runtime executable span around one artifact run (`key`).
+    pub const EXEC: &str = "exec";
+    /// Instant: one counted network sweep finished (`pass`, `stages`,
+    /// `groups`, `fused_boundaries`, `secs`), followed by its per-stage
+    /// [`STAGE_TRAFFIC`] events.
+    pub const NET_EXEC: &str = "net_exec";
+    /// Instant: an LP tile plan was solved (`pass`, `blocks`, `ranges`).
+    pub const TILE_PLAN: &str = "tile_plan";
+    /// Instant: a fusion plan was decided (`pass`, `groups`).
+    pub const FUSE_PLAN: &str = "fuse_plan";
+    /// Instant: single-layer measured-vs-analytic traffic pair.
+    pub const TRAFFIC: &str = "traffic";
+    /// Instant: per-stage measured-vs-analytic traffic pair of a network
+    /// sweep (plus `halo_words` vs `expected_halo_words`).
+    pub const STAGE_TRAFFIC: &str = "stage_traffic";
+    /// Instant: the autotuner timed (or LP-pruned) one candidate.
+    pub const AUTOTUNE_PROBE: &str = "autotune_probe";
+    /// Instant: the autotuner committed a winner for a shape/network.
+    pub const AUTOTUNE_SELECT: &str = "autotune_select";
+    /// Instant: aggregate LP-prune report for one selection.
+    pub const AUTOTUNE_PRUNE: &str = "autotune_prune";
+    /// Instant: a routed diagnostic line (`level`, `msg`).
+    pub const LOG: &str = "log";
+    /// Instant: final [`crate::coordinator::ServerStats`] at shutdown.
+    pub const SERVER_STATS: &str = "server_stats";
+}
+
+/// Identifier of one span; `0` is reserved for "no span" (disabled sink).
+pub type SpanId = u64;
+
+struct Shared {
+    start: Instant,
+    next_span: AtomicU64,
+    out: Mutex<Box<dyn Write + Send>>,
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        if let Ok(mut out) = self.out.lock() {
+            let _ = out.flush();
+        }
+    }
+}
+
+/// Small monotone per-thread tag; cheaper and more readable than OS
+/// thread ids, and stable for the life of the thread.
+fn thread_tag() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    thread_local! {
+        static TAG: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TAG.with(|t| *t)
+}
+
+thread_local! {
+    /// Open scope spans on this thread, innermost last — the implicit
+    /// parent for the next same-thread scope. Entries are keyed by sink
+    /// identity (the `Shared` address): two sinks can be live at once
+    /// (a per-server sink plus the global one), and a span id from one
+    /// file must never become a parent reference in the other.
+    static SPAN_STACK: std::cell::RefCell<Vec<(usize, SpanId)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+fn sink_tag(sh: &Arc<Shared>) -> usize {
+    Arc::as_ptr(sh) as usize
+}
+
+fn write_event(
+    sh: &Shared,
+    kind: &str,
+    ph: &str,
+    span: Option<SpanId>,
+    parent: Option<SpanId>,
+    fields: &[(&str, Json)],
+) {
+    let mut obj = BTreeMap::new();
+    obj.insert("tid".to_string(), Json::Num(thread_tag() as f64));
+    obj.insert("kind".to_string(), Json::Str(kind.to_string()));
+    obj.insert("ph".to_string(), Json::Str(ph.to_string()));
+    if let Some(s) = span {
+        obj.insert("span".to_string(), Json::Num(s as f64));
+    }
+    if let Some(p) = parent {
+        obj.insert("parent".to_string(), Json::Num(p as f64));
+    }
+    for (k, v) in fields {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    let mut out = sh.out.lock().unwrap();
+    // stamp the timestamp under the writer lock: lines land in the file
+    // in non-decreasing ts order, which `trace check` asserts
+    let ts = sh.start.elapsed().as_micros() as f64;
+    obj.insert("ts_us".to_string(), Json::Num(ts));
+    let line = format!("{}\n", Json::Obj(obj));
+    let _ = out.write_all(line.as_bytes());
+}
+
+#[derive(Clone)]
+enum Inner {
+    Disabled,
+    Global,
+    Writer(Arc<Shared>),
+}
+
+/// A handle to one trace destination. Cheap to clone; all clones share
+/// the writer. See the module docs for the three flavors.
+#[derive(Clone)]
+pub struct TraceSink {
+    inner: Inner,
+}
+
+impl TraceSink {
+    /// A sink where every call is a no-op.
+    pub const fn disabled() -> TraceSink {
+        TraceSink { inner: Inner::Disabled }
+    }
+
+    /// A sink that defers to the process-global trace at every call —
+    /// emits only while a global sink is [`install`]ed. This is the
+    /// default wiring for long-lived components ([`crate::coordinator::
+    /// ConvServer`]), so `--trace` reaches them without plumbing.
+    pub fn global() -> TraceSink {
+        TraceSink { inner: Inner::Global }
+    }
+
+    /// A sink that owns `w`. Emits the header event immediately.
+    pub fn to_writer(w: Box<dyn Write + Send>) -> TraceSink {
+        let shared = Arc::new(Shared {
+            start: Instant::now(),
+            next_span: AtomicU64::new(1),
+            out: Mutex::new(w),
+        });
+        let sink = TraceSink { inner: Inner::Writer(shared) };
+        sink.event(kind::TRACE, &[("version", ju(TRACE_VERSION))]);
+        sink
+    }
+
+    /// A sink writing to a fresh file at `path`.
+    pub fn to_file(path: &str) -> Result<TraceSink> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink::to_writer(Box::new(f)))
+    }
+
+    fn resolve(&self) -> Option<Arc<Shared>> {
+        match &self.inner {
+            Inner::Disabled => None,
+            Inner::Writer(sh) => Some(Arc::clone(sh)),
+            Inner::Global => {
+                if !GLOBAL_ON.load(Ordering::Relaxed) {
+                    return None;
+                }
+                GLOBAL.lock().unwrap().clone()
+            }
+        }
+    }
+
+    /// Is anything listening? The one branch hot paths pay.
+    pub fn enabled(&self) -> bool {
+        match &self.inner {
+            Inner::Disabled => false,
+            Inner::Writer(_) => true,
+            Inner::Global => GLOBAL_ON.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Emit an instant (`ph:"I"`) event.
+    pub fn event(&self, kind: &str, fields: &[(&str, Json)]) {
+        if let Some(sh) = self.resolve() {
+            write_event(&sh, kind, "I", None, None, fields);
+        }
+    }
+
+    /// Allocate a span id without emitting anything — for spans that
+    /// open on one thread and close on another (server requests).
+    /// Returns `0` when the sink is disabled; `span_open`/`span_close`
+    /// ignore id `0`, so callers can thread the id unconditionally.
+    pub fn span_id(&self) -> SpanId {
+        match self.resolve() {
+            Some(sh) => sh.next_span.fetch_add(1, Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Open a cross-thread span allocated with [`TraceSink::span_id`].
+    pub fn span_open(
+        &self,
+        kind: &str,
+        span: SpanId,
+        parent: Option<SpanId>,
+        fields: &[(&str, Json)],
+    ) {
+        if span == 0 {
+            return;
+        }
+        if let Some(sh) = self.resolve() {
+            write_event(&sh, kind, "B", Some(span), parent, fields);
+        }
+    }
+
+    /// Close a cross-thread span.
+    pub fn span_close(&self, kind: &str, span: SpanId, fields: &[(&str, Json)]) {
+        if span == 0 {
+            return;
+        }
+        if let Some(sh) = self.resolve() {
+            write_event(&sh, kind, "E", Some(span), None, fields);
+        }
+    }
+
+    /// Open a same-thread nested span: the parent is the innermost scope
+    /// already open on this thread. The guard emits the matching `E`
+    /// event when dropped (or via [`ScopeGuard::end`] with extra fields).
+    pub fn scope(&self, kind: &'static str, fields: &[(&str, Json)]) -> ScopeGuard {
+        match self.resolve() {
+            None => ScopeGuard { shared: None, kind, span: 0 },
+            Some(sh) => {
+                let me = sink_tag(&sh);
+                let span = sh.next_span.fetch_add(1, Ordering::Relaxed);
+                let parent = SPAN_STACK.with(|s| {
+                    s.borrow()
+                        .iter()
+                        .rev()
+                        .find(|&&(tag, _)| tag == me)
+                        .map(|&(_, sp)| sp)
+                });
+                write_event(&sh, kind, "B", Some(span), parent, fields);
+                SPAN_STACK.with(|s| s.borrow_mut().push((me, span)));
+                ScopeGuard { shared: Some(sh), kind, span }
+            }
+        }
+    }
+
+    /// Flush the underlying writer.
+    pub fn flush(&self) {
+        if let Some(sh) = self.resolve() {
+            let _ = sh.out.lock().unwrap().flush();
+        }
+    }
+}
+
+/// Guard of one same-thread scope span; closes the span on drop.
+pub struct ScopeGuard {
+    shared: Option<Arc<Shared>>,
+    kind: &'static str,
+    span: SpanId,
+}
+
+impl ScopeGuard {
+    /// This scope's span id (`0` when the sink was disabled) — pass as
+    /// `parent` to instant events logically nested under it.
+    pub fn id(&self) -> SpanId {
+        self.span
+    }
+
+    /// Close the span now, attaching result fields to the `E` event.
+    pub fn end(mut self, fields: &[(&str, Json)]) {
+        self.finish(fields);
+    }
+
+    fn finish(&mut self, fields: &[(&str, Json)]) {
+        if let Some(sh) = self.shared.take() {
+            let me = sink_tag(&sh);
+            SPAN_STACK.with(|s| {
+                let mut st = s.borrow_mut();
+                if let Some(pos) =
+                    st.iter().rposition(|&e| e == (me, self.span))
+                {
+                    st.remove(pos);
+                }
+            });
+            write_event(&sh, self.kind, "E", Some(self.span), None, fields);
+        }
+    }
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        self.finish(&[]);
+    }
+}
+
+// ---------------- the process-global sink ----------------
+
+static GLOBAL_ON: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<Option<Arc<Shared>>> = Mutex::new(None);
+/// Stderr verbosity for [`log`]: 0 silent, 1 info (default), 2 debug.
+static VERBOSITY: AtomicU8 = AtomicU8::new(1);
+
+/// Install a writer-backed sink as the process-global trace; everything
+/// emitting through [`TraceSink::global`] (and the free [`event`]/
+/// [`scope`]/[`log`] helpers) starts landing in it.
+pub fn install(sink: &TraceSink) -> Result<()> {
+    match &sink.inner {
+        Inner::Writer(sh) => {
+            *GLOBAL.lock().unwrap() = Some(Arc::clone(sh));
+            GLOBAL_ON.store(true, Ordering::SeqCst);
+            Ok(())
+        }
+        _ => Err(err!("only writer-backed sinks can be installed globally")),
+    }
+}
+
+/// Create a file sink at `path` and [`install`] it.
+pub fn install_file(path: &str) -> Result<()> {
+    install(&TraceSink::to_file(path)?)
+}
+
+/// Disable the global trace and flush whatever was written.
+pub fn uninstall() {
+    GLOBAL_ON.store(false, Ordering::SeqCst);
+    let sh = GLOBAL.lock().unwrap().take();
+    if let Some(sh) = sh {
+        let _ = sh.out.lock().unwrap().flush();
+    }
+}
+
+/// Is a global sink installed? One relaxed atomic load — the branch
+/// instrumented hot paths pay when tracing is off.
+pub fn enabled() -> bool {
+    GLOBAL_ON.load(Ordering::Relaxed)
+}
+
+/// Emit an instant event to the global sink (no-op when disabled).
+pub fn event(kind: &str, fields: &[(&str, Json)]) {
+    if enabled() {
+        TraceSink::global().event(kind, fields);
+    }
+}
+
+/// Open a nested scope span on the global sink (no-op guard when
+/// disabled).
+pub fn scope(kind: &'static str, fields: &[(&str, Json)]) -> ScopeGuard {
+    TraceSink::global().scope(kind, fields)
+}
+
+/// Flush the global sink.
+pub fn flush() {
+    if let Some(sh) = GLOBAL.lock().unwrap().clone() {
+        let _ = sh.out.lock().unwrap().flush();
+    }
+}
+
+/// Wire tracing/verbosity from the environment: `CONVBOUND_TRACE=<path>`
+/// installs a global file sink (unless one is already installed — the
+/// `--trace` flag wins), `CONVBOUND_VERBOSE=<0|1|2>` sets the stderr
+/// verbosity of [`log`].
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("CONVBOUND_VERBOSE") {
+        if let Ok(n) = v.parse::<u8>() {
+            VERBOSITY.store(n, Ordering::Relaxed);
+        }
+    }
+    if enabled() {
+        return;
+    }
+    if let Ok(path) = std::env::var("CONVBOUND_TRACE") {
+        if !path.is_empty() {
+            if let Err(e) = install_file(&path) {
+                eprintln!("convbound: CONVBOUND_TRACE ignored: {e}");
+            }
+        }
+    }
+}
+
+/// Diagnostic levels for [`log`]; `Info` prints by default, `Debug` only
+/// under `CONVBOUND_VERBOSE=2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Info = 1,
+    Debug = 2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Set the stderr verbosity of [`log`] (0 silent, 1 info, 2 debug).
+pub fn set_verbosity(n: u8) {
+    VERBOSITY.store(n, Ordering::Relaxed);
+}
+
+/// Current stderr verbosity.
+pub fn verbosity() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// Route one diagnostic line: recorded as a structured `log` event when
+/// the global trace is on, printed to stderr when `level` clears the
+/// verbosity threshold. This replaces the ad-hoc `eprintln!`/`println!`
+/// diagnostics in the autotuner, the CLI and the bench harness, so
+/// `--check` stdout stays machine-parseable and quiet by default.
+pub fn log(level: Level, msg: &str) {
+    if enabled() {
+        event(kind::LOG, &[("level", js(level.name())), ("msg", js(msg))]);
+    }
+    if (level as u8) <= VERBOSITY.load(Ordering::Relaxed) {
+        eprintln!("{msg}");
+    }
+}
+
+// ---------------- tiny Json constructors ----------------
+//
+// Call-site sugar for event fields; traffic word counts stay well below
+// 2^53, so the f64-backed `Json::Num` is exact for every value we emit.
+
+/// `Json::Num` from a u64.
+pub fn ju(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+/// `Json::Num` from an f64.
+pub fn jf(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// `Json::Str` from a &str.
+pub fn js(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+/// `Json::Bool`.
+pub fn jb(b: bool) -> Json {
+    Json::Bool(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threadpool::ThreadPool;
+
+    /// A clonable in-memory writer so tests can read back what a sink
+    /// wrote.
+    #[derive(Clone, Default)]
+    struct Buf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Buf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Buf {
+        fn text(&self) -> String {
+            String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+        }
+    }
+
+    fn buf_sink() -> (TraceSink, Buf) {
+        let buf = Buf::default();
+        let sink = TraceSink::to_writer(Box::new(buf.clone()));
+        (sink, buf)
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.enabled());
+        sink.event(kind::LOG, &[("msg", js("dropped"))]);
+        let g = sink.scope(kind::EXEC, &[]);
+        assert_eq!(g.id(), 0);
+        drop(g);
+        assert_eq!(sink.span_id(), 0);
+        sink.span_open(kind::REQUEST, 0, None, &[]);
+        sink.span_close(kind::REQUEST, 0, &[]);
+        // a disabled scope must not touch the thread-local span stack: a
+        // live scope opened inside one still has no parent
+        let (live, buf) = buf_sink();
+        let _outer = sink.scope(kind::BATCH, &[]);
+        drop(live.scope(kind::EXEC, &[]));
+        let lines: Vec<Json> = buf
+            .text()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(lines.len(), 3); // header + exec B + exec E
+        assert_eq!(lines[1].get("parent"), &Json::Null);
+    }
+
+    #[test]
+    fn header_is_first_line_and_versioned() {
+        let (sink, buf) = buf_sink();
+        sink.event(kind::LOG, &[("msg", js("x"))]);
+        let text = buf.text();
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("kind").as_str(), Some(kind::TRACE));
+        assert_eq!(first.get("version").as_u64(), Some(TRACE_VERSION));
+        assert_eq!(first.get("ph").as_str(), Some("I"));
+    }
+
+    #[test]
+    fn concurrent_emit_from_pool_workers_stays_line_valid() {
+        let (sink, buf) = buf_sink();
+        let pool = ThreadPool::new(4);
+        let n = 200usize;
+        let s2 = sink.clone();
+        pool.map((0..n).collect::<Vec<_>>(), move |i| {
+            s2.event(kind::LOG, &[("i", ju(i as u64)), ("msg", js("w"))]);
+        });
+        drop(pool);
+        sink.flush();
+        let text = buf.text();
+        let mut seen = vec![false; n];
+        let mut prev_ts = 0u64;
+        let mut count = 0usize;
+        for line in text.lines() {
+            let v = Json::parse(line).expect("every interleaved line parses");
+            let ts = v.get("ts_us").as_u64().expect("ts present");
+            assert!(ts >= prev_ts, "timestamps non-decreasing in file order");
+            prev_ts = ts;
+            if let Some(i) = v.get("i").as_u64() {
+                seen[i as usize] = true;
+            }
+            count += 1;
+        }
+        assert_eq!(count, n + 1); // header + one line per event
+        assert!(seen.iter().all(|&s| s), "no event lost or torn");
+    }
+
+    #[test]
+    fn scope_spans_nest_via_thread_local_stack() {
+        let (sink, buf) = buf_sink();
+        {
+            let outer = sink.scope(kind::BATCH, &[("seq", ju(1))]);
+            let inner = sink.scope(kind::DISPATCH, &[]);
+            sink.event(kind::LOG, &[("msg", js("inside"))]);
+            inner.end(&[("secs", jf(0.5))]);
+            drop(outer);
+        }
+        let events: Vec<Json> = buf
+            .text()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        // header, batch B, dispatch B, log I, dispatch E, batch E
+        assert_eq!(events.len(), 6);
+        let batch_b = &events[1];
+        let disp_b = &events[2];
+        let disp_e = &events[4];
+        let batch_e = &events[5];
+        assert_eq!(batch_b.get("ph").as_str(), Some("B"));
+        assert_eq!(batch_b.get("parent"), &Json::Null);
+        let batch_span = batch_b.get("span").as_u64().unwrap();
+        assert_eq!(disp_b.get("parent").as_u64(), Some(batch_span));
+        let disp_span = disp_b.get("span").as_u64().unwrap();
+        assert_ne!(disp_span, batch_span);
+        assert_eq!(disp_e.get("span").as_u64(), Some(disp_span));
+        assert_eq!(disp_e.get("secs").as_f64(), Some(0.5));
+        assert_eq!(batch_e.get("span").as_u64(), Some(batch_span));
+    }
+
+    #[test]
+    fn cross_thread_spans_balance() {
+        let (sink, buf) = buf_sink();
+        let span = sink.span_id();
+        assert_ne!(span, 0);
+        sink.span_open(kind::REQUEST, span, None, &[("req", ju(7))]);
+        let s2 = sink.clone();
+        std::thread::spawn(move || {
+            s2.span_close(kind::REQUEST, span, &[("latency_secs", jf(0.001))]);
+        })
+        .join()
+        .unwrap();
+        let events: Vec<Json> = buf
+            .text()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(events[1].get("ph").as_str(), Some("B"));
+        assert_eq!(events[2].get("ph").as_str(), Some("E"));
+        assert_eq!(events[1].get("span"), events[2].get("span"));
+        assert_ne!(events[1].get("tid"), events[2].get("tid"));
+    }
+
+    #[test]
+    fn global_install_routes_deferred_sinks_and_uninstall_stops_them() {
+        let (sink, buf) = buf_sink();
+        // note: other tests in this binary may emit global events while
+        // ours is installed; assertions below tolerate extra lines
+        install(&sink).unwrap();
+        assert!(enabled());
+        let deferred = TraceSink::global();
+        assert!(deferred.enabled());
+        deferred.event(kind::LOG, &[("msg", js("marker-on"))]);
+        uninstall();
+        assert!(!enabled());
+        assert!(!deferred.enabled());
+        deferred.event(kind::LOG, &[("msg", js("marker-off"))]);
+        let text = buf.text();
+        for line in text.lines() {
+            Json::parse(line).expect("global log stays line-valid");
+        }
+        assert!(text.contains("marker-on"));
+        assert!(!text.contains("marker-off"));
+    }
+}

@@ -38,6 +38,7 @@ use std::sync::Arc;
 
 use crate::conv::Tensor4;
 use crate::err;
+use crate::obs::{self, jf, js};
 use crate::util::error::{Context, Result};
 
 /// A prepared executable plus its IO metadata.
@@ -142,6 +143,16 @@ impl Runtime {
                         self.backend.load(&spec, path.as_deref())?
                     }
                 };
+                if obs::enabled() {
+                    obs::event(
+                        obs::kind::ARTIFACT_LOAD,
+                        &[
+                            ("key", js(key)),
+                            ("artifact", js(&spec.kind)),
+                            ("platform", js(&self.backend.platform())),
+                        ],
+                    );
+                }
                 Ok(slot.insert(LoadedArtifact { spec, exe }))
             }
         }
@@ -253,7 +264,8 @@ impl LoadedArtifact {
     pub fn run(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
         let dims: Vec<&[usize; 4]> = inputs.iter().map(|t| &t.dims).collect();
         self.check_inputs(&dims)?;
-        self.check_output(self.exe.execute(inputs)?)
+        let out = self.traced_exec(|| self.exe.execute(inputs))?;
+        self.check_output(out)
     }
 
     /// Execute with shared host tensors (same validation as
@@ -262,7 +274,29 @@ impl LoadedArtifact {
     pub fn run_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
         let dims: Vec<&[usize; 4]> = inputs.iter().map(|t| &t.dims).collect();
         self.check_inputs(&dims)?;
-        self.check_output(self.exe.execute_arc(inputs)?)
+        let out = self.traced_exec(|| self.exe.execute_arc(inputs))?;
+        self.check_output(out)
+    }
+
+    /// Run one execution under an `exec` trace span (exec start/end with
+    /// the artifact key and measured seconds). The disabled path is one
+    /// branch.
+    fn traced_exec(
+        &self,
+        f: impl FnOnce() -> Result<Tensor4>,
+    ) -> Result<Tensor4> {
+        if !obs::enabled() {
+            return f();
+        }
+        let scope = obs::scope(
+            obs::kind::EXEC,
+            &[("key", js(&self.spec.key())), ("artifact", js(&self.spec.kind))],
+        );
+        let t0 = std::time::Instant::now();
+        let out = f();
+        let secs = t0.elapsed().as_secs_f64();
+        scope.end(&[("secs", jf(secs)), ("ok", crate::obs::jb(out.is_ok()))]);
+        out
     }
 }
 

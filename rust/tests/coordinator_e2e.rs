@@ -346,3 +346,70 @@ fn shutdown_under_load_returns_promptly_and_flushes() {
     let want = conv7nl_naive(&img, &weights, &shape);
     assert!(resp.output.rel_l2(&want) < 1e-5);
 }
+
+/// The tentpole acceptance gate for the tracing layer: a traced serving
+/// run's JSONL log, replayed offline, must reproduce the `ServerStats`
+/// the server returned — *exactly*, not approximately. Both sides sort
+/// latencies with `f64::total_cmp` and share
+/// `util::stats::percentile`, and the JSON number round-trip is
+/// shortest-representation exact, so `==` on the floats is the honest
+/// assertion.
+#[test]
+fn traced_server_log_reproduces_server_stats_exactly() {
+    use convbound::obs;
+
+    let (spec, _) = layer_spec();
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 21);
+    let path = std::env::temp_dir().join("convbound_e2e_trace.jsonl");
+    let path_s = path.to_str().unwrap().to_string();
+    // an explicit sink (not the global one): parallel tests in this
+    // binary never see each other's events
+    let sink = obs::TraceSink::to_file(&path_s).expect("sink");
+    let server = ConvServer::start_builtin_traced(
+        KEY,
+        vec![weights],
+        Duration::from_millis(2),
+        sink,
+    )
+    .expect("traced server");
+
+    let n_req = xd[0] * 2 + 1; // uneven: forces a padded final batch
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| {
+            let img =
+                Tensor4::randn([1, xd[1], xd[2], xd[3]], 300 + i as u64);
+            server.submit(img).expect("submit")
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let stats = server.shutdown().expect("shutdown");
+
+    let text = std::fs::read_to_string(&path).expect("trace written");
+    // structural gate first: every line parses, timestamps are monotone,
+    // every request/batch span balances
+    let report = obs::check_text(&text).expect("trace check");
+    for k in [obs::kind::REQUEST, obs::kind::BATCH, obs::kind::SERVER_STATS] {
+        assert!(report.kinds.contains_key(k), "missing '{k}': {:?}", report.kinds);
+    }
+
+    // the replay summary must agree with the returned ServerStats
+    let s = obs::summarize_text(&text).expect("summarize");
+    assert_eq!(s.requests, stats.requests);
+    assert_eq!(s.dropped_requests, stats.failed);
+    assert_eq!(s.batches, stats.batches);
+    assert_eq!(s.padded_slots, stats.padded_slots);
+    assert_eq!(s.peak_queue_depth, stats.peak_queue_depth);
+    assert_eq!(s.latency_p50_ms, stats.latency_p50_ms);
+    assert_eq!(s.latency_p95_ms, stats.latency_p95_ms);
+    assert_eq!(s.latency_p99_ms, stats.latency_p99_ms);
+    assert_eq!(s.total_exec_secs, stats.total_exec_secs);
+    // the batch histogram covers every dispatched batch, and the padded
+    // final batch shows up as a linger flush
+    assert_eq!(s.batch_hist.values().sum::<u64>(), stats.batches);
+    assert!(s.linger_flushes >= 1, "uneven load must linger-flush");
+    std::fs::remove_file(&path).ok();
+}
