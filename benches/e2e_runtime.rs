@@ -22,7 +22,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use convbound::bench::bench;
-use convbound::commvol::seq::{blocking_volume, im2col_volume, naive_volume};
+use convbound::commvol::seq::{
+    blocking_volume, im2col_volume, naive_volume, winograd_volume,
+};
 use convbound::conv::{
     conv7nl_naive, paper_operands, pass_operands, resnet50_layers, scaled,
     ConvPass, Precision, Tensor4,
@@ -32,10 +34,11 @@ use convbound::kernels::{
     conv_im2col, conv_network_fused, conv_network_fused_counted,
     conv_network_staged, conv_network_step_counted, conv_pass_tiled,
     conv_pass_tiled_counted, conv_tiled, conv_tiled_counted,
-    conv_tiled_parallel, default_workers, expected_pass_traffic,
-    naive_network_step, FuseGroup, FusePlan, FusedExec, NetPass,
-    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
-    DEFAULT_TILE_MEM_WORDS,
+    conv_tiled_parallel, conv_winograd_counted, conv_winograd_parallel,
+    default_workers, expected_pass_traffic, expected_winograd_traffic,
+    naive_network_step, winograd_tolerance, FuseGroup, FusePlan, FusedExec,
+    NetPass, NetTrafficCounters, TilePlan, TilePlanCache, Traffic,
+    TrafficCounters, WinoPlan, DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::obs;
 use convbound::runtime::{Manifest, Runtime};
@@ -72,10 +75,14 @@ impl KernelRow {
     }
 }
 
-/// The four measured variants. `tiled_serial` is the apples-to-apples
+/// The five measured variants. `tiled_serial` is the apples-to-apples
 /// comparison against the single-threaded naive/im2col rows (the paper's
-/// blocking claim); `tiled` is the production path over the worker pool.
-const VARIANTS: [&str; 4] = ["naive", "im2col", "tiled_serial", "tiled"];
+/// blocking claim); `tiled` and `winograd` are the production paths over
+/// the worker pool (winograd races the paper's algorithm comparison for
+/// the 3×3-dominated catalog, validated against the tolerance oracle and
+/// the exact transform-domain traffic model on every bench run).
+const VARIANTS: [&str; 5] =
+    ["naive", "im2col", "tiled_serial", "tiled", "winograd"];
 
 /// Per-kernel sweep over the ResNet catalog; returns the JSON document.
 fn kernels_sweep(smoke: bool) -> Json {
@@ -96,7 +103,34 @@ fn kernels_sweep(smoke: bool) -> Json {
         let (x, w) = paper_operands(&s, 3);
         let (x, w) = (Arc::new(x), Arc::new(w));
         let plan = Arc::new(TilePlan::new(&s, p, m));
+        let wplan = Arc::new(WinoPlan::new(&s, p, m));
         let macs = s.updates() as f64;
+
+        // winograd gates, revalidated on every bench run: one counted
+        // execution within the documented tolerance oracle of the naive
+        // nest, with measured traffic exactly the analytic transform-
+        // domain model
+        let wino_measured = {
+            let counters = TrafficCounters::new();
+            let got = conv_winograd_counted(&x, &w, &wplan, &counters);
+            let want = conv7nl_naive(&x, &w, &s);
+            let tol = winograd_tolerance(&x, &w, &s);
+            let diff = got.max_abs_diff(&want);
+            assert!(
+                diff <= tol,
+                "{}: winograd diverged from naive beyond tolerance \
+                 ({diff} > {tol})",
+                l.name
+            );
+            let measured = counters.snapshot();
+            assert_eq!(
+                measured,
+                expected_winograd_traffic(&wplan),
+                "{}: measured winograd traffic != analytic model",
+                l.name
+            );
+            measured.total()
+        };
 
         let ktarget = if smoke { 0.05 } else { 0.6 };
         let mut rows: Vec<KernelRow> = Vec::new();
@@ -115,6 +149,11 @@ fn kernels_sweep(smoke: bool) -> Json {
                         "tiled_serial" => {
                             std::hint::black_box(conv_tiled(&x, &w, &plan))
                         }
+                        "winograd" => std::hint::black_box(
+                            conv_winograd_parallel(
+                                &x, &w, &wplan, &pool, &counters,
+                            ),
+                        ),
                         _ => std::hint::black_box(conv_tiled_parallel(
                             &x, &w, &plan, &pool, &counters,
                         )),
@@ -125,7 +164,9 @@ fn kernels_sweep(smoke: bool) -> Json {
             // live counters from exactly one execution (the bench loop
             // accumulated warmup + timed iterations, so reset first) —
             // a counter regression shows up here, not just in unit tests
-            let measured_words = if kernel.starts_with("tiled") {
+            let measured_words = if kernel == "winograd" {
+                wino_measured
+            } else if kernel.starts_with("tiled") {
                 *tiled_measured.get_or_insert_with(|| {
                     counters.reset();
                     std::hint::black_box(conv_tiled_counted(
@@ -139,6 +180,7 @@ fn kernels_sweep(smoke: bool) -> Json {
             let model_words = match kernel {
                 "naive" => naive_volume(&s, p),
                 "im2col" => im2col_volume(&s, p, m),
+                "winograd" => winograd_volume(&s, p, m),
                 _ => blocking_volume(&s, p, m),
             };
             rows.push(KernelRow {
@@ -151,20 +193,27 @@ fn kernels_sweep(smoke: bool) -> Json {
         }
 
         let find = |name: &str| rows.iter().find(|r| r.kernel == name).unwrap();
-        let (im2col, tser, tiled) =
-            (find("im2col"), find("tiled_serial"), find("tiled"));
+        let (im2col, tser, tiled, wino) = (
+            find("im2col"),
+            find("tiled_serial"),
+            find("tiled"),
+            find("winograd"),
+        );
         println!(
             "  {:<8} {:>9.0} kMAC: naive {:>7.1} | im2col {:>7.1} | tiled-serial \
-             {:>7.1} | tiled/{workers}w {:>7.1} MMAC/s (serial blocking speedup \
-             {:.2}x vs im2col, traffic {:.2}x of model)",
+             {:>7.1} | tiled/{workers}w {:>7.1} | winograd/{workers}w {:>7.1} \
+             MMAC/s (serial blocking speedup {:.2}x vs im2col, traffic {:.2}x \
+             of model; winograd traffic {:.2}x of model)",
             l.name,
             macs / 1e3,
             find("naive").mmac_per_s,
             im2col.mmac_per_s,
             tser.mmac_per_s,
             tiled.mmac_per_s,
+            wino.mmac_per_s,
             tser.mmac_per_s / im2col.mmac_per_s,
             tser.measured_words as f64 / tser.model_words.max(1.0),
+            wino.measured_words as f64 / wino.model_words.max(1.0),
         );
 
         let mut lo = BTreeMap::new();

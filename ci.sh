@@ -26,6 +26,9 @@ cargo run --release -- exec --layer conv4_x --scale 4 --pass dfilter --check >/d
 echo "==> cargo run --release -- exec --pass dinput --check  (tiled input gradient, bitwise vs oracle)"
 cargo run --release -- exec --layer conv4_x --scale 4 --pass dinput --check >/dev/null
 
+echo "==> cargo run --release -- exec --kernel winograd --check  (tiled F(2,3), tolerance oracle + exact traffic)"
+cargo run --release -- exec --layer conv4_x --scale 4 --kernel winograd --check >/dev/null
+
 echo "==> cargo run --release -- exec --network tiny_resnet --pass bwd --check  (fused backward sweep, bitwise vs chained oracle)"
 cargo run --release -- exec --network tiny_resnet --pass bwd --check >/dev/null
 
@@ -57,6 +60,15 @@ echo "==> BENCH_kernels.json: tracing overhead within budget"
 # flag it computed (p50 ratio within the slack)
 grep -q '"trace_overhead_ok":true' BENCH_kernels.json \
     || { echo "FAIL: JSONL tracing slowed the tiled hot path beyond the budget"; exit 1; }
+
+echo "==> BENCH_kernels.json: winograd variant swept with measured traffic"
+# the winograd tolerance + exact-traffic gates run INSIDE the bench (a
+# violation panics it); here we assert the variant actually appears with
+# a nonzero measured word count
+grep -q '"kernel":"winograd"' BENCH_kernels.json \
+    || { echo "FAIL: winograd entries missing from BENCH_kernels.json"; exit 1; }
+grep -Eq '"kernel":"winograd","measured_words":[1-9]' BENCH_kernels.json \
+    || { echo "FAIL: winograd rows carry no measured traffic"; exit 1; }
 
 echo "==> BENCH_training.json: per-pass entries present"
 # the bitwise tiled-vs-oracle gate lives INSIDE the bench (training_sweep

@@ -1,7 +1,8 @@
 //! Kernel selection: a heuristic pre-filter plus a measure-once autotuner
-//! choosing between the naive loop nest, im2col+GEMM and the LP-tiled
-//! engine per `(`[`ConvPass`]`, `[`ConvShape`]`)` — the gradient passes
-//! probe naive vs tiled (no im2col lowering exists for them).
+//! choosing between the naive loop nest, im2col+GEMM, the LP-tiled
+//! engine and the Winograd F(2,3) transform kernel per
+//! `(`[`ConvPass`]`, `[`ConvShape`]`)` — the gradient passes probe naive
+//! vs tiled (no im2col lowering or Winograd gradient path exists).
 //!
 //! Policy (see DESIGN.md §6 and §8):
 //!
@@ -49,6 +50,7 @@ use super::exec::{
 use super::fuse::{FusePlan, FusedExec, NetPass};
 use super::im2col::conv_im2col;
 use super::plan::{TilePlan, TilePlanCache};
+use super::winograd::{conv_winograd, expected_winograd_traffic, WinoPlan};
 
 /// Sidecar schema version this binary writes. Readers accept any version
 /// up to this one (older sidecars default the fields that did not exist
@@ -65,23 +67,30 @@ use super::plan::{TilePlan, TilePlanCache};
 /// backward/step choices under `pass_networks` (with a `pass` field).
 pub const SIDECAR_VERSION: u64 = 2;
 
-/// The three executable kernels.
+/// The four executable kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
     Naive,
     Im2col,
     Tiled,
+    /// Tiled Winograd F(2,3) (forward only; tolerance-validated).
+    Winograd,
 }
 
 impl KernelKind {
-    pub const ALL: [KernelKind; 3] =
-        [KernelKind::Naive, KernelKind::Im2col, KernelKind::Tiled];
+    pub const ALL: [KernelKind; 4] = [
+        KernelKind::Naive,
+        KernelKind::Im2col,
+        KernelKind::Tiled,
+        KernelKind::Winograd,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::Naive => "naive",
             KernelKind::Im2col => "im2col",
             KernelKind::Tiled => "tiled",
+            KernelKind::Winograd => "winograd",
         }
     }
 
@@ -90,6 +99,7 @@ impl KernelKind {
             "naive" => Some(KernelKind::Naive),
             "im2col" => Some(KernelKind::Im2col),
             "tiled" => Some(KernelKind::Tiled),
+            "winograd" => Some(KernelKind::Winograd),
             _ => None,
         }
     }
@@ -234,8 +244,8 @@ impl Autotuner {
         self.plans.plan_pass(pass, s, self.precision, self.mem_words)
     }
 
-    /// The kernels that can execute `pass`: the forward pass has an
-    /// im2col lowering, the gradient passes run naive-oracle vs tiled.
+    /// The kernels that can execute `pass`: the forward pass has im2col
+    /// and Winograd lowerings, the gradient passes run naive vs tiled.
     pub fn pass_kernels(pass: ConvPass) -> &'static [KernelKind] {
         match pass {
             ConvPass::Forward => &KernelKind::ALL,
@@ -270,8 +280,9 @@ impl Autotuner {
         }
     }
 
-    /// Measure-once selection: time all three kernels on a batch-clamped
-    /// probe of `s`, cache and return the fastest. Falls back to
+    /// Measure-once selection: time each applicable kernel on a
+    /// batch-clamped probe of `s`, cache and return the fastest. Falls
+    /// back to
     /// [`Autotuner::heuristic`] when even the probe would be too large.
     pub fn select(&self, s: &ConvShape) -> KernelKind {
         self.select_pass(ConvPass::Forward, s)
@@ -297,12 +308,21 @@ impl Autotuner {
         } else {
             self.measure_pass(pass, &probe)
         };
-        // tiled traffic is only meaningful (and its plan only needed) when
-        // the tiled engine won — the heuristic early-out stays LP-free
-        let traffic_words = if kernel == KernelKind::Tiled {
-            expected_pass_traffic(&self.plan_pass(pass, s)).total()
-        } else {
-            0
+        // engine traffic is only meaningful (and its plan only needed)
+        // when a counted engine won — the heuristic early-out stays
+        // LP-free; winograd records its own exact analytic model the
+        // same way tiled records the blocked-engine model
+        let traffic_words = match kernel {
+            KernelKind::Tiled => {
+                expected_pass_traffic(&self.plan_pass(pass, s)).total()
+            }
+            KernelKind::Winograd => expected_winograd_traffic(&WinoPlan::new(
+                s,
+                self.precision,
+                self.mem_words,
+            ))
+            .total(),
+            _ => 0,
         };
         self.choices
             .lock()
@@ -323,18 +343,21 @@ impl Autotuner {
         kind: NetKernelKind,
         halo_cache: bool,
     ) -> FusePlan {
-        self.network_pass_plan(NetPass::Forward, stages, kind, halo_cache)
+        self.network_pass_plan(NetPass::Forward, stages, kind, halo_cache, false)
     }
 
     /// The pass-generic fusion plan for `stages` under a network mode:
     /// the same three-way switch as [`Autotuner::network_plan`], solved
     /// for the pass's per-stage LPs and fused under the pass's fit rule.
+    /// `halo_w` additionally carries head overlap columns across a batch
+    /// block's w-tile-columns (forward plans with the cache on only).
     pub fn network_pass_plan(
         &self,
         pass: NetPass,
         stages: &[NetworkStage],
         kind: NetKernelKind,
         halo_cache: bool,
+        halo_w: bool,
     ) -> FusePlan {
         match kind {
             NetKernelKind::FusedPacked => FusePlan::for_pass_with_options(
@@ -344,6 +367,7 @@ impl Autotuner {
                 &self.plans,
                 FusedExec::Packed,
                 halo_cache,
+                halo_w,
             ),
             NetKernelKind::FusedReference => FusePlan::for_pass_with_options(
                 pass,
@@ -352,6 +376,7 @@ impl Autotuner {
                 &self.plans,
                 FusedExec::Reference,
                 halo_cache,
+                halo_w,
             ),
             NetKernelKind::Materialized => FusePlan::materialized_pass(
                 pass,
@@ -494,7 +519,7 @@ impl Autotuner {
         let candidates = Autotuner::net_pass_modes(pass);
         let plans: Vec<FusePlan> = candidates
             .iter()
-            .map(|&kind| self.network_pass_plan(pass, stages, kind, true))
+            .map(|&kind| self.network_pass_plan(pass, stages, kind, true, false))
             .collect();
         let analytic: Vec<f64> = plans
             .iter()
@@ -887,6 +912,11 @@ impl Autotuner {
             KernelKind::Tiled => {
                 expected_pass_traffic(&self.plan_pass(pass, s)).total() as f64
             }
+            // the §4.2 analytic Winograd volume — the same model Figure 2
+            // charts, so the LP prune races exactly what the paper races
+            KernelKind::Winograd => {
+                crate::commvol::seq::winograd_volume(s, self.precision, self.mem_words)
+            }
         }
     }
 
@@ -998,12 +1028,18 @@ impl Autotuner {
             KernelKind::Naive => conv7nl_naive(x, w, s),
             KernelKind::Im2col => conv_im2col(x, w, s),
             KernelKind::Tiled => conv_tiled(x, w, &self.plan(s)),
+            KernelKind::Winograd => conv_winograd(
+                x,
+                w,
+                &WinoPlan::new(s, self.precision, self.mem_words),
+            ),
         }
     }
 
-    /// Execute one pass of `s` with an explicit kernel. No im2col
-    /// lowering exists for the gradient passes ([`Autotuner::pass_kernels`]
-    /// never offers it there); asking for it anyway runs the naive oracle.
+    /// Execute one pass of `s` with an explicit kernel. No im2col or
+    /// Winograd lowering exists for the gradient passes
+    /// ([`Autotuner::pass_kernels`] never offers them there); asking for
+    /// one anyway runs the naive oracle.
     pub fn run_pass_kernel(
         &self,
         pass: ConvPass,
@@ -1076,10 +1112,14 @@ mod tests {
         let kb = tuner.select(&b);
         assert_eq!(tuner.tuned().len(), 2);
         for (_, _, k, words) in tuner.tuned() {
-            if k == KernelKind::Tiled {
-                assert!(words > 0, "tiled choices record their traffic");
-            } else {
-                assert_eq!(words, 0, "non-tiled choices carry no tiled traffic");
+            match k {
+                KernelKind::Tiled | KernelKind::Winograd => {
+                    assert!(words > 0, "engine choices record their traffic")
+                }
+                _ => assert_eq!(
+                    words, 0,
+                    "naive/im2col choices carry no engine traffic"
+                ),
             }
         }
         tuner.save(&path).expect("save sidecar");
@@ -1205,7 +1245,7 @@ mod tests {
                  {"pass":"dweight","shape":[2,3,4,6,6,3,3,1,1],
                   "kernel":"tiled","traffic_words":1},
                  {"pass":"dfilter","shape":[2,3,4,6,6,3,3,1,1],
-                  "kernel":"winograd","traffic_words":1},
+                  "kernel":"fft","traffic_words":1},
                  {"pass":"dfilter","shape":[2,3,4,6,6,3,3,1,1],
                   "kernel":"naive","traffic_words":0}]}"#,
         )
@@ -1312,7 +1352,7 @@ mod tests {
             let winner =
                 full.select_network_pass(pass, "tiny_resnet", &net.stages);
             let words = |kind| {
-                full.network_pass_plan(pass, &net.stages, kind, true)
+                full.network_pass_plan(pass, &net.stages, kind, true, false)
                     .expected_network_traffic()
                     .iter()
                     .map(|t| t.total())

@@ -49,8 +49,8 @@ use crate::util::threadpool::ThreadPool;
 
 use super::fuse::{
     bwd_group_spans, bwd_group_tile_columns, group_spans, group_tile_columns,
-    input_overlap_rows, input_span, FuseGroup, FusePlan, FusedExec, NetPass,
-    Span,
+    input_overlap_cols, input_overlap_rows, input_span, FuseGroup, FusePlan,
+    FusedExec, NetPass, Span,
 };
 use super::gemm::{self, TileDims};
 use super::pack;
@@ -108,15 +108,15 @@ impl TrafficCounters {
         TrafficCounters::default()
     }
 
-    fn add_input(&self, words: u64) {
+    pub(crate) fn add_input(&self, words: u64) {
         self.input.fetch_add(words, Ordering::Relaxed);
     }
 
-    fn add_filter(&self, words: u64) {
+    pub(crate) fn add_filter(&self, words: u64) {
         self.filter.fetch_add(words, Ordering::Relaxed);
     }
 
-    fn add_output(&self, words: u64) {
+    pub(crate) fn add_output(&self, words: u64) {
         self.output.fetch_add(words, Ordering::Relaxed);
     }
 
@@ -913,6 +913,46 @@ fn save_carry_tail(dst: &mut Tensor4, src: &Tensor4, rows: usize) {
     }
 }
 
+/// Copy rows `[h0, h)` of the first `cols` w-columns of `src` (a saved
+/// w-carry, exactly `cols` columns wide) into the same positions of
+/// `dst` — the left edge of a patch whose top `h0` rows the h-carry
+/// already filled.
+fn copy_carry_cols(dst: &mut Tensor4, src: &Tensor4, cols: usize, h0: usize) {
+    debug_assert_eq!(src.dims[2], cols);
+    debug_assert_eq!(src.dims[3], dst.dims[3]);
+    debug_assert_eq!(src.dims[..2], dst.dims[..2]);
+    let h = dst.dims[3];
+    for n in 0..dst.dims[0] {
+        for c in 0..dst.dims[1] {
+            for a in 0..cols {
+                let s = src.idx(n, c, a, h0);
+                let d = dst.idx(n, c, a, h0);
+                dst.data[d..d + (h - h0)]
+                    .copy_from_slice(&src.data[s..s + (h - h0)]);
+            }
+        }
+    }
+}
+
+/// Save the trailing `cols` w-columns (full height) of every (n, c) plane
+/// of `src` into `dst` (resized to match) — the w-axis carry the same
+/// h-position of the next w-tile-column starts from.
+fn save_carry_wtail(dst: &mut Tensor4, src: &Tensor4, cols: usize) {
+    let sw = src.dims[2];
+    let h = src.dims[3];
+    debug_assert!(cols <= sw);
+    reset_tensor(dst, [src.dims[0], src.dims[1], cols, h]);
+    for n in 0..src.dims[0] {
+        for c in 0..src.dims[1] {
+            for a in 0..cols {
+                let s = src.idx(n, c, sw - cols + a, 0);
+                let d = dst.idx(n, c, a, 0);
+                dst.data[d..d + h].copy_from_slice(&src.data[s..s + h]);
+            }
+        }
+    }
+}
+
 /// Reusable per-worker scratch for a fused group's tile sweeps: the
 /// ping-pong activation patches, the packed panels, the microkernel output
 /// buffer and the per-level sliding-window carries. Hoisted out of the
@@ -937,11 +977,31 @@ struct FusedScratch {
     /// constant per-level overlap row counts ([`input_overlap_rows`]);
     /// all zero with the halo cache off
     overlap: Vec<u64>,
+    /// head-level w-axis carries, one per h-block position of the column
+    /// sweep: the trailing overlap columns (full patch height) of the
+    /// previous w-tile-column's image patch at the same h position. They
+    /// persist across a batch block's columns; empty with the w-carry off
+    carry_w: Vec<Tensor4>,
+    carry_w_valid: Vec<bool>,
+    /// head-level column overlap ([`input_overlap_cols`]); 0 with the
+    /// w-carry off
+    overlap_w0: u64,
 }
 
 impl FusedScratch {
-    fn for_group(stages: &[NetworkStage], g: &FuseGroup, halo: bool) -> FusedScratch {
+    fn for_group(
+        stages: &[NetworkStage],
+        g: &FuseGroup,
+        halo: bool,
+        halo_w: bool,
+    ) -> FusedScratch {
         let levels = g.len();
+        let h_o = stages[g.end].shape.h_o;
+        let n_th = if halo_w {
+            ((h_o + g.b_ho - 1) / g.b_ho) as usize
+        } else {
+            0
+        };
         FusedScratch {
             cur: Tensor4::zeros([0, 0, 0, 0]),
             next: Tensor4::zeros([0, 0, 0, 0]),
@@ -955,6 +1015,13 @@ impl FusedScratch {
             } else {
                 vec![0; levels]
             },
+            carry_w: (0..n_th).map(|_| Tensor4::zeros([0, 0, 0, 0])).collect(),
+            carry_w_valid: vec![false; n_th],
+            overlap_w0: if halo_w {
+                input_overlap_cols(stages, g.start, g.end)[0]
+            } else {
+                0
+            },
         }
     }
 
@@ -962,6 +1029,14 @@ impl FusedScratch {
     /// stale.
     fn reset_column(&mut self) {
         for v in self.carry_valid.iter_mut() {
+            *v = false;
+        }
+    }
+
+    /// Start a fresh batch block: the previous block's w-carries are
+    /// stale.
+    fn reset_batch(&mut self) {
+        for v in self.carry_w_valid.iter_mut() {
             *v = false;
         }
     }
@@ -1027,8 +1102,10 @@ fn run_fused_tile<'a>(
     tn: Blk,
     tw: Blk,
     th: Blk,
+    ti: usize,
     exec: FusedExec,
     halo: bool,
+    halo_w: bool,
     scratch: &'a mut FusedScratch,
     counters: &NetTrafficCounters,
 ) -> &'a Tensor4 {
@@ -1042,17 +1119,36 @@ fn run_fused_tile<'a>(
     // ending at h_o is the column's last: nothing follows to consume a
     // carry, and saving one would be wasted copies
     let more_tiles = th.start + th.len < stages[g.end].shape.h_o;
+    // likewise, the column ending at w_o is the batch block's last: no
+    // column to its right will consume a w-carry
+    let more_cols = tw.start + tw.len < stages[g.end].shape.w_o;
 
     // ---- level 0: the halo'd image patch. Carried rows come from the
-    // previous h-tile; only the fresh rows are read from main memory (the
-    // only input-side traffic the group charges). ----
+    // previous h-tile, carried columns (w-carry on) from the previous
+    // w-tile-column at the same h position; only the fresh rectangle is
+    // read from main memory (the only input-side traffic the group
+    // charges). ----
     let ov0 = scratch.overlap[0] as usize;
     let carried = if halo && scratch.carry_valid[0] && ov0 > 0 { ov0 } else { 0 };
+    let ovw0 = scratch.overlap_w0 as usize;
+    let carried_w = if halo_w && scratch.carry_w_valid[ti] && ovw0 > 0 {
+        ovw0
+    } else {
+        0
+    };
     reset_tensor(&mut scratch.cur, [bn, ci0, iw, ih]);
     if carried > 0 {
         let FusedScratch { cur, carry, .. } = &mut *scratch;
         copy_carry_prefix(cur, &carry[0], carried);
         counters.add_halo(g.start, (bn * ci0 * iw * carried) as u64);
+    }
+    if carried_w > 0 {
+        // the h-carry prefix already filled the top `carried` rows across
+        // the full width (corner included), so the w-carry serves only
+        // the rows below — the L-shape's corner is counted once
+        let FusedScratch { cur, carry_w, .. } = &mut *scratch;
+        copy_carry_cols(cur, &carry_w[ti], carried_w, carried);
+        counters.add_halo(g.start, (bn * ci0 * carried_w * (ih - carried)) as u64);
     }
     {
         let cur = &mut scratch.cur;
@@ -1060,7 +1156,7 @@ fn run_fused_tile<'a>(
         for n in 0..bn {
             let na = tn.start as usize + n;
             for c in 0..ci0 {
-                for a in 0..iw {
+                for a in carried_w..iw {
                     let wa = in_sp.w0 as usize + a;
                     let src = input.idx(na, c, wa, in_sp.h0 as usize + carried);
                     let dst = cur.idx(n, c, a, carried);
@@ -1071,12 +1167,17 @@ fn run_fused_tile<'a>(
         }
         counters
             .stage(g.start)
-            .add_input((bn * ci0 * iw * fresh) as u64);
+            .add_input((bn * ci0 * (iw - carried_w) * fresh) as u64);
     }
     if halo && more_tiles && ov0 > 0 {
         let FusedScratch { cur, carry, carry_valid, .. } = &mut *scratch;
         save_carry_tail(&mut carry[0], cur, ov0);
         carry_valid[0] = true;
+    }
+    if halo_w && more_cols && ovw0 > 0 {
+        let FusedScratch { cur, carry_w, carry_w_valid, .. } = &mut *scratch;
+        save_carry_wtail(&mut carry_w[ti], cur, ovw0);
+        carry_w_valid[ti] = true;
     }
 
     // ---- the stage chain: level j input -> level j+1 output ----
@@ -1232,11 +1333,20 @@ pub fn conv_network_fused_counted(
         let input: &Tensor4 = act.as_ref().unwrap_or(image);
         let next = if g.is_fused() {
             let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
-            let mut scratch =
-                FusedScratch::for_group(&plan.stages, g, plan.halo_cache);
+            let mut scratch = FusedScratch::for_group(
+                &plan.stages,
+                g,
+                plan.halo_cache,
+                plan.halo_w,
+            );
+            let mut prev_tn: Option<u64> = None;
             for (tn, tw, hs) in group_tile_columns(&plan.stages, g) {
+                if prev_tn != Some(tn.start) {
+                    scratch.reset_batch();
+                    prev_tn = Some(tn.start);
+                }
                 scratch.reset_column();
-                for th in hs {
+                for (ti, th) in hs.into_iter().enumerate() {
                     let tile = run_fused_tile(
                         input,
                         filters,
@@ -1245,8 +1355,10 @@ pub fn conv_network_fused_counted(
                         tn,
                         tw,
                         th,
+                        ti,
                         plan.exec,
                         plan.halo_cache,
+                        plan.halo_w,
                         &mut scratch,
                         counters,
                     );
@@ -1278,9 +1390,11 @@ pub fn conv_network_fused_counted(
 /// Fused network execution fanned out over a [`ThreadPool`]. The unit of
 /// parallelism is one (batch, wO) tile *column*: the sliding-window carry
 /// chains a column's h-tiles serially on one worker, and distinct columns
-/// write disjoint output regions. Bitwise identical to the serial path:
-/// every tile is computed in the same per-element order. Materialized
-/// stages fan out through [`conv_tiled_parallel`].
+/// write disjoint output regions. With the w-carry on the unit widens to
+/// one *batch block* (the carry chains a block's columns left to right).
+/// Bitwise identical to the serial path: every tile is computed in the
+/// same per-element order. Materialized stages fan out through
+/// [`conv_tiled_parallel`].
 pub fn conv_network_fused(
     image: &Arc<Tensor4>,
     filters: &[Arc<Tensor4>],
@@ -1298,38 +1412,65 @@ pub fn conv_network_fused(
     for (gi, g) in plan.groups.iter().enumerate() {
         let next = if g.is_fused() {
             let cols = group_tile_columns(&plan.stages, g);
+            // one work unit per column, or per batch block with the
+            // w-carry on (carries chain across a block's columns)
+            let units: Vec<Vec<(Blk, Blk, Vec<Blk>)>> = if plan.halo_w {
+                let mut units: Vec<Vec<(Blk, Blk, Vec<Blk>)>> = Vec::new();
+                for col in cols {
+                    match units.last_mut() {
+                        Some(u) if u[0].0.start == col.0.start => u.push(col),
+                        _ => units.push(vec![col]),
+                    }
+                }
+                units
+            } else {
+                cols.into_iter().map(|c| vec![c]).collect()
+            };
             let mut out = Tensor4::zeros(network_out_dims(&plan.stages, g));
             let (x2, p2) = (Arc::clone(&act), Arc::clone(plan));
             let f2: Vec<Arc<Tensor4>> = filters.to_vec();
             let c2 = counters.clone();
-            let bufs = pool.map(cols.clone(), move |(tn, tw, hs)| {
+            let bufs = pool.map(units.clone(), move |unit| {
                 let g = p2.groups[gi];
                 let frefs: Vec<&Tensor4> =
                     f2.iter().map(|f| f.as_ref()).collect();
-                let mut scratch =
-                    FusedScratch::for_group(&p2.stages, &g, p2.halo_cache);
-                let mut tiles = Vec::with_capacity(hs.len());
-                for th in hs {
-                    let tile = run_fused_tile(
-                        &x2,
-                        &frefs,
-                        &p2.stages,
-                        &g,
-                        tn,
-                        tw,
-                        th,
-                        p2.exec,
-                        p2.halo_cache,
-                        &mut scratch,
-                        &c2,
-                    );
-                    tiles.push(tile.clone());
+                let mut scratch = FusedScratch::for_group(
+                    &p2.stages,
+                    &g,
+                    p2.halo_cache,
+                    p2.halo_w,
+                );
+                let mut tiles = Vec::new();
+                for (tn, tw, hs) in unit {
+                    scratch.reset_column();
+                    for (ti, th) in hs.into_iter().enumerate() {
+                        let tile = run_fused_tile(
+                            &x2,
+                            &frefs,
+                            &p2.stages,
+                            &g,
+                            tn,
+                            tw,
+                            th,
+                            ti,
+                            p2.exec,
+                            p2.halo_cache,
+                            p2.halo_w,
+                            &mut scratch,
+                            &c2,
+                        );
+                        tiles.push(tile.clone());
+                    }
                 }
                 tiles
             });
-            for ((tn, tw, hs), tiles) in cols.iter().zip(&bufs) {
-                for (th, tile) in hs.iter().zip(tiles) {
-                    scatter_network(&mut out, *tn, *tw, *th, tile);
+            for (unit, tiles) in units.iter().zip(&bufs) {
+                let mut it = tiles.iter();
+                for (tn, tw, hs) in unit {
+                    for th in hs {
+                        let tile = it.next().expect("one tile per (column, h)");
+                        scatter_network(&mut out, *tn, *tw, *th, tile);
+                    }
                 }
             }
             out
@@ -2234,6 +2375,92 @@ mod tests {
         assert!(
             cached_halo_words > 0,
             "single-row sweep must serve words from the halo cache"
+        );
+    }
+
+    /// The w-axis halo carry changes no output bit (on or off, serial or
+    /// parallel), keeps measured traffic and halo words exactly on the
+    /// analytic models, and with single-column w-tiles serves strictly
+    /// more words (and reads strictly fewer) than the h-carry alone.
+    #[test]
+    fn w_carry_is_bitwise_with_exact_traffic() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let cache = TilePlanCache::new();
+        let mut base = FusePlan::new(&net.stages, 65536.0, &cache);
+        // single-column, single-row tiles: both carries engage on every
+        // interior tile of every batch block
+        base.groups = vec![FuseGroup {
+            start: 0,
+            end: 2,
+            b_n: 1,
+            b_wo: 1,
+            b_ho: 1,
+        }];
+        let image = Tensor4::randn(net.input_dims(), 21);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 22 + i as u64))
+            .collect();
+        let frefs: Vec<&Tensor4> = filters.iter().collect();
+        let want = super::super::fuse::naive_network(&image, &frefs, &net.stages);
+        let image_arc = Arc::new(image.clone());
+        let farcs: Vec<Arc<Tensor4>> =
+            filters.iter().cloned().map(Arc::new).collect();
+        let pool = ThreadPool::new(3);
+        let mut served = [0u64; 2];
+        let mut head_reads = [0u64; 2];
+        for (i, halo_w) in [false, true].into_iter().enumerate() {
+            let mut plan = base.clone();
+            plan.halo_cache = true;
+            plan.halo_w = halo_w;
+            let counters = NetTrafficCounters::new(net.stages.len());
+            let got =
+                conv_network_fused_counted(&image, &frefs, &plan, &counters);
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "halo_w={halo_w} diverged from the oracle"
+            );
+            assert_eq!(
+                counters.snapshot(),
+                plan.expected_network_traffic(),
+                "halo_w={halo_w} traffic"
+            );
+            assert_eq!(
+                counters.halo_snapshot(),
+                plan.expected_halo_words(),
+                "halo_w={halo_w} halo words"
+            );
+            served[i] = counters.halo_snapshot().iter().sum();
+            head_reads[i] = counters.snapshot()[0].input_words;
+            // the widened parallel work unit stays bitwise and exact
+            let plan = Arc::new(plan);
+            let par_ctr = NetTrafficCounters::new(net.stages.len());
+            let par =
+                conv_network_fused(&image_arc, &farcs, &plan, &pool, &par_ctr);
+            assert_eq!(par.max_abs_diff(&got), 0.0, "halo_w={halo_w} parallel");
+            assert_eq!(
+                par_ctr.snapshot(),
+                plan.expected_network_traffic(),
+                "halo_w={halo_w} parallel traffic"
+            );
+            assert_eq!(
+                par_ctr.halo_snapshot(),
+                plan.expected_halo_words(),
+                "halo_w={halo_w} parallel halo words"
+            );
+        }
+        assert!(
+            served[1] > served[0],
+            "w-carry must serve extra words ({:?})",
+            served
+        );
+        assert!(
+            head_reads[1] < head_reads[0],
+            "w-carry must cut head input reads ({:?})",
+            head_reads
         );
     }
 

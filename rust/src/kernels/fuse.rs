@@ -205,6 +205,11 @@ pub struct FusePlan {
     /// and the analytic traffic model (forward: per-level input carries;
     /// backward: the tail gradient patch; step: unused)
     pub halo_cache: bool,
+    /// w-axis halo carry on/off: additionally reuse the overlap *columns*
+    /// adjacent w-tile-columns of a forward fused sweep share at the group
+    /// head. Requires `halo_cache` (normalized off otherwise); meaningful
+    /// only for [`NetPass::Forward`] plans.
+    pub halo_w: bool,
 }
 
 impl FusePlan {
@@ -230,6 +235,7 @@ impl FusePlan {
             cache,
             exec,
             halo_cache,
+            false,
         )
     }
 
@@ -240,7 +246,15 @@ impl FusePlan {
         mem_words: f64,
         cache: &TilePlanCache,
     ) -> FusePlan {
-        FusePlan::for_pass_with_options(pass, stages, mem_words, cache, FusedExec::Packed, true)
+        FusePlan::for_pass_with_options(
+            pass,
+            stages,
+            mem_words,
+            cache,
+            FusedExec::Packed,
+            true,
+            false,
+        )
     }
 
     /// Pass-generic planner: solve the pass's per-stage LPs (through the
@@ -255,15 +269,19 @@ impl FusePlan {
         cache: &TilePlanCache,
         exec: FusedExec,
         halo_cache: bool,
+        halo_w: bool,
     ) -> FusePlan {
         assert!(!stages.is_empty(), "network must have at least one stage");
+        // the w-carry rides on the sliding-window machinery and only the
+        // forward sweep's tile columns chain along w
+        let halo_w = halo_w && halo_cache && pass == NetPass::Forward;
         let stage_plans = solve_stage_plans(stages, mem_words, cache);
         let (dinput_plans, dfilter_plans) =
             solve_grad_plans(pass, stages, mem_words, cache);
         let singles = pass_singles(pass, &stage_plans, &dinput_plans, &dfilter_plans);
         let single_group = |i: usize| {
             let (b_n, b_wo, b_ho) =
-                fit_pass_group_tile(pass, stages, i, i, mem_words, halo_cache)
+                fit_pass_group_tile(pass, stages, i, i, mem_words, halo_cache, halo_w)
                     .unwrap_or((1, 1, 1));
             FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
         };
@@ -272,11 +290,13 @@ impl FusePlan {
         let mut cur_cost = singles[0];
         for i in 1..stages.len() {
             let mut extended = None;
-            if let Some((b_n, b_wo, b_ho)) =
-                fit_pass_group_tile(pass, stages, cur.start, i, mem_words, halo_cache)
-            {
+            if let Some((b_n, b_wo, b_ho)) = fit_pass_group_tile(
+                pass, stages, cur.start, i, mem_words, halo_cache, halo_w,
+            ) {
                 let cand = FuseGroup { start: cur.start, end: i, b_n, b_wo, b_ho };
-                let cost = pass_group_traffic(pass, stages, &cand, halo_cache).total();
+                let cost =
+                    pass_group_traffic(pass, stages, &cand, halo_cache, halo_w)
+                        .total();
                 if cost <= cur_cost + singles[i] {
                     extended = Some((cand, cost));
                 }
@@ -304,6 +324,7 @@ impl FusePlan {
             groups,
             exec,
             halo_cache,
+            halo_w,
         };
         plan.trace_plan();
         plan
@@ -335,7 +356,7 @@ impl FusePlan {
         let groups = (0..stages.len())
             .map(|i| {
                 let (b_n, b_wo, b_ho) =
-                    fit_pass_group_tile(pass, stages, i, i, mem_words, false)
+                    fit_pass_group_tile(pass, stages, i, i, mem_words, false, false)
                         .unwrap_or((1, 1, 1));
                 FuseGroup { start: i, end: i, b_n, b_wo, b_ho }
             })
@@ -350,6 +371,7 @@ impl FusePlan {
             groups,
             exec: FusedExec::Packed,
             halo_cache: false,
+            halo_w: false,
         };
         plan.trace_plan();
         plan
@@ -385,6 +407,7 @@ impl FusePlan {
                 ("mem_words", jf(self.mem_words)),
                 ("exec", js(self.exec.name())),
                 ("halo_cache", Json::Bool(self.halo_cache)),
+                ("halo_w", Json::Bool(self.halo_w)),
                 ("fused_boundaries", ju(self.fused_boundaries() as u64)),
                 ("groups", groups),
             ],
@@ -474,7 +497,13 @@ impl FusePlan {
             match self.pass {
                 NetPass::Forward => {
                     if g.is_fused() {
-                        charge_fused_group(&self.stages, g, self.halo_cache, &mut t);
+                        charge_fused_group(
+                            &self.stages,
+                            g,
+                            self.halo_cache,
+                            self.halo_w,
+                            &mut t,
+                        );
                     } else {
                         t[g.start] = expected_traffic(&self.stage_plans[g.start]);
                     }
@@ -517,11 +546,15 @@ impl FusePlan {
     /// Words each stage's patches are expected to receive from the
     /// sliding-window halo cache instead of main memory, per stage. In a
     /// forward plan these are input rows served at group heads and rows
-    /// spared from recompute at interior fused stages; in a backward plan
-    /// they are tail gradient rows served from the previous h-tile's
-    /// carried patch. All zero when the cache is off, for step plans
-    /// (batch blocks never overlap), or when every fused sweep has a
-    /// single h-tile. The executors' halo counters match these exactly.
+    /// spared from recompute at interior fused stages — plus, with the
+    /// w-carry on, the head-level overlap *columns* served from the
+    /// previous w-tile-column's carried patch (the carried corner where
+    /// both overlaps meet is counted once). In a backward plan they are
+    /// tail gradient rows served from the previous h-tile's carried
+    /// patch. All zero when the cache is off, for step plans (batch
+    /// blocks never overlap), or when every fused sweep has a single
+    /// h-tile (and, for the w part, a single w-column). The executors'
+    /// halo counters match these exactly.
     pub fn expected_halo_words(&self) -> Vec<u64> {
         let mut words = vec![0u64; self.stages.len()];
         if !self.halo_cache || self.pass == NetPass::Step {
@@ -550,25 +583,38 @@ impl FusePlan {
                 continue;
             }
             let overlaps = input_overlap_rows(&self.stages, g.start, g.end);
+            let ovw0 = if self.halo_w {
+                input_overlap_cols(&self.stages, g.start, g.end)[0]
+            } else {
+                0
+            };
+            // the w-carry chains a batch block's columns left to right, so
+            // every column after a block's first has carried head columns
+            let mut prev_tn: Option<u64> = None;
             for (tn, tw, hs) in group_tile_columns(&self.stages, g) {
+                let first_col = prev_tn != Some(tn.start);
+                prev_tn = Some(tn.start);
                 for (i, th) in hs.iter().enumerate() {
-                    if i == 0 {
-                        continue;
-                    }
                     let spans =
                         group_spans(&self.stages, g.start, g.end, tw, *th);
                     for k in g.start..=g.end {
-                        let ov = overlaps[k - g.start];
-                        if ov == 0 {
+                        let ch = if i > 0 { overlaps[k - g.start] } else { 0 };
+                        let cw = if k == g.start && !first_col { ovw0 } else { 0 };
+                        if ch == 0 && cw == 0 {
                             continue;
                         }
                         let s = &self.stages[k].shape;
-                        let iw = if k == g.start {
-                            input_span(s, &spans[0]).w_len()
+                        let (iw, ih) = if k == g.start {
+                            let sp = input_span(s, &spans[0]);
+                            (sp.w_len(), sp.h_len())
                         } else {
-                            spans[k - g.start - 1].w_len()
+                            let sp = &spans[k - g.start - 1];
+                            (sp.w_len(), sp.h_len())
                         };
-                        words[k] += tn.len * s.c_i * iw * ov;
+                        // carried L-shape: `ch` full-width rows plus `cw`
+                        // full-height columns, minus the corner they share
+                        words[k] +=
+                            tn.len * s.c_i * (iw * ch + cw * ih - cw * ch);
                     }
                 }
             }
@@ -660,9 +706,10 @@ pub(crate) fn fit_pass_group_tile(
     b: usize,
     mem: f64,
     halo: bool,
+    halo_w: bool,
 ) -> Option<(u64, u64, u64)> {
     match pass {
-        NetPass::Forward => fit_group_tile(stages, a, b, mem, halo),
+        NetPass::Forward => fit_group_tile(stages, a, b, mem, halo, halo_w),
         NetPass::Backward => fit_bwd_group_tile(stages, a, b, mem, halo),
         NetPass::Step => fit_step_group_tile(stages, a, b, mem),
     }
@@ -676,9 +723,10 @@ pub(crate) fn pass_group_traffic(
     stages: &[NetworkStage],
     g: &FuseGroup,
     halo: bool,
+    halo_w: bool,
 ) -> Traffic {
     match pass {
-        NetPass::Forward => fused_group_traffic(stages, g, halo),
+        NetPass::Forward => fused_group_traffic(stages, g, halo, halo_w),
         NetPass::Backward => bwd_group_traffic(stages, g, halo),
         NetPass::Step => step_group_traffic(stages, g),
     }
@@ -762,6 +810,23 @@ pub(crate) fn input_overlap_rows(stages: &[NetworkStage], a: usize, b: usize) ->
     out
 }
 
+/// The w-axis mirror of [`input_overlap_rows`]: the number of w-columns of
+/// stage `k`'s *input* that adjacent w-tile-columns of the group tail
+/// share. The executor's w-carry uses only the head entry (index 0) —
+/// interior boundaries are already traffic-free, so carrying their columns
+/// would spend per-h-position buffers for no main-memory savings.
+pub(crate) fn input_overlap_cols(stages: &[NetworkStage], a: usize, b: usize) -> Vec<u64> {
+    let mut out = vec![0u64; b - a + 1];
+    let (mut s, mut f) = (1u64, 1u64);
+    for k in (a..=b).rev() {
+        let sw = stages[k].shape.s_w;
+        f = sw * (f - 1) + stages[k].shape.w_f;
+        s *= sw;
+        out[k - a] = f - s;
+    }
+    out
+}
+
 /// The (batch, wO) tile columns of a fused group's last stage, each with
 /// the ordered h-blocks its sliding-window sweep iterates (h innermost).
 /// The executor and the analytic traffic model walk these identically,
@@ -789,7 +854,12 @@ pub(crate) fn group_tile_columns(
 /// packed panel, the output patch and the packed filter panel are live
 /// simultaneously; patches of other stages are recycled. With `halo` the
 /// per-stage sliding-window carry buffers — which persist across the
-/// whole h-sweep — are added on top of the peak.
+/// whole h-sweep — are added on top of the peak. With `halo_w` the
+/// head-level w-carry buffers are added too: one per h-block position of
+/// the column sweep (they all persist while a batch block's columns run),
+/// each holding the head overlap columns at a full tile's patch height —
+/// a sound overestimate for the sweep's ragged edge tiles, which is all a
+/// fit rule needs.
 pub(crate) fn group_footprint(
     stages: &[NetworkStage],
     a: usize,
@@ -798,6 +868,7 @@ pub(crate) fn group_footprint(
     bwo: u64,
     bho: u64,
     halo: bool,
+    halo_w: bool,
 ) -> f64 {
     let overlaps = input_overlap_rows(stages, a, b);
     let mut peak: f64 = 0.0;
@@ -819,6 +890,13 @@ pub(crate) fn group_footprint(
             carry += st.precision.p_i
                 * (bn * s.c_i * iw * overlaps[k - a].min(ih)) as f64;
         }
+        if halo_w && k == a {
+            let ovw0 = input_overlap_cols(stages, a, b)[0];
+            let h_o = stages[b].shape.h_o.max(1);
+            let n_th = (h_o + bho - 1) / bho;
+            carry += st.precision.p_i
+                * (bn * s.c_i * ovw0.min(iw) * ih * n_th) as f64;
+        }
         ow = iw;
         oh = ih;
     }
@@ -835,12 +913,13 @@ pub(crate) fn fit_group_tile(
     b: usize,
     mem: f64,
     halo: bool,
+    halo_w: bool,
 ) -> Option<(u64, u64, u64)> {
     let last = &stages[b].shape;
     let (mut bn, mut bwo, mut bho) =
         (last.n.max(1), last.w_o.max(1), last.h_o.max(1));
     loop {
-        if group_footprint(stages, a, b, bn, bwo, bho, halo) <= mem {
+        if group_footprint(stages, a, b, bn, bwo, bho, halo, halo_w) <= mem {
             return Some((bn, bwo, bho));
         }
         if bn > 1 {
@@ -858,25 +937,40 @@ pub(crate) fn fit_group_tile(
 /// Add one fused group's analytic per-stage traffic into `t` (indexed by
 /// absolute stage number). Charges: head stage reads its halo'd image
 /// patch per tile — only the fresh rows for non-first tiles of a column
-/// when the sliding-window cache is on; every stage reads its full filter
-/// per tile; the tail stage writes its output tile. Interior boundaries
-/// charge nothing — the invariant the property tests pin down.
+/// when the sliding-window cache is on, and with the w-carry additionally
+/// only the fresh columns for every column after a batch block's first
+/// (the fresh region is the rectangle both carries leave uncovered);
+/// every stage reads its full filter per tile; the tail stage writes its
+/// output tile. Interior boundaries charge nothing — the invariant the
+/// property tests pin down.
 pub(crate) fn charge_fused_group(
     stages: &[NetworkStage],
     g: &FuseGroup,
     halo: bool,
+    halo_w: bool,
     t: &mut [Traffic],
 ) {
     let head = &stages[g.start].shape;
     let tail = &stages[g.end].shape;
+    // (batch-block start, head in-w1) of the previous tile column — the
+    // w-carry only chains columns of the same batch block
+    let mut prev_col: Option<(u64, u64)> = None;
     for (tn, tw, hs) in group_tile_columns(stages, g) {
+        let prev_in_w1 = match prev_col {
+            Some((n0, w1)) if halo_w && n0 == tn.start => Some(w1),
+            _ => None,
+        };
         let mut prev_in_h1: Option<u64> = None;
+        let mut col_in_w1: Option<u64> = None;
         for th in hs {
             let spans = group_spans(stages, g.start, g.end, tw, th);
             let in_sp = input_span(head, &spans[0]);
             let fresh_h0 = prev_in_h1.map_or(in_sp.h0, |p| p.max(in_sp.h0));
-            t[g.start].input_words +=
-                tn.len * head.c_i * in_sp.w_len() * (in_sp.h1 - fresh_h0);
+            let fresh_w0 = prev_in_w1.map_or(in_sp.w0, |p| p.max(in_sp.w0));
+            t[g.start].input_words += tn.len
+                * head.c_i
+                * (in_sp.w1 - fresh_w0)
+                * (in_sp.h1 - fresh_h0);
             for k in g.start..=g.end {
                 t[k].filter_words += stages[k].shape.filter_size();
             }
@@ -884,6 +978,10 @@ pub(crate) fn charge_fused_group(
             if halo {
                 prev_in_h1 = Some(in_sp.h1);
             }
+            col_in_w1 = Some(in_sp.w1);
+        }
+        if let Some(w1) = col_in_w1 {
+            prev_col = Some((tn.start, w1));
         }
     }
 }
@@ -893,9 +991,10 @@ pub(crate) fn fused_group_traffic(
     stages: &[NetworkStage],
     g: &FuseGroup,
     halo: bool,
+    halo_w: bool,
 ) -> Traffic {
     let mut t = vec![Traffic::default(); stages.len()];
-    charge_fused_group(stages, g, halo, &mut t);
+    charge_fused_group(stages, g, halo, halo_w, &mut t);
     Traffic::sum(&t)
 }
 
@@ -1388,8 +1487,8 @@ mod tests {
         // a budget below any two-stage working set must split every
         // boundary; every group then runs the plain LP-tiled path
         let stages = tiny(4);
-        let two_stage_floor = group_footprint(&stages, 0, 1, 1, 1, 1, true)
-            .min(group_footprint(&stages, 1, 2, 1, 1, 1, true));
+        let two_stage_floor = group_footprint(&stages, 0, 1, 1, 1, 1, true, false)
+            .min(group_footprint(&stages, 1, 2, 1, 1, 1, true, false));
         let cache = TilePlanCache::new();
         let plan = FusePlan::new(&stages, two_stage_floor - 1.0, &cache);
         assert_eq!(plan.groups.len(), 3, "groups {:?}", plan.groups);
@@ -1399,29 +1498,44 @@ mod tests {
     #[test]
     fn footprint_grows_with_tile_and_group() {
         let stages = tiny(2);
-        let small = group_footprint(&stages, 1, 1, 1, 2, 2, true);
-        let wider = group_footprint(&stages, 1, 1, 1, 4, 4, true);
+        let small = group_footprint(&stages, 1, 1, 1, 2, 2, true, false);
+        let wider = group_footprint(&stages, 1, 1, 1, 4, 4, true, false);
         assert!(wider > small);
-        let deeper = group_footprint(&stages, 0, 2, 1, 2, 2, true);
-        let tail_only = group_footprint(&stages, 2, 2, 1, 2, 2, true);
+        let deeper = group_footprint(&stages, 0, 2, 1, 2, 2, true, false);
+        let tail_only = group_footprint(&stages, 2, 2, 1, 2, 2, true, false);
         assert!(deeper >= tail_only);
-        // the halo carries only add footprint
+        // the halo carries only add footprint, the w-carry on top of that
         assert!(
-            group_footprint(&stages, 0, 2, 1, 2, 2, true)
-                >= group_footprint(&stages, 0, 2, 1, 2, 2, false)
+            group_footprint(&stages, 0, 2, 1, 2, 2, true, false)
+                >= group_footprint(&stages, 0, 2, 1, 2, 2, false, false)
+        );
+        assert!(
+            group_footprint(&stages, 0, 2, 1, 2, 2, true, true)
+                > group_footprint(&stages, 0, 2, 1, 2, 2, true, false)
         );
     }
 
     #[test]
     fn fit_group_tile_respects_budget() {
         let stages = tiny(4);
-        let (bn, bwo, bho) =
-            fit_group_tile(&stages, 0, 2, 4096.0, true).expect("some tile fits");
-        assert!(group_footprint(&stages, 0, 2, bn, bwo, bho, true) <= 4096.0);
+        let (bn, bwo, bho) = fit_group_tile(&stages, 0, 2, 4096.0, true, false)
+            .expect("some tile fits");
+        assert!(
+            group_footprint(&stages, 0, 2, bn, bwo, bho, true, false) <= 4096.0
+        );
         let last = &stages[2].shape;
         assert!(bn <= last.n && bwo <= last.w_o && bho <= last.h_o);
         // absurdly small budgets cannot host even a unit tile
-        assert!(fit_group_tile(&stages, 0, 2, 8.0, true).is_none());
+        assert!(fit_group_tile(&stages, 0, 2, 8.0, true, false).is_none());
+        // the w-carry buffers tighten the fit but never past the budget
+        if let Some((bn, bwo, bho)) =
+            fit_group_tile(&stages, 0, 2, 4096.0, true, true)
+        {
+            assert!(
+                group_footprint(&stages, 0, 2, bn, bwo, bho, true, true)
+                    <= 4096.0
+            );
+        }
     }
 
     #[test]
@@ -1452,11 +1566,64 @@ mod tests {
         // head input traffic, identical filter/output traffic
         let stages = tiny(4);
         let g = FuseGroup { start: 0, end: 2, b_n: 4, b_wo: 4, b_ho: 1 };
-        let with = fused_group_traffic(&stages, &g, true);
-        let without = fused_group_traffic(&stages, &g, false);
+        let with = fused_group_traffic(&stages, &g, true, false);
+        let without = fused_group_traffic(&stages, &g, false, false);
         assert!(with.input_words < without.input_words);
         assert_eq!(with.filter_words, without.filter_words);
         assert_eq!(with.output_words, without.output_words);
+    }
+
+    #[test]
+    fn overlap_cols_mirror_rows_on_square_stencils() {
+        // tiny_resnet is square in filters and strides, so the w overlap
+        // chain must equal the h one
+        let stages = tiny(2);
+        assert_eq!(
+            input_overlap_cols(&stages, 0, 2),
+            input_overlap_rows(&stages, 0, 2)
+        );
+        assert_eq!(input_overlap_cols(&stages, 0, 0), vec![2]);
+    }
+
+    #[test]
+    fn w_carry_discounts_head_columns_and_serves_the_rest() {
+        // narrow w-columns and h-tiles together: the w-carry must charge
+        // strictly less head input than the h-carry alone, touch nothing
+        // else, and the L-shaped serve accounting must complement the
+        // charge exactly (charged fresh + served carry == uncached charge
+        // at the head, tile by tile)
+        let stages = tiny(4);
+        let g = FuseGroup { start: 0, end: 2, b_n: 4, b_wo: 1, b_ho: 1 };
+        let h_only = fused_group_traffic(&stages, &g, true, false);
+        let both = fused_group_traffic(&stages, &g, true, true);
+        assert!(both.input_words < h_only.input_words);
+        assert_eq!(both.filter_words, h_only.filter_words);
+        assert_eq!(both.output_words, h_only.output_words);
+        let mk = |halo_w| FusePlan {
+            pass: NetPass::Forward,
+            stages: stages.clone(),
+            mem_words: 0.0,
+            stage_plans: Vec::new(),
+            dinput_plans: Vec::new(),
+            dfilter_plans: Vec::new(),
+            groups: vec![g],
+            exec: FusedExec::Reference,
+            halo_cache: true,
+            halo_w,
+        };
+        let mut none = vec![Traffic::default(); stages.len()];
+        charge_fused_group(&stages, &g, false, false, &mut none);
+        for halo_w in [false, true] {
+            let mut t = vec![Traffic::default(); stages.len()];
+            charge_fused_group(&stages, &g, true, halo_w, &mut t);
+            let serve = mk(halo_w).expected_halo_words();
+            assert_eq!(
+                t[0].input_words + serve[0],
+                none[0].input_words,
+                "head charge + serve must be carry-invariant (halo_w {halo_w})"
+            );
+            assert!(serve[0] > 0);
+        }
     }
 
     #[test]
@@ -1465,8 +1632,8 @@ mod tests {
         let cheap = [NetworkStage { shape, precision: Precision::gemmini() }];
         let wide = [NetworkStage { shape, precision: Precision::paper_mixed() }];
         assert!(
-            group_footprint(&cheap, 0, 0, 2, 6, 6, true)
-                < group_footprint(&wide, 0, 0, 2, 6, 6, true)
+            group_footprint(&cheap, 0, 0, 2, 6, 6, true, false)
+                < group_footprint(&wide, 0, 0, 2, 6, 6, true, false)
         );
     }
 
@@ -1653,6 +1820,7 @@ mod tests {
             groups: vec![FuseGroup { start: 0, end: 2, b_n: 1, b_wo: 1, b_ho: 1 }],
             exec: FusedExec::Reference,
             halo_cache: false,
+            halo_w: false,
         };
         let t = [
             Traffic { input_words: 1, filter_words: 100, output_words: 10 },

@@ -26,7 +26,14 @@
 //!   exactly.
 //! * [`im2col`] — the explicit patch-matrix + GEMM baseline the engine is
 //!   benchmarked against.
-//! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled)
+//! * [`winograd`] — the tiled Winograd F(2,3) transform-domain kernel:
+//!   polyphase/chunk normalization to unit-stride ≤3-tap sub-convs, a
+//!   pre-transformed filter cache, budget-sized tile blocks, and its own
+//!   exact analytic traffic model ([`expected_winograd_traffic`]);
+//!   validated against the naive oracle via a documented ULP-scaled
+//!   tolerance ([`winograd_tolerance`]) since transforms reassociate.
+//! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled /
+//!   winograd)
 //!   and per-network mode selection (fused-packed / fused-reference /
 //!   materialized), heuristic or measure-once, with a JSON sidecar for
 //!   warm-starting selection across process restarts.
@@ -44,6 +51,7 @@ pub mod im2col;
 mod pack;
 pub mod plan;
 pub mod tiles;
+pub mod winograd;
 
 pub use crate::conv::ConvPass;
 pub use autotune::{Autotuner, KernelKind, NetKernelKind};
@@ -63,3 +71,7 @@ pub use gemm::{axpy, axpy_scalar};
 pub use im2col::conv_im2col;
 pub use plan::{TilePlan, TilePlanCache, DEFAULT_TILE_MEM_WORDS};
 pub use tiles::{output_tiles, reduction_tiles, Blk, OutTile, RedTile};
+pub use winograd::{
+    conv_winograd, conv_winograd_counted, conv_winograd_parallel,
+    expected_winograd_traffic, winograd_tolerance, WinoPlan,
+};

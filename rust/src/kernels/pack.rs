@@ -21,6 +21,14 @@ use super::tiles::{Blk, OutTile, RedTile};
 /// Pack the input working set of `(ot, rt)` into `buf` (cleared and
 /// resized — callers reuse one buffer across the reduction loop to avoid
 /// per-tile allocation). Returns the extended patch dims `(ew, eh)`.
+///
+/// The innermost `ah` sweep walks image rows at stride `σh` within one
+/// column, so it is widened: at unit stride the whole extended column is
+/// one contiguous `copy_from_slice` (h is the contiguous axis), and at
+/// larger strides an 8-lane unrolled gather from the column's row slice —
+/// the auto-vectorizer sees independent lanes instead of a carried
+/// bounds check. Out-of-image tails are bulk `fill(0.0)`, so the packed
+/// words are bitwise identical to the scalar nest (the test oracle).
 pub(crate) fn pack_input(
     x: &Tensor4,
     sw: usize,
@@ -55,21 +63,48 @@ pub(crate) fn pack_input(
                 let r6a = rt.rw.start as usize + r6;
                 for r7 in 0..brh {
                     let r7a = rt.rh.start as usize + r7;
+                    let row0 = sh * b0 + r7a;
                     for aw in 0..ew {
                         let col = sw * (a0 + aw) + r6a;
-                        for ah in 0..eh {
-                            let row = sh * (b0 + ah) + r7a;
-                            // corners of the (aw, ah) rectangle can exceed
-                            // the image when they correspond only to
-                            // invalid split coordinates; the microkernel
-                            // never reads those zeros
-                            buf[k] = if col < wi && row < hi {
-                                x.at(na, ca, col, row)
-                            } else {
-                                0.0
-                            };
-                            k += 1;
+                        let dst = &mut buf[k..k + eh];
+                        k += eh;
+                        // corners of the (aw, ah) rectangle can exceed
+                        // the image when they correspond only to
+                        // invalid split coordinates; the microkernel
+                        // never reads those zeros
+                        if col >= wi || row0 >= hi {
+                            dst.fill(0.0);
+                            continue;
                         }
+                        // rows in range: row0 + σh·ah < hi
+                        let valid = ((hi - 1 - row0) / sh + 1).min(eh);
+                        if sh == 1 {
+                            let src = x.idx(na, ca, col, row0);
+                            dst[..valid].copy_from_slice(
+                                &x.data[src..src + valid],
+                            );
+                        } else {
+                            let src = x.idx(na, ca, col, 0);
+                            let rows = &x.data[src..src + hi];
+                            let mut ah = 0;
+                            while ah + 8 <= valid {
+                                let r = row0 + sh * ah;
+                                dst[ah] = rows[r];
+                                dst[ah + 1] = rows[r + sh];
+                                dst[ah + 2] = rows[r + 2 * sh];
+                                dst[ah + 3] = rows[r + 3 * sh];
+                                dst[ah + 4] = rows[r + 4 * sh];
+                                dst[ah + 5] = rows[r + 5 * sh];
+                                dst[ah + 6] = rows[r + 6 * sh];
+                                dst[ah + 7] = rows[r + 7 * sh];
+                                ah += 8;
+                            }
+                            while ah < valid {
+                                dst[ah] = rows[row0 + sh * ah];
+                                ah += 1;
+                            }
+                        }
+                        dst[valid..].fill(0.0);
                     }
                 }
             }
@@ -81,6 +116,13 @@ pub(crate) fn pack_input(
 /// Pack the filter working set of `(ot, rt)` into `buf` (cleared and
 /// resized). Returns the number of words actually read from the filter
 /// tensor (invalid split coordinates are zero-filled, not read).
+///
+/// The innermost `co` sweep gathers one tap across the tile's cO block —
+/// a fixed-stride walk (`wF·hF` words between channels), widened into an
+/// 8-lane unrolled gather so the packed axpy panels assemble without a
+/// per-element index recomputation. Bitwise identical to the scalar nest
+/// (the test oracle); invalid split coordinates stay zero-filled from the
+/// `resize` and are never read.
 pub(crate) fn pack_filter(
     w: &Tensor4,
     sw: usize,
@@ -99,6 +141,10 @@ pub(crate) fn pack_filter(
     let brh = rt.rh.len as usize;
     buf.clear();
     buf.resize(bci * bqw * bqh * brw * brh * bco, 0.0);
+    let co0 = ot.co.start as usize;
+    // stride between adjacent cO channels at a fixed tap, from the real
+    // tensor dims (the spec admits minimal tensors)
+    let cstep = w.dims[2] * w.dims[3];
     let mut words = 0u64;
     let mut k = 0;
     for ci in 0..bci {
@@ -113,9 +159,25 @@ pub(crate) fn pack_filter(
                         let i7 = i7b + rt.rh.start as usize + r7;
                         if i6 < wf && i7 < hf {
                             words += bco as u64;
-                            for co in 0..bco {
-                                buf[k + co] =
-                                    w.at(ca, ot.co.start as usize + co, i6, i7);
+                            let base = w.idx(ca, co0, i6, i7);
+                            let src = &w.data[base..];
+                            let dst = &mut buf[k..k + bco];
+                            let mut co = 0;
+                            while co + 8 <= bco {
+                                let s0 = co * cstep;
+                                dst[co] = src[s0];
+                                dst[co + 1] = src[s0 + cstep];
+                                dst[co + 2] = src[s0 + 2 * cstep];
+                                dst[co + 3] = src[s0 + 3 * cstep];
+                                dst[co + 4] = src[s0 + 4 * cstep];
+                                dst[co + 5] = src[s0 + 5 * cstep];
+                                dst[co + 6] = src[s0 + 6 * cstep];
+                                dst[co + 7] = src[s0 + 7 * cstep];
+                                co += 8;
+                            }
+                            while co < bco {
+                                dst[co] = src[co * cstep];
+                                co += 1;
                             }
                         }
                         k += bco;
@@ -626,5 +688,227 @@ mod tests {
         assert_eq!(buf[7], 0.0);
         // three valid coords x bco=2 words read
         assert_eq!(words, 6);
+    }
+
+    /// The pre-widening scalar input-pack nest, kept verbatim as the
+    /// bitwise oracle for the widened copy/gather paths.
+    fn pack_input_scalar(
+        x: &Tensor4,
+        sw: usize,
+        sh: usize,
+        ot: &OutTile,
+        rt: &RedTile,
+        buf: &mut Vec<f32>,
+    ) -> (usize, usize) {
+        let bn = ot.n.len as usize;
+        let bci = rt.ci.len as usize;
+        let brw = rt.rw.len as usize;
+        let brh = rt.rh.len as usize;
+        let ew = ot.wo.len as usize + rt.qw.len as usize - 1;
+        let eh = ot.ho.len as usize + rt.qh.len as usize - 1;
+        let (wi, hi) = (x.dims[2], x.dims[3]);
+        let a0 = ot.wo.start as usize + rt.qw.start as usize;
+        let b0 = ot.ho.start as usize + rt.qh.start as usize;
+        buf.clear();
+        buf.resize(bn * bci * brw * brh * ew * eh, 0.0);
+        let mut k = 0;
+        for n in 0..bn {
+            let na = ot.n.start as usize + n;
+            for ci in 0..bci {
+                let ca = rt.ci.start as usize + ci;
+                for r6 in 0..brw {
+                    let r6a = rt.rw.start as usize + r6;
+                    for r7 in 0..brh {
+                        let r7a = rt.rh.start as usize + r7;
+                        for aw in 0..ew {
+                            let col = sw * (a0 + aw) + r6a;
+                            for ah in 0..eh {
+                                let row = sh * (b0 + ah) + r7a;
+                                buf[k] = if col < wi && row < hi {
+                                    x.at(na, ca, col, row)
+                                } else {
+                                    0.0
+                                };
+                                k += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (ew, eh)
+    }
+
+    /// The pre-widening scalar filter-pack nest, kept verbatim as the
+    /// bitwise oracle for the widened cO gather.
+    fn pack_filter_scalar(
+        w: &Tensor4,
+        sw: usize,
+        sh: usize,
+        wf: usize,
+        hf: usize,
+        ot: &OutTile,
+        rt: &RedTile,
+        buf: &mut Vec<f32>,
+    ) -> u64 {
+        let bci = rt.ci.len as usize;
+        let bco = ot.co.len as usize;
+        let bqw = rt.qw.len as usize;
+        let bqh = rt.qh.len as usize;
+        let brw = rt.rw.len as usize;
+        let brh = rt.rh.len as usize;
+        buf.clear();
+        buf.resize(bci * bqw * bqh * brw * brh * bco, 0.0);
+        let mut words = 0u64;
+        let mut k = 0;
+        for ci in 0..bci {
+            let ca = rt.ci.start as usize + ci;
+            for q6 in 0..bqw {
+                let i6b = sw * (rt.qw.start as usize + q6);
+                for q7 in 0..bqh {
+                    let i7b = sh * (rt.qh.start as usize + q7);
+                    for r6 in 0..brw {
+                        let i6 = i6b + rt.rw.start as usize + r6;
+                        for r7 in 0..brh {
+                            let i7 = i7b + rt.rh.start as usize + r7;
+                            if i6 < wf && i7 < hf {
+                                words += bco as u64;
+                                for co in 0..bco {
+                                    buf[k + co] = w.at(
+                                        ca,
+                                        ot.co.start as usize + co,
+                                        i6,
+                                        i7,
+                                    );
+                                }
+                            }
+                            k += bco;
+                        }
+                    }
+                }
+            }
+        }
+        words
+    }
+
+    /// The widened input pack is bitwise identical to the scalar nest on
+    /// unit-stride contiguous copies, strided 8-lane gathers, ragged
+    /// out-of-image row tails, and fully out-of-image columns.
+    #[test]
+    fn widened_input_pack_matches_scalar_oracle_bitwise() {
+        let x = Tensor4::randn([2, 3, 9, 11], 42);
+        let cases: Vec<(usize, usize, OutTile, RedTile)> = vec![
+            // unit stride, all in range: pure contiguous copies
+            (
+                1,
+                1,
+                OutTile { n: blk(0, 2), co: blk(0, 1), wo: blk(1, 3), ho: blk(2, 4) },
+                RedTile { ci: blk(0, 3), qw: blk(0, 3), qh: blk(0, 3), rw: blk(0, 1), rh: blk(0, 1) },
+            ),
+            // unit stride with ragged row tail (eh = 10 runs past hi at
+            // the bottom rows) and trailing out-of-image columns
+            (
+                1,
+                1,
+                OutTile { n: blk(0, 1), co: blk(0, 1), wo: blk(5, 3), ho: blk(3, 8) },
+                RedTile { ci: blk(1, 2), qw: blk(0, 3), qh: blk(0, 3), rw: blk(0, 1), rh: blk(0, 1) },
+            ),
+            // stride 2 with split residues: the 8-lane gather path,
+            // valid prefix shorter than eh
+            (
+                2,
+                2,
+                OutTile { n: blk(0, 2), co: blk(0, 1), wo: blk(0, 3), ho: blk(0, 4) },
+                RedTile { ci: blk(0, 2), qw: blk(0, 2), qh: blk(0, 2), rw: blk(0, 2), rh: blk(0, 2) },
+            ),
+            // stride 3: gather remainder loop only (valid < 8)
+            (
+                3,
+                3,
+                OutTile { n: blk(1, 1), co: blk(0, 1), wo: blk(0, 2), ho: blk(0, 3) },
+                RedTile { ci: blk(0, 1), qw: blk(0, 1), qh: blk(0, 1), rw: blk(0, 3), rh: blk(0, 3) },
+            ),
+        ];
+        for (i, (sw, sh, ot, rt)) in cases.into_iter().enumerate() {
+            let (mut wide, mut scalar) = (Vec::new(), Vec::new());
+            let dw = pack_input(&x, sw, sh, &ot, &rt, &mut wide);
+            let ds = pack_input_scalar(&x, sw, sh, &ot, &rt, &mut scalar);
+            assert_eq!(dw, ds, "case {i}: dims");
+            assert_eq!(wide.len(), scalar.len(), "case {i}: len");
+            for (j, (a, b)) in wide.iter().zip(&scalar).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {i}: word {j} diverged"
+                );
+            }
+        }
+
+        // tall image so a stride-2 column holds >= 8 in-range rows: the
+        // full 8-lane gather body runs, not just the remainder loop
+        let tall = Tensor4::randn([1, 2, 7, 20], 44);
+        let ot = OutTile { n: blk(0, 1), co: blk(0, 1), wo: blk(0, 3), ho: blk(0, 8) };
+        let rt = RedTile {
+            ci: blk(0, 2),
+            qw: blk(0, 2),
+            qh: blk(0, 2),
+            rw: blk(0, 2),
+            rh: blk(0, 2),
+        };
+        let (mut wide, mut scalar) = (Vec::new(), Vec::new());
+        let dw = pack_input(&tall, 2, 2, &ot, &rt, &mut wide);
+        let ds = pack_input_scalar(&tall, 2, 2, &ot, &rt, &mut scalar);
+        assert_eq!(dw, ds, "tall: dims");
+        assert!(dw.1 >= 8, "tall case must exercise the 8-lane body");
+        assert_eq!(wide.len(), scalar.len(), "tall: len");
+        for (j, (a, b)) in wide.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "tall: word {j} diverged");
+        }
+    }
+
+    /// The widened filter pack (8-lane strided cO gather) is bitwise
+    /// identical to the scalar nest, including zero-filled invalid split
+    /// coordinates and the sub-8-lane remainder.
+    #[test]
+    fn widened_filter_pack_matches_scalar_oracle_bitwise() {
+        // cO = 11: one full 8-lane pass plus a 3-lane remainder
+        let w = Tensor4::randn([2, 11, 3, 3], 43);
+        let cases: Vec<(usize, usize, OutTile, RedTile)> = vec![
+            // unit stride, full 3x3 split, whole cO block
+            (
+                1,
+                1,
+                OutTile { n: blk(0, 1), co: blk(0, 11), wo: blk(0, 1), ho: blk(0, 1) },
+                RedTile { ci: blk(0, 2), qw: blk(0, 3), qh: blk(0, 3), rw: blk(0, 1), rh: blk(0, 1) },
+            ),
+            // stride 2: invalid split coords interleave with valid ones
+            (
+                2,
+                2,
+                OutTile { n: blk(0, 1), co: blk(2, 9), wo: blk(0, 1), ho: blk(0, 1) },
+                RedTile { ci: blk(1, 1), qw: blk(0, 2), qh: blk(0, 2), rw: blk(0, 2), rh: blk(0, 2) },
+            ),
+            // small cO block: remainder loop only
+            (
+                1,
+                1,
+                OutTile { n: blk(0, 1), co: blk(4, 3), wo: blk(0, 1), ho: blk(0, 1) },
+                RedTile { ci: blk(0, 2), qw: blk(0, 3), qh: blk(0, 3), rw: blk(0, 1), rh: blk(0, 1) },
+            ),
+        ];
+        for (i, (sw, sh, ot, rt)) in cases.into_iter().enumerate() {
+            let (mut wide, mut scalar) = (Vec::new(), Vec::new());
+            let ww = pack_filter(&w, sw, sh, 3, 3, &ot, &rt, &mut wide);
+            let ws = pack_filter_scalar(&w, sw, sh, 3, 3, &ot, &rt, &mut scalar);
+            assert_eq!(ww, ws, "case {i}: words read");
+            assert_eq!(wide.len(), scalar.len(), "case {i}: len");
+            for (j, (a, b)) in wide.iter().zip(&scalar).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {i}: word {j} diverged"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,809 @@
+//! Tiled Winograd F(2,3) execution path: the transform-domain algorithm
+//! `commvol::seq::winograd_volume` models analytically, actually running.
+//!
+//! The kernel computes each 2×2 output tile from a 4×4 input tile through
+//! the classic F(2,3) transforms (nested per axis for F(2×2, 3×3)):
+//!
+//! ```text
+//! U = G g Gᵀ      (filter transform, 3×3 -> 4×4, done once per filter)
+//! V = Bᵀ d B      (input transform, one 4×4 gather per tile per channel)
+//! Y = Aᵀ (U∘V) A  (elementwise transform-domain MAC, then 4×4 -> 2×2)
+//! ```
+//!
+//! Arbitrary (stride, filter) layers are normalized to unit-stride ≤3-tap
+//! sub-convolutions in two steps, mirroring the analytic model's polyphase
+//! decomposition (`commvol/seq.rs`):
+//!
+//! 1. **Polyphase**: split `i6 = σw·u + rw` (likewise `i7`), so the layer
+//!    is a sum over σw·σh residues of *unit-stride* convolutions of the
+//!    decimated image `x_r[a][b] = x[σw·a + rw][σh·b + rh]` with the
+//!    decimated filter `g_r[u][v] = g[rw + σw·u][rh + σh·v]`. Residues
+//!    with no real taps are skipped outright (the analytic model's
+//!    `.max(1)` floor is a model convention, not an execution path).
+//! 2. **Chunking**: each decimated filter axis is cut into ≤3-tap chunks
+//!    at offsets `q0 ∈ {0, 3, …}`; a chunk is a unit-stride 3×3 conv of
+//!    the image shifted by `q0`, its missing taps zero-padded.
+//!
+//! Every real filter tap lands in exactly one (residue, chunk), so the
+//! filter transform reads `|F|` words exactly. Out-of-range 4×4 gather
+//! positions are zero-filled and **not charged**: in exact arithmetic they
+//! multiply only zero taps or feed the ragged 2×2 outputs the scatter
+//! discards, so zero-fill is exact (floating-point rounding still differs
+//! from the naive nest — hence the tolerance oracle below, not `==`).
+//!
+//! **Traffic model** ([`expected_winograd_traffic`]): the counters mirror
+//! the executor loop for loop, so measured == expected *exactly* like the
+//! tiled engine — `filter = |F|` (U cache built once), `output = |O|`
+//! (each 2×2 accumulator stays resident across all sub-convolutions and
+//! scatters its valid elements once), `input = N·cI·Σ_sub Σ_tile
+//! in-range(4×4 gather)` (overlapping gathers are charged honestly; the
+//! transform-domain working set is what buys the ~(4·9)/16 input reuse).
+//! The model is blocking-independent: the tile-block size only shapes
+//! locality, never words.
+//!
+//! **Tolerance oracle** ([`winograd_tolerance`]): transforms reassociate
+//! the reduction, so validation vs [`conv7nl_naive`] uses a ULP-scaled
+//! per-element bound. The 1-D transform rows have absolute sums ≤ 2 (Bᵀ),
+//! ≤ 1.5 (G) and ≤ 3 (Aᵀ); nesting squares them, so one tile's
+//! transform-domain magnitudes grow by at most 4 · 2.25 · 9 = 81 over the
+//! plain products. With `R = cI·wF·hF` accumulated products per output
+//! (plus a fixed 32-term slack for the 16-point transform sums), the
+//! per-element error is bounded by `81 · (R + 32) · ε · max|x| · max|g|`
+//! — see DESIGN.md §11.
+//!
+//! Parallel sweeps fan tile *blocks* out over the shared [`ThreadPool`];
+//! a tile's value never depends on any other tile, and blocks scatter to
+//! disjoint output regions, so parallel output is bitwise identical to
+//! serial.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::conv::{assert_conv_operands, ConvShape, Precision, Tensor4};
+use crate::obs::{self, jf, js, ju};
+use crate::util::ceil_div;
+use crate::util::threadpool::ThreadPool;
+
+use super::exec::{Traffic, TrafficCounters};
+use super::gemm::axpy;
+
+/// Bᵀ of F(2,3): 4×4 input transform.
+const BT: [[f32; 4]; 4] = [
+    [1.0, 0.0, -1.0, 0.0],
+    [0.0, 1.0, 1.0, 0.0],
+    [0.0, -1.0, 1.0, 0.0],
+    [0.0, 1.0, 0.0, -1.0],
+];
+
+/// G of F(2,3): 4×3 filter transform.
+const G: [[f32; 3]; 4] = [
+    [1.0, 0.0, 0.0],
+    [0.5, 0.5, 0.5],
+    [0.5, -0.5, 0.5],
+    [0.0, 0.0, 1.0],
+];
+
+/// Aᵀ of F(2,3): 2×4 output transform.
+const AT: [[f32; 4]; 2] = [
+    [1.0, 1.0, 1.0, 0.0],
+    [0.0, 1.0, -1.0, -1.0],
+];
+
+/// One unit-stride ≤3-tap sub-convolution: polyphase residue `(rw, rh)`
+/// plus chunk offset `(qw, qh)` into the decimated filter, with `cw × ch`
+/// real taps (1..=3 each; the rest of the 3×3 tap block is zero-padded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SubConv {
+    pub rw: u64,
+    pub rh: u64,
+    pub qw: u64,
+    pub qh: u64,
+    pub cw: u64,
+    pub ch: u64,
+}
+
+/// The Winograd execution plan for one layer: the normalized sub-conv
+/// list plus an LP-style tile-block size fit to the memory budget (like
+/// [`super::plan::TilePlan`], the budget shapes residency, never words).
+#[derive(Debug, Clone)]
+pub struct WinoPlan {
+    pub shape: ConvShape,
+    pub precision: Precision,
+    pub mem_words: f64,
+    pub(crate) subs: Vec<SubConv>,
+    /// Tiles processed per resident block (≥ 1).
+    pub tile_block: usize,
+}
+
+impl WinoPlan {
+    pub fn new(shape: &ConvShape, precision: Precision, mem_words: f64) -> WinoPlan {
+        let subs = enumerate_subs(shape);
+        let tile_block = fit_tile_block(shape, subs.len(), precision, mem_words);
+        WinoPlan { shape: *shape, precision, mem_words, subs, tile_block }
+    }
+
+    /// 2-wide output tiles along wO.
+    pub fn tiles_w(&self) -> u64 {
+        ceil_div(self.shape.w_o, 2)
+    }
+
+    /// 2-tall output tiles along hO.
+    pub fn tiles_h(&self) -> u64 {
+        ceil_div(self.shape.h_o, 2)
+    }
+
+    /// Total 2×2 tiles across the batch.
+    pub fn total_tiles(&self) -> u64 {
+        self.shape.n * self.tiles_w() * self.tiles_h()
+    }
+
+    /// Number of unit-stride sub-convolutions the layer normalizes to.
+    pub fn sub_convs(&self) -> usize {
+        self.subs.len()
+    }
+}
+
+/// Enumerate the (residue, chunk) sub-convolutions in a fixed
+/// deterministic order: `rw`, `rh` ascending, then `qw`, `qh` by 3s.
+fn enumerate_subs(s: &ConvShape) -> Vec<SubConv> {
+    let mut subs = Vec::new();
+    for rw in 0..s.s_w.max(1) {
+        let fw = ceil_div(s.w_f.saturating_sub(rw), s.s_w.max(1));
+        if fw == 0 {
+            continue; // residue has no real taps along w
+        }
+        for rh in 0..s.s_h.max(1) {
+            let fh = ceil_div(s.h_f.saturating_sub(rh), s.s_h.max(1));
+            if fh == 0 {
+                continue;
+            }
+            let mut qw = 0;
+            while qw < fw {
+                let cw = (fw - qw).min(3);
+                let mut qh = 0;
+                while qh < fh {
+                    let ch = (fh - qh).min(3);
+                    subs.push(SubConv { rw, rh, qw, qh, cw, ch });
+                    qh += 3;
+                }
+                qw += 3;
+            }
+        }
+    }
+    subs
+}
+
+/// Fit the tile-block size to the memory budget: the pre-transformed
+/// filter cache stays resident for the whole sweep; each tile in a block
+/// then holds its 2×2 accumulator, its 16-point transform-domain panel
+/// row, and the V/d transform scratch.
+fn fit_tile_block(s: &ConvShape, n_subs: usize, p: Precision, m: f64) -> usize {
+    let co = s.c_o as f64;
+    // per-tile resident words: Yacc (4·cO) + M panel (16·cO) at output
+    // precision, V + d transform scratch (16 + 16) at input precision
+    let per_tile = p.p_o * 20.0 * co + p.p_i * 32.0;
+    let ucache = p.p_f * 16.0 * n_subs as f64 * s.c_i as f64 * co;
+    let avail = (m - ucache).max(per_tile);
+    let bt = (avail / per_tile).floor() as u64;
+    let cap = s.n * ceil_div(s.w_o, 2) * ceil_div(s.h_o, 2);
+    bt.max(1).min(cap.max(1)) as usize
+}
+
+/// `U = G g Gᵀ` for one 3×3 tap block, row-major `[i][j] -> 4i + j`.
+fn filter_transform(g: &[[f32; 3]; 3]) -> [f32; 16] {
+    // tmp = G g (4×3)
+    let mut tmp = [[0.0f32; 3]; 4];
+    for (i, gi) in G.iter().enumerate() {
+        for j in 0..3 {
+            tmp[i][j] = gi[0] * g[0][j] + gi[1] * g[1][j] + gi[2] * g[2][j];
+        }
+    }
+    // U = tmp Gᵀ: U[i][j] = Σ_k tmp[i][k] G[j][k]
+    let mut u = [0.0f32; 16];
+    for i in 0..4 {
+        for (j, gj) in G.iter().enumerate() {
+            u[4 * i + j] =
+                tmp[i][0] * gj[0] + tmp[i][1] * gj[1] + tmp[i][2] * gj[2];
+        }
+    }
+    u
+}
+
+/// `V = Bᵀ d B` for one 4×4 input tile, row-major.
+fn input_transform(d: &[f32; 16]) -> [f32; 16] {
+    // tmp = Bᵀ d (4×4)
+    let mut tmp = [0.0f32; 16];
+    for (i, bi) in BT.iter().enumerate() {
+        for j in 0..4 {
+            let mut acc = 0.0;
+            for (a, c) in bi.iter().enumerate() {
+                acc += c * d[4 * a + j];
+            }
+            tmp[4 * i + j] = acc;
+        }
+    }
+    // V = tmp B: V[i][j] = Σ_b tmp[i][b] B[b][j] = Σ_b tmp[i][b] Bᵀ[j][b]
+    let mut v = [0.0f32; 16];
+    for i in 0..4 {
+        for (j, bj) in BT.iter().enumerate() {
+            let mut acc = 0.0;
+            for (b, c) in bj.iter().enumerate() {
+                acc += tmp[4 * i + b] * c;
+            }
+            v[4 * i + j] = acc;
+        }
+    }
+    v
+}
+
+/// `Y = Aᵀ m A` for one 4×4 transform-domain tile, row-major 2×2 out.
+fn output_transform(m: &[f32; 16]) -> [f32; 4] {
+    // tmp = Aᵀ m (2×4)
+    let mut tmp = [0.0f32; 8];
+    for (i, ai) in AT.iter().enumerate() {
+        for j in 0..4 {
+            let mut acc = 0.0;
+            for (k, c) in ai.iter().enumerate() {
+                acc += c * m[4 * k + j];
+            }
+            tmp[4 * i + j] = acc;
+        }
+    }
+    let mut y = [0.0f32; 4];
+    for i in 0..2 {
+        for (j, aj) in AT.iter().enumerate() {
+            let mut acc = 0.0;
+            for (l, c) in aj.iter().enumerate() {
+                acc += tmp[4 * i + l] * c;
+            }
+            y[2 * i + j] = acc;
+        }
+    }
+    y
+}
+
+/// In-range element count of one tile's 4×4 gather — the analytic side of
+/// the input charge. Separable, and shared with the executor's gather so
+/// measured input words equal the model by construction.
+fn gather_in_range(s: &ConvShape, sc: &SubConv, tx: u64, ty: u64) -> u64 {
+    let (iw, ih) = (s.in_w(), s.in_h());
+    let cols = (0..4u64)
+        .filter(|a| s.s_w * (2 * tx + sc.qw + a) + sc.rw < iw)
+        .count() as u64;
+    let rows = (0..4u64)
+        .filter(|b| s.s_h * (2 * ty + sc.qh + b) + sc.rh < ih)
+        .count() as u64;
+    cols * rows
+}
+
+/// Gather one 4×4 decimated+shifted input tile for `(n, ci)`, zero-filling
+/// out-of-range positions, returning the in-range word count (the charge).
+#[inline]
+fn gather_tile(
+    x: &Tensor4,
+    n: usize,
+    ci: usize,
+    s: &ConvShape,
+    sc: &SubConv,
+    tx: u64,
+    ty: u64,
+    d: &mut [f32; 16],
+) -> u64 {
+    let (iw, ih) = (s.in_w(), s.in_h());
+    // charge by the model's paper-convention bounds; the actual read is
+    // additionally guarded by the tensor dims (`assert_conv_operands`
+    // admits minimally-sized inputs narrower than `in_w()` — positions
+    // past the minimal bound only feed discarded outputs, so zero is
+    // exact there)
+    let (xw, xh) = (x.dims[2] as u64, x.dims[3] as u64);
+    let mut inr = 0u64;
+    for a in 0..4u64 {
+        let col = s.s_w * (2 * tx + sc.qw + a) + sc.rw;
+        for b in 0..4u64 {
+            let row = s.s_h * (2 * ty + sc.qh + b) + sc.rh;
+            let charge = col < iw && row < ih;
+            inr += charge as u64;
+            d[(4 * a + b) as usize] = if charge && col < xw && row < xh {
+                x.at(n, ci, col as usize, row as usize)
+            } else {
+                0.0
+            };
+        }
+    }
+    inr
+}
+
+/// The analytic Winograd traffic model the counters match exactly: it
+/// walks the same (sub-conv × tile) grid the executor walks and charges
+/// the same words, independent of the tile-block size.
+pub fn expected_winograd_traffic(plan: &WinoPlan) -> Traffic {
+    let s = &plan.shape;
+    let (tw, th) = (plan.tiles_w(), plan.tiles_h());
+    let mut gathered = 0u64;
+    for sc in &plan.subs {
+        for tx in 0..tw {
+            for ty in 0..th {
+                gathered += gather_in_range(s, sc, tx, ty);
+            }
+        }
+    }
+    Traffic {
+        input_words: s.n * s.c_i * gathered,
+        filter_words: s.filter_size(),
+        output_words: s.output_size(),
+    }
+}
+
+/// Documented ULP-scaled per-element tolerance for winograd-vs-naive
+/// validation (see the module docs and DESIGN.md §11 for the derivation
+/// of the 81× transform growth and the 32-term transform slack).
+pub fn winograd_tolerance(x: &Tensor4, w: &Tensor4, s: &ConvShape) -> f32 {
+    let terms = (s.c_i * s.w_f * s.h_f) as f32 + 32.0;
+    let amax = x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let gmax = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    81.0 * terms * f32::EPSILON * amax * gmax
+}
+
+/// Build the pre-transformed filter cache: `U[sub][ci][k][co]` with the
+/// cO axis contiguous so the transform-domain MAC is one [`axpy`] per
+/// (ci, k, tile). Reads each real filter tap exactly once -> charges |F|.
+fn build_ucache(
+    w: &Tensor4,
+    plan: &WinoPlan,
+    counters: &TrafficCounters,
+) -> Vec<f32> {
+    let s = &plan.shape;
+    let (ci_n, co_n) = (s.c_i as usize, s.c_o as usize);
+    let mut cache = vec![0.0f32; plan.subs.len() * ci_n * 16 * co_n];
+    for (si, sc) in plan.subs.iter().enumerate() {
+        for ci in 0..ci_n {
+            for co in 0..co_n {
+                let mut g3 = [[0.0f32; 3]; 3];
+                for u in 0..sc.cw {
+                    let i6 = sc.rw + s.s_w * (sc.qw + u);
+                    for v in 0..sc.ch {
+                        let i7 = sc.rh + s.s_h * (sc.qh + v);
+                        g3[u as usize][v as usize] =
+                            w.at(ci, co, i6 as usize, i7 as usize);
+                    }
+                }
+                counters.add_filter(sc.cw * sc.ch);
+                let ut = filter_transform(&g3);
+                for (k, val) in ut.iter().enumerate() {
+                    cache[((si * ci_n + ci) * 16 + k) * co_n + co] = *val;
+                }
+            }
+        }
+    }
+    cache
+}
+
+/// Decode a flat tile index into `(n, tx, ty)`.
+#[inline]
+fn decode_tile(plan: &WinoPlan, t: u64) -> (usize, u64, u64) {
+    let (tw, th) = (plan.tiles_w(), plan.tiles_h());
+    let per_n = tw * th;
+    let n = t / per_n;
+    let rem = t % per_n;
+    (n as usize, rem / th, rem % th)
+}
+
+/// Compute the 2×2 accumulators for tiles `[t0, t1)` into `yacc`
+/// (layout `[tile][co][4]`), charging input words as it gathers.
+/// `stage_secs`, when present, accumulates (input+MAC, output) transform
+/// wall time for the obs stage events.
+fn run_tile_block(
+    x: &Tensor4,
+    ucache: &[f32],
+    plan: &WinoPlan,
+    t0: u64,
+    t1: u64,
+    yacc: &mut [f32],
+    mbuf: &mut Vec<f32>,
+    counters: &TrafficCounters,
+    stage_secs: Option<&mut [f64; 2]>,
+) {
+    let s = &plan.shape;
+    let (ci_n, co_n) = (s.c_i as usize, s.c_o as usize);
+    let bt = (t1 - t0) as usize;
+    debug_assert_eq!(yacc.len(), bt * co_n * 4);
+    yacc.fill(0.0);
+    mbuf.clear();
+    mbuf.resize(16 * bt * co_n, 0.0);
+    let mut d = [0.0f32; 16];
+    let mut m4 = [0.0f32; 16];
+    let (mut in_secs, mut out_secs) = (0.0f64, 0.0f64);
+    let timing = stage_secs.is_some();
+    for (si, sc) in plan.subs.iter().enumerate() {
+        mbuf.fill(0.0);
+        let clock = if timing { Some(Instant::now()) } else { None };
+        for ci in 0..ci_n {
+            for ti in 0..bt {
+                let (n, tx, ty) = decode_tile(plan, t0 + ti as u64);
+                let inr = gather_tile(x, n, ci, s, sc, tx, ty, &mut d);
+                counters.add_input(inr);
+                let v = input_transform(&d);
+                for (k, vk) in v.iter().enumerate() {
+                    let uo = ((si * ci_n + ci) * 16 + k) * co_n;
+                    let mo = (k * bt + ti) * co_n;
+                    axpy(
+                        &mut mbuf[mo..mo + co_n],
+                        &ucache[uo..uo + co_n],
+                        *vk,
+                    );
+                }
+            }
+        }
+        if let Some(c) = clock {
+            in_secs += c.elapsed().as_secs_f64();
+        }
+        let clock = if timing { Some(Instant::now()) } else { None };
+        for ti in 0..bt {
+            for co in 0..co_n {
+                for (k, mk) in m4.iter_mut().enumerate() {
+                    *mk = mbuf[(k * bt + ti) * co_n + co];
+                }
+                let y = output_transform(&m4);
+                let yo = (ti * co_n + co) * 4;
+                for (j, yj) in y.iter().enumerate() {
+                    yacc[yo + j] += *yj;
+                }
+            }
+        }
+        if let Some(c) = clock {
+            out_secs += c.elapsed().as_secs_f64();
+        }
+    }
+    if let Some(secs) = stage_secs {
+        secs[0] += in_secs;
+        secs[1] += out_secs;
+    }
+}
+
+/// Scatter a finished block's valid 2×2 elements into the output tensor,
+/// charging exactly the valid (ragged-clipped) words.
+fn scatter_block(
+    out: &mut Tensor4,
+    plan: &WinoPlan,
+    t0: u64,
+    t1: u64,
+    yacc: &[f32],
+    counters: &TrafficCounters,
+) {
+    let s = &plan.shape;
+    let co_n = s.c_o as usize;
+    for ti in 0..(t1 - t0) as usize {
+        let (n, tx, ty) = decode_tile(plan, t0 + ti as u64);
+        let vw = (s.w_o - 2 * tx).min(2) as usize;
+        let vh = (s.h_o - 2 * ty).min(2) as usize;
+        for co in 0..co_n {
+            let yo = (ti * co_n + co) * 4;
+            for dw in 0..vw {
+                for dh in 0..vh {
+                    *out.at_mut(
+                        n,
+                        co,
+                        2 * tx as usize + dw,
+                        2 * ty as usize + dh,
+                    ) = yacc[yo + 2 * dw + dh];
+                }
+            }
+        }
+        counters.add_output((vw * vh * co_n) as u64);
+    }
+}
+
+/// Serial counted Winograd execution with obs span + per-stage events
+/// (filter/input/output transform) when tracing is on.
+pub fn conv_winograd_counted(
+    x: &Tensor4,
+    w: &Tensor4,
+    plan: &WinoPlan,
+    counters: &TrafficCounters,
+) -> Tensor4 {
+    let s = &plan.shape;
+    assert_conv_operands(x, w, s);
+    let tracing = obs::enabled();
+    let before = if tracing { Some(counters.snapshot()) } else { None };
+    let span = if tracing {
+        Some(obs::scope(
+            obs::kind::WINOGRAD,
+            &[
+                ("shape", js(&s.to_string())),
+                ("sub_convs", ju(plan.subs.len() as u64)),
+                ("tile_block", ju(plan.tile_block as u64)),
+            ],
+        ))
+    } else {
+        None
+    };
+    let mut out = Tensor4::zeros([
+        s.n as usize,
+        s.c_o as usize,
+        s.w_o as usize,
+        s.h_o as usize,
+    ]);
+    let clock = if tracing { Some(Instant::now()) } else { None };
+    let ucache = build_ucache(w, plan, counters);
+    let filter_secs = clock.map(|c| c.elapsed().as_secs_f64()).unwrap_or(0.0);
+
+    let total = plan.total_tiles();
+    let bt = plan.tile_block as u64;
+    let mut yacc = Vec::new();
+    let mut mbuf = Vec::new();
+    let mut secs = [0.0f64; 2];
+    let mut t0 = 0;
+    while t0 < total {
+        let t1 = (t0 + bt).min(total);
+        let need = (t1 - t0) as usize * s.c_o as usize * 4;
+        yacc.clear();
+        yacc.resize(need, 0.0);
+        run_tile_block(
+            x,
+            &ucache,
+            plan,
+            t0,
+            t1,
+            &mut yacc,
+            &mut mbuf,
+            counters,
+            if tracing { Some(&mut secs) } else { None },
+        );
+        scatter_block(&mut out, plan, t0, t1, &yacc, counters);
+        t0 = t1;
+    }
+    if tracing {
+        let m = counters.snapshot();
+        let b = before.unwrap();
+        for (stage, sec, words) in [
+            ("filter_transform", filter_secs, m.filter_words - b.filter_words),
+            ("input_transform", secs[0], m.input_words - b.input_words),
+            ("output_transform", secs[1], m.output_words - b.output_words),
+        ] {
+            obs::event(
+                obs::kind::WINOGRAD_STAGE,
+                &[
+                    ("stage", js(stage)),
+                    ("secs", jf(sec)),
+                    ("words", ju(words)),
+                ],
+            );
+        }
+    }
+    drop(span);
+    out
+}
+
+/// Serial Winograd execution without counter plumbing.
+pub fn conv_winograd(x: &Tensor4, w: &Tensor4, plan: &WinoPlan) -> Tensor4 {
+    conv_winograd_counted(x, w, plan, &TrafficCounters::new())
+}
+
+/// Winograd execution fanned out over a [`ThreadPool`]: the filter cache
+/// is built once, tile blocks are computed on workers, and finished
+/// blocks scatter to disjoint output regions — bitwise identical to
+/// [`conv_winograd_counted`].
+pub fn conv_winograd_parallel(
+    x: &Arc<Tensor4>,
+    w: &Arc<Tensor4>,
+    plan: &Arc<WinoPlan>,
+    pool: &ThreadPool,
+    counters: &Arc<TrafficCounters>,
+) -> Tensor4 {
+    let s = plan.shape;
+    assert_conv_operands(x, w, &s);
+    let mut out = Tensor4::zeros([
+        s.n as usize,
+        s.c_o as usize,
+        s.w_o as usize,
+        s.h_o as usize,
+    ]);
+    let ucache = Arc::new(build_ucache(w, plan, counters));
+    let total = plan.total_tiles();
+    let bt = plan.tile_block as u64;
+    let mut blocks = Vec::new();
+    let mut t0 = 0;
+    while t0 < total {
+        blocks.push((t0, (t0 + bt).min(total)));
+        t0 = (t0 + bt).min(total);
+    }
+    let (x2, u2, p2, c2) =
+        (Arc::clone(x), Arc::clone(&ucache), Arc::clone(plan), Arc::clone(counters));
+    let bufs = pool.map(blocks.clone(), move |(b0, b1)| {
+        let mut yacc = vec![0.0f32; (b1 - b0) as usize * p2.shape.c_o as usize * 4];
+        let mut mbuf = Vec::new();
+        run_tile_block(&x2, &u2, &p2, b0, b1, &mut yacc, &mut mbuf, &c2, None);
+        yacc
+    });
+    for ((b0, b1), yacc) in blocks.iter().zip(&bufs) {
+        scatter_block(&mut out, plan, *b0, *b1, yacc, counters);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{conv7nl_naive, paper_operands};
+
+    /// The nested F(2×2, 3×3) transform identity: Y equals the direct 2×2
+    /// correlation for arbitrary tiles and taps, to float tolerance.
+    #[test]
+    fn transform_identity_matches_direct_convolution() {
+        let d_t = Tensor4::randn([1, 1, 4, 4], 3);
+        let g_t = Tensor4::randn([1, 1, 3, 3], 4);
+        let mut d = [0.0f32; 16];
+        let mut g = [[0.0f32; 3]; 3];
+        for i in 0..4 {
+            for j in 0..4 {
+                d[4 * i + j] = d_t.at(0, 0, i, j);
+            }
+        }
+        for (u, gu) in g.iter_mut().enumerate() {
+            for (v, gv) in gu.iter_mut().enumerate() {
+                *gv = g_t.at(0, 0, u, v);
+            }
+        }
+        let u = filter_transform(&g);
+        let v = input_transform(&d);
+        let mut m = [0.0f32; 16];
+        for k in 0..16 {
+            m[k] = u[k] * v[k];
+        }
+        let y = output_transform(&m);
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut want = 0.0f32;
+                for (u_, gu) in g.iter().enumerate() {
+                    for (v_, gv) in gu.iter().enumerate() {
+                        want += d[4 * (i + u_) + (j + v_)] * gv;
+                    }
+                }
+                let got = y[2 * i + j];
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "y[{i}][{j}] = {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sub_conv_taps_partition_the_filter() {
+        // every real tap lands in exactly one (residue, chunk), so the
+        // charged filter words are |F| for any (stride, filter) combo
+        for (wf, hf, sw, sh) in
+            [(3, 3, 1, 1), (5, 5, 1, 1), (5, 4, 2, 3), (7, 7, 2, 2), (1, 1, 1, 1)]
+        {
+            let s = ConvShape::new(1, 1, 1, 8, 8, wf, hf, sw, sh);
+            let subs = enumerate_subs(&s);
+            let taps: u64 = subs.iter().map(|sc| sc.cw * sc.ch).sum();
+            assert_eq!(taps, wf * hf, "{wf}x{hf}/{sw}x{sh}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_within_tolerance_3x3() {
+        let s = ConvShape::new(2, 3, 4, 6, 5, 3, 3, 1, 1);
+        let (x, w) = paper_operands(&s, 7);
+        let plan = WinoPlan::new(&s, Precision::uniform(), 65536.0);
+        assert_eq!(plan.sub_convs(), 1);
+        let got = conv_winograd(&x, &w, &plan);
+        let want = conv7nl_naive(&x, &w, &s);
+        let tol = winograd_tolerance(&x, &w, &s);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff <= tol, "diff {diff} > tol {tol}");
+        assert!(got.rel_l2(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matches_naive_polyphase_strided_5x5() {
+        // stride 2: 4 residues, each ≤3-tap after decimation
+        let s = ConvShape::new(2, 3, 4, 5, 6, 5, 5, 2, 2);
+        let (x, w) = paper_operands(&s, 11);
+        let plan = WinoPlan::new(&s, Precision::uniform(), 65536.0);
+        assert!(plan.sub_convs() >= 4);
+        let got = conv_winograd(&x, &w, &plan);
+        let want = conv7nl_naive(&x, &w, &s);
+        let diff = got.max_abs_diff(&want);
+        let tol = winograd_tolerance(&x, &w, &s);
+        assert!(diff <= tol, "diff {diff} > tol {tol}");
+        assert!(got.rel_l2(&want) < 1e-4);
+    }
+
+    #[test]
+    fn chunked_large_filter_unit_stride() {
+        // 5×4 unit-stride filter chunks into 2×2 sub-convs per axis combo
+        let s = ConvShape::new(1, 2, 3, 7, 6, 5, 4, 1, 1);
+        let (x, w) = paper_operands(&s, 13);
+        let plan = WinoPlan::new(&s, Precision::uniform(), 65536.0);
+        assert_eq!(plan.sub_convs(), 4); // qw ∈ {0,3}, qh ∈ {0,3}
+        let got = conv_winograd(&x, &w, &plan);
+        let want = conv7nl_naive(&x, &w, &s);
+        let diff = got.max_abs_diff(&want);
+        let tol = winograd_tolerance(&x, &w, &s);
+        assert!(diff <= tol, "diff {diff} > tol {tol}");
+    }
+
+    #[test]
+    fn measured_traffic_matches_model_exactly() {
+        for (s, m) in [
+            (ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1), 4096.0),
+            (ConvShape::new(1, 2, 3, 5, 7, 3, 3, 1, 1), 64.0), // bt = 1
+            (ConvShape::new(2, 2, 3, 5, 6, 5, 5, 2, 2), 1024.0),
+            (ConvShape::new(1, 2, 3, 4, 4, 3, 3, 2, 2), 512.0),
+        ] {
+            let plan = WinoPlan::new(&s, Precision::uniform(), m);
+            let (x, w) = paper_operands(&s, 5);
+            let ctr = TrafficCounters::new();
+            conv_winograd_counted(&x, &w, &plan, &ctr);
+            let e = expected_winograd_traffic(&plan);
+            assert_eq!(ctr.snapshot(), e, "{s}");
+            assert_eq!(e.filter_words, s.filter_size(), "{s}");
+            assert_eq!(e.output_words, s.output_size(), "{s}");
+        }
+    }
+
+    #[test]
+    fn traffic_model_is_blocking_independent() {
+        let s = ConvShape::new(2, 3, 4, 9, 7, 3, 3, 1, 1);
+        let small = WinoPlan::new(&s, Precision::uniform(), 64.0);
+        let large = WinoPlan::new(&s, Precision::uniform(), 1.0e7);
+        assert!(small.tile_block < large.tile_block);
+        assert_eq!(
+            expected_winograd_traffic(&small),
+            expected_winograd_traffic(&large)
+        );
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_serial() {
+        let s = ConvShape::new(3, 4, 5, 10, 9, 3, 3, 1, 1);
+        let plan = Arc::new(WinoPlan::new(&s, Precision::uniform(), 2048.0));
+        let (x, w) = paper_operands(&s, 21);
+        let (x, w) = (Arc::new(x), Arc::new(w));
+        let serial = conv_winograd(&x, &w, &plan);
+        let pool = ThreadPool::new(4);
+        let ctr = Arc::new(TrafficCounters::new());
+        let par = conv_winograd_parallel(&x, &w, &plan, &pool, &ctr);
+        assert_eq!(par.max_abs_diff(&serial), 0.0);
+        assert_eq!(ctr.snapshot(), expected_winograd_traffic(&plan));
+    }
+
+    #[test]
+    fn degenerate_shapes_return_empty_or_zero_output() {
+        // zero batch: empty output, nothing charged
+        let s = ConvShape::new(0, 3, 4, 5, 5, 3, 3, 1, 1);
+        let plan = WinoPlan::new(&s, Precision::uniform(), 1024.0);
+        let x = Tensor4::zeros([0, 3, 8, 8]);
+        let w = Tensor4::zeros([3, 4, 3, 3]);
+        let out = conv_winograd(&x, &w, &plan);
+        assert_eq!(out.dims, [0, 4, 5, 5]);
+        assert!(out.is_empty());
+
+        // zero input channels: full-size all-zero output, like the oracle
+        let s2 = ConvShape::new(2, 0, 4, 5, 5, 3, 3, 1, 1);
+        let plan2 = WinoPlan::new(&s2, Precision::uniform(), 1024.0);
+        let x2 = Tensor4::zeros([2, 0, 8, 8]);
+        let w2 = Tensor4::zeros([0, 4, 3, 3]);
+        let ctr = TrafficCounters::new();
+        let out2 = conv_winograd_counted(&x2, &w2, &plan2, &ctr);
+        assert_eq!(out2.dims, [2, 4, 5, 5]);
+        assert!(out2.data.iter().all(|&v| v == 0.0));
+        assert_eq!(ctr.snapshot(), expected_winograd_traffic(&plan2));
+        assert_eq!(ctr.snapshot().input_words, 0);
+    }
+
+    #[test]
+    fn tolerance_scales_with_operands_and_reduction_depth() {
+        let s = ConvShape::new(1, 8, 2, 4, 4, 3, 3, 1, 1);
+        let (x, w) = paper_operands(&s, 2);
+        let t = winograd_tolerance(&x, &w, &s);
+        assert!(t > 0.0 && t < 1.0, "tolerance {t}");
+        // doubling cI roughly doubles the bound's term count
+        let s2 = ConvShape { c_i: 16, ..s };
+        let (x2, w2) = paper_operands(&s2, 2);
+        let t2 = winograd_tolerance(&x2, &w2, &s2);
+        assert!(t2 > t, "{t2} vs {t}");
+    }
+}

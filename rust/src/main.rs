@@ -66,10 +66,12 @@ use convbound::hbl::{analyze_7nl, analyze_small_filter};
 use convbound::kernels::{
     conv_network_bwd_counted, conv_network_fused_counted,
     conv_network_step_counted, conv_pass_tiled, conv_pass_tiled_counted,
-    conv_tiled_counted, expected_pass_traffic, expected_traffic,
-    naive_network, naive_network_bwd, naive_network_step, Autotuner,
+    conv_tiled_counted, conv_winograd_counted, expected_pass_traffic,
+    expected_traffic, expected_winograd_traffic, naive_network,
+    naive_network_bwd, naive_network_step, winograd_tolerance, Autotuner,
     FusePlan, FusedExec, KernelKind, NetPass, NetTrafficCounters,
-    TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    TilePlanCache, Traffic, TrafficCounters, WinoPlan,
+    DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::obs;
 use convbound::report::{
@@ -329,6 +331,14 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
         "off" => false,
         other => return Err(err!("unknown --halo-cache '{other}' (on|off)")),
     };
+    let halo_w = match args.opt_str("halo-w", "off") {
+        "on" => true,
+        "off" => false,
+        other => return Err(err!("unknown --halo-w '{other}' (on|off)")),
+    };
+    if halo_w && !halo {
+        return Err(err!("--halo-w on requires --halo-cache on"));
+    }
     let manifest = convbound::runtime::Manifest::builtin(batch);
     let net = manifest.network(name).ok_or_else(|| {
         err!(
@@ -367,7 +377,8 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
             );
             // the requested halo flag reaches the *planner*, so fusion
             // decisions are made under the model this run executes
-            let p = tuner.network_pass_plan(pass, &net.stages, kind, halo);
+            let p =
+                tuner.network_pass_plan(pass, &net.stages, kind, halo, halo_w);
             if let Some(path) = args.opt("tune-cache") {
                 tuner.save(path)?;
             }
@@ -381,6 +392,7 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
                 &cache,
                 exec,
                 halo,
+                halo_w,
             ),
             None => {
                 return Err(err!(
@@ -397,9 +409,10 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
         net.updates()
     );
     println!(
-        "  fused kernel '{}', halo cache {}",
+        "  fused kernel '{}', halo cache {}, w-carry {}",
         plan.exec.name(),
-        if plan.halo_cache { "on" } else { "off" }
+        if plan.halo_cache { "on" } else { "off" },
+        if plan.halo_w { "on" } else { "off" }
     );
     for g in &plan.groups {
         if g.is_fused() {
@@ -632,7 +645,12 @@ fn cmd_exec_pass(args: &Args, pass: ConvPass) -> Result<()> {
             k
         }
         other => match KernelKind::parse(other) {
-            Some(k) if k != KernelKind::Im2col => k,
+            // no im2col or winograd lowering exists for the gradients
+            Some(k)
+                if k != KernelKind::Im2col && k != KernelKind::Winograd =>
+            {
+                k
+            }
             _ => {
                 return Err(err!(
                     "unknown --kernel '{other}' for --pass {} \
@@ -779,7 +797,7 @@ fn cmd_exec(args: &Args) -> Result<()> {
             k
         }
         other => KernelKind::parse(other).ok_or_else(|| {
-            err!("unknown --kernel '{other}' (naive|im2col|tiled|auto)")
+            err!("unknown --kernel '{other}' (naive|im2col|tiled|winograd|auto)")
         })?,
     };
 
@@ -791,6 +809,8 @@ fn cmd_exec(args: &Args) -> Result<()> {
 
     let out;
     let secs;
+    // winograd's measured-vs-analytic pair, kept for the `--check` gate
+    let mut wino_pair: Option<(Traffic, Traffic)> = None;
     if kind == KernelKind::Tiled {
         let plan = tuner.plan(&shape);
         let counters = TrafficCounters::new();
@@ -811,6 +831,31 @@ fn cmd_exec(args: &Args) -> Result<()> {
             t.input_words, t.filter_words, t.output_words, t.total(),
             t.total() as f64 / predicted.max(1.0)
         );
+    } else if kind == KernelKind::Winograd {
+        let plan = WinoPlan::new(&shape, p, m);
+        let counters = TrafficCounters::new();
+        let t0 = Instant::now();
+        out = conv_winograd_counted(&x, &w, &plan, &counters);
+        secs = t0.elapsed().as_secs_f64();
+        let t = counters.snapshot();
+        let e = expected_winograd_traffic(&plan);
+        println!(
+            "  F(2,3): {} sub-conv(s) x {} tiles, block {}",
+            plan.sub_convs(),
+            plan.total_tiles(),
+            plan.tile_block
+        );
+        println!(
+            "  traffic: input {} + filter {} + output {} = {} words \
+             (model {}{})",
+            t.input_words,
+            t.filter_words,
+            t.output_words,
+            t.total(),
+            e.total(),
+            if t == e { ", exact" } else { ", MISMATCH" }
+        );
+        wino_pair = Some((t, e));
     } else {
         let t0 = Instant::now();
         out = tuner.run_kernel(kind, &x, &w, &shape);
@@ -833,6 +878,34 @@ fn cmd_exec(args: &Args) -> Result<()> {
         println!("  check vs {oracle} oracle: rel_l2 = {rel:.2e}");
         if rel >= 1e-4 {
             return Err(err!("kernel disagrees with the {oracle} oracle: {rel}"));
+        }
+        if kind == KernelKind::Winograd {
+            // transforms reassociate, so the gate is the documented
+            // ULP-scaled tolerance oracle plus exact traffic — see
+            // kernels/winograd.rs and DESIGN.md §11
+            let tol = winograd_tolerance(&x, &w, &shape);
+            let diff = out.max_abs_diff(&want);
+            println!(
+                "  winograd tolerance oracle: max_abs_diff = {diff:.3e} \
+                 (bound {tol:.3e})"
+            );
+            if diff > tol {
+                return Err(err!(
+                    "winograd exceeded the tolerance oracle: {diff} > {tol}"
+                ));
+            }
+            match wino_pair {
+                Some((t, e)) if t == e => println!(
+                    "  measured traffic matches expected_winograd_traffic \
+                     exactly: OK"
+                ),
+                _ => {
+                    return Err(err!(
+                        "measured winograd traffic disagrees with \
+                         expected_winograd_traffic"
+                    ))
+                }
+            }
         }
     } else {
         // keep `out` observable so the kernel call is never optimized away
@@ -1063,10 +1136,10 @@ fn main() {
             eprintln!("usage: convbound <hbl-table|bounds|fig2|fig3|fig4|plan|exec|serve|trace> [options]");
             eprintln!("  common: --layer conv2_x --batch 1000 --precision mixed|uniform|gemmini");
             eprintln!("  bounds/fig2/plan: --mem <words>;  fig3/bounds: --procs <P>");
-            eprintln!("  exec: --kernel naive|im2col|tiled|auto --scale <k> --check --tune-cache <path>");
+            eprintln!("  exec: --kernel naive|im2col|tiled|winograd|auto --scale <k> --check --tune-cache <path>");
             eprintln!("        --pass fwd|dfilter|dinput (backward passes: --kernel naive|tiled|auto)");
             eprintln!("        --network tiny_resnet|deep_mixnet [--batch N] [--mem M] [--check]");
-            eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off");
+            eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off --halo-w on|off");
             eprintln!("        --pass fwd|bwd|step (with --network: fused backward / training-step sweeps)");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
             eprintln!("  trace: check|summarize <trace.jsonl> (replay a structured log offline)");

@@ -74,6 +74,12 @@ pub mod kind {
     pub const AUTOTUNE_SELECT: &str = "autotune_select";
     /// Instant: aggregate LP-prune report for one selection.
     pub const AUTOTUNE_PRUNE: &str = "autotune_prune";
+    /// Winograd kernel span around one counted run (`shape`, `sub_convs`,
+    /// `tile_block`), enclosing three [`WINOGRAD_STAGE`] events.
+    pub const WINOGRAD: &str = "winograd";
+    /// Instant: one Winograd transform stage finished (`stage` ∈
+    /// filter_transform|input_transform|output_transform, `secs`, `words`).
+    pub const WINOGRAD_STAGE: &str = "winograd_stage";
     /// Instant: a routed diagnostic line (`level`, `msg`).
     pub const LOG: &str = "log";
     /// Instant: final [`crate::coordinator::ServerStats`] at shutdown.

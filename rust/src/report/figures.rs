@@ -102,11 +102,25 @@ pub fn fig4_table(rows: &[Fig4Row]) -> Table {
 }
 
 /// Render a Figure-2/3 series as a table.
+///
+/// Column headers carry the provenance of each algorithm's numbers:
+/// `*` marks algorithms that also *execute* in-tree with measured ==
+/// analytic traffic asserted (blocking via the `kernels/` tiled engine,
+/// winograd via the F(2,3) path; naive and im2col execute but charge
+/// compulsory traffic only), so a starred column's analytic curve is
+/// counter-validated, while `fft` remains model-only.
 pub fn ratio_table<X: std::fmt::Display>(
     xlabel: &str,
     rows: &[(X, [(&'static str, f64); 5])],
 ) -> Table {
-    let mut t = Table::new(&[xlabel, "naive", "im2col", "blocking", "winograd", "fft"]);
+    let mut t = Table::new(&[
+        xlabel,
+        "naive",
+        "im2col",
+        "blocking*",
+        "winograd*",
+        "fft (model)",
+    ]);
     for (x, ratios) in rows {
         let mut cells = vec![format!("{x}")];
         cells.extend(ratios.iter().map(|(_, r)| fmt_x(*r)));

@@ -6,7 +6,11 @@
 //! genuinely different code path ([`conv_im2col`]: patch-matrix + GEMM);
 //! kind `"tiled"` routes through the `kernels/` LP-blocked tiled engine
 //! (packed per-tile working sets, traffic counters, output tiles fanned
-//! out over a shared thread pool); kinds `"dfilter"`/`"dinput"` run the
+//! out over a shared thread pool); kind `"winograd"` routes through the
+//! tiled F(2,3) transform-domain kernel (4 multiplies per 2 outputs on
+//! 3×3 stencils, polyphase decomposition otherwise — a *reassociating*
+//! path, so agreement tests use the scaled tolerance oracle rather than
+//! bitwise equality); kinds `"dfilter"`/`"dinput"` run the
 //! backward convolutions of a training step through the same pass-generic
 //! tiled engine (bitwise identical to the `conv/training.rs` naive
 //! oracles); kind `"network"` executes a whole
@@ -37,8 +41,9 @@ use crate::conv::{conv7nl_naive, ConvPass, ConvShape, Precision, Tensor4};
 use crate::err;
 use crate::kernels::{
     conv_network_bwd, conv_network_fused, conv_pass_tiled_parallel,
-    conv_tiled_parallel, FusePlan, NetPass, NetTrafficCounters, TilePlan,
-    TilePlanCache, Traffic, TrafficCounters, DEFAULT_TILE_MEM_WORDS,
+    conv_tiled_parallel, conv_winograd_parallel, FusePlan, NetPass,
+    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
+    WinoPlan, DEFAULT_TILE_MEM_WORDS,
 };
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -102,6 +107,19 @@ impl ExecBackend for NativeBackend {
                     counters: Arc::new(TrafficCounters::new()),
                 }))
             }
+            "winograd" => {
+                let shape = spec.layer_shape()?;
+                let plan = Arc::new(WinoPlan::new(
+                    &shape,
+                    Precision::uniform(),
+                    DEFAULT_TILE_MEM_WORDS,
+                ));
+                Ok(Box::new(WinogradExec {
+                    plan,
+                    pool: self.tiled_pool(),
+                    counters: Arc::new(TrafficCounters::new()),
+                }))
+            }
             "dfilter" | "dinput" => {
                 let pass = ConvPass::parse(&spec.kind)
                     .expect("matched kinds parse as passes");
@@ -129,8 +147,8 @@ impl ExecBackend for NativeBackend {
             )),
             other => Err(err!(
                 "native backend cannot execute artifact '{}' of kind '{other}' \
-                 (single-layer 'blocked'/'im2col'/'tiled' specs, training \
-                 'dfilter'/'dinput' specs, or 'network'/'training' \
+                 (single-layer 'blocked'/'im2col'/'tiled'/'winograd' specs, \
+                 training 'dfilter'/'dinput' specs, or 'network'/'training' \
                  pipelines); build with --features pjrt to run it over XLA",
                 spec.key()
             )),
@@ -224,6 +242,45 @@ impl Executable for TiledExec {
 
     fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
         Ok(conv_tiled_parallel(
+            &inputs[0],
+            &inputs[1],
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn traffic(&self) -> Option<Traffic> {
+        Some(self.counters.snapshot())
+    }
+}
+
+/// Executes through the tiled Winograd F(2,3) transform-domain kernel,
+/// tile blocks fanned out over the backend's shared pool. Winograd
+/// reassociates the inner products (4 multiplies per 2 outputs), so this
+/// path agrees with the oracles to the scaled tolerance of
+/// [`crate::kernels::winograd_tolerance`], not bitwise.
+struct WinogradExec {
+    plan: Arc<WinoPlan>,
+    pool: Arc<ThreadPool>,
+    counters: Arc<TrafficCounters>,
+}
+
+impl Executable for WinogradExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let x = Arc::new(inputs[0].clone());
+        let w = Arc::new(inputs[1].clone());
+        Ok(conv_winograd_parallel(
+            &x,
+            &w,
+            &self.plan,
+            &self.pool,
+            &self.counters,
+        ))
+    }
+
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        Ok(conv_winograd_parallel(
             &inputs[0],
             &inputs[1],
             &self.plan,
@@ -457,6 +514,24 @@ mod tests {
         let got = exe.execute(&[&x, &w]).expect("tiled execute");
         let want = conv7nl_naive(&x, &w, &shape);
         assert!(got.rel_l2(&want) < 1e-4, "rel {}", got.rel_l2(&want));
+    }
+
+    #[test]
+    fn winograd_kind_loads_and_matches_oracle() {
+        let shape = ConvShape::new(2, 3, 4, 6, 6, 3, 3, 1, 1);
+        let spec = ArtifactSpec::for_layer("w", "winograd", &shape);
+        let mut be = NativeBackend::new();
+        let exe = be.load(&spec, None).expect("winograd kind loads");
+        let x = Tensor4::randn(
+            [2, 3, shape.in_w() as usize, shape.in_h() as usize],
+            33,
+        );
+        let w = Tensor4::randn([3, 4, 3, 3], 34);
+        let got = exe.execute(&[&x, &w]).expect("winograd execute");
+        let want = conv7nl_naive(&x, &w, &shape);
+        // Winograd reassociates the reduction: tolerance oracle, not bitwise.
+        assert!(got.rel_l2(&want) < 1e-4, "rel {}", got.rel_l2(&want));
+        assert!(exe.traffic().expect("instrumented").total() > 0);
     }
 
     #[test]

@@ -15,10 +15,11 @@ use convbound::kernels::{
     axpy, axpy_scalar, conv_network_bwd, conv_network_bwd_counted,
     conv_network_fused, conv_network_fused_counted, conv_network_step_counted,
     conv_pass_tiled, conv_pass_tiled_counted, conv_pass_tiled_parallel,
-    conv_tiled_counted, expected_pass_traffic, expected_traffic,
-    naive_network, naive_network_bwd, naive_network_step, FusePlan, FusedExec,
-    NetPass, NetTrafficCounters, TilePlan, TilePlanCache, Traffic,
-    TrafficCounters,
+    conv_tiled_counted, conv_winograd_counted, conv_winograd_parallel,
+    expected_pass_traffic, expected_traffic, expected_winograd_traffic,
+    naive_network, naive_network_bwd, naive_network_step, winograd_tolerance,
+    FusePlan, FusedExec, NetPass, NetTrafficCounters, TilePlan, TilePlanCache,
+    Traffic, TrafficCounters, WinoPlan,
 };
 use convbound::runtime::{NetworkSpec, NetworkStage};
 use convbound::util::threadpool::ThreadPool;
@@ -419,6 +420,101 @@ fn tiled_matches_naive_on_full_catalog_within_traffic_envelope() {
             measured / predicted
         );
     }
+}
+
+// ---------------- winograd F(2,3) ----------------
+
+#[test]
+fn prop_winograd_matches_naive_within_tolerance_with_exact_traffic() {
+    // arbitrary strided/ragged shapes normalize through the polyphase +
+    // chunk decomposition; mixed precisions reshape the tile block (never
+    // the words); the measured traffic equals the analytic model exactly
+    forall(
+        Config { cases: 24, seed: 81 },
+        |r| {
+            let s = random_tiled_shape(r);
+            let p = random_precision(r);
+            let m = (1u64 << r.range(9, 14)) as f64;
+            (s, p, m, r.range(0, 1_000_000))
+        },
+        |(s, p, m, seed)| {
+            let (x, w) = paper_operands(s, *seed);
+            let plan = WinoPlan::new(s, *p, *m);
+            let counters = TrafficCounters::new();
+            let got = conv_winograd_counted(&x, &w, &plan, &counters);
+            let want = conv7nl_naive(&x, &w, s);
+            let tol = winograd_tolerance(&x, &w, s);
+            let t = counters.snapshot();
+            got.max_abs_diff(&want) <= tol
+                && got.rel_l2(&want) < 1e-4
+                && t == expected_winograd_traffic(&plan)
+                && t.filter_words == s.filter_size()
+                && t.output_words == s.output_size()
+        },
+    );
+}
+
+#[test]
+fn prop_winograd_polyphase_5x5_stride2_matches_naive() {
+    // the polyphase path proper: 5×5 taps at stride 2 decimate into four
+    // unit-stride residues; odd outputs leave ragged 2×2 scatter tiles
+    forall(
+        Config { cases: 16, seed: 82 },
+        |r| {
+            let s = ConvShape::new(
+                r.range(1, 3),
+                r.range(1, 5),
+                r.range(1, 5),
+                r.range(2, 9),
+                r.range(2, 9),
+                5,
+                5,
+                2,
+                2,
+            );
+            (s, r.range(0, 1_000_000))
+        },
+        |(s, seed)| {
+            let (x, w) = paper_operands(s, *seed);
+            let plan = WinoPlan::new(s, Precision::uniform(), 4096.0);
+            let counters = TrafficCounters::new();
+            let got = conv_winograd_counted(&x, &w, &plan, &counters);
+            let want = conv7nl_naive(&x, &w, s);
+            plan.sub_convs() >= 4
+                && got.max_abs_diff(&want) <= winograd_tolerance(&x, &w, s)
+                && got.rel_l2(&want) < 1e-4
+                && counters.snapshot() == expected_winograd_traffic(&plan)
+        },
+    );
+}
+
+#[test]
+fn prop_winograd_parallel_and_blocking_deterministic() {
+    // tile-block size shapes residency only: a tight-budget plan, a loose
+    // one, and the pool-parallel sweep all agree bitwise with identical
+    // (blocking-independent) traffic
+    forall(
+        Config { cases: 12, seed: 83 },
+        |r| (random_tiled_shape(r), r.range(0, 1_000_000)),
+        |(s, seed)| {
+            let (x, w) = paper_operands(s, *seed);
+            let tight = WinoPlan::new(s, Precision::uniform(), 512.0);
+            let loose =
+                WinoPlan::new(s, Precision::uniform(), (1u64 << 20) as f64);
+            let (ct, cl) = (TrafficCounters::new(), TrafficCounters::new());
+            let a = conv_winograd_counted(&x, &w, &tight, &ct);
+            let b = conv_winograd_counted(&x, &w, &loose, &cl);
+            let (xa, wa, pa) =
+                (Arc::new(x), Arc::new(w), Arc::new(loose.clone()));
+            let pool = ThreadPool::new(3);
+            let cp = Arc::new(TrafficCounters::new());
+            let c = conv_winograd_parallel(&xa, &wa, &pa, &pool, &cp);
+            a.max_abs_diff(&b) == 0.0
+                && a.max_abs_diff(&c) == 0.0
+                && ct.snapshot() == cl.snapshot()
+                && cp.snapshot() == expected_winograd_traffic(&loose)
+        },
+    );
 }
 
 // ---------------- backward passes (dFilter / dInput) ----------------
