@@ -48,6 +48,38 @@ cargo run --release -- trace summarize /tmp/convbound_ci_trace.jsonl \
 grep -q "measured-vs-expected mismatches: 0" /tmp/convbound_ci_trace_summary.txt \
     || { echo "FAIL: traced run logged traffic that disagrees with the analytic model"; exit 1; }
 
+echo "==> exec --network tiny_resnet --check --faults exec:panic:every=3  (injected tile panics degrade to the layered oracle, bitwise)"
+rm -f /tmp/convbound_ci_faults.jsonl
+cargo run --release -- exec --network tiny_resnet --check \
+    --faults exec:panic:every=3 --trace /tmp/convbound_ci_faults.jsonl \
+    | tee /tmp/convbound_ci_faults_out.txt
+grep -q "DEGRADED" /tmp/convbound_ci_faults_out.txt \
+    || { echo "FAIL: injected panics did not trigger the fallback path"; exit 1; }
+
+echo "==> trace check: the faulted run's spans still balance with terminal dispositions"
+cargo run --release -- trace check /tmp/convbound_ci_faults.jsonl
+
+echo "==> trace summarize: the faulted run's panics and degradations are in the log"
+cargo run --release -- trace summarize /tmp/convbound_ci_faults.jsonl \
+    | tee /tmp/convbound_ci_faults_summary.txt
+grep -Eq "faults: shed=0 expired=0 panicked=[1-9]" /tmp/convbound_ci_faults_summary.txt \
+    || { echo "FAIL: trace replay saw no caught panics despite exec:panic:every=3"; exit 1; }
+grep -Eq "degraded=[1-9]" /tmp/convbound_ci_faults_summary.txt \
+    || { echo "FAIL: trace replay saw no degradations despite exec:panic:every=3"; exit 1; }
+
+echo "==> serve --queue 4 --policy shed under a stalled backend: bounded depth + exact trace replay"
+rm -f /tmp/convbound_ci_serve_faults.jsonl
+cargo run --release -- serve --requests 48 --queue 4 --policy shed \
+    --faults "queue:stall:ms=25" --trace /tmp/convbound_ci_serve_faults.jsonl --check \
+    | tee /tmp/convbound_ci_serve_out.txt
+grep -q "trace replay matches ServerStats exactly: OK" /tmp/convbound_ci_serve_out.txt \
+    || { echo "FAIL: serve --check did not verify the trace replay"; exit 1; }
+cargo run --release -- trace check /tmp/convbound_ci_serve_faults.jsonl
+
+echo "==> serve a whole network with injected panics: every request still answered"
+cargo run --release -- serve --requests 16 --key tiny_resnet/network \
+    --faults exec:panic:every=5 --check >/dev/null
+
 echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json + BENCH_training.json)"
 rm -f BENCH_kernels.json BENCH_network.json BENCH_training.json  # stale files must not mask a failed write
 cargo bench --bench e2e_runtime -- --smoke >/dev/null

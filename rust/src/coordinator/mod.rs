@@ -14,4 +14,4 @@ pub mod plan;
 pub mod server;
 
 pub use plan::{plan_layer, LayerPlan, Planner};
-pub use server::{ConvServer, ServerStats};
+pub use server::{ConvServer, Overflow, QueuePolicy, ServerOptions, ServerStats};

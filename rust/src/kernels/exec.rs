@@ -225,13 +225,13 @@ impl NetTraceGuard {
     }
 
     fn finish(
-        self,
+        mut self,
         plan: &FusePlan,
         expected: &[Traffic],
         expected_halo: &[u64],
         counters: &NetTrafficCounters,
     ) {
-        let Some((before, halo_before, t0)) = self.before else { return };
+        let Some((before, halo_before, t0)) = self.before.take() else { return };
         NET_SWEEP_DEPTH.with(|d| d.set(d.get() - 1));
         let after = counters.snapshot();
         let halo_after = counters.halo_snapshot();
@@ -267,6 +267,18 @@ impl NetTraceGuard {
     }
 }
 
+impl Drop for NetTraceGuard {
+    fn drop(&mut self) {
+        // A sweep that unwinds (e.g. an injected tile panic propagating
+        // through `ThreadPool::map`) must still restore the suppression
+        // depth, or every later single-layer run on this thread would go
+        // untraced. `finish` takes `before`, so this never double-counts.
+        if self.before.take().is_some() {
+            NET_SWEEP_DEPTH.with(|d| d.set(d.get() - 1));
+        }
+    }
+}
+
 /// Execute every reduction tile against one resident output tile; returns
 /// the accumulated `[bn][bwo][bho][bco]` buffer.
 fn run_out_tile(
@@ -277,6 +289,7 @@ fn run_out_tile(
     red: &[RedTile],
     counters: &TrafficCounters,
 ) -> Vec<f32> {
+    crate::testkit::faults::exec_point();
     let s = &plan.shape;
     let (sw, sh) = (s.s_w as usize, s.s_h as usize);
     let (wf, hf) = (s.w_f as usize, s.h_f as usize);
@@ -619,6 +632,7 @@ fn run_pass_out_tile(
     red: &[RedTile],
     counters: &TrafficCounters,
 ) -> Vec<f32> {
+    crate::testkit::faults::exec_point();
     match pass {
         ConvPass::DFilter => run_dfilter_tile(a, b, plan, ot, red, counters),
         ConvPass::DInput => run_dinput_tile(a, b, plan, ot, red, counters),
@@ -1109,6 +1123,7 @@ fn run_fused_tile<'a>(
     scratch: &'a mut FusedScratch,
     counters: &NetTrafficCounters,
 ) -> &'a Tensor4 {
+    crate::testkit::faults::exec_point();
     let spans = group_spans(stages, g.start, g.end, tw, th);
     let head = &stages[g.start].shape;
     let in_sp = input_span(head, &spans[0]);
@@ -1663,6 +1678,7 @@ fn run_bwd_tile<'a>(
     scratch: &'a mut BwdScratch,
     counters: &NetTrafficCounters,
 ) -> &'a Tensor4 {
+    crate::testkit::faults::exec_point();
     let spans = bwd_group_spans(stages, g.start, g.end, tw, th);
     let head = &stages[g.start].shape;
     let tail = &stages[g.end].shape;

@@ -534,6 +534,7 @@ pub fn conv_winograd_counted(
     let mut secs = [0.0f64; 2];
     let mut t0 = 0;
     while t0 < total {
+        crate::testkit::faults::exec_point();
         let t1 = (t0 + bt).min(total);
         let need = (t1 - t0) as usize * s.c_o as usize * 4;
         yacc.clear();
@@ -610,6 +611,7 @@ pub fn conv_winograd_parallel(
     let (x2, u2, p2, c2) =
         (Arc::clone(x), Arc::clone(&ucache), Arc::clone(plan), Arc::clone(counters));
     let bufs = pool.map(blocks.clone(), move |(b0, b1)| {
+        crate::testkit::faults::exec_point();
         let mut yacc = vec![0.0f32; (b1 - b0) as usize * p2.shape.c_o as usize * 4];
         let mut mbuf = Vec::new();
         run_tile_block(&x2, &u2, &p2, b0, b1, &mut yacc, &mut mbuf, &c2, None);

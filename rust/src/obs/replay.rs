@@ -116,6 +116,24 @@ pub fn check_text(text: &str) -> Result<CheckReport> {
                         ))
                     }
                 }
+                // every request must end in exactly one terminal
+                // disposition — the fault-model invariant DESIGN.md §12
+                // documents and the CI fault gates rely on
+                if k == kind::REQUEST {
+                    match v.get("disposition").as_str() {
+                        Some("ok" | "failed" | "shed" | "expired") => {}
+                        Some(other) => {
+                            return Err(err!(
+                                "trace line {n}: request span {span} closed with unknown disposition '{other}'"
+                            ))
+                        }
+                        None => {
+                            return Err(err!(
+                                "trace line {n}: request span {span} closed without a terminal disposition"
+                            ))
+                        }
+                    }
+                }
             }
             other => return Err(err!("trace line {n}: bad ph '{other}'")),
         }
@@ -145,11 +163,22 @@ pub fn check_file(path: &str) -> Result<CheckReport> {
 #[derive(Debug, Clone, Default)]
 pub struct TraceSummary {
     pub events: u64,
-    /// Completed requests (`request` `E` events without `dropped:true`).
+    /// Completed requests (`request` `E` events with disposition `ok`,
+    /// or — legacy logs — without `dropped:true`).
     pub requests: u64,
-    /// Requests accepted but never executed (`request` `E` events
-    /// carrying `dropped:true`).
+    /// Requests accepted but failed (`request` `E` events with
+    /// disposition `failed`, or — legacy logs — carrying `dropped:true`).
     pub dropped_requests: u64,
+    /// Requests rejected at submit by a full `Shed` queue (disposition
+    /// `shed`).
+    pub shed: u64,
+    /// Requests shed at dequeue for missing their deadline (disposition
+    /// `expired`).
+    pub expired: u64,
+    /// Caught worker panics (`worker_panic` instants).
+    pub panicked: u64,
+    /// Degradations to a simpler execution path (`degrade` instants).
+    pub degraded: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_p99_ms: f64,
@@ -206,12 +235,22 @@ pub fn summarize_text(text: &str) -> Result<TraceSummary> {
                 s.peak_queue_depth = s.peak_queue_depth.max(d);
             }
             (kind::REQUEST, "E") => {
-                if v.get("dropped") == &Json::Bool(true) {
-                    s.dropped_requests += 1;
+                // legacy logs predate dispositions: `dropped:true` meant
+                // failed-at-shutdown, anything else completed
+                let legacy = if v.get("dropped") == &Json::Bool(true) {
+                    "failed"
                 } else {
-                    s.requests += 1;
-                    if let Some(l) = v.get("latency_secs").as_f64() {
-                        latencies.push(l);
+                    "ok"
+                };
+                match v.get("disposition").as_str().unwrap_or(legacy) {
+                    "failed" => s.dropped_requests += 1,
+                    "shed" => s.shed += 1,
+                    "expired" => s.expired += 1,
+                    _ => {
+                        s.requests += 1;
+                        if let Some(l) = v.get("latency_secs").as_f64() {
+                            latencies.push(l);
+                        }
                     }
                 }
             }
@@ -237,6 +276,8 @@ pub fn summarize_text(text: &str) -> Result<TraceSummary> {
                 }
             }
             (kind::LOG, _) => s.logs += 1,
+            (kind::WORKER_PANIC, _) => s.panicked += 1,
+            (kind::DEGRADE, _) => s.degraded += 1,
             (kind::TRAFFIC, _) | (kind::STAGE_TRAFFIC, _) => {
                 s.traffic_events += 1;
                 let (mi, mf, mo) = words(&v, "measured");
@@ -292,8 +333,13 @@ impl TraceSummary {
         push(format!("events: {}", self.events));
         push(format!("requests: {}", self.requests));
         if self.dropped_requests > 0 {
-            push(format!("dropped_requests: {}", self.dropped_requests));
+            push(format!("failed_requests: {}", self.dropped_requests));
         }
+        // always printed (even when all-zero) so CI gates can grep it
+        push(format!(
+            "faults: shed={} expired={} panicked={} degraded={}",
+            self.shed, self.expired, self.panicked, self.degraded
+        ));
         if self.requests > 0 {
             push(format!(
                 "latency_ms: p50={:.3} p95={:.3} p99={:.3}",
@@ -458,5 +504,57 @@ mod tests {
         let text = s.render();
         assert!(text.contains("measured-vs-expected mismatches: 1"));
         assert!(text.contains("fwd/stage0"));
+        // legacy log: no fault activity
+        assert!(text.contains("faults: shed=0 expired=0 panicked=0 degraded=0"));
+    }
+
+    #[test]
+    fn summarize_counts_dispositions_and_fault_instants() {
+        let log = hdr()
+            + &line(r#"{"kind":"request","ph":"B","span":1,"tid":0,"ts_us":1,"req":0,"queue_depth":1}"#)
+            + &line(r#"{"kind":"request","ph":"B","span":2,"tid":0,"ts_us":2,"req":1,"queue_depth":2}"#)
+            + &line(r#"{"kind":"request","ph":"B","span":3,"tid":0,"ts_us":3,"req":2,"queue_depth":2}"#)
+            + &line(r#"{"kind":"request","ph":"B","span":4,"tid":0,"ts_us":4,"req":3,"queue_depth":3}"#)
+            + &line(r#"{"kind":"worker_panic","ph":"I","tid":1,"ts_us":5,"key":"k","path":"tiled","cause":"boom"}"#)
+            + &line(r#"{"kind":"degrade","ph":"I","tid":1,"ts_us":6,"key":"k","from":"tiled","to":"naive","cause":"boom"}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":1,"tid":1,"ts_us":7,"req":0,"disposition":"ok","latency_secs":0.002}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":2,"tid":1,"ts_us":8,"req":1,"disposition":"failed","cause":"x"}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":3,"tid":0,"ts_us":9,"req":2,"disposition":"shed","cause":"queue full"}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":4,"tid":1,"ts_us":10,"req":3,"disposition":"expired","cause":"deadline"}"#);
+        let s = summarize_text(&log).unwrap();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.dropped_requests, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.panicked, 1);
+        assert_eq!(s.degraded, 1);
+        let text = s.render();
+        assert!(text.contains("faults: shed=1 expired=1 panicked=1 degraded=1"));
+        // the same log is also well-formed under check
+        let r = check_text(&log).unwrap();
+        assert_eq!(r.spans, 4);
+    }
+
+    #[test]
+    fn check_requires_a_terminal_disposition_on_request_spans() {
+        let missing = hdr()
+            + &line(r#"{"kind":"request","ph":"B","span":1,"tid":0,"ts_us":1,"req":0}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":1,"tid":0,"ts_us":2,"req":0}"#);
+        assert!(check_text(&missing)
+            .unwrap_err()
+            .to_string()
+            .contains("without a terminal disposition"));
+        let unknown = hdr()
+            + &line(r#"{"kind":"request","ph":"B","span":1,"tid":0,"ts_us":1,"req":0}"#)
+            + &line(r#"{"kind":"request","ph":"E","span":1,"tid":0,"ts_us":2,"req":0,"disposition":"vanished"}"#);
+        assert!(check_text(&unknown)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown disposition"));
+        // non-request spans stay disposition-free
+        let batch = hdr()
+            + &line(r#"{"kind":"batch","ph":"B","span":1,"tid":0,"ts_us":1}"#)
+            + &line(r#"{"kind":"batch","ph":"E","span":1,"tid":0,"ts_us":2}"#);
+        assert!(check_text(&batch).is_ok());
     }
 }

@@ -84,6 +84,13 @@ pub mod kind {
     pub const LOG: &str = "log";
     /// Instant: final [`crate::coordinator::ServerStats`] at shutdown.
     pub const SERVER_STATS: &str = "server_stats";
+    /// Instant: a worker panic was caught and converted to a typed error
+    /// (`key`, `path`, `cause`) — by the native backend's fallback
+    /// wrapper or the server's dispatch guard. The process stays alive.
+    pub const WORKER_PANIC: &str = "worker_panic";
+    /// Instant: an execution degraded to a simpler verified path (`key`,
+    /// `from`, `to`, `cause`).
+    pub const DEGRADE: &str = "degrade";
 }
 
 /// Identifier of one span; `0` is reserved for "no span" (disabled sink).

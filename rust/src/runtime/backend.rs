@@ -23,6 +23,25 @@ use crate::util::error::Result;
 
 use super::manifest::{ArtifactSpec, NetworkSpec};
 
+/// Fault counters an executable accumulated over its lifetime: panics
+/// caught (and converted to typed errors) and runs that degraded to a
+/// fallback execution path. See [`super::fallback::FallbackExec`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Caught worker/kernel panics (one per failed attempt).
+    pub panicked: u64,
+    /// Runs re-executed on a simpler verified path after a failure.
+    pub degraded: u64,
+}
+
+impl FaultStats {
+    /// Component-wise sum.
+    pub fn add(&mut self, other: FaultStats) {
+        self.panicked += other.panicked;
+        self.degraded += other.degraded;
+    }
+}
+
 /// A prepared (compiled / lowered / specialized) artifact, ready to run.
 pub trait Executable {
     /// Execute on host tensors and return the single output tensor.
@@ -59,6 +78,14 @@ pub trait Executable {
     /// interior fused stages avoided upstream recompute. `None` for
     /// single-layer executables.
     fn halo_words(&self) -> Option<Vec<u64>> {
+        None
+    }
+
+    /// Panic/degrade counters, when the backend wraps this executable in
+    /// a fault-tolerant shell (the native backend's
+    /// [`super::fallback::FallbackExec`] does); `None` for unwrapped
+    /// executables.
+    fn fault_stats(&self) -> Option<FaultStats> {
         None
     }
 }

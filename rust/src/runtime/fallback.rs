@@ -1,0 +1,305 @@
+//! Graceful degradation for execution paths: run the fast (fused /
+//! winograd / tiled) path, catch panics and errors, and re-run on the
+//! next-simpler *verified* path instead of dying. The fallback paths are
+//! the same naive oracles every fast path is bitwise-validated against in
+//! tests, so a degraded answer is still a correct answer.
+//!
+//! This extends the autotuner's probe-and-fallback discipline from
+//! tuning-time to request-time: the fast path is an optimization, never a
+//! correctness dependency.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::conv::Tensor4;
+use crate::obs::{self, js, Level};
+use crate::testkit::faults;
+use crate::util::error::{Context, Error, ErrorKind, Result};
+use crate::util::threadpool::panic_message;
+
+use super::backend::{Executable, FaultStats};
+
+/// Convert a caught panic payload into a typed [`ErrorKind::WorkerPanicked`]
+/// error carrying the panic message.
+pub fn panic_to_error(payload: Box<dyn std::any::Any + Send>) -> Error {
+    Error::typed(
+        ErrorKind::WorkerPanicked,
+        format!("worker panicked: {}", panic_message(payload.as_ref())),
+    )
+}
+
+/// Run `f`, converting an unwind into a typed error. Does NOT consult the
+/// fault harness — use for fallback/retry attempts that must be immune to
+/// injected faults.
+pub fn catch_only<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => Err(panic_to_error(p)),
+    }
+}
+
+/// Run `f` as a *primary* attempt: the fault harness's `exec:error` rules
+/// fire first, then an unwind is converted to a typed error.
+pub fn run_guarded<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    if faults::armed() {
+        faults::exec_error_point()?;
+    }
+    catch_only(f)
+}
+
+/// Emit the observable record of a caught panic (counted by
+/// `trace summarize` into its `panicked` counter).
+pub fn note_panic(key: &str, path: &str, e: &Error) {
+    if e.kind() == ErrorKind::WorkerPanicked && obs::enabled() {
+        obs::event(
+            obs::kind::WORKER_PANIC,
+            &[("key", js(key)), ("path", js(path)), ("cause", js(&e.to_string()))],
+        );
+    }
+}
+
+/// Emit the observable record of a degradation (counted by
+/// `trace summarize` into its `degraded` counter) and a log line.
+pub fn note_degrade(key: &str, from: &str, to: &str, e: &Error) {
+    obs::log(
+        Level::Warn,
+        &format!("'{key}': '{from}' path failed ({e}); degrading to '{to}'"),
+    );
+    if obs::enabled() {
+        obs::event(
+            obs::kind::DEGRADE,
+            &[
+                ("key", js(key)),
+                ("from", js(from)),
+                ("to", js(to)),
+                ("cause", js(&e.to_string())),
+            ],
+        );
+    }
+}
+
+/// CLI-side helper: run `primary`; on a panic or injected fault, record
+/// it and re-run `fallback`. Returns the output plus whether it degraded
+/// (callers skip measured-traffic gates for degraded runs — the naive
+/// fallback paths are uncounted).
+pub fn run_recovering<T>(
+    key: &str,
+    from: &str,
+    to: &str,
+    primary: impl FnOnce() -> T,
+    fallback: impl FnOnce() -> T,
+) -> (T, bool) {
+    match run_guarded(|| Ok(primary())) {
+        Ok(v) => (v, false),
+        Err(e) => {
+            note_panic(key, from, &e);
+            note_degrade(key, from, to, &e);
+            (fallback(), true)
+        }
+    }
+}
+
+/// A fault-tolerant shell around a primary [`Executable`]: panics are
+/// caught and counted, and when a verified fallback executable is
+/// attached, a failed primary attempt re-runs there (recording the
+/// downgrade) instead of surfacing the error.
+pub struct FallbackExec {
+    key: String,
+    /// Label of the primary path (e.g. `"fused"`, `"winograd"`, `"tiled"`).
+    from: &'static str,
+    /// Label of the fallback path (e.g. `"layered"`, `"naive"`).
+    to: &'static str,
+    primary: Box<dyn Executable>,
+    fallback: Option<Box<dyn Executable>>,
+    /// Clears the primary's partial traffic counts after a failed attempt,
+    /// so a degraded run doesn't leave half-charged words behind.
+    reset: Option<Box<dyn Fn() + Send + Sync>>,
+    panicked: AtomicU64,
+    degraded: AtomicU64,
+}
+
+impl FallbackExec {
+    /// Full shell: primary + fallback + counter-reset hook.
+    pub fn new(
+        key: impl Into<String>,
+        from: &'static str,
+        to: &'static str,
+        primary: Box<dyn Executable>,
+        fallback: Box<dyn Executable>,
+        reset: Option<Box<dyn Fn() + Send + Sync>>,
+    ) -> FallbackExec {
+        FallbackExec {
+            key: key.into(),
+            from,
+            to,
+            primary,
+            fallback: Some(fallback),
+            reset,
+            panicked: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+        }
+    }
+
+    /// Catch-only shell for paths that *are* the simplest verified path
+    /// (naive, im2col): panics become typed errors, nothing to degrade to.
+    pub fn guard(
+        key: impl Into<String>,
+        from: &'static str,
+        primary: Box<dyn Executable>,
+    ) -> FallbackExec {
+        FallbackExec {
+            key: key.into(),
+            from,
+            to: "none",
+            primary,
+            fallback: None,
+            reset: None,
+            panicked: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+        }
+    }
+
+    /// Handle a failed primary attempt: count/trace it, then either
+    /// degrade to the fallback or surface the typed error.
+    fn recover(
+        &self,
+        e: Error,
+        rerun: impl FnOnce(&dyn Executable) -> Result<Tensor4>,
+    ) -> Result<Tensor4> {
+        if e.kind() == ErrorKind::WorkerPanicked {
+            self.panicked.fetch_add(1, Ordering::Relaxed);
+        }
+        note_panic(&self.key, self.from, &e);
+        if let Some(reset) = &self.reset {
+            reset();
+        }
+        let Some(fb) = &self.fallback else {
+            return Err(e.context(format!("'{}' path of '{}' failed", self.from, self.key)));
+        };
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+        note_degrade(&self.key, self.from, self.to, &e);
+        // the fallback must not re-trip injected faults (it is the
+        // recovery), so it runs catch-only
+        catch_only(|| rerun(fb.as_ref()))
+            .with_context(|| format!("'{}' fallback of '{}' failed too", self.to, self.key))
+    }
+}
+
+impl Executable for FallbackExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        match run_guarded(|| self.primary.execute(inputs)) {
+            Ok(out) => Ok(out),
+            Err(e) => self.recover(e, |fb| fb.execute(inputs)),
+        }
+    }
+
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        match run_guarded(|| self.primary.execute_arc(inputs)) {
+            Ok(out) => Ok(out),
+            Err(e) => self.recover(e, |fb| fb.execute_arc(inputs)),
+        }
+    }
+
+    fn traffic(&self) -> Option<crate::kernels::Traffic> {
+        self.primary.traffic()
+    }
+
+    fn stage_traffic(&self) -> Option<Vec<crate::kernels::Traffic>> {
+        self.primary.stage_traffic()
+    }
+
+    fn halo_words(&self) -> Option<Vec<u64>> {
+        self.primary.halo_words()
+    }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        Some(FaultStats {
+            panicked: self.panicked.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(f32);
+    impl Executable for Fixed {
+        fn execute(&self, _inputs: &[&Tensor4]) -> Result<Tensor4> {
+            let mut t = Tensor4::zeros([1, 1, 1, 1]);
+            t.data[0] = self.0;
+            Ok(t)
+        }
+    }
+
+    struct Exploding;
+    impl Executable for Exploding {
+        fn execute(&self, _inputs: &[&Tensor4]) -> Result<Tensor4> {
+            panic!("kaboom");
+        }
+    }
+
+    #[test]
+    fn panicking_primary_degrades_to_fallback() {
+        let fb = FallbackExec::new(
+            "test/exploding",
+            "fast",
+            "naive",
+            Box::new(Exploding),
+            Box::new(Fixed(42.0)),
+            None,
+        );
+        let out = fb.execute(&[]).unwrap();
+        assert_eq!(out.data[0], 42.0);
+        let s = fb.fault_stats().unwrap();
+        assert_eq!(s, FaultStats { panicked: 1, degraded: 1 });
+        // a second failure keeps counting
+        let _ = fb.execute(&[]).unwrap();
+        assert_eq!(fb.fault_stats().unwrap().panicked, 2);
+    }
+
+    #[test]
+    fn guarded_primary_without_fallback_surfaces_typed_error() {
+        let fb = FallbackExec::guard("test/exploding", "naive", Box::new(Exploding));
+        let e = fb.execute(&[]).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::WorkerPanicked);
+        assert!(e.to_string().contains("kaboom"), "got: {e}");
+        let s = fb.fault_stats().unwrap();
+        assert_eq!(s, FaultStats { panicked: 1, degraded: 0 });
+    }
+
+    #[test]
+    fn healthy_primary_passes_through_untouched() {
+        let fb = FallbackExec::new(
+            "test/fixed",
+            "fast",
+            "naive",
+            Box::new(Fixed(7.0)),
+            Box::new(Fixed(0.0)),
+            None,
+        );
+        assert_eq!(fb.execute(&[]).unwrap().data[0], 7.0);
+        assert_eq!(fb.fault_stats().unwrap(), FaultStats::default());
+    }
+
+    #[test]
+    fn reset_hook_runs_on_failure() {
+        use std::sync::atomic::AtomicUsize;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        let fb = FallbackExec::new(
+            "test/exploding",
+            "fast",
+            "naive",
+            Box::new(Exploding),
+            Box::new(Fixed(1.0)),
+            Some(Box::new(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            })),
+        );
+        let _ = fb.execute(&[]).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+}

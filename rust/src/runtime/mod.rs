@@ -20,13 +20,15 @@
 //!   wiring for tests and future backends.
 
 pub mod backend;
+pub mod fallback;
 pub mod hlostats;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use backend::{ExecBackend, Executable};
+pub use backend::{ExecBackend, Executable, FaultStats};
+pub use fallback::FallbackExec;
 pub use hlostats::{analyze_file, analyze_text, HloStats};
 pub use manifest::{ArtifactSpec, Manifest, NetworkSpec, NetworkStage};
 pub use native::NativeBackend;
@@ -214,6 +216,19 @@ impl Runtime {
     /// single-layer artifacts.
     pub fn halo_words(&self, key: &str) -> Option<Vec<u64>> {
         self.loaded.get(key).and_then(|a| a.exe.halo_words())
+    }
+
+    /// Aggregate fault counters (caught panics, degraded runs) across
+    /// every loaded artifact whose executable reports them — the server
+    /// folds this into [`crate::coordinator::ServerStats`] at shutdown.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut total = FaultStats::default();
+        for a in self.loaded.values() {
+            if let Some(s) = a.exe.fault_stats() {
+                total.add(s);
+            }
+        }
+        total
     }
 }
 

@@ -41,9 +41,9 @@ use crate::conv::{conv7nl_naive, ConvPass, ConvShape, Precision, Tensor4};
 use crate::err;
 use crate::kernels::{
     conv_network_bwd, conv_network_fused, conv_pass_tiled_parallel,
-    conv_tiled_parallel, conv_winograd_parallel, FusePlan, NetPass,
-    NetTrafficCounters, TilePlan, TilePlanCache, Traffic, TrafficCounters,
-    WinoPlan, DEFAULT_TILE_MEM_WORDS,
+    conv_tiled_parallel, conv_winograd_parallel, naive_network,
+    naive_network_bwd, FusePlan, NetPass, NetTrafficCounters, TilePlan,
+    TilePlanCache, Traffic, TrafficCounters, WinoPlan, DEFAULT_TILE_MEM_WORDS,
 };
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -51,7 +51,8 @@ use crate::util::threadpool::ThreadPool;
 pub use crate::kernels::conv_im2col;
 
 use super::backend::{ExecBackend, Executable};
-use super::manifest::{ArtifactSpec, NetworkSpec};
+use super::fallback::FallbackExec;
+use super::manifest::{ArtifactSpec, NetworkSpec, NetworkStage};
 
 /// The in-tree CPU backend.
 #[derive(Clone, Default)]
@@ -92,8 +93,18 @@ impl ExecBackend for NativeBackend {
         _path: Option<&Path>,
     ) -> Result<Box<dyn Executable>> {
         match spec.kind.as_str() {
-            "blocked" => Ok(Box::new(NaiveExec { shape: spec.layer_shape()? })),
-            "im2col" => Ok(Box::new(Im2colExec { shape: spec.layer_shape()? })),
+            // the naive/im2col paths ARE the simplest verified paths:
+            // nothing to degrade to, but panics still become typed errors
+            "blocked" => Ok(Box::new(FallbackExec::guard(
+                spec.key(),
+                "naive",
+                Box::new(NaiveExec { shape: spec.layer_shape()? }),
+            ))),
+            "im2col" => Ok(Box::new(FallbackExec::guard(
+                spec.key(),
+                "im2col",
+                Box::new(Im2colExec { shape: spec.layer_shape()? }),
+            ))),
             "tiled" => {
                 let shape = spec.layer_shape()?;
                 let plan = self.plans.plan(
@@ -101,11 +112,20 @@ impl ExecBackend for NativeBackend {
                     Precision::uniform(),
                     DEFAULT_TILE_MEM_WORDS,
                 );
-                Ok(Box::new(TiledExec {
-                    plan,
-                    pool: self.tiled_pool(),
-                    counters: Arc::new(TrafficCounters::new()),
-                }))
+                let counters = Arc::new(TrafficCounters::new());
+                let c = Arc::clone(&counters);
+                Ok(Box::new(FallbackExec::new(
+                    spec.key(),
+                    "tiled",
+                    "naive",
+                    Box::new(TiledExec {
+                        plan,
+                        pool: self.tiled_pool(),
+                        counters,
+                    }),
+                    Box::new(NaiveExec { shape }),
+                    Some(Box::new(move || c.reset())),
+                )))
             }
             "winograd" => {
                 let shape = spec.layer_shape()?;
@@ -114,11 +134,20 @@ impl ExecBackend for NativeBackend {
                     Precision::uniform(),
                     DEFAULT_TILE_MEM_WORDS,
                 ));
-                Ok(Box::new(WinogradExec {
-                    plan,
-                    pool: self.tiled_pool(),
-                    counters: Arc::new(TrafficCounters::new()),
-                }))
+                let counters = Arc::new(TrafficCounters::new());
+                let c = Arc::clone(&counters);
+                Ok(Box::new(FallbackExec::new(
+                    spec.key(),
+                    "winograd",
+                    "naive",
+                    Box::new(WinogradExec {
+                        plan,
+                        pool: self.tiled_pool(),
+                        counters,
+                    }),
+                    Box::new(NaiveExec { shape }),
+                    Some(Box::new(move || c.reset())),
+                )))
             }
             "dfilter" | "dinput" => {
                 let pass = ConvPass::parse(&spec.kind)
@@ -130,12 +159,21 @@ impl ExecBackend for NativeBackend {
                     Precision::uniform(),
                     DEFAULT_TILE_MEM_WORDS,
                 );
-                Ok(Box::new(PassExec {
-                    pass,
-                    plan,
-                    pool: self.tiled_pool(),
-                    counters: Arc::new(TrafficCounters::new()),
-                }))
+                let counters = Arc::new(TrafficCounters::new());
+                let c = Arc::clone(&counters);
+                Ok(Box::new(FallbackExec::new(
+                    spec.key(),
+                    if pass == ConvPass::DFilter { "dfilter" } else { "dinput" },
+                    "naive",
+                    Box::new(PassExec {
+                        pass,
+                        plan,
+                        pool: self.tiled_pool(),
+                        counters,
+                    }),
+                    Box::new(NaivePassExec { pass, shape }),
+                    Some(Box::new(move || c.reset())),
+                )))
             }
             "network" | "training" => Err(err!(
                 "artifact '{}' is a network pipeline but the manifest \
@@ -170,7 +208,9 @@ impl ExecBackend for NativeBackend {
                 spec.inputs.len()
             ));
         }
-        let counters = NetTrafficCounters::new(net.stages.len());
+        let counters = Arc::new(NetTrafficCounters::new(net.stages.len()));
+        let c = Arc::clone(&counters);
+        let reset: Box<dyn Fn() + Send + Sync> = Box::new(move || c.reset());
         match spec.kind.as_str() {
             "training" => {
                 let plan = Arc::new(FusePlan::for_pass(
@@ -179,11 +219,21 @@ impl ExecBackend for NativeBackend {
                     DEFAULT_TILE_MEM_WORDS,
                     &self.plans,
                 ));
-                Ok(Box::new(TrainingExec {
-                    plan,
-                    pool: self.tiled_pool(),
-                    counters,
-                }))
+                Ok(Box::new(FallbackExec::new(
+                    spec.key(),
+                    "fused-bwd",
+                    "layered",
+                    Box::new(TrainingExec {
+                        plan,
+                        pool: self.tiled_pool(),
+                        counters,
+                    }),
+                    Box::new(NaiveNetExec {
+                        stages: net.stages.clone(),
+                        pass: NetPass::Backward,
+                    }),
+                    Some(reset),
+                )))
             }
             _ => {
                 let plan = Arc::new(FusePlan::new(
@@ -191,11 +241,21 @@ impl ExecBackend for NativeBackend {
                     DEFAULT_TILE_MEM_WORDS,
                     &self.plans,
                 ));
-                Ok(Box::new(NetworkExec {
-                    plan,
-                    pool: self.tiled_pool(),
-                    counters,
-                }))
+                Ok(Box::new(FallbackExec::new(
+                    spec.key(),
+                    "fused",
+                    "layered",
+                    Box::new(NetworkExec {
+                        plan,
+                        pool: self.tiled_pool(),
+                        counters,
+                    }),
+                    Box::new(NaiveNetExec {
+                        stages: net.stages.clone(),
+                        pass: NetPass::Forward,
+                    }),
+                    Some(reset),
+                )))
             }
         }
     }
@@ -335,6 +395,40 @@ impl Executable for PassExec {
     }
 }
 
+/// The naive single-pass fallback for gradient kinds: runs the training
+/// oracle directly (uncounted, serial) — the exact function the tiled
+/// pass engine is bitwise-validated against.
+struct NaivePassExec {
+    pass: ConvPass,
+    shape: ConvShape,
+}
+
+impl Executable for NaivePassExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        Ok(self.pass.naive_oracle(inputs[0], inputs[1], &self.shape))
+    }
+}
+
+/// The layered (stage-by-stage naive) fallback for network pipelines:
+/// runs [`naive_network`] / [`naive_network_bwd`] — the exact staged
+/// oracles the fused executors are bitwise-validated against, so a
+/// degraded network answer is still bitwise-correct.
+struct NaiveNetExec {
+    stages: Vec<NetworkStage>,
+    pass: NetPass,
+}
+
+impl Executable for NaiveNetExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let head = inputs[0];
+        let filters: Vec<&Tensor4> = inputs[1..].to_vec();
+        Ok(match self.pass {
+            NetPass::Backward => naive_network_bwd(head, &filters, &self.stages),
+            _ => naive_network(head, &filters, &self.stages),
+        })
+    }
+}
+
 /// Executes a whole network pipeline through the `kernels/fuse` fused
 /// executor: fused groups sweep the last stage's output tiles with
 /// inter-layer activations held in scratch, materialized stages run the
@@ -342,7 +436,7 @@ impl Executable for PassExec {
 struct NetworkExec {
     plan: Arc<FusePlan>,
     pool: Arc<ThreadPool>,
-    counters: NetTrafficCounters,
+    counters: Arc<NetTrafficCounters>,
 }
 
 impl Executable for NetworkExec {
@@ -385,7 +479,7 @@ impl Executable for NetworkExec {
 struct TrainingExec {
     plan: Arc<FusePlan>,
     pool: Arc<ThreadPool>,
-    counters: NetTrafficCounters,
+    counters: Arc<NetTrafficCounters>,
 }
 
 impl Executable for TrainingExec {

@@ -1,0 +1,379 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec (CLI `--faults`, env
+//! `CONVBOUND_FAULTS`) and installed process-globally; instrumented
+//! *fault points* on the kernel and server hot paths consult it with one
+//! relaxed atomic load when disarmed, so production runs pay nothing.
+//!
+//! Spec grammar (rules joined with `;`):
+//!
+//! ```text
+//! spec   := rule (';' rule)*
+//! rule   := site ':' action (':' param)*
+//! site   := 'exec' | 'queue'
+//! action := 'panic' | 'error' | 'stall'
+//! param  := 'every=' N     fire on every N-th tick of the site (default 1)
+//!         | 'ms=' K        stall duration in milliseconds (default 10)
+//!         | 'times=' K     fire at most K times total (default 0 = unlimited)
+//! ```
+//!
+//! Examples: `exec:panic:every=7` panics every 7th kernel tile;
+//! `queue:stall:ms=50` turns the server's batch dispatch into a
+//! deterministic slow backend; `exec:error:every=1:times=1` fails exactly
+//! the first dispatch attempt (exercising the retry path).
+//!
+//! Determinism: rules tick monotone atomic counters — no clocks, no
+//! randomness — so a given spec against a given workload fires at exactly
+//! the same points on every run.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Once, PoisonError};
+use std::time::Duration;
+
+use crate::err;
+use crate::util::error::{Context, Result};
+
+/// Marker prefix carried by every injected panic payload, so log readers
+/// (and the quiet panic hook) can tell injected faults from real bugs.
+pub const INJECTED_PANIC: &str = "injected fault";
+
+/// Where a rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Kernel execution hot paths (per-tile panic/stall, per-attempt error).
+    Exec,
+    /// The server executor's batch dispatch (stall = slow backend).
+    Queue,
+}
+
+/// What a rule does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Panic,
+    Error,
+    Stall,
+}
+
+/// One parsed fault rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rule {
+    pub site: Site,
+    pub action: Action,
+    /// Fire on every `every`-th tick of the site (1 = every tick).
+    pub every: u64,
+    /// Stall duration for [`Action::Stall`].
+    pub ms: u64,
+    /// Fire at most this many times; 0 = unlimited.
+    pub times: u64,
+}
+
+/// A parsed, installable set of fault rules.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            rules.push(Rule::parse(part).with_context(|| format!("fault rule '{part}'"))?);
+        }
+        if rules.is_empty() {
+            return Err(err!("empty fault spec"));
+        }
+        Ok(FaultPlan { rules })
+    }
+}
+
+impl Rule {
+    fn parse(rule: &str) -> Result<Rule> {
+        let mut segs = rule.split(':');
+        let site = match segs.next().unwrap_or("") {
+            "exec" => Site::Exec,
+            "queue" => Site::Queue,
+            other => return Err(err!("unknown site '{other}' (expected exec|queue)")),
+        };
+        let action = match segs.next().unwrap_or("") {
+            "panic" => Action::Panic,
+            "error" => Action::Error,
+            "stall" => Action::Stall,
+            other => return Err(err!("unknown action '{other}' (expected panic|error|stall)")),
+        };
+        if site == Site::Queue && action != Action::Stall {
+            return Err(err!("site 'queue' only supports the 'stall' action"));
+        }
+        let mut rule = Rule { site, action, every: 1, ms: 10, times: 0 };
+        for param in segs {
+            let (key, val) = param
+                .split_once('=')
+                .ok_or_else(|| err!("parameter '{param}' is not key=value"))?;
+            let val: u64 = val
+                .parse()
+                .map_err(|_| err!("parameter '{key}' value '{val}' is not an integer"))?;
+            match key {
+                "every" => {
+                    if val == 0 {
+                        return Err(err!("every=0 would never tick; use 1 for every tick"));
+                    }
+                    rule.every = val;
+                }
+                "ms" => rule.ms = val,
+                "times" => rule.times = val,
+                other => return Err(err!("unknown parameter '{other}' (expected every|ms|times)")),
+            }
+        }
+        Ok(rule)
+    }
+}
+
+/// An installed plan plus its per-rule tick state.
+struct Active {
+    plan: FaultPlan,
+    /// Per-rule monotone tick counters (same order as `plan.rules`).
+    ticks: Vec<AtomicU64>,
+    /// Per-rule fire counts (for `times=` caps and test assertions).
+    fires: Vec<AtomicU64>,
+}
+
+impl Active {
+    /// Tick every rule matching (site, actions); returns the first rule
+    /// that fires this tick (with its fire ordinal), if any.
+    fn tick(&self, site: Site, actions: &[Action]) -> Option<(&Rule, u64)> {
+        let mut fired = None;
+        for (k, rule) in self.plan.rules.iter().enumerate() {
+            if rule.site != site || !actions.contains(&rule.action) {
+                continue;
+            }
+            let n = self.ticks[k].fetch_add(1, Ordering::Relaxed) + 1;
+            if n % rule.every != 0 {
+                continue;
+            }
+            let shot = self.fires[k].fetch_add(1, Ordering::Relaxed) + 1;
+            if rule.times != 0 && shot > rule.times {
+                continue;
+            }
+            if fired.is_none() {
+                fired = Some((rule, shot));
+            }
+        }
+        fired
+    }
+}
+
+/// One-load fast path: true iff a plan is installed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: Mutex<Option<Arc<Active>>> = Mutex::new(None);
+
+fn active() -> Option<Arc<Active>> {
+    ACTIVE
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone()
+}
+
+/// True iff a fault plan is installed (one relaxed load).
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Install a plan process-globally (replacing any previous one) and
+/// silence the default panic-hook noise for injected panics.
+pub fn install(plan: FaultPlan) {
+    quiet_injected_panics();
+    let active = Active {
+        ticks: plan.rules.iter().map(|_| AtomicU64::new(0)).collect(),
+        fires: plan.rules.iter().map(|_| AtomicU64::new(0)).collect(),
+        plan,
+    };
+    *ACTIVE.lock().unwrap_or_else(PoisonError::into_inner) = Some(Arc::new(active));
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Parse and install a spec string.
+pub fn install_spec(spec: &str) -> Result<()> {
+    install(FaultPlan::parse(spec)?);
+    Ok(())
+}
+
+/// Disarm: remove any installed plan.
+pub fn clear() {
+    ARMED.store(false, Ordering::SeqCst);
+    *ACTIVE.lock().unwrap_or_else(PoisonError::into_inner) = None;
+}
+
+/// Install from `CONVBOUND_FAULTS` if set (ignored when unset; a bad
+/// spec is an error so CI can't silently run fault-free).
+pub fn init_from_env() -> Result<()> {
+    match std::env::var("CONVBOUND_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install_spec(&spec).context("CONVBOUND_FAULTS")
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Total fires across all rules of `site` so far.
+pub fn fired(site: Site) -> u64 {
+    let Some(a) = active() else { return 0 };
+    a.plan
+        .rules
+        .iter()
+        .zip(&a.fires)
+        .filter(|(r, _)| r.site == site)
+        .map(|(_, f)| f.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Per-tile fault point on the kernel hot paths: panics or stalls when an
+/// armed `exec:panic` / `exec:stall` rule fires. No-op (one atomic load)
+/// when disarmed.
+pub fn exec_point() {
+    if !armed() {
+        return;
+    }
+    let Some(a) = active() else { return };
+    if let Some((rule, shot)) = a.tick(Site::Exec, &[Action::Panic, Action::Stall]) {
+        match rule.action {
+            Action::Stall => std::thread::sleep(Duration::from_millis(rule.ms)),
+            _ => panic!("{INJECTED_PANIC}: exec panic (fire {shot})"),
+        }
+    }
+}
+
+/// Per-attempt fault point at executable dispatch: returns an injected
+/// error when an `exec:error` rule fires.
+pub fn exec_error_point() -> Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    let Some(a) = active() else { return Ok(()) };
+    if let Some((_, shot)) = a.tick(Site::Exec, &[Action::Error]) {
+        return Err(err!("{INJECTED_PANIC}: exec error (fire {shot})"));
+    }
+    Ok(())
+}
+
+/// Batch-dispatch fault point in the server executor: sleeps when a
+/// `queue:stall` rule fires — a deterministic slow backend for
+/// backpressure and deadline tests.
+pub fn queue_point() {
+    if !armed() {
+        return;
+    }
+    let Some(a) = active() else { return };
+    if let Some((rule, _)) = a.tick(Site::Queue, &[Action::Stall]) {
+        std::thread::sleep(Duration::from_millis(rule.ms));
+    }
+}
+
+/// Suppress the default panic-hook backtrace/noise for payloads carrying
+/// the [`INJECTED_PANIC`] marker; every other panic still reports through
+/// whatever hook was installed before.
+fn quiet_injected_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.starts_with(INJECTED_PANIC))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.starts_with(INJECTED_PANIC))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Fault state is process-global; tests that *arm* faults serialize on
+/// this gate so concurrent test threads cannot observe each other's
+/// injections. Dropping the guard disarms.
+static TEST_GATE: Mutex<()> = Mutex::new(());
+
+/// RAII guard: holds the global test gate with a plan installed; disarms
+/// on drop. Use from integration tests only — arming faults perturbs
+/// every instrumented path in the process.
+pub struct ArmedGuard {
+    _gate: MutexGuard<'static, ()>,
+}
+
+/// Install `plan` under the global test gate.
+pub fn arm_scoped(plan: FaultPlan) -> ArmedGuard {
+    let gate = TEST_GATE.lock().unwrap_or_else(PoisonError::into_inner);
+    install(plan);
+    ArmedGuard { _gate: gate }
+}
+
+impl Drop for ArmedGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: in-lib tests must not arm panic/error rules — kernel tests
+    // running concurrently in this process would observe them. Parsing is
+    // covered here; the arming behavior is covered by the serialized
+    // integration tests in `tests/faults_e2e.rs`.
+
+    #[test]
+    fn parses_the_documented_examples() {
+        let p = FaultPlan::parse("exec:panic:every=7").unwrap();
+        assert_eq!(
+            p.rules,
+            vec![Rule { site: Site::Exec, action: Action::Panic, every: 7, ms: 10, times: 0 }]
+        );
+
+        let p = FaultPlan::parse("queue:stall:ms=50").unwrap();
+        assert_eq!(
+            p.rules,
+            vec![Rule { site: Site::Queue, action: Action::Stall, every: 1, ms: 50, times: 0 }]
+        );
+
+        let p = FaultPlan::parse("exec:error:every=1:times=1; queue:stall:ms=5").unwrap();
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].times, 1);
+        assert_eq!(p.rules[1].ms, 5);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "exec",
+            "exec:detonate",
+            "disk:panic",
+            "exec:panic:every=0",
+            "exec:panic:every=x",
+            "exec:panic:sometimes",
+            "exec:panic:when=later",
+            "queue:panic", // queue only stalls
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn disarmed_points_are_no_ops() {
+        // no plan installed in this process outside arm_scoped tests
+        assert!(!armed() || true); // points must be callable regardless
+        exec_point();
+        assert!(exec_error_point().is_ok() || armed());
+        queue_point();
+    }
+}

@@ -5,6 +5,8 @@
 //! produced by the caller-supplied `shrink` hook. Keep generators simple:
 //! the framework favors clarity over proptest's full strategy algebra.
 
+pub mod faults;
+
 use crate::util::rng::Rng;
 
 /// Configuration for a property run.

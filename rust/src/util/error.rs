@@ -11,11 +11,33 @@
 
 use std::fmt;
 
+/// Machine-readable discriminant on an [`Error`]. The serving layer
+/// matches on it to pick a recovery: `QueueFull`/`DeadlineExceeded` are
+/// load-shedding outcomes a client may retry elsewhere, `WorkerPanicked`
+/// marks a caught panic (the dispatch is retried once and may degrade to
+/// a fallback path), `Shutdown` is terminal for this server/pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ErrorKind {
+    /// Plain error with no recovery semantics (the `err!` default).
+    #[default]
+    Other,
+    /// Bounded admission queue rejected the request under `Shed` overflow.
+    QueueFull,
+    /// The request's deadline expired before it reached a batch slot.
+    DeadlineExceeded,
+    /// A worker/job panicked; the panic was caught and converted.
+    WorkerPanicked,
+    /// The server or pool was already shut down.
+    Shutdown,
+}
+
 /// A chained error: the root cause plus any context frames wrapped around
-/// it, stored outermost-first.
+/// it, stored outermost-first, and a [`ErrorKind`] discriminant that
+/// survives context wrapping.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Error {
     frames: Vec<String>,
+    kind: ErrorKind,
 }
 
 /// Crate-wide result alias.
@@ -24,13 +46,25 @@ pub type Result<T> = std::result::Result<T, Error>;
 impl Error {
     /// A new root error from a message.
     pub fn msg(msg: impl Into<String>) -> Error {
-        Error { frames: vec![msg.into()] }
+        Error { frames: vec![msg.into()], kind: ErrorKind::Other }
     }
 
-    /// Wrap this error with one more (outermost) context frame.
+    /// A new root error carrying a machine-readable kind.
+    pub fn typed(kind: ErrorKind, msg: impl Into<String>) -> Error {
+        Error { frames: vec![msg.into()], kind }
+    }
+
+    /// Wrap this error with one more (outermost) context frame. The kind
+    /// is preserved — context describes where the error surfaced, not
+    /// what it is.
     pub fn context(mut self, msg: impl Into<String>) -> Error {
         self.frames.insert(0, msg.into());
         self
+    }
+
+    /// The machine-readable discriminant.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 
     /// The innermost (root-cause) message.
@@ -142,6 +176,25 @@ mod tests {
         let j = crate::util::json::Json::parse("{oops").unwrap_err();
         let e: Error = j.into();
         assert!(e.to_string().contains("json error"));
+    }
+
+    #[test]
+    fn typed_errors_expose_their_kind() {
+        let e = Error::typed(ErrorKind::QueueFull, "queue full (4 requests)");
+        assert_eq!(e.kind(), ErrorKind::QueueFull);
+        assert_eq!(e.to_string(), "queue full (4 requests)");
+        // the default constructor and the macro stay `Other`
+        assert_eq!(fails().unwrap_err().kind(), ErrorKind::Other);
+    }
+
+    #[test]
+    fn context_preserves_the_kind() {
+        let e = Error::typed(ErrorKind::WorkerPanicked, "worker panicked: boom");
+        let wrapped: Result<()> = Err(e);
+        let e = wrapped.context("dispatching batch 3").unwrap_err().context("serving");
+        assert_eq!(e.kind(), ErrorKind::WorkerPanicked);
+        assert_eq!(e.to_string(), "serving: dispatching batch 3: worker panicked: boom");
+        assert_eq!(e.root_cause(), "worker panicked: boom");
     }
 
     #[test]

@@ -3,10 +3,19 @@
 //! The coordinator uses this to run per-layer convolution executions and
 //! tiling searches in parallel. Jobs are `FnOnce() + Send` closures; results
 //! flow back through regular channels owned by the caller.
+//!
+//! Fault tolerance: a panicking job cannot take its worker (or the
+//! process) down — every job runs under `catch_unwind`, and the batched
+//! entry point [`ThreadPool::run_batch`] surfaces per-item panics as
+//! typed [`ErrorKind::WorkerPanicked`] errors so callers decide whether
+//! to fail one item, retry, or degrade to a fallback path.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+use crate::util::error::{Error, ErrorKind, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -19,6 +28,18 @@ enum Msg {
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
     workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Render a caught panic payload (the `&str`/`String` cases cover
+/// `panic!` with a message; anything else gets a generic label).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl ThreadPool {
@@ -35,7 +56,13 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = rx.lock().unwrap().recv();
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Run(job)) => {
+                                // a panicking job must not kill its worker:
+                                // the failure is reported through whatever
+                                // channel the job owns, never by unwinding
+                                // a pool thread
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
@@ -45,13 +72,20 @@ impl ThreadPool {
         ThreadPool { tx, workers }
     }
 
-    /// Submit a job. Panics if the pool has been shut down.
+    /// Submit a job. A job submitted during/after teardown (workers gone,
+    /// channel closed) is silently dropped — batched callers observe the
+    /// lost slot as a typed error from [`ThreadPool::run_batch`] instead
+    /// of the process aborting on a closed channel.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+        let _ = self.tx.send(Msg::Run(Box::new(f)));
     }
 
-    /// Convenience: map `f` over `items` in parallel, preserving order.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    /// Run `f` over `items` in parallel, preserving order, isolating
+    /// per-item failures: a panicking item yields
+    /// `Err(ErrorKind::WorkerPanicked)` carrying the panic message, a
+    /// slot lost to pool teardown yields `Err(ErrorKind::Shutdown)`, and
+    /// every other item still completes normally.
+    pub fn run_batch<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R>>
     where
         T: Send + 'static,
         R: Send + 'static,
@@ -64,17 +98,51 @@ impl ThreadPool {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.execute(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item))).map_err(|p| {
+                    Error::typed(
+                        ErrorKind::WorkerPanicked,
+                        format!("worker panicked: {}", panic_message(p.as_ref())),
+                    )
+                });
                 // receiver may be gone if the caller panicked; ignore
                 let _ = tx.send((i, r));
             });
         }
         drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<Result<R>>> = (0..n).map(|_| None).collect();
         for (i, r) in rx {
             out[i] = Some(r);
         }
-        out.into_iter().map(|r| r.expect("worker completed")).collect()
+        out.into_iter()
+            .map(|r| {
+                r.unwrap_or_else(|| {
+                    Err(Error::typed(
+                        ErrorKind::Shutdown,
+                        "pool shut down before the job ran",
+                    ))
+                })
+            })
+            .collect()
+    }
+
+    /// Convenience: map `f` over `items` in parallel, preserving order.
+    /// Propagates the first failed item by panicking in the *caller* with
+    /// the original failure message — the pool and its workers stay alive,
+    /// and an enclosing `catch_unwind` (e.g. the runtime's fallback
+    /// wrapper) sees the real cause.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        self.run_batch(items, f)
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(e) => panic!("{e}"),
+            })
+            .collect()
     }
 }
 
@@ -93,6 +161,7 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
 
     #[test]
     fn runs_all_jobs() {
@@ -131,5 +200,68 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1u64, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn run_batch_isolates_panicking_items() {
+        let pool = ThreadPool::new(2);
+        let out = pool.run_batch(vec![0u32, 1, 2, 3], |x| {
+            if x % 2 == 1 {
+                panic!("boom on {x}");
+            }
+            x * 10
+        });
+        assert_eq!(out.len(), 4);
+        assert_eq!(*out[0].as_ref().unwrap(), 0);
+        assert_eq!(*out[2].as_ref().unwrap(), 20);
+        for i in [1usize, 3] {
+            let e = out[i].as_ref().unwrap_err();
+            assert_eq!(e.kind(), ErrorKind::WorkerPanicked);
+            assert!(e.to_string().contains("boom on"), "got: {e}");
+        }
+        // the pool survives the panics and still serves work
+        assert_eq!(pool.map(vec![5i32, 6], |x| x + 1), vec![6, 7]);
+    }
+
+    #[test]
+    fn map_propagates_worker_panic_to_caller() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![1u32, 2, 3], |x| {
+                if x == 2 {
+                    panic!("injected");
+                }
+                x
+            })
+        }));
+        let msg = panic_message(caught.unwrap_err().as_ref());
+        assert!(msg.contains("worker panicked: injected"), "got: {msg}");
+        // caller-side panic, pool still alive
+        assert_eq!(pool.map(vec![7u32], |x| x), vec![7]);
+    }
+
+    #[test]
+    fn execute_survives_teardown_race() {
+        // Reproduce the drop-order race that used to abort the process:
+        // all workers exit (dropping the shared receiver) while a caller
+        // still holds the pool and submits work.
+        let pool = ThreadPool::new(2);
+        for _ in 0..2 {
+            pool.tx.send(Msg::Shutdown).unwrap();
+        }
+        // wait for the workers to exit and drop the receiver; extra
+        // Shutdown probes are never received, so a send error means the
+        // channel is really closed
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while pool.tx.send(Msg::Shutdown).is_ok() {
+            assert!(Instant::now() < deadline, "workers never exited");
+            thread::sleep(Duration::from_millis(1));
+        }
+        pool.execute(|| {}); // must not panic (used to `expect("pool alive")`)
+        let out = pool.run_batch(vec![1u32, 2], |x| x);
+        for r in out {
+            assert_eq!(r.unwrap_err().kind(), ErrorKind::Shutdown);
+        }
+        drop(pool); // and drop still joins cleanly
     }
 }

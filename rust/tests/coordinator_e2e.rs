@@ -41,7 +41,7 @@ fn server_answers_correctly_and_batches() {
         .collect();
 
     for (img, rx) in images.iter().zip(pending) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("ok");
         // oracle on the single image
         let want = conv7nl_naive(img, &weights, &shape);
         let rel = resp.output.rel_l2(&want);
@@ -79,7 +79,7 @@ fn server_routes_through_tiled_engine() {
         .map(|img| server.submit(img.clone()).expect("submit"))
         .collect();
     for (img, rx) in images.iter().zip(pending) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("ok");
         let want = conv7nl_naive(img, &weights, &shape);
         let rel = resp.output.rel_l2(&want);
         assert!(rel < 1e-4, "tiled request: rel_l2 {rel}");
@@ -130,7 +130,7 @@ fn server_serves_whole_network_requests() {
         .map(|img| server.submit(img.clone()).expect("submit"))
         .collect();
     for (img, rx) in images.iter().zip(pending) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("ok");
         let want =
             convbound::kernels::naive_network(img, &wrefs, &one_img_stages);
         assert_eq!(
@@ -204,7 +204,7 @@ fn server_serves_gradient_requests_through_training_kind() {
         .map(|g| server.submit(g.clone()).expect("submit"))
         .collect();
     for (g, rx) in grads.iter().zip(pending) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("ok");
         let want =
             convbound::kernels::naive_network_bwd(g, &wrefs, &one_img_stages);
         assert_eq!(
@@ -237,7 +237,7 @@ fn zero_copy_submit_accepts_shared_images() {
         .collect();
     let want = conv7nl_naive(&img, &weights, &shape);
     for rx in pending {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("ok");
         assert!(resp.output.rel_l2(&want) < 1e-5);
     }
     server.shutdown().expect("shutdown");
@@ -286,7 +286,7 @@ fn concurrent_submitters_all_served() {
             for i in 0..8 {
                 let img = Tensor4::randn(dims, (t * 100 + i) as u64);
                 let rx = server.submit(img).expect("submit");
-                let resp = rx.recv().expect("response");
+                let resp = rx.recv().expect("response").expect("ok");
                 assert_eq!(resp.output.dims[0], 1);
             }
         }));
@@ -297,6 +297,38 @@ fn concurrent_submitters_all_served() {
     let server = std::sync::Arc::into_inner(server).expect("sole owner");
     let stats = server.shutdown().expect("shutdown");
     assert_eq!(stats.requests, 32);
+}
+
+/// Regression: a client that drops its reply receiver before (or after)
+/// the response is computed must not kill the executor — the worker-side
+/// `reply.send` on a closed channel is ignored, and later requests are
+/// still served.
+#[test]
+fn dropped_client_does_not_crash_the_server() {
+    let (spec, shape) = layer_spec();
+    let wd = spec.inputs[1].clone();
+    let xd = spec.inputs[0].clone();
+    let weights = Tensor4::randn([wd[0], wd[1], wd[2], wd[3]], 31);
+    let server =
+        ConvServer::start_builtin(KEY, weights.clone(), Duration::from_millis(2))
+            .expect("server");
+
+    // drop the receiver immediately: the executor still runs the job and
+    // its reply lands on a closed channel
+    let img = Tensor4::randn([1, xd[1], xd[2], xd[3]], 32);
+    drop(server.submit(img).expect("submit"));
+
+    // the server keeps serving afterwards
+    let img2 = Tensor4::randn([1, xd[1], xd[2], xd[3]], 33);
+    let rx = server.submit(img2.clone()).expect("submit after drop");
+    let resp = rx.recv().expect("response").expect("ok");
+    let want = conv7nl_naive(&img2, &weights, &shape);
+    assert!(resp.output.rel_l2(&want) < 1e-5);
+
+    let stats = server.shutdown().expect("shutdown");
+    // the dropped request still executed and was booked as completed
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.failed, 0);
 }
 
 /// Regression: shutdown under load must return promptly.
@@ -342,7 +374,8 @@ fn shutdown_under_load_returns_promptly_and_flushes() {
 
     let resp = rx
         .recv_timeout(Duration::from_secs(1))
-        .expect("in-flight request must still be answered");
+        .expect("in-flight request must still be answered")
+        .expect("flushed batch answers ok");
     let want = conv7nl_naive(&img, &weights, &shape);
     assert!(resp.output.rel_l2(&want) < 1e-5);
 }
@@ -384,7 +417,7 @@ fn traced_server_log_reproduces_server_stats_exactly() {
         })
         .collect();
     for rx in pending {
-        rx.recv().expect("response");
+        rx.recv().expect("response").expect("ok");
     }
     let stats = server.shutdown().expect("shutdown");
 
@@ -400,6 +433,20 @@ fn traced_server_log_reproduces_server_stats_exactly() {
     let s = obs::summarize_text(&text).expect("summarize");
     assert_eq!(s.requests, stats.requests);
     assert_eq!(s.dropped_requests, stats.failed);
+    // a healthy run has zero fault activity — on both sides of the replay
+    assert_eq!(
+        (stats.shed, stats.expired, stats.panicked, stats.degraded),
+        (0, 0, 0, 0)
+    );
+    assert_eq!(
+        (s.shed, s.expired, s.panicked, s.degraded),
+        (
+            stats.shed,
+            stats.expired,
+            stats.panicked,
+            stats.degraded
+        )
+    );
     assert_eq!(s.batches, stats.batches);
     assert_eq!(s.padded_slots, stats.padded_slots);
     assert_eq!(s.peak_queue_depth, stats.peak_queue_depth);

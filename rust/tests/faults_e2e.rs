@@ -1,0 +1,347 @@
+//! Integration: the fault-tolerance layer under deterministic injected
+//! faults (DESIGN.md §12) — kernel panics degrade to verified fallbacks
+//! with bitwise-correct outputs, bounded queues shed or backpressure,
+//! deadlines shed expired work, dispatch errors fail only their batch,
+//! and the books balance through all of it.
+//!
+//! Fault state is process-global, so every test here arms its plan with
+//! [`faults::arm_scoped`], which serializes the tests on a global gate
+//! and disarms on drop. This binary is its own process, so arming can
+//! never perturb the lib/kernel test binaries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use convbound::conv::{conv7nl_naive, Tensor4};
+use convbound::coordinator::{
+    ConvServer, Overflow, QueuePolicy, ServerOptions,
+};
+use convbound::runtime::{ArtifactSpec, Manifest, NetworkStage};
+use convbound::testkit::faults::{self, FaultPlan, Site};
+use convbound::util::error::ErrorKind;
+
+fn builtin_spec(key: &str) -> ArtifactSpec {
+    Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH)
+        .find(key)
+        .unwrap_or_else(|| panic!("builtin key {key}"))
+        .clone()
+}
+
+fn weights_for(spec: &ArtifactSpec, seed: u64) -> Vec<Tensor4> {
+    spec.inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            Tensor4::randn([d[0], d[1], d[2], d[3]], seed + i as u64)
+        })
+        .collect()
+}
+
+fn image_for(spec: &ArtifactSpec, seed: u64) -> Tensor4 {
+    let d = &spec.inputs[0];
+    Tensor4::randn([1, d[1], d[2], d[3]], seed)
+}
+
+/// Injected per-tile panics inside the fused network executor must never
+/// fail a request: the native backend's FallbackExec catches them, reruns
+/// the batch on the layer-by-layer naive oracle, and the response stays
+/// bitwise identical to the per-image oracle. The process survives every
+/// panic, and ServerStats reports the panics and degradations.
+#[test]
+fn injected_tile_panics_degrade_to_fallback_and_stay_bitwise() {
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("exec:panic:every=3").expect("spec"),
+    );
+    let m = Manifest::builtin(convbound::runtime::manifest::BUILTIN_BATCH);
+    let net = m.network("tiny_resnet").expect("builtin network").clone();
+    let spec = builtin_spec("tiny_resnet/network");
+    let weights = weights_for(&spec, 60);
+    let server = ConvServer::start_builtin_network(
+        "tiny_resnet/network",
+        weights.clone(),
+        Duration::from_millis(3),
+    )
+    .expect("network server under faults");
+
+    // per-image oracle: the same chain at batch 1
+    let one_img_stages: Vec<NetworkStage> = net
+        .stages
+        .iter()
+        .map(|st| NetworkStage {
+            shape: st.shape.with_batch(1),
+            precision: st.precision,
+        })
+        .collect();
+    let wrefs: Vec<&Tensor4> = weights.iter().collect();
+
+    let n_req = spec.inputs[0][0] + 1; // forces a second (padded) batch
+    let images: Vec<Tensor4> =
+        (0..n_req).map(|i| image_for(&spec, 800 + i as u64)).collect();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).expect("submit"))
+        .collect();
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx
+            .recv()
+            .expect("response")
+            .expect("request must survive injected panics");
+        let want = convbound::kernels::naive_network(
+            img,
+            &wrefs,
+            &one_img_stages,
+        );
+        assert_eq!(
+            resp.output.max_abs_diff(&want),
+            0.0,
+            "degraded execution must stay bitwise-correct"
+        );
+    }
+    let stats = server.shutdown().expect("server survives injected panics");
+    assert_eq!(stats.requests, n_req as u64);
+    assert_eq!(stats.failed, 0, "panics must degrade, not fail requests");
+    assert!(stats.panicked >= 1, "the injected panics were caught: {stats:?}");
+    assert!(stats.degraded >= 1, "the batches reran on the fallback: {stats:?}");
+    assert!(faults::fired(Site::Exec) >= 1);
+}
+
+/// A bounded `Shed` queue over a deterministically slow backend: the
+/// queue depth can never exceed capacity, excess submits fail fast with
+/// typed `QueueFull` errors, and the client's books agree with the
+/// server's at shutdown (`submitted == ok + failed + expired + shed`).
+#[test]
+fn shed_policy_bounds_queue_depth_and_books_balance() {
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("queue:stall:ms=40").expect("spec"),
+    );
+    let spec = builtin_spec("unit3x3/blocked");
+    let cap = 3u64;
+    let server = ConvServer::start_builtin_opts(
+        "unit3x3/blocked",
+        weights_for(&spec, 7),
+        ServerOptions {
+            queue: Some(QueuePolicy { capacity: cap, overflow: Overflow::Shed }),
+            deadline: None,
+            linger: Duration::from_millis(1),
+        },
+    )
+    .expect("shed server");
+
+    let total = 32u64;
+    let mut pending = Vec::new();
+    let mut client_shed = 0u64;
+    for i in 0..total {
+        match server.submit(image_for(&spec, 100 + i)) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                assert_eq!(e.kind(), ErrorKind::QueueFull, "got: {e}");
+                assert!(e.to_string().contains("queue full"), "got: {e}");
+                client_shed += 1;
+            }
+        }
+    }
+    let mut ok = 0u64;
+    for rx in pending {
+        rx.recv().expect("response").expect("admitted requests complete");
+        ok += 1;
+    }
+    let stats = server.shutdown().expect("shutdown");
+    assert!(
+        client_shed >= 1,
+        "a 40ms-per-batch backend behind a 3-deep queue must shed some of \
+         32 fast submits"
+    );
+    assert_eq!(stats.shed, client_shed);
+    assert_eq!(stats.requests, ok);
+    assert!(
+        stats.peak_queue_depth <= cap,
+        "Shed must bound the queue: peak {} > capacity {cap}",
+        stats.peak_queue_depth
+    );
+    assert_eq!(
+        stats.requests + stats.failed + stats.expired + stats.shed,
+        total,
+        "the books must balance: {stats:?}"
+    );
+}
+
+/// A bounded `Block` queue applies backpressure instead of shedding:
+/// every submit eventually lands, the enqueue-time depth never exceeds
+/// capacity, and nothing is shed.
+#[test]
+fn block_policy_applies_backpressure() {
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("queue:stall:ms=25").expect("spec"),
+    );
+    let spec = builtin_spec("unit3x3/blocked");
+    let cap = 2u64;
+    let server = Arc::new(
+        ConvServer::start_builtin_opts(
+            "unit3x3/blocked",
+            weights_for(&spec, 9),
+            ServerOptions {
+                queue: Some(QueuePolicy {
+                    capacity: cap,
+                    overflow: Overflow::Block,
+                }),
+                deadline: None,
+                linger: Duration::from_millis(1),
+            },
+        )
+        .expect("block server"),
+    );
+
+    let completed = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let server = Arc::clone(&server);
+        let completed = Arc::clone(&completed);
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            let pending: Vec<_> = (0..8u64)
+                .map(|i| {
+                    server
+                        .submit(image_for(&spec, t * 100 + i))
+                        .expect("Block submit never sheds")
+                })
+                .collect();
+            for rx in pending {
+                rx.recv().expect("response").expect("ok");
+                completed.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("submitter thread");
+    }
+    let server = Arc::into_inner(server).expect("sole owner");
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(completed.load(Ordering::SeqCst), 32);
+    assert_eq!(stats.requests, 32);
+    assert_eq!(stats.shed, 0, "Block never sheds");
+    assert!(
+        stats.peak_queue_depth <= cap,
+        "backpressure must bound the queue: peak {} > capacity {cap}",
+        stats.peak_queue_depth
+    );
+}
+
+/// Per-request deadlines shed expired work at dequeue — before it wastes
+/// a batch slot — with typed `DeadlineExceeded` replies, and the expiries
+/// are booked separately from failures.
+#[test]
+fn deadlines_shed_expired_work_at_dequeue() {
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("queue:stall:ms=60").expect("spec"),
+    );
+    let spec = builtin_spec("unit3x3/blocked");
+    let server = ConvServer::start_builtin_opts(
+        "unit3x3/blocked",
+        weights_for(&spec, 11),
+        ServerOptions {
+            queue: None,
+            deadline: Some(Duration::from_millis(10)),
+            linger: Duration::from_millis(2),
+        },
+    )
+    .expect("deadline server");
+
+    let total = 12u64;
+    let pending: Vec<_> = (0..total)
+        .map(|i| server.submit(image_for(&spec, 200 + i)).expect("submit"))
+        .collect();
+    let mut ok = 0u64;
+    let mut expired = 0u64;
+    for rx in pending {
+        match rx.recv().expect("every request gets a reply") {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                assert_eq!(e.kind(), ErrorKind::DeadlineExceeded, "got: {e}");
+                expired += 1;
+            }
+        }
+    }
+    let stats = server.shutdown().expect("shutdown");
+    assert!(
+        expired >= 1,
+        "a 60ms-per-batch backend must expire some 10ms-deadline requests"
+    );
+    assert_eq!(stats.requests, ok);
+    assert_eq!(stats.expired, expired);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(
+        stats.requests + stats.expired,
+        total,
+        "the books must balance: {stats:?}"
+    );
+}
+
+/// An injected dispatch error on every attempt fails only the affected
+/// batches — each request gets a typed error reply, the executor and
+/// server survive, and the books still balance.
+#[test]
+fn dispatch_errors_fail_only_the_batch_and_server_survives() {
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("exec:error:every=1").expect("spec"),
+    );
+    let spec = builtin_spec("unit3x3/blocked");
+    let server = ConvServer::start_builtin(
+        "unit3x3/blocked",
+        weights_for(&spec, 13).remove(0),
+        Duration::from_millis(1),
+    )
+    .expect("server");
+
+    let total = 6u64;
+    let pending: Vec<_> = (0..total)
+        .map(|i| server.submit(image_for(&spec, 300 + i)).expect("submit"))
+        .collect();
+    for rx in pending {
+        let reply = rx.recv().expect("failed requests still get a reply");
+        let e = reply.expect_err("every dispatch attempt was injected to fail");
+        assert!(e.to_string().contains("injected fault"), "got: {e}");
+    }
+    let stats = server.shutdown().expect("server survives failed batches");
+    assert_eq!(stats.requests, 0);
+    assert_eq!(stats.failed, total);
+    assert_eq!(stats.failed + stats.requests, total, "books: {stats:?}");
+    // both attempts of each batch consulted the fault point
+    assert!(faults::fired(Site::Exec) >= 2);
+}
+
+/// `times=1` caps the injection at the first dispatch attempt: the
+/// executor's single retry recovers the batch, so the fault fired but no
+/// request failed.
+#[test]
+fn single_retry_recovers_a_once_injected_dispatch_error() {
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("exec:error:every=1:times=1").expect("spec"),
+    );
+    let spec = builtin_spec("unit3x3/blocked");
+    let shape = spec
+        .layer_shape()
+        .expect("single-layer spec")
+        .with_batch(1);
+    let weights = weights_for(&spec, 17).remove(0);
+    let server = ConvServer::start_builtin(
+        "unit3x3/blocked",
+        weights.clone(),
+        Duration::from_millis(1),
+    )
+    .expect("server");
+
+    let img = image_for(&spec, 400);
+    let rx = server.submit(img.clone()).expect("submit");
+    let resp = rx
+        .recv()
+        .expect("response")
+        .expect("the retry must recover the batch");
+    let want = conv7nl_naive(&img, &weights, &shape);
+    assert!(resp.output.rel_l2(&want) < 1e-5);
+
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.failed, 0, "one injected error + one retry = no failure");
+    assert!(faults::fired(Site::Exec) >= 1, "the fault must actually fire");
+}
