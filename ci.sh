@@ -80,12 +80,27 @@ echo "==> serve a whole network with injected panics: every request still answer
 cargo run --release -- serve --requests 16 --key tiny_resnet/network \
     --faults exec:panic:every=5 --check >/dev/null
 
-echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json + BENCH_training.json)"
-rm -f BENCH_kernels.json BENCH_network.json BENCH_training.json  # stale files must not mask a failed write
+echo "==> exec --network tiny_resnet --shards 4 --shard-by auto --check  (sharded engine: bitwise vs staged + exact exchange)"
+cargo run --release -- exec --network tiny_resnet --shards 4 --shard-by auto --check >/dev/null
+
+echo "==> exec --layer conv4_x --shards 2 --faults exec:panic:every=1 --check  (a panicking shard degrades, output still bitwise)"
+cargo run --release -- exec --layer conv4_x --scale 4 --shards 2 --shard-by batch \
+    --faults exec:panic:every=1 --check \
+    | tee /tmp/convbound_ci_shard_faults_out.txt
+grep -q "DEGRADED" /tmp/convbound_ci_shard_faults_out.txt \
+    || { echo "FAIL: injected shard panics did not trigger the degraded path"; exit 1; }
+
+echo "==> serve a whole network through the sharded executor: every request still answered"
+cargo run --release -- serve --requests 16 --key tiny_resnet/network \
+    --shards 4 --shard-by auto --check >/dev/null
+
+echo "==> cargo bench --bench e2e_runtime -- --smoke  (writes BENCH_kernels.json + BENCH_network.json + BENCH_training.json + BENCH_parallel.json)"
+rm -f BENCH_kernels.json BENCH_network.json BENCH_training.json BENCH_parallel.json  # stale files must not mask a failed write
 cargo bench --bench e2e_runtime -- --smoke >/dev/null
 test -s BENCH_kernels.json || { echo "FAIL: BENCH_kernels.json missing"; exit 1; }
 test -s BENCH_network.json || { echo "FAIL: BENCH_network.json missing"; exit 1; }
 test -s BENCH_training.json || { echo "FAIL: BENCH_training.json missing"; exit 1; }
+test -s BENCH_parallel.json || { echo "FAIL: BENCH_parallel.json missing"; exit 1; }
 
 echo "==> BENCH_kernels.json: tracing overhead within budget"
 # the traced-vs-untraced pair runs INSIDE the bench; here we gate on the
@@ -139,6 +154,26 @@ grep -q '"halo_saved_words_total":' BENCH_network.json \
 # least one network (a nonzero total starts with a nonzero digit)
 grep -Eq '"halo_saved_words_total":[1-9]' BENCH_network.json \
     || { echo "FAIL: halo cache saved no words on any builtin network"; exit 1; }
+
+echo "==> BENCH_parallel.json: measured exchange == analytic parallel volume for every strategy"
+# the hard gates (bitwise vs the staged engine, verify_exchange) run INSIDE
+# the bench — a violation panics it. Here we assert each strategy's rows
+# carry the exactness flag (keys are alphabetical: measured_vs_bound_ok
+# precedes strategy within a row object).
+for strategy in batch channel spatial; do
+    grep -Eq '"measured_vs_bound_ok":true[^}]*"strategy":"'"$strategy"'"' BENCH_parallel.json \
+        || { echo "FAIL: no exact-exchange row for strategy $strategy in BENCH_parallel.json"; exit 1; }
+    if grep -Eq '"measured_vs_bound_ok":false[^}]*"strategy":"'"$strategy"'"' BENCH_parallel.json; then
+        echo "FAIL: strategy $strategy has a row whose measured exchange != the analytic model"
+        exit 1
+    fi
+done
+
+echo "==> BENCH_parallel.json: sharded speedup recorded at P=4"
+# the speedup>1 acceptance asserts INSIDE the bench when >= 4 cores are
+# available; here we only require the field to be present in the document
+grep -q '"speedup_gt1_at_p4":' BENCH_parallel.json \
+    || { echo "FAIL: speedup_gt1_at_p4 missing from BENCH_parallel.json"; exit 1; }
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "==> cargo fmt --check"

@@ -132,6 +132,57 @@ pub fn fft_volume_par(s: &ConvShape, p: Precision, procs: f64, m: f64) -> f64 {
     vol
 }
 
+// ---------------------------------------------------------------------------
+// Per-strategy exact shard-exchange volumes (words, integral).
+//
+// These are the *executable* counterparts of the models above: the sharded
+// engine in `kernels/shard.rs` partitions one conv layer across `active`
+// in-process workers and its measured inter-shard words must equal these
+// formulas EXACTLY (same contract as `expected_traffic` for memory words).
+// Ownership follows the Theorem 2.3 setting — every operand starts inside
+// the distributed memory, load-balanced along the sharded dimension — so a
+// shard is charged only the words it must *receive* from a peer.
+
+/// Number of shards that actually hold work when a dimension of extent
+/// `dim` is split `shards` ways: `min(shards, dim)`, at least 1. Extra
+/// shards idle (degenerate P > N case) and neither send nor receive.
+pub fn shard_active(dim: u64, shards: u64) -> u64 {
+    shards.min(dim).max(1)
+}
+
+/// Batch sharding: each shard owns its batch slice of the input and writes
+/// its batch slice of the output locally; the only exchange is the filter
+/// broadcast to the `active - 1` shards that don't hold the (unsharded)
+/// filter tensor.
+pub fn batch_shard_words(s: &ConvShape, active: u64) -> u64 {
+    s.filter_size() * active.saturating_sub(1)
+}
+
+/// Input-channel sharding: each shard owns a `c_i` slice of the input and
+/// the matching filter rows, and produces a *partial sum* over the full
+/// output. The partials are combined by a traveling accumulator visiting
+/// shards in ascending order (preserving the accumulation-order contract),
+/// so `active - 1` shards each receive the full |O|-word accumulator.
+pub fn channel_shard_words(s: &ConvShape, active: u64) -> u64 {
+    s.output_size() * active.saturating_sub(1)
+}
+
+/// Spatial (output-height) sharding, halo exchange only: shard k owns the
+/// input rows its output rows map onto (`σ_h` rows per output row; the last
+/// active shard also owns the `h_f`-row tail), and must receive the `h_f`
+/// overlap rows past its core from its successor — `active - 1` halos of
+/// `n · c_i · in_w · h_f` words each.
+pub fn spatial_halo_words(s: &ConvShape, active: u64) -> u64 {
+    active.saturating_sub(1) * s.n * s.c_i * s.in_w() * s.h_f
+}
+
+/// Spatial sharding, total exchange: the halo rows plus the same filter
+/// broadcast batch sharding pays (every shard convolves with the full
+/// filter).
+pub fn spatial_shard_words(s: &ConvShape, active: u64) -> u64 {
+    spatial_halo_words(s, active) + s.filter_size() * active.saturating_sub(1)
+}
+
 /// Evaluate every model at processor count `procs` (memory `m` words each).
 pub fn parallel_volumes(s: &ConvShape, p: Precision, procs: u64, m: f64) -> ParVolumes {
     let pf = procs as f64;
@@ -193,6 +244,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shard_active_clamps() {
+        assert_eq!(shard_active(8, 4), 4);
+        assert_eq!(shard_active(3, 8), 3); // P > N: only N shards work
+        assert_eq!(shard_active(5, 1), 1);
+        assert_eq!(shard_active(0, 4), 1); // degenerate dim still has 1 shard
+    }
+
+    #[test]
+    fn batch_shard_words_hand_computed() {
+        // n=4, cI=2, cO=3, wO=5, hO=5, f=3x3, stride 1:
+        // |F| = 2*3*3*3 = 54; 4 active shards -> 3 receive the filter.
+        let s = ConvShape::new(4, 2, 3, 5, 5, 3, 3, 1, 1);
+        assert_eq!(s.filter_size(), 54);
+        assert_eq!(batch_shard_words(&s, 4), 3 * 54);
+        assert_eq!(batch_shard_words(&s, 1), 0); // single shard: no exchange
+    }
+
+    #[test]
+    fn channel_shard_words_hand_computed() {
+        // |O| = 4*3*5*5 = 300; the accumulator visits 2 of 3 shards.
+        let s = ConvShape::new(4, 2, 3, 5, 5, 3, 3, 1, 1);
+        assert_eq!(s.output_size(), 300);
+        assert_eq!(channel_shard_words(&s, 3), 2 * 300);
+        assert_eq!(channel_shard_words(&s, 1), 0);
+    }
+
+    #[test]
+    fn spatial_shard_words_hand_computed() {
+        // in_w = 1*5+3 = 8; one halo = n*cI*in_w*hF = 4*2*8*3 = 192 words;
+        // 2 active shards -> 1 halo + 1 filter copy.
+        let s = ConvShape::new(4, 2, 3, 5, 5, 3, 3, 1, 1);
+        assert_eq!(s.in_w(), 8);
+        assert_eq!(spatial_halo_words(&s, 2), 192);
+        assert_eq!(spatial_shard_words(&s, 2), 192 + 54);
+        assert_eq!(spatial_shard_words(&s, 1), 0);
+    }
+
+    #[test]
+    fn strided_spatial_halo_uses_filter_rows_not_stride() {
+        // stride 2, f=3: the overlap past a shard's owned core is still
+        // h_f rows regardless of stride. n=1, cI=1, wO=4, in_w=2*4+3=11.
+        let s = ConvShape::new(1, 1, 1, 4, 4, 3, 3, 2, 2);
+        assert_eq!(spatial_halo_words(&s, 4), 3 * 11 * 3);
     }
 
     #[test]

@@ -50,6 +50,7 @@ use super::exec::{
 use super::fuse::{FusePlan, FusedExec, NetPass};
 use super::im2col::conv_im2col;
 use super::plan::{TilePlan, TilePlanCache};
+use super::shard::{exec_sharded, ShardPlan, ShardStrategy, ShardTrafficCounters};
 use super::winograd::{conv_winograd, expected_winograd_traffic, WinoPlan};
 
 /// Sidecar schema version this binary writes. Readers accept any version
@@ -180,6 +181,9 @@ pub struct Autotuner {
     /// keys on the full [`ConvShape`]; the sidecar persists them next to
     /// the kernel choices, under the same (M, precision) staleness rule
     net_choices: Mutex<HashMap<(String, u64, u64, NetPass), NetKernelKind>>,
+    /// per-(network, shard count) sharding-strategy choices, keyed like
+    /// `net_choices` with the worker count in place of the pass
+    shard_choices: Mutex<HashMap<(String, u64, u64, u64), ShardStrategy>>,
     /// when set (the default), probe timing skips candidates whose
     /// analytic traffic is > [`PRUNE_TRAFFIC_RATIO`]× the best candidate's
     pub prune_probes: bool,
@@ -223,6 +227,7 @@ impl Autotuner {
             plans: TilePlanCache::new(),
             choices: Mutex::new(HashMap::new()),
             net_choices: Mutex::new(HashMap::new()),
+            shard_choices: Mutex::new(HashMap::new()),
             prune_probes: true,
             pruned: AtomicU64::new(0),
         }
@@ -600,6 +605,156 @@ impl Autotuner {
                 &[
                     ("pass", js(pass.name())),
                     ("stages", ju(stages.len() as u64)),
+                    ("kernel", js(best.0.name())),
+                    ("secs", jf(best.1)),
+                ],
+            );
+        }
+        best.0
+    }
+
+    /// Measure-once shard-strategy selection for `shards` virtual
+    /// workers: every strategy's *exact* analytic exchange volume
+    /// (`ShardPlan::expected_exchange`, the same numbers the executor's
+    /// gate enforces) sets the LP-pruning floor — candidates whose volume
+    /// exceeds it by >[`PRUNE_TRAFFIC_RATIO`]× are never timed — and the
+    /// survivors race on a batch-clamped probe. Falls back to the analytic
+    /// minimum (what `--shard-by auto` picks) when even the probe would
+    /// exceed the MAC budget. Cached per `(name, batch, chain, shards)`.
+    pub fn select_shard(
+        &self,
+        name: &str,
+        stages: &[NetworkStage],
+        shards: u64,
+    ) -> ShardStrategy {
+        assert!(!stages.is_empty(), "empty network");
+        let key = (
+            name.to_string(),
+            stages[0].shape.n,
+            stages_fingerprint(stages),
+            shards,
+        );
+        if let Some(s) = self
+            .shard_choices
+            .lock()
+            .expect("shard choices poisoned")
+            .get(&key)
+        {
+            return *s;
+        }
+        let auto =
+            ShardPlan::auto(stages, shards, self.mem_words, &self.plans).strategy;
+        let probe: Vec<NetworkStage> = stages
+            .iter()
+            .map(|st| NetworkStage {
+                shape: st.shape.with_batch(st.shape.n.min(2)),
+                precision: st.precision,
+            })
+            .collect();
+        let macs: u64 = probe.iter().map(|st| st.shape.updates()).sum();
+        let strategy = if macs > MEASURE_BUDGET_MACS {
+            auto
+        } else {
+            self.measure_shard(auto, &probe, stages, shards)
+        };
+        self.shard_choices
+            .lock()
+            .expect("shard choices poisoned")
+            .insert(key, strategy);
+        strategy
+    }
+
+    fn measure_shard(
+        &self,
+        keep: ShardStrategy,
+        probe: &[NetworkStage],
+        stages: &[NetworkStage],
+        shards: u64,
+    ) -> ShardStrategy {
+        let head = &probe[0].shape;
+        let image = Arc::new(Tensor4::randn(
+            [
+                head.n as usize,
+                head.c_i as usize,
+                head.in_w() as usize,
+                head.in_h() as usize,
+            ],
+            1,
+        ));
+        let filters: Vec<Arc<Tensor4>> = probe
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                Arc::new(Tensor4::randn(st.shape.filter_dims(), 2 + i as u64))
+            })
+            .collect();
+        // prune on the FULL chain's analytic volumes (what deployment
+        // pays), time on the clamped probe
+        let analytic: Vec<f64> = ShardStrategy::ALL
+            .iter()
+            .map(|&st| {
+                ShardPlan::new(stages, st, shards, self.mem_words, &self.plans)
+                    .expected_exchange()
+                    .total() as f64
+            })
+            .collect();
+        let floor = analytic.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut pruned = 0u64;
+        let mut best = (keep, f64::INFINITY);
+        for (&strategy, &words) in ShardStrategy::ALL.iter().zip(&analytic) {
+            if self.prune_probes
+                && strategy != keep
+                && words > PRUNE_TRAFFIC_RATIO * floor.max(1.0)
+            {
+                pruned += 1;
+                if obs::enabled() {
+                    obs::event(
+                        obs::kind::AUTOTUNE_PROBE,
+                        &[
+                            ("pass", js("shard")),
+                            ("shards", ju(shards)),
+                            ("candidate", js(strategy.name())),
+                            ("analytic_words", jf(words)),
+                            ("pruned", jb(true)),
+                        ],
+                    );
+                }
+                continue;
+            }
+            let plan = Arc::new(ShardPlan::new(
+                probe, strategy, shards, self.mem_words, &self.plans,
+            ));
+            let counters = Arc::new(ShardTrafficCounters::new(plan.workers()));
+            let t0 = Instant::now();
+            let ok = std::hint::black_box(exec_sharded(
+                &image, &filters, &plan, &counters,
+            ))
+            .is_ok();
+            let secs = t0.elapsed().as_secs_f64();
+            if obs::enabled() {
+                obs::event(
+                    obs::kind::AUTOTUNE_PROBE,
+                    &[
+                        ("pass", js("shard")),
+                        ("shards", ju(shards)),
+                        ("candidate", js(strategy.name())),
+                        ("analytic_words", jf(words)),
+                        ("secs", jf(secs)),
+                        ("pruned", jb(false)),
+                    ],
+                );
+            }
+            if ok && secs < best.1 {
+                best = (strategy, secs);
+            }
+        }
+        self.note_pruned(pruned, ShardStrategy::ALL.len(), "shard", "shard-strategy");
+        if obs::enabled() {
+            obs::event(
+                obs::kind::AUTOTUNE_SELECT,
+                &[
+                    ("pass", js("shard")),
+                    ("shards", ju(shards)),
                     ("kernel", js(best.0.name())),
                     ("secs", jf(best.1)),
                 ],

@@ -135,7 +135,7 @@ impl TrafficCounters {
     }
 }
 
-fn out_dims(s: &ConvShape) -> [usize; 4] {
+pub(crate) fn out_dims(s: &ConvShape) -> [usize; 4] {
     [s.n as usize, s.c_o as usize, s.w_o as usize, s.h_o as usize]
 }
 
@@ -280,7 +280,10 @@ impl Drop for NetTraceGuard {
 }
 
 /// Execute every reduction tile against one resident output tile; returns
-/// the accumulated `[bn][bwo][bho][bco]` buffer.
+/// the accumulated `[bn][bwo][bho][bco]` buffer. When `seed` is given the
+/// buffer starts from that tensor's values instead of zero — the
+/// association-preserving continuation used by the channel-sharded
+/// traveling accumulator.
 fn run_out_tile(
     x: &Tensor4,
     w: &Tensor4,
@@ -288,6 +291,7 @@ fn run_out_tile(
     ot: OutTile,
     red: &[RedTile],
     counters: &TrafficCounters,
+    seed: Option<&Tensor4>,
 ) -> Vec<f32> {
     crate::testkit::faults::exec_point();
     let s = &plan.shape;
@@ -298,6 +302,9 @@ fn run_out_tile(
     let bwo = ot.wo.len as usize;
     let bho = ot.ho.len as usize;
     let mut out = vec![0.0f32; bn * bwo * bho * bco];
+    if let Some(acc) = seed {
+        gather_seed(acc, &ot, &mut out);
+    }
     // pack buffers live across the whole reduction loop (and grow to the
     // interior-block size once): no per-tile allocation on the hot path
     let mut xin: Vec<f32> = Vec::new();
@@ -332,6 +339,28 @@ fn run_out_tile(
     }
     counters.add_output(out.len() as u64);
     out
+}
+
+/// Read one output-tile region of `acc` into a buffer laid out exactly as
+/// [`scatter`] expects (`[bn][bwo][bho][bco]`).
+fn gather_seed(acc: &Tensor4, ot: &OutTile, buf: &mut [f32]) {
+    let bn = ot.n.len as usize;
+    let bco = ot.co.len as usize;
+    let bwo = ot.wo.len as usize;
+    let bho = ot.ho.len as usize;
+    let (n0, co0) = (ot.n.start as usize, ot.co.start as usize);
+    let (wo0, ho0) = (ot.wo.start as usize, ot.ho.start as usize);
+    let mut k = 0;
+    for n in 0..bn {
+        for i4 in 0..bwo {
+            for i5 in 0..bho {
+                for co in 0..bco {
+                    buf[k] = acc.at(n0 + n, co0 + co, wo0 + i4, ho0 + i5);
+                    k += 1;
+                }
+            }
+        }
+    }
 }
 
 /// Write one finished output-tile buffer into the output tensor.
@@ -374,7 +403,7 @@ pub fn conv_tiled_counted(
     let red = tiles::reduction_tiles(plan);
     let mut out = Tensor4::zeros(out_dims(s));
     for ot in &outs {
-        let buf = run_out_tile(x, w, plan, *ot, &red, counters);
+        let buf = run_out_tile(x, w, plan, *ot, &red, counters, None);
         scatter(&mut out, ot, &buf);
     }
     tg.finish(plan, counters);
@@ -384,6 +413,40 @@ pub fn conv_tiled_counted(
 /// Serial tiled convolution (counters discarded).
 pub fn conv_tiled(x: &Tensor4, w: &Tensor4, plan: &TilePlan) -> Tensor4 {
     conv_tiled_counted(x, w, plan, &TrafficCounters::new())
+}
+
+/// Tiled convolution that *adds onto* `acc` instead of writing a fresh
+/// output: every output-tile buffer is seeded from `acc`, the reduction
+/// tiles run in the standard ci-outermost order, and the result is
+/// scattered back in place.
+///
+/// Seeding-then-adding appends this plan's MAC contributions to the
+/// accumulator in exactly the f32 operation order the single-node engine
+/// would have used had it continued past the seed's ci blocks — so a chain
+/// of these calls over an ascending input-channel partition is bitwise
+/// identical to one unsharded [`conv_tiled_counted`] run (the channel-shard
+/// accumulation-order contract, DESIGN.md §13).
+pub fn conv_tiled_accumulate_counted(
+    x: &Tensor4,
+    w: &Tensor4,
+    plan: &TilePlan,
+    acc: &mut Tensor4,
+    counters: &TrafficCounters,
+) {
+    let s = &plan.shape;
+    crate::conv::assert_conv_operands(x, w, s);
+    assert_eq!(acc.dims, out_dims(s), "accumulator shape mismatch");
+    if s.updates() == 0 {
+        return;
+    }
+    let tg = PassTraceGuard::start(counters);
+    let outs = tiles::output_tiles(plan);
+    let red = tiles::reduction_tiles(plan);
+    for ot in &outs {
+        let buf = run_out_tile(x, w, plan, *ot, &red, counters, Some(acc));
+        scatter(acc, ot, &buf);
+    }
+    tg.finish(plan, counters);
 }
 
 /// Tiled convolution with output tiles fanned out over a [`ThreadPool`].
@@ -412,7 +475,7 @@ pub fn conv_tiled_parallel(
     let (x2, w2, p2) = (Arc::clone(x), Arc::clone(w), Arc::clone(plan));
     let (r2, c2) = (Arc::clone(&red), Arc::clone(counters));
     let bufs = pool.map(outs.clone(), move |ot| {
-        run_out_tile(&x2, &w2, &p2, ot, &r2, &c2)
+        run_out_tile(&x2, &w2, &p2, ot, &r2, &c2, None)
     });
     let mut out = Tensor4::zeros(out_dims(&s));
     for (ot, buf) in outs.iter().zip(&bufs) {
@@ -858,7 +921,7 @@ impl NetTrafficCounters {
 }
 
 /// Validate the (image, per-stage filters) operands of a network chain.
-fn assert_network_operands(image: &Tensor4, filters: &[&Tensor4], stages: &[NetworkStage]) {
+pub(crate) fn assert_network_operands(image: &Tensor4, filters: &[&Tensor4], stages: &[NetworkStage]) {
     assert!(!stages.is_empty(), "empty network");
     assert_eq!(filters.len(), stages.len(), "one filter per stage");
     crate::conv::assert_conv_operands(image, filters[0], &stages[0].shape);
@@ -1925,7 +1988,7 @@ pub fn conv_network_bwd(
 
 /// Extract batch rows `tn` of `t` as an owned tensor (the batch axis is
 /// outermost, so a block is one contiguous slice).
-fn batch_block(t: &Tensor4, tn: Blk) -> Tensor4 {
+pub(crate) fn batch_block(t: &Tensor4, tn: Blk) -> Tensor4 {
     let stride = t.dims[1] * t.dims[2] * t.dims[3];
     let s0 = tn.start as usize * stride;
     let s1 = s0 + tn.len as usize * stride;
@@ -1936,7 +1999,7 @@ fn batch_block(t: &Tensor4, tn: Blk) -> Tensor4 {
 }
 
 /// Write a batch block back at rows `tn` of `out`.
-fn scatter_batch_block(out: &mut Tensor4, tn: Blk, blk: &Tensor4) {
+pub(crate) fn scatter_batch_block(out: &mut Tensor4, tn: Blk, blk: &Tensor4) {
     let stride = out.dims[1] * out.dims[2] * out.dims[3];
     let s0 = tn.start as usize * stride;
     out.data[s0..s0 + blk.data.len()].copy_from_slice(&blk.data);

@@ -32,11 +32,17 @@
 //!   exact analytic traffic model ([`expected_winograd_traffic`]);
 //!   validated against the naive oracle via a documented ULP-scaled
 //!   tolerance ([`winograd_tolerance`]) since transforms reassociate.
+//! * [`shard`] — sharded parallel execution across in-process virtual
+//!   workers (batch / channel / spatial partitions, plus analytic `auto`):
+//!   per-shard tiled engines on clamped sub-plans, explicit halo/reduce
+//!   exchange buffers counted by [`ShardTrafficCounters`], and the
+//!   measured-vs-analytic parallel-volume gate against `commvol::par`.
 //! * [`autotune`] — per-shape kernel selection (naive / im2col / tiled /
 //!   winograd)
 //!   and per-network mode selection (fused-packed / fused-reference /
 //!   materialized), heuristic or measure-once, with a JSON sidecar for
-//!   warm-starting selection across process restarts.
+//!   warm-starting selection across process restarts; network probes and
+//!   shard-strategy probes are LP-pruned by their exact analytic traffic.
 //!
 //! `pack` is crate-private: the packing layouts are implementation details
 //! of [`exec`]. `gemm` is private too, but its axpy microkernels are
@@ -50,6 +56,7 @@ mod gemm;
 pub mod im2col;
 mod pack;
 pub mod plan;
+pub mod shard;
 pub mod tiles;
 pub mod winograd;
 
@@ -70,6 +77,10 @@ pub use fuse::{
 pub use gemm::{axpy, axpy_scalar};
 pub use im2col::conv_im2col;
 pub use plan::{TilePlan, TilePlanCache, DEFAULT_TILE_MEM_WORDS};
+pub use shard::{
+    exec_sharded, staged_reference, verify_exchange, ShardPlan, ShardStrategy,
+    ShardTraffic, ShardTrafficCounters,
+};
 pub use tiles::{output_tiles, reduction_tiles, Blk, OutTile, RedTile};
 pub use winograd::{
     conv_winograd, conv_winograd_counted, conv_winograd_parallel,

@@ -1,0 +1,975 @@
+//! Sharded parallel execution across in-process virtual workers — the
+//! executing half of the paper's *parallel* communication story
+//! (Theorems 2.2/2.3).
+//!
+//! A [`ShardPlan`] partitions one conv layer or a whole stage chain across
+//! `P` virtual nodes under one of three strategies:
+//!
+//! * **Batch** — each shard owns a contiguous batch slice; activations
+//!   never cross shards, only the filter broadcast does.
+//! * **Channel** — each shard owns an input-channel slice of the input
+//!   and the matching filter rows, and contributes *partial sums* over
+//!   the full output. Partials are combined by a traveling accumulator
+//!   that visits shards in ascending order, so the f32 additions land in
+//!   exactly the order the single-node engine would have issued them
+//!   (the accumulation-order contract) — bitwise, not just close.
+//! * **Spatial** — each shard owns a contiguous band of output rows plus
+//!   the input rows they map onto; before each stage it receives the
+//!   `h_f`-row halo (and, when the band layout shifts between stages,
+//!   any redistributed rows) from its peers.
+//!
+//! Every shard runs the existing LP-blocked tiled engine on its sub-shape
+//! (a clamped clone of the full-shape [`TilePlan`], so per-element
+//! reduction order is untouched), and every word crossing a shard
+//! boundary moves through an explicit exchange buffer tallied by
+//! [`ShardTrafficCounters`]. The gate: measured exchange words must equal
+//! [`ShardPlan::expected_per_shard`] *exactly* — the same
+//! measured-vs-analytic contract `TrafficCounters` enforces for memory
+//! traffic — while the assembled output stays bitwise identical to the
+//! single-node staged engine. Exchange phases rendezvous on
+//! [`ShardBarrier`] (no spin-waits), and a panicking shard breaks the
+//! barrier so peers fail fast with a typed error instead of hanging.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::conv::{ConvPass, ConvShape, NetworkStage, Tensor4};
+use crate::obs::{self, jb, js, ju};
+use crate::util::ceil_div;
+use crate::util::error::{Error, ErrorKind, Result};
+use crate::util::threadpool::{panic_message, ShardBarrier, ThreadPool};
+
+use super::exec::{
+    self, conv_tiled_accumulate_counted, conv_tiled_counted, TrafficCounters,
+};
+use super::plan::{TilePlan, TilePlanCache};
+use super::tiles::{self, Blk};
+
+// ---------------- strategies ----------------
+
+/// How a layer/network is partitioned across virtual workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    Batch,
+    Channel,
+    Spatial,
+}
+
+impl ShardStrategy {
+    /// Tie-break order for `auto`: batch first (cheapest to reason
+    /// about), then spatial, then channel.
+    pub const ALL: [ShardStrategy; 3] =
+        [ShardStrategy::Batch, ShardStrategy::Spatial, ShardStrategy::Channel];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::Batch => "batch",
+            ShardStrategy::Channel => "channel",
+            ShardStrategy::Spatial => "spatial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "batch" => Some(ShardStrategy::Batch),
+            "channel" => Some(ShardStrategy::Channel),
+            "spatial" => Some(ShardStrategy::Spatial),
+            _ => None,
+        }
+    }
+}
+
+// ---------------- exchange accounting ----------------
+
+/// Words one shard *received* from peers, by exchange class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardTraffic {
+    /// Spatial overlap/redistribution rows of activations.
+    pub halo_words: u64,
+    /// Broadcast/redistribution of operands a shard doesn't own (the
+    /// filter under batch/spatial sharding; next-stage channel slices
+    /// under channel sharding).
+    pub gather_words: u64,
+    /// The traveling partial-sum accumulator under channel sharding.
+    pub reduce_words: u64,
+}
+
+impl ShardTraffic {
+    pub fn total(&self) -> u64 {
+        self.halo_words + self.gather_words + self.reduce_words
+    }
+}
+
+#[derive(Default)]
+struct ShardCell {
+    halo: AtomicU64,
+    gather: AtomicU64,
+    reduce: AtomicU64,
+}
+
+/// Per-shard atomic tallies of inter-shard exchange words, charged at the
+/// copy site by the *receiving* shard (the paper's convention: a
+/// processor pays for the words it must fetch).
+pub struct ShardTrafficCounters {
+    cells: Vec<ShardCell>,
+}
+
+impl ShardTrafficCounters {
+    pub fn new(workers: usize) -> ShardTrafficCounters {
+        ShardTrafficCounters {
+            cells: (0..workers.max(1)).map(|_| ShardCell::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn add_halo(&self, shard: usize, words: u64) {
+        self.cells[shard].halo.fetch_add(words, Ordering::Relaxed);
+    }
+
+    pub fn add_gather(&self, shard: usize, words: u64) {
+        self.cells[shard].gather.fetch_add(words, Ordering::Relaxed);
+    }
+
+    pub fn add_reduce(&self, shard: usize, words: u64) {
+        self.cells[shard].reduce.fetch_add(words, Ordering::Relaxed);
+    }
+
+    pub fn shard(&self, k: usize) -> ShardTraffic {
+        let c = &self.cells[k];
+        ShardTraffic {
+            halo_words: c.halo.load(Ordering::Relaxed),
+            gather_words: c.gather.load(Ordering::Relaxed),
+            reduce_words: c.reduce.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn total(&self) -> ShardTraffic {
+        let mut t = ShardTraffic::default();
+        for k in 0..self.cells.len() {
+            let s = self.shard(k);
+            t.halo_words += s.halo_words;
+            t.gather_words += s.gather_words;
+            t.reduce_words += s.reduce_words;
+        }
+        t
+    }
+
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.halo.store(0, Ordering::Relaxed);
+            c.gather.store(0, Ordering::Relaxed);
+            c.reduce.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------- the plan ----------------
+
+/// A partition of a stage chain across `shards` virtual workers: the
+/// full-shape tile plan per stage (the engine every shard's sub-plan is
+/// clamped from) plus the per-stage chunk table along the sharded
+/// dimension. A single layer is a one-stage chain.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub stages: Vec<NetworkStage>,
+    pub strategy: ShardStrategy,
+    /// Requested worker count `P`; fewer may be active when the sharded
+    /// dimension is smaller (idle shards neither send nor receive).
+    pub shards: u64,
+    /// Full-shape forward plans per stage — shared with the single-node
+    /// engine so sharded sub-plans inherit identical blocking.
+    pub stage_plans: Vec<Arc<TilePlan>>,
+    /// Per stage: the active shards' extents along the sharded dimension
+    /// (batch rows, input channels, or output-height rows).
+    pub chunks: Vec<Vec<Blk>>,
+}
+
+fn even_chunks(dim: u64, shards: u64) -> Vec<Blk> {
+    tiles::split(dim.max(1), ceil_div(dim.max(1), shards.max(1)))
+}
+
+fn stage_chunks(
+    s: &ConvShape,
+    plan: &TilePlan,
+    strategy: ShardStrategy,
+    shards: u64,
+) -> Vec<Blk> {
+    match strategy {
+        ShardStrategy::Batch => even_chunks(s.n, shards),
+        ShardStrategy::Spatial => even_chunks(s.h_o, shards),
+        ShardStrategy::Channel => {
+            // a channel chunk must be a union of consecutive full-plan ci
+            // blocks, so the traveling accumulator replays the reduction
+            // tiles in exactly the single-node order
+            let blocks = tiles::split(plan.ranges[1], plan.blocks[1]);
+            even_chunks(blocks.len() as u64, shards)
+                .iter()
+                .map(|g| {
+                    let lo = g.start as usize;
+                    let hi = (g.start + g.len) as usize;
+                    Blk {
+                        start: blocks[lo].start,
+                        len: blocks[lo..hi].iter().map(|b| b.len).sum(),
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+impl ShardPlan {
+    pub fn new(
+        stages: &[NetworkStage],
+        strategy: ShardStrategy,
+        shards: u64,
+        mem_words: f64,
+        cache: &TilePlanCache,
+    ) -> ShardPlan {
+        assert!(!stages.is_empty(), "empty stage chain");
+        assert!(shards >= 1, "need at least one shard");
+        let stage_plans: Vec<Arc<TilePlan>> = stages
+            .iter()
+            .map(|st| {
+                cache.plan_pass(ConvPass::Forward, &st.shape, st.precision, mem_words)
+            })
+            .collect();
+        let chunks = stages
+            .iter()
+            .zip(&stage_plans)
+            .map(|(st, sp)| stage_chunks(&st.shape, sp, strategy, shards))
+            .collect();
+        ShardPlan { stages: stages.to_vec(), strategy, shards, stage_plans, chunks }
+    }
+
+    /// Pick the strategy with minimum total analytic exchange volume
+    /// (ties resolved in [`ShardStrategy::ALL`] order).
+    pub fn auto(
+        stages: &[NetworkStage],
+        shards: u64,
+        mem_words: f64,
+        cache: &TilePlanCache,
+    ) -> ShardPlan {
+        let mut best: Option<(u64, ShardPlan)> = None;
+        for strat in ShardStrategy::ALL {
+            let p = ShardPlan::new(stages, strat, shards, mem_words, cache);
+            let words = p.expected_exchange().total();
+            if best.as_ref().map_or(true, |(w, _)| words < *w) {
+                best = Some((words, p));
+            }
+        }
+        best.unwrap().1
+    }
+
+    /// Active shards at stage `j` (≤ `shards`; the rest idle there).
+    pub fn active(&self, j: usize) -> usize {
+        self.chunks[j].len()
+    }
+
+    /// Virtual workers the executor spawns: the max active count over the
+    /// chain (a stage's band layout can need more shards than an earlier
+    /// stage's — all of them run every barrier phase).
+    pub fn workers(&self) -> usize {
+        self.chunks.iter().map(Vec::len).max().unwrap_or(1)
+    }
+
+    /// The analytic per-shard exchange triple this plan's execution must
+    /// match exactly. Computed purely from the chunk tables by interval
+    /// arithmetic — an independent code path from the executor's
+    /// copy-site counting, so the measured==expected gate is non-vacuous.
+    pub fn expected_per_shard(&self) -> Vec<ShardTraffic> {
+        let mut out = vec![ShardTraffic::default(); self.workers()];
+        match self.strategy {
+            ShardStrategy::Batch => {
+                for (j, st) in self.stages.iter().enumerate() {
+                    for k in 1..self.chunks[j].len() {
+                        out[k].gather_words += st.shape.filter_size();
+                    }
+                }
+            }
+            ShardStrategy::Spatial => {
+                for j in 0..self.stages.len() {
+                    let s = &self.stages[j].shape;
+                    let row = s.n * s.c_i * s.in_w();
+                    let a = self.chunks[j].len();
+                    for (k, c) in self.chunks[j].iter().enumerate() {
+                        let need = (s.s_h * c.start, s.s_h * (c.start + c.len) + s.h_f);
+                        let have = if j == 0 {
+                            // initial placement: the input rows this
+                            // shard's band maps onto; the last active
+                            // shard also owns the h_f-row tail
+                            let tail = if k == a - 1 { s.h_f } else { 0 };
+                            Some((s.s_h * c.start, s.s_h * (c.start + c.len) + tail))
+                        } else {
+                            self.chunks[j - 1].get(k).map(|p| (p.start, p.start + p.len))
+                        };
+                        let covered = have.map_or(0, |(h0, h1)| {
+                            h1.min(need.1).saturating_sub(h0.max(need.0))
+                        });
+                        out[k].halo_words += row * (need.1 - need.0 - covered);
+                    }
+                    for k in 1..a {
+                        out[k].gather_words += s.filter_size();
+                    }
+                }
+            }
+            ShardStrategy::Channel => {
+                for j in 0..self.stages.len() {
+                    let s = &self.stages[j].shape;
+                    let a = self.chunks[j].len();
+                    for k in 1..a {
+                        out[k].reduce_words += s.output_size();
+                    }
+                    if j + 1 < self.stages.len() {
+                        // the full stage output lives on the ring tail;
+                        // everyone else receives its next-stage ci slice
+                        let tail = a - 1;
+                        let nxt = &self.stages[j + 1].shape;
+                        let plane = nxt.n * nxt.in_w() * nxt.in_h();
+                        for (k, c) in self.chunks[j + 1].iter().enumerate() {
+                            if k != tail {
+                                out[k].gather_words += plane * c.len;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total analytic exchange volume across all shards and stages.
+    pub fn expected_exchange(&self) -> ShardTraffic {
+        let mut t = ShardTraffic::default();
+        for s in self.expected_per_shard() {
+            t.halo_words += s.halo_words;
+            t.gather_words += s.gather_words;
+            t.reduce_words += s.reduce_words;
+        }
+        t
+    }
+}
+
+/// A shard's sub-plan: the full-shape plan with the sharded dimension
+/// clamped to one chunk. Only the partitioned dim's range/blocking (and
+/// the matching shape field) change, so tile enumeration order and the
+/// per-element reduction order are identical to the single-node engine.
+fn sub_plan(full: &TilePlan, strategy: ShardStrategy, chunk: Blk) -> TilePlan {
+    let mut p = full.clone();
+    let d = match strategy {
+        ShardStrategy::Batch => {
+            p.shape.n = chunk.len;
+            0
+        }
+        ShardStrategy::Channel => {
+            p.shape.c_i = chunk.len;
+            1
+        }
+        ShardStrategy::Spatial => {
+            p.shape.h_o = chunk.len;
+            4
+        }
+    };
+    p.ranges[d] = chunk.len;
+    p.blocks[d] = p.blocks[d].min(chunk.len).max(1);
+    p
+}
+
+// ---------------- tensor slicing ----------------
+
+/// Copy `len` height rows (dim 3) from `src` starting at `src_h0` into
+/// `dst` at `dst_h0`; dims 0–2 must match.
+fn copy_rows(dst: &mut Tensor4, dst_h0: usize, src: &Tensor4, src_h0: usize, len: usize) {
+    debug_assert_eq!(dst.dims[..3], src.dims[..3]);
+    let (hd, hs) = (dst.dims[3], src.dims[3]);
+    let outer = dst.dims[0] * dst.dims[1] * dst.dims[2];
+    for i in 0..outer {
+        dst.data[i * hd + dst_h0..i * hd + dst_h0 + len]
+            .copy_from_slice(&src.data[i * hs + src_h0..i * hs + src_h0 + len]);
+    }
+}
+
+/// Extract height rows `[h0, h0+len)` (dim 3) as an owned tensor.
+fn height_block(t: &Tensor4, h0: usize, len: usize) -> Tensor4 {
+    let mut out = Tensor4::zeros([t.dims[0], t.dims[1], t.dims[2], len]);
+    copy_rows(&mut out, 0, t, h0, len);
+    out
+}
+
+/// Extract channel rows `c` (dim 1) as an owned tensor.
+fn channel_block(t: &Tensor4, c: Blk) -> Tensor4 {
+    let [d0, d1, d2, d3] = t.dims;
+    let (c0, cl) = (c.start as usize, c.len as usize);
+    let mut out = Tensor4::zeros([d0, cl, d2, d3]);
+    let plane = d2 * d3;
+    for a in 0..d0 {
+        for b in 0..cl {
+            let s0 = (a * d1 + c0 + b) * plane;
+            let o0 = (a * cl + b) * plane;
+            out.data[o0..o0 + plane].copy_from_slice(&t.data[s0..s0 + plane]);
+        }
+    }
+    out
+}
+
+// ---------------- execution ----------------
+
+type RowSlot = Mutex<Option<(u64, Arc<Tensor4>)>>;
+
+/// Run the sharded plan and assemble the full output tensor.
+///
+/// Healthy runs return a tensor bitwise identical to the single-node
+/// staged engine ([`staged_reference`]) with every inter-shard word
+/// tallied in `counters` (callers reset them first to gate a single run).
+/// A panicking shard — including injected `exec:panic` faults inside a
+/// worker's tile loop — breaks the exchange barrier, releases its peers,
+/// and surfaces here as one typed [`ErrorKind::WorkerPanicked`] error so
+/// callers can degrade to a verified fallback.
+pub fn exec_sharded(
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &Arc<ShardPlan>,
+    counters: &Arc<ShardTrafficCounters>,
+) -> Result<Tensor4> {
+    {
+        let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
+        exec::assert_network_operands(image, &frefs, &plan.stages);
+    }
+    assert!(
+        counters.len() >= plan.workers(),
+        "counters sized for {} shards, plan needs {}",
+        counters.len(),
+        plan.workers()
+    );
+    let t0 = Instant::now();
+    let scope = obs::scope(
+        obs::kind::SHARD,
+        &[
+            ("strategy", js(plan.strategy.name())),
+            ("shards", ju(plan.shards)),
+            ("active", ju(plan.workers() as u64)),
+            ("stages", ju(plan.stages.len() as u64)),
+        ],
+    );
+    let out = match plan.strategy {
+        ShardStrategy::Channel => run_channel(image, filters, plan, counters),
+        ShardStrategy::Batch | ShardStrategy::Spatial => {
+            run_workers(image, filters, plan, counters)
+        }
+    };
+    if out.is_ok() && obs::enabled() {
+        let exp = plan.expected_per_shard();
+        for k in 0..plan.workers() {
+            let m = counters.shard(k);
+            obs::event(
+                obs::kind::SHARD_TRAFFIC,
+                &[
+                    ("shard", ju(k as u64)),
+                    ("strategy", js(plan.strategy.name())),
+                    ("halo_words", ju(m.halo_words)),
+                    ("gather_words", ju(m.gather_words)),
+                    ("reduce_words", ju(m.reduce_words)),
+                    ("exp_halo_words", ju(exp[k].halo_words)),
+                    ("exp_gather_words", ju(exp[k].gather_words)),
+                    ("exp_reduce_words", ju(exp[k].reduce_words)),
+                    ("exchange_ok", jb(m == exp[k])),
+                ],
+            );
+        }
+        obs::event(obs::kind::LOG, &[
+            ("level", js("debug")),
+            ("msg", js(&format!(
+                "shard exec {} x{} done in {:.3}s",
+                plan.strategy.name(), plan.workers(), t0.elapsed().as_secs_f64()
+            ))),
+        ]);
+    }
+    drop(scope);
+    out
+}
+
+/// The exchange gate: every shard's measured words must equal the
+/// analytic triple exactly, and shards beyond the active set must have
+/// moved nothing.
+pub fn verify_exchange(plan: &ShardPlan, counters: &ShardTrafficCounters) -> Result<()> {
+    let exp = plan.expected_per_shard();
+    for k in 0..counters.len() {
+        let m = counters.shard(k);
+        let e = exp.get(k).copied().unwrap_or_default();
+        if m != e {
+            return Err(Error::msg(format!(
+                "shard {k} ({} over {} workers): measured exchange {m:?} != analytic {e:?}",
+                plan.strategy.name(),
+                plan.workers(),
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The single-node comparator: the same per-stage full-shape plans run
+/// serially — bitwise identical to both the parallel staged engine and
+/// (the contract under test) any healthy sharded run.
+pub fn staged_reference(image: &Tensor4, filters: &[&Tensor4], plan: &ShardPlan) -> Tensor4 {
+    let mem = TrafficCounters::new();
+    let mut x = image.clone();
+    for (j, sp) in plan.stage_plans.iter().enumerate() {
+        x = conv_tiled_counted(&x, filters[j], sp, &mem);
+    }
+    x
+}
+
+/// Batch/spatial execution: `workers()` virtual nodes on a dedicated
+/// pool, one BSP super-step per stage (publish → barrier → assemble →
+/// barrier → compute).
+fn run_workers(
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &Arc<ShardPlan>,
+    counters: &Arc<ShardTrafficCounters>,
+) -> Result<Tensor4> {
+    let w = plan.workers();
+    // a dedicated pool: barrier-blocked shards park on a condvar, and a
+    // shared pool's free workers are never consumed by a blocked phase
+    let pool = ThreadPool::new(w);
+    let barrier = Arc::new(ShardBarrier::new(w));
+    let slots: Arc<Vec<RowSlot>> = Arc::new((0..w).map(|_| Mutex::new(None)).collect());
+    let mem = Arc::new(TrafficCounters::new());
+    let (img, pl, ct) = (Arc::clone(image), Arc::clone(plan), Arc::clone(counters));
+    let fls: Vec<Arc<Tensor4>> = filters.to_vec();
+    let results = pool.run_batch((0..w).collect::<Vec<usize>>(), move |k| {
+        let guard = barrier.guard();
+        let r = match pl.strategy {
+            ShardStrategy::Batch => worker_batch(k, &img, &fls, &pl, &ct, &mem),
+            ShardStrategy::Spatial => {
+                worker_spatial(k, &img, &fls, &pl, &ct, &barrier, &slots, &mem)
+            }
+            ShardStrategy::Channel => unreachable!("channel runs on the ring path"),
+        };
+        if r.is_ok() {
+            guard.complete();
+        }
+        r
+    });
+    let last = &plan.stages[plan.stages.len() - 1].shape;
+    let mut out = Tensor4::zeros(exec::out_dims(last));
+    for r in results {
+        match r {
+            Ok(Ok(Some((chunk, piece)))) => match plan.strategy {
+                ShardStrategy::Batch => exec::scatter_batch_block(&mut out, chunk, &piece),
+                ShardStrategy::Spatial => {
+                    copy_rows(&mut out, chunk.start as usize, &piece, 0, chunk.len as usize)
+                }
+                ShardStrategy::Channel => unreachable!(),
+            },
+            Ok(Ok(None)) => {} // idle shard
+            Ok(Err(e)) | Err(e) => return Err(e),
+        }
+    }
+    Ok(out)
+}
+
+/// Batch shard: compute every stage on the owned batch slice; the only
+/// exchange is the per-stage filter broadcast (shard 0 owns the filters).
+fn worker_batch(
+    k: usize,
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &ShardPlan,
+    counters: &ShardTrafficCounters,
+    mem: &TrafficCounters,
+) -> Result<Option<(Blk, Tensor4)>> {
+    if k >= plan.chunks[0].len() {
+        return Ok(None);
+    }
+    let chunk = plan.chunks[0][k];
+    let mut x = exec::batch_block(image, chunk);
+    for (j, st) in plan.stages.iter().enumerate() {
+        debug_assert_eq!(plan.chunks[j].len(), plan.chunks[0].len());
+        if k >= 1 {
+            counters.add_gather(k, st.shape.filter_size());
+        }
+        let sub = sub_plan(&plan.stage_plans[j], ShardStrategy::Batch, chunk);
+        x = conv_tiled_counted(&x, &filters[j], &sub, mem);
+    }
+    Ok(Some((chunk, x)))
+}
+
+/// Spatial shard: per stage, publish the rows this worker holds, gather
+/// the band it needs (halo + any redistribution counted at the copy
+/// site), then run the tiled engine on the band.
+#[allow(clippy::too_many_arguments)]
+fn worker_spatial(
+    k: usize,
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &ShardPlan,
+    counters: &ShardTrafficCounters,
+    barrier: &Arc<ShardBarrier>,
+    slots: &[RowSlot],
+    mem: &TrafficCounters,
+) -> Result<Option<(Blk, Tensor4)>> {
+    // rows this worker holds, in the current stage's input-row coordinates
+    let mut have: Option<(u64, Tensor4)> = {
+        let s = &plan.stages[0].shape;
+        let a0 = plan.chunks[0].len();
+        plan.chunks[0].get(k).map(|c| {
+            let h0 = s.s_h * c.start;
+            let tail = if k == a0 - 1 { s.h_f } else { 0 };
+            let len = s.s_h * c.len + tail;
+            (h0, height_block(image, h0 as usize, len as usize))
+        })
+    };
+    for j in 0..plan.stages.len() {
+        let s = plan.stages[j].shape;
+        let a = plan.chunks[j].len();
+        *slots[k].lock().unwrap() = have.take().map(|(h0, t)| (h0, Arc::new(t)));
+        barrier.wait()?;
+        let mine = match plan.chunks[j].get(k) {
+            Some(c) => {
+                let need0 = s.s_h * c.start;
+                let need_len = s.s_h * c.len + s.h_f;
+                Some(assemble_rows(k, need0, need_len, slots, counters)?)
+            }
+            None => None,
+        };
+        if k >= 1 && k < a {
+            counters.add_gather(k, s.filter_size());
+        }
+        barrier.wait()?;
+        have = match mine {
+            Some(x) => {
+                let c = plan.chunks[j][k];
+                let sub = sub_plan(&plan.stage_plans[j], ShardStrategy::Spatial, c);
+                Some((c.start, conv_tiled_counted(&x, &filters[j], &sub, mem)))
+            }
+            None => None,
+        };
+    }
+    Ok(have.map(|(h0, t)| (Blk { start: h0, len: t.dims[3] as u64 }, t)))
+}
+
+/// Build the row band `[need0, need0+need_len)` from the published slots,
+/// charging `halo` words for every row that did not come from this
+/// worker's own slot.
+fn assemble_rows(
+    k: usize,
+    need0: u64,
+    need_len: u64,
+    slots: &[RowSlot],
+    counters: &ShardTrafficCounters,
+) -> Result<Tensor4> {
+    let own: Option<(u64, Arc<Tensor4>)> = slots[k].lock().unwrap().clone();
+    let own_iv = own.as_ref().map(|(h0, t)| (*h0, h0 + t.dims[3] as u64));
+    // all publishers share the leading dims
+    let proto = own.as_ref().map(|(_, t)| Arc::clone(t)).or_else(|| {
+        slots.iter().find_map(|s| s.lock().unwrap().as_ref().map(|(_, t)| Arc::clone(t)))
+    });
+    let Some(proto) = proto else {
+        return Err(Error::msg("no shard published any rows"));
+    };
+    let [d0, d1, d2, _] = proto.dims;
+    let row_words = (d0 * d1 * d2) as u64;
+    let mut out = Tensor4::zeros([d0, d1, d2, need_len as usize]);
+    let end = need0 + need_len;
+    let mut r = need0;
+    while r < end {
+        let use_own = own_iv.map_or(false, |(h0, h1)| r >= h0 && r < h1);
+        let (src_h0, src) = if use_own {
+            let (h0, t) = own.as_ref().unwrap();
+            (*h0, Arc::clone(t))
+        } else {
+            let found = slots.iter().find_map(|s| {
+                let g = s.lock().unwrap();
+                g.as_ref().and_then(|(h0, t)| {
+                    (r >= *h0 && r < h0 + t.dims[3] as u64)
+                        .then(|| (*h0, Arc::clone(t)))
+                })
+            });
+            found.ok_or_else(|| {
+                Error::msg(format!("row {r} not published by any shard"))
+            })?
+        };
+        let mut run_end = end.min(src_h0 + src.dims[3] as u64);
+        if use_own {
+            run_end = run_end.min(own_iv.unwrap().1);
+        } else if let Some((h0, _)) = own_iv {
+            if h0 > r {
+                // stop at our own rows so they aren't charged as received
+                run_end = run_end.min(h0);
+            }
+        }
+        let len = (run_end - r) as usize;
+        copy_rows(&mut out, (r - need0) as usize, &src, (r - src_h0) as usize, len);
+        if !use_own {
+            counters.add_halo(k, len as u64 * row_words);
+        }
+        r = run_end;
+    }
+    Ok(out)
+}
+
+/// Channel execution: a sequential traveling-accumulator ring. Shard 0
+/// computes its partial into a fresh accumulator; each later shard
+/// receives it (counted as `reduce` words) and adds its own input-channel
+/// group's contributions *in the single-node reduction order* via
+/// [`conv_tiled_accumulate_counted`] — association-preserving, so the
+/// final output is bitwise. Between stages the full activation lives on
+/// the ring tail and every other shard receives its next channel slice.
+fn run_channel(
+    image: &Arc<Tensor4>,
+    filters: &[Arc<Tensor4>],
+    plan: &Arc<ShardPlan>,
+    counters: &Arc<ShardTrafficCounters>,
+) -> Result<Tensor4> {
+    let r = catch_unwind(AssertUnwindSafe(|| -> Tensor4 {
+        let mem = TrafficCounters::new();
+        let mut x_slices: Vec<Tensor4> =
+            plan.chunks[0].iter().map(|c| channel_block(image, *c)).collect();
+        let mut out = Tensor4::zeros([0; 4]);
+        for j in 0..plan.stages.len() {
+            let s = &plan.stages[j].shape;
+            let a = plan.chunks[j].len();
+            let mut acc: Option<Tensor4> = None;
+            for k in 0..a {
+                let c = plan.chunks[j][k];
+                // the filter's ci rows are dim 0 — the batch slicer fits
+                let f = exec::batch_block(&filters[j], c);
+                let sub = sub_plan(&plan.stage_plans[j], ShardStrategy::Channel, c);
+                match acc.take() {
+                    None => acc = Some(conv_tiled_counted(&x_slices[k], &f, &sub, &mem)),
+                    Some(mut partial) => {
+                        counters.add_reduce(k, s.output_size());
+                        conv_tiled_accumulate_counted(
+                            &x_slices[k], &f, &sub, &mut partial, &mem,
+                        );
+                        acc = Some(partial);
+                    }
+                }
+            }
+            let stage_out = acc.expect("at least one active shard");
+            if j + 1 < plan.stages.len() {
+                let tail = a - 1;
+                let plane =
+                    (stage_out.dims[0] * stage_out.dims[2] * stage_out.dims[3]) as u64;
+                x_slices = plan.chunks[j + 1]
+                    .iter()
+                    .enumerate()
+                    .map(|(k, c)| {
+                        if k != tail {
+                            counters.add_gather(k, plane * c.len);
+                        }
+                        channel_block(&stage_out, *c)
+                    })
+                    .collect();
+            } else {
+                out = stage_out;
+            }
+        }
+        out
+    }));
+    r.map_err(|p| {
+        Error::typed(
+            ErrorKind::WorkerPanicked,
+            format!("worker panicked: {}", panic_message(p.as_ref())),
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::commvol::par as cpar;
+    use crate::conv::Precision;
+    use crate::kernels::plan::DEFAULT_TILE_MEM_WORDS;
+
+    fn layer(shape: ConvShape) -> Vec<NetworkStage> {
+        vec![NetworkStage { shape, precision: Precision::uniform() }]
+    }
+
+    /// A 2-stage chain with valid shape chaining (stage 1 input dims ==
+    /// stage 0 output dims: [2, 3, 6, 6]).
+    fn tiny_net() -> Vec<NetworkStage> {
+        let s0 = ConvShape::new(2, 2, 3, 6, 6, 3, 3, 1, 1);
+        let s1 = ConvShape::new(2, 3, 2, 3, 3, 3, 3, 1, 1);
+        assert_eq!([s0.c_o, s0.w_o, s0.h_o], [s1.c_i, s1.in_w(), s1.in_h()]);
+        vec![
+            NetworkStage { shape: s0, precision: Precision::uniform() },
+            NetworkStage { shape: s1, precision: Precision::uniform() },
+        ]
+    }
+
+    fn operands(stages: &[NetworkStage]) -> (Arc<Tensor4>, Vec<Arc<Tensor4>>) {
+        let s0 = &stages[0].shape;
+        let image = Arc::new(Tensor4::randn(
+            [
+                s0.n as usize,
+                s0.c_i as usize,
+                s0.in_w() as usize,
+                s0.in_h() as usize,
+            ],
+            1,
+        ));
+        let filters = stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                Arc::new(Tensor4::randn(st.shape.filter_dims(), 2 + i as u64))
+            })
+            .collect();
+        (image, filters)
+    }
+
+    fn check_strategy(stages: &[NetworkStage], strategy: ShardStrategy, shards: u64) {
+        let cache = TilePlanCache::new();
+        let plan = Arc::new(ShardPlan::new(
+            stages, strategy, shards, DEFAULT_TILE_MEM_WORDS, &cache,
+        ));
+        let (image, filters) = operands(stages);
+        let counters = Arc::new(ShardTrafficCounters::new(plan.workers()));
+        let got = exec_sharded(&image, &filters, &plan, &counters).unwrap();
+        let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
+        let want = staged_reference(&image, &frefs, &plan);
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "{} P={shards}: sharded output not bitwise",
+            strategy.name()
+        );
+        verify_exchange(&plan, &counters).unwrap();
+    }
+
+    #[test]
+    fn all_strategies_bitwise_and_exact_on_a_layer() {
+        let s = ConvShape::new(4, 3, 2, 5, 5, 3, 3, 1, 1);
+        for strat in ShardStrategy::ALL {
+            for shards in [1u64, 2, 4, 8] {
+                check_strategy(&layer(s), strat, shards);
+            }
+        }
+    }
+
+    #[test]
+    fn all_strategies_bitwise_and_exact_on_a_network() {
+        for strat in ShardStrategy::ALL {
+            for shards in [1u64, 2, 3, 4] {
+                check_strategy(&tiny_net(), strat, shards);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_spatial_shards_bitwise() {
+        let s = ConvShape::new(2, 2, 2, 4, 6, 3, 3, 2, 2);
+        for shards in [2u64, 3, 4] {
+            check_strategy(&layer(s), ShardStrategy::Spatial, shards);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_unsharded_engine_with_zero_exchange() {
+        let s = ConvShape::new(3, 2, 2, 4, 4, 3, 3, 1, 1);
+        for strat in ShardStrategy::ALL {
+            let cache = TilePlanCache::new();
+            let plan = Arc::new(ShardPlan::new(
+                &layer(s), strat, 1, DEFAULT_TILE_MEM_WORDS, &cache,
+            ));
+            assert_eq!(plan.workers(), 1);
+            let (image, filters) = operands(&layer(s));
+            let counters = Arc::new(ShardTrafficCounters::new(1));
+            let got = exec_sharded(&image, &filters, &plan, &counters).unwrap();
+            let full = conv_tiled_counted(
+                &image,
+                &filters[0],
+                &plan.stage_plans[0],
+                &TrafficCounters::new(),
+            );
+            assert_eq!(got.max_abs_diff(&full), 0.0);
+            assert_eq!(counters.total(), ShardTraffic::default());
+        }
+    }
+
+    #[test]
+    fn more_shards_than_batch_leaves_idle_shards_silent() {
+        // P=8 over n=3: only 3 shards active, 5 idle with zero exchange
+        let s = ConvShape::new(3, 2, 2, 4, 4, 3, 3, 1, 1);
+        let cache = TilePlanCache::new();
+        let plan = Arc::new(ShardPlan::new(
+            &layer(s), ShardStrategy::Batch, 8, DEFAULT_TILE_MEM_WORDS, &cache,
+        ));
+        assert_eq!(plan.workers(), 3);
+        check_strategy(&layer(s), ShardStrategy::Batch, 8);
+    }
+
+    #[test]
+    fn ragged_chunks_cover_the_dim_exactly() {
+        // 5 output rows over 2 shards -> 3 + 2 (ragged tail)
+        let s = ConvShape::new(2, 2, 2, 5, 5, 3, 3, 1, 1);
+        let cache = TilePlanCache::new();
+        let plan = ShardPlan::new(
+            &layer(s), ShardStrategy::Spatial, 2, DEFAULT_TILE_MEM_WORDS, &cache,
+        );
+        let lens: Vec<u64> = plan.chunks[0].iter().map(|c| c.len).collect();
+        assert_eq!(lens.iter().sum::<u64>(), 5);
+        assert_eq!(lens, vec![3, 2]);
+        check_strategy(&layer(s), ShardStrategy::Spatial, 2);
+        check_strategy(&layer(s), ShardStrategy::Channel, 2);
+        check_strategy(&layer(s), ShardStrategy::Batch, 2);
+    }
+
+    #[test]
+    fn single_layer_expected_matches_commvol_formulas() {
+        let s = ConvShape::new(4, 3, 2, 5, 5, 3, 3, 1, 1);
+        let cache = TilePlanCache::new();
+        for shards in [1u64, 2, 4, 8] {
+            for strat in ShardStrategy::ALL {
+                let plan = ShardPlan::new(
+                    &layer(s), strat, shards, DEFAULT_TILE_MEM_WORDS, &cache,
+                );
+                let active = plan.active(0) as u64;
+                let total = plan.expected_exchange();
+                match strat {
+                    ShardStrategy::Batch => {
+                        assert_eq!(total.total(), cpar::batch_shard_words(&s, active))
+                    }
+                    ShardStrategy::Channel => {
+                        assert_eq!(total.total(), cpar::channel_shard_words(&s, active))
+                    }
+                    ShardStrategy::Spatial => {
+                        assert_eq!(total.halo_words, cpar::spatial_halo_words(&s, active));
+                        assert_eq!(total.total(), cpar::spatial_shard_words(&s, active));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_picks_the_minimum_volume_strategy() {
+        let s = ConvShape::new(4, 3, 2, 5, 5, 3, 3, 1, 1);
+        let cache = TilePlanCache::new();
+        let auto = ShardPlan::auto(&layer(s), 4, DEFAULT_TILE_MEM_WORDS, &cache);
+        let best = ShardStrategy::ALL
+            .iter()
+            .map(|&st| {
+                ShardPlan::new(&layer(s), st, 4, DEFAULT_TILE_MEM_WORDS, &cache)
+                    .expected_exchange()
+                    .total()
+            })
+            .min()
+            .unwrap();
+        assert_eq!(auto.expected_exchange().total(), best);
+    }
+
+    // NOTE: fault-injected shard panics are covered by the serialized
+    // integration tests in `tests/faults_e2e.rs` (arming faults is
+    // process-global and would perturb concurrent in-lib tests).
+}

@@ -30,6 +30,16 @@
 //!                                           layer-by-layer SGD oracles and
 //!                                           requires zero fused-boundary
 //!                                           words)
+//! convbound exec    --layer conv4_x         shard a forward layer (or, with
+//!           --shards 4 --shard-by auto      --network, a whole chain) across
+//!                                           P in-process virtual workers
+//!                                           (batch|channel|spatial|auto|
+//!                                           tuned; --check gates the sharded
+//!                                           output bitwise against the
+//!                                           single-node engine and every
+//!                                           shard's measured exchange words
+//!                                           against the analytic parallel
+//!                                           volume exactly)
 //! convbound serve   --key unit3x3/blocked   batched serving demo (native
 //!                                           backend; PJRT with artifacts;
 //!                                           network keys serve the fused
@@ -64,13 +74,14 @@
 //! error, not a panic backtrace: every subcommand returns
 //! `util::error::Result` and `main` renders the failure.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use convbound::bounds::{parallel_bound_terms, sequential_bound_terms};
 use convbound::commvol;
 use convbound::conv::{
     conv7nl_naive, find_layer, paper_operands, pass_operands, scaled,
-    ConvPass, Precision, Tensor4,
+    ConvPass, ConvShape, NetworkStage, Precision, Tensor4,
 };
 use convbound::coordinator::{
     plan_layer, ConvServer, Overflow, QueuePolicy, ServerOptions,
@@ -81,11 +92,12 @@ use convbound::hbl::{analyze_7nl, analyze_small_filter};
 use convbound::kernels::{
     conv_network_bwd_counted, conv_network_fused_counted,
     conv_network_step_counted, conv_pass_tiled, conv_pass_tiled_counted,
-    conv_tiled_counted, conv_winograd_counted, expected_pass_traffic,
-    expected_traffic, expected_winograd_traffic, naive_network,
-    naive_network_bwd, naive_network_step, winograd_tolerance, Autotuner,
-    FusePlan, FusedExec, KernelKind, NetPass, NetTrafficCounters,
-    TilePlanCache, Traffic, TrafficCounters, WinoPlan,
+    conv_tiled_counted, conv_winograd_counted, exec_sharded,
+    expected_pass_traffic, expected_traffic, expected_winograd_traffic,
+    naive_network, naive_network_bwd, naive_network_step, staged_reference,
+    verify_exchange, winograd_tolerance, Autotuner, FusePlan, FusedExec,
+    KernelKind, NetPass, NetTrafficCounters, ShardPlan, ShardStrategy,
+    ShardTrafficCounters, TilePlanCache, Traffic, TrafficCounters, WinoPlan,
     DEFAULT_TILE_MEM_WORDS,
 };
 use convbound::obs;
@@ -368,6 +380,15 @@ fn cmd_exec_network(args: &Args, name: &str) -> Result<()> {
                 .join(", ")
         )
     })?;
+    if args.opt("shards").is_some() {
+        if pass != NetPass::Forward {
+            return Err(err!(
+                "--shards supports only --pass fwd with --network \
+                 (the backward sweeps are single-node)"
+            ));
+        }
+        return cmd_exec_network_sharded(args, name, net, m);
+    }
     let cache = TilePlanCache::new();
     let plan = match args.opt_str("fused-kernel", "packed") {
         "auto" => {
@@ -836,6 +857,208 @@ fn cmd_exec_pass(args: &Args, pass: ConvPass) -> Result<()> {
 
 /// Run one catalog layer through a CPU kernel and report throughput plus
 /// (for the tiled engine) measured vs modelled word traffic.
+/// Resolve `--shards`/`--shard-by` into a [`ShardPlan`] — the analytic
+/// `auto` pick, the measured `tuned` pick, or an explicit strategy —
+/// shared by the layer and network sharded paths.
+fn shard_plan_of(
+    args: &Args,
+    name: &str,
+    stages: &[NetworkStage],
+    m: f64,
+) -> Result<Arc<ShardPlan>> {
+    let shards = args.opt_u64("shards", 1)?;
+    if shards < 1 {
+        return Err(err!("--shards must be >= 1"));
+    }
+    let cache = TilePlanCache::new();
+    let plan = match args.opt_str("shard-by", "auto") {
+        "auto" => ShardPlan::auto(stages, shards, m, &cache),
+        "tuned" => {
+            let tuner = Autotuner::new(m);
+            let strategy = tuner.select_shard(name, stages, shards);
+            obs::log(
+                obs::Level::Info,
+                &format!("autotuner picked shard strategy '{}'", strategy.name()),
+            );
+            ShardPlan::new(stages, strategy, shards, m, &cache)
+        }
+        other => match ShardStrategy::parse(other) {
+            Some(s) => ShardPlan::new(stages, s, shards, m, &cache),
+            None => {
+                return Err(err!(
+                    "unknown --shard-by '{other}' \
+                     (batch|channel|spatial|auto|tuned)"
+                ))
+            }
+        },
+    };
+    Ok(Arc::new(plan))
+}
+
+/// Run a sharded forward chain (one layer or a whole network) and report
+/// per-shard exchange words against the analytic parallel volume. A shard
+/// panic degrades to the staged naive oracle on one node (exchange gates
+/// skipped — the fallback exchanges nothing); `--check` requires the
+/// healthy sharded output to be *bitwise* equal to the single-node staged
+/// engine and every shard's measured exchange to equal the model exactly.
+fn run_sharded(
+    args: &Args,
+    name: &str,
+    plan: &Arc<ShardPlan>,
+    image: Arc<Tensor4>,
+    filters: Vec<Arc<Tensor4>>,
+    updates: u64,
+) -> Result<()> {
+    let actives: Vec<usize> =
+        (0..plan.stages.len()).map(|j| plan.active(j)).collect();
+    println!(
+        "  shard plan: strategy '{}', {} requested, {} worker(s), \
+         per-stage active {actives:?}",
+        plan.strategy.name(),
+        plan.shards,
+        plan.workers()
+    );
+    let counters = Arc::new(ShardTrafficCounters::new(plan.workers()));
+    let frefs: Vec<&Tensor4> = filters.iter().map(|f| f.as_ref()).collect();
+    let t0 = Instant::now();
+    let (out, degraded) = match exec_sharded(&image, &filters, plan, &counters)
+    {
+        Ok(o) => (o, false),
+        Err(e) => {
+            fallback::note_panic(name, "sharded", &e);
+            fallback::note_degrade(name, "sharded", "staged-naive", &e);
+            (naive_network(&image, &frefs, &plan.stages), true)
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    if degraded {
+        println!(
+            "  DEGRADED: sharded execution failed; reran the staged naive \
+             oracle on one node (exchange gates skipped)"
+        );
+    } else {
+        let expected = plan.expected_per_shard();
+        for k in 0..plan.workers() {
+            let got = counters.shard(k);
+            let want = expected[k];
+            println!(
+                "  shard {k}: halo {} + gather {} + reduce {} = {} exchange \
+                 words (model {}{})",
+                got.halo_words,
+                got.gather_words,
+                got.reduce_words,
+                got.total(),
+                want.total(),
+                if got == want { ", exact" } else { ", MISMATCH" }
+            );
+        }
+        println!(
+            "  exchange total {} words (analytic parallel volume {})",
+            counters.total().total(),
+            plan.expected_exchange().total()
+        );
+    }
+    println!(
+        "  {secs:.3}s, {:.1} MMAC/s",
+        updates as f64 / secs.max(1e-9) / 1e6
+    );
+    if args.flag("check") {
+        if degraded {
+            // the degraded path *is* the staged naive oracle, so the gate
+            // left standing is determinism: rerunning it must be bitwise
+            let want = naive_network(&image, &frefs, &plan.stages);
+            let diff = out.max_abs_diff(&want);
+            println!(
+                "  check vs staged naive oracle (degraded): \
+                 max_abs_diff = {diff}"
+            );
+            if diff != 0.0 {
+                return Err(err!(
+                    "degraded sharded run diverged from the staged oracle: \
+                     {diff}"
+                ));
+            }
+        } else {
+            let want = staged_reference(&image, &frefs, plan);
+            let diff = out.max_abs_diff(&want);
+            println!(
+                "  check vs single-node staged engine: max_abs_diff = {diff}"
+            );
+            if diff != 0.0 {
+                return Err(err!(
+                    "sharded output diverged from the single-node engine: \
+                     {diff}"
+                ));
+            }
+            verify_exchange(plan, &counters)?;
+            println!(
+                "  measured exchange matches the analytic parallel volume \
+                 exactly: OK"
+            );
+        }
+    } else {
+        std::hint::black_box(&out);
+    }
+    Ok(())
+}
+
+/// `exec --layer L --shards P [--shard-by S]`: one catalog layer across P
+/// in-process virtual workers (DESIGN.md §13).
+fn cmd_exec_layer_sharded(
+    args: &Args,
+    name: &str,
+    shape: ConvShape,
+    m: f64,
+    p: Precision,
+) -> Result<()> {
+    let stages = vec![NetworkStage { shape, precision: p }];
+    let plan = shard_plan_of(args, name, &stages, m)?;
+    println!(
+        "exec {name} ({shape}) sharded x{} by '{}' at M = {m} words",
+        plan.shards,
+        plan.strategy.name()
+    );
+    let (x, w) = paper_operands(&shape, 1);
+    run_sharded(
+        args,
+        name,
+        &plan,
+        Arc::new(x),
+        vec![Arc::new(w)],
+        shape.updates(),
+    )
+}
+
+/// `exec --network N --shards P [--shard-by S]`: a builtin network chain
+/// across P in-process virtual workers (forward only).
+fn cmd_exec_network_sharded(
+    args: &Args,
+    name: &str,
+    net: &convbound::runtime::NetworkSpec,
+    m: f64,
+) -> Result<()> {
+    let plan = shard_plan_of(args, name, &net.stages, m)?;
+    println!(
+        "exec network {name} sharded x{} by '{}' (batch {}, {} stages, \
+         {} MACs) at M = {m} words",
+        plan.shards,
+        plan.strategy.name(),
+        net.stages[0].shape.n,
+        net.stages.len(),
+        net.updates()
+    );
+    let image = Arc::new(Tensor4::randn(net.input_dims(), 1));
+    let filters: Vec<Arc<Tensor4>> = net
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| {
+            Arc::new(Tensor4::randn(st.shape.filter_dims(), 2 + i as u64))
+        })
+        .collect();
+    run_sharded(args, name, &plan, image, filters, net.updates())
+}
+
 fn cmd_exec(args: &Args) -> Result<()> {
     if let Some(net) = args.opt("network") {
         // network runs parse `--pass` themselves (fwd|bwd|step — the
@@ -846,7 +1069,14 @@ fn cmd_exec(args: &Args) -> Result<()> {
     }
     match ConvPass::parse(args.opt_str("pass", "fwd")) {
         Some(ConvPass::Forward) => {}
-        Some(pass) => return cmd_exec_pass(args, pass),
+        Some(pass) => {
+            if args.opt("shards").is_some() {
+                return Err(err!(
+                    "--shards supports only the forward pass (--pass fwd)"
+                ));
+            }
+            return cmd_exec_pass(args, pass);
+        }
         None => {
             return Err(err!(
                 "unknown --pass '{}' (fwd|dfilter|dinput)",
@@ -861,6 +1091,9 @@ fn cmd_exec(args: &Args) -> Result<()> {
     // --precision shapes the plan and the traffic model; execution itself
     // is f32 either way
     let p = precision_of(args)?;
+    if args.opt("shards").is_some() {
+        return cmd_exec_layer_sharded(args, &name, shape, m, p);
+    }
     let kernel_arg = args.opt_str("kernel", "tiled");
     // one tuner = one plan cache: selection probes and the final run use
     // the same (precision, M) tiling, solved once
@@ -1057,6 +1290,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.opt_str("artifacts", "artifacts").to_string();
     let key = args.opt_str("key", "unit3x3/blocked").to_string();
     let requests = args.opt_u64("requests", 32)?;
+    // sharded dispatch (DESIGN.md §13): the env pair is how the native
+    // backend picks up the config — ServerOptions stays transport-only,
+    // and a sharded executor is bitwise-identical to the single-node one
+    if args.opt("shards").is_some() {
+        let shards = args.opt_u64("shards", 1)?;
+        if shards < 1 {
+            return Err(err!("--shards must be >= 1"));
+        }
+        let by = args.opt_str("shard-by", "auto");
+        if by != "auto" && ShardStrategy::parse(by).is_none() {
+            return Err(err!(
+                "unknown --shard-by '{by}' (batch|channel|spatial|auto)"
+            ));
+        }
+        std::env::set_var("CONVBOUND_SHARDS", shards.to_string());
+        std::env::set_var("CONVBOUND_SHARD_BY", by);
+    }
     // fault-tolerance knobs (DESIGN.md §12): a bounded admission queue
     // with a block|shed overflow policy, and a per-request deadline
     let queue = match args.opt("queue") {
@@ -1356,6 +1606,32 @@ mod tests {
     }
 
     #[test]
+    fn exec_rejects_bad_shard_flags() {
+        let e = cmd_exec(&parse("exec --shards 0")).unwrap_err().to_string();
+        assert!(e.contains("--shards"), "{e}");
+        assert!(e.contains(">= 1"), "{e}");
+        let e = cmd_exec(&parse("exec --shards 2 --shard-by ring"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("ring"), "{e}");
+        assert!(e.contains("batch|channel|spatial|auto|tuned"), "{e}");
+    }
+
+    #[test]
+    fn exec_rejects_shards_on_backward_passes() {
+        let e = cmd_exec(&parse("exec --pass dfilter --shards 2"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("forward"), "{e}");
+        let e = cmd_exec(&parse(
+            "exec --network tiny_resnet --pass bwd --shards 2",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("--pass fwd"), "{e}");
+    }
+
+    #[test]
     fn exec_rejects_unknown_pass_for_layers() {
         let a = parse("exec --pass sideways");
         let e = cmd_exec(&a).unwrap_err().to_string();
@@ -1413,8 +1689,11 @@ fn main() {
             eprintln!("        --network tiny_resnet|deep_mixnet [--batch N] [--mem M] [--check]");
             eprintln!("        --fused-kernel packed|reference|auto --halo-cache on|off --halo-w on|off");
             eprintln!("        --pass fwd|bwd|step (with --network: fused backward / training-step sweeps)");
+            eprintln!("        --shards P --shard-by batch|channel|spatial|auto|tuned (sharded forward");
+            eprintln!("        execution; --check gates bitwise output + exact exchange words)");
             eprintln!("  fig4: --claims --conv5-fix;  serve: --key unit3x3/blocked --requests 32");
             eprintln!("        --queue <cap> --policy block|shed --deadline-ms <ms> --check");
+            eprintln!("        --shards P --shard-by batch|channel|spatial|auto (sharded dispatch)");
             eprintln!("  trace: check|summarize <trace.jsonl> (replay a structured log offline)");
             eprintln!("  any:  --trace <path> (JSONL event log; CONVBOUND_TRACE env works too)");
             eprintln!("        --verbose (debug-level diagnostics on stderr; CONVBOUND_VERBOSE=2)");

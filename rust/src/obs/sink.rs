@@ -91,6 +91,15 @@ pub mod kind {
     /// Instant: an execution degraded to a simpler verified path (`key`,
     /// `from`, `to`, `cause`).
     pub const DEGRADE: &str = "degrade";
+    /// Sharded execution span: `B` before the virtual workers start
+    /// (`strategy`, `shards`, `active`, `stages`), `E` after the output
+    /// is assembled (`secs`), enclosing per-shard [`SHARD_TRAFFIC`]
+    /// events.
+    pub const SHARD: &str = "shard";
+    /// Instant: one virtual worker's measured-vs-analytic inter-shard
+    /// exchange words (`shard`, `halo_words`/`gather_words`/
+    /// `reduce_words` measured and `exp_*` expected, `exchange_ok`).
+    pub const SHARD_TRAFFIC: &str = "shard_traffic";
 }
 
 /// Identifier of one span; `0` is reserved for "no span" (disabled sink).

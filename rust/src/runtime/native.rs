@@ -41,9 +41,10 @@ use crate::conv::{conv7nl_naive, ConvPass, ConvShape, Precision, Tensor4};
 use crate::err;
 use crate::kernels::{
     conv_network_bwd, conv_network_fused, conv_pass_tiled_parallel,
-    conv_tiled_parallel, conv_winograd_parallel, naive_network,
-    naive_network_bwd, FusePlan, NetPass, NetTrafficCounters, TilePlan,
-    TilePlanCache, Traffic, TrafficCounters, WinoPlan, DEFAULT_TILE_MEM_WORDS,
+    conv_tiled_parallel, conv_winograd_parallel, exec_sharded, naive_network,
+    naive_network_bwd, FusePlan, NetPass, NetTrafficCounters, ShardPlan,
+    ShardStrategy, ShardTrafficCounters, TilePlan, TilePlanCache, Traffic,
+    TrafficCounters, WinoPlan, DEFAULT_TILE_MEM_WORDS,
 };
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -55,15 +56,53 @@ use super::fallback::FallbackExec;
 use super::manifest::{ArtifactSpec, NetworkSpec, NetworkStage};
 
 /// The in-tree CPU backend.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct NativeBackend {
     plans: Arc<TilePlanCache>,
     pool: Arc<Mutex<Option<Arc<ThreadPool>>>>,
+    /// `> 1` routes forward `"network"` pipelines through the sharded
+    /// executor (DESIGN.md §13) instead of the fused single-node path.
+    shards: u64,
+    /// Explicit shard strategy; `None` means the analytic `auto` pick.
+    shard_by: Option<ShardStrategy>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> NativeBackend {
+        NativeBackend::new()
+    }
 }
 
 impl NativeBackend {
+    /// Environment-configured backend: `CONVBOUND_SHARDS` (worker count)
+    /// and `CONVBOUND_SHARD_BY` (strategy name) select sharded network
+    /// dispatch; absent or unparsable values mean single-node `auto`.
+    /// The env pair exists so `serve --shards` reaches the executor the
+    /// server spawns without widening every construction site.
     pub fn new() -> NativeBackend {
-        NativeBackend::default()
+        let shards = std::env::var("CONVBOUND_SHARDS")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(1);
+        let shard_by = std::env::var("CONVBOUND_SHARD_BY")
+            .ok()
+            .and_then(|v| ShardStrategy::parse(v.trim()));
+        NativeBackend::with_shards(shards, shard_by)
+    }
+
+    /// Direct constructor for tests and embedders: `shards` virtual
+    /// workers for forward network pipelines, `shard_by` an explicit
+    /// strategy or `None` for the analytic `auto` pick.
+    pub fn with_shards(
+        shards: u64,
+        shard_by: Option<ShardStrategy>,
+    ) -> NativeBackend {
+        NativeBackend {
+            plans: Arc::new(TilePlanCache::new()),
+            pool: Arc::new(Mutex::new(None)),
+            shards: shards.max(1),
+            shard_by,
+        }
     }
 
     /// The shared tile-execution pool, spawned on first use.
@@ -207,6 +246,41 @@ impl ExecBackend for NativeBackend {
                 net.stages.len(),
                 spec.inputs.len()
             ));
+        }
+        // sharded forward dispatch: bits are pinned to the single-node
+        // staged *tiled* chain (kernels::staged_reference) — not the fused
+        // path, whose fully fused groups follow the naive accumulation
+        // order. A shard panic degrades to the layered naive oracle like
+        // every other network path.
+        if spec.kind != "training" && self.shards > 1 {
+            let plan = Arc::new(match self.shard_by {
+                Some(s) => ShardPlan::new(
+                    &net.stages,
+                    s,
+                    self.shards,
+                    DEFAULT_TILE_MEM_WORDS,
+                    &self.plans,
+                ),
+                None => ShardPlan::auto(
+                    &net.stages,
+                    self.shards,
+                    DEFAULT_TILE_MEM_WORDS,
+                    &self.plans,
+                ),
+            });
+            let counters = Arc::new(ShardTrafficCounters::new(plan.workers()));
+            let c = Arc::clone(&counters);
+            return Ok(Box::new(FallbackExec::new(
+                spec.key(),
+                "sharded",
+                "layered",
+                Box::new(ShardedNetExec { plan, counters }),
+                Box::new(NaiveNetExec {
+                    stages: net.stages.clone(),
+                    pass: NetPass::Forward,
+                }),
+                Some(Box::new(move || c.reset())),
+            )));
         }
         let counters = Arc::new(NetTrafficCounters::new(net.stages.len()));
         let c = Arc::clone(&counters);
@@ -471,6 +545,39 @@ impl Executable for NetworkExec {
     }
 }
 
+/// Executes a forward network pipeline across the backend's configured
+/// in-process virtual shard workers (DESIGN.md §13): bitwise identical to
+/// the single-node staged engine, with every inter-shard exchange word
+/// counted against the analytic parallel volume.
+struct ShardedNetExec {
+    plan: Arc<ShardPlan>,
+    counters: Arc<ShardTrafficCounters>,
+}
+
+impl Executable for ShardedNetExec {
+    fn execute(&self, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let arcs: Vec<Arc<Tensor4>> =
+            inputs.iter().map(|t| Arc::new((*t).clone())).collect();
+        self.execute_arc(&arcs)
+    }
+
+    fn execute_arc(&self, inputs: &[Arc<Tensor4>]) -> Result<Tensor4> {
+        exec_sharded(&inputs[0], &inputs[1..], &self.plan, &self.counters)
+    }
+
+    fn traffic(&self) -> Option<Traffic> {
+        // the exchange triple reported through the Traffic lens: halo rows
+        // are input words, broadcast filters are filter words, traveling
+        // accumulators are output words
+        let t = self.counters.total();
+        Some(Traffic {
+            input_words: t.halo_words,
+            filter_words: t.gather_words,
+            output_words: t.reduce_words,
+        })
+    }
+}
+
 /// Executes a network pipeline's fused backward sweep (kind `"training"`):
 /// the tail loss gradient chains through the transposed stencils back to
 /// the head image gradient, fused groups keeping interior stage gradients
@@ -667,6 +774,68 @@ mod tests {
         let mut bad = spec.clone();
         bad.inputs.pop();
         assert!(be.load_network(&net, &bad).is_err());
+    }
+
+    #[test]
+    fn sharded_backend_matches_staged_engine_bitwise() {
+        let net = NetworkSpec::tiny_resnet(2);
+        let spec = ArtifactSpec::for_network(&net);
+        let image = Tensor4::randn(net.input_dims(), 5);
+        let filters: Vec<Tensor4> = net
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 6 + i as u64))
+            .collect();
+        let mut ins: Vec<&Tensor4> = vec![&image];
+        ins.extend(filters.iter());
+        // the sharded contract pins bits to the single-node staged tiled
+        // chain, not the fused path (whose fully fused groups follow the
+        // naive accumulation order instead)
+        let want = {
+            let cache = TilePlanCache::new();
+            let p1 = ShardPlan::new(
+                &net.stages,
+                ShardStrategy::Batch,
+                1,
+                DEFAULT_TILE_MEM_WORDS,
+                &cache,
+            );
+            let frefs: Vec<&Tensor4> = filters.iter().collect();
+            crate::kernels::staged_reference(&image, &frefs, &p1)
+        };
+        for strategy in [
+            None,
+            Some(ShardStrategy::Batch),
+            Some(ShardStrategy::Spatial),
+            Some(ShardStrategy::Channel),
+        ] {
+            let mut be = NativeBackend::with_shards(3, strategy);
+            let exe = be.load_network(&net, &spec).expect("sharded load");
+            let got = exe.execute(&ins).expect("run sharded");
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "sharded ({strategy:?}) must be bitwise vs single-node"
+            );
+            // batch/spatial always broadcast filters to active peers, so
+            // their exchange is provably nonzero here; channel's can be
+            // legitimately zero when every stage keeps one ci chunk
+            if matches!(
+                strategy,
+                Some(ShardStrategy::Batch) | Some(ShardStrategy::Spatial)
+            ) {
+                assert!(exe.traffic().expect("instrumented").total() > 0);
+            }
+            // no degradation happened on the healthy path
+            let fs = exe.fault_stats().expect("fallback shell");
+            assert_eq!((fs.panicked, fs.degraded), (0, 0));
+        }
+        // training pipelines ignore the shard config (backward sweeps are
+        // single-node) and still load
+        let tspec = ArtifactSpec::for_training(&net);
+        let mut be = NativeBackend::with_shards(3, None);
+        assert!(be.load_network(&net, &tspec).is_ok());
     }
 
     #[test]

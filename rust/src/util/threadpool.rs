@@ -12,7 +12,7 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 use crate::util::error::{Error, ErrorKind, Result};
@@ -157,6 +157,116 @@ impl Drop for ThreadPool {
     }
 }
 
+/// A reusable rendezvous for the sharded executor's BSP exchange phases
+/// (publish → wait → read → wait → compute), replacing a spin-wait.
+///
+/// Unlike `std::sync::Barrier` it can *break*: when a participant panics
+/// mid-phase its [`BarrierGuard`] breaks the barrier on unwind, waking every
+/// peer with a typed [`ErrorKind::WorkerPanicked`] error instead of leaving
+/// them blocked forever on a rendezvous that can no longer complete.
+pub struct ShardBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    parties: usize,
+    arrived: usize,
+    generation: u64,
+    broken: bool,
+}
+
+impl ShardBarrier {
+    /// A barrier over `parties` participants (must be >= 1).
+    pub fn new(parties: usize) -> ShardBarrier {
+        assert!(parties >= 1);
+        ShardBarrier {
+            state: Mutex::new(BarrierState {
+                parties,
+                arrived: 0,
+                generation: 0,
+                broken: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all parties arrive. Returns `Ok(true)` for exactly one
+    /// "leader" per generation, `Ok(false)` for the rest, and a typed
+    /// error if the barrier was broken by a panicking peer (in which case
+    /// it stays broken — every later wait fails fast).
+    pub fn wait(&self) -> Result<bool> {
+        let mut st = self.state.lock().unwrap();
+        if st.broken {
+            return Err(Self::broken_err());
+        }
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == st.parties {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return Ok(true);
+        }
+        while st.generation == gen && !st.broken {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.broken {
+            return Err(Self::broken_err());
+        }
+        Ok(false)
+    }
+
+    /// Break the barrier: every current and future `wait` returns an
+    /// error. Idempotent.
+    pub fn break_barrier(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.broken = true;
+        self.cv.notify_all();
+    }
+
+    /// True once any participant broke the barrier.
+    pub fn is_broken(&self) -> bool {
+        self.state.lock().unwrap().broken
+    }
+
+    /// An unwind guard for one participant: if the closure it protects
+    /// panics (or errors out early) before [`BarrierGuard::complete`] is
+    /// called, dropping the guard breaks the barrier so peers blocked in
+    /// `wait` are released instead of hanging.
+    pub fn guard(self: &Arc<Self>) -> BarrierGuard {
+        BarrierGuard { barrier: Arc::clone(self), armed: true }
+    }
+
+    fn broken_err() -> Error {
+        Error::typed(
+            ErrorKind::WorkerPanicked,
+            "shard barrier broken: a peer shard panicked mid-phase",
+        )
+    }
+}
+
+/// RAII companion to [`ShardBarrier::guard`].
+pub struct BarrierGuard {
+    barrier: Arc<ShardBarrier>,
+    armed: bool,
+}
+
+impl BarrierGuard {
+    /// Disarm: the participant finished cleanly, don't break on drop.
+    pub fn complete(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for BarrierGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.barrier.break_barrier();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +348,84 @@ mod tests {
         assert!(msg.contains("worker panicked: injected"), "got: {msg}");
         // caller-side panic, pool still alive
         assert_eq!(pool.map(vec![7u32], |x| x), vec![7]);
+    }
+
+    #[test]
+    fn barrier_synchronizes_phases() {
+        let pool = ThreadPool::new(4);
+        let barrier = Arc::new(ShardBarrier::new(4));
+        let phase1 = Arc::new(AtomicUsize::new(0));
+        let results = {
+            let p1 = Arc::clone(&phase1);
+            let b = Arc::clone(&barrier);
+            pool.run_batch((0..4usize).collect(), move |_k| {
+                p1.fetch_add(1, Ordering::SeqCst);
+                b.wait().unwrap();
+                // after the rendezvous every peer's phase-1 write is visible
+                p1.load(Ordering::SeqCst)
+            })
+        };
+        for r in results {
+            assert_eq!(r.unwrap(), 4);
+        }
+    }
+
+    #[test]
+    fn barrier_elects_one_leader_per_generation() {
+        let pool = ThreadPool::new(3);
+        let barrier = Arc::new(ShardBarrier::new(3));
+        for _generation in 0..5 {
+            let b = Arc::clone(&barrier);
+            let leaders: usize = pool
+                .run_batch((0..3usize).collect(), move |_| b.wait().unwrap())
+                .into_iter()
+                .filter(|r| *r.as_ref().unwrap())
+                .count();
+            assert_eq!(leaders, 1);
+        }
+    }
+
+    #[test]
+    fn panicking_shard_releases_waiting_peers() {
+        // Regression: without break-on-unwind, the two surviving shards
+        // would block forever on a 3-party barrier whose third member
+        // died — this test would hang instead of failing.
+        let pool = ThreadPool::new(3);
+        let barrier = Arc::new(ShardBarrier::new(3));
+        let b = Arc::clone(&barrier);
+        let out = pool.run_batch(vec![0usize, 1, 2], move |k| {
+            let guard = b.guard();
+            if k == 2 {
+                panic!("shard 2 dies before the rendezvous");
+            }
+            let r = b.wait();
+            guard.complete();
+            r
+        });
+        assert_eq!(
+            out[2].as_ref().unwrap_err().kind(),
+            ErrorKind::WorkerPanicked
+        );
+        for k in [0usize, 1] {
+            // the survivors return (not hang), observing a typed break
+            let r = out[k].as_ref().unwrap();
+            let e = r.as_ref().unwrap_err();
+            assert_eq!(e.kind(), ErrorKind::WorkerPanicked);
+            assert!(e.to_string().contains("barrier broken"), "got: {e}");
+        }
+        assert!(barrier.is_broken());
+        // and the break is sticky: later waits fail fast
+        assert!(barrier.wait().is_err());
+    }
+
+    #[test]
+    fn completed_guard_leaves_barrier_intact() {
+        let barrier = Arc::new(ShardBarrier::new(1));
+        let g = barrier.guard();
+        assert!(barrier.wait().unwrap());
+        g.complete();
+        assert!(!barrier.is_broken());
+        assert!(barrier.wait().unwrap()); // still usable next generation
     }
 
     #[test]

@@ -310,6 +310,91 @@ fn dispatch_errors_fail_only_the_batch_and_server_survives() {
     assert!(faults::fired(Site::Exec) >= 2);
 }
 
+/// A shard worker panic (injected on every kernel tile) must surface from
+/// the sharded executor as a typed `WorkerPanicked` error — never a
+/// process abort or a hang — for every strategy, so callers can degrade.
+/// The barrier-release regression rides along implicitly: if a panicking
+/// spatial shard left its peers parked on the exchange barrier, this test
+/// would deadlock instead of returning the typed error.
+#[test]
+fn injected_shard_panics_become_typed_worker_errors() {
+    use convbound::conv::{ConvShape, Precision};
+    use convbound::kernels::{
+        exec_sharded, ShardPlan, ShardStrategy, ShardTrafficCounters,
+        TilePlanCache, DEFAULT_TILE_MEM_WORDS,
+    };
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("exec:panic:every=1").expect("spec"),
+    );
+    let shape = ConvShape::new(4, 3, 2, 5, 5, 3, 3, 1, 1);
+    let stages =
+        vec![NetworkStage { shape, precision: Precision::uniform() }];
+    let image = Arc::new(Tensor4::randn(
+        [
+            shape.n as usize,
+            shape.c_i as usize,
+            shape.in_w() as usize,
+            shape.in_h() as usize,
+        ],
+        1,
+    ));
+    let filters = vec![Arc::new(Tensor4::randn(shape.filter_dims(), 2))];
+    let cache = TilePlanCache::new();
+    for strategy in ShardStrategy::ALL {
+        let plan = Arc::new(ShardPlan::new(
+            &stages,
+            strategy,
+            2,
+            DEFAULT_TILE_MEM_WORDS,
+            &cache,
+        ));
+        let counters = Arc::new(ShardTrafficCounters::new(plan.workers()));
+        let e = exec_sharded(&image, &filters, &plan, &counters)
+            .expect_err("every tile is injected to panic");
+        assert_eq!(e.kind(), ErrorKind::WorkerPanicked, "{strategy:?}: {e}");
+    }
+    assert!(faults::fired(Site::Exec) >= 3);
+}
+
+/// The server seam: a sharded network backend under injected per-tile
+/// panics degrades to the layered naive oracle, the answer stays bitwise
+/// identical to that oracle, and the fallback shell books both the panic
+/// and the degradation — this is the `exec:panic` fault gate ci.sh holds
+/// the sharded path to.
+#[test]
+fn sharded_backend_degrades_to_naive_and_stays_bitwise() {
+    use convbound::kernels::{naive_network, ShardStrategy};
+    use convbound::runtime::{ExecBackend, NativeBackend, NetworkSpec};
+    let _guard = faults::arm_scoped(
+        FaultPlan::parse("exec:panic:every=1").expect("spec"),
+    );
+    let net = NetworkSpec::tiny_resnet(2);
+    let spec = ArtifactSpec::for_network(&net);
+    let mut be = NativeBackend::with_shards(2, Some(ShardStrategy::Batch));
+    let exe = be.load_network(&net, &spec).expect("sharded load");
+    let image = Tensor4::randn(net.input_dims(), 5);
+    let filters: Vec<Tensor4> = net
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| Tensor4::randn(st.shape.filter_dims(), 6 + i as u64))
+        .collect();
+    let mut ins: Vec<&Tensor4> = vec![&image];
+    ins.extend(filters.iter());
+    let got = exe.execute(&ins).expect("degraded execution succeeds");
+    let frefs: Vec<&Tensor4> = filters.iter().collect();
+    let want = naive_network(&image, &frefs, &net.stages);
+    assert_eq!(
+        got.max_abs_diff(&want),
+        0.0,
+        "degraded sharded answer must be bitwise vs the naive oracle"
+    );
+    let fs = exe.fault_stats().expect("fallback shell");
+    assert!(fs.panicked >= 1, "{fs:?}");
+    assert!(fs.degraded >= 1, "{fs:?}");
+    assert!(faults::fired(Site::Exec) >= 1);
+}
+
 /// `times=1` caps the injection at the first dispatch attempt: the
 /// executor's single retry recovers the batch, so the fault fired but no
 /// request failed.
